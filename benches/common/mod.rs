@@ -1,0 +1,27 @@
+//! Shared bench setup: real PJRT engines when `artifacts/` exists,
+//! deterministic mocks otherwise (so `cargo bench` is green either way).
+
+use ce_collm::model::manifest::{test_manifest, ModelDims};
+use ce_collm::runtime::mock::{MockCloud, MockEdge, MockOracle};
+use ce_collm::runtime::stack::LocalStack;
+use ce_collm::runtime::traits::{CloudEngine, EdgeEngine};
+
+pub fn engines() -> (Box<dyn EdgeEngine>, Box<dyn CloudEngine>, ModelDims) {
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        // leak the stack: benches live for the process lifetime and the
+        // sessions borrow its Rc'd artifacts
+        let stack = Box::leak(Box::new(LocalStack::load("artifacts").unwrap()));
+        let dims = stack.manifest.model.clone();
+        eprintln!("using REAL PJRT engines");
+        (Box::new(stack.edge_session()), Box::new(stack.cloud_session()), dims)
+    } else {
+        let dims = test_manifest().model;
+        let o = MockOracle::new(7);
+        eprintln!("artifacts/ missing: using mock engines");
+        (
+            Box::new(MockEdge::new(o, dims.clone())),
+            Box::new(MockCloud::new(o, dims.clone())),
+            dims,
+        )
+    }
+}

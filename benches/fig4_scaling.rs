@@ -1,0 +1,52 @@
+//! Bench for paper Figure 4: multi-client scaling (1..5 edge devices),
+//! CE-CoLLM vs cloud-based deployment, plus Fig 4(c)'s request-rate and
+//! transmitted-data comparison.
+//!
+//!     cargo bench --bench fig4_scaling [-- --prompts 10 --clients 5]
+
+use ce_collm::config::AblationFlags;
+use ce_collm::harness::des::{simulate, SimConfig, Strategy};
+use ce_collm::harness::runner::{record_main_experiments, ExperimentConfig};
+use ce_collm::harness::tables;
+use ce_collm::harness::trace::Trace;
+use ce_collm::net::profiles::LinkProfile;
+use ce_collm::util::bench::bench;
+use ce_collm::util::cli::Args;
+
+mod common;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let cfg = ExperimentConfig {
+        n_prompts: args.get_parse("prompts", 10),
+        repeats: args.get_parse("repeats", 3),
+        max_new_tokens: args.get_parse("max-new", 64),
+        seed: 42,
+    };
+    let max_clients: usize = args.get_parse("clients", 5);
+    let link = LinkProfile::paper_scaled();
+    let (mut edge, mut cloud, dims) = common::engines();
+
+    eprintln!("recording traces...");
+    let rec = record_main_experiments(edge.as_mut(), cloud.as_mut(), &cfg).unwrap();
+
+    println!("== DES scaling replay cost (Alpaca, θ=0.8) ==");
+    for n in [1usize, max_clients] {
+        let per_client: Vec<Vec<Trace>> = (0..n).map(|_| rec.alpaca.t08.clone()).collect();
+        bench(&format!("fig4 replay: {n} clients"), 0.3, || {
+            simulate(
+                &per_client,
+                &dims,
+                &rec.cost,
+                &SimConfig {
+                    strategy: Strategy::CeCollm(AblationFlags::default()),
+                    link,
+                    seed: 1,
+                },
+            )
+        });
+    }
+
+    println!("\n== Figure 4 ==");
+    println!("{}", tables::fig4(&rec, &dims, link, &cfg, max_clients));
+}

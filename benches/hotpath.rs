@@ -1,0 +1,170 @@
+//! Hot-path microbenchmarks: everything that runs per token on the
+//! request path — quantization, protocol codec, content-manager ops,
+//! exit policy, DES replay — plus the real PJRT per-segment step costs
+//! when artifacts are available.
+//!
+//!     cargo bench --bench hotpath
+
+use ce_collm::config::{AblationFlags, ExitPolicy};
+use ce_collm::coordinator::content_manager::ContentManager;
+use ce_collm::coordinator::policy::TokenPolicy;
+use ce_collm::coordinator::protocol::Message;
+use ce_collm::eval::rouge::rouge_l;
+use ce_collm::harness::cost::CostModel;
+use ce_collm::harness::des::{simulate, SimConfig, Strategy};
+use ce_collm::harness::trace::{record, CallTimings};
+use ce_collm::model::manifest::test_manifest;
+use ce_collm::net::profiles::LinkProfile;
+use ce_collm::quant::{self, Precision};
+use ce_collm::runtime::mock::{MockCloud, MockEdge, MockOracle};
+use ce_collm::runtime::traits::{CloudEngine, EdgeEngine};
+use ce_collm::util::bench::{bench, bench_throughput};
+
+fn main() {
+    println!("== quantization (128-dim hidden state, the per-token upload) ==");
+    let h: Vec<f32> = (0..128).map(|i| (i as f32 - 64.0) * 3.1).collect();
+    bench_throughput("quant::pack f16 [128]", 256, 0.3, || quant::pack(&h, Precision::F16));
+    bench_throughput("quant::pack f32 [128]", 512, 0.3, || quant::pack(&h, Precision::F32));
+    let p16 = quant::pack(&h, Precision::F16);
+    bench("quant::unpack f16 [128]", 0.3, || quant::unpack(&p16, Precision::F16).unwrap());
+    // prompt-sized payload
+    let hp: Vec<f32> = (0..256 * 128).map(|i| (i % 997) as f32).collect();
+    bench_throughput("quant::pack f16 [256x128] (prompt)", hp.len() * 2, 0.3, || {
+        quant::pack(&hp, Precision::F16)
+    });
+
+    println!("\n== wire protocol ==");
+    let up = Message::UploadHidden {
+        device_id: 3,
+        req_id: 1,
+        start_pos: 40,
+        count: 1,
+        prompt_len: 30,
+        precision: Precision::F16,
+        payload: p16.clone(),
+    };
+    bench("protocol encode UploadHidden[128]", 0.3, || up.encode());
+    let enc = up.encode();
+    bench("protocol decode UploadHidden[128]", 0.3, || Message::decode(&enc).unwrap());
+
+    println!("\n== exit policy ==");
+    let pol = TokenPolicy::new(ExitPolicy::Threshold(0.8), AblationFlags::default());
+    bench("policy decide", 0.1, || pol.decide(0.7, 0.85));
+
+    println!("\n== content manager (per-token upload + plan) ==");
+    bench("cm upload+plan cycle", 0.3, || {
+        let mut cm = ContentManager::new(128);
+        let h = vec![0.5f32; 30 * 128];
+        cm.upload(1, 0, 0, 30, &h).unwrap();
+        cm.plan(1, 0, 29, 30).unwrap();
+        for pos in 30..60u32 {
+            cm.upload(1, 0, pos, 30, &h[..128]).unwrap();
+            cm.plan(1, 0, pos, 30).unwrap();
+        }
+        cm.end_session(1);
+    });
+
+    println!("\n== eval ==");
+    let a = "the machine is a test of a system's ability to exhibit intelligent behaviour";
+    let b = "the machine is a test of a network's ability to produce intelligent behaviour";
+    bench("rouge_l (2x ~80 chars)", 0.3, || rouge_l(a, b));
+
+    println!("\n== DES replay (mock trace, 1 client) ==");
+    let dims = test_manifest().model;
+    let o = MockOracle::new(1);
+    let mut edge = MockEdge::new(o, dims.clone());
+    let mut cloud = MockCloud::new(o, dims.clone());
+    let mut t = CallTimings::default();
+    let tr = record(&mut edge, &mut cloud, ExitPolicy::Threshold(0.8), Precision::F16,
+                    "a benchmark prompt for des replay", 48, &mut t).unwrap();
+    let cost = CostModel::synthetic(&dims);
+    let traces = vec![vec![tr; 10]];
+    bench("DES replay 10 requests", 0.3, || {
+        simulate(
+            &traces,
+            &dims,
+            &cost,
+            &SimConfig {
+                strategy: Strategy::CeCollm(AblationFlags::default()),
+                link: LinkProfile::paper_scaled(),
+                seed: 0,
+            },
+        )
+    });
+
+    // real PJRT segment costs — the actual compute hot path
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("\n== real PJRT segment steps (artifacts) ==");
+        let stack = ce_collm::runtime::stack::LocalStack::load("artifacts").unwrap();
+        let tokzr = stack.tokenizer();
+        let ids = tokzr.encode("the machine is a benchmark");
+        let mut edge = stack.edge_session();
+        let mut cloud = stack.cloud_session();
+
+        bench("edge_prefill (short prompt -> P=64 bucket)", 2.0, || edge.prefill(&ids).unwrap());
+        let pre = edge.prefill(&ids).unwrap();
+        let mut pos = ids.len();
+        bench("edge seg1 decode (layers 0..3 + exit head)", 2.0, || {
+            let out = edge.seg1(97, pos).unwrap();
+            pos += 1;
+            if pos >= stack.manifest.model.max_seq - 1 {
+                edge.reset();
+                edge.prefill(&ids).unwrap();
+                pos = ids.len();
+            }
+            out
+        });
+        edge.reset();
+        let pre2 = edge.prefill(&ids).unwrap();
+        let h1 = pre2.h1[(ids.len() - 1) * 128..].to_vec();
+        let mut pos2 = ids.len();
+        bench("edge seg2 decode (layers 3..5 + exit head)", 2.0, || {
+            let out = edge.seg2(&h1, pos2).unwrap();
+            pos2 += 1;
+            if pos2 >= stack.manifest.model.max_seq - 1 {
+                edge.reset();
+                edge.prefill(&ids).unwrap();
+                pos2 = ids.len();
+            }
+            out
+        });
+        cloud.prefill(&pre.h1, ids.len()).unwrap();
+        let mut pos3 = ids.len();
+        bench("cloud decode (layers 3..8 + final head)", 2.0, || {
+            let out = cloud.decode(&h1, pos3).unwrap();
+            pos3 += 1;
+            if pos3 >= stack.manifest.model.max_seq - 1 {
+                cloud.reset();
+                cloud.prefill(&pre.h1, ids.len()).unwrap();
+                pos3 = ids.len();
+            }
+            out
+        });
+        bench("cloud_prefill (short prompt -> P=64 bucket)", 2.0, || {
+            cloud.reset();
+            cloud.prefill(&pre.h1, ids.len()).unwrap()
+        });
+
+        println!("\n== PJRT copy overhead (seg1 KV cache = 2 x [3,4,384,32] f32) ==");
+        let n = 3 * 4 * 384 * 32;
+        let data = vec![0.5f32; n];
+        let lit = ce_collm::runtime::literal::f32_literal(&data, &[3, 4, 384, 32]).unwrap();
+        bench("literal -> device buffer (589KB)", 0.5, || {
+            stack.client.buffer_from_host_literal(None, &lit).unwrap()
+        });
+        let buf = stack.client.buffer_from_host_literal(None, &lit).unwrap();
+        bench("device buffer -> host literal (589KB)", 0.5, || {
+            buf.to_literal_sync().unwrap()
+        });
+        bench("host vec -> literal (589KB)", 0.5, || {
+            ce_collm::runtime::literal::f32_literal(&data, &[3, 4, 384, 32]).unwrap()
+        });
+    } else {
+        println!("\n(artifacts/ missing — skipping real PJRT step benches)");
+    }
+}
+
+// appended by perf pass: quantify the KV-cache host<->device round trip
+// that dominates per-step engine cost (see EXPERIMENTS.md §Perf).
+#[allow(dead_code)]
+fn cache_roundtrip_bench() {}

@@ -1,0 +1,49 @@
+//! Bench for paper Table 2: end-to-end cost of the six deployment
+//! strategies on both datasets.  Uses real engines for trace recording
+//! (when artifacts are present; mock engines otherwise) and times the
+//! DES replay of each strategy.
+//!
+//!     cargo bench --bench table2_deployments [-- --prompts 10]
+
+use ce_collm::config::AblationFlags;
+use ce_collm::harness::des::{simulate, SimConfig, Strategy};
+use ce_collm::harness::runner::{record_main_experiments, ExperimentConfig, PolicyKey};
+use ce_collm::harness::tables;
+use ce_collm::net::profiles::LinkProfile;
+use ce_collm::util::bench::bench;
+use ce_collm::util::cli::Args;
+
+mod common;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let cfg = ExperimentConfig {
+        n_prompts: args.get_parse("prompts", 10),
+        repeats: args.get_parse("repeats", 3),
+        max_new_tokens: args.get_parse("max-new", 64),
+        seed: 42,
+    };
+    let link = LinkProfile::paper_scaled();
+    let (mut edge, mut cloud, dims) = common::engines();
+
+    eprintln!("recording traces ({} prompts x 2 datasets x 4 policies)...", cfg.n_prompts);
+    let rec = record_main_experiments(edge.as_mut(), cloud.as_mut(), &cfg).unwrap();
+
+    println!("== DES replay cost per strategy (Alpaca traces) ==");
+    for (name, traces, strategy) in [
+        ("cloud-only", &rec.alpaca.t10[..], Strategy::CloudOnly),
+        ("naive-split", &rec.alpaca.t10[..], Strategy::NaiveSplit),
+        ("standalone", &rec.alpaca.standalone[..], Strategy::Standalone),
+        ("ce-collm θ=0.8", &rec.alpaca.t08[..], Strategy::CeCollm(AblationFlags::default())),
+        ("ce-collm θ=0.9", rec.alpaca.for_policy(PolicyKey::T09), Strategy::CeCollm(AblationFlags::default())),
+        ("ce-collm θ=1.0", &rec.alpaca.t10[..], Strategy::CeCollm(AblationFlags::default())),
+    ] {
+        let per_client = vec![traces.to_vec()];
+        bench(&format!("table2 replay: {name}"), 0.3, || {
+            simulate(&per_client, &dims, &rec.cost, &SimConfig { strategy, link, seed: 1 })
+        });
+    }
+
+    println!("\n== Table 2 ==");
+    println!("{}", tables::table2(&rec, &dims, link, &cfg));
+}

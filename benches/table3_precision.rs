@@ -1,0 +1,28 @@
+//! Bench for paper Table 3: accuracy across thresholds × transmission
+//! precision (f16 vs f32) on TruthfulQA/XSum/CNN-DM-like sets.
+//!
+//!     cargo bench --bench table3_precision [-- --prompts 8]
+
+use ce_collm::harness::runner::ExperimentConfig;
+use ce_collm::harness::tables;
+use ce_collm::util::bench::bench;
+use ce_collm::util::cli::Args;
+
+mod common;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let cfg = ExperimentConfig {
+        n_prompts: args.get_parse("prompts", 8),
+        repeats: 1,
+        max_new_tokens: args.get_parse("max-new", 48),
+        seed: 42,
+    };
+    let (mut edge, mut cloud, _dims) = common::engines();
+
+    let mut table = String::new();
+    bench("table3 full pipeline (record + score)", 0.0, || {
+        table = tables::table3(edge.as_mut(), cloud.as_mut(), &cfg).unwrap();
+    });
+    println!("\n== Table 3 ==\n{table}");
+}

@@ -1,0 +1,50 @@
+//! Bench for paper Table 4 (ablation study): replay cost of each ablated
+//! configuration and the rendered table.
+//!
+//!     cargo bench --bench table4_ablation [-- --prompts 10]
+
+use ce_collm::config::AblationFlags;
+use ce_collm::harness::des::{simulate, SimConfig, Strategy};
+use ce_collm::harness::runner::{record_main_experiments, ExperimentConfig};
+use ce_collm::harness::tables;
+use ce_collm::net::profiles::LinkProfile;
+use ce_collm::util::bench::bench;
+use ce_collm::util::cli::Args;
+
+mod common;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let cfg = ExperimentConfig {
+        n_prompts: args.get_parse("prompts", 10),
+        repeats: args.get_parse("repeats", 3),
+        max_new_tokens: args.get_parse("max-new", 64),
+        seed: 42,
+    };
+    let link = LinkProfile::paper_scaled();
+    let (mut edge, mut cloud, dims) = common::engines();
+
+    eprintln!("recording traces...");
+    let rec = record_main_experiments(edge.as_mut(), cloud.as_mut(), &cfg).unwrap();
+
+    println!("== DES replay cost per ablation (XSum traces) ==");
+    for (name, traces, flags) in [
+        ("full CE-CoLLM θ=0.8", &rec.xsum.t08, AblationFlags::default()),
+        ("− half precision", &rec.xsum.t08, AblationFlags::without_half_precision()),
+        ("− early exit", &rec.xsum.t10, AblationFlags::without_early_exit()),
+        ("− CM & parallel upload", &rec.xsum.t08, AblationFlags::without_cm_and_parallel_upload()),
+    ] {
+        let per_client = vec![traces.to_vec()];
+        bench(&format!("table4 replay: {name}"), 0.3, || {
+            simulate(
+                &per_client,
+                &dims,
+                &rec.cost,
+                &SimConfig { strategy: Strategy::CeCollm(flags), link, seed: 1 },
+            )
+        });
+    }
+
+    println!("\n== Table 4 ==");
+    println!("{}", tables::table4(&rec, &dims, link, &cfg));
+}

@@ -1,0 +1,129 @@
+//! END-TO-END DRIVER (EXPERIMENTS.md §E2E): a real cloud server and N
+//! real edge clients over TCP on a WAN-throttled link, all layers live —
+//! PJRT inference on both sides, dual-channel protocol, content manager,
+//! async parallel upload.  Reports per-request latency, throughput, and
+//! the request-cloud rate.
+//!
+//!     cargo run --release --example cloud_edge_serve -- [--clients 3]
+//!         [--prompts 5] [--threshold 0.8] [--link wifi]
+
+use std::net::TcpListener;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use ce_collm::config::DeploymentConfig;
+use ce_collm::coordinator::cloud::{CloudServer, SessionFactory};
+use ce_collm::coordinator::edge::{CloudLink, EdgeClient};
+use ce_collm::eval::datasets::{self, Dataset};
+use ce_collm::model::manifest::Manifest;
+use ce_collm::net::profiles::LinkProfile;
+use ce_collm::net::transport::{TcpTransport, Throttled, Transport};
+use ce_collm::runtime::stack::LocalStack;
+use ce_collm::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse_env();
+    let n_clients: usize = args.get_parse("clients", 3);
+    let n_prompts: usize = args.get_parse("prompts", 5);
+    let threshold: f32 = args.get_parse("threshold", 0.8);
+    let link = LinkProfile::by_name(&args.get_or("link", "wifi")).expect("link profile");
+    let artifacts = args.get_or("artifacts", "artifacts");
+
+    let dims = Manifest::load(std::path::Path::new(&artifacts))?.model;
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    println!("starting cloud server on {addr} (link profile: {}, θ={threshold})", link.name);
+
+    let art2 = artifacts.clone();
+    let server = CloudServer::spawn(listener, dims.clone(), move || {
+        let stack = LocalStack::load(&art2)?;
+        let f: SessionFactory = Box::new(move |_| Ok(Box::new(stack.cloud_session()) as _));
+        Ok(f)
+    })?;
+
+    // Edge clients run on separate threads (separate PJRT stacks, as
+    // separate edge devices would).  Requests are batched per client.
+    let wall0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        let addr = addr.to_string();
+        let artifacts = artifacts.clone();
+        handles.push(std::thread::spawn(move || -> Result<Report> {
+            let stack = LocalStack::load(&artifacts)?;
+            let mut cfg = DeploymentConfig::with_threshold(threshold);
+            cfg.device_id = c as u64 + 1;
+            cfg.max_new_tokens = 48;
+            let upload: Box<dyn Transport + Send> =
+                Box::new(Throttled::new(TcpTransport::connect(&addr)?, link));
+            let infer: Box<dyn Transport> =
+                Box::new(Throttled::new(TcpTransport::connect(&addr)?, link));
+            let cl = CloudLink::new(cfg.device_id, upload, infer)?;
+            let mut client = EdgeClient::with_cloud(stack.edge_session(), cfg, cl);
+
+            let prompts = datasets::generate(Dataset::Alpaca, n_prompts, 1000 + c as u64);
+            let mut rep = Report::default();
+            for case in &prompts.cases {
+                let t0 = Instant::now();
+                let out = client.generate(&case.prompt)?;
+                rep.latencies_s.push(t0.elapsed().as_secs_f64());
+                rep.tokens += out.tokens.len();
+                rep.cloud_tokens += out.counters.tokens_cloud;
+                rep.bytes_up += out.counters.bytes_up;
+            }
+            Ok(rep)
+        }));
+    }
+
+    let mut all = Report::default();
+    for h in handles {
+        let r = h.join().expect("client thread")?;
+        all.merge(r);
+    }
+    let wall = wall0.elapsed().as_secs_f64();
+    let stats = server.shutdown();
+
+    all.latencies_s.sort_by(|a, b| a.total_cmp(b));
+    let pct = |p: f64| all.latencies_s[(p * (all.latencies_s.len() - 1) as f64) as usize];
+    println!("\n=== end-to-end serve results ===");
+    println!("clients: {n_clients}, prompts/client: {n_prompts}, θ={threshold}, link={}", link.name);
+    println!(
+        "requests: {}   tokens: {}   wall: {wall:.2}s   throughput: {:.1} tok/s",
+        all.latencies_s.len(),
+        all.tokens,
+        all.tokens as f64 / wall
+    );
+    println!(
+        "request latency: p50 {:.3}s  p90 {:.3}s  max {:.3}s",
+        pct(0.5),
+        pct(0.9),
+        all.latencies_s.last().unwrap()
+    );
+    println!(
+        "request-cloud rate: {:.1}%   uploaded: {:.2} MB   cloud GPU busy: {:.2}s over {} requests",
+        100.0 * all.cloud_tokens as f64 / all.tokens as f64,
+        all.bytes_up as f64 / 1e6,
+        stats.busy_s,
+        stats.requests_served,
+    );
+    assert_eq!(stats.active_devices, 0, "content manager must be empty at shutdown");
+    println!("content manager: all sessions released ✓");
+    Ok(())
+}
+
+#[derive(Default)]
+struct Report {
+    latencies_s: Vec<f64>,
+    tokens: usize,
+    cloud_tokens: usize,
+    bytes_up: u64,
+}
+
+impl Report {
+    fn merge(&mut self, o: Report) {
+        self.latencies_s.extend(o.latencies_s);
+        self.tokens += o.tokens;
+        self.cloud_tokens += o.cloud_tokens;
+        self.bytes_up += o.bytes_up;
+    }
+}

@@ -1,0 +1,34 @@
+//! Figure 4 (a)(b) driver: scalability from 1 to 5 edge devices, CE-CoLLM
+//! (θ ∈ {0.8, 0.9}) vs the cloud-based deployment.
+//!
+//!     cargo run --release --example multi_client_scaling -- [--clients 5]
+//!         [--prompts 15] [--link paper]
+
+use anyhow::Result;
+
+use ce_collm::harness::runner::{record_main_experiments, ExperimentConfig};
+use ce_collm::harness::tables;
+use ce_collm::net::profiles::LinkProfile;
+use ce_collm::runtime::stack::LocalStack;
+use ce_collm::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse_env();
+    let stack = LocalStack::load(args.get_or("artifacts", "artifacts"))?;
+    let cfg = ExperimentConfig {
+        n_prompts: args.get_parse("prompts", 15),
+        repeats: args.get_parse("repeats", 3),
+        max_new_tokens: args.get_parse("max-new", 64),
+        seed: args.get_parse("seed", 42),
+    };
+    let link = LinkProfile::by_name(&args.get_or("link", "paper")).expect("link profile");
+
+    println!("recording traces ({} prompts per dataset, real engines)...", cfg.n_prompts);
+    let mut edge = stack.edge_session();
+    let mut cloud = stack.cloud_session();
+    let rec = record_main_experiments(&mut edge, &mut cloud, &cfg)?;
+
+    println!("\n{}", tables::fig4(&rec, &stack.manifest.model, link, &cfg,
+                                  args.get_parse("clients", 5)));
+    Ok(())
+}

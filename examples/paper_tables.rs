@@ -1,0 +1,71 @@
+//! Regenerate every table and figure of the paper in one run and write
+//! the output to a report file (default `paper_report.md`).
+//!
+//!     cargo run --release --example paper_tables -- [--prompts 25]
+//!         [--repeats 5] [--link paper] [--out paper_report.md]
+
+use std::fmt::Write as _;
+
+use anyhow::Result;
+
+use ce_collm::harness::runner::{record_main_experiments, ExperimentConfig};
+use ce_collm::harness::tables;
+use ce_collm::net::profiles::LinkProfile;
+use ce_collm::runtime::stack::LocalStack;
+use ce_collm::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse_env();
+    let stack = LocalStack::load(args.get_or("artifacts", "artifacts"))?;
+    let cfg = ExperimentConfig {
+        n_prompts: args.get_parse("prompts", 25),
+        repeats: args.get_parse("repeats", 5),
+        max_new_tokens: args.get_parse("max-new", 96),
+        seed: args.get_parse("seed", 42),
+    };
+    let link = LinkProfile::by_name(&args.get_or("link", "paper")).expect("link profile");
+    let out_path = args.get_or("out", "paper_report.md");
+
+    let mut edge = stack.edge_session();
+    let mut cloud = stack.cloud_session();
+    let dims = &stack.manifest.model;
+    let mut report = String::new();
+
+    writeln!(report, "# CE-CoLLM reproduction report\n")?;
+    writeln!(
+        report,
+        "config: {} prompts/dataset, {} repeats, max_new={}, link={}, seed={}\n",
+        cfg.n_prompts, cfg.repeats, cfg.max_new_tokens, link.name, cfg.seed
+    )?;
+
+    eprintln!("Table 1 (exit confidences)...");
+    writeln!(report, "## Table 1 — tokens & confidence per exit\n")?;
+    writeln!(report, "```\n{}\n```\n", tables::table1(&mut edge, &mut cloud, "the turing test is", 24)?)?;
+
+    eprintln!("recording traces for Tables 2/4 + Fig 4 ({} prompts x 2 datasets x 4 policies)...",
+              cfg.n_prompts);
+    let rec = record_main_experiments(&mut edge, &mut cloud, &cfg)?;
+
+    eprintln!("Table 2 (deployment strategies)...");
+    writeln!(report, "## Table 2 — cost & performance across deployment strategies\n")?;
+    writeln!(report, "```\n{}\n```\n", tables::table2(&rec, dims, link, &cfg))?;
+
+    eprintln!("Table 3 (precision / thresholds)...");
+    writeln!(report, "## Table 3 — accuracy across thresholds and precision\n")?;
+    writeln!(report, "```\n{}\n```\n", tables::table3(&mut edge, &mut cloud, &cfg)?)?;
+
+    eprintln!("Table 4 (ablation)...");
+    writeln!(report, "## Table 4 — ablation study\n")?;
+    writeln!(report, "```\n{}\n```\n", tables::table4(&rec, dims, link, &cfg))?;
+
+    eprintln!("Figure 4 (scaling)...");
+    writeln!(report, "## Figure 4 — multi-client scaling\n")?;
+    writeln!(report, "```\n{}\n```\n", tables::fig4(&rec, dims, link, &cfg, 5))?;
+
+    writeln!(report, "calibrated cost model: {:#?}\n", rec.cost)?;
+
+    std::fs::write(&out_path, &report)?;
+    println!("{report}");
+    eprintln!("written to {out_path}");
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Quickstart: load the AOT artifacts and generate text in both of
+//! CE-CoLLM's modes — edge standalone (low latency) and cloud-edge
+//! collaborative (high accuracy) — entirely in-process.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+
+use ce_collm::config::ExitPolicy;
+use ce_collm::coordinator::policy::ExitPoint;
+use ce_collm::harness::trace::{record, CallTimings};
+use ce_collm::quant::Precision;
+use ce_collm::runtime::stack::LocalStack;
+
+fn main() -> Result<()> {
+    let stack = LocalStack::load("artifacts")?;
+    println!(
+        "loaded CE-CoLLM stack: {} layers, exits after layers {} and {}, vocab {}",
+        stack.manifest.model.n_layers,
+        stack.manifest.model.l_ee1,
+        stack.manifest.model.l_ee2,
+        stack.manifest.model.vocab_size,
+    );
+
+    let mut edge = stack.edge_session();
+    let mut cloud = stack.cloud_session();
+    let prompt = "the machine is a";
+
+    for (label, policy) in [
+        ("standalone (low-latency)", ExitPolicy::Standalone { threshold: 0.8 }),
+        ("collaborative θ=0.8", ExitPolicy::Threshold(0.8)),
+        ("collaborative θ=0.9", ExitPolicy::Threshold(0.9)),
+        ("cloud-equivalent θ=1.0", ExitPolicy::Threshold(1.0)),
+    ] {
+        let mut timings = CallTimings::default();
+        let t0 = std::time::Instant::now();
+        let tr = record(&mut edge, &mut cloud, policy, Precision::F16, prompt, 48, &mut timings)?;
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "\n[{label}]\n  '{prompt}' → '{}'\n  {} tokens in {:.3}s ({:.1} ms/token); \
+             exits: {} @exit1, {} @exit2, {} @cloud",
+            tr.text.trim_end(),
+            tr.tokens.len(),
+            dt,
+            1000.0 * dt / tr.tokens.len() as f64,
+            tr.count(ExitPoint::Exit1),
+            tr.count(ExitPoint::Exit2),
+            tr.count(ExitPoint::Cloud),
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,238 @@
+"""AOT exporter: lower the five CE-CoLLM segment functions to HLO text.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the rust ``xla`` crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (in ``artifacts/``):
+  params.npz            trained parameters (cached; delete to retrain)
+  weights.bin           binary tensor container read by rust (model/weights.rs)
+  manifest.json         model config + per-artifact input/output signatures
+  {edge_prefill, edge_seg1_decode, edge_seg2_decode,
+   cloud_prefill, cloud_decode}.hlo.txt
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .config import DEFAULT, DEFAULT_TRAIN, ModelConfig
+
+MAGIC = b"CECW"
+VERSION = 1
+DTYPE_F32 = 0
+
+
+# --------------------------------------------------------------------------
+# weights.bin container
+# --------------------------------------------------------------------------
+
+def write_weights(path: str, tensors: dict):
+    """tensors: name -> np.float32 ndarray. Little-endian throughout."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr, dtype=np.float32)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", DTYPE_F32, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(struct.pack("<Q", arr.nbytes))
+            f.write(arr.tobytes())
+
+
+# --------------------------------------------------------------------------
+# lowering helpers
+# --------------------------------------------------------------------------
+
+def to_hlo_text(fn, example_args) -> str:
+    # keep_unused: each artifact receives the FULL partition parameter list
+    # (manifest order) even when a segment touches only a subset — the rust
+    # runtime stages one buffer vector per partition and reuses it for
+    # every artifact.
+    lowered = jax.jit(fn, keep_unused=True).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def spec_of(x):
+    return jax.ShapeDtypeStruct(np.shape(x), x.dtype)
+
+
+def flat_names(pytree):
+    """Names of leaves in jax flatten order (== jit argument order)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(pytree)
+    return [jax.tree_util.keystr(kp) for kp, _ in flat]
+
+
+def sig_entry(name, leaf):
+    return {"name": name, "shape": [int(d) for d in np.shape(leaf)],
+            "dtype": str(np.asarray(leaf).dtype) if not hasattr(leaf, "dtype")
+            else str(leaf.dtype)}
+
+
+def export_artifact(out_dir, name, fn, params_subset, runtime_args,
+                    runtime_names):
+    """Lower fn(params, *runtime_args) -> dict and describe its signature.
+
+    The jit argument order is: params leaves (pytree flatten order), then
+    runtime args in declared order.  The output dict flattens in sorted-key
+    order; both orders are recorded in the manifest for the rust side.
+    """
+    out = fn(params_subset, *runtime_args)             # eager, for out specs
+    out_flat, out_tree = jax.tree_util.tree_flatten(out)
+    # keystr of a top-level dict key is "['name']" — strip to bare names
+    out_names = [n.replace("['", "").replace("']", "") for n in flat_names(out)]
+
+    param_specs = jax.tree.map(spec_of, params_subset)
+    arg_specs = [jax.tree.map(spec_of, a) for a in runtime_args]
+    text = to_hlo_text(fn, (param_specs, *arg_specs))
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+
+    sig = {
+        "file": fname,
+        "inputs": [sig_entry(n, a) for n, a in zip(runtime_names, runtime_args)],
+        "outputs": [sig_entry(n, o) for n, o in zip(out_names, out_flat)],
+    }
+    print(f"  {name}: {len(text)} chars, "
+          f"{len(sig['inputs'])} runtime inputs, {len(sig['outputs'])} outputs")
+    return sig
+
+
+# --------------------------------------------------------------------------
+# main
+# --------------------------------------------------------------------------
+
+def load_or_train_params(out_dir, cfg):
+    npz_path = os.path.join(out_dir, "params.npz")
+    if os.path.exists(npz_path):
+        print(f"loading cached params from {npz_path}")
+        loaded = np.load(npz_path)
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        flat, tree = jax.tree_util.tree_flatten_with_path(params)
+        rebuilt = [jnp.asarray(loaded[jax.tree_util.keystr(kp)])
+                   for kp, _ in flat]
+        return jax.tree_util.tree_unflatten(tree, rebuilt), None
+    from . import train as T
+    print("training (one-time, cached to params.npz)...")
+    params, losses = T.train(cfg, DEFAULT_TRAIN)
+    T.save_npz(params, npz_path)
+    return params, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    cfg = DEFAULT
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    params, losses = load_or_train_params(args.out_dir, cfg)
+    eparams = M.edge_params(params, cfg)
+    cparams = M.cloud_params(params, cfg)
+
+    # ---- weights.bin: every leaf of both partitions, keyed by path ----
+    tensors = {}
+    for part, p in (("edge", eparams), ("cloud", cparams)):
+        flat, _ = jax.tree_util.tree_flatten_with_path(p)
+        for kp, leaf in flat:
+            tensors[part + jax.tree_util.keystr(kp)] = np.asarray(leaf)
+    write_weights(os.path.join(args.out_dir, "weights.bin"), tensors)
+    print(f"weights.bin: {len(tensors)} tensors, "
+          f"{sum(t.nbytes for t in tensors.values())/1e6:.1f} MB")
+
+    # ---- example runtime inputs ----
+    P, S, d = cfg.max_prompt, cfg.max_seq, cfg.d_model
+    H, hd = cfg.n_heads, cfg.head_dim
+    i32, f32 = jnp.int32, jnp.float32
+    tokens = jnp.zeros((P,), i32)
+    length = jnp.zeros((), i32)
+    pos = jnp.zeros((), i32)
+    token = jnp.zeros((), i32)
+    h1_full = jnp.zeros((P, d), f32)
+    h1_one = jnp.zeros((1, d), f32)
+    kv1 = jnp.zeros((cfg.l_ee1, H, S, hd), f32)
+    kv2 = jnp.zeros((cfg.l_ee2 - cfg.l_ee1, H, S, hd), f32)
+    kvc = jnp.zeros((cfg.n_layers - cfg.l_ee1, H, S, hd), f32)
+
+    print("lowering artifacts:")
+    artifacts = {}
+    artifacts["edge_prefill"] = export_artifact(
+        args.out_dir, "edge_prefill",
+        lambda p, t, n: M.edge_prefill(p, t, n, cfg),
+        eparams, (tokens, length), ["tokens", "length"])
+    # short-prompt bucket: same function lowered at P=64 (perf: avoids
+    # paying the full 256-position pad for ~30-byte Alpaca-style prompts;
+    # EXPERIMENTS.md §Perf).  KV cache shapes are untouched (max_seq).
+    import dataclasses
+    cfg64 = dataclasses.replace(cfg, max_prompt=64)
+    tokens64 = jnp.zeros((64,), i32)
+    h1_64 = jnp.zeros((64, d), f32)
+    artifacts["edge_prefill_64"] = export_artifact(
+        args.out_dir, "edge_prefill_64",
+        lambda p, t, n: M.edge_prefill(p, t, n, cfg64),
+        eparams, (tokens64, length), ["tokens", "length"])
+    artifacts["edge_seg1_decode"] = export_artifact(
+        args.out_dir, "edge_seg1_decode",
+        lambda p, kk, kv, t, ps: M.edge_seg1_decode(p, kk, kv, t, ps, cfg),
+        eparams, (kv1, kv1, token, pos), ["kv1_k", "kv1_v", "token", "pos"])
+    artifacts["edge_seg2_decode"] = export_artifact(
+        args.out_dir, "edge_seg2_decode",
+        lambda p, kk, kv, h, ps: M.edge_seg2_decode(p, kk, kv, h, ps, cfg),
+        eparams, (kv2, kv2, h1_one, pos), ["kv2_k", "kv2_v", "h1", "pos"])
+    artifacts["cloud_prefill"] = export_artifact(
+        args.out_dir, "cloud_prefill",
+        lambda p, h, n: M.cloud_prefill(p, h, n, cfg),
+        cparams, (h1_full, length), ["h1", "length"])
+    artifacts["cloud_prefill_64"] = export_artifact(
+        args.out_dir, "cloud_prefill_64",
+        lambda p, h, n: M.cloud_prefill(p, h, n, cfg64),
+        cparams, (h1_64, length), ["h1", "length"])
+    artifacts["cloud_decode"] = export_artifact(
+        args.out_dir, "cloud_decode",
+        lambda p, kk, kv, h, ps: M.cloud_decode(p, kk, kv, h, ps, cfg),
+        cparams, (kvc, kvc, h1_one, pos), ["kvc_k", "kvc_v", "h1", "pos"])
+
+    manifest = {
+        "model": cfg.to_dict(),
+        "partitions": {
+            "edge": [sig_entry("edge" + n, l) for n, l in
+                     zip(flat_names(eparams),
+                         jax.tree_util.tree_flatten(eparams)[0])],
+            "cloud": [sig_entry("cloud" + n, l) for n, l in
+                      zip(flat_names(cparams),
+                          jax.tree_util.tree_flatten(cparams)[0])],
+        },
+        "artifact_params": {
+            "edge_prefill": "edge", "edge_prefill_64": "edge",
+            "edge_seg1_decode": "edge",
+            "edge_seg2_decode": "edge", "cloud_prefill": "cloud",
+            "cloud_prefill_64": "cloud", "cloud_decode": "cloud",
+        },
+        "artifacts": artifacts,
+        "final_train_loss": losses[-1] if losses else None,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print("manifest.json written")
+
+
+if __name__ == "__main__":
+    main()

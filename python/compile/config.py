@@ -1,0 +1,86 @@
+"""Model and AOT configuration for the CE-CoLLM reproduction.
+
+A single source of truth shared by the kernels (L1), the jax model (L2),
+the trainer, and the AOT exporter.  The rust coordinator (L3) reads the
+same values from ``artifacts/manifest.json``.
+
+Layer indexing follows the paper: layers are 1-indexed in prose
+(``l_ee1``, ``l_ee2``), 0-indexed in code.  The edge partition holds
+layers ``0 .. l_ee2-1`` with exit heads after layer ``l_ee1-1`` (exit 1)
+and layer ``l_ee2-1`` (exit 2).  The cloud partition holds layers
+``l_ee1 .. n_layers-1`` plus the final LM head, i.e. it resumes from the
+hidden state the edge uploads at exit 1 (paper Fig. 2/3: the region
+``l_ee1 .. l_ee2-1`` is computed on *both* sides — the overlap).
+"""
+
+from dataclasses import dataclass, asdict, field
+
+
+# Special tokens appended after the 256 byte values.
+BOS_ID = 256
+EOS_ID = 257
+PAD_ID = 258
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """EE-LLM-style byte-level transformer, scaled for a CPU testbed."""
+
+    vocab_size: int = 384          # 256 bytes + specials, padded to 3*128 lanes
+    d_model: int = 128
+    n_layers: int = 8
+    n_heads: int = 4
+    ffn_hidden: int = 512
+    l_ee1: int = 3                 # exit 1 after layer 3 (1-indexed)
+    l_ee2: int = 5                 # exit 2 after layer 5 (1-indexed)
+    max_prompt: int = 256          # static prefill length (padded)
+    max_seq: int = 384             # KV cache capacity
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    # --- partition boundaries (0-indexed, half-open ranges) ---
+    @property
+    def edge_seg1_layers(self) -> range:
+        """Layers run by the edge before exit 1."""
+        return range(0, self.l_ee1)
+
+    @property
+    def edge_seg2_layers(self) -> range:
+        """Layers run by the edge between exit 1 and exit 2."""
+        return range(self.l_ee1, self.l_ee2)
+
+    @property
+    def cloud_layers(self) -> range:
+        """Layers run by the cloud, resuming from the exit-1 hidden state."""
+        return range(self.l_ee1, self.n_layers)
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["head_dim"] = self.head_dim
+        d["bos_id"] = BOS_ID
+        d["eos_id"] = EOS_ID
+        d["pad_id"] = PAD_ID
+        return d
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    """Build-time training of the exit heads (EE-LLM-style weighted CE)."""
+
+    seed: int = 0
+    batch_size: int = 16
+    seq_len: int = 96
+    steps: int = 350
+    lr: float = 3e-3
+    warmup: int = 50
+    # loss weights for (exit1, exit2, final) — EE-LLM style
+    exit_weights: tuple = (0.3, 0.3, 0.4)
+    corpus_sentences: int = 4000
+
+
+DEFAULT = ModelConfig()
+DEFAULT_TRAIN = TrainConfig()

@@ -1,0 +1,115 @@
+"""Synthetic byte-level corpus for build-time training.
+
+The paper trains/uses EE-LLM 7B; its Tables depend only on the *confidence
+structure* of the exits: many tokens are easy (predicted confidently at an
+early exit — e.g. the tail bytes of a word, closing punctuation) while some
+are hard (word choices, content words) and need the full model.
+
+A byte-level LM over a small probabilistic grammar reproduces exactly that
+structure: within-word bytes are near-deterministic (high confidence at
+exit 1), word boundaries are genuinely uncertain (low confidence, deferred
+to deeper layers / the cloud partition).
+
+The same grammar (word lists + templates) is mirrored in
+``rust/src/eval/datasets.rs`` so the rust harness generates evaluation
+prompts from the model's training distribution.  KEEP THE TWO IN SYNC.
+"""
+
+import numpy as np
+
+from .config import BOS_ID, EOS_ID
+
+# --- mirrored in rust/src/eval/datasets.rs ---------------------------------
+NOUNS = [
+    "machine", "test", "system", "model", "network", "computer", "data",
+    "cloud", "edge", "device", "server", "intelligence", "behaviour",
+    "ability", "language", "token", "layer", "cache", "latency", "result",
+    "question", "answer", "document", "summary", "article", "story",
+    "report", "sentence", "paragraph", "response", "request", "signal",
+]
+VERBS = [
+    "exhibit", "generate", "process", "predict", "transmit", "compute",
+    "evaluate", "measure", "produce", "describe", "summarize", "explain",
+    "analyze", "compare", "reduce", "improve", "accelerate", "support",
+]
+ADJS = [
+    "intelligent", "efficient", "adaptive", "large", "small", "fast",
+    "slow", "accurate", "reliable", "local", "remote", "collaborative",
+    "early", "final", "hidden", "confident",
+]
+DETS = ["the", "a", "this", "that", "every", "each"]
+
+# Sentence templates; tokens are word-class markers expanded at sample time.
+TEMPLATES = [
+    ["D", "N", "is", "a", "N", "of", "a", "N's", "ability", "to", "V", "A", "N"],
+    ["D", "A", "N", "can", "V", "D", "N"],
+    ["D", "N", "must", "V", "D", "A", "N", "quickly"],
+    ["what", "is", "D", "N", "?", "it", "is", "a", "A", "N"],
+    ["D", "N", "of", "D", "N", "is", "A"],
+    ["to", "V", "is", "to", "V", "D", "A", "N"],
+    ["D", "N", "and", "D", "N", "V", "together"],
+    ["when", "D", "N", "is", "A", ",", "D", "N", "can", "V"],
+]
+# ---------------------------------------------------------------------------
+
+
+def sample_sentence(rng: np.random.Generator) -> str:
+    tpl = TEMPLATES[rng.integers(len(TEMPLATES))]
+    out = []
+    for tok in tpl:
+        if tok == "N":
+            out.append(NOUNS[rng.integers(len(NOUNS))])
+        elif tok == "N's":
+            out.append(NOUNS[rng.integers(len(NOUNS))] + "'s")
+        elif tok == "V":
+            out.append(VERBS[rng.integers(len(VERBS))])
+        elif tok == "A":
+            out.append(ADJS[rng.integers(len(ADJS))])
+        elif tok == "D":
+            out.append(DETS[rng.integers(len(DETS))])
+        else:
+            out.append(tok)
+    s = " ".join(out).replace(" ?", "?").replace(" ,", ",").replace(" 's", "'s")
+    return s + "."
+
+
+def sample_document(rng: np.random.Generator, n_sentences: int) -> str:
+    return " ".join(sample_sentence(rng) for _ in range(n_sentences))
+
+
+def encode(text: str) -> np.ndarray:
+    """Byte-level encoding; specials are out-of-band (BOS/EOS ids > 255)."""
+    return np.frombuffer(text.encode("utf-8"), dtype=np.uint8).astype(np.int32)
+
+
+def decode(ids) -> str:
+    bs = bytes(int(i) for i in ids if 0 <= int(i) < 256)
+    return bs.decode("utf-8", errors="replace")
+
+
+def make_corpus(rng: np.random.Generator, n_sentences: int) -> np.ndarray:
+    """Flat stream of token ids: BOS doc EOS BOS doc EOS ... where each
+    document is 2-6 sentences.  Multi-sentence documents teach the model
+    to continue past sentence boundaries (generations comparable to the
+    paper's ~86-token averages) instead of emitting EOS after one
+    sentence."""
+    parts = []
+    emitted = 0
+    while emitted < n_sentences:
+        k = int(rng.integers(2, 7))
+        doc = sample_document(rng, k)
+        emitted += k
+        ids = encode(doc)
+        parts.append(np.concatenate([[BOS_ID], ids, [EOS_ID]]).astype(np.int32))
+    return np.concatenate(parts)
+
+
+def batches(stream: np.ndarray, batch_size: int, seq_len: int,
+            rng: np.random.Generator):
+    """Yield (inputs, targets) next-token batches forever."""
+    n = len(stream) - seq_len - 1
+    while True:
+        starts = rng.integers(0, n, size=batch_size)
+        x = np.stack([stream[s:s + seq_len] for s in starts])
+        y = np.stack([stream[s + 1:s + seq_len + 1] for s in starts])
+        yield x, y

@@ -1,0 +1,154 @@
+"""Pallas flash-attention kernels (prefill + decode) for the EE-transformer.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): instead of a threadblock-
+per-query-tile GPU schedule, the HBM<->VMEM schedule is expressed with a
+(heads, q-tiles) grid and BlockSpecs; each grid step streams KV tiles of
+TILE_KV rows through VMEM with flash-style online-softmax accumulators
+carried in registers (fori_loop values).  No [P, P] score matrix is ever
+materialized.
+
+Both kernels use interpret=True: they lower to plain HLO so the rust
+PJRT-CPU runtime can execute them; on a real TPU the same BlockSpecs give
+MXU-shaped (128-lane) tiles.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_Q = 128
+TILE_KV = 128
+NEG_INF = -1e30
+
+
+def _prefill_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, tile_kv, tile_q=TILE_Q):
+    """One (head, q-tile) grid step of causal flash attention."""
+    qi = pl.program_id(1)
+    q = q_ref[0]                          # [TILE_Q, hd]
+    hd = q.shape[-1]
+    P = k_ref.shape[1]
+    length = len_ref[0]
+    scale = 1.0 / jnp.sqrt(hd).astype(q.dtype)
+
+    n_kv = P // tile_kv
+
+    def body(kj, carry):
+        acc, m, l = carry
+        k = jax.lax.dynamic_slice_in_dim(k_ref[0], kj * tile_kv, tile_kv, 0)
+        v = jax.lax.dynamic_slice_in_dim(v_ref[0], kj * tile_kv, tile_kv, 0)
+        s = (q @ k.T) * scale             # [tile_q, tile_kv]
+        q_pos = qi * tile_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_pos = kj * tile_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = (k_pos <= q_pos) & (k_pos < length)
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + p @ v
+        return acc_new, m_new, l_new
+
+    acc0 = jnp.zeros_like(q)
+    m0 = jnp.full((q.shape[0],), NEG_INF, q.dtype)
+    l0 = jnp.zeros((q.shape[0],), q.dtype)
+    # causal: kv tiles strictly above this q tile contribute nothing
+    n_live = jnp.minimum(qi + 1, n_kv)
+    acc, m, l = jax.lax.fori_loop(0, n_live, body, (acc0, m0, l0))
+    # padding query rows have l == 0 (all keys masked); emit zeros not nan
+    safe_l = jnp.where(l == 0.0, 1.0, l)
+    o_ref[0] = acc / safe_l[:, None]
+
+
+def attention_prefill(q, k, v, length):
+    """Causal flash attention over a padded prompt.
+
+    Args:
+      q, k, v: [H, P, hd]; P a multiple of the tile (tiles shrink to P for
+        short-prompt buckets, e.g. the P=64 prefill artifact).
+      length: scalar int32 — valid prompt length.
+    Returns:
+      out [H, P, hd]; rows >= length are garbage-but-finite (never read).
+    """
+    H, P, hd = q.shape
+    tile_q = min(TILE_Q, P)
+    tile_kv = min(TILE_KV, P)
+    assert P % tile_q == 0, f"prompt pad {P} must be a multiple of {tile_q}"
+    length = jnp.asarray(length, jnp.int32).reshape((1,))
+
+    return pl.pallas_call(
+        functools.partial(_prefill_kernel, tile_kv=tile_kv, tile_q=tile_q),
+        grid=(H, P // tile_q),
+        in_specs=[
+            pl.BlockSpec((1,), lambda h, i: (0,)),
+            pl.BlockSpec((1, tile_q, hd), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, P, hd), lambda h, i: (h, 0, 0)),
+            pl.BlockSpec((1, P, hd), lambda h, i: (h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_q, hd), lambda h, i: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, P, hd), q.dtype),
+        interpret=True,
+    )(length, q, k, v)
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, *, tile_kv):
+    """One head of single-query flash decode against the KV cache."""
+    q = q_ref[0]                          # [1, hd]
+    hd = q.shape[-1]
+    S = k_ref.shape[1]
+    pos = pos_ref[0]
+    scale = 1.0 / jnp.sqrt(hd).astype(q.dtype)
+    n_kv = S // tile_kv
+
+    def body(kj, carry):
+        acc, m, l = carry
+        k = jax.lax.dynamic_slice_in_dim(k_ref[0], kj * tile_kv, tile_kv, 0)
+        v = jax.lax.dynamic_slice_in_dim(v_ref[0], kj * tile_kv, tile_kv, 0)
+        s = (q @ k.T) * scale             # [1, TILE_KV]
+        k_pos = kj * tile_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos <= pos, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + p @ v
+        return acc_new, m_new, l_new
+
+    # only tiles containing positions <= pos are live
+    n_live = pos // tile_kv + 1
+    n_live = jnp.minimum(n_live, n_kv)
+    acc0 = jnp.zeros_like(q)
+    m0 = jnp.full((1,), NEG_INF, q.dtype)
+    l0 = jnp.zeros((1,), q.dtype)
+    acc, m, l = jax.lax.fori_loop(0, n_live, body, (acc0, m0, l0))
+    o_ref[0] = acc / l[:, None]
+
+
+def attention_decode(q, k_cache, v_cache, pos):
+    """Single-query flash decode.
+
+    Args:
+      q: [H, 1, hd] query at position ``pos``.
+      k_cache, v_cache: [H, S, hd]; slot ``pos`` already holds this step's k/v.
+      pos: scalar int32.
+    Returns:
+      out [H, 1, hd].
+    """
+    H, S, hd = k_cache.shape
+    assert S % TILE_KV == 0, f"cache len {S} must be a multiple of {TILE_KV}"
+    pos = jnp.asarray(pos, jnp.int32).reshape((1,))
+
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, tile_kv=TILE_KV),
+        grid=(H,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda h: (0,)),
+            pl.BlockSpec((1, 1, hd), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, S, hd), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, S, hd), lambda h: (h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd), lambda h: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, 1, hd), q.dtype),
+        interpret=True,
+    )(pos, q, k_cache, v_cache)

@@ -1,0 +1,97 @@
+"""Pallas fused exit-head kernel: rmsnorm -> unembed matmul -> online softmax.
+
+CE-CoLLM evaluates an exit head at *every* exit point for *every* token
+(paper §4.4 step 2), so this is one of the two compute hot-spots.  The naive
+formulation materializes the full [T, V] logits in HBM three times (norm
+output, logits, softmax); this kernel keeps everything VMEM-resident and
+produces the confidence (max softmax probability) in the same pass using
+flash-style online (m, l) accumulators over vocab tiles.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the unembed matmul
+[1,d]x[d,V] is tiled along V in lanes-of-128 blocks feeding the MXU; the
+(m, l, argmax) accumulators live in the stats *output* block, exploiting
+Pallas's sequential grid guarantee (same trick as scratch, but portable to
+interpret mode).  VMEM footprint per grid step: d*TILE_V*4 = 64 KiB for the
+weight tile + negligible vectors.
+
+Confidence identity used: with l = sum_j exp(logit_j - m) and
+m = max_j logit_j, the max softmax probability is exactly 1/l.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_V = 128
+
+
+def _kernel(h_ref, scale_ref, w_ref, logits_ref, stats_ref, *, eps):
+    j = pl.program_id(0)
+
+    # rmsnorm of the [1, d] hidden (d fully resident; recomputed per tile —
+    # 3 flops/elem, cheaper than a cross-step staging buffer)
+    h = h_ref[...]
+    var = jnp.mean(jnp.square(h), axis=-1, keepdims=True)
+    hn = h * jax.lax.rsqrt(var + eps) * scale_ref[...]
+
+    lg = hn @ w_ref[...]              # [1, TILE_V] on the MXU
+    logits_ref[...] = lg
+
+    @pl.when(j == 0)
+    def _init():
+        stats_ref[0, 0] = -jnp.inf    # running max m
+        stats_ref[0, 1] = 0.0         # running sumexp l (relative to m)
+        stats_ref[0, 2] = 0.0         # running argmax (stored as f32)
+
+    m_prev = stats_ref[0, 0]
+    l_prev = stats_ref[0, 1]
+    a_prev = stats_ref[0, 2]
+
+    tile_max = jnp.max(lg)
+    tile_arg = (jnp.argmax(lg[0]) + j * TILE_V).astype(jnp.float32)
+    m_new = jnp.maximum(m_prev, tile_max)
+    l_new = l_prev * jnp.exp(m_prev - m_new) + jnp.sum(jnp.exp(lg - m_new))
+
+    stats_ref[0, 0] = m_new
+    stats_ref[0, 1] = l_new
+    stats_ref[0, 2] = jnp.where(tile_max > m_prev, tile_arg, a_prev)
+
+
+def exit_head(h, norm_scale, unembed, eps: float = 1e-5):
+    """Fused exit head for a single position.
+
+    Args:
+      h: [1, d] hidden state.
+      norm_scale: [d] rmsnorm scale.
+      unembed: [d, V] unembedding matrix; V % 128 == 0.
+    Returns:
+      logits [1, V], conf [] (max softmax prob, f32), argmax [] (int32).
+    """
+    d = h.shape[-1]
+    V = unembed.shape[-1]
+    assert V % TILE_V == 0, f"vocab {V} must be a multiple of {TILE_V}"
+
+    logits, stats = pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(V // TILE_V,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda j: (0, 0)),
+            pl.BlockSpec((1, d), lambda j: (0, 0)),
+            pl.BlockSpec((d, TILE_V), lambda j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, TILE_V), lambda j: (0, j)),
+            pl.BlockSpec((1, 4), lambda j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, V), jnp.float32),
+            jax.ShapeDtypeStruct((1, 4), jnp.float32),
+        ],
+        interpret=True,  # CPU-PJRT target; lowers to plain HLO
+    )(h, norm_scale[None, :], unembed)
+
+    conf = 1.0 / stats[0, 1]
+    argmax = stats[0, 2].astype(jnp.int32)
+    return logits, conf, argmax

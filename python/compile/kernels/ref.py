@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here; pytest
+(``python/tests/test_kernel.py``) sweeps shapes/seeds with hypothesis and
+asserts allclose.  The trainer also uses these (faster to compile than the
+interpret-mode kernels; identical math).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm(x, scale, eps: float = 1e-5):
+    """RMSNorm over the last axis."""
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * scale
+
+
+def exit_head(h, norm_scale, unembed, eps: float = 1e-5):
+    """Fused exit head: rmsnorm -> unembed -> softmax stats.
+
+    Args:
+      h: [T, d] hidden states.
+      norm_scale: [d].
+      unembed: [d, V].
+    Returns:
+      logits [T, V], conf [T] (max softmax prob), argmax [T] (int32).
+    """
+    logits = rmsnorm(h, norm_scale, eps) @ unembed
+    probs = jax.nn.softmax(logits, axis=-1)
+    return logits, jnp.max(probs, axis=-1), jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def attention_prefill(q, k, v, length, causal: bool = True):
+    """Multi-head causal attention over a (padded) prompt.
+
+    Args:
+      q, k, v: [H, P, hd].
+      length: scalar int — valid prompt length (positions >= length padded).
+    Returns:
+      out: [H, P, hd].
+    """
+    hd = q.shape[-1]
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) / jnp.sqrt(hd).astype(q.dtype)
+    P = q.shape[1]
+    qi = jnp.arange(P)[:, None]
+    kj = jnp.arange(P)[None, :]
+    mask = kj <= qi if causal else jnp.ones((P, P), bool)
+    mask = mask & (kj < length)
+    scores = jnp.where(mask[None], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    # fully-masked rows (padding queries) produce nan via -inf softmax; zero them
+    w = jnp.where(jnp.isnan(w), 0.0, w)
+    return jnp.einsum("hqk,hkd->hqd", w, v)
+
+
+def attention_decode(q, k_cache, v_cache, pos):
+    """Single-query attention against a KV cache.
+
+    Args:
+      q: [H, 1, hd] query for position ``pos``.
+      k_cache, v_cache: [H, S, hd]; positions 0..pos are valid.
+      pos: scalar int32 — current position (attends to 0..pos inclusive;
+        slot ``pos`` must already contain this step's k/v).
+    Returns:
+      out: [H, 1, hd].
+    """
+    hd = q.shape[-1]
+    scores = jnp.einsum("hqd,hkd->hqk", q, k_cache) / jnp.sqrt(hd).astype(q.dtype)
+    S = k_cache.shape[1]
+    mask = jnp.arange(S)[None, None, :] <= pos
+    scores = jnp.where(mask, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", w, v_cache)

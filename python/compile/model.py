@@ -1,0 +1,318 @@
+"""L2: the EE-LLM-style byte-level transformer, segmented for CE-CoLLM.
+
+Two families of forward functions:
+
+* ``train_forward`` — full model over a batch of sequences, logits at every
+  exit (exit1, exit2, final).  Uses the pure-jnp reference ops (identical
+  math to the kernels, faster to compile) — build-time only.
+
+* The five AOT segment functions (``edge_prefill``, ``edge_seg1_decode``,
+  ``edge_seg2_decode``, ``cloud_prefill``, ``cloud_decode``) — call the
+  Pallas kernels (L1) and are lowered to the HLO artifacts the rust
+  runtime executes.  KV caches are explicit inputs/outputs.
+
+Partitioning (paper Fig. 2/3), 0-indexed with cfg = ModelConfig():
+  edge seg1 = layers [0, l_ee1)   + exit head 1   (hidden h1 uploaded)
+  edge seg2 = layers [l_ee1, l_ee2) + exit head 2
+  cloud     = layers [l_ee1, n_layers) + final head   (overlap with seg2)
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .kernels import ref
+from .kernels.attention import attention_decode, attention_prefill
+from .kernels.exit_head import exit_head as pallas_exit_head
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    """Initialize the full-model parameter pytree (plain nested dicts)."""
+    d, f, V = cfg.d_model, cfg.ffn_hidden, cfg.vocab_size
+    k_emb, k_layers, k_heads = jax.random.split(key, 3)
+
+    def dense(k, shape):
+        fan_in = shape[0]
+        return jax.random.normal(k, shape, jnp.float32) / jnp.sqrt(fan_in)
+
+    layers = []
+    for i in range(cfg.n_layers):
+        ks = jax.random.split(jax.random.fold_in(k_layers, i), 7)
+        layers.append({
+            "attn_norm": jnp.ones((d,), jnp.float32),
+            "wq": dense(ks[0], (d, d)),
+            "wk": dense(ks[1], (d, d)),
+            "wv": dense(ks[2], (d, d)),
+            "wo": dense(ks[3], (d, d)),
+            "mlp_norm": jnp.ones((d,), jnp.float32),
+            "w_gate": dense(ks[4], (d, f)),
+            "w_up": dense(ks[5], (d, f)),
+            "w_down": dense(ks[6], (f, d)),
+        })
+
+    def head(k):
+        return {"norm": jnp.ones((d,), jnp.float32), "unembed": dense(k, (d, V))}
+
+    kh = jax.random.split(k_heads, 3)
+    return {
+        "tok_emb": jax.random.normal(k_emb, (V, d), jnp.float32) * 0.02,
+        "layers": layers,
+        "exit1": head(kh[0]),
+        "exit2": head(kh[1]),
+        "final": head(kh[2]),
+    }
+
+
+def edge_params(params: dict, cfg: ModelConfig) -> dict:
+    """The subset of parameters deployed to the edge device."""
+    return {
+        "tok_emb": params["tok_emb"],
+        "layers": [params["layers"][i] for i in range(cfg.l_ee2)],
+        "exit1": params["exit1"],
+        "exit2": params["exit2"],
+    }
+
+
+def cloud_params(params: dict, cfg: ModelConfig) -> dict:
+    """The subset of parameters deployed to the cloud server."""
+    return {
+        "layers": [params["layers"][i] for i in cfg.cloud_layers],
+        "final": params["final"],
+    }
+
+
+# --------------------------------------------------------------------------
+# Shared blocks
+# --------------------------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """Rotary embedding. x: [H, T, hd], positions: [T] int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]   # [T, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _qkv(lp, x, positions, cfg):
+    """Project + rope. x: [T, d] -> q, k, v: [H, T, hd]."""
+    T = x.shape[0]
+    H, hd = cfg.n_heads, cfg.head_dim
+    xn = ref.rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+    q = (xn @ lp["wq"]).reshape(T, H, hd).transpose(1, 0, 2)
+    k = (xn @ lp["wk"]).reshape(T, H, hd).transpose(1, 0, 2)
+    v = (xn @ lp["wv"]).reshape(T, H, hd).transpose(1, 0, 2)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mlp(lp, x, cfg):
+    xn = ref.rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+    return (jax.nn.silu(xn @ lp["w_gate"]) * (xn @ lp["w_up"])) @ lp["w_down"]
+
+
+def layer_prefill(lp, x, length, cfg, *, use_kernels=True):
+    """One transformer layer over a [P, d] (padded) prompt.
+
+    Returns (x_out [P, d], k [H, P, hd], v [H, P, hd]).
+    """
+    P = x.shape[0]
+    q, k, v = _qkv(lp, x, jnp.arange(P, dtype=jnp.int32), cfg)
+    attn_fn = attention_prefill if use_kernels else ref.attention_prefill
+    o = attn_fn(q, k, v, length)                       # [H, P, hd]
+    o = o.transpose(1, 0, 2).reshape(P, cfg.d_model) @ lp["wo"]
+    x = x + o
+    x = x + _mlp(lp, x, cfg)
+    return x, k, v
+
+
+def layer_decode(lp, x, k_cache, v_cache, pos, cfg, *, use_kernels=True):
+    """One transformer layer for a single token at ``pos``.
+
+    x: [1, d].  k_cache/v_cache: [H, S, hd] (this layer's slice).
+    Returns (x_out [1, d], k_cache', v_cache').
+    """
+    q, k, v = _qkv(lp, x, jnp.full((1,), pos, jnp.int32), cfg)
+    # write this step's k/v into slot ``pos``
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k, (0, pos, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v, (0, pos, 0))
+    attn_fn = attention_decode if use_kernels else ref.attention_decode
+    o = attn_fn(q, k_cache, v_cache, pos)              # [H, 1, hd]
+    o = o.transpose(1, 0, 2).reshape(1, cfg.d_model) @ lp["wo"]
+    x = x + o
+    x = x + _mlp(lp, x, cfg)
+    return x, k_cache, v_cache
+
+
+def head_last(hp, h_last, cfg, *, use_kernels=True):
+    """Exit head on a single [1, d] hidden. Returns (logits[1,V], conf, argmax)."""
+    if use_kernels:
+        return pallas_exit_head(h_last, hp["norm"], hp["unembed"], cfg.norm_eps)
+    lg, conf, am = ref.exit_head(h_last, hp["norm"], hp["unembed"], cfg.norm_eps)
+    return lg, conf[0], am[0]
+
+
+# --------------------------------------------------------------------------
+# Training forward (full model, all exits, batched)
+# --------------------------------------------------------------------------
+
+def train_forward(params, tokens, cfg: ModelConfig):
+    """tokens: [B, T] int32 -> (exit1, exit2, final) logits, each [B, T, V]."""
+
+    def one(seq):
+        T = seq.shape[0]
+        x = params["tok_emb"][seq]
+        positions = jnp.arange(T, dtype=jnp.int32)
+        exits = {}
+        for i, lp in enumerate(params["layers"]):
+            q, k, v = _qkv(lp, x, positions, cfg)
+            o = ref.attention_prefill(q, k, v, T)
+            o = o.transpose(1, 0, 2).reshape(T, cfg.d_model) @ lp["wo"]
+            x = x + o
+            x = x + _mlp(lp, x, cfg)
+            if i == cfg.l_ee1 - 1:
+                exits["exit1"] = x
+            if i == cfg.l_ee2 - 1:
+                exits["exit2"] = x
+
+        def head_all(hp, h):
+            return ref.rmsnorm(h, hp["norm"], cfg.norm_eps) @ hp["unembed"]
+
+        return (head_all(params["exit1"], exits["exit1"]),
+                head_all(params["exit2"], exits["exit2"]),
+                head_all(params["final"], x))
+
+    return jax.vmap(one)(tokens)
+
+
+# --------------------------------------------------------------------------
+# AOT segment functions (pallas kernels; single sequence, static shapes)
+# --------------------------------------------------------------------------
+
+def _empty_cache(n_layers, cfg):
+    return jnp.zeros((n_layers, cfg.n_heads, cfg.max_seq, cfg.head_dim),
+                     jnp.float32)
+
+
+def edge_prefill(eparams, tokens, length, cfg: ModelConfig):
+    """Edge prefill over a padded prompt.
+
+    Args:
+      eparams: edge parameter subset (see ``edge_params``).
+      tokens: [max_prompt] int32, padded with PAD_ID beyond ``length``.
+      length: scalar int32.
+    Returns dict:
+      kv1_k/kv1_v: [l_ee1, H, S, hd] seg1 caches (prompt slots filled),
+      kv2_k/kv2_v: [l_ee2-l_ee1, ...] seg2 caches,
+      h1: [max_prompt, d] hidden states at exit 1 (the upload payload),
+      e1_logits/e1_conf/e1_tok, e2_logits/e2_conf/e2_tok: exit heads at the
+      last valid prompt position (the first generated-token decision).
+    """
+    P = cfg.max_prompt
+    x = eparams["tok_emb"][tokens]                       # [P, d]
+    kv1_k = _empty_cache(cfg.l_ee1, cfg)
+    kv1_v = _empty_cache(cfg.l_ee1, cfg)
+    kv2_k = _empty_cache(cfg.l_ee2 - cfg.l_ee1, cfg)
+    kv2_v = _empty_cache(cfg.l_ee2 - cfg.l_ee1, cfg)
+
+    for i in range(cfg.l_ee1):
+        x, k, v = layer_prefill(eparams["layers"][i], x, length, cfg)
+        kv1_k = kv1_k.at[i, :, :P].set(k)
+        kv1_v = kv1_v.at[i, :, :P].set(v)
+    h1 = x                                                # exit-1 hidden, [P, d]
+
+    last = jnp.clip(length - 1, 0, P - 1)
+    h_last1 = jax.lax.dynamic_slice(h1, (last, 0), (1, cfg.d_model))
+    e1_logits, e1_conf, e1_tok = head_last(eparams["exit1"], h_last1, cfg)
+
+    for j, i in enumerate(range(cfg.l_ee1, cfg.l_ee2)):
+        x, k, v = layer_prefill(eparams["layers"][i], x, length, cfg)
+        kv2_k = kv2_k.at[j, :, :P].set(k)
+        kv2_v = kv2_v.at[j, :, :P].set(v)
+
+    h_last2 = jax.lax.dynamic_slice(x, (last, 0), (1, cfg.d_model))
+    e2_logits, e2_conf, e2_tok = head_last(eparams["exit2"], h_last2, cfg)
+
+    return {
+        "kv1_k": kv1_k, "kv1_v": kv1_v, "kv2_k": kv2_k, "kv2_v": kv2_v,
+        "h1": h1,
+        "e1_logits": e1_logits, "e1_conf": e1_conf, "e1_tok": e1_tok,
+        "e2_logits": e2_logits, "e2_conf": e2_conf, "e2_tok": e2_tok,
+    }
+
+
+def edge_seg1_decode(eparams, kv1_k, kv1_v, token, pos, cfg: ModelConfig):
+    """Edge layers [0, l_ee1) for one token + exit head 1.
+
+    Returns dict: kv1_k/kv1_v updated, h1 [1, d] (upload payload),
+    e1_logits [1, V], e1_conf, e1_tok.
+    """
+    x = eparams["tok_emb"][token][None, :]
+    for i in range(cfg.l_ee1):
+        x, kc, vc = layer_decode(eparams["layers"][i], x,
+                                 kv1_k[i], kv1_v[i], pos, cfg)
+        kv1_k = kv1_k.at[i].set(kc)
+        kv1_v = kv1_v.at[i].set(vc)
+    e1_logits, e1_conf, e1_tok = head_last(eparams["exit1"], x, cfg)
+    return {"kv1_k": kv1_k, "kv1_v": kv1_v, "h1": x,
+            "e1_logits": e1_logits, "e1_conf": e1_conf, "e1_tok": e1_tok}
+
+
+def edge_seg2_decode(eparams, kv2_k, kv2_v, h1, pos, cfg: ModelConfig):
+    """Edge layers [l_ee1, l_ee2) from the exit-1 hidden + exit head 2."""
+    x = h1
+    for j, i in enumerate(range(cfg.l_ee1, cfg.l_ee2)):
+        x, kc, vc = layer_decode(eparams["layers"][i], x,
+                                 kv2_k[j], kv2_v[j], pos, cfg)
+        kv2_k = kv2_k.at[j].set(kc)
+        kv2_v = kv2_v.at[j].set(vc)
+    e2_logits, e2_conf, e2_tok = head_last(eparams["exit2"], x, cfg)
+    return {"kv2_k": kv2_k, "kv2_v": kv2_v,
+            "e2_logits": e2_logits, "e2_conf": e2_conf, "e2_tok": e2_tok}
+
+
+def cloud_prefill(cparams, h1, length, cfg: ModelConfig):
+    """Cloud layers [l_ee1, n_layers) over the uploaded prompt hiddens.
+
+    Args:
+      h1: [max_prompt, d] exit-1 hidden states (fp32; the wire carries fp16,
+        rust up-converts before execution — paper §4.3).
+    Returns dict: kvc_k/kvc_v [n_cloud, H, S, hd], plus final-head outputs at
+    the last valid position (cloud's first-token decision).
+    """
+    P = cfg.max_prompt
+    n_cloud = cfg.n_layers - cfg.l_ee1
+    kvc_k = _empty_cache(n_cloud, cfg)
+    kvc_v = _empty_cache(n_cloud, cfg)
+    x = h1
+    for j, i in enumerate(cfg.cloud_layers):
+        x, k, v = layer_prefill(cparams["layers"][j], x, length, cfg)
+        kvc_k = kvc_k.at[j, :, :P].set(k)
+        kvc_v = kvc_v.at[j, :, :P].set(v)
+    last = jnp.clip(length - 1, 0, P - 1)
+    h_last = jax.lax.dynamic_slice(x, (last, 0), (1, cfg.d_model))
+    logits, conf, tok = head_last(cparams["final"], h_last, cfg)
+    return {"kvc_k": kvc_k, "kvc_v": kvc_v,
+            "logits": logits, "conf": conf, "tok": tok}
+
+
+def cloud_decode(cparams, kvc_k, kvc_v, h1, pos, cfg: ModelConfig):
+    """Cloud layers [l_ee1, n_layers) for one token from the uploaded h1."""
+    x = h1
+    for j, _ in enumerate(cfg.cloud_layers):
+        x, kc, vc = layer_decode(cparams["layers"][j], x,
+                                 kvc_k[j], kvc_v[j], pos, cfg)
+        kvc_k = kvc_k.at[j].set(kc)
+        kvc_v = kvc_v.at[j].set(vc)
+    logits, conf, tok = head_last(cparams["final"], x, cfg)
+    return {"kvc_k": kvc_k, "kvc_v": kvc_v,
+            "logits": logits, "conf": conf, "tok": tok}

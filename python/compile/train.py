@@ -1,0 +1,104 @@
+"""Build-time training of the EE-transformer (EE-LLM-style weighted CE).
+
+Trains exit heads 1/2 and the backbone jointly so that exit confidences
+have the structure the paper relies on (Table 1): easy byte continuations
+confident at exit 1, hard word choices deferred.  Runs once during
+``make artifacts``; never on the request path.
+
+Usage: python -m compile.train --out ../artifacts/params.npz
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data
+from .config import DEFAULT, DEFAULT_TRAIN, ModelConfig, TrainConfig
+from .model import init_params, train_forward
+
+
+def cross_entropy(logits, targets):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, targets[..., None], axis=-1).mean()
+
+
+def loss_fn(params, x, y, cfg: ModelConfig, w=(0.3, 0.3, 0.4)):
+    e1, e2, fin = train_forward(params, x, cfg)
+    return (w[0] * cross_entropy(e1, y)
+            + w[1] * cross_entropy(e2, y)
+            + w[2] * cross_entropy(fin, y))
+
+
+def adam_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree.map(lambda m: m / (1 - b1 ** t), m)
+    vh = jax.tree.map(lambda v: v / (1 - b2 ** t), v)
+    params = jax.tree.map(lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps),
+                          params, mh, vh)
+    return params, {"m": m, "v": v, "t": t}
+
+
+def train(cfg: ModelConfig = DEFAULT, tcfg: TrainConfig = DEFAULT_TRAIN,
+          verbose: bool = True):
+    rng = np.random.default_rng(tcfg.seed)
+    stream = data.make_corpus(rng, tcfg.corpus_sentences)
+    if verbose:
+        print(f"corpus: {len(stream)} tokens")
+    batch_iter = data.batches(stream, tcfg.batch_size, tcfg.seq_len, rng)
+
+    params = init_params(cfg, jax.random.PRNGKey(tcfg.seed))
+    opt = adam_init(params)
+
+    @jax.jit
+    def step(params, opt, x, y, lr):
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, y, cfg,
+                                                  tcfg.exit_weights)
+        params, opt = adam_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    t0 = time.time()
+    losses = []
+    for i in range(tcfg.steps):
+        x, y = next(batch_iter)
+        frac = min(1.0, (i + 1) / max(tcfg.warmup, 1))
+        # linear warmup then cosine decay
+        lr = tcfg.lr * frac * 0.5 * (1 + np.cos(np.pi * max(0, i - tcfg.warmup)
+                                                / max(1, tcfg.steps - tcfg.warmup)))
+        params, opt, loss = step(params, opt, jnp.asarray(x), jnp.asarray(y),
+                                 jnp.float32(lr))
+        losses.append(float(loss))
+        if verbose and (i % 100 == 0 or i == tcfg.steps - 1):
+            print(f"step {i:4d}  loss {float(loss):.4f}  "
+                  f"({time.time() - t0:.1f}s)")
+    return params, losses
+
+
+def save_npz(params, path):
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    arrs = {jax.tree_util.keystr(kp): np.asarray(a) for kp, a in flat}
+    np.savez(path, **arrs)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/params.npz")
+    ap.add_argument("--steps", type=int, default=DEFAULT_TRAIN.steps)
+    args = ap.parse_args()
+    tcfg = TrainConfig(steps=args.steps)
+    params, losses = train(DEFAULT, tcfg)
+    save_npz(params, args.out)
+    print(f"saved params to {args.out}; final loss {losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

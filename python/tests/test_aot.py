@@ -1,0 +1,118 @@
+"""AOT exporter tests: weights container format, HLO-text lowering path,
+manifest structure.  Uses a tiny config so lowering stays fast."""
+
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+from compile.config import ModelConfig
+
+TINY = ModelConfig(max_prompt=128, max_seq=128)
+
+
+def test_weights_container_format(tmp_path):
+    path = tmp_path / "w.bin"
+    tensors = {
+        "a": np.arange(6, dtype=np.float32).reshape(2, 3),
+        "b['x']": np.array([1.5], dtype=np.float32),
+    }
+    aot.write_weights(str(path), tensors)
+    raw = path.read_bytes()
+    assert raw[:4] == b"CECW"
+    version, n = struct.unpack("<II", raw[4:12])
+    assert version == 1 and n == 2
+    # parse one record by hand
+    off = 12
+    name_len = struct.unpack("<H", raw[off:off + 2])[0]
+    off += 2
+    name = raw[off:off + name_len].decode()
+    off += name_len
+    dtype, ndim = raw[off], raw[off + 1]
+    assert dtype == 0
+    off += 2
+    dims = struct.unpack(f"<{ndim}I", raw[off:off + 4 * ndim])
+    off += 4 * ndim
+    nbytes = struct.unpack("<Q", raw[off:off + 8])[0]
+    assert nbytes == int(np.prod(dims)) * 4
+    assert name in tensors
+
+
+def test_hlo_text_lowering_parses():
+    def fn(x, y):
+        return {"z": x @ y + 1.0}
+
+    spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    text = aot.to_hlo_text(fn, (spec, spec))
+    assert "HloModule" in text
+    assert "parameter(0)" in text
+
+
+def test_keep_unused_params_stay_in_signature():
+    # a function ignoring its first arg must still expose it as a parameter
+    def fn(unused, x):
+        return {"y": x * 2.0}
+
+    spec = jax.ShapeDtypeStruct((2,), jnp.float32)
+    text = aot.to_hlo_text(fn, (spec, spec))
+    assert "parameter(1)" in text, "unused params must stay (rust passes full sets)"
+
+
+def test_flat_names_are_deterministic_and_sorted():
+    tree = {"b": [jnp.zeros(1), jnp.zeros(2)], "a": {"y": jnp.zeros(3), "x": jnp.zeros(4)}}
+    names = aot.flat_names(tree)
+    # dict keys flatten sorted; lists in order
+    assert names == ["['a']['x']", "['a']['y']", "['b'][0]", "['b'][1]"]
+
+
+def test_export_artifact_manifest_entry(tmp_path):
+    params = M.init_params(TINY, jax.random.PRNGKey(0))
+    eparams = M.edge_params(params, TINY)
+    tokens = jnp.zeros((TINY.max_prompt,), jnp.int32)
+    length = jnp.zeros((), jnp.int32)
+    sig = aot.export_artifact(
+        str(tmp_path), "edge_prefill",
+        lambda p, t, n: M.edge_prefill(p, t, n, TINY),
+        eparams, (tokens, length), ["tokens", "length"])
+    assert (tmp_path / "edge_prefill.hlo.txt").exists()
+    assert [i["name"] for i in sig["inputs"]] == ["tokens", "length"]
+    out_names = [o["name"] for o in sig["outputs"]]
+    assert "e1_conf" in out_names and "kv1_k" in out_names
+    # shapes recorded match the config
+    h1 = next(o for o in sig["outputs"] if o["name"] == "h1")
+    assert h1["shape"] == [TINY.max_prompt, TINY.d_model]
+
+
+def test_real_manifest_consistent_with_artifacts():
+    art = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    mpath = os.path.join(art, "manifest.json")
+    if not os.path.exists(mpath):
+        pytest.skip("artifacts not built")
+    m = json.load(open(mpath))
+    for name, sig in m["artifacts"].items():
+        assert os.path.exists(os.path.join(art, sig["file"])), name
+        assert m["artifact_params"][name] in m["partitions"]
+    # every partition tensor exists in weights.bin (parse names only)
+    raw = open(os.path.join(art, "weights.bin"), "rb").read()
+    n = struct.unpack("<I", raw[8:12])[0]
+    names = set()
+    off = 12
+    for _ in range(n):
+        ln = struct.unpack("<H", raw[off:off + 2])[0]
+        off += 2
+        names.add(raw[off:off + ln].decode())
+        off += ln
+        dtype, ndim = raw[off], raw[off + 1]
+        off += 2
+        dims = struct.unpack(f"<{ndim}I", raw[off:off + 4 * ndim])
+        off += 4 * ndim
+        nbytes = struct.unpack("<Q", raw[off:off + 8])[0]
+        off += 8 + nbytes
+    for part in m["partitions"].values():
+        for t in part:
+            assert t["name"] in names

@@ -1,0 +1,75 @@
+"""Corpus/grammar tests: the synthetic language must have the properties
+the reproduction relies on (byte-level encoding, multi-sentence documents,
+rust-side mirroring)."""
+
+import numpy as np
+import pytest
+
+from compile import data
+from compile.config import BOS_ID, EOS_ID
+
+
+def rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+def test_sentences_are_ascii_and_terminated():
+    r = rng(1)
+    for _ in range(50):
+        s = data.sample_sentence(r)
+        assert s.endswith(".")
+        assert s.isascii()
+        assert 10 <= len(s) <= 120
+
+
+def test_encode_decode_roundtrip():
+    s = "the machine can compute."
+    ids = data.encode(s)
+    assert ids.dtype == np.int32
+    assert (ids >= 0).all() and (ids < 256).all()
+    assert data.decode(ids) == s
+
+
+def test_corpus_is_documents_with_specials():
+    stream = data.make_corpus(rng(2), 60)
+    assert stream[0] == BOS_ID
+    n_bos = int((stream == BOS_ID).sum())
+    n_eos = int((stream == EOS_ID).sum())
+    assert n_bos == n_eos and n_bos >= 10
+    # multi-sentence documents: average doc must contain >= 2 periods
+    docs = n_bos
+    periods = int((stream == ord(".")).sum())
+    assert periods / docs >= 2.0, "corpus must be multi-sentence documents"
+
+
+def test_batches_shapes_and_shift():
+    stream = data.make_corpus(rng(3), 100)
+    it = data.batches(stream, batch_size=4, seq_len=16, rng=rng(4))
+    x, y = next(it)
+    assert x.shape == (4, 16) and y.shape == (4, 16)
+    # y is x shifted by one
+    np.testing.assert_array_equal(x[:, 1:], y[:, :-1])
+
+
+def test_word_lists_mirror_rust():
+    """The rust generator (eval/datasets.rs) must use the same grammar.
+    Parse the rust source and compare word lists verbatim."""
+    import re
+    from pathlib import Path
+
+    src = (Path(__file__).parents[2] / "rust/src/eval/datasets.rs").read_text()
+
+    def rust_list(name):
+        m = re.search(rf'pub const {name}: &\[&str\] = &\[(.*?)\];', src, re.S)
+        assert m, f"{name} not found in datasets.rs"
+        return re.findall(r'"([^"]+)"', m.group(1))
+
+    assert rust_list("NOUNS") == data.NOUNS
+    assert rust_list("VERBS") == data.VERBS
+    assert rust_list("ADJS") == data.ADJS
+    assert rust_list("DETS") == data.DETS
+
+
+def test_documents_concatenate_sentences():
+    doc = data.sample_document(rng(5), 4)
+    assert doc.count(".") == 4

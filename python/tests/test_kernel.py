@@ -1,0 +1,150 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/seeds; assert_allclose against kernels/ref.py.
+This is the CORE correctness signal for the compute layer — if these pass,
+the HLO artifacts executed by rust compute the same numbers as the oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, exit_head, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+RTOL, ATOL = 1e-4, 1e-5
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32) * scale
+
+
+# --------------------------------------------------------------------------
+# exit head
+# --------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       d=st.sampled_from([64, 128]),
+       v_tiles=st.integers(1, 4),
+       scale=st.sampled_from([0.02, 0.1, 1.0]))
+def test_exit_head_matches_ref(seed, d, v_tiles, scale):
+    V = v_tiles * exit_head.TILE_V
+    h = rand(seed, (1, d))
+    sc = rand(seed + 1, (d,)) + 1.0
+    W = rand(seed + 2, (d, V), scale)
+    lg, conf, am = jax.jit(exit_head.exit_head)(h, sc, W)
+    lgr, confr, amr = ref.exit_head(h, sc, W)
+    np.testing.assert_allclose(lg, lgr, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(conf, confr[0], rtol=RTOL, atol=ATOL)
+    assert int(am) == int(amr[0])
+
+
+def test_exit_head_confidence_in_unit_interval():
+    for seed in range(10):
+        h = rand(seed, (1, 128))
+        sc = jnp.ones((128,))
+        W = rand(seed + 100, (128, 384), 0.5)
+        _, conf, _ = jax.jit(exit_head.exit_head)(h, sc, W)
+        assert 0.0 < float(conf) <= 1.0 + 1e-6
+
+
+def test_exit_head_peaked_distribution_high_conf():
+    """A logit vector with one huge entry must give conf ~ 1 at its index."""
+    d, V = 128, 384
+    h = jnp.ones((1, d))
+    sc = jnp.ones((d,))
+    W = jnp.zeros((d, V)).at[:, 217].set(1.0)   # logit 217 >> others
+    _, conf, am = jax.jit(exit_head.exit_head)(h, sc, W)
+    assert int(am) == 217
+    assert float(conf) > 0.999
+
+
+def test_exit_head_rejects_unaligned_vocab():
+    with pytest.raises(AssertionError):
+        exit_head.exit_head(jnp.ones((1, 128)), jnp.ones((128,)),
+                            jnp.ones((128, 100)))
+
+
+# --------------------------------------------------------------------------
+# attention prefill
+# --------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       heads=st.sampled_from([1, 2, 4]),
+       p_tiles=st.integers(1, 2),
+       hd=st.sampled_from([16, 32]),
+       frac=st.floats(0.1, 1.0))
+def test_prefill_matches_ref(seed, heads, p_tiles, hd, frac):
+    P = p_tiles * attention.TILE_Q
+    length = max(1, int(P * frac))
+    q, k, v = (rand(seed + i, (heads, P, hd)) for i in range(3))
+    out_k = jax.jit(attention.attention_prefill)(q, k, v, length)
+    out_r = ref.attention_prefill(q, k, v, length)
+    np.testing.assert_allclose(out_k[:, :length], out_r[:, :length],
+                               rtol=RTOL, atol=ATOL)
+
+
+def test_prefill_padding_rows_are_finite():
+    """Padding query rows attend to the valid prefix (harmless — their
+    outputs are never read) but must never be NaN/Inf, and must not
+    perturb valid rows (checked by test_prefill_matches_ref)."""
+    P, length = 256, 57
+    q, k, v = (rand(i, (2, P, 32)) for i in range(3))
+    out = jax.jit(attention.attention_prefill)(q, k, v, length)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_prefill_is_causal():
+    """Changing k/v at position j must not affect outputs at positions < j."""
+    P, length, j = 128, 100, 50
+    q, k, v = (rand(i + 10, (2, P, 32)) for i in range(3))
+    out1 = jax.jit(attention.attention_prefill)(q, k, v, length)
+    k2 = k.at[:, j:].add(3.0)
+    v2 = v.at[:, j:].add(-2.0)
+    out2 = jax.jit(attention.attention_prefill)(q, k2, v2, length)
+    np.testing.assert_allclose(out1[:, :j], out2[:, :j], rtol=1e-6, atol=1e-6)
+    assert not np.allclose(out1[:, j:length], out2[:, j:length])
+
+
+# --------------------------------------------------------------------------
+# attention decode
+# --------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       heads=st.sampled_from([1, 4]),
+       s_tiles=st.integers(1, 3),
+       hd=st.sampled_from([16, 32]),
+       posfrac=st.floats(0.0, 1.0))
+def test_decode_matches_ref(seed, heads, s_tiles, hd, posfrac):
+    S = s_tiles * attention.TILE_KV
+    pos = min(S - 1, int(S * posfrac))
+    q = rand(seed, (heads, 1, hd))
+    k, v = (rand(seed + i, (heads, S, hd)) for i in (1, 2))
+    out_k = jax.jit(attention.attention_decode)(q, k, v, pos)
+    out_r = ref.attention_decode(q, k, v, pos)
+    np.testing.assert_allclose(out_k, out_r, rtol=RTOL, atol=ATOL)
+
+
+def test_decode_ignores_future_cache_slots():
+    """Garbage beyond ``pos`` in the cache must not change the output."""
+    S, pos = 256, 40
+    q = rand(0, (4, 1, 32))
+    k, v = rand(1, (4, S, 32)), rand(2, (4, S, 32))
+    out1 = jax.jit(attention.attention_decode)(q, k, v, pos)
+    k2 = k.at[:, pos + 1:].set(99.0)
+    v2 = v.at[:, pos + 1:].set(-99.0)
+    out2 = jax.jit(attention.attention_decode)(q, k2, v2, pos)
+    np.testing.assert_allclose(out1, out2, rtol=1e-6, atol=1e-6)
+
+
+def test_decode_pos_zero_attends_only_slot_zero():
+    q = rand(0, (2, 1, 32))
+    k, v = rand(1, (2, 64 * 2, 32)), rand(2, (2, 128, 32))
+    out = jax.jit(attention.attention_decode)(q, k[:, :128], v, 0)
+    np.testing.assert_allclose(out[:, 0], v[:, 0], rtol=1e-5, atol=1e-5)

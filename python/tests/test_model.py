@@ -1,0 +1,159 @@
+"""L2 correctness: segment composition == full model; decode == prefill.
+
+These invariants are what make CE-CoLLM's accuracy claims possible at all
+(paper Table 2: θ=1.0 → ROUGE-L 1.0 vs the cloud deployment):
+
+  * cloud path (h1 -> layers l_ee1..N -> final head) must produce exactly
+    the full-model next-token distribution;
+  * the incremental KV-cache decode path must match teacher-forced
+    full-sequence forward.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.config import BOS_ID, ModelConfig
+
+# small config so eager interpret-mode tests stay fast
+CFG = ModelConfig(max_prompt=128, max_seq=128)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(42))
+
+
+@pytest.fixture(scope="module")
+def eparams(params):
+    return M.edge_params(params, CFG)
+
+
+@pytest.fixture(scope="module")
+def cparams(params):
+    return M.cloud_params(params, CFG)
+
+
+def make_prompt(n):
+    rng = np.random.default_rng(0)
+    toks = np.full((CFG.max_prompt,), 0, np.int32)
+    toks[0] = BOS_ID
+    toks[1:n] = rng.integers(97, 122, n - 1)
+    return jnp.asarray(toks), n
+
+
+def test_partition_param_counts(params, eparams, cparams):
+    assert len(eparams["layers"]) == CFG.l_ee2
+    assert len(cparams["layers"]) == CFG.n_layers - CFG.l_ee1
+    # overlap region l_ee1..l_ee2-1 is deployed on BOTH sides (paper Fig 2)
+    for j, i in enumerate(range(CFG.l_ee1, CFG.l_ee2)):
+        np.testing.assert_array_equal(np.asarray(eparams["layers"][i]["wq"]),
+                                      np.asarray(cparams["layers"][j]["wq"]))
+
+
+def test_prefill_matches_train_forward(params, eparams, cparams):
+    """Cloud prefill's final logits == full-model logits at the last pos."""
+    tokens, n = make_prompt(17)
+    e = jax.jit(lambda p, t, l: M.edge_prefill(p, t, l, CFG))(eparams, tokens, n)
+    c = jax.jit(lambda p, h, l: M.cloud_prefill(p, h, l, CFG))(cparams, e["h1"], n)
+    e1, e2, fin = M.train_forward(params, tokens[None, :n], CFG)
+    np.testing.assert_allclose(c["logits"][0], fin[0, n - 1],
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(e["e1_logits"][0], e1[0, n - 1],
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(e["e2_logits"][0], e2[0, n - 1],
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_decode_matches_teacher_forced(params, eparams, cparams):
+    """Prefill(n) + k decode steps == prefill(n+k) at every exit."""
+    n, extra = 11, 4
+    tokens_full, _ = make_prompt(n + extra)
+    tokens_pre = tokens_full.at[n:].set(0)
+
+    jep = jax.jit(lambda p, t, l: M.edge_prefill(p, t, l, CFG))
+    jcp = jax.jit(lambda p, h, l: M.cloud_prefill(p, h, l, CFG))
+    js1 = jax.jit(lambda p, kk, kv, t, ps: M.edge_seg1_decode(p, kk, kv, t, ps, CFG))
+    js2 = jax.jit(lambda p, kk, kv, h, ps: M.edge_seg2_decode(p, kk, kv, h, ps, CFG))
+    jcd = jax.jit(lambda p, kk, kv, h, ps: M.cloud_decode(p, kk, kv, h, ps, CFG))
+
+    e = jep(eparams, tokens_pre, n)
+    c = jcp(cparams, e["h1"], n)
+    kv1_k, kv1_v = e["kv1_k"], e["kv1_v"]
+    kv2_k, kv2_v = e["kv2_k"], e["kv2_v"]
+    kvc_k, kvc_v = c["kvc_k"], c["kvc_v"]
+
+    for step in range(extra):
+        pos = n + step
+        tok = tokens_full[pos]
+        s1 = js1(eparams, kv1_k, kv1_v, tok, pos)
+        kv1_k, kv1_v = s1["kv1_k"], s1["kv1_v"]
+        s2 = js2(eparams, kv2_k, kv2_v, s1["h1"], pos)
+        kv2_k, kv2_v = s2["kv2_k"], s2["kv2_v"]
+        cd = jcd(cparams, kvc_k, kvc_v, s1["h1"], pos)
+        kvc_k, kvc_v = cd["kvc_k"], cd["kvc_v"]
+
+    e1, e2, fin = M.train_forward(params, tokens_full[None, :n + extra], CFG)
+    last = n + extra - 1
+    np.testing.assert_allclose(s1["e1_logits"][0], e1[0, last], rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(s2["e2_logits"][0], e2[0, last], rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(cd["logits"][0], fin[0, last], rtol=1e-3, atol=1e-3)
+
+
+def test_confidence_consistent_with_logits(eparams):
+    tokens, n = make_prompt(9)
+    e = jax.jit(lambda p, t, l: M.edge_prefill(p, t, l, CFG))(eparams, tokens, n)
+    p1 = jax.nn.softmax(e["e1_logits"][0])
+    np.testing.assert_allclose(float(e["e1_conf"]), float(jnp.max(p1)),
+                               rtol=1e-4)
+    assert int(e["e1_tok"]) == int(jnp.argmax(p1))
+    assert 0.0 < float(e["e1_conf"]) <= 1.0 + 1e-6
+
+
+def test_prompt_padding_is_inert(eparams):
+    """Bytes beyond ``length`` must not change any output."""
+    tokens, n = make_prompt(13)
+    jep = jax.jit(lambda p, t, l: M.edge_prefill(p, t, l, CFG))
+    a = jep(eparams, tokens, n)
+    b = jep(eparams, tokens.at[n:].set(111), n)
+    np.testing.assert_allclose(a["e2_logits"], b["e2_logits"],
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(a["h1"][:n], b["h1"][:n], rtol=1e-5, atol=1e-6)
+
+
+def test_rope_position_sensitivity():
+    """Same token at different positions must produce different queries."""
+    x = jnp.ones((4, 1, 32))
+    r0 = M.rope(x, jnp.array([0], jnp.int32), 10000.0)
+    r5 = M.rope(x, jnp.array([5], jnp.int32), 10000.0)
+    assert not np.allclose(r0, r5)
+    # position 0 is the identity rotation
+    np.testing.assert_allclose(r0, x, rtol=1e-6, atol=1e-6)
+
+
+def test_prefill_bucket_equivalence(eparams, cparams):
+    """The P=64 short-prompt bucket must produce the same exits, hidden
+    states and KV caches as the full-size prefill (the rust engine picks
+    buckets transparently; see EXPERIMENTS.md §Perf)."""
+    import dataclasses
+    cfg64 = dataclasses.replace(CFG, max_prompt=64)
+    tokens_full, n = make_prompt(21)
+    tokens_64 = tokens_full[:64]
+
+    big = jax.jit(lambda p, t, l: M.edge_prefill(p, t, l, CFG))(eparams, tokens_full, n)
+    small = jax.jit(lambda p, t, l: M.edge_prefill(p, t, l, cfg64))(eparams, tokens_64, n)
+
+    np.testing.assert_allclose(small["e1_logits"], big["e1_logits"], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(small["e2_logits"], big["e2_logits"], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(small["h1"][:n], big["h1"][:n], rtol=1e-4, atol=1e-5)
+    # KV caches agree on the valid prompt slots (cache shape is max_seq
+    # in both buckets)
+    np.testing.assert_allclose(np.asarray(small["kv1_k"])[:, :, :n],
+                               np.asarray(big["kv1_k"])[:, :, :n], rtol=1e-4, atol=1e-5)
+
+    c_big = jax.jit(lambda p, h, l: M.cloud_prefill(p, h, l, CFG))(cparams, big["h1"], n)
+    c_small = jax.jit(lambda p, h, l: M.cloud_prefill(p, h, l, cfg64))(
+        cparams, small["h1"], n)
+    np.testing.assert_allclose(c_small["logits"], c_big["logits"], rtol=1e-4, atol=1e-5)

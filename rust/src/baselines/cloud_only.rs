@@ -1,0 +1,119 @@
+//! Cloud-based LLM deployment (paper Fig 1a): the edge sends an API
+//! request with the raw prompt; the *full* model runs in the cloud.
+//!
+//! With CE-CoLLM's partitioning, the full model is exactly
+//! `layers[0..l_ee1)` (the edge seg-1 stack) followed by the cloud
+//! partition `layers[l_ee1..N)` + final head — so this runner composes an
+//! edge session and a cloud session, both *charged to the cloud*.  Its
+//! greedy output is the reference string for every ROUGE-L column in
+//! Table 2, and must equal CE-CoLLM's output at θ=1.0 (tested in
+//! `rust/tests/`).
+
+use anyhow::Result;
+
+use crate::model::tokenizer::Tokenizer;
+use crate::runtime::traits::{CloudEngine, EdgeEngine};
+
+pub struct CloudOnlyRunner<E: EdgeEngine, C: CloudEngine> {
+    seg1: E,
+    cloud: C,
+    pub tokenizer: Tokenizer,
+}
+
+#[derive(Debug, Clone)]
+pub struct CloudOnlyOutput {
+    pub text: String,
+    pub tokens: Vec<i32>,
+    /// Payload bytes for the API round trip (prompt up, text down).
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+}
+
+impl<E: EdgeEngine, C: CloudEngine> CloudOnlyRunner<E, C> {
+    pub fn new(seg1: E, cloud: C) -> Self {
+        let tokenizer = Tokenizer::from_dims(seg1.dims());
+        Self { seg1, cloud, tokenizer }
+    }
+
+    /// Full-model greedy generation, entirely "in the cloud".
+    pub fn generate(&mut self, prompt: &str, max_new_tokens: usize) -> Result<CloudOnlyOutput> {
+        let dims = self.seg1.dims().clone();
+        let ids = self.tokenizer.encode(prompt);
+        let prompt_len = ids.len();
+
+        self.seg1.reset();
+        self.cloud.reset();
+
+        // full-model prefill: seg1 hiddens feed the cloud partition
+        let pre = self.seg1.prefill(&ids)?;
+        let first = self.cloud.prefill(&pre.h1, prompt_len)?;
+
+        let mut tokens = vec![first.exit.token];
+        while !self.tokenizer.is_eos(*tokens.last().unwrap())
+            && tokens.len() < max_new_tokens
+            && prompt_len + tokens.len() < dims.max_seq
+        {
+            let pos = prompt_len + tokens.len() - 1;
+            let s1 = self.seg1.seg1(*tokens.last().unwrap(), pos)?;
+            let out = self.cloud.decode(&s1.h1, pos)?;
+            tokens.push(out.exit.token);
+        }
+
+        let text = self.tokenizer.decode(&tokens);
+        Ok(CloudOnlyOutput {
+            bytes_up: prompt.len() as u64 + 30,
+            bytes_down: text.len() as u64 + 30,
+            text,
+            tokens,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::test_manifest;
+    use crate::runtime::mock::{MockCloud, MockEdge, MockOracle};
+
+    fn runner(seed: u64) -> CloudOnlyRunner<MockEdge, MockCloud> {
+        let dims = test_manifest().model;
+        let o = MockOracle::new(seed);
+        CloudOnlyRunner::new(MockEdge::new(o, dims.clone()), MockCloud::new(o, dims))
+    }
+
+    #[test]
+    fn generates_cloud_tokens_only() {
+        let mut r = runner(3);
+        let o = MockOracle::new(3);
+        let out = r.generate("a question", 8).unwrap();
+        assert_eq!(out.tokens.len(), 8);
+        // every token is the oracle's cloud/final token at its position
+        let plen = "a question".len() + 1;
+        for (i, t) in out.tokens.iter().enumerate() {
+            assert_eq!(*t, o.cloud_token(plen - 1 + i));
+        }
+    }
+
+    #[test]
+    fn stops_at_eos() {
+        let dims = test_manifest().model;
+        let mut o = MockOracle::new(1);
+        let plen = "ab".len() + 1;
+        o.eos_at = Some(plen - 1 + 3);
+        let mut r =
+            CloudOnlyRunner::new(MockEdge::new(o, dims.clone()), MockCloud::new(o, dims));
+        let out = r.generate("ab", 64).unwrap();
+        assert_eq!(out.tokens.len(), 4);
+        assert_eq!(*out.tokens.last().unwrap(), 257);
+    }
+
+    #[test]
+    fn api_bytes_are_text_sized() {
+        let mut r = runner(2);
+        let out = r.generate("hello there machine", 6).unwrap();
+        assert_eq!(out.bytes_up, 19 + 30);
+        assert_eq!(out.bytes_down, out.text.len() as u64 + 30);
+        // tiny compared to even one fp16 hidden state per token
+        assert!(out.bytes_up < 128);
+    }
+}

@@ -1,0 +1,9 @@
+//! Baseline deployment strategies from the paper's evaluation (§5).
+//!
+//! These are *real-engine* implementations used for reference outputs and
+//! for validating the DES accounting; the timing rows of Tables 2/4 are
+//! produced by replaying the same logic analytically
+//! ([`crate::harness::des::Strategy::CloudOnly`] / `NaiveSplit`).
+
+pub mod cloud_only;
+pub mod naive_split;

@@ -1,0 +1,136 @@
+//! Naïve cloud-edge deployment (paper Fig 1b): the model is split at
+//! `l_ee1`, and for *every* token the edge synchronously re-transmits the
+//! full fp32 hidden-state history before the cloud can continue — no
+//! early exits, no content manager, no parallel upload.
+//!
+//! This is the strawman whose communication cost the paper measures at
+//! 10.9 GB (Alpaca) / 65.8 GB (XSum) for 100 prompts: transmitted bytes
+//! grow **quadratically** in sequence length.  Token outputs are
+//! identical to the cloud-only baseline (same full model).
+
+use anyhow::Result;
+
+use crate::metrics::RunCounters;
+use crate::model::tokenizer::Tokenizer;
+use crate::quant::{self, Precision};
+use crate::runtime::traits::{CloudEngine, EdgeEngine};
+
+pub struct NaiveSplitRunner<E: EdgeEngine, C: CloudEngine> {
+    edge: E,
+    cloud: C,
+    pub tokenizer: Tokenizer,
+}
+
+#[derive(Debug, Clone)]
+pub struct NaiveOutput {
+    pub text: String,
+    pub tokens: Vec<i32>,
+    pub counters: RunCounters,
+}
+
+impl<E: EdgeEngine, C: CloudEngine> NaiveSplitRunner<E, C> {
+    pub fn new(edge: E, cloud: C) -> Self {
+        let tokenizer = Tokenizer::from_dims(edge.dims());
+        Self { edge, cloud, tokenizer }
+    }
+
+    pub fn generate(&mut self, prompt: &str, max_new_tokens: usize) -> Result<NaiveOutput> {
+        let dims = self.edge.dims().clone();
+        let ids = self.tokenizer.encode(prompt);
+        let prompt_len = ids.len();
+
+        self.edge.reset();
+        self.cloud.reset();
+        let mut counters = RunCounters::default();
+
+        // history of fp32 hidden states the edge re-sends every token
+        let mut h1_history: Vec<f32> = Vec::with_capacity(prompt_len * dims.d_model);
+
+        let pre = self.edge.prefill(&ids)?;
+        h1_history.extend_from_slice(&pre.h1);
+        // token 1: full history (the prompt) travels fp32, synchronously
+        counters.bytes_up += (quant::pack(&h1_history, Precision::F32).len() + 30) as u64;
+        counters.cloud_requests += 1;
+        let first = self.cloud.prefill(&pre.h1, prompt_len)?;
+        counters.bytes_down += 17;
+
+        let mut tokens = vec![first.exit.token];
+        counters.tokens_generated = 1;
+        counters.tokens_cloud = 1;
+
+        while !self.tokenizer.is_eos(*tokens.last().unwrap())
+            && tokens.len() < max_new_tokens
+            && prompt_len + tokens.len() < dims.max_seq
+        {
+            let pos = prompt_len + tokens.len() - 1;
+            let s1 = self.edge.seg1(*tokens.last().unwrap(), pos)?;
+            h1_history.extend_from_slice(&s1.h1);
+            // the WHOLE history goes out again (no content manager)
+            counters.bytes_up += (h1_history.len() * 4 + 30) as u64;
+            counters.cloud_requests += 1;
+            let out = self.cloud.decode(&s1.h1, pos)?;
+            counters.bytes_down += 17;
+            counters.tokens_cloud += 1;
+            counters.tokens_generated += 1;
+            tokens.push(out.exit.token);
+        }
+
+        Ok(NaiveOutput { text: self.tokenizer.decode(&tokens), tokens, counters })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::cloud_only::CloudOnlyRunner;
+    use crate::model::manifest::test_manifest;
+    use crate::runtime::mock::{MockCloud, MockEdge, MockOracle};
+
+    fn pair(seed: u64) -> (MockEdge, MockCloud) {
+        let dims = test_manifest().model;
+        let o = MockOracle::new(seed);
+        (MockEdge::new(o, dims.clone()), MockCloud::new(o, dims))
+    }
+
+    #[test]
+    fn tokens_match_cloud_only() {
+        let (e, c) = pair(9);
+        let mut naive = NaiveSplitRunner::new(e, c);
+        let nv = naive.generate("the system", 10).unwrap();
+        let (e2, c2) = pair(9);
+        let mut cloud = CloudOnlyRunner::new(e2, c2);
+        let cl = cloud.generate("the system", 10).unwrap();
+        assert_eq!(nv.tokens, cl.tokens);
+        assert_eq!(nv.text, cl.text);
+    }
+
+    #[test]
+    fn hundred_percent_cloud_rate() {
+        let (e, c) = pair(1);
+        let out = NaiveSplitRunner::new(e, c).generate("abc", 12).unwrap();
+        assert_eq!(out.counters.request_cloud_rate(), 1.0);
+        assert_eq!(out.counters.cloud_requests, out.counters.tokens_generated);
+    }
+
+    #[test]
+    fn transmitted_bytes_grow_quadratically() {
+        let (e, c) = pair(2);
+        let short = NaiveSplitRunner::new(e, c).generate("abcdefgh", 5).unwrap();
+        let (e, c) = pair(2);
+        let long = NaiveSplitRunner::new(e, c).generate("abcdefgh", 20).unwrap();
+        let b_s = short.counters.bytes_up as f64;
+        let b_l = long.counters.bytes_up as f64;
+        // 4x the tokens must cost much more than 4x the bytes
+        assert!(b_l / b_s > 4.0, "{b_s} -> {b_l}");
+    }
+
+    #[test]
+    fn history_bytes_are_fp32() {
+        let dims = test_manifest().model;
+        let (e, c) = pair(3);
+        let out = NaiveSplitRunner::new(e, c).generate("xy", 3).unwrap();
+        // first request carries prompt_len=3 hiddens in fp32
+        let d = dims.d_model;
+        assert!(out.counters.bytes_up >= (3 * d * 4) as u64);
+    }
+}

@@ -1,0 +1,136 @@
+//! Deployment-level configuration: exit policy, ablation switches, and
+//! experiment parameters.  Model architecture comes from
+//! `artifacts/manifest.json` (see [`crate::model::manifest`]).
+
+/// Confidence-threshold exit policy (paper §4.1).
+///
+/// `threshold = 1.0` disables early exits in practice (confidences are
+/// strictly `< 1`), reproducing the paper's θ=1.0 rows; `Standalone`
+/// removes the threshold condition at the *last* exit so the edge always
+/// emits (low-latency mode).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ExitPolicy {
+    /// Collaborative mode: exit early iff `conf >= threshold`, otherwise
+    /// defer to the cloud partition (high-accuracy mode).
+    Threshold(f32),
+    /// Edge standalone: exit at exit-1 iff `conf >= threshold`, and
+    /// unconditionally at exit-2.  Never contacts the cloud.
+    Standalone { threshold: f32 },
+}
+
+impl ExitPolicy {
+    pub fn threshold(&self) -> f32 {
+        match *self {
+            ExitPolicy::Threshold(t) => t,
+            ExitPolicy::Standalone { threshold } => threshold,
+        }
+    }
+
+    pub fn is_standalone(&self) -> bool {
+        matches!(self, ExitPolicy::Standalone { .. })
+    }
+}
+
+/// Ablation switches (paper §5.4, Table 4).  All `true` = full CE-CoLLM.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AblationFlags {
+    /// Transmit hidden states as f16 (paper §4.3).  Off → f32 payloads.
+    pub half_precision: bool,
+    /// Early-exit mechanism.  Off → every token goes to the cloud (the
+    /// edge still runs its partition, matching the paper's −EE row whose
+    /// edge time equals the θ=1.0 row).
+    pub early_exit: bool,
+    /// Cloud content manager: dedup of uploaded hidden states + KV cache
+    /// retention across tokens.  Off → every cloud request re-transmits
+    /// the full hidden-state history (the O(T²) naïve behaviour).
+    pub content_manager: bool,
+    /// Overlap hidden-state upload with ongoing edge compute.  Off →
+    /// uploads happen synchronously when the cloud request is issued.
+    pub parallel_upload: bool,
+}
+
+impl Default for AblationFlags {
+    fn default() -> Self {
+        Self {
+            half_precision: true,
+            early_exit: true,
+            content_manager: true,
+            parallel_upload: true,
+        }
+    }
+}
+
+impl AblationFlags {
+    /// The paper's "Without Content Manager & Parallel Upload" row flips
+    /// both switches together.
+    pub fn without_cm_and_parallel_upload() -> Self {
+        Self { content_manager: false, parallel_upload: false, ..Self::default() }
+    }
+
+    pub fn without_half_precision() -> Self {
+        Self { half_precision: false, ..Self::default() }
+    }
+
+    pub fn without_early_exit() -> Self {
+        Self { early_exit: false, ..Self::default() }
+    }
+}
+
+/// Everything the edge client needs to run one deployment.
+#[derive(Debug, Clone)]
+pub struct DeploymentConfig {
+    pub policy: ExitPolicy,
+    pub ablation: AblationFlags,
+    /// Maximum number of generated tokens per request.
+    pub max_new_tokens: usize,
+    /// Logical device id reported to the cloud content manager.
+    pub device_id: u64,
+}
+
+impl Default for DeploymentConfig {
+    fn default() -> Self {
+        Self {
+            policy: ExitPolicy::Threshold(0.8),
+            ablation: AblationFlags::default(),
+            max_new_tokens: 96,
+            device_id: 0,
+        }
+    }
+}
+
+impl DeploymentConfig {
+    pub fn with_threshold(threshold: f32) -> Self {
+        Self { policy: ExitPolicy::Threshold(threshold), ..Self::default() }
+    }
+
+    pub fn standalone() -> Self {
+        Self { policy: ExitPolicy::Standalone { threshold: 0.8 }, ..Self::default() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_flags_are_full_system() {
+        let f = AblationFlags::default();
+        assert!(f.half_precision && f.early_exit && f.content_manager && f.parallel_upload);
+    }
+
+    #[test]
+    fn ablation_constructors_flip_one_axis() {
+        assert!(!AblationFlags::without_half_precision().half_precision);
+        assert!(!AblationFlags::without_early_exit().early_exit);
+        let cm = AblationFlags::without_cm_and_parallel_upload();
+        assert!(!cm.content_manager && !cm.parallel_upload && cm.half_precision);
+    }
+
+    #[test]
+    fn policy_threshold_accessor() {
+        assert_eq!(ExitPolicy::Threshold(0.9).threshold(), 0.9);
+        assert!(ExitPolicy::Standalone { threshold: 0.8 }.is_standalone());
+        assert!(!ExitPolicy::Threshold(0.8).is_standalone());
+    }
+
+}

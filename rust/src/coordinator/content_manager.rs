@@ -1,0 +1,266 @@
+//! Cloud-side content manager (paper §4.2).
+//!
+//! Responsibilities, per edge device:
+//! * buffer uploaded exit-1 hidden states until the cloud partition
+//!   consumes them into its KV caches;
+//! * deduplicate retransmissions (the "Without Content Manager" ablation
+//!   resends the full history every request — the manager makes the
+//!   redundant copies harmless to the compute path);
+//! * hand the inference loop exactly the contiguous positions it needs
+//!   (prompt prefill, then per-position decode catch-up);
+//! * release consumed state eagerly and everything at end-of-session
+//!   ("continuously releases unused hidden states to optimize resource
+//!   usage and separately manages cache data for each edge device").
+
+use std::collections::{BTreeMap, HashMap};
+
+use anyhow::{ensure, Result};
+
+/// Hidden-state buffers for one (device, request) session.
+#[derive(Debug, Default)]
+struct DeviceState {
+    req_id: u32,
+    prompt_len: Option<u32>,
+    /// Uploaded, not yet consumed hidden states keyed by position.
+    pending: BTreeMap<u32, Vec<f32>>,
+    /// Positions `< consumed_upto` have been folded into the KV cache.
+    consumed_upto: u32,
+    bytes_received: u64,
+    duplicates_dropped: u64,
+}
+
+/// What the inference loop must run to answer a request at `pos`.
+#[derive(Debug, PartialEq)]
+pub struct WorkPlan {
+    /// `Some((h1_concat, len))` if cloud prefill must run first.
+    pub prefill: Option<(Vec<f32>, usize)>,
+    /// Per-position hidden states for decode catch-up, in order ending at
+    /// the requested position.
+    pub decode: Vec<(u32, Vec<f32>)>,
+}
+
+#[derive(Debug, Default)]
+pub struct ContentManager {
+    devices: HashMap<u64, DeviceState>,
+    d_model: usize,
+}
+
+impl ContentManager {
+    pub fn new(d_model: usize) -> Self {
+        Self { devices: HashMap::new(), d_model }
+    }
+
+    /// Ingest an upload of `count` hidden vectors starting at `start_pos`.
+    /// Retransmitted positions (already pending or already consumed) are
+    /// counted and dropped.
+    pub fn upload(
+        &mut self,
+        device: u64,
+        req_id: u32,
+        start_pos: u32,
+        prompt_len: u32,
+        hiddens: &[f32],
+    ) -> Result<()> {
+        ensure!(self.d_model > 0, "content manager d_model not set");
+        ensure!(hiddens.len() % self.d_model == 0, "ragged hidden payload");
+        let count = hiddens.len() / self.d_model;
+        let st = self.devices.entry(device).or_default();
+        if st.req_id != req_id {
+            // new request from this device: drop stale state
+            *st = DeviceState { req_id, ..Default::default() };
+        }
+        if st.prompt_len.is_none() && prompt_len > 0 {
+            st.prompt_len = Some(prompt_len);
+        }
+        st.bytes_received += (hiddens.len() * 4) as u64;
+        for i in 0..count {
+            let pos = start_pos + i as u32;
+            let v = hiddens[i * self.d_model..(i + 1) * self.d_model].to_vec();
+            if pos < st.consumed_upto || st.pending.contains_key(&pos) {
+                st.duplicates_dropped += 1;
+                continue;
+            }
+            st.pending.insert(pos, v);
+        }
+        Ok(())
+    }
+
+    /// Build the work plan to answer an inference request at `pos`.
+    ///
+    /// Errors if required positions have not been uploaded (protocol
+    /// violation: with parallel upload the edge always uploads at
+    /// `l_ee1` *before* it can know it needs the cloud).
+    pub fn plan(&mut self, device: u64, req_id: u32, pos: u32, prompt_len: u32) -> Result<WorkPlan> {
+        let d = self.d_model;
+        let st = self
+            .devices
+            .get_mut(&device)
+            .ok_or_else(|| anyhow::anyhow!("no uploads from device {device}"))?;
+        ensure!(st.req_id == req_id, "request id mismatch: {} vs {}", st.req_id, req_id);
+        let plen = st.prompt_len.unwrap_or(prompt_len).max(prompt_len);
+        ensure!(plen > 0, "unknown prompt length");
+
+        let mut prefill = None;
+        if st.consumed_upto == 0 {
+            // prompt positions 0..plen must all be pending
+            let mut h = Vec::with_capacity(plen as usize * d);
+            for p in 0..plen {
+                let v = st
+                    .pending
+                    .remove(&p)
+                    .ok_or_else(|| anyhow::anyhow!("missing prompt hidden at pos {p}"))?;
+                h.extend_from_slice(&v);
+            }
+            st.consumed_upto = plen;
+            prefill = Some((h, plen as usize));
+        }
+
+        let mut decode = Vec::new();
+        while st.consumed_upto <= pos {
+            let p = st.consumed_upto;
+            let v = st
+                .pending
+                .remove(&p)
+                .ok_or_else(|| anyhow::anyhow!("missing hidden at pos {p} (requested {pos})"))?;
+            decode.push((p, v));
+            st.consumed_upto += 1;
+        }
+        Ok(WorkPlan { prefill, decode })
+    }
+
+    /// Release everything for a finished request (§4.4 step 6).
+    pub fn end_session(&mut self, device: u64) {
+        self.devices.remove(&device);
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Resident hidden-state floats (for the resource-release invariant).
+    pub fn pending_floats(&self) -> usize {
+        self.devices.values().map(|s| s.pending.values().map(|v| v.len()).sum::<usize>()).sum()
+    }
+
+    pub fn duplicates_dropped(&self, device: u64) -> u64 {
+        self.devices.get(&device).map(|s| s.duplicates_dropped).unwrap_or(0)
+    }
+
+    pub fn bytes_received(&self, device: u64) -> u64 {
+        self.devices.get(&device).map(|s| s.bytes_received).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const D: usize = 4;
+
+    fn h(pos: u32) -> Vec<f32> {
+        vec![pos as f32; D]
+    }
+
+    fn cm() -> ContentManager {
+        ContentManager::new(D)
+    }
+
+    #[test]
+    fn prompt_then_decode_plan() {
+        let mut m = cm();
+        // prompt of 3 positions uploaded as one batch
+        let prompt: Vec<f32> = (0..3).flat_map(h).collect();
+        m.upload(1, 0, 0, 3, &prompt).unwrap();
+        // decode uploads for positions 3 and 4
+        m.upload(1, 0, 3, 3, &h(3)).unwrap();
+        m.upload(1, 0, 4, 3, &h(4)).unwrap();
+
+        let plan = m.plan(1, 0, 4, 3).unwrap();
+        let (pre, len) = plan.prefill.unwrap();
+        assert_eq!(len, 3);
+        assert_eq!(pre.len(), 3 * D);
+        assert_eq!(plan.decode.iter().map(|(p, _)| *p).collect::<Vec<_>>(), vec![3, 4]);
+        // consumed state is released
+        assert_eq!(m.pending_floats(), 0);
+    }
+
+    #[test]
+    fn second_request_skips_prefill() {
+        let mut m = cm();
+        let prompt: Vec<f32> = (0..2).flat_map(h).collect();
+        m.upload(1, 0, 0, 2, &prompt).unwrap();
+        m.plan(1, 0, 1, 2).unwrap(); // prefill only (pos = plen-1)
+        m.upload(1, 0, 2, 2, &h(2)).unwrap();
+        let plan = m.plan(1, 0, 2, 2).unwrap();
+        assert!(plan.prefill.is_none());
+        assert_eq!(plan.decode.len(), 1);
+    }
+
+    #[test]
+    fn missing_position_is_an_error() {
+        let mut m = cm();
+        m.upload(1, 0, 0, 2, &[0.0; 2 * D]).unwrap();
+        // position 2 never uploaded
+        assert!(m.plan(1, 0, 2, 2).is_err());
+    }
+
+    #[test]
+    fn duplicates_are_dropped_not_duplicated() {
+        let mut m = cm();
+        let prompt: Vec<f32> = (0..2).flat_map(h).collect();
+        m.upload(1, 0, 0, 2, &prompt).unwrap();
+        m.upload(1, 0, 0, 2, &prompt).unwrap(); // retransmit (no-CM edge)
+        assert_eq!(m.duplicates_dropped(1), 2);
+        let plan = m.plan(1, 0, 1, 2).unwrap();
+        assert_eq!(plan.prefill.unwrap().1, 2);
+        assert_eq!(m.pending_floats(), 0);
+    }
+
+    #[test]
+    fn retransmit_after_consumption_is_dropped() {
+        let mut m = cm();
+        m.upload(1, 0, 0, 2, &[0.0; 2 * D]).unwrap();
+        m.plan(1, 0, 1, 2).unwrap();
+        m.upload(1, 0, 0, 2, &[0.0; 2 * D]).unwrap();
+        assert_eq!(m.duplicates_dropped(1), 2);
+        assert_eq!(m.pending_floats(), 0);
+    }
+
+    #[test]
+    fn devices_are_isolated() {
+        let mut m = cm();
+        m.upload(1, 0, 0, 1, &h(0)).unwrap();
+        m.upload(2, 0, 0, 1, &[9.0; D]).unwrap();
+        let p1 = m.plan(1, 0, 0, 1).unwrap();
+        assert_eq!(p1.prefill.unwrap().0, h(0));
+        let p2 = m.plan(2, 0, 0, 1).unwrap();
+        assert_eq!(p2.prefill.unwrap().0, vec![9.0; D]);
+        assert_eq!(m.device_count(), 2);
+    }
+
+    #[test]
+    fn new_request_id_resets_device_state() {
+        let mut m = cm();
+        m.upload(1, 0, 0, 1, &h(0)).unwrap();
+        m.upload(1, 1, 0, 1, &h(0)).unwrap(); // new request
+        // old request's plan must fail (state belongs to req 1 now)
+        assert!(m.plan(1, 0, 0, 1).is_err());
+        assert!(m.plan(1, 1, 0, 1).is_ok());
+    }
+
+    #[test]
+    fn end_session_releases_everything() {
+        let mut m = cm();
+        m.upload(1, 0, 0, 2, &[0.0; 2 * D]).unwrap();
+        m.end_session(1);
+        assert_eq!(m.device_count(), 0);
+        assert_eq!(m.pending_floats(), 0);
+        assert!(m.plan(1, 0, 0, 2).is_err());
+    }
+
+    #[test]
+    fn ragged_payload_rejected() {
+        let mut m = cm();
+        assert!(m.upload(1, 0, 0, 1, &[0.0; D + 1]).is_err());
+    }
+}

@@ -1,0 +1,431 @@
+//! Edge client (paper §4.1, §4.4, Algorithm 1): the early-exit decode
+//! loop with asynchronous parallel hidden-state upload and adaptive
+//! cloud deferral.
+//!
+//! Thread model: the engine (PJRT) stays on the caller's thread; uploads
+//! go through a dedicated uploader thread feeding the upload channel
+//! (paper: "the edge device concurrently continues the inference process"
+//! while states transfer).  The infer channel is used synchronously —
+//! a deferred token cannot proceed without the cloud's response.
+
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::DeploymentConfig;
+use crate::coordinator::policy::{ExitPoint, TokenPolicy};
+use crate::coordinator::protocol::{Channel, Message};
+use crate::metrics::{CostBreakdown, RunCounters};
+use crate::model::tokenizer::Tokenizer;
+use crate::net::transport::Transport;
+use crate::quant::{self, Precision};
+use crate::runtime::traits::EdgeEngine;
+
+/// One generated token with its provenance (Table 1 columns).
+#[derive(Debug, Clone)]
+pub struct TokenTrace {
+    pub pos: usize,
+    pub token: i32,
+    pub exit: ExitPoint,
+    pub conf1: f32,
+    pub conf2: Option<f32>,
+}
+
+/// Result of one generation request.
+#[derive(Debug, Clone)]
+pub struct GenerateOutput {
+    pub text: String,
+    pub tokens: Vec<i32>,
+    pub trace: Vec<TokenTrace>,
+    pub cost: CostBreakdown,
+    pub counters: RunCounters,
+}
+
+enum UploadJob {
+    Send(Message),
+    Flush(Sender<()>),
+    Done,
+}
+
+/// The cloud half of the client: dual channels + upload thread.
+pub struct CloudLink {
+    infer: Box<dyn Transport>,
+    upload_tx: Sender<UploadJob>,
+    uploader: Option<JoinHandle<u64>>,
+}
+
+impl CloudLink {
+    /// Open the dual API from two transports (paper §4.2): `upload` is
+    /// drained by a background thread, `infer` is synchronous.
+    pub fn new(
+        device_id: u64,
+        mut upload: Box<dyn Transport + Send>,
+        mut infer: Box<dyn Transport>,
+    ) -> Result<Self> {
+        infer.send(&Message::Hello { device_id, channel: Channel::Infer }.encode())?;
+        expect_ack(&mut *infer)?;
+        upload.send(&Message::Hello { device_id, channel: Channel::Upload }.encode())?;
+        expect_ack(&mut *upload)?;
+
+        let (upload_tx, upload_rx) = channel::<UploadJob>();
+        let uploader = std::thread::Builder::new().name("edge-upload".into()).spawn(move || {
+            let mut sent = 0u64;
+            while let Ok(job) = upload_rx.recv() {
+                match job {
+                    UploadJob::Send(msg) => {
+                        let frame = msg.encode();
+                        sent += frame.len() as u64;
+                        if upload.send(&frame).is_err() {
+                            break;
+                        }
+                    }
+                    UploadJob::Flush(ack) => {
+                        let _ = ack.send(());
+                    }
+                    UploadJob::Done => break,
+                }
+            }
+            sent
+        })?;
+        Ok(Self { infer, upload_tx, uploader: Some(uploader) })
+    }
+
+    fn enqueue_upload(&self, msg: Message) {
+        let _ = self.upload_tx.send(UploadJob::Send(msg));
+    }
+
+    /// Block until every enqueued upload has been written to the wire.
+    fn flush_uploads(&self) {
+        let (tx, rx) = channel();
+        if self.upload_tx.send(UploadJob::Flush(tx)).is_ok() {
+            let _ = rx.recv();
+        }
+    }
+
+    fn close(&mut self) -> u64 {
+        let _ = self.upload_tx.send(UploadJob::Done);
+        self.uploader.take().map(|u| u.join().unwrap_or(0)).unwrap_or(0)
+    }
+}
+
+impl Drop for CloudLink {
+    fn drop(&mut self) {
+        let _ = self.upload_tx.send(UploadJob::Done);
+    }
+}
+
+fn expect_ack(t: &mut dyn Transport) -> Result<()> {
+    match Message::decode(&t.recv()?)? {
+        Message::Ack => Ok(()),
+        other => anyhow::bail!("expected Ack, got {other:?}"),
+    }
+}
+
+/// The edge client: engine + policy + optional cloud link.
+pub struct EdgeClient<E: EdgeEngine> {
+    pub engine: E,
+    pub tokenizer: Tokenizer,
+    pub cfg: DeploymentConfig,
+    link: Option<CloudLink>,
+    req_id: u32,
+}
+
+impl<E: EdgeEngine> EdgeClient<E> {
+    /// Standalone-capable client (no cloud link).  With a collaborative
+    /// policy, deferred tokens fail — use [`Self::with_cloud`].
+    pub fn standalone(engine: E, cfg: DeploymentConfig) -> Self {
+        let tokenizer = Tokenizer::from_dims(engine.dims());
+        Self { engine, tokenizer, cfg, link: None, req_id: 0 }
+    }
+
+    pub fn with_cloud(engine: E, cfg: DeploymentConfig, link: CloudLink) -> Self {
+        let tokenizer = Tokenizer::from_dims(engine.dims());
+        Self { engine, tokenizer, cfg, link: Some(link), req_id: 0 }
+    }
+
+    fn precision(&self) -> Precision {
+        Precision::from_flag(self.cfg.ablation.half_precision)
+    }
+
+    /// Generate a completion for `prompt` (Algorithm 1).
+    pub fn generate(&mut self, prompt: &str) -> Result<GenerateOutput> {
+        self.req_id += 1;
+        let req_id = self.req_id;
+        let policy = TokenPolicy::new(self.cfg.policy, self.cfg.ablation);
+        let dims = self.engine.dims().clone();
+        let precision = self.precision();
+        let flags = self.cfg.ablation;
+        let device_id = self.cfg.device_id;
+
+        let prompt_ids = self.tokenizer.encode(prompt);
+        let prompt_len = prompt_ids.len();
+        anyhow::ensure!(prompt_len <= dims.max_prompt, "prompt too long");
+
+        let wall0 = Instant::now();
+        let mut cost = CostBreakdown::default();
+        let mut counters = RunCounters::default();
+        let mut trace: Vec<TokenTrace> = Vec::new();
+        let mut tokens: Vec<i32> = Vec::new();
+
+        self.engine.reset();
+
+        // --- prefill -----------------------------------------------------
+        let t0 = Instant::now();
+        let pre = self.engine.prefill(&prompt_ids)?;
+        cost.edge_s += t0.elapsed().as_secs_f64();
+
+        // h1 history retained only when the edge must retransmit (no
+        // content manager on the server)
+        let mut h1_history: Vec<Vec<f32>> = Vec::new();
+        let keep_history = !flags.content_manager;
+        if keep_history {
+            for c in pre.h1.chunks(dims.d_model) {
+                h1_history.push(c.to_vec());
+            }
+        }
+
+        // parallel upload of prompt hidden states (Algorithm 1 line 12)
+        if policy.uses_cloud() && flags.parallel_upload && flags.content_manager {
+            let payload = quant::pack(&pre.h1, precision);
+            counters.bytes_up += payload.len() as u64;
+            self.link_ref()?.enqueue_upload(Message::UploadHidden {
+                device_id,
+                req_id,
+                start_pos: 0,
+                count: prompt_len as u32,
+                prompt_len: prompt_len as u32,
+                precision,
+                payload,
+            });
+        }
+
+        // --- first token decision at the last prompt position -------------
+        let mut pos = prompt_len - 1;
+        let mut next = self.decide_token(
+            &policy, req_id, pos, prompt_len,
+            pre.exit1.conf, pre.exit1.token,
+            Some((pre.exit2.conf, pre.exit2.token)),
+            &mut cost, &mut counters, &mut h1_history,
+        )?;
+        trace.push(next.1.clone());
+        tokens.push(next.0);
+
+        // --- decode loop ---------------------------------------------------
+        while !self.tokenizer.is_eos(*tokens.last().unwrap())
+            && tokens.len() < self.cfg.max_new_tokens
+            && prompt_len + tokens.len() < dims.max_seq
+        {
+            pos = prompt_len + tokens.len() - 1;
+            let input = *tokens.last().unwrap();
+
+            let t0 = Instant::now();
+            let s1 = self.engine.seg1(input, pos)?;
+            cost.edge_s += t0.elapsed().as_secs_f64();
+
+            if keep_history {
+                h1_history.push(s1.h1.clone());
+            }
+            if policy.uses_cloud() && flags.parallel_upload && flags.content_manager {
+                let payload = quant::pack(&s1.h1, precision);
+                counters.bytes_up += payload.len() as u64;
+                self.link_ref()?.enqueue_upload(Message::UploadHidden {
+                    device_id,
+                    req_id,
+                    start_pos: pos as u32,
+                    count: 1,
+                    prompt_len: prompt_len as u32,
+                    precision,
+                    payload,
+                });
+            }
+
+            next = if policy.exit_at_1(s1.exit1.conf) {
+                counters.tokens_exit1 += 1;
+                (
+                    s1.exit1.token,
+                    TokenTrace {
+                        pos,
+                        token: s1.exit1.token,
+                        exit: ExitPoint::Exit1,
+                        conf1: s1.exit1.conf,
+                        conf2: None,
+                    },
+                )
+            } else {
+                let t0 = Instant::now();
+                let s2 = self.engine.seg2(&s1.h1, pos)?;
+                cost.edge_s += t0.elapsed().as_secs_f64();
+                if policy.exit_at_2(s2.exit2.conf) {
+                    counters.tokens_exit2 += 1;
+                    (
+                        s2.exit2.token,
+                        TokenTrace {
+                            pos,
+                            token: s2.exit2.token,
+                            exit: ExitPoint::Exit2,
+                            conf1: s1.exit1.conf,
+                            conf2: Some(s2.exit2.conf),
+                        },
+                    )
+                } else {
+                    let (tok, conf) = self.cloud_token(
+                        req_id, pos, prompt_len, &mut cost, &mut counters, &mut h1_history,
+                    )?;
+                    counters.tokens_cloud += 1;
+                    counters.cloud_requests += 1;
+                    let _ = conf;
+                    (
+                        tok,
+                        TokenTrace {
+                            pos,
+                            token: tok,
+                            exit: ExitPoint::Cloud,
+                            conf1: s1.exit1.conf,
+                            conf2: Some(s2.exit2.conf),
+                        },
+                    )
+                }
+            };
+            trace.push(next.1.clone());
+            tokens.push(next.0);
+        }
+
+        // --- session teardown (§4.4 step 6) --------------------------------
+        if let Some(link) = self.link.as_mut() {
+            let _ = link.infer.send(&Message::EndSession { device_id, req_id }.encode());
+        }
+
+        cost.total_s = wall0.elapsed().as_secs_f64();
+        counters.tokens_generated = tokens.len();
+        Ok(GenerateOutput {
+            text: self.tokenizer.decode(&tokens),
+            tokens,
+            trace,
+            cost,
+            counters,
+        })
+    }
+
+    /// First-token decision shares the cloud path with the decode loop.
+    #[allow(clippy::too_many_arguments)]
+    fn decide_token(
+        &mut self,
+        policy: &TokenPolicy,
+        req_id: u32,
+        pos: usize,
+        prompt_len: usize,
+        conf1: f32,
+        tok1: i32,
+        exit2: Option<(f32, i32)>,
+        cost: &mut CostBreakdown,
+        counters: &mut RunCounters,
+        h1_history: &mut Vec<Vec<f32>>,
+    ) -> Result<(i32, TokenTrace)> {
+        if policy.exit_at_1(conf1) {
+            counters.tokens_exit1 += 1;
+            return Ok((
+                tok1,
+                TokenTrace { pos, token: tok1, exit: ExitPoint::Exit1, conf1, conf2: None },
+            ));
+        }
+        let (conf2, tok2) = exit2.context("exit-2 evaluation missing")?;
+        if policy.exit_at_2(conf2) {
+            counters.tokens_exit2 += 1;
+            return Ok((
+                tok2,
+                TokenTrace { pos, token: tok2, exit: ExitPoint::Exit2, conf1, conf2: Some(conf2) },
+            ));
+        }
+        let (tok, _conf) =
+            self.cloud_token(req_id, pos, prompt_len, cost, counters, h1_history)?;
+        counters.tokens_cloud += 1;
+        counters.cloud_requests += 1;
+        Ok((tok, TokenTrace { pos, token: tok, exit: ExitPoint::Cloud, conf1, conf2: Some(conf2) }))
+    }
+
+    /// Defer one token to the cloud (Algorithm 1, CloudInference call).
+    fn cloud_token(
+        &mut self,
+        req_id: u32,
+        pos: usize,
+        prompt_len: usize,
+        cost: &mut CostBreakdown,
+        counters: &mut RunCounters,
+        h1_history: &mut Vec<Vec<f32>>,
+    ) -> Result<(i32, f32)> {
+        let device_id = self.cfg.device_id;
+        let precision = self.precision();
+        let flags = self.cfg.ablation;
+        let dims_d = self.engine.dims().d_model;
+
+        // without content manager / parallel upload the hidden states go
+        // out synchronously now, on the infer channel (and without the
+        // manager, the WHOLE history is retransmitted every request)
+        if !flags.content_manager || !flags.parallel_upload {
+            let t0 = Instant::now();
+            let all: Vec<f32> = h1_history.iter().flatten().copied().collect();
+            anyhow::ensure!(
+                all.len() == (pos + 1) * dims_d,
+                "history incomplete: {} floats for pos {pos}",
+                all.len()
+            );
+            let payload = quant::pack(&all, precision);
+            counters.bytes_up += payload.len() as u64;
+            let link = self.link.as_mut().context("collaborative policy without cloud link")?;
+            link.infer.send(
+                &Message::UploadHidden {
+                    device_id,
+                    req_id,
+                    start_pos: 0,
+                    count: (pos + 1) as u32,
+                    prompt_len: prompt_len as u32,
+                    precision,
+                    payload,
+                }
+                .encode(),
+            )?;
+            cost.comm_s += t0.elapsed().as_secs_f64();
+        } else {
+            // make sure async uploads for <= pos are on the wire before
+            // measuring the request round trip
+            let t0 = Instant::now();
+            self.link_ref()?.flush_uploads();
+            cost.comm_s += t0.elapsed().as_secs_f64();
+        }
+
+        let t0 = Instant::now();
+        let link = self.link.as_mut().context("collaborative policy without cloud link")?;
+        let req = Message::InferRequest {
+            device_id,
+            req_id,
+            pos: pos as u32,
+            prompt_len: prompt_len as u32,
+        };
+        let frame = req.encode();
+        counters.bytes_up += frame.len() as u64;
+        link.infer.send(&frame)?;
+        let resp = Message::decode(&link.infer.recv()?)?;
+        let rtt = t0.elapsed().as_secs_f64();
+        match resp {
+            Message::TokenResponse { token, conf, compute_s, .. } => {
+                counters.bytes_down += 17; // token response frame size
+                cost.cloud_s += compute_s as f64;
+                cost.comm_s += (rtt - compute_s as f64).max(0.0);
+                Ok((token, conf))
+            }
+            Message::Error { msg } => anyhow::bail!("cloud error: {msg}"),
+            other => anyhow::bail!("unexpected response {other:?}"),
+        }
+    }
+
+    fn link_ref(&self) -> Result<&CloudLink> {
+        self.link.as_ref().context("collaborative policy without cloud link")
+    }
+
+    /// Tear down the link, returning bytes sent on the upload channel.
+    pub fn close(mut self) -> u64 {
+        self.link.as_mut().map(|l| l.close()).unwrap_or(0)
+    }
+}

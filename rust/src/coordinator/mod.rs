@@ -1,0 +1,7 @@
+//! The paper's L3 contribution: early-exit edge client, cloud server with
+//! content manager, wire protocol, and exit policy.
+pub mod policy;
+pub mod protocol;
+pub mod content_manager;
+pub mod edge;
+pub mod cloud;

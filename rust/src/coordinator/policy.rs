@@ -1,0 +1,140 @@
+//! Confidence-based exit policy (paper §4.4, Algorithm 1 lines 7–21).
+//!
+//! Per generated token the edge evaluates exit 1 after layer `l_ee1` and
+//! exit 2 after layer `l_ee2`; the policy decides where the token is
+//! produced.  The ablation flag `early_exit = false` reproduces the
+//! paper's "Without Early Exit" row: the edge still runs its partition
+//! but every token defers to the cloud.
+
+use crate::config::{AblationFlags, ExitPolicy};
+
+/// Where a token was produced.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ExitPoint {
+    /// Early exit 1 (after layer `l_ee1`) — cheapest.
+    Exit1,
+    /// Early exit 2 (after layer `l_ee2`).
+    Exit2,
+    /// Cloud partition (final LM head) — full accuracy.
+    Cloud,
+}
+
+impl ExitPoint {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExitPoint::Exit1 => "exit1",
+            ExitPoint::Exit2 => "exit2",
+            ExitPoint::Cloud => "cloud",
+        }
+    }
+}
+
+/// The exit decision procedure for one token.
+#[derive(Debug, Clone, Copy)]
+pub struct TokenPolicy {
+    pub policy: ExitPolicy,
+    pub flags: AblationFlags,
+}
+
+impl TokenPolicy {
+    pub fn new(policy: ExitPolicy, flags: AblationFlags) -> Self {
+        Self { policy, flags }
+    }
+
+    /// Algorithm 1 line 13: exit at `l_ee1` iff `conf >= θ` (and early
+    /// exits are enabled).
+    pub fn exit_at_1(&self, conf1: f32) -> bool {
+        self.flags.early_exit && conf1 >= self.policy.threshold()
+    }
+
+    /// Algorithm 1 line 17 / §4.1 standalone mode: at the *last* exit the
+    /// standalone policy drops the threshold condition and always emits.
+    pub fn exit_at_2(&self, conf2: f32) -> bool {
+        if self.policy.is_standalone() {
+            return true;
+        }
+        self.flags.early_exit && conf2 >= self.policy.threshold()
+    }
+
+    /// Full decision given both confidences (exit 2's confidence is only
+    /// consulted when exit 1 declines).
+    pub fn decide(&self, conf1: f32, conf2: f32) -> ExitPoint {
+        if self.exit_at_1(conf1) {
+            ExitPoint::Exit1
+        } else if self.exit_at_2(conf2) {
+            ExitPoint::Exit2
+        } else {
+            ExitPoint::Cloud
+        }
+    }
+
+    /// Whether this policy can ever contact the cloud.
+    pub fn uses_cloud(&self) -> bool {
+        !self.policy.is_standalone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(threshold: f32) -> TokenPolicy {
+        TokenPolicy::new(ExitPolicy::Threshold(threshold), AblationFlags::default())
+    }
+
+    #[test]
+    fn threshold_routes_by_confidence() {
+        let pol = p(0.8);
+        assert_eq!(pol.decide(0.9, 0.0), ExitPoint::Exit1);
+        assert_eq!(pol.decide(0.79, 0.85), ExitPoint::Exit2);
+        assert_eq!(pol.decide(0.5, 0.5), ExitPoint::Cloud);
+    }
+
+    #[test]
+    fn boundary_is_inclusive() {
+        // paper: conf >= θ exits
+        let pol = p(0.8);
+        assert!(pol.exit_at_1(0.8));
+        assert!(!pol.exit_at_1(0.7999));
+    }
+
+    #[test]
+    fn threshold_one_never_exits_early() {
+        // confidences are strictly < 1 in practice -> 100% cloud rate
+        let pol = p(1.0);
+        assert_eq!(pol.decide(0.9999, 0.9999), ExitPoint::Cloud);
+    }
+
+    #[test]
+    fn standalone_always_emits_at_exit2() {
+        let pol = TokenPolicy::new(
+            ExitPolicy::Standalone { threshold: 0.8 },
+            AblationFlags::default(),
+        );
+        assert_eq!(pol.decide(0.9, 0.0), ExitPoint::Exit1);
+        assert_eq!(pol.decide(0.1, 0.1), ExitPoint::Exit2);
+        assert!(!pol.uses_cloud());
+    }
+
+    #[test]
+    fn disabled_early_exit_forces_cloud() {
+        let pol = TokenPolicy::new(ExitPolicy::Threshold(0.8), AblationFlags::without_early_exit());
+        assert_eq!(pol.decide(0.99, 0.99), ExitPoint::Cloud);
+    }
+
+    #[test]
+    fn monotone_in_threshold() {
+        // lower threshold can only move tokens earlier, never later
+        let confs = [(0.85f32, 0.92f32), (0.5, 0.85), (0.3, 0.4)];
+        for (c1, c2) in confs {
+            let lo = p(0.8).decide(c1, c2);
+            let hi = p(0.9).decide(c1, c2);
+            let rank = |e: ExitPoint| match e {
+                ExitPoint::Exit1 => 0,
+                ExitPoint::Exit2 => 1,
+                ExitPoint::Cloud => 2,
+            };
+            assert!(rank(lo) <= rank(hi), "({c1},{c2})");
+        }
+    }
+}

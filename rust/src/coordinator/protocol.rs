@@ -1,0 +1,307 @@
+//! Wire protocol between edge clients and the cloud server.
+//!
+//! The paper uses two Flask APIs — one receiving hidden-state uploads,
+//! one serving inference requests (§4.2 "Dual API Handling").  We keep
+//! the same dual-channel design over two TCP connections with a compact
+//! little-endian binary encoding; hidden-state payloads are packed by
+//! [`crate::quant`] (f16 by default, §4.3).
+//!
+//! Framing (length prefix) is the transport's job; this module encodes
+//! message bodies.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::quant::Precision;
+
+/// Channel roles announced in `Hello` (the paper's two APIs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Channel {
+    Upload,
+    Infer,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    /// Opens a channel for `device_id`.
+    Hello { device_id: u64, channel: Channel },
+    /// Hidden states for positions `start_pos .. start_pos + count`
+    /// at `l_ee1` (`count * d_model` elements in `precision`).
+    /// `prompt_len` lets the server distinguish prompt uploads from
+    /// decode-step uploads and detect retransmissions.
+    UploadHidden {
+        device_id: u64,
+        req_id: u32,
+        start_pos: u32,
+        count: u32,
+        prompt_len: u32,
+        precision: Precision,
+        payload: Vec<u8>,
+    },
+    /// "Continue my inference from the uploaded states and give me the
+    /// token at `pos`" (Algorithm 1, CloudInference).
+    InferRequest { device_id: u64, req_id: u32, pos: u32, prompt_len: u32 },
+    /// Single-token response (§4.2): the token, its confidence, and the
+    /// server-side compute seconds (lets the edge split comm vs cloud
+    /// time in its metrics, as the paper's tables do).
+    TokenResponse { req_id: u32, token: i32, conf: f32, compute_s: f32 },
+    /// Generation finished: release content-manager state (§4.4 step 6).
+    EndSession { device_id: u64, req_id: u32 },
+    Ack,
+    Error { msg: String },
+}
+
+const TAG_HELLO: u8 = 1;
+const TAG_UPLOAD: u8 = 2;
+const TAG_INFER: u8 = 3;
+const TAG_TOKEN: u8 = 4;
+const TAG_END: u8 = 5;
+const TAG_ACK: u8 = 6;
+const TAG_ERROR: u8 = 7;
+
+impl Message {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::with_capacity(32);
+        match self {
+            Message::Hello { device_id, channel } => {
+                b.push(TAG_HELLO);
+                b.extend_from_slice(&device_id.to_le_bytes());
+                b.push(match channel {
+                    Channel::Upload => 0,
+                    Channel::Infer => 1,
+                });
+            }
+            Message::UploadHidden {
+                device_id,
+                req_id,
+                start_pos,
+                count,
+                prompt_len,
+                precision,
+                payload,
+            } => {
+                b.push(TAG_UPLOAD);
+                b.extend_from_slice(&device_id.to_le_bytes());
+                b.extend_from_slice(&req_id.to_le_bytes());
+                b.extend_from_slice(&start_pos.to_le_bytes());
+                b.extend_from_slice(&count.to_le_bytes());
+                b.extend_from_slice(&prompt_len.to_le_bytes());
+                b.push(match precision {
+                    Precision::F16 => 0,
+                    Precision::F32 => 1,
+                });
+                b.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+                b.extend_from_slice(payload);
+            }
+            Message::InferRequest { device_id, req_id, pos, prompt_len } => {
+                b.push(TAG_INFER);
+                b.extend_from_slice(&device_id.to_le_bytes());
+                b.extend_from_slice(&req_id.to_le_bytes());
+                b.extend_from_slice(&pos.to_le_bytes());
+                b.extend_from_slice(&prompt_len.to_le_bytes());
+            }
+            Message::TokenResponse { req_id, token, conf, compute_s } => {
+                b.push(TAG_TOKEN);
+                b.extend_from_slice(&req_id.to_le_bytes());
+                b.extend_from_slice(&token.to_le_bytes());
+                b.extend_from_slice(&conf.to_le_bytes());
+                b.extend_from_slice(&compute_s.to_le_bytes());
+            }
+            Message::EndSession { device_id, req_id } => {
+                b.push(TAG_END);
+                b.extend_from_slice(&device_id.to_le_bytes());
+                b.extend_from_slice(&req_id.to_le_bytes());
+            }
+            Message::Ack => b.push(TAG_ACK),
+            Message::Error { msg } => {
+                b.push(TAG_ERROR);
+                let bytes = msg.as_bytes();
+                b.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+                b.extend_from_slice(bytes);
+            }
+        }
+        b
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Message> {
+        let mut r = Reader { buf, pos: 0 };
+        let tag = r.u8()?;
+        let msg = match tag {
+            TAG_HELLO => {
+                let device_id = r.u64()?;
+                let channel = match r.u8()? {
+                    0 => Channel::Upload,
+                    1 => Channel::Infer,
+                    c => bail!("bad channel {c}"),
+                };
+                Message::Hello { device_id, channel }
+            }
+            TAG_UPLOAD => {
+                let device_id = r.u64()?;
+                let req_id = r.u32()?;
+                let start_pos = r.u32()?;
+                let count = r.u32()?;
+                let prompt_len = r.u32()?;
+                let precision = match r.u8()? {
+                    0 => Precision::F16,
+                    1 => Precision::F32,
+                    p => bail!("bad precision {p}"),
+                };
+                let n = r.u32()? as usize;
+                let payload = r.bytes(n)?.to_vec();
+                ensure!(
+                    payload.len() % (count.max(1) as usize * precision.bytes_per_elem()) == 0,
+                    "payload not a multiple of count*elem"
+                );
+                Message::UploadHidden {
+                    device_id,
+                    req_id,
+                    start_pos,
+                    count,
+                    prompt_len,
+                    precision,
+                    payload,
+                }
+            }
+            TAG_INFER => Message::InferRequest {
+                device_id: r.u64()?,
+                req_id: r.u32()?,
+                pos: r.u32()?,
+                prompt_len: r.u32()?,
+            },
+            TAG_TOKEN => Message::TokenResponse {
+                req_id: r.u32()?,
+                token: r.i32()?,
+                conf: r.f32()?,
+                compute_s: r.f32()?,
+            },
+            TAG_END => Message::EndSession { device_id: r.u64()?, req_id: r.u32()? },
+            TAG_ACK => Message::Ack,
+            TAG_ERROR => {
+                let n = r.u32()? as usize;
+                let msg = String::from_utf8(r.bytes(n)?.to_vec()).context("error msg utf-8")?;
+                Message::Error { msg }
+            }
+            t => bail!("unknown message tag {t}"),
+        };
+        ensure!(r.pos == buf.len(), "{} trailing bytes", buf.len() - r.pos);
+        Ok(msg)
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.pos + n <= self.buf.len(), "truncated message");
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn i32(&mut self) -> Result<i32> {
+        Ok(i32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(m: Message) {
+        let enc = m.encode();
+        let dec = Message::decode(&enc).unwrap();
+        assert_eq!(m, dec);
+    }
+
+    #[test]
+    fn roundtrip_all_variants() {
+        roundtrip(Message::Hello { device_id: 42, channel: Channel::Upload });
+        roundtrip(Message::Hello { device_id: 0, channel: Channel::Infer });
+        roundtrip(Message::UploadHidden {
+            device_id: u64::MAX,
+            req_id: 7,
+            start_pos: 100,
+            count: 2,
+            prompt_len: 90,
+            precision: Precision::F16,
+            payload: vec![1, 2, 3, 4, 5, 6, 7, 8],
+        });
+        roundtrip(Message::InferRequest { device_id: 3, req_id: 9, pos: 55, prompt_len: 12 });
+        roundtrip(Message::TokenResponse { req_id: 9, token: -1, conf: 0.25, compute_s: 1e-3 });
+        roundtrip(Message::EndSession { device_id: 3, req_id: 9 });
+        roundtrip(Message::Ack);
+        roundtrip(Message::Error { msg: "kaboom — ω".into() });
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let enc = Message::InferRequest { device_id: 3, req_id: 9, pos: 55, prompt_len: 2 }
+            .encode();
+        for cut in 1..enc.len() {
+            assert!(Message::decode(&enc[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn rejects_trailing_bytes() {
+        let mut enc = Message::Ack.encode();
+        enc.push(0);
+        assert!(Message::decode(&enc).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_tag() {
+        assert!(Message::decode(&[99]).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_precision_and_channel() {
+        let mut enc = Message::Hello { device_id: 1, channel: Channel::Infer }.encode();
+        *enc.last_mut().unwrap() = 9;
+        assert!(Message::decode(&enc).is_err());
+    }
+
+    #[test]
+    fn upload_payload_f16_halves_bytes() {
+        let h: Vec<f32> = (0..128).map(|i| i as f32 * 0.1).collect();
+        let m16 = Message::UploadHidden {
+            device_id: 1,
+            req_id: 0,
+            start_pos: 0,
+            count: 1,
+            prompt_len: 0,
+            precision: Precision::F16,
+            payload: crate::quant::pack(&h, Precision::F16),
+        };
+        let m32 = Message::UploadHidden {
+            device_id: 1,
+            req_id: 0,
+            start_pos: 0,
+            count: 1,
+            prompt_len: 0,
+            precision: Precision::F32,
+            payload: crate::quant::pack(&h, Precision::F32),
+        };
+        assert!(m16.encode().len() < m32.encode().len());
+        assert_eq!(m32.encode().len() - m16.encode().len(), 128 * 2);
+    }
+}

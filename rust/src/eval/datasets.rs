@@ -1,0 +1,284 @@
+//! Synthetic prompt sets with the paper's workload shapes.
+//!
+//! The paper evaluates on Alpaca (short prompts, 13–43 tokens), XSum (long
+//! prompts, 200–500 tokens), TruthfulQA, and CNN/DailyMail.  We have none
+//! of those licenses baked into a testbed, and — more importantly — the
+//! model is a byte-level LM trained on a synthetic grammar, so evaluation
+//! prompts must come from the *same grammar* to elicit the paper's
+//! confidence structure.  The word lists and templates below mirror
+//! `python/compile/data.py` exactly (KEEP IN SYNC).
+//!
+//! Length shapes are preserved at byte granularity: "alpaca" prompts are
+//! 16–48 bytes, "xsum" documents 150–250 bytes (our `max_prompt` is 256).
+
+use crate::util::rng::Rng;
+
+// --- mirrored from python/compile/data.py ---------------------------------
+pub const NOUNS: &[&str] = &[
+    "machine", "test", "system", "model", "network", "computer", "data",
+    "cloud", "edge", "device", "server", "intelligence", "behaviour",
+    "ability", "language", "token", "layer", "cache", "latency", "result",
+    "question", "answer", "document", "summary", "article", "story",
+    "report", "sentence", "paragraph", "response", "request", "signal",
+];
+pub const VERBS: &[&str] = &[
+    "exhibit", "generate", "process", "predict", "transmit", "compute",
+    "evaluate", "measure", "produce", "describe", "summarize", "explain",
+    "analyze", "compare", "reduce", "improve", "accelerate", "support",
+];
+pub const ADJS: &[&str] = &[
+    "intelligent", "efficient", "adaptive", "large", "small", "fast",
+    "slow", "accurate", "reliable", "local", "remote", "collaborative",
+    "early", "final", "hidden", "confident",
+];
+pub const DETS: &[&str] = &["the", "a", "this", "that", "every", "each"];
+
+const TEMPLATES: &[&[&str]] = &[
+    &["D", "N", "is", "a", "N", "of", "a", "N's", "ability", "to", "V", "A", "N"],
+    &["D", "A", "N", "can", "V", "D", "N"],
+    &["D", "N", "must", "V", "D", "A", "N", "quickly"],
+    &["what", "is", "D", "N", "?", "it", "is", "a", "A", "N"],
+    &["D", "N", "of", "D", "N", "is", "A"],
+    &["to", "V", "is", "to", "V", "D", "A", "N"],
+    &["D", "N", "and", "D", "N", "V", "together"],
+    &["when", "D", "N", "is", "A", ",", "D", "N", "can", "V"],
+];
+// ---------------------------------------------------------------------------
+
+/// Which paper dataset a prompt set stands in for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dataset {
+    /// Short instruction prompts (paper: Alpaca, 13–43 tokens).
+    Alpaca,
+    /// Long documents (paper: XSum, 200–500 tokens).
+    Xsum,
+    /// Short QA with a reference answer (paper: TruthfulQA, EM metric).
+    TruthfulQa,
+    /// Long documents with reference summaries (paper: CNN/DailyMail).
+    CnnDailyMail,
+}
+
+impl Dataset {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dataset::Alpaca => "Alpaca",
+            Dataset::Xsum => "XSum",
+            Dataset::TruthfulQa => "TruthfulQA",
+            Dataset::CnnDailyMail => "CNN/DailyMail",
+        }
+    }
+}
+
+/// One evaluation case: a prompt, and (for QA/summarization sets) a
+/// grammar-derived reference answer.
+#[derive(Debug, Clone)]
+pub struct PromptCase {
+    pub prompt: String,
+    pub reference: Option<String>,
+}
+
+/// A generated prompt set.
+#[derive(Debug, Clone)]
+pub struct PromptSet {
+    pub dataset: Dataset,
+    pub cases: Vec<PromptCase>,
+}
+
+pub fn sample_sentence(rng: &mut Rng) -> String {
+    let tpl = TEMPLATES[rng.gen_range(TEMPLATES.len())];
+    let mut out: Vec<String> = Vec::with_capacity(tpl.len());
+    for tok in tpl {
+        let w = match *tok {
+            "N" => NOUNS[rng.gen_range(NOUNS.len())].to_string(),
+            "N's" => format!("{}'s", NOUNS[rng.gen_range(NOUNS.len())]),
+            "V" => VERBS[rng.gen_range(VERBS.len())].to_string(),
+            "A" => ADJS[rng.gen_range(ADJS.len())].to_string(),
+            "D" => DETS[rng.gen_range(DETS.len())].to_string(),
+            other => other.to_string(),
+        };
+        out.push(w);
+    }
+    let s = out.join(" ").replace(" ?", "?").replace(" ,", ",");
+    format!("{s}.")
+}
+
+/// Make a prompt open-ended: the training corpus is `BOS sentence . EOS`,
+/// so a prompt ending in "." makes the model emit EOS immediately.
+/// Stripping the final period (and cutting back to a word boundary)
+/// leaves the model mid-sentence with real tokens left to generate.
+fn open_ended(mut s: String) -> String {
+    while s.ends_with('.') || s.ends_with(' ') {
+        s.pop();
+    }
+    // drop the final word so the continuation is non-trivial
+    if let Some(i) = s.rfind(' ') {
+        if i >= 10 {
+            s.truncate(i);
+        }
+    }
+    s
+}
+
+fn sentence_with_len(rng: &mut Rng, min: usize, max: usize) -> String {
+    // rejection-sample a sentence whose byte length fits [min, max],
+    // truncating at word boundaries as a fallback
+    for _ in 0..64 {
+        let s = sample_sentence(rng);
+        if s.len() >= min && s.len() <= max {
+            return s;
+        }
+    }
+    let mut s = sample_sentence(rng);
+    while s.len() > max {
+        match s.rfind(' ') {
+            Some(i) => s.truncate(i),
+            None => {
+                s.truncate(max);
+                break;
+            }
+        }
+    }
+    s
+}
+
+fn document_with_len(rng: &mut Rng, min: usize, max: usize) -> String {
+    let mut doc = String::new();
+    while doc.len() < min {
+        if !doc.is_empty() {
+            doc.push(' ');
+        }
+        doc.push_str(&sample_sentence(rng));
+    }
+    while doc.len() > max {
+        match doc.rfind(' ') {
+            Some(i) => doc.truncate(i),
+            None => {
+                doc.truncate(max);
+                break;
+            }
+        }
+    }
+    doc
+}
+
+/// Generate a deterministic prompt set.
+///
+/// * `Alpaca` — 16–48 byte instruction-style sentences (paper 13–43 tok).
+/// * `Xsum` — 150–250 byte documents (paper 200–500 tok, scaled to our
+///   `max_prompt = 256`).
+/// * `TruthfulQa` — "what is D N?" questions, reference = grammar answer.
+/// * `CnnDailyMail` — documents with a leading "summary" sentence as the
+///   reference (lead-1, the standard news-summarization heuristic).
+pub fn generate(dataset: Dataset, n: usize, seed: u64) -> PromptSet {
+    let mut rng = Rng::seed_from_u64(seed.wrapping_mul(0x9E37) ^ dataset as u64);
+    let mut cases = Vec::with_capacity(n);
+    for _ in 0..n {
+        let case = match dataset {
+            Dataset::Alpaca => PromptCase {
+                prompt: open_ended(sentence_with_len(&mut rng, 22, 48)),
+                reference: None,
+            },
+            Dataset::Xsum => {
+                let doc = document_with_len(&mut rng, 160, 250);
+                // lead-1 reference: the standard extreme-summarization
+                // heuristic (the XSum task is one-sentence summaries)
+                let lead = doc.split('.').next().unwrap_or("").trim().to_string();
+                PromptCase { prompt: open_ended(doc), reference: Some(lead) }
+            }
+            Dataset::TruthfulQa => {
+                let noun = NOUNS[rng.gen_range(NOUNS.len())];
+                let adj = ADJS[rng.gen_range(ADJS.len())];
+                let obj = NOUNS[rng.gen_range(NOUNS.len())];
+                PromptCase {
+                    prompt: format!("what is the {noun}? it is"),
+                    reference: Some(format!("a {adj} {obj}")),
+                }
+            }
+            Dataset::CnnDailyMail => {
+                let lead = sentence_with_len(&mut rng, 20, 80);
+                let body = document_with_len(&mut rng, 100, 170);
+                PromptCase {
+                    prompt: open_ended(format!("{lead} {body}")),
+                    reference: Some(lead),
+                }
+            }
+        };
+        cases.push(case);
+    }
+    PromptSet { dataset, cases }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alpaca_lengths_in_band() {
+        let set = generate(Dataset::Alpaca, 50, 7);
+        for c in &set.cases {
+            assert!(
+                c.prompt.len() >= 8 && c.prompt.len() <= 48,
+                "len {} out of band: {}",
+                c.prompt.len(),
+                c.prompt
+            );
+        }
+    }
+
+    #[test]
+    fn xsum_lengths_in_band() {
+        let set = generate(Dataset::Xsum, 30, 7);
+        for c in &set.cases {
+            assert!(c.prompt.len() >= 100 && c.prompt.len() <= 250);
+            assert!(!c.prompt.ends_with('.'), "prompt must be open-ended");
+        }
+    }
+
+    #[test]
+    fn xsum_is_much_longer_than_alpaca() {
+        let a = generate(Dataset::Alpaca, 20, 1);
+        let x = generate(Dataset::Xsum, 20, 1);
+        let mean = |s: &PromptSet| {
+            s.cases.iter().map(|c| c.prompt.len()).sum::<usize>() as f64 / s.cases.len() as f64
+        };
+        assert!(mean(&x) > 3.0 * mean(&a), "paper needs a strong short/long contrast");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = generate(Dataset::Alpaca, 10, 42);
+        let b = generate(Dataset::Alpaca, 10, 42);
+        for (x, y) in a.cases.iter().zip(&b.cases) {
+            assert_eq!(x.prompt, y.prompt);
+        }
+        let c = generate(Dataset::Alpaca, 10, 43);
+        assert!(a.cases.iter().zip(&c.cases).any(|(x, y)| x.prompt != y.prompt));
+    }
+
+    #[test]
+    fn qa_sets_have_references() {
+        for ds in [Dataset::TruthfulQa, Dataset::CnnDailyMail] {
+            let set = generate(ds, 10, 0);
+            assert!(set.cases.iter().all(|c| c.reference.is_some()));
+        }
+    }
+
+    #[test]
+    fn prompts_are_ascii_bytes() {
+        // byte-level model: prompts must stay in single-byte range
+        for ds in [Dataset::Alpaca, Dataset::Xsum] {
+            for c in &generate(ds, 20, 3).cases {
+                assert!(c.prompt.is_ascii());
+            }
+        }
+    }
+
+    #[test]
+    fn prompts_fit_max_prompt() {
+        for ds in [Dataset::Alpaca, Dataset::Xsum, Dataset::CnnDailyMail] {
+            for c in &generate(ds, 30, 9).cases {
+                assert!(c.prompt.len() + 1 <= 256, "prompt + BOS must fit max_prompt");
+            }
+        }
+    }
+}

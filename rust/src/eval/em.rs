@@ -1,0 +1,111 @@
+//! Exact Match (SQuAD-style), the paper's TruthfulQA metric (Table 3).
+
+/// Normalize: lowercase, strip punctuation, collapse whitespace, drop
+/// English articles — the standard SQuAD normalization.
+pub fn normalize(s: &str) -> String {
+    let lower = s.to_lowercase();
+    let no_punct: String = lower
+        .chars()
+        .map(|c| if c.is_alphanumeric() || c.is_whitespace() { c } else { ' ' })
+        .collect();
+    no_punct
+        .split_whitespace()
+        .filter(|w| !matches!(*w, "a" | "an" | "the"))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+/// 1.0 if the normalized candidate equals the normalized reference.
+pub fn exact_match(candidate: &str, reference: &str) -> f64 {
+    if normalize(candidate) == normalize(reference) {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+/// Template-validity exact match for the synthetic QA grammar.
+///
+/// The grammar answers "what is D N?" with "a `<ADJ>` `<NOUN>`", but WHICH
+/// adjective/noun is genuinely random — no model can match a freshly
+/// sampled reference string, so string-EM would be ~0 by construction
+/// (unlike TruthfulQA, where the reference is determined by the
+/// question).  The faithful analogue of the paper's EM column is
+/// whether the model produces a *well-formed* answer: article + known
+/// adjective + known noun.  Like the paper's EM (0.18 at every θ), this
+/// is insensitive to the exit threshold.
+pub fn template_match(candidate: &str) -> f64 {
+    let first = candidate.split(['.', ',']).next().unwrap_or("");
+    let words: Vec<String> =
+        normalize(first).split_whitespace().map(|w| w.to_string()).collect();
+    // normalize() drops articles, so a well-formed "a ADJ NOUN" reduces
+    // to [ADJ, NOUN]
+    if words.len() != 2 {
+        return 0.0;
+    }
+    let adj_ok = crate::eval::datasets::ADJS.contains(&words[0].as_str());
+    let noun_ok = crate::eval::datasets::NOUNS.contains(&words[1].as_str());
+    if adj_ok && noun_ok {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+/// Mean EM over a set of (candidate, reference) pairs.
+pub fn exact_match_set(pairs: &[(String, String)]) -> f64 {
+    if pairs.is_empty() {
+        return 0.0;
+    }
+    pairs.iter().map(|(c, r)| exact_match(c, r)).sum::<f64>() / pairs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_strings_match() {
+        assert_eq!(exact_match("machine", "machine"), 1.0);
+    }
+
+    #[test]
+    fn articles_and_case_ignored() {
+        assert_eq!(exact_match("The Machine", "machine"), 1.0);
+        assert_eq!(exact_match("an answer.", "answer"), 1.0);
+    }
+
+    #[test]
+    fn different_content_fails() {
+        assert_eq!(exact_match("machine", "computer"), 0.0);
+    }
+
+    #[test]
+    fn set_mean() {
+        let pairs = vec![
+            ("a".to_string(), "a".to_string()),
+            ("b".to_string(), "c".to_string()),
+        ];
+        assert_eq!(exact_match_set(&pairs), 0.5);
+        assert_eq!(exact_match_set(&[]), 0.0);
+    }
+
+    #[test]
+    fn normalize_collapses_whitespace_and_punct() {
+        assert_eq!(normalize("  The  cat,   sat! "), "cat sat");
+    }
+
+    #[test]
+    fn template_match_accepts_wellformed_answers() {
+        assert_eq!(template_match(" a reliable system. more text"), 1.0);
+        assert_eq!(template_match("an efficient network"), 1.0);
+    }
+
+    #[test]
+    fn template_match_rejects_malformed() {
+        assert_eq!(template_match("banana banana banana"), 0.0);
+        assert_eq!(template_match("a reliable"), 0.0);
+        assert_eq!(template_match(""), 0.0);
+        assert_eq!(template_match("a system reliable"), 0.0); // order matters
+    }
+}

@@ -1,0 +1,10 @@
+//! Evaluation substrate: metrics (ROUGE-L, Exact Match) and the synthetic
+//! prompt sets standing in for Alpaca / XSum / TruthfulQA / CNN-DailyMail
+//! (DESIGN.md §Hardware-Adaptation explains the substitution).
+
+pub mod datasets;
+pub mod em;
+pub mod rouge;
+
+pub use em::exact_match;
+pub use rouge::rouge_l;

@@ -1,0 +1,118 @@
+//! ROUGE-L (Lin & Och 2004): LCS-based F-measure over token sequences.
+//!
+//! The paper uses ROUGE-L twice: (1) Table 2, similarity between CE-CoLLM
+//! output and the cloud-deployment output (θ=1.0 must give exactly 1.0);
+//! (2) Table 3, summarization quality on XSum/CNN-DM-like tasks.
+
+/// Longest common subsequence length between two token slices.
+///
+/// O(n·m) time, O(min(n,m)) memory (two rolling rows).
+pub fn lcs_len<T: PartialEq>(a: &[T], b: &[T]) -> usize {
+    let (short, long) = if a.len() <= b.len() { (a, b) } else { (b, a) };
+    if short.is_empty() {
+        return 0;
+    }
+    let mut prev = vec![0usize; short.len() + 1];
+    let mut curr = vec![0usize; short.len() + 1];
+    for x in long {
+        for (j, y) in short.iter().enumerate() {
+            curr[j + 1] = if x == y {
+                prev[j] + 1
+            } else {
+                prev[j + 1].max(curr[j])
+            };
+        }
+        std::mem::swap(&mut prev, &mut curr);
+    }
+    prev[short.len()]
+}
+
+/// ROUGE-L F1 between candidate and reference token sequences.
+///
+/// `beta` is fixed at 1 (harmonic mean), matching HELM's rouge_l scorer.
+pub fn rouge_l_tokens<T: PartialEq>(candidate: &[T], reference: &[T]) -> f64 {
+    if candidate.is_empty() && reference.is_empty() {
+        return 1.0;
+    }
+    if candidate.is_empty() || reference.is_empty() {
+        return 0.0;
+    }
+    let lcs = lcs_len(candidate, reference) as f64;
+    if lcs == 0.0 {
+        return 0.0;
+    }
+    let p = lcs / candidate.len() as f64;
+    let r = lcs / reference.len() as f64;
+    2.0 * p * r / (p + r)
+}
+
+/// ROUGE-L F1 over whitespace-tokenized, lowercased words.
+pub fn rouge_l(candidate: &str, reference: &str) -> f64 {
+    let c: Vec<String> = tokenize(candidate);
+    let r: Vec<String> = tokenize(reference);
+    rouge_l_tokens(&c, &r)
+}
+
+fn tokenize(s: &str) -> Vec<String> {
+    s.split(|c: char| !c.is_alphanumeric() && c != '\'')
+        .filter(|w| !w.is_empty())
+        .map(|w| w.to_lowercase())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_strings_score_one() {
+        assert_eq!(rouge_l("a test of a machine", "a test of a machine"), 1.0);
+    }
+
+    #[test]
+    fn disjoint_strings_score_zero() {
+        assert_eq!(rouge_l("alpha beta", "gamma delta"), 0.0);
+    }
+
+    #[test]
+    fn empty_cases() {
+        assert_eq!(rouge_l("", ""), 1.0);
+        assert_eq!(rouge_l("a", ""), 0.0);
+        assert_eq!(rouge_l("", "a"), 0.0);
+    }
+
+    #[test]
+    fn lcs_known_value() {
+        // LCS("ABCBDAB", "BDCABA") = 4 ("BCBA" / "BDAB")
+        let a: Vec<char> = "ABCBDAB".chars().collect();
+        let b: Vec<char> = "BDCABA".chars().collect();
+        assert_eq!(lcs_len(&a, &b), 4);
+    }
+
+    #[test]
+    fn f1_hand_computed() {
+        // cand = "the cat sat", ref = "the cat sat down": LCS=3, P=1, R=3/4
+        let got = rouge_l("the cat sat", "the cat sat down");
+        let expect = 2.0 * 1.0 * 0.75 / 1.75;
+        assert!((got - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn case_and_punctuation_insensitive() {
+        assert_eq!(rouge_l("The Machine, works.", "the machine works"), 1.0);
+    }
+
+    #[test]
+    fn order_sensitivity() {
+        // same bag of words, scrambled order -> LCS < n
+        let s = rouge_l("a b c d", "d c b a");
+        assert!(s < 1.0 && s > 0.0);
+    }
+
+    #[test]
+    fn symmetric_f1() {
+        let x = "the edge device can predict tokens";
+        let y = "the cloud must predict every token";
+        assert!((rouge_l(x, y) - rouge_l(y, x)).abs() < 1e-12);
+    }
+}

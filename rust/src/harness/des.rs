@@ -1,0 +1,673 @@
+//! Discrete-event replay of recorded traces under a deployment strategy.
+//!
+//! Entities: per-client edge clock, per-client FIFO up/down links
+//! ([`SimLink`]), and one shared cloud GPU served FCFS — the paper's
+//! testbed topology (N edge devices, one cloud inference GPU).  Compute
+//! durations come from the calibrated [`CostModel`] (measured PJRT call
+//! times); communication from the [`LinkProfile`].
+//!
+//! The same replay engine produces every row of Tables 2 and 4 and every
+//! point of Figure 4: CE-CoLLM is a flag configuration, the baselines are
+//! alternative strategies over the same traces (cloud-only and the naïve
+//! split generate the θ=1.0 token sequence by construction, since both
+//! run the full model).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::config::AblationFlags;
+use crate::coordinator::policy::ExitPoint;
+use crate::harness::cost::CostModel;
+use crate::harness::trace::Trace;
+use crate::metrics::{CostBreakdown, RunCounters};
+use crate::model::manifest::ModelDims;
+use crate::net::profiles::LinkProfile;
+use crate::net::simulated::SimLink;
+use crate::util::rng::Rng;
+
+/// Fixed protocol sizes (message header bytes; payloads added on top).
+const UPLOAD_HDR: usize = 30;
+const REQ_BYTES: usize = 21;
+const RESP_BYTES: usize = 17;
+
+/// Deployment strategy to replay.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Strategy {
+    /// CE-CoLLM with the given ablation switches (paper §4, Table 4).
+    CeCollm(AblationFlags),
+    /// Edge standalone mode (paper §4.1) — replay of a standalone trace.
+    Standalone,
+    /// Cloud-based LLM deployment (paper Fig 1a): prompt up, full
+    /// inference in the cloud, text down.
+    CloudOnly,
+    /// Naïve cloud-edge split (paper Fig 1b): per-token synchronous
+    /// re-upload of the full fp32 hidden history, no content manager.
+    NaiveSplit,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct SimConfig {
+    pub strategy: Strategy,
+    pub link: LinkProfile,
+    pub seed: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ClientResult {
+    pub cost: CostBreakdown,
+    pub counters: RunCounters,
+}
+
+#[derive(Debug, Clone)]
+pub struct SimOutcome {
+    pub clients: Vec<ClientResult>,
+    /// Finish time of the last client (total wall-clock of the run).
+    pub makespan_s: f64,
+    /// Total busy time of the shared cloud GPU.
+    pub cloud_busy_s: f64,
+}
+
+impl SimOutcome {
+    /// Sum of per-client breakdowns (the paper's Table 2 reports the
+    /// cumulative cost over all cases of a single client).
+    pub fn summed(&self) -> (CostBreakdown, RunCounters) {
+        let mut cost = CostBreakdown::default();
+        let mut counters = RunCounters::default();
+        for c in &self.clients {
+            cost.add(&c.cost);
+            counters.add(&c.counters);
+        }
+        cost.total_s = self.makespan_s;
+        (cost, counters)
+    }
+}
+
+/// A pending cloud request from one client.
+struct CloudCall {
+    client: usize,
+    arrive_s: f64,
+    /// When the uploads this request depends on have all arrived.
+    ready_s: f64,
+    busy_s: f64,
+    resp_bytes: usize,
+}
+
+struct HeapEntry {
+    arrive_s: f64,
+    client: usize,
+}
+
+impl PartialEq for HeapEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.arrive_s == other.arrive_s && self.client == other.client
+    }
+}
+impl Eq for HeapEntry {}
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap by arrival time (FCFS), tie-break by client id
+        other
+            .arrive_s
+            .total_cmp(&self.arrive_s)
+            .then_with(|| other.client.cmp(&self.client))
+    }
+}
+
+/// Per-client replay state machine.
+struct ClientSim<'a> {
+    id: usize,
+    traces: &'a [Trace],
+    strategy: Strategy,
+    d_model: usize,
+    cost_model: &'a CostModel,
+    rng: Rng,
+    uplink: SimLink,
+    downlink: SimLink,
+
+    req_idx: usize,
+    step_idx: usize,
+    edge_t: f64,
+    /// Arrival time of the newest upload the cloud may need.
+    upload_ready: f64,
+    /// Pending (not yet cloud-requested) call produced by `advance`.
+    cost: CostBreakdown,
+    counters: RunCounters,
+    done: bool,
+}
+
+impl<'a> ClientSim<'a> {
+    fn new(
+        id: usize,
+        traces: &'a [Trace],
+        strategy: Strategy,
+        dims: &ModelDims,
+        cost_model: &'a CostModel,
+        link: LinkProfile,
+        seed: u64,
+    ) -> Self {
+        Self {
+            id,
+            traces,
+            strategy,
+            d_model: dims.d_model,
+            cost_model,
+            rng: Rng::seed_from_u64(seed ^ (id as u64).wrapping_mul(0x9E3779B9)),
+            uplink: SimLink::new(link),
+            downlink: SimLink::new(link),
+            req_idx: 0,
+            step_idx: 0,
+            edge_t: 0.0,
+            upload_ready: 0.0,
+            cost: CostBreakdown::default(),
+            counters: RunCounters::default(),
+            done: false,
+        }
+    }
+
+    fn flags(&self) -> AblationFlags {
+        match self.strategy {
+            Strategy::CeCollm(f) => f,
+            _ => AblationFlags::default(),
+        }
+    }
+
+    fn esz(&self) -> usize {
+        if self.flags().half_precision {
+            2
+        } else {
+            4
+        }
+    }
+
+    fn hidden_bytes(&self, positions: usize) -> usize {
+        UPLOAD_HDR + positions * self.d_model * self.esz()
+    }
+
+    /// Run edge-local work until the next cloud call or completion.
+    fn advance(&mut self) -> Option<CloudCall> {
+        match self.strategy {
+            Strategy::Standalone => {
+                self.run_standalone();
+                None
+            }
+            Strategy::CloudOnly => self.advance_cloud_only(),
+            Strategy::NaiveSplit => self.advance_naive(),
+            Strategy::CeCollm(_) => self.advance_ce(),
+        }
+    }
+
+    // --- standalone: pure edge, no events --------------------------------
+    fn run_standalone(&mut self) {
+        for tr in self.traces {
+            let d = self.cost_model.sample_edge_prefill(&mut self.rng);
+            self.edge_t += d;
+            self.cost.edge_s += d;
+            for (i, step) in tr.steps.iter().enumerate() {
+                if i > 0 {
+                    let d = self.cost_model.sample_seg1(&mut self.rng);
+                    self.edge_t += d;
+                    self.cost.edge_s += d;
+                    if step.conf2.is_some() {
+                        let d = self.cost_model.sample_seg2(&mut self.rng);
+                        self.edge_t += d;
+                        self.cost.edge_s += d;
+                    }
+                }
+                match step.exit {
+                    ExitPoint::Exit1 => self.counters.tokens_exit1 += 1,
+                    _ => self.counters.tokens_exit2 += 1,
+                }
+                self.counters.tokens_generated += 1;
+            }
+        }
+        self.cost.total_s = self.edge_t;
+        self.done = true;
+    }
+
+    // --- cloud-only baseline ----------------------------------------------
+    fn advance_cloud_only(&mut self) -> Option<CloudCall> {
+        if self.req_idx >= self.traces.len() {
+            self.finish();
+            return None;
+        }
+        let tr = &self.traces[self.req_idx];
+        // API request: the prompt text itself
+        let up_bytes = UPLOAD_HDR + tr.prompt_len;
+        let arrive = self.uplink.transfer(self.edge_t, up_bytes);
+        self.counters.bytes_up += up_bytes as u64;
+        self.counters.cloud_requests += 1;
+        self.cost.comm_s += arrive - self.edge_t;
+        let mut busy = self.cost_model.sample_full_prefill(&mut self.rng);
+        for _ in 1..tr.steps.len() {
+            busy += self.cost_model.sample_full_decode(&mut self.rng);
+        }
+        self.counters.tokens_generated += tr.steps.len();
+        self.counters.tokens_cloud += tr.steps.len();
+        Some(CloudCall {
+            client: self.id,
+            arrive_s: arrive,
+            ready_s: arrive,
+            busy_s: busy,
+            resp_bytes: UPLOAD_HDR + tr.tokens.len(),
+        })
+    }
+
+    // --- naïve split baseline ----------------------------------------------
+    fn advance_naive(&mut self) -> Option<CloudCall> {
+        loop {
+            if self.req_idx >= self.traces.len() {
+                self.finish();
+                return None;
+            }
+            let tr = &self.traces[self.req_idx];
+            if self.step_idx >= tr.steps.len() {
+                self.req_idx += 1;
+                self.step_idx = 0;
+                continue;
+            }
+            let pos = tr.steps[self.step_idx].pos;
+            let first = self.step_idx == 0;
+            if first {
+                // edge runs only layers 0..l_ee1 over the prompt
+                let share = self.cost_model.seg1.mean_s
+                    / (self.cost_model.seg1.mean_s + self.cost_model.seg2.mean_s).max(1e-12);
+                let d = self.cost_model.sample_edge_prefill(&mut self.rng) * share;
+                self.edge_t += d;
+                self.cost.edge_s += d;
+            } else {
+                let d = self.cost_model.sample_seg1(&mut self.rng);
+                self.edge_t += d;
+                self.cost.edge_s += d;
+            }
+            // synchronous re-upload of the ENTIRE fp32 history (no content
+            // manager, Fig 1b)
+            let bytes = UPLOAD_HDR + (pos + 1) * self.d_model * 4;
+            let arrived = self.uplink.transfer(self.edge_t, bytes);
+            self.counters.bytes_up += bytes as u64;
+            self.cost.comm_s += arrived - self.edge_t;
+            self.edge_t = arrived;
+            // request rides behind the upload
+            let req_arrive = self.uplink.transfer(self.edge_t, REQ_BYTES);
+            self.counters.bytes_up += REQ_BYTES as u64;
+            self.cost.comm_s += req_arrive - self.edge_t;
+            self.counters.cloud_requests += 1;
+            self.counters.tokens_cloud += 1;
+            self.counters.tokens_generated += 1;
+            let mut busy = self.cost_model.sample_cloud_decode(&mut self.rng);
+            if first {
+                busy = self.cost_model.sample_cloud_prefill(&mut self.rng);
+            }
+            return Some(CloudCall {
+                client: self.id,
+                arrive_s: req_arrive,
+                ready_s: req_arrive,
+                busy_s: busy,
+                resp_bytes: RESP_BYTES,
+            });
+        }
+    }
+
+    // --- CE-CoLLM ------------------------------------------------------------
+    fn advance_ce(&mut self) -> Option<CloudCall> {
+        let flags = self.flags();
+        loop {
+            if self.req_idx >= self.traces.len() {
+                self.finish();
+                return None;
+            }
+            let tr = &self.traces[self.req_idx];
+            if self.step_idx >= tr.steps.len() {
+                self.req_idx += 1;
+                self.step_idx = 0;
+                continue;
+            }
+
+            if self.step_idx == 0 {
+                // prefill + parallel prompt upload
+                let d = self.cost_model.sample_edge_prefill(&mut self.rng);
+                self.edge_t += d;
+                self.cost.edge_s += d;
+                self.upload_ready = 0.0;
+                if flags.parallel_upload && flags.content_manager {
+                    let bytes = self.hidden_bytes(tr.prompt_len);
+                    self.upload_ready = self.uplink.transfer(self.edge_t, bytes);
+                    self.counters.bytes_up += bytes as u64;
+                }
+            }
+
+            let step = &tr.steps[self.step_idx];
+            if self.step_idx > 0 {
+                let d = self.cost_model.sample_seg1(&mut self.rng);
+                self.edge_t += d;
+                self.cost.edge_s += d;
+                if flags.parallel_upload && flags.content_manager {
+                    let bytes = self.hidden_bytes(1);
+                    self.upload_ready = self.uplink.transfer(self.edge_t, bytes);
+                    self.counters.bytes_up += bytes as u64;
+                }
+                if step.conf2.is_some() {
+                    let d = self.cost_model.sample_seg2(&mut self.rng);
+                    self.edge_t += d;
+                    self.cost.edge_s += d;
+                }
+            }
+
+            self.counters.tokens_generated += 1;
+            match step.exit {
+                ExitPoint::Exit1 => {
+                    self.counters.tokens_exit1 += 1;
+                    self.step_idx += 1;
+                    continue;
+                }
+                ExitPoint::Exit2 => {
+                    self.counters.tokens_exit2 += 1;
+                    self.step_idx += 1;
+                    continue;
+                }
+                ExitPoint::Cloud => {
+                    self.counters.tokens_cloud += 1;
+                    self.counters.cloud_requests += 1;
+                    let mut ready = self.upload_ready;
+                    if !flags.content_manager {
+                        // synchronous full-history retransmission
+                        let bytes = self.hidden_bytes(step.pos + 1);
+                        let arrived = self.uplink.transfer(self.edge_t, bytes);
+                        self.counters.bytes_up += bytes as u64;
+                        self.cost.comm_s += arrived - self.edge_t;
+                        self.edge_t = arrived;
+                        ready = arrived;
+                    } else if !flags.parallel_upload {
+                        // synchronous upload of positions since last request
+                        let mut unsent = step.cloud_catchup
+                            + if step.cloud_prefill { tr.prompt_len } else { 0 };
+                        if unsent == 0 {
+                            unsent = 1;
+                        }
+                        let bytes = self.hidden_bytes(unsent);
+                        let arrived = self.uplink.transfer(self.edge_t, bytes);
+                        self.counters.bytes_up += bytes as u64;
+                        self.cost.comm_s += arrived - self.edge_t;
+                        self.edge_t = arrived;
+                        ready = arrived;
+                    }
+                    let req_arrive = self.uplink.transfer(self.edge_t, REQ_BYTES);
+                    self.counters.bytes_up += REQ_BYTES as u64;
+                    self.cost.comm_s += req_arrive - self.edge_t;
+                    // waiting for a still-in-flight upload is comm time
+                    self.cost.comm_s += (ready - req_arrive).max(0.0);
+
+                    let mut busy = 0.0;
+                    if step.cloud_prefill {
+                        busy += self.cost_model.sample_cloud_prefill(&mut self.rng);
+                        if step.cloud_catchup > 0 {
+                            busy += self
+                                .cost_model
+                                .sample_cloud_request(step.cloud_catchup, &mut self.rng);
+                        }
+                    } else {
+                        // batched catch-up (paper: one forward over all
+                        // pending positions; cloud time ∝ request count)
+                        busy += self
+                            .cost_model
+                            .sample_cloud_request(step.cloud_catchup.max(1), &mut self.rng);
+                    }
+                    return Some(CloudCall {
+                        client: self.id,
+                        arrive_s: req_arrive,
+                        ready_s: ready.max(req_arrive),
+                        busy_s: busy,
+                        resp_bytes: RESP_BYTES,
+                    });
+                }
+            }
+        }
+    }
+
+    /// Scheduler callback: the cloud answered at `resp_start` after
+    /// `busy_s` of compute; response transfer completes the round trip.
+    fn resume(&mut self, cloud_done: f64, busy_s: f64, resp_bytes: usize) {
+        let resp_arrive = self.downlink.transfer(cloud_done, resp_bytes);
+        self.counters.bytes_down += resp_bytes as u64;
+        self.cost.cloud_s += busy_s;
+        self.cost.comm_s += resp_arrive - cloud_done;
+        self.edge_t = resp_arrive.max(self.edge_t);
+        self.step_idx += 1;
+        if matches!(self.strategy, Strategy::CloudOnly) {
+            // one call covered the whole request
+            self.req_idx += 1;
+            self.step_idx = 0;
+        }
+    }
+
+    fn finish(&mut self) {
+        self.cost.total_s = self.edge_t;
+        self.done = true;
+    }
+}
+
+/// Replay `traces_per_client` under `cfg`.  One shared cloud GPU, FCFS.
+pub fn simulate(
+    traces_per_client: &[Vec<Trace>],
+    dims: &ModelDims,
+    cost_model: &CostModel,
+    cfg: &SimConfig,
+) -> SimOutcome {
+    let mut clients: Vec<ClientSim> = traces_per_client
+        .iter()
+        .enumerate()
+        .map(|(i, t)| ClientSim::new(i, t, cfg.strategy, dims, cost_model, cfg.link, cfg.seed))
+        .collect();
+
+    let mut heap: BinaryHeap<HeapEntry> = BinaryHeap::new();
+    let mut pending: Vec<Option<CloudCall>> = Vec::with_capacity(clients.len());
+    for c in clients.iter_mut() {
+        let call = c.advance();
+        if let Some(call) = call {
+            heap.push(HeapEntry { arrive_s: call.arrive_s, client: call.client });
+            pending.push(Some(call));
+        } else {
+            pending.push(None);
+        }
+    }
+
+    let mut cloud_free = 0.0f64;
+    let mut cloud_busy_total = 0.0f64;
+    while let Some(entry) = heap.pop() {
+        let call = pending[entry.client].take().expect("pending call");
+        let start = cloud_free.max(call.arrive_s).max(call.ready_s);
+        let done = start + call.busy_s;
+        cloud_free = done;
+        cloud_busy_total += call.busy_s;
+        let c = &mut clients[call.client];
+        c.resume(done, call.busy_s, call.resp_bytes);
+        if let Some(next) = c.advance() {
+            heap.push(HeapEntry { arrive_s: next.arrive_s, client: next.client });
+            pending[call.client] = Some(next);
+        }
+    }
+
+    let mut out =
+        SimOutcome { clients: Vec::with_capacity(clients.len()), makespan_s: 0.0, cloud_busy_s: cloud_busy_total };
+    for c in clients {
+        debug_assert!(c.done);
+        out.makespan_s = out.makespan_s.max(c.cost.total_s);
+        out.clients.push(ClientResult { cost: c.cost, counters: c.counters });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::policy::ExitPoint;
+    use crate::harness::trace::TraceStep;
+    use crate::model::manifest::test_manifest;
+
+    /// Build a synthetic trace: exits chosen by a repeating pattern.
+    /// Catch-up counts follow the content-manager semantics: the first
+    /// cloud request prefills the prompt and decodes positions
+    /// `prompt_len ..= pos`; later requests decode everything since the
+    /// previous request.
+    fn mk_trace(prompt_len: usize, pattern: &[ExitPoint]) -> Trace {
+        let mut steps = Vec::new();
+        let mut prefilled = false;
+        let mut consumed_upto = prompt_len; // cm.consumed_upto after prefill
+        for (i, &exit) in pattern.iter().enumerate() {
+            let pos = prompt_len - 1 + i;
+            let (catchup, cp) = if exit == ExitPoint::Cloud {
+                let did_prefill = !prefilled;
+                prefilled = true;
+                let catch = (pos + 1).saturating_sub(consumed_upto);
+                consumed_upto = pos + 1;
+                (catch, did_prefill)
+            } else {
+                (0, false)
+            };
+            steps.push(TraceStep {
+                pos,
+                token: 97,
+                exit,
+                conf1: 0.5,
+                conf2: if exit == ExitPoint::Exit1 { None } else { Some(0.6) },
+                tok1: 97,
+                tok2: if exit == ExitPoint::Exit1 { None } else { Some(97) },
+                cloud_conf: if exit == ExitPoint::Cloud { Some(0.9) } else { None },
+                cloud_catchup: catchup,
+                cloud_prefill: cp,
+            });
+        }
+        Trace {
+            prompt_len,
+            tokens: vec![97; pattern.len()],
+            text: "a".repeat(pattern.len()),
+            steps,
+        }
+    }
+
+    fn dims() -> crate::model::manifest::ModelDims {
+        test_manifest().model
+    }
+
+    fn cost() -> CostModel {
+        CostModel::synthetic(&dims())
+    }
+
+    fn cfg(strategy: Strategy) -> SimConfig {
+        SimConfig { strategy, link: LinkProfile::wifi(), seed: 7 }
+    }
+
+    use ExitPoint::*;
+
+    #[test]
+    fn standalone_has_no_cloud_or_comm() {
+        let traces = vec![vec![mk_trace(10, &[Exit1, Exit2, Exit1, Exit2])]];
+        let out = simulate(&traces, &dims(), &cost(), &cfg(Strategy::Standalone));
+        let (c, k) = out.summed();
+        assert_eq!(c.cloud_s, 0.0);
+        assert_eq!(c.comm_s, 0.0);
+        assert!(c.edge_s > 0.0);
+        assert_eq!(k.tokens_cloud, 0);
+        assert_eq!(k.transmitted_mb(), 0.0);
+    }
+
+    #[test]
+    fn ce_collm_cheaper_than_cloud_only_and_naive() {
+        // the paper's headline shape at θ=0.8-ish exit rates
+        let pattern = [Cloud, Exit1, Exit2, Exit1, Cloud, Exit1, Exit2, Exit1];
+        let traces = vec![vec![mk_trace(20, &pattern); 5]];
+        let ce = simulate(&traces, &dims(), &cost(), &cfg(Strategy::CeCollm(AblationFlags::default())));
+        let cl = simulate(&traces, &dims(), &cost(), &cfg(Strategy::CloudOnly));
+        let nv = simulate(&traces, &dims(), &cost(), &cfg(Strategy::NaiveSplit));
+        let (ce_c, ce_k) = ce.summed();
+        let (cl_c, _) = cl.summed();
+        let (nv_c, nv_k) = nv.summed();
+        // naive is dominated by comm and much slower than everything
+        assert!(nv_c.total_s > 2.0 * cl_c.total_s, "naive {} vs cloud {}", nv_c.total_s, cl_c.total_s);
+        assert!(nv_c.comm_s > nv_c.cloud_s);
+        // CE-CoLLM reduces cloud compute vs cloud-only
+        assert!(ce_c.cloud_s < 0.6 * cl_c.cloud_s);
+        // and transmits far less than naive
+        assert!(nv_k.bytes_up > 10 * ce_k.bytes_up);
+    }
+
+    #[test]
+    fn without_cm_explodes_comm() {
+        // serialization-dominated regime (the paper's): long prompt, many
+        // cloud round trips, paper-scaled bandwidth
+        let pattern = [Cloud, Exit1, Cloud, Exit1, Cloud, Exit2, Cloud, Exit1,
+                       Cloud, Exit1, Cloud, Exit2, Cloud, Exit1, Cloud, Exit1];
+        let traces = vec![vec![mk_trace(150, &pattern); 3]];
+        let link = LinkProfile::paper_scaled();
+        let scfg = |s| SimConfig { strategy: s, link, seed: 7 };
+        let full = simulate(&traces, &dims(), &cost(),
+                            &scfg(Strategy::CeCollm(AblationFlags::default())));
+        let nocm = simulate(&traces, &dims(), &cost(),
+                            &scfg(Strategy::CeCollm(AblationFlags::without_cm_and_parallel_upload())));
+        let (f, fk) = full.summed();
+        let (n, nk) = nocm.summed();
+        assert!(n.comm_s > 3.0 * f.comm_s, "no-CM comm {} vs {}", n.comm_s, f.comm_s);
+        assert!(nk.bytes_up > 3 * fk.bytes_up);
+        // cloud compute is unchanged (manager dedups, KV retained)
+        assert!((n.cloud_s - f.cloud_s).abs() / f.cloud_s < 0.2);
+    }
+
+    #[test]
+    fn fp32_transmits_twice_the_hidden_bytes() {
+        let pattern = [Cloud, Exit1, Exit2, Cloud];
+        let traces = vec![vec![mk_trace(10, &pattern)]];
+        let f16 = simulate(&traces, &dims(), &cost(),
+                           &cfg(Strategy::CeCollm(AblationFlags::default())));
+        let f32_ = simulate(&traces, &dims(), &cost(),
+                            &cfg(Strategy::CeCollm(AblationFlags::without_half_precision())));
+        let up16 = f16.summed().1.bytes_up;
+        let up32 = f32_.summed().1.bytes_up;
+        assert!(up32 > up16 && up32 < 2 * up16 + 2000, "{up16} vs {up32}");
+    }
+
+    #[test]
+    fn multi_client_scaling_shapes() {
+        // cloud-only: total grows ~linearly with clients (GPU saturates);
+        // CE-CoLLM: edge time per client constant, total grows slower
+        let pattern = [Cloud, Exit1, Exit2, Exit1, Exit1, Exit2, Exit1, Exit1];
+        let one: Vec<Vec<Trace>> = vec![vec![mk_trace(20, &pattern); 4]];
+        let five: Vec<Vec<Trace>> = (0..5).map(|_| vec![mk_trace(20, &pattern); 4]).collect();
+
+        let c1 = simulate(&one, &dims(), &cost(), &cfg(Strategy::CloudOnly)).makespan_s;
+        let c5 = simulate(&five, &dims(), &cost(), &cfg(Strategy::CloudOnly)).makespan_s;
+        assert!(c5 > 3.5 * c1, "cloud-only should saturate: {c1} -> {c5}");
+
+        let e1 = simulate(&one, &dims(), &cost(),
+                          &cfg(Strategy::CeCollm(AblationFlags::default())));
+        let e5 = simulate(&five, &dims(), &cost(),
+                          &cfg(Strategy::CeCollm(AblationFlags::default())));
+        // per-client edge compute identical across scales
+        let edge1 = e1.clients[0].cost.edge_s;
+        for c in &e5.clients {
+            assert!((c.cost.edge_s - edge1).abs() / edge1 < 0.2);
+        }
+        assert!(e5.makespan_s < c5, "CE-CoLLM scales better than cloud-only");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let traces = vec![vec![mk_trace(12, &[Cloud, Exit1, Exit2, Cloud])]];
+        let a = simulate(&traces, &dims(), &cost(), &cfg(Strategy::CeCollm(AblationFlags::default())));
+        let b = simulate(&traces, &dims(), &cost(), &cfg(Strategy::CeCollm(AblationFlags::default())));
+        assert_eq!(a.summed().0, b.summed().0);
+    }
+
+    #[test]
+    fn naive_bytes_grow_quadratically() {
+        let short = vec![vec![mk_trace(10, &[Cloud; 5])]];
+        let long = vec![vec![mk_trace(10, &[Cloud; 50])]];
+        let bs = simulate(&short, &dims(), &cost(), &cfg(Strategy::NaiveSplit)).summed().1.bytes_up;
+        let bl = simulate(&long, &dims(), &cost(), &cfg(Strategy::NaiveSplit)).summed().1.bytes_up;
+        // 10x the tokens must cost far more than 10x the bytes (O(T^2))
+        assert!(bl > 2 * 10 * bs, "{bs} -> {bl}");
+    }
+}

@@ -1,0 +1,13 @@
+//! Experiment harnesses regenerating the paper's tables and figures.
+//!
+//! Pipeline (DESIGN.md §5): real engines record per-prompt [`trace`]s and
+//! measured call timings; [`cost`] summarizes timings into a calibrated
+//! cost model; [`des`] replays traces under each deployment strategy over
+//! a WAN model; [`tables`] renders the paper's rows; [`runner`] wires it
+//! all together behind the `ce-collm` CLI.
+
+pub mod cost;
+pub mod des;
+pub mod runner;
+pub mod tables;
+pub mod trace;

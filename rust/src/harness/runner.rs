@@ -1,0 +1,214 @@
+//! Orchestration: prompt sets → recorded traces → calibrated cost model.
+//!
+//! Generic over the engine traits so the full pipeline runs against mock
+//! engines in tests and against the PJRT stack from the CLI/examples.
+
+use anyhow::Result;
+
+use crate::config::ExitPolicy;
+use crate::eval::datasets::{self, Dataset, PromptSet};
+use crate::harness::cost::CostModel;
+use crate::harness::trace::{record, CallTimings, Trace};
+use crate::quant::Precision;
+use crate::runtime::traits::{CloudEngine, EdgeEngine};
+
+/// Experiment-wide knobs (defaults sized for the 1-core CI testbed; the
+/// paper-scale run uses `--prompts 100 --repeats 5`).
+#[derive(Debug, Clone, Copy)]
+pub struct ExperimentConfig {
+    pub n_prompts: usize,
+    pub repeats: usize,
+    pub max_new_tokens: usize,
+    pub seed: u64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self { n_prompts: 25, repeats: 5, max_new_tokens: 96, seed: 42 }
+    }
+}
+
+/// Traces for one dataset across the policies Table 2 needs, plus the
+/// per-dataset calibrated cost model (prefill costs differ by bucket:
+/// short Alpaca prompts use the P=64 artifacts, XSum the P=256 ones).
+pub struct PolicyTraces {
+    pub dataset: Dataset,
+    pub standalone: Vec<Trace>,
+    pub t08: Vec<Trace>,
+    pub t09: Vec<Trace>,
+    pub t10: Vec<Trace>,
+    pub cost: CostModel,
+}
+
+impl PolicyTraces {
+    pub fn for_policy(&self, key: PolicyKey) -> &[Trace] {
+        match key {
+            PolicyKey::Standalone => &self.standalone,
+            PolicyKey::T08 => &self.t08,
+            PolicyKey::T09 => &self.t09,
+            PolicyKey::T10 => &self.t10,
+        }
+    }
+
+    /// Reference text per prompt = the cloud deployment's output (θ=1.0
+    /// runs the full model for every token).
+    pub fn reference_texts(&self) -> Vec<&str> {
+        self.t10.iter().map(|t| t.text.as_str()).collect()
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKey {
+    Standalone,
+    T08,
+    T09,
+    T10,
+}
+
+impl PolicyKey {
+    pub fn policy(self) -> ExitPolicy {
+        match self {
+            PolicyKey::Standalone => ExitPolicy::Standalone { threshold: 0.8 },
+            PolicyKey::T08 => ExitPolicy::Threshold(0.8),
+            PolicyKey::T09 => ExitPolicy::Threshold(0.9),
+            PolicyKey::T10 => ExitPolicy::Threshold(1.0),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            PolicyKey::Standalone => "CE-CoLLM (standalone)",
+            PolicyKey::T08 => "CE-CoLLM (threshold=0.8)",
+            PolicyKey::T09 => "CE-CoLLM (threshold=0.9)",
+            PolicyKey::T10 => "CE-CoLLM (threshold=1.0)",
+        }
+    }
+}
+
+/// Record traces for a whole prompt set under one policy/precision.
+pub fn record_set(
+    edge: &mut dyn EdgeEngine,
+    cloud: &mut dyn CloudEngine,
+    set: &PromptSet,
+    policy: ExitPolicy,
+    precision: Precision,
+    max_new_tokens: usize,
+    timings: &mut CallTimings,
+) -> Result<Vec<Trace>> {
+    let mut out = Vec::with_capacity(set.cases.len());
+    for case in &set.cases {
+        out.push(record(edge, cloud, policy, precision, &case.prompt, max_new_tokens, timings)?);
+    }
+    Ok(out)
+}
+
+/// Record the four policy variants Table 2 compares, for one dataset.
+pub fn record_policy_traces(
+    edge: &mut dyn EdgeEngine,
+    cloud: &mut dyn CloudEngine,
+    dataset: Dataset,
+    cfg: &ExperimentConfig,
+    timings: &mut CallTimings,
+) -> Result<PolicyTraces> {
+    let set = datasets::generate(dataset, cfg.n_prompts, cfg.seed);
+    let rec = |edge: &mut dyn EdgeEngine,
+               cloud: &mut dyn CloudEngine,
+               key: PolicyKey,
+               timings: &mut CallTimings|
+     -> Result<Vec<Trace>> {
+        record_set(edge, cloud, &set, key.policy(), Precision::F16, cfg.max_new_tokens, timings)
+    };
+    let mut own = CallTimings::default();
+    let pt = PolicyTraces {
+        dataset,
+        standalone: rec(edge, cloud, PolicyKey::Standalone, &mut own)?,
+        t08: rec(edge, cloud, PolicyKey::T08, &mut own)?,
+        t09: rec(edge, cloud, PolicyKey::T09, &mut own)?,
+        t10: rec(edge, cloud, PolicyKey::T10, &mut own)?,
+        cost: CostModel::from_timings_with_prompt(&own, edge.dims().max_prompt),
+    };
+    timings.merge(&own);
+    Ok(pt)
+}
+
+/// Record traces + calibrate the cost model for the Table 2/4 + Fig 4
+/// experiments (Alpaca-like and XSum-like sets).
+pub struct Recorded {
+    pub alpaca: PolicyTraces,
+    pub xsum: PolicyTraces,
+    pub cost: CostModel,
+    pub timings: CallTimings,
+}
+
+pub fn record_main_experiments(
+    edge: &mut dyn EdgeEngine,
+    cloud: &mut dyn CloudEngine,
+    cfg: &ExperimentConfig,
+) -> Result<Recorded> {
+    let mut timings = CallTimings::default();
+    let alpaca = record_policy_traces(edge, cloud, Dataset::Alpaca, cfg, &mut timings)?;
+    let xsum = record_policy_traces(edge, cloud, Dataset::Xsum, cfg, &mut timings)?;
+    let cost = CostModel::from_timings_with_prompt(&timings, edge.dims().max_prompt);
+    Ok(Recorded { alpaca, xsum, cost, timings })
+}
+
+/// Mean ROUGE-L of each trace's text against the θ=1.0 reference.
+pub fn rouge_vs_reference(traces: &[Trace], refs: &[&str]) -> f64 {
+    if traces.is_empty() {
+        return 0.0;
+    }
+    let sum: f64 = traces
+        .iter()
+        .zip(refs)
+        .map(|(t, r)| crate::eval::rouge::rouge_l(&t.text, r))
+        .sum();
+    sum / traces.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::test_manifest;
+    use crate::runtime::mock::{MockCloud, MockEdge, MockOracle};
+
+    fn pair(seed: u64) -> (MockEdge, MockCloud) {
+        let dims = test_manifest().model;
+        let o = MockOracle::new(seed);
+        (MockEdge::new(o, dims.clone()), MockCloud::new(o, dims))
+    }
+
+    #[test]
+    fn record_policy_traces_end_to_end() {
+        let (mut e, mut c) = pair(11);
+        let cfg = ExperimentConfig { n_prompts: 4, repeats: 2, max_new_tokens: 12, seed: 1 };
+        let mut t = CallTimings::default();
+        let pt = record_policy_traces(&mut e, &mut c, Dataset::Alpaca, &cfg, &mut t).unwrap();
+        assert_eq!(pt.standalone.len(), 4);
+        assert_eq!(pt.t10.len(), 4);
+        // θ=1.0 routes everything to the cloud
+        for tr in &pt.t10 {
+            assert!(tr.cloud_rate() > 0.999);
+        }
+        // standalone never does
+        for tr in &pt.standalone {
+            assert_eq!(tr.cloud_rate(), 0.0);
+        }
+        // monotone: lower θ -> no more cloud tokens than higher θ
+        let rate = |ts: &[Trace]| {
+            ts.iter().map(|t| t.cloud_rate()).sum::<f64>() / ts.len() as f64
+        };
+        assert!(rate(&pt.t08) <= rate(&pt.t09) + 1e-9);
+        assert!(rate(&pt.t09) <= rate(&pt.t10) + 1e-9);
+    }
+
+    #[test]
+    fn rouge_reference_is_identity_for_t10() {
+        let (mut e, mut c) = pair(5);
+        let cfg = ExperimentConfig { n_prompts: 3, repeats: 1, max_new_tokens: 10, seed: 2 };
+        let mut t = CallTimings::default();
+        let pt = record_policy_traces(&mut e, &mut c, Dataset::Alpaca, &cfg, &mut t).unwrap();
+        let refs = pt.reference_texts();
+        let r = rouge_vs_reference(&pt.t10, &refs);
+        assert!((r - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,436 @@
+//! Drivers that regenerate every table and figure of the paper's
+//! evaluation section (see DESIGN.md §5 for the experiment index).
+
+use anyhow::Result;
+
+use crate::config::AblationFlags;
+use crate::eval::datasets::{self, Dataset};
+use crate::eval::{exact_match, rouge_l};
+use crate::harness::cost::CostModel;
+use crate::harness::des::{simulate, SimConfig, Strategy};
+use crate::harness::runner::{
+    record_set, rouge_vs_reference, ExperimentConfig, PolicyKey, PolicyTraces, Recorded,
+};
+use crate::harness::trace::{record, CallTimings, Trace};
+use crate::metrics::{Aggregate, Table};
+use crate::model::manifest::ModelDims;
+use crate::net::profiles::LinkProfile;
+use crate::quant::Precision;
+use crate::runtime::traits::{CloudEngine, EdgeEngine};
+
+fn aggregate_strategy(
+    traces: &[Trace],
+    dims: &ModelDims,
+    cost: &CostModel,
+    link: LinkProfile,
+    strategy: Strategy,
+    repeats: usize,
+    seed: u64,
+) -> Aggregate {
+    let mut agg = Aggregate::default();
+    let per_client = vec![traces.to_vec()];
+    for r in 0..repeats.max(1) {
+        let cfg = SimConfig { strategy, link, seed: seed ^ (r as u64) << 17 };
+        let out = simulate(&per_client, dims, cost, &cfg);
+        let (c, k) = out.summed();
+        agg.push(&c, &k, None);
+    }
+    agg
+}
+
+/// Table 2: cost & performance across deployment strategies, one block
+/// per dataset (Alpaca-like, XSum-like).
+pub fn table2(rec: &Recorded, dims: &ModelDims, link: LinkProfile, cfg: &ExperimentConfig) -> String {
+    let mut t = Table::new(&[
+        "Dataset",
+        "Deployment Strategy",
+        "Total Time Cost (s)",
+        "Edge Time Cost (s)",
+        "Cloud Time Cost (s)",
+        "Comm Time Cost (s)",
+        "Request Cloud Rate (%)",
+        "Transmitted (MB)",
+        "Rouge-L",
+    ]);
+    for pt in [&rec.alpaca, &rec.xsum] {
+        table2_block(&mut t, pt, dims, &pt.cost, link, cfg);
+    }
+    t.render()
+}
+
+fn table2_block(
+    t: &mut Table,
+    pt: &PolicyTraces,
+    dims: &ModelDims,
+    cost: &CostModel,
+    link: LinkProfile,
+    cfg: &ExperimentConfig,
+) {
+    let refs = pt.reference_texts();
+    let ds = pt.dataset.name();
+    let mut push = |label: &str, agg: Aggregate, rouge: Option<f64>| {
+        t.row(vec![
+            ds.to_string(),
+            label.to_string(),
+            agg.total_s.fmt_pm(3),
+            agg.edge_s.fmt_pm(3),
+            agg.cloud_s.fmt_pm(3),
+            agg.comm_s.fmt_pm(3),
+            if label.contains("Cloud-based") {
+                "N/A".into()
+            } else {
+                format!("{:.2}", agg.request_rate.mean())
+            },
+            if label.contains("Cloud-based") {
+                "N/A".into()
+            } else {
+                format!("{:.2}", agg.transmitted_mb.mean())
+            },
+            rouge.map(|r| format!("{r:.4}")).unwrap_or_else(|| "N/A".into()),
+        ]);
+    };
+
+    let run = |traces: &[Trace], strategy: Strategy| {
+        aggregate_strategy(traces, dims, cost, link, strategy, cfg.repeats, cfg.seed)
+    };
+
+    push("Cloud-based LLM Deployment", run(&pt.t10, Strategy::CloudOnly), None);
+    push("Naive Cloud-Edge Deployment", run(&pt.t10, Strategy::NaiveSplit), Some(1.0));
+    push(
+        "CE-CoLLM (standalone)",
+        run(&pt.standalone, Strategy::Standalone),
+        Some(rouge_vs_reference(&pt.standalone, &refs)),
+    );
+    for key in [PolicyKey::T08, PolicyKey::T09, PolicyKey::T10] {
+        let traces = pt.for_policy(key);
+        push(
+            key.label(),
+            run(traces, Strategy::CeCollm(AblationFlags::default())),
+            Some(rouge_vs_reference(traces, &refs)),
+        );
+    }
+}
+
+/// Table 4: ablation at θ=0.8 (−fp16, −early-exit, −content-manager &
+/// parallel upload) for both datasets.
+pub fn table4(rec: &Recorded, dims: &ModelDims, link: LinkProfile, cfg: &ExperimentConfig) -> String {
+    let mut t = Table::new(&[
+        "Dataset",
+        "Condition",
+        "Total Time Cost (s)",
+        "Edge Time Cost (s)",
+        "Cloud Time Cost (s)",
+        "Comm Time Cost (s)",
+        "Relative Total Cost (%)",
+    ]);
+    for pt in [&rec.alpaca, &rec.xsum] {
+        let ds = pt.dataset.name();
+        let run = |traces: &[Trace], flags: AblationFlags| {
+            aggregate_strategy(
+                traces,
+                dims,
+                &pt.cost,
+                link,
+                Strategy::CeCollm(flags),
+                cfg.repeats,
+                cfg.seed,
+            )
+        };
+        let base = run(&pt.t08, AblationFlags::default());
+        let base_total = base.total_s.mean();
+        let rows: Vec<(&str, Aggregate)> = vec![
+            ("Our Proposal Method (Threshold=0.8)", base),
+            ("Without Half Precision Transmission", run(&pt.t08, AblationFlags::without_half_precision())),
+            // −EE: every token goes to the cloud == replaying the θ=1.0 trace
+            ("Without Early Exit Mechanism", run(&pt.t10, AblationFlags::without_early_exit())),
+            (
+                "Without Content Manager & Parallel Upload",
+                run(&pt.t08, AblationFlags::without_cm_and_parallel_upload()),
+            ),
+        ];
+        for (label, agg) in rows {
+            let rel = 100.0 * agg.total_s.mean() / base_total.max(1e-12);
+            t.row(vec![
+                ds.to_string(),
+                label.to_string(),
+                agg.total_s.fmt_pm(3),
+                agg.edge_s.fmt_pm(3),
+                agg.cloud_s.fmt_pm(3),
+                agg.comm_s.fmt_pm(3),
+                format!("{rel:.2}"),
+            ]);
+        }
+    }
+    t.render()
+}
+
+/// Figure 4 (a)(b): edge/comm/cloud time vs number of edge devices for
+/// θ ∈ {0.8, 0.9}, with the cloud-based total as the baseline series;
+/// (c): request-cloud rate and transmitted MB, CE-CoLLM vs naïve.
+pub fn fig4(
+    rec: &Recorded,
+    dims: &ModelDims,
+    link: LinkProfile,
+    cfg: &ExperimentConfig,
+    max_clients: usize,
+) -> String {
+    let mut out = String::new();
+    for pt in [&rec.alpaca, &rec.xsum] {
+        out.push_str(&format!("Figure 4 — {} dataset\n", pt.dataset.name()));
+        let mut t = Table::new(&[
+            "Clients",
+            "Strategy",
+            "Makespan (s)",
+            "Edge (s, per client)",
+            "Cloud (s, total)",
+            "Comm (s, total)",
+        ]);
+        for n in 1..=max_clients {
+            for (label, traces, strategy) in [
+                ("CE-CoLLM θ=0.8", &pt.t08, Strategy::CeCollm(AblationFlags::default())),
+                ("CE-CoLLM θ=0.9", &pt.t09, Strategy::CeCollm(AblationFlags::default())),
+                ("Cloud-based", &pt.t10, Strategy::CloudOnly),
+            ] {
+                let per_client: Vec<Vec<Trace>> = (0..n).map(|_| traces.to_vec()).collect();
+                let mut makespan = crate::metrics::MeanStd::default();
+                let mut edge = crate::metrics::MeanStd::default();
+                let mut cloud = crate::metrics::MeanStd::default();
+                let mut comm = crate::metrics::MeanStd::default();
+                for r in 0..cfg.repeats.max(1) {
+                    let sim = SimConfig { strategy, link, seed: cfg.seed ^ (r as u64) << 9 };
+                    let o = simulate(&per_client, dims, &pt.cost, &sim);
+                    let (c, _) = o.summed();
+                    makespan.push(o.makespan_s);
+                    edge.push(c.edge_s / n as f64);
+                    cloud.push(c.cloud_s);
+                    comm.push(c.comm_s);
+                }
+                t.row(vec![
+                    n.to_string(),
+                    label.to_string(),
+                    makespan.fmt_pm(3),
+                    edge.fmt_pm(3),
+                    cloud.fmt_pm(3),
+                    comm.fmt_pm(3),
+                ]);
+            }
+        }
+        out.push_str(&t.render());
+        out.push_str("\n\n");
+    }
+
+    // (c) request rate + transmitted data, single client
+    out.push_str("Figure 4(c) — request cloud rate & transmitted data\n");
+    let mut t = Table::new(&["Dataset", "Strategy", "Request Cloud Rate (%)", "Transmitted (MB)"]);
+    for pt in [&rec.alpaca, &rec.xsum] {
+        for (label, traces, strategy) in [
+            ("CE-CoLLM θ=0.8", &pt.t08, Strategy::CeCollm(AblationFlags::default())),
+            ("CE-CoLLM θ=0.9", &pt.t09, Strategy::CeCollm(AblationFlags::default())),
+            ("Naive Cloud-Edge", &pt.t10, Strategy::NaiveSplit),
+        ] {
+            let sim = SimConfig { strategy, link, seed: cfg.seed };
+            let o = simulate(&[traces.to_vec()], dims, &pt.cost, &sim);
+            let (_, k) = o.summed();
+            t.row(vec![
+                pt.dataset.name().to_string(),
+                label.to_string(),
+                format!("{:.2}", k.request_cloud_rate() * 100.0),
+                format!("{:.2}", k.transmitted_mb()),
+            ]);
+        }
+    }
+    out.push_str(&t.render());
+    out.push('\n');
+    out
+}
+
+/// Table 3: EM / ROUGE-L across thresholds × transmission precision on
+/// TruthfulQA / XSum / CNN-DailyMail-like sets, vs the cloud (fp32) row.
+pub fn table3(
+    edge: &mut dyn EdgeEngine,
+    cloud: &mut dyn CloudEngine,
+    cfg: &ExperimentConfig,
+) -> Result<String> {
+    let sets = [
+        (Dataset::TruthfulQa, "TruthfulQA"),
+        (Dataset::Xsum, "XSum"),
+        (Dataset::CnnDailyMail, "CNN/Daily Mail"),
+    ];
+    // rows: (label, policy key or cloud, precision)
+    let mut rows: Vec<(String, Option<PolicyKey>, Precision)> = Vec::new();
+    for key in [PolicyKey::T08, PolicyKey::T09, PolicyKey::T10] {
+        for (p, pn) in [(Precision::F32, "float32"), (Precision::F16, "float16")] {
+            let theta = match key {
+                PolicyKey::T08 => "0.8",
+                PolicyKey::T09 => "0.9",
+                _ => "1.0",
+            };
+            rows.push((format!("CE-CoLLM (threshold={theta}, {pn})"), Some(key), p));
+        }
+    }
+    rows.push(("Cloud-based LLM (float32)".into(), None, Precision::F32));
+
+    let mut table = Table::new(&["Condition", "TruthfulQA", "XSum", "CNN/Daily Mail"]);
+    let mut cells: Vec<Vec<String>> = vec![vec![]; rows.len()];
+    let mut timings = CallTimings::default();
+
+    for (ds, _name) in sets {
+        let set = datasets::generate(ds, cfg.n_prompts, cfg.seed ^ 0x73);
+        for (i, (_, key, precision)) in rows.iter().enumerate() {
+            let policy = key.map(|k| k.policy()).unwrap_or(crate::config::ExitPolicy::Threshold(1.0));
+            let traces = record_set(edge, cloud, &set, policy, *precision,
+                                    cfg.max_new_tokens, &mut timings)?;
+            let score: f64 = set
+                .cases
+                .iter()
+                .zip(&traces)
+                .map(|(case, tr)| {
+                    let reference = case.reference.as_deref().unwrap_or("");
+                    match ds {
+                        // template-validity EM — see eval::em::template_match
+                        Dataset::TruthfulQa => {
+                            exact_match(&tr.text, reference)
+                                .max(crate::eval::em::template_match(&tr.text))
+                        }
+                        _ => rouge_l(&tr.text, reference),
+                    }
+                })
+                .sum::<f64>()
+                / set.cases.len().max(1) as f64;
+            cells[i].push(format!("{score:.4}"));
+        }
+    }
+    for ((label, _, _), scores) in rows.iter().zip(cells) {
+        let mut row = vec![label.clone()];
+        row.extend(scores);
+        table.row(row);
+    }
+    Ok(table.render())
+}
+
+/// Table 1: predicted tokens + confidence at each exit for one prompt.
+pub fn table1(
+    edge: &mut dyn EdgeEngine,
+    cloud: &mut dyn CloudEngine,
+    prompt: &str,
+    max_new_tokens: usize,
+) -> Result<String> {
+    let mut timings = CallTimings::default();
+    // θ=1.0: every position evaluates both exits AND the final head
+    let tr = record(
+        edge,
+        cloud,
+        crate::config::ExitPolicy::Threshold(1.0),
+        Precision::F16,
+        prompt,
+        max_new_tokens,
+        &mut timings,
+    )?;
+    let show = |tok: i32| -> String {
+        match tok {
+            0..=255 => {
+                let c = tok as u8 as char;
+                if c.is_ascii_graphic() || c == ' ' {
+                    format!("{c:?}")
+                } else {
+                    format!("0x{tok:02x}")
+                }
+            }
+            256 => "<BOS>".into(),
+            257 => "<EOS>".into(),
+            _ => format!("#{tok}"),
+        }
+    };
+    let mut t = Table::new(&[
+        "ID",
+        "Exit1 Token",
+        "conf",
+        "Exit2 Token",
+        "conf",
+        "Final Token",
+        "conf",
+    ]);
+    for (i, s) in tr.steps.iter().enumerate() {
+        t.row(vec![
+            (i + 1).to_string(),
+            show(s.tok1),
+            format!("{:.4}", s.conf1),
+            s.tok2.map(show).unwrap_or_else(|| "-".into()),
+            s.conf2.map(|c| format!("{c:.4}")).unwrap_or_else(|| "-".into()),
+            show(s.token),
+            s.cloud_conf.map(|c| format!("{c:.4}")).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    Ok(format!("prompt: {prompt:?}\ngenerated: {:?}\n{}", tr.text, t.render()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::runner::record_main_experiments;
+    use crate::model::manifest::test_manifest;
+    use crate::runtime::mock::{MockCloud, MockEdge, MockOracle};
+
+    fn pair(seed: u64) -> (MockEdge, MockCloud) {
+        let dims = test_manifest().model;
+        let o = MockOracle::new(seed);
+        (MockEdge::new(o, dims.clone()), MockCloud::new(o, dims))
+    }
+
+    fn small_cfg() -> ExperimentConfig {
+        ExperimentConfig { n_prompts: 3, repeats: 2, max_new_tokens: 10, seed: 3 }
+    }
+
+    #[test]
+    fn table2_renders_all_rows() {
+        let (mut e, mut c) = pair(1);
+        let cfg = small_cfg();
+        let rec = record_main_experiments(&mut e, &mut c, &cfg).unwrap();
+        let dims = test_manifest().model;
+        let s = table2(&rec, &dims, LinkProfile::wifi(), &cfg);
+        assert_eq!(s.lines().count(), 2 + 12, "6 strategies x 2 datasets\n{s}");
+        assert!(s.contains("CE-CoLLM (standalone)"));
+        assert!(s.contains("Naive Cloud-Edge Deployment"));
+        assert!(s.contains("XSum"));
+    }
+
+    #[test]
+    fn table4_relative_costs_above_100() {
+        let (mut e, mut c) = pair(2);
+        let cfg = small_cfg();
+        let rec = record_main_experiments(&mut e, &mut c, &cfg).unwrap();
+        let dims = test_manifest().model;
+        let s = table4(&rec, &dims, LinkProfile::wifi(), &cfg);
+        assert!(s.contains("Without Early Exit Mechanism"));
+        // baseline rows are exactly 100.00
+        assert_eq!(s.matches("| 100.00").count(), 2, "{s}");
+    }
+
+    #[test]
+    fn fig4_renders_series() {
+        let (mut e, mut c) = pair(3);
+        let cfg = small_cfg();
+        let rec = record_main_experiments(&mut e, &mut c, &cfg).unwrap();
+        let dims = test_manifest().model;
+        let s = fig4(&rec, &dims, LinkProfile::wifi(), &cfg, 3);
+        assert!(s.contains("Figure 4(c)"));
+        assert!(s.contains("Cloud-based"));
+    }
+
+    #[test]
+    fn table1_has_per_token_rows() {
+        let (mut e, mut c) = pair(4);
+        let s = table1(&mut e, &mut c, "the turing test is", 8).unwrap();
+        assert!(s.contains("Exit1 Token"));
+        assert!(s.lines().count() >= 8);
+    }
+
+    #[test]
+    fn table3_renders() {
+        let (mut e, mut c) = pair(5);
+        let cfg = ExperimentConfig { n_prompts: 2, repeats: 1, max_new_tokens: 8, seed: 9 };
+        let s = table3(&mut e, &mut c, &cfg).unwrap();
+        assert!(s.contains("Cloud-based LLM (float32)"));
+        assert!(s.contains("threshold=0.9, float16"));
+    }
+}

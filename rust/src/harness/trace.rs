@@ -1,0 +1,367 @@
+//! Trace recording: run the CE-CoLLM algorithm against local engine
+//! sessions (no sockets) and record, per generated token, where it
+//! exited, both confidences, and how much cloud catch-up work the
+//! request triggered — plus measured per-call compute times.
+//!
+//! Traces are the bridge between real inference and the discrete-event
+//! harness: tokens/exits depend only on (model, prompt, policy,
+//! precision), so each deployment row of Table 2/4 and each point of
+//! Fig 4 can be replayed analytically from one recorded trace without
+//! re-running PJRT (see DESIGN.md §5).
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::{AblationFlags, ExitPolicy};
+use crate::coordinator::content_manager::ContentManager;
+use crate::coordinator::policy::{ExitPoint, TokenPolicy};
+use crate::model::tokenizer::Tokenizer;
+use crate::quant::{self, Precision};
+use crate::runtime::traits::{CloudEngine, EdgeEngine};
+
+/// One generated token in a trace.
+#[derive(Debug, Clone)]
+pub struct TraceStep {
+    pub pos: usize,
+    pub token: i32,
+    pub exit: ExitPoint,
+    pub conf1: f32,
+    /// `None` when exit 1 fired (seg2 never ran).
+    pub conf2: Option<f32>,
+    /// Exit-head argmax tokens (Table 1 columns).
+    pub tok1: i32,
+    pub tok2: Option<i32>,
+    /// Final-head confidence when the cloud produced the token.
+    pub cloud_conf: Option<f32>,
+    /// Cloud decode catch-up steps consumed by this request (0 unless
+    /// `exit == Cloud`).
+    pub cloud_catchup: usize,
+    /// Whether this request triggered the cloud prefill.
+    pub cloud_prefill: bool,
+}
+
+/// A full recorded generation.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub prompt_len: usize,
+    pub tokens: Vec<i32>,
+    pub text: String,
+    pub steps: Vec<TraceStep>,
+}
+
+impl Trace {
+    pub fn count(&self, e: ExitPoint) -> usize {
+        self.steps.iter().filter(|s| s.exit == e).count()
+    }
+
+    pub fn cloud_rate(&self) -> f64 {
+        if self.steps.is_empty() {
+            return 0.0;
+        }
+        self.count(ExitPoint::Cloud) as f64 / self.steps.len() as f64
+    }
+}
+
+/// Measured compute times, appended during recording.
+#[derive(Debug, Clone, Default)]
+pub struct CallTimings {
+    pub edge_prefill: Vec<f64>,
+    pub seg1: Vec<f64>,
+    pub seg2: Vec<f64>,
+    pub cloud_prefill: Vec<f64>,
+    pub cloud_decode: Vec<f64>,
+}
+
+impl CallTimings {
+    pub fn merge(&mut self, o: &CallTimings) {
+        self.edge_prefill.extend_from_slice(&o.edge_prefill);
+        self.seg1.extend_from_slice(&o.seg1);
+        self.seg2.extend_from_slice(&o.seg2);
+        self.cloud_prefill.extend_from_slice(&o.cloud_prefill);
+        self.cloud_decode.extend_from_slice(&o.cloud_decode);
+    }
+}
+
+/// Record one generation.
+///
+/// `precision` is applied to every hidden state handed to the cloud
+/// engine (quantize→dequantize round trip), exactly what the wire does
+/// in f16 mode (paper §4.3) — so f16-vs-f32 token divergence is real.
+pub fn record(
+    edge: &mut dyn EdgeEngine,
+    cloud: &mut dyn CloudEngine,
+    policy: ExitPolicy,
+    precision: Precision,
+    prompt: &str,
+    max_new_tokens: usize,
+    timings: &mut CallTimings,
+) -> Result<Trace> {
+    let tp = TokenPolicy::new(policy, AblationFlags::default());
+    let dims = edge.dims().clone();
+    let tok = Tokenizer::from_dims(&dims);
+    let ids = tok.encode(prompt);
+    let prompt_len = ids.len();
+    anyhow::ensure!(prompt_len <= dims.max_prompt, "prompt too long ({prompt_len})");
+
+    // the real content manager handles upload/consume bookkeeping
+    let mut cm = ContentManager::new(dims.d_model);
+    let quantize = |h: &[f32]| -> Vec<f32> {
+        match precision {
+            Precision::F32 => h.to_vec(),
+            Precision::F16 => quant::unpack(&quant::pack(h, Precision::F16), Precision::F16)
+                .expect("f16 roundtrip"),
+        }
+    };
+
+    edge.reset();
+    cloud.reset();
+
+    let t0 = Instant::now();
+    let pre = edge.prefill(&ids)?;
+    timings.edge_prefill.push(t0.elapsed().as_secs_f64());
+    if tp.uses_cloud() {
+        cm.upload(0, 0, 0, prompt_len as u32, &quantize(&pre.h1))?;
+    }
+
+    let mut steps: Vec<TraceStep> = Vec::new();
+    let mut tokens: Vec<i32> = Vec::new();
+
+    // helper: defer one token to the cloud through the content manager
+    let cloud_infer = |cm: &mut ContentManager,
+                           cloud: &mut dyn CloudEngine,
+                           pos: usize,
+                           timings: &mut CallTimings|
+     -> Result<(i32, f32, usize, bool)> {
+        let plan = cm.plan(0, 0, pos as u32, prompt_len as u32)?;
+        let mut last = None;
+        let did_prefill = plan.prefill.is_some();
+        if let Some((h, len)) = &plan.prefill {
+            let t = Instant::now();
+            let out = cloud.prefill(h, *len)?;
+            timings.cloud_prefill.push(t.elapsed().as_secs_f64());
+            if pos == *len - 1 {
+                last = Some((out.exit.token, out.exit.conf));
+            }
+        }
+        let catchup = plan.decode.len();
+        for (p, h) in &plan.decode {
+            let t = Instant::now();
+            let out = cloud.decode(h, *p as usize)?;
+            timings.cloud_decode.push(t.elapsed().as_secs_f64());
+            last = Some((out.exit.token, out.exit.conf));
+        }
+        let (tok, conf) = last.context("cloud had no work")?;
+        Ok((tok, conf, catchup, did_prefill))
+    };
+
+    // --- first token from the prefill heads -------------------------------
+    let pos0 = prompt_len - 1;
+    let (tok0, step0) = if tp.exit_at_1(pre.exit1.conf) {
+        (
+            pre.exit1.token,
+            TraceStep {
+                pos: pos0,
+                token: pre.exit1.token,
+                exit: ExitPoint::Exit1,
+                conf1: pre.exit1.conf,
+                conf2: None,
+                tok1: pre.exit1.token,
+                tok2: None,
+                cloud_conf: None,
+                cloud_catchup: 0,
+                cloud_prefill: false,
+            },
+        )
+    } else if tp.exit_at_2(pre.exit2.conf) {
+        (
+            pre.exit2.token,
+            TraceStep {
+                pos: pos0,
+                token: pre.exit2.token,
+                exit: ExitPoint::Exit2,
+                conf1: pre.exit1.conf,
+                conf2: Some(pre.exit2.conf),
+                tok1: pre.exit1.token,
+                tok2: Some(pre.exit2.token),
+                cloud_conf: None,
+                cloud_catchup: 0,
+                cloud_prefill: false,
+            },
+        )
+    } else {
+        let (t, conf, catchup, did_prefill) = cloud_infer(&mut cm, cloud, pos0, timings)?;
+        (
+            t,
+            TraceStep {
+                pos: pos0,
+                token: t,
+                exit: ExitPoint::Cloud,
+                conf1: pre.exit1.conf,
+                conf2: Some(pre.exit2.conf),
+                tok1: pre.exit1.token,
+                tok2: Some(pre.exit2.token),
+                cloud_conf: Some(conf),
+                cloud_catchup: catchup,
+                cloud_prefill: did_prefill,
+            },
+        )
+    };
+    steps.push(step0);
+    tokens.push(tok0);
+
+    // --- decode loop -------------------------------------------------------
+    while !tok.is_eos(*tokens.last().unwrap())
+        && tokens.len() < max_new_tokens
+        && prompt_len + tokens.len() < dims.max_seq
+    {
+        let pos = prompt_len + tokens.len() - 1;
+        let input = *tokens.last().unwrap();
+
+        let t = Instant::now();
+        let s1 = edge.seg1(input, pos)?;
+        timings.seg1.push(t.elapsed().as_secs_f64());
+        if tp.uses_cloud() {
+            cm.upload(0, 0, pos as u32, prompt_len as u32, &quantize(&s1.h1))?;
+        }
+
+        let step = if tp.exit_at_1(s1.exit1.conf) {
+            TraceStep {
+                pos,
+                token: s1.exit1.token,
+                exit: ExitPoint::Exit1,
+                conf1: s1.exit1.conf,
+                conf2: None,
+                tok1: s1.exit1.token,
+                tok2: None,
+                cloud_conf: None,
+                cloud_catchup: 0,
+                cloud_prefill: false,
+            }
+        } else {
+            let t = Instant::now();
+            let s2 = edge.seg2(&s1.h1, pos)?;
+            timings.seg2.push(t.elapsed().as_secs_f64());
+            if tp.exit_at_2(s2.exit2.conf) {
+                TraceStep {
+                    pos,
+                    token: s2.exit2.token,
+                    exit: ExitPoint::Exit2,
+                    conf1: s1.exit1.conf,
+                    conf2: Some(s2.exit2.conf),
+                    tok1: s1.exit1.token,
+                    tok2: Some(s2.exit2.token),
+                    cloud_conf: None,
+                    cloud_catchup: 0,
+                    cloud_prefill: false,
+                }
+            } else {
+                let (t, conf, catchup, did_prefill) = cloud_infer(&mut cm, cloud, pos, timings)?;
+                TraceStep {
+                    pos,
+                    token: t,
+                    exit: ExitPoint::Cloud,
+                    conf1: s1.exit1.conf,
+                    conf2: Some(s2.exit2.conf),
+                    tok1: s1.exit1.token,
+                    tok2: Some(s2.exit2.token),
+                    cloud_conf: Some(conf),
+                    cloud_catchup: catchup,
+                    cloud_prefill: did_prefill,
+                }
+            }
+        };
+        tokens.push(step.token);
+        steps.push(step);
+    }
+
+    Ok(Trace { prompt_len, tokens: tokens.clone(), text: tok.decode(&tokens), steps })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::test_manifest;
+    use crate::runtime::mock::{MockCloud, MockEdge, MockOracle};
+
+    fn setup(seed: u64) -> (MockEdge, MockCloud) {
+        let dims = test_manifest().model;
+        let o = MockOracle::new(seed);
+        (MockEdge::new(o, dims.clone()), MockCloud::new(o, dims))
+    }
+
+    fn rec(policy: ExitPolicy, seed: u64) -> Trace {
+        let (mut e, mut c) = setup(seed);
+        let mut t = CallTimings::default();
+        record(&mut e, &mut c, policy, Precision::F32, "hello world", 16, &mut t).unwrap()
+    }
+
+    #[test]
+    fn standalone_never_calls_cloud() {
+        let tr = rec(ExitPolicy::Standalone { threshold: 0.8 }, 1);
+        assert_eq!(tr.count(ExitPoint::Cloud), 0);
+        assert_eq!(tr.steps.len(), tr.tokens.len());
+        assert!(tr.steps.iter().all(|s| s.exit != ExitPoint::Cloud));
+    }
+
+    #[test]
+    fn threshold_one_always_cloud() {
+        let tr = rec(ExitPolicy::Threshold(1.0), 2);
+        assert_eq!(tr.count(ExitPoint::Cloud), tr.steps.len());
+        // catch-up invariant: every generated position is consumed exactly once
+        let total_catchup: usize = tr.steps.iter().map(|s| s.cloud_catchup).sum();
+        // the first request consumes the prompt via prefill (catchup 0 at pos len-1)
+        assert_eq!(total_catchup, tr.steps.len() - 1);
+        assert!(tr.steps[0].cloud_prefill);
+        assert_eq!(tr.steps.iter().filter(|s| s.cloud_prefill).count(), 1);
+    }
+
+    #[test]
+    fn lower_threshold_fewer_cloud_tokens() {
+        let hi = rec(ExitPolicy::Threshold(0.95), 3);
+        let lo = rec(ExitPolicy::Threshold(0.5), 3);
+        assert!(lo.cloud_rate() <= hi.cloud_rate());
+    }
+
+    #[test]
+    fn catchup_accounts_for_skipped_positions() {
+        // mid threshold: cloud requests are sparse, each catches up the
+        // positions generated locally since the previous request
+        let tr = rec(ExitPolicy::Threshold(0.7), 5);
+        if tr.count(ExitPoint::Cloud) >= 2 {
+            let mut last_cloud_pos = None;
+            for s in &tr.steps {
+                if s.exit == ExitPoint::Cloud {
+                    if let Some(prev) = last_cloud_pos {
+                        assert_eq!(s.cloud_catchup, s.pos - prev);
+                    }
+                    last_cloud_pos = Some(s.pos);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn timings_populated() {
+        let (mut e, mut c) = setup(4);
+        let mut t = CallTimings::default();
+        let tr =
+            record(&mut e, &mut c, ExitPolicy::Threshold(0.8), Precision::F32, "abc", 8, &mut t)
+                .unwrap();
+        assert_eq!(t.edge_prefill.len(), 1);
+        assert_eq!(t.seg1.len(), tr.steps.len() - 1);
+        assert!(t.seg2.len() <= tr.steps.len());
+    }
+
+    #[test]
+    fn f16_trace_close_to_f32() {
+        // with mock engines hiddens don't affect tokens, so traces match
+        // exactly; the real-engine divergence test lives in rust/tests/
+        let a = rec(ExitPolicy::Threshold(0.8), 6);
+        let (mut e, mut c) = setup(6);
+        let mut t = CallTimings::default();
+        let b = record(&mut e, &mut c, ExitPolicy::Threshold(0.8), Precision::F16,
+                       "hello world", 16, &mut t).unwrap();
+        assert_eq!(a.tokens, b.tokens);
+    }
+}

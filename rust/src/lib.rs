@@ -1,0 +1,40 @@
+//! # CE-CoLLM — Cloud-Edge Collaborative LLM Inference (reproduction)
+//!
+//! Reproduction of *CE-CoLLM: Efficient and Adaptive Large Language Models
+//! Through Cloud-Edge Collaboration* (Jin & Wu, 2024) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's coordination contribution: an edge
+//!   client with an early-exit decode loop and asynchronous parallel hidden
+//!   state upload, a cloud server with a per-device content manager and
+//!   single-token responses, wire protocol, WAN models, baselines
+//!   (cloud-only / naïve split), metrics, evaluation, and the experiment
+//!   harnesses that regenerate every table and figure in the paper.
+//! * **L2 (python/compile, build time)** — an EE-LLM-style byte-level
+//!   transformer segmented at the paper's exit points and AOT-lowered to
+//!   HLO text artifacts.
+//! * **L1 (python/compile/kernels, build time)** — Pallas kernels: flash
+//!   prefill/decode attention and a fused exit head producing the token
+//!   confidence in a single VMEM-resident pass.
+//!
+//! Python never runs on the request path: the artifacts in `artifacts/`
+//! are loaded and executed through PJRT (`runtime` module).
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod harness;
+pub mod metrics;
+pub mod model;
+pub mod net;
+pub mod quant;
+pub mod runtime;
+pub mod util;
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::config::{AblationFlags, DeploymentConfig, ExitPolicy};
+    pub use crate::metrics::CostBreakdown;
+    pub use crate::net::profiles::LinkProfile;
+}

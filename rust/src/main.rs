@@ -1,0 +1,245 @@
+//! `ce-collm` CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   table 1|2|3|4        regenerate a paper table (real engines + DES)
+//!   fig4                 regenerate Figure 4 series
+//!   all                  every table + figure
+//!   standalone <prompt>  edge standalone generation (low-latency mode)
+//!   generate <prompt>    collaborative generation, local engines
+//!   serve-cloud          run the cloud server (TCP)
+//!   run-edge <prompt>    run an edge client against a cloud server
+//!   calibrate            measure per-call costs and print the cost model
+//!
+//! Common flags: --artifacts DIR (default "artifacts"), --prompts N,
+//! --repeats N, --max-new N, --link wifi|lte|fiber|lan|ideal,
+//! --threshold T, --clients N, --addr HOST:PORT, --seed N.
+
+use std::net::TcpListener;
+
+use anyhow::{Context, Result};
+
+use ce_collm::config::DeploymentConfig;
+use ce_collm::coordinator::cloud::{CloudServer, SessionFactory};
+use ce_collm::coordinator::edge::{CloudLink, EdgeClient};
+use ce_collm::harness::runner::{record_main_experiments, ExperimentConfig};
+use ce_collm::harness::tables;
+use ce_collm::harness::trace::CallTimings;
+use ce_collm::net::profiles::LinkProfile;
+use ce_collm::net::transport::TcpTransport;
+use ce_collm::runtime::stack::LocalStack;
+use ce_collm::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn experiment_config(args: &Args) -> ExperimentConfig {
+    ExperimentConfig {
+        n_prompts: args.get_parse("prompts", 25usize),
+        repeats: args.get_parse("repeats", 5usize),
+        max_new_tokens: args.get_parse("max-new", 96usize),
+        seed: args.get_parse("seed", 42u64),
+    }
+}
+
+fn link(args: &Args) -> Result<LinkProfile> {
+    let name = args.get_or("link", "wifi");
+    LinkProfile::by_name(&name).with_context(|| format!("unknown link profile '{name}'"))
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let artifacts = args.get_or("artifacts", "artifacts");
+
+    match cmd {
+        "table" => {
+            let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("2");
+            let stack = LocalStack::load(&artifacts)?;
+            let cfg = experiment_config(&args);
+            let mut edge = stack.edge_session();
+            let mut cloud = stack.cloud_session();
+            match which {
+                "1" => {
+                    let prompt = args.get_or("prompt", "the machine is a");
+                    println!(
+                        "{}",
+                        tables::table1(&mut edge, &mut cloud, &prompt,
+                                       args.get_parse("max-new", 24usize))?
+                    );
+                }
+                "2" => {
+                    let rec = record_main_experiments(&mut edge, &mut cloud, &cfg)?;
+                    println!("{}", tables::table2(&rec, &stack.manifest.model, link(&args)?, &cfg));
+                }
+                "3" => {
+                    println!("{}", tables::table3(&mut edge, &mut cloud, &cfg)?);
+                }
+                "4" => {
+                    let rec = record_main_experiments(&mut edge, &mut cloud, &cfg)?;
+                    println!("{}", tables::table4(&rec, &stack.manifest.model, link(&args)?, &cfg));
+                }
+                other => anyhow::bail!("unknown table '{other}' (1-4)"),
+            }
+        }
+        "fig4" => {
+            let stack = LocalStack::load(&artifacts)?;
+            let cfg = experiment_config(&args);
+            let mut edge = stack.edge_session();
+            let mut cloud = stack.cloud_session();
+            let rec = record_main_experiments(&mut edge, &mut cloud, &cfg)?;
+            println!(
+                "{}",
+                tables::fig4(&rec, &stack.manifest.model, link(&args)?, &cfg,
+                             args.get_parse("clients", 5usize))
+            );
+        }
+        "all" => {
+            let stack = LocalStack::load(&artifacts)?;
+            let cfg = experiment_config(&args);
+            let l = link(&args)?;
+            let mut edge = stack.edge_session();
+            let mut cloud = stack.cloud_session();
+            println!("=== Table 1 ===");
+            println!("{}", tables::table1(&mut edge, &mut cloud, "the machine is a", 24)?);
+            let rec = record_main_experiments(&mut edge, &mut cloud, &cfg)?;
+            println!("\n=== Table 2 ===");
+            println!("{}", tables::table2(&rec, &stack.manifest.model, l, &cfg));
+            println!("\n=== Table 3 ===");
+            println!("{}", tables::table3(&mut edge, &mut cloud, &cfg)?);
+            println!("\n=== Table 4 ===");
+            println!("{}", tables::table4(&rec, &stack.manifest.model, l, &cfg));
+            println!("\n=== Figure 4 ===");
+            println!(
+                "{}",
+                tables::fig4(&rec, &stack.manifest.model, l, &cfg,
+                             args.get_parse("clients", 5usize))
+            );
+        }
+        "standalone" | "generate" => {
+            let prompt = args
+                .positional
+                .get(1)
+                .cloned()
+                .unwrap_or_else(|| "the machine is a".to_string());
+            let stack = LocalStack::load(&artifacts)?;
+            let mut cfg = if cmd == "standalone" {
+                DeploymentConfig::standalone()
+            } else {
+                DeploymentConfig::with_threshold(args.get_parse("threshold", 0.8f32))
+            };
+            cfg.max_new_tokens = args.get_parse("max-new", 64usize);
+            if cmd == "generate" {
+                // local in-process generation via the trace recorder
+                let mut edge = stack.edge_session();
+                let mut cloud = stack.cloud_session();
+                let mut timings = CallTimings::default();
+                let tr = ce_collm::harness::trace::record(
+                    &mut edge,
+                    &mut cloud,
+                    cfg.policy,
+                    ce_collm::quant::Precision::F16,
+                    &prompt,
+                    cfg.max_new_tokens,
+                    &mut timings,
+                )?;
+                println!("{}", tr.text);
+                eprintln!(
+                    "[{} tokens: {} exit1, {} exit2, {} cloud]",
+                    tr.tokens.len(),
+                    tr.count(ce_collm::coordinator::policy::ExitPoint::Exit1),
+                    tr.count(ce_collm::coordinator::policy::ExitPoint::Exit2),
+                    tr.count(ce_collm::coordinator::policy::ExitPoint::Cloud),
+                );
+            } else {
+                let mut client = EdgeClient::standalone(stack.edge_session(), cfg);
+                let out = client.generate(&prompt)?;
+                println!("{}", out.text);
+                eprintln!("[{} tokens, {}]", out.tokens.len(), out.cost);
+            }
+        }
+        "serve-cloud" => {
+            let addr = args.get_or("addr", "127.0.0.1:7433");
+            let listener = TcpListener::bind(&addr)?;
+            println!("cloud server listening on {addr} (artifacts: {artifacts})");
+            let dims = ce_collm::model::manifest::Manifest::load(
+                std::path::Path::new(&artifacts),
+            )?
+            .model;
+            let art2 = artifacts.clone();
+            let server = CloudServer::spawn(listener, dims, move || {
+                let stack = LocalStack::load(&art2)?;
+                let f: SessionFactory =
+                    Box::new(move |_| Ok(Box::new(stack.cloud_session()) as _));
+                Ok(f)
+            })?;
+            println!("ready; Ctrl-C to stop");
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+                let _ = server.stats();
+            }
+        }
+        "run-edge" => {
+            let prompt = args
+                .positional
+                .get(1)
+                .cloned()
+                .unwrap_or_else(|| "the machine is a".to_string());
+            let addr = args.get_or("addr", "127.0.0.1:7433");
+            let stack = LocalStack::load(&artifacts)?;
+            let mut cfg = DeploymentConfig::with_threshold(args.get_parse("threshold", 0.8f32));
+            cfg.max_new_tokens = args.get_parse("max-new", 64usize);
+            cfg.device_id = args.get_parse("device-id", 1u64);
+            let upload = Box::new(TcpTransport::connect(&addr)?);
+            let infer = Box::new(TcpTransport::connect(&addr)?);
+            let link = CloudLink::new(cfg.device_id, upload, infer)?;
+            let mut client = EdgeClient::with_cloud(stack.edge_session(), cfg, link);
+            let out = client.generate(&prompt)?;
+            println!("{}", out.text);
+            eprintln!(
+                "[{} tokens; cloud rate {:.1}%; {}]",
+                out.tokens.len(),
+                out.counters.request_cloud_rate() * 100.0,
+                out.cost
+            );
+        }
+        "calibrate" => {
+            let stack = LocalStack::load(&artifacts)?;
+            let cfg = ExperimentConfig {
+                n_prompts: args.get_parse("prompts", 5usize),
+                ..experiment_config(&args)
+            };
+            let mut edge = stack.edge_session();
+            let mut cloud = stack.cloud_session();
+            let rec = record_main_experiments(&mut edge, &mut cloud, &cfg)?;
+            println!("calibrated cost model (seconds):");
+            println!("  edge_prefill : {:?}", rec.cost.edge_prefill);
+            println!("  seg1         : {:?}", rec.cost.seg1);
+            println!("  seg2         : {:?}", rec.cost.seg2);
+            println!("  cloud_prefill: {:?}", rec.cost.cloud_prefill);
+            println!("  cloud_decode : {:?}", rec.cost.cloud_decode);
+        }
+        _ => {
+            println!(
+                "ce-collm — CE-CoLLM reproduction (cloud-edge collaborative LLM inference)\n\n\
+                 usage: ce-collm <command> [flags]\n\n\
+                 commands:\n\
+                 \x20 table 1|2|3|4      regenerate a paper table\n\
+                 \x20 fig4               regenerate Figure 4\n\
+                 \x20 all                everything\n\
+                 \x20 standalone <p>     edge standalone generation\n\
+                 \x20 generate <p>       collaborative generation (local)\n\
+                 \x20 serve-cloud        start the cloud server\n\
+                 \x20 run-edge <p>       edge client against a server\n\
+                 \x20 calibrate          print the measured cost model\n\n\
+                 flags: --artifacts DIR --prompts N --repeats N --max-new N\n\
+                 \x20      --link wifi|lte|fiber|lan|ideal --threshold T\n\
+                 \x20      --clients N --addr HOST:PORT --seed N"
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,259 @@
+//! Cost accounting and table rendering.
+//!
+//! The paper reports four time columns per run (total / edge / cloud /
+//! comm — Table 2, Table 4) plus a request-cloud rate, transmitted bytes
+//! (Fig 4c) and ROUGE-L.  [`CostBreakdown`] accumulates one request;
+//! [`Aggregate`] folds many runs into `mean ± std` exactly as the paper's
+//! tables present them (5 repeats).
+
+use std::fmt;
+
+/// Time/cost breakdown of one inference request or one whole run.
+///
+/// All values in seconds.  `total` is wall-clock makespan and is *not*
+/// necessarily the sum of the parts: with parallel upload, communication
+/// overlaps edge compute (paper §4.1), and with multiple clients cloud
+/// busy time overlaps other clients' edge time.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CostBreakdown {
+    pub total_s: f64,
+    pub edge_s: f64,
+    pub cloud_s: f64,
+    pub comm_s: f64,
+}
+
+impl CostBreakdown {
+    pub fn add(&mut self, other: &CostBreakdown) {
+        self.total_s += other.total_s;
+        self.edge_s += other.edge_s;
+        self.cloud_s += other.cloud_s;
+        self.comm_s += other.comm_s;
+    }
+}
+
+impl fmt::Display for CostBreakdown {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "total {:.3}s (edge {:.3}s, cloud {:.3}s, comm {:.3}s)",
+            self.total_s, self.edge_s, self.cloud_s, self.comm_s
+        )
+    }
+}
+
+/// Counters for one generation request (paper Table 2 right-hand columns).
+#[derive(Debug, Clone, Default)]
+pub struct RunCounters {
+    pub tokens_generated: usize,
+    pub tokens_exit1: usize,
+    pub tokens_exit2: usize,
+    pub tokens_cloud: usize,
+    /// Bytes sent edge→cloud (hidden states + requests).
+    pub bytes_up: u64,
+    /// Bytes sent cloud→edge (token responses).
+    pub bytes_down: u64,
+    /// Cloud inference requests issued.
+    pub cloud_requests: usize,
+}
+
+impl RunCounters {
+    pub fn add(&mut self, o: &RunCounters) {
+        self.tokens_generated += o.tokens_generated;
+        self.tokens_exit1 += o.tokens_exit1;
+        self.tokens_exit2 += o.tokens_exit2;
+        self.tokens_cloud += o.tokens_cloud;
+        self.bytes_up += o.bytes_up;
+        self.bytes_down += o.bytes_down;
+        self.cloud_requests += o.cloud_requests;
+    }
+
+    /// "Request Cloud Rate" — fraction of generated tokens that required a
+    /// cloud round trip.
+    pub fn request_cloud_rate(&self) -> f64 {
+        if self.tokens_generated == 0 {
+            return 0.0;
+        }
+        self.tokens_cloud as f64 / self.tokens_generated as f64
+    }
+
+    pub fn transmitted_mb(&self) -> f64 {
+        (self.bytes_up + self.bytes_down) as f64 / 1e6
+    }
+}
+
+/// `mean ± std` over repeated runs of a scalar metric.
+#[derive(Debug, Clone, Default)]
+pub struct MeanStd {
+    values: Vec<f64>,
+}
+
+impl MeanStd {
+    pub fn push(&mut self, v: f64) {
+        self.values.push(v);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.values.is_empty() {
+            return 0.0;
+        }
+        self.values.iter().sum::<f64>() / self.values.len() as f64
+    }
+
+    /// Sample standard deviation (n−1), matching the paper's ± columns.
+    pub fn std(&self) -> f64 {
+        let n = self.values.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.values.iter().map(|v| (v - m).powi(2)).sum::<f64>() / (n - 1) as f64).sqrt()
+    }
+
+    pub fn n(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn fmt_pm(&self, digits: usize) -> String {
+        format!("{:.d$} ± {:.d$}", self.mean(), self.std(), d = digits)
+    }
+}
+
+/// Aggregate of repeated runs of one (strategy, dataset) cell.
+#[derive(Debug, Default)]
+pub struct Aggregate {
+    pub total_s: MeanStd,
+    pub edge_s: MeanStd,
+    pub cloud_s: MeanStd,
+    pub comm_s: MeanStd,
+    pub rouge_l: MeanStd,
+    pub request_rate: MeanStd,
+    pub transmitted_mb: MeanStd,
+}
+
+impl Aggregate {
+    pub fn push(&mut self, cost: &CostBreakdown, counters: &RunCounters, rouge_l: Option<f64>) {
+        self.total_s.push(cost.total_s);
+        self.edge_s.push(cost.edge_s);
+        self.cloud_s.push(cost.cloud_s);
+        self.comm_s.push(cost.comm_s);
+        self.request_rate.push(counters.request_cloud_rate() * 100.0);
+        self.transmitted_mb.push(counters.transmitted_mb());
+        if let Some(r) = rouge_l {
+            self.rouge_l.push(r);
+        }
+    }
+}
+
+/// Minimal fixed-width table renderer for harness output (markdown-ish,
+/// matches the layout of the paper's tables).
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            w[i] = h.len();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<width$} |", c, width = w[i]));
+            }
+            s
+        };
+        let mut out = line(&self.header);
+        out.push('\n');
+        out.push('|');
+        for wi in &w {
+            out.push_str(&format!("{:-<width$}|", "", width = wi + 2));
+        }
+        for r in &self.rows {
+            out.push('\n');
+            out.push_str(&line(r));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meanstd_matches_hand_computation() {
+        let mut m = MeanStd::default();
+        for v in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            m.push(v);
+        }
+        assert!((m.mean() - 5.0).abs() < 1e-12);
+        // sample std of that classic set is ~2.138
+        assert!((m.std() - 2.13809).abs() < 1e-4);
+    }
+
+    #[test]
+    fn meanstd_degenerate_cases() {
+        let m = MeanStd::default();
+        assert_eq!(m.mean(), 0.0);
+        assert_eq!(m.std(), 0.0);
+        let mut one = MeanStd::default();
+        one.push(3.0);
+        assert_eq!(one.mean(), 3.0);
+        assert_eq!(one.std(), 0.0);
+    }
+
+    #[test]
+    fn counters_rates() {
+        let c = RunCounters {
+            tokens_generated: 100,
+            tokens_cloud: 42,
+            bytes_up: 1_500_000,
+            bytes_down: 500_000,
+            ..Default::default()
+        };
+        assert!((c.request_cloud_rate() - 0.42).abs() < 1e-12);
+        assert!((c.transmitted_mb() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cost_add_accumulates() {
+        let mut a = CostBreakdown { total_s: 1.0, edge_s: 0.5, cloud_s: 0.3, comm_s: 0.2 };
+        a.add(&CostBreakdown { total_s: 2.0, edge_s: 1.0, cloud_s: 0.6, comm_s: 0.4 });
+        assert_eq!(a.total_s, 3.0);
+        assert_eq!(a.comm_s, 0.6000000000000001);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["Strategy", "Total (s)"]);
+        t.row(vec!["CE-CoLLM".into(), "319.057".into()]);
+        t.row(vec!["Cloud".into(), "370.166".into()]);
+        let s = t.render();
+        assert!(s.contains("| CE-CoLLM | 319.057   |"));
+        assert_eq!(s.lines().count(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

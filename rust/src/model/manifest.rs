@@ -1,0 +1,341 @@
+//! `artifacts/manifest.json` — the contract between the AOT exporter
+//! (python/compile/aot.py) and the rust runtime.
+//!
+//! The manifest pins, per artifact: the HLO file, which parameter
+//! partition its leading inputs come from (in jax pytree flatten order),
+//! the runtime inputs that follow, and the flattened output order.
+//! Parsed with the in-tree JSON parser ([`crate::util::json`]).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Model architecture constants, mirrored from python/compile/config.py.
+#[derive(Debug, Clone)]
+pub struct ModelDims {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub ffn_hidden: usize,
+    pub l_ee1: usize,
+    pub l_ee2: usize,
+    pub max_prompt: usize,
+    pub max_seq: usize,
+    pub head_dim: usize,
+    pub bos_id: i32,
+    pub eos_id: i32,
+    pub pad_id: i32,
+    pub rope_theta: f64,
+    pub norm_eps: f64,
+}
+
+impl ModelDims {
+    /// Bytes of one hidden-state vector on the wire at the given element size.
+    pub fn hidden_bytes(&self, bytes_per_elem: usize) -> usize {
+        self.d_model * bytes_per_elem
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let u = |k: &str| -> Result<usize> {
+            j.req(k)?.as_usize().with_context(|| format!("model.{k} not a usize"))
+        };
+        let i = |k: &str| -> Result<i32> {
+            Ok(j.req(k)?.as_i64().with_context(|| format!("model.{k} not an int"))? as i32)
+        };
+        let f = |k: &str| -> Result<f64> {
+            j.req(k)?.as_f64().with_context(|| format!("model.{k} not a number"))
+        };
+        Ok(Self {
+            vocab_size: u("vocab_size")?,
+            d_model: u("d_model")?,
+            n_layers: u("n_layers")?,
+            n_heads: u("n_heads")?,
+            ffn_hidden: u("ffn_hidden")?,
+            l_ee1: u("l_ee1")?,
+            l_ee2: u("l_ee2")?,
+            max_prompt: u("max_prompt")?,
+            max_seq: u("max_seq")?,
+            head_dim: u("head_dim")?,
+            bos_id: i("bos_id")?,
+            eos_id: i("eos_id")?,
+            pad_id: i("pad_id")?,
+            rope_theta: f("rope_theta")?,
+            norm_eps: f("norm_eps")?,
+        })
+    }
+}
+
+/// Shape+dtype of one named tensor (parameter, input, or output).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSig {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSig {
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let name = j.req("name")?.as_str().context("tensor name")?.to_string();
+        let shape = j
+            .req("shape")?
+            .as_arr()
+            .context("tensor shape")?
+            .iter()
+            .map(|d| d.as_usize().context("dim"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j.req("dtype")?.as_str().context("tensor dtype")?.to_string();
+        Ok(Self { name, shape, dtype })
+    }
+}
+
+/// One AOT-lowered segment function.
+#[derive(Debug, Clone)]
+pub struct ArtifactSig {
+    pub file: String,
+    /// Runtime inputs, in call order (params come first, then these).
+    pub inputs: Vec<TensorSig>,
+    /// Flattened outputs, in tuple order.
+    pub outputs: Vec<TensorSig>,
+}
+
+impl ArtifactSig {
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|t| t.name == name)
+            .with_context(|| format!("artifact output '{name}' not found"))
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let sigs = |key: &str| -> Result<Vec<TensorSig>> {
+            j.req(key)?
+                .as_arr()
+                .with_context(|| format!("artifact.{key}"))?
+                .iter()
+                .map(TensorSig::from_json)
+                .collect()
+        };
+        Ok(Self {
+            file: j.req("file")?.as_str().context("artifact.file")?.to_string(),
+            inputs: sigs("inputs")?,
+            outputs: sigs("outputs")?,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: ModelDims,
+    /// Parameter tensors per partition, in jax flatten (= argument) order.
+    pub partitions: HashMap<String, Vec<TensorSig>>,
+    /// artifact name -> partition name.
+    pub artifact_params: HashMap<String, String>,
+    pub artifacts: HashMap<String, ArtifactSig>,
+    pub final_train_loss: Option<f64>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).context("parsing manifest.json")?;
+        let model = ModelDims::from_json(j.req("model")?)?;
+
+        let mut partitions = HashMap::new();
+        for (name, arr) in j.req("partitions")?.as_obj().context("partitions")? {
+            let sigs = arr
+                .as_arr()
+                .context("partition list")?
+                .iter()
+                .map(TensorSig::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            partitions.insert(name.clone(), sigs);
+        }
+
+        let mut artifact_params = HashMap::new();
+        for (name, v) in j.req("artifact_params")?.as_obj().context("artifact_params")? {
+            artifact_params
+                .insert(name.clone(), v.as_str().context("partition name")?.to_string());
+        }
+
+        let mut artifacts = HashMap::new();
+        for (name, v) in j.req("artifacts")?.as_obj().context("artifacts")? {
+            artifacts.insert(name.clone(), ArtifactSig::from_json(v)?);
+        }
+
+        let final_train_loss =
+            j.get("final_train_loss").and_then(|v| v.as_f64());
+
+        let m = Manifest { model, partitions, artifact_params, artifacts, final_train_loss };
+        m.validate()?;
+        Ok(m)
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSig> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact '{name}' missing from manifest"))
+    }
+
+    pub fn partition_for(&self, artifact: &str) -> Result<&[TensorSig]> {
+        let pname = self
+            .artifact_params
+            .get(artifact)
+            .with_context(|| format!("no partition mapping for artifact '{artifact}'"))?;
+        Ok(self
+            .partitions
+            .get(pname)
+            .with_context(|| format!("partition '{pname}' missing"))?)
+    }
+
+    /// Structural sanity checks run at load time, so a stale or truncated
+    /// artifact directory fails fast with a readable error.
+    pub fn validate(&self) -> Result<()> {
+        let m = &self.model;
+        anyhow::ensure!(m.l_ee1 < m.l_ee2 && m.l_ee2 <= m.n_layers, "exit points out of order");
+        anyhow::ensure!(m.d_model == m.n_heads * m.head_dim, "d_model != heads*head_dim");
+        anyhow::ensure!(m.max_prompt <= m.max_seq, "max_prompt exceeds cache capacity");
+        for name in [
+            "edge_prefill",
+            "edge_seg1_decode",
+            "edge_seg2_decode",
+            "cloud_prefill",
+            "cloud_decode",
+        ] {
+            let a = self.artifact(name)?;
+            anyhow::ensure!(!a.outputs.is_empty(), "artifact '{name}' has no outputs");
+            self.partition_for(name)?;
+        }
+        Ok(())
+    }
+}
+
+/// A minimal, structurally valid manifest for unit tests that don't touch
+/// real artifacts (also used by the mock engines).
+pub fn test_manifest() -> Manifest {
+    let dims = ModelDims {
+        vocab_size: 384,
+        d_model: 128,
+        n_layers: 8,
+        n_heads: 4,
+        ffn_hidden: 512,
+        l_ee1: 3,
+        l_ee2: 5,
+        max_prompt: 256,
+        max_seq: 384,
+        head_dim: 32,
+        bos_id: 256,
+        eos_id: 257,
+        pad_id: 258,
+        rope_theta: 10000.0,
+        norm_eps: 1e-5,
+    };
+    let sig = |name: &str| ArtifactSig {
+        file: format!("{name}.hlo.txt"),
+        inputs: vec![],
+        outputs: vec![TensorSig { name: "tok".into(), shape: vec![], dtype: "int32".into() }],
+    };
+    let mut artifacts = HashMap::new();
+    let mut artifact_params = HashMap::new();
+    for n in
+        ["edge_prefill", "edge_seg1_decode", "edge_seg2_decode", "cloud_prefill", "cloud_decode"]
+    {
+        artifacts.insert(n.to_string(), sig(n));
+        let part = if n.starts_with("edge") { "edge" } else { "cloud" };
+        artifact_params.insert(n.to_string(), part.to_string());
+    }
+    let mut partitions = HashMap::new();
+    partitions.insert("edge".to_string(), vec![]);
+    partitions.insert("cloud".to_string(), vec![]);
+    Manifest { model: dims, partitions, artifact_params, artifacts, final_train_loss: None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_manifest_validates() {
+        test_manifest().validate().unwrap();
+    }
+
+    #[test]
+    fn bad_exit_order_rejected() {
+        let mut m = test_manifest();
+        m.model.l_ee1 = 6; // > l_ee2
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn inconsistent_heads_rejected() {
+        let mut m = test_manifest();
+        m.model.head_dim = 31;
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn missing_artifact_rejected() {
+        let mut m = test_manifest();
+        m.artifacts.remove("cloud_decode");
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn output_index_lookup() {
+        let m = test_manifest();
+        let a = m.artifact("cloud_decode").unwrap();
+        assert_eq!(a.output_index("tok").unwrap(), 0);
+        assert!(a.output_index("nope").is_err());
+    }
+
+    #[test]
+    fn parse_minimal_manifest_json() {
+        let text = r#"{
+          "model": {"vocab_size":384,"d_model":128,"n_layers":8,"n_heads":4,
+                    "ffn_hidden":512,"l_ee1":3,"l_ee2":5,"max_prompt":256,
+                    "max_seq":384,"head_dim":32,"bos_id":256,"eos_id":257,
+                    "pad_id":258,"rope_theta":10000.0,"norm_eps":1e-05},
+          "partitions": {"edge": [{"name":"w","shape":[2,3],"dtype":"float32"}],
+                         "cloud": []},
+          "artifact_params": {"edge_prefill":"edge","edge_seg1_decode":"edge",
+                              "edge_seg2_decode":"edge","cloud_prefill":"cloud",
+                              "cloud_decode":"cloud"},
+          "artifacts": {
+            "edge_prefill": {"file":"edge_prefill.hlo.txt","inputs":[],
+              "outputs":[{"name":"h1","shape":[256,128],"dtype":"float32"}]},
+            "edge_seg1_decode": {"file":"a","inputs":[],"outputs":[{"name":"x","shape":[],"dtype":"int32"}]},
+            "edge_seg2_decode": {"file":"b","inputs":[],"outputs":[{"name":"x","shape":[],"dtype":"int32"}]},
+            "cloud_prefill": {"file":"c","inputs":[],"outputs":[{"name":"x","shape":[],"dtype":"int32"}]},
+            "cloud_decode": {"file":"d","inputs":[],"outputs":[{"name":"x","shape":[],"dtype":"int32"}]}
+          },
+          "final_train_loss": 0.43
+        }"#;
+        let m = Manifest::parse(text).unwrap();
+        assert_eq!(m.model.vocab_size, 384);
+        assert_eq!(m.partitions["edge"][0].shape, vec![2, 3]);
+        assert_eq!(m.artifact_params["cloud_decode"], "cloud");
+        assert_eq!(m.final_train_loss, Some(0.43));
+        assert_eq!(m.artifact("edge_prefill").unwrap().outputs[0].name, "h1");
+    }
+
+    #[test]
+    fn tensor_sig_elem_count() {
+        let t = TensorSig { name: "x".into(), shape: vec![3, 4, 2], dtype: "float32".into() };
+        assert_eq!(t.elem_count(), 24);
+        let s = TensorSig { name: "s".into(), shape: vec![], dtype: "int32".into() };
+        assert_eq!(s.elem_count(), 1);
+    }
+}

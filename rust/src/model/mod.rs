@@ -1,0 +1,11 @@
+//! Model-side substrate: manifest parsing, weight container, byte-level
+//! tokenizer, and sampling utilities.
+
+pub mod manifest;
+pub mod sampling;
+pub mod tokenizer;
+pub mod weights;
+
+pub use manifest::{ArtifactSig, Manifest, ModelDims, TensorSig};
+pub use tokenizer::Tokenizer;
+pub use weights::Weights;

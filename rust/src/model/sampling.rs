@@ -1,0 +1,132 @@
+//! Token sampling.  The paper's experiments use greedy decoding (ROUGE-L
+//! of 1.0 at θ=1.0 requires determinism); temperature/top-k are provided
+//! for the examples and downstream users.
+
+use crate::util::rng::Rng;
+
+/// Greedy argmax over logits, with first-occurrence tie-breaking (matches
+/// the fused exit-head kernel and `jnp.argmax`).
+pub fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Softmax in-place, numerically stable.  Returns the max probability
+/// (the confidence measure used by the early-exit policy).
+pub fn softmax(logits: &mut [f32]) -> f32 {
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0f32;
+    for v in logits.iter_mut() {
+        *v = (*v - m).exp();
+        sum += *v;
+    }
+    let mut maxp = 0f32;
+    for v in logits.iter_mut() {
+        *v /= sum;
+        maxp = maxp.max(*v);
+    }
+    maxp
+}
+
+#[derive(Debug, Clone, Copy)]
+pub enum SamplingMode {
+    Greedy,
+    /// Temperature softmax sampling with optional top-k truncation.
+    Temperature { temperature: f32, top_k: Option<usize> },
+}
+
+pub fn sample(logits: &[f32], mode: SamplingMode, rng: &mut Rng) -> i32 {
+    match mode {
+        SamplingMode::Greedy => argmax(logits),
+        SamplingMode::Temperature { temperature, top_k } => {
+            let mut scaled: Vec<(usize, f32)> = logits
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| (i, v / temperature.max(1e-6)))
+                .collect();
+            if let Some(k) = top_k {
+                scaled.sort_by(|a, b| b.1.total_cmp(&a.1));
+                scaled.truncate(k.max(1));
+            }
+            let m = scaled.iter().map(|x| x.1).fold(f32::NEG_INFINITY, f32::max);
+            let weights: Vec<f32> = scaled.iter().map(|x| (x.1 - m).exp()).collect();
+            let total: f32 = weights.iter().sum();
+            let mut u = rng.gen_f32() * total;
+            for ((i, _), w) in scaled.iter().zip(&weights) {
+                if u <= *w {
+                    return *i as i32;
+                }
+                u -= w;
+            }
+            scaled.last().map(|x| x.0 as i32).unwrap_or(0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    
+    #[test]
+    fn argmax_first_occurrence_on_ties() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[-1.0]), 0);
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_returns_max() {
+        let mut l = vec![1.0, 2.0, 3.0];
+        let maxp = softmax(&mut l);
+        assert!((l.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!((maxp - l[2]).abs() < 1e-7);
+    }
+
+    #[test]
+    fn softmax_stable_for_large_logits() {
+        let mut l = vec![1000.0, 1001.0];
+        let maxp = softmax(&mut l);
+        assert!(maxp.is_finite() && maxp > 0.7);
+    }
+
+    #[test]
+    fn greedy_sample_matches_argmax() {
+        let mut rng = Rng::seed_from_u64(0);
+        let logits = vec![0.1, 5.0, -2.0];
+        assert_eq!(sample(&logits, SamplingMode::Greedy, &mut rng), 1);
+    }
+
+    #[test]
+    fn temperature_zero_ish_is_greedy() {
+        let mut rng = Rng::seed_from_u64(0);
+        let logits = vec![0.1, 5.0, -2.0, 4.9];
+        for _ in 0..20 {
+            let t = sample(
+                &logits,
+                SamplingMode::Temperature { temperature: 0.01, top_k: None },
+                &mut rng,
+            );
+            assert_eq!(t, 1);
+        }
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let mut rng = Rng::seed_from_u64(7);
+        let logits = vec![10.0, 9.9, -50.0, -50.0];
+        for _ in 0..50 {
+            let t = sample(
+                &logits,
+                SamplingMode::Temperature { temperature: 1.0, top_k: Some(2) },
+                &mut rng,
+            );
+            assert!(t == 0 || t == 1);
+        }
+    }
+}

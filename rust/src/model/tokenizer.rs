@@ -1,0 +1,123 @@
+//! Byte-level tokenizer.
+//!
+//! The reproduction model is a byte-level LM (vocab = 256 byte values +
+//! BOS/EOS/PAD specials), so tokenization is UTF-8 bytes.  This keeps the
+//! tokenizer exactly consistent between the build-time trainer
+//! (python/compile/data.py) and the request path with zero vocabulary
+//! files to ship.
+
+use crate::model::manifest::ModelDims;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    pub bos_id: i32,
+    pub eos_id: i32,
+    pub pad_id: i32,
+    pub vocab_size: usize,
+}
+
+impl Tokenizer {
+    pub fn from_dims(dims: &ModelDims) -> Self {
+        Self {
+            bos_id: dims.bos_id,
+            eos_id: dims.eos_id,
+            pad_id: dims.pad_id,
+            vocab_size: dims.vocab_size,
+        }
+    }
+
+    /// Encode text as `BOS <bytes>`.
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut out = Vec::with_capacity(text.len() + 1);
+        out.push(self.bos_id);
+        out.extend(text.as_bytes().iter().map(|&b| b as i32));
+        out
+    }
+
+    /// Encode and right-pad with PAD to `target_len`.  Errors if the
+    /// prompt does not fit.
+    pub fn encode_padded(&self, text: &str, target_len: usize) -> anyhow::Result<Vec<i32>> {
+        let mut ids = self.encode(text);
+        anyhow::ensure!(
+            ids.len() <= target_len,
+            "prompt of {} tokens exceeds max_prompt {}",
+            ids.len(),
+            target_len
+        );
+        ids.resize(target_len, self.pad_id);
+        Ok(ids)
+    }
+
+    /// Decode generated ids back to text, stopping at EOS and skipping
+    /// all non-byte specials.  Invalid UTF-8 is replaced.
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut bytes = Vec::with_capacity(ids.len());
+        for &id in ids {
+            if id == self.eos_id {
+                break;
+            }
+            if (0..256).contains(&id) {
+                bytes.push(id as u8);
+            }
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    pub fn is_eos(&self, id: i32) -> bool {
+        id == self.eos_id
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::test_manifest;
+
+    fn tok() -> Tokenizer {
+        Tokenizer::from_dims(&test_manifest().model)
+    }
+
+    #[test]
+    fn encode_prepends_bos() {
+        let t = tok();
+        let ids = t.encode("ab");
+        assert_eq!(ids, vec![256, 97, 98]);
+    }
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = tok();
+        let ids = t.encode("the machine works");
+        assert_eq!(t.decode(&ids[1..]), "the machine works");
+    }
+
+    #[test]
+    fn decode_stops_at_eos() {
+        let t = tok();
+        let ids = vec![104, 105, 257, 120, 121];
+        assert_eq!(t.decode(&ids), "hi");
+    }
+
+    #[test]
+    fn decode_skips_pad_and_bos() {
+        let t = tok();
+        assert_eq!(t.decode(&[256, 97, 258, 98]), "ab");
+    }
+
+    #[test]
+    fn padded_encoding() {
+        let t = tok();
+        let ids = t.encode_padded("xy", 8).unwrap();
+        assert_eq!(ids.len(), 8);
+        assert_eq!(&ids[..3], &[256, 120, 121]);
+        assert!(ids[3..].iter().all(|&i| i == 258));
+        assert!(t.encode_padded("way too long", 3).is_err());
+    }
+
+    #[test]
+    fn utf8_multibyte_roundtrip() {
+        let t = tok();
+        let ids = t.encode("héllo");
+        assert_eq!(t.decode(&ids[1..]), "héllo");
+    }
+}

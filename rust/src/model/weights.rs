@@ -1,0 +1,208 @@
+//! Reader for `artifacts/weights.bin` — the tensor container written by
+//! `python/compile/aot.py::write_weights`.
+//!
+//! Format (little-endian):
+//! ```text
+//! magic "CECW" | u32 version | u32 n_tensors
+//! per tensor: u16 name_len | name utf-8 | u8 dtype | u8 ndim |
+//!             u32 dims[ndim] | u64 byte_len | raw f32 data
+//! ```
+
+use std::collections::HashMap;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+const MAGIC: &[u8; 4] = b"CECW";
+const DTYPE_F32: u8 = 0;
+
+/// One loaded tensor.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// All tensors from a weights file, indexed by name.
+#[derive(Debug, Default)]
+pub struct Weights {
+    tensors: HashMap<String, Tensor>,
+}
+
+impl Weights {
+    pub fn load(path: &Path) -> Result<Self> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&bytes)
+    }
+
+    pub fn parse(bytes: &[u8]) -> Result<Self> {
+        let mut r = bytes;
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic).context("truncated header")?;
+        ensure!(&magic == MAGIC, "bad magic {:?}", magic);
+        let version = read_u32(&mut r)?;
+        ensure!(version == 1, "unsupported weights version {version}");
+        let n = read_u32(&mut r)? as usize;
+
+        let mut tensors = HashMap::with_capacity(n);
+        for i in 0..n {
+            let name_len = read_u16(&mut r)? as usize;
+            let mut name_buf = vec![0u8; name_len];
+            r.read_exact(&mut name_buf).with_context(|| format!("tensor {i} name"))?;
+            let name = String::from_utf8(name_buf).context("tensor name not utf-8")?;
+            let dtype = read_u8(&mut r)?;
+            if dtype != DTYPE_F32 {
+                bail!("tensor '{name}': unsupported dtype {dtype}");
+            }
+            let ndim = read_u8(&mut r)? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u32(&mut r)? as usize);
+            }
+            let byte_len = read_u64(&mut r)? as usize;
+            let expect = shape.iter().product::<usize>().max(1) * 4;
+            ensure!(
+                byte_len == expect,
+                "tensor '{name}': byte_len {byte_len} != shape-implied {expect}"
+            );
+            ensure!(r.len() >= byte_len, "tensor '{name}': truncated data");
+            let (raw, rest) = r.split_at(byte_len);
+            r = rest;
+            let data = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            tensors.insert(name.clone(), Tensor { name, shape, data });
+        }
+        ensure!(r.is_empty(), "{} trailing bytes after last tensor", r.len());
+        Ok(Self { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors.get(name).with_context(|| format!("weight tensor '{name}' not found"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.tensors.keys().map(|s| s.as_str())
+    }
+
+    #[cfg(test)]
+    pub fn insert_for_test(&mut self, t: Tensor) {
+        self.tensors.insert(t.name.clone(), t);
+    }
+}
+
+fn read_u8(r: &mut &[u8]) -> Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+fn read_u16(r: &mut &[u8]) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn read_u32(r: &mut &[u8]) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut &[u8]) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn encode(tensors: &[(&str, &[usize], &[f32])]) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+        for (name, shape, data) in tensors {
+            out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            out.push(DTYPE_F32);
+            out.push(shape.len() as u8);
+            for d in *shape {
+                out.extend_from_slice(&(*d as u32).to_le_bytes());
+            }
+            out.extend_from_slice(&((data.len() * 4) as u64).to_le_bytes());
+            for v in *data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn roundtrip_two_tensors() {
+        let bytes = encode(&[
+            ("a", &[2, 2], &[1.0, 2.0, 3.0, 4.0]),
+            ("b['x']", &[3], &[-1.0, 0.5, 9.0]),
+        ]);
+        let w = Weights::parse(&bytes).unwrap();
+        assert_eq!(w.len(), 2);
+        assert_eq!(w.get("a").unwrap().data, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(w.get("b['x']").unwrap().shape, vec![3]);
+        assert!(w.get("missing").is_err());
+    }
+
+    #[test]
+    fn scalar_tensor() {
+        let bytes = encode(&[("s", &[], &[42.0])]);
+        let w = Weights::parse(&bytes).unwrap();
+        assert_eq!(w.get("s").unwrap().elem_count(), 1);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = encode(&[("a", &[1], &[1.0])]);
+        bytes[0] = b'X';
+        assert!(Weights::parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn truncated_data_rejected() {
+        let bytes = encode(&[("a", &[4], &[1.0, 2.0, 3.0, 4.0])]);
+        assert!(Weights::parse(&bytes[..bytes.len() - 3]).is_err());
+    }
+
+    #[test]
+    fn trailing_garbage_rejected() {
+        let mut bytes = encode(&[("a", &[1], &[1.0])]);
+        bytes.push(0);
+        assert!(Weights::parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn shape_bytelen_mismatch_rejected() {
+        let mut bytes = encode(&[("a", &[2], &[1.0, 2.0])]);
+        // corrupt the byte_len field (8 bytes before the 8 bytes of data)
+        let n = bytes.len();
+        bytes[n - 16..n - 8].copy_from_slice(&4u64.to_le_bytes());
+        assert!(Weights::parse(&bytes).is_err());
+    }
+}

@@ -1,0 +1,4 @@
+//! Transports and WAN models.
+pub mod profiles;
+pub mod simulated;
+pub mod transport;

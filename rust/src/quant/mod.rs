@@ -1,0 +1,164 @@
+//! Hidden-state payload quantization (paper §4.3).
+//!
+//! The edge transmits intermediate hidden states in half precision to cut
+//! the dominant communication cost.  The paper validates that observed
+//! activations (−6553.19 .. 2126.24) sit comfortably inside the f16 range
+//! (±65504); we provide the same range check plus round-trip utilities and
+//! accuracy statistics used by Table 3 and the §5.4 ablation.
+
+use crate::util::f16;
+
+/// Wire precision of a hidden-state payload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    F16,
+    F32,
+}
+
+impl Precision {
+    pub fn bytes_per_elem(self) -> usize {
+        match self {
+            Precision::F16 => 2,
+            Precision::F32 => 4,
+        }
+    }
+
+    pub fn from_flag(half_precision: bool) -> Self {
+        if half_precision { Precision::F16 } else { Precision::F32 }
+    }
+}
+
+/// Pack an f32 slice into wire bytes (little-endian).
+///
+/// Writes into a pre-sized buffer through `chunks_exact_mut` (no per-
+/// element growth checks, auto-vectorizable) — see EXPERIMENTS.md §Perf
+/// for the before/after.
+pub fn pack(values: &[f32], precision: Precision) -> Vec<u8> {
+    match precision {
+        Precision::F32 => {
+            let mut out = vec![0u8; values.len() * 4];
+            for (chunk, v) in out.chunks_exact_mut(4).zip(values) {
+                chunk.copy_from_slice(&v.to_le_bytes());
+            }
+            out
+        }
+        Precision::F16 => {
+            let mut out = vec![0u8; values.len() * 2];
+            for (chunk, v) in out.chunks_exact_mut(2).zip(values) {
+                chunk.copy_from_slice(&f16::f32_to_f16_bits(*v).to_le_bytes());
+            }
+            out
+        }
+    }
+}
+
+/// Unpack wire bytes back to f32.  Errors on length mismatch.
+pub fn unpack(bytes: &[u8], precision: Precision) -> anyhow::Result<Vec<f32>> {
+    let esz = precision.bytes_per_elem();
+    if bytes.len() % esz != 0 {
+        anyhow::bail!("payload length {} not a multiple of {}", bytes.len(), esz);
+    }
+    let n = bytes.len() / esz;
+    let mut out = Vec::with_capacity(n);
+    match precision {
+        Precision::F32 => {
+            for c in bytes.chunks_exact(4) {
+                out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+            }
+        }
+        Precision::F16 => {
+            for c in bytes.chunks_exact(2) {
+                out.push(f16::f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])));
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Statistics from quantizing a batch of activations — mirrors the paper's
+/// feasibility analysis ("values ranged from −6553.19 to 2126.24, within
+/// the representable range of float16").
+#[derive(Debug, Clone, Default)]
+pub struct QuantStats {
+    pub min: f32,
+    pub max: f32,
+    pub max_abs_err: f32,
+    pub mean_abs_err: f64,
+    pub n: usize,
+    pub out_of_range: usize,
+}
+
+/// f16 range limit.
+pub const F16_MAX: f32 = 65504.0;
+
+pub fn analyze(values: &[f32]) -> QuantStats {
+    let mut s = QuantStats {
+        min: f32::INFINITY,
+        max: f32::NEG_INFINITY,
+        ..Default::default()
+    };
+    let mut sum_err = 0f64;
+    for &v in values {
+        s.min = s.min.min(v);
+        s.max = s.max.max(v);
+        if v.abs() > F16_MAX {
+            s.out_of_range += 1;
+        }
+        let err = (f16::quantize(v) - v).abs();
+        s.max_abs_err = s.max_abs_err.max(err);
+        sum_err += err as f64;
+    }
+    s.n = values.len();
+    s.mean_abs_err = if s.n > 0 { sum_err / s.n as f64 } else { 0.0 };
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip_is_exact() {
+        let v = vec![0.0, 1.5, -3.25, 1e-7, 6553.1875, -6553.1875];
+        let b = pack(&v, Precision::F32);
+        assert_eq!(b.len(), v.len() * 4);
+        assert_eq!(unpack(&b, Precision::F32).unwrap(), v);
+    }
+
+    #[test]
+    fn f16_roundtrip_small_relative_error() {
+        let v: Vec<f32> = (0..1000).map(|i| (i as f32 - 500.0) * 0.37).collect();
+        let back = unpack(&pack(&v, Precision::F16), Precision::F16).unwrap();
+        for (a, b) in v.iter().zip(&back) {
+            let rel = (a - b).abs() / a.abs().max(1.0);
+            assert!(rel < 1e-3, "rel err {rel} for {a} -> {b}");
+        }
+    }
+
+    #[test]
+    fn f16_halves_the_bytes() {
+        let v = vec![1.0f32; 128];
+        assert_eq!(pack(&v, Precision::F16).len() * 2, pack(&v, Precision::F32).len());
+    }
+
+    #[test]
+    fn paper_observed_range_fits_f16() {
+        // the exact range the paper reports for hidden states
+        let s = analyze(&[-6553.1875, 2126.2419]);
+        assert_eq!(s.out_of_range, 0);
+        assert!(s.max_abs_err / 6553.19 < 1e-3);
+    }
+
+    #[test]
+    fn unpack_rejects_ragged_payload() {
+        assert!(unpack(&[1, 2, 3], Precision::F16).is_err());
+        assert!(unpack(&[1, 2, 3, 4, 5], Precision::F32).is_err());
+    }
+
+    #[test]
+    fn analyze_flags_out_of_range() {
+        let s = analyze(&[70000.0, -70000.0, 1.0]);
+        assert_eq!(s.out_of_range, 2);
+        assert_eq!(s.n, 3);
+    }
+}

@@ -1,0 +1,121 @@
+//! A loaded AOT artifact: HLO text compiled to a PJRT executable, plus its
+//! typed signature from the manifest.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use crate::model::manifest::ArtifactSig;
+
+pub struct Artifact {
+    pub name: String,
+    pub sig: ArtifactSig,
+    exe: PjRtLoadedExecutable,
+    client: PjRtClient,
+    out_idx: HashMap<String, usize>,
+}
+
+impl Artifact {
+    /// Load `<dir>/<sig.file>` (HLO text) and compile it.
+    pub fn load(client: &PjRtClient, dir: &Path, name: &str, sig: &ArtifactSig) -> Result<Self> {
+        let path = dir.join(&sig.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+        let out_idx =
+            sig.outputs.iter().enumerate().map(|(i, t)| (t.name.clone(), i)).collect();
+        Ok(Self { name: name.to_string(), sig: sig.clone(), exe, client: client.clone(), out_idx })
+    }
+
+    /// Execute with pre-staged parameter buffers followed by runtime
+    /// literals (converted to device buffers here).  Returns the
+    /// decomposed output tuple.
+    pub fn execute(&self, params: &[PjRtBuffer], runtime: &[Literal]) -> Result<Outputs> {
+        anyhow::ensure!(
+            runtime.len() == self.sig.inputs.len(),
+            "{}: expected {} runtime inputs, got {}",
+            self.name,
+            self.sig.inputs.len(),
+            runtime.len()
+        );
+        let mut staged: Vec<PjRtBuffer> = Vec::with_capacity(runtime.len());
+        for lit in runtime {
+            staged.push(
+                self.client
+                    .buffer_from_host_literal(None, lit)
+                    .map_err(|e| anyhow::anyhow!("{}: staging input: {e:?}", self.name))?,
+            );
+        }
+        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(params.len() + staged.len());
+        args.extend(params.iter());
+        args.extend(staged.iter());
+
+        let result = self
+            .exe
+            .execute_b(&args)
+            .map_err(|e| anyhow::anyhow!("{}: execute: {e:?}", self.name))?;
+        let tuple = result
+            .first()
+            .and_then(|r| r.first())
+            .with_context(|| format!("{}: empty execution result", self.name))?;
+        let mut lit = tuple
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("{}: output to host: {e:?}", self.name))?;
+        let parts = lit
+            .decompose_tuple()
+            .map_err(|e| anyhow::anyhow!("{}: decompose tuple: {e:?}", self.name))?;
+        anyhow::ensure!(
+            parts.len() == self.sig.outputs.len(),
+            "{}: {} outputs, manifest says {}",
+            self.name,
+            parts.len(),
+            self.sig.outputs.len()
+        );
+        Ok(Outputs { lits: parts.into_iter().map(Some).collect(), idx: self.out_idx.clone() })
+    }
+}
+
+/// Decomposed outputs of one execution, addressable by manifest name.
+pub struct Outputs {
+    lits: Vec<Option<Literal>>,
+    idx: HashMap<String, usize>,
+}
+
+impl Outputs {
+    fn slot(&mut self, name: &str) -> Result<&mut Option<Literal>> {
+        let i = *self
+            .idx
+            .get(name)
+            .with_context(|| format!("output '{name}' not in artifact signature"))?;
+        Ok(&mut self.lits[i])
+    }
+
+    /// Move an output literal out (for KV caches fed back next step).
+    pub fn take(&mut self, name: &str) -> Result<Literal> {
+        self.slot(name)?
+            .take()
+            .with_context(|| format!("output '{name}' already taken"))
+    }
+
+    pub fn f32_vec(&mut self, name: &str) -> Result<Vec<f32>> {
+        let lit = self.slot(name)?.as_ref().context("output already taken")?;
+        super::literal::to_f32_vec(lit)
+    }
+
+    pub fn f32_scalar(&mut self, name: &str) -> Result<f32> {
+        let lit = self.slot(name)?.as_ref().context("output already taken")?;
+        super::literal::to_f32_scalar(lit)
+    }
+
+    pub fn i32_scalar(&mut self, name: &str) -> Result<i32> {
+        let lit = self.slot(name)?.as_ref().context("output already taken")?;
+        super::literal::to_i32_scalar(lit)
+    }
+}

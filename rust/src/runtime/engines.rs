@@ -1,0 +1,171 @@
+//! Real PJRT-backed engine sessions.
+//!
+//! Sessions hold their KV caches as host `Literal`s between steps (the
+//! `xla` crate returns execution outputs as one tuple buffer, so caches
+//! round-trip through the host; see EXPERIMENTS.md §Perf for the measured
+//! cost and the mitigations applied).
+
+use std::rc::Rc;
+
+use anyhow::Result;
+use xla::{Literal, PjRtBuffer};
+
+use crate::model::manifest::ModelDims;
+use crate::runtime::literal::{f32_literal, i32_literal, scalar_i32};
+use crate::runtime::stack::LoadedArtifacts;
+use crate::runtime::traits::{
+    CloudEngine, CloudOut, EdgeEngine, EdgePrefillOut, ExitEval, Seg1Out, Seg2Out,
+};
+
+pub struct EdgeSession {
+    dims: ModelDims,
+    arts: Rc<LoadedArtifacts>,
+    params: Rc<Vec<PjRtBuffer>>,
+    kv1: Option<(Literal, Literal)>,
+    kv2: Option<(Literal, Literal)>,
+}
+
+impl EdgeSession {
+    pub fn new(dims: ModelDims, arts: Rc<LoadedArtifacts>, params: Rc<Vec<PjRtBuffer>>) -> Self {
+        Self { dims, arts, params, kv1: None, kv2: None }
+    }
+
+    fn exit_eval(out: &mut super::artifact::Outputs, prefix: &str) -> Result<ExitEval> {
+        Ok(ExitEval {
+            token: out.i32_scalar(&format!("{prefix}_tok"))?,
+            conf: out.f32_scalar(&format!("{prefix}_conf"))?,
+            logits: out.f32_vec(&format!("{prefix}_logits"))?,
+        })
+    }
+}
+
+impl EdgeEngine for EdgeSession {
+    fn dims(&self) -> &ModelDims {
+        &self.dims
+    }
+
+    fn prefill(&mut self, prompt: &[i32]) -> Result<EdgePrefillOut> {
+        let p_max = self.dims.max_prompt;
+        anyhow::ensure!(
+            !prompt.is_empty() && prompt.len() <= p_max,
+            "prompt length {} out of range 1..={p_max}",
+            prompt.len()
+        );
+        // pick the smallest prefill bucket that fits (perf: short prompts
+        // skip 3/4 of the pad; EXPERIMENTS.md §Perf)
+        let (artifact, p) = match &self.arts.edge_prefill_64 {
+            Some(a) if prompt.len() <= 64 => (a, 64),
+            _ => (&self.arts.edge_prefill, p_max),
+        };
+        let mut tokens = prompt.to_vec();
+        tokens.resize(p, self.dims.pad_id);
+        let mut out = artifact.execute(
+            &self.params,
+            &[i32_literal(&tokens, &[p])?, scalar_i32(prompt.len() as i32)],
+        )?;
+        self.kv1 = Some((out.take("kv1_k")?, out.take("kv1_v")?));
+        self.kv2 = Some((out.take("kv2_k")?, out.take("kv2_v")?));
+        let h1_full = out.f32_vec("h1")?; // [max_prompt * d]
+        let h1 = h1_full[..prompt.len() * self.dims.d_model].to_vec();
+        Ok(EdgePrefillOut {
+            h1,
+            exit1: Self::exit_eval(&mut out, "e1")?,
+            exit2: Self::exit_eval(&mut out, "e2")?,
+        })
+    }
+
+    fn seg1(&mut self, token: i32, pos: usize) -> Result<Seg1Out> {
+        let (kv_k, kv_v) = self.kv1.take().ok_or_else(|| anyhow::anyhow!("seg1 before prefill"))?;
+        anyhow::ensure!(pos < self.dims.max_seq, "pos {pos} >= max_seq");
+        let mut out = self.arts.edge_seg1_decode.execute(
+            &self.params,
+            &[kv_k, kv_v, scalar_i32(token), scalar_i32(pos as i32)],
+        )?;
+        self.kv1 = Some((out.take("kv1_k")?, out.take("kv1_v")?));
+        Ok(Seg1Out { h1: out.f32_vec("h1")?, exit1: Self::exit_eval(&mut out, "e1")? })
+    }
+
+    fn seg2(&mut self, h1: &[f32], pos: usize) -> Result<Seg2Out> {
+        let (kv_k, kv_v) = self.kv2.take().ok_or_else(|| anyhow::anyhow!("seg2 before prefill"))?;
+        let d = self.dims.d_model;
+        anyhow::ensure!(h1.len() == d, "h1 length {} != d_model {d}", h1.len());
+        let mut out = self.arts.edge_seg2_decode.execute(
+            &self.params,
+            &[kv_k, kv_v, f32_literal(h1, &[1, d])?, scalar_i32(pos as i32)],
+        )?;
+        self.kv2 = Some((out.take("kv2_k")?, out.take("kv2_v")?));
+        Ok(Seg2Out { exit2: Self::exit_eval(&mut out, "e2")? })
+    }
+
+    fn reset(&mut self) {
+        self.kv1 = None;
+        self.kv2 = None;
+    }
+}
+
+pub struct CloudSession {
+    dims: ModelDims,
+    arts: Rc<LoadedArtifacts>,
+    params: Rc<Vec<PjRtBuffer>>,
+    kvc: Option<(Literal, Literal)>,
+}
+
+impl CloudSession {
+    pub fn new(dims: ModelDims, arts: Rc<LoadedArtifacts>, params: Rc<Vec<PjRtBuffer>>) -> Self {
+        Self { dims, arts, params, kvc: None }
+    }
+
+    fn exit_eval(out: &mut super::artifact::Outputs) -> Result<ExitEval> {
+        Ok(ExitEval {
+            token: out.i32_scalar("tok")?,
+            conf: out.f32_scalar("conf")?,
+            logits: out.f32_vec("logits")?,
+        })
+    }
+}
+
+impl CloudEngine for CloudSession {
+    fn dims(&self) -> &ModelDims {
+        &self.dims
+    }
+
+    fn prefill(&mut self, h1: &[f32], len: usize) -> Result<CloudOut> {
+        let (p_max, d) = (self.dims.max_prompt, self.dims.d_model);
+        anyhow::ensure!(len >= 1 && len <= p_max, "prompt length {len} out of range");
+        anyhow::ensure!(h1.len() == len * d, "h1 len {} != {len}*{d}", h1.len());
+        let (artifact, p) = match &self.arts.cloud_prefill_64 {
+            Some(a) if len <= 64 => (a, 64),
+            _ => (&self.arts.cloud_prefill, p_max),
+        };
+        let mut padded = vec![0f32; p * d];
+        padded[..h1.len()].copy_from_slice(h1);
+        let mut out = artifact.execute(
+            &self.params,
+            &[f32_literal(&padded, &[p, d])?, scalar_i32(len as i32)],
+        )?;
+        self.kvc = Some((out.take("kvc_k")?, out.take("kvc_v")?));
+        Ok(CloudOut { exit: Self::exit_eval(&mut out)? })
+    }
+
+    fn decode(&mut self, h1: &[f32], pos: usize) -> Result<CloudOut> {
+        let (kv_k, kv_v) =
+            self.kvc.take().ok_or_else(|| anyhow::anyhow!("cloud decode before prefill"))?;
+        let d = self.dims.d_model;
+        anyhow::ensure!(h1.len() == d, "h1 length {} != d_model {d}", h1.len());
+        anyhow::ensure!(pos < self.dims.max_seq, "pos {pos} >= max_seq");
+        let mut out = self.arts.cloud_decode.execute(
+            &self.params,
+            &[kv_k, kv_v, f32_literal(h1, &[1, d])?, scalar_i32(pos as i32)],
+        )?;
+        self.kvc = Some((out.take("kvc_k")?, out.take("kvc_v")?));
+        Ok(CloudOut { exit: Self::exit_eval(&mut out)? })
+    }
+
+    fn is_prefilled(&self) -> bool {
+        self.kvc.is_some()
+    }
+
+    fn reset(&mut self) {
+        self.kvc = None;
+    }
+}

@@ -1,0 +1,73 @@
+//! Conversion helpers between rust slices and `xla::Literal`s.
+
+use anyhow::{Context, Result};
+use xla::Literal;
+
+/// Build an f32 literal of the given shape.
+pub fn f32_literal(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    let n: usize = dims.iter().product::<usize>().max(1);
+    anyhow::ensure!(n == data.len(), "shape {:?} wants {} elems, got {}", dims, n, data.len());
+    if dims.is_empty() {
+        return Ok(Literal::scalar(data[0]));
+    }
+    let v = Literal::vec1(data);
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(v.reshape(&dims_i64)?)
+}
+
+/// Build an i32 literal of the given shape.
+pub fn i32_literal(data: &[i32], dims: &[usize]) -> Result<Literal> {
+    let n: usize = dims.iter().product::<usize>().max(1);
+    anyhow::ensure!(n == data.len(), "shape {:?} wants {} elems, got {}", dims, n, data.len());
+    if dims.is_empty() {
+        return Ok(Literal::scalar(data[0]));
+    }
+    let v = Literal::vec1(data);
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(v.reshape(&dims_i64)?)
+}
+
+pub fn scalar_i32(v: i32) -> Literal {
+    Literal::scalar(v)
+}
+
+/// Read an f32 literal to a host vector.
+pub fn to_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().context("literal -> Vec<f32>")
+}
+
+/// Read a scalar f32 literal.
+pub fn to_f32_scalar(lit: &Literal) -> Result<f32> {
+    lit.get_first_element::<f32>().context("literal -> f32 scalar")
+}
+
+/// Read a scalar i32 literal.
+pub fn to_i32_scalar(lit: &Literal) -> Result<i32> {
+    lit.get_first_element::<i32>().context("literal -> i32 scalar")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip_shaped() {
+        let lit = f32_literal(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        assert_eq!(to_f32_vec(&lit).unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(lit.element_count(), 6);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let lit = f32_literal(&[7.5], &[]).unwrap();
+        assert_eq!(to_f32_scalar(&lit).unwrap(), 7.5);
+        let lit = scalar_i32(-3);
+        assert_eq!(to_i32_scalar(&lit).unwrap(), -3);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(f32_literal(&[1.0, 2.0], &[3]).is_err());
+        assert!(i32_literal(&[1, 2, 3], &[2]).is_err());
+    }
+}

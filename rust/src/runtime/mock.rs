@@ -1,0 +1,228 @@
+//! Deterministic scripted engines for coordinator/protocol tests.
+//!
+//! A [`MockOracle`] derives per-position confidences and tokens from a
+//! seed via splitmix64, with the structural properties the real model
+//! has: exit-2 confidence is (usually) higher than exit-1, and exit
+//! tokens agree with the cloud token exactly when their confidence is
+//! high (so threshold sweeps change outputs the way the paper describes).
+
+use anyhow::Result;
+
+use crate::model::manifest::ModelDims;
+use crate::runtime::traits::{
+    CloudEngine, CloudOut, EdgeEngine, EdgePrefillOut, ExitEval, Seg1Out, Seg2Out,
+};
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E3779B97F4A7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
+}
+
+fn unit(x: u64) -> f32 {
+    (x >> 11) as f32 / (1u64 << 53) as f32
+}
+
+/// Deterministic pseudo-model shared by a mock edge/cloud pair.
+#[derive(Debug, Clone, Copy)]
+pub struct MockOracle {
+    pub seed: u64,
+    /// EOS emitted by the *cloud/final* head at this generated position.
+    pub eos_at: Option<usize>,
+    pub eos_id: i32,
+}
+
+impl MockOracle {
+    pub fn new(seed: u64) -> Self {
+        Self { seed, eos_at: None, eos_id: 257 }
+    }
+
+    pub fn conf1(&self, pos: usize) -> f32 {
+        unit(splitmix64(self.seed ^ (pos as u64) << 1))
+    }
+
+    pub fn conf2(&self, pos: usize) -> f32 {
+        // exit 2 sees more layers: confidence no lower than exit 1 (usually)
+        let c1 = self.conf1(pos);
+        let bump = unit(splitmix64(self.seed ^ 0xABCD ^ (pos as u64) << 3));
+        (c1 + 0.3 * bump).min(0.999)
+    }
+
+    pub fn cloud_token(&self, pos: usize) -> i32 {
+        if self.eos_at == Some(pos) {
+            return self.eos_id;
+        }
+        97 + (splitmix64(self.seed ^ 0x77 ^ pos as u64) % 26) as i32
+    }
+
+    /// Exit tokens agree with the final token iff confidence ≥ 0.5 —
+    /// mirrors the paper's Table 1 (high-confidence predictions are
+    /// consistent across exits).
+    pub fn exit_token(&self, pos: usize, conf: f32) -> i32 {
+        if conf >= 0.5 {
+            self.cloud_token(pos)
+        } else {
+            97 + (splitmix64(self.seed ^ 0x1111 ^ pos as u64) % 26) as i32
+        }
+    }
+
+    fn h1(&self, pos: usize) -> Vec<f32> {
+        vec![pos as f32; 128]
+    }
+}
+
+pub struct MockEdge {
+    pub oracle: MockOracle,
+    dims: ModelDims,
+    pub prefilled: bool,
+    pub seg1_calls: usize,
+    pub seg2_calls: usize,
+}
+
+impl MockEdge {
+    pub fn new(oracle: MockOracle, dims: ModelDims) -> Self {
+        Self { oracle, dims, prefilled: false, seg1_calls: 0, seg2_calls: 0 }
+    }
+}
+
+fn eval(token: i32, conf: f32) -> ExitEval {
+    // logits consistent with argmax=token: one-hot-ish vector
+    let mut logits = vec![0f32; 384];
+    logits[token.clamp(0, 383) as usize] = 10.0;
+    ExitEval { token, conf, logits }
+}
+
+impl EdgeEngine for MockEdge {
+    fn dims(&self) -> &ModelDims {
+        &self.dims
+    }
+
+    fn prefill(&mut self, prompt: &[i32]) -> Result<EdgePrefillOut> {
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        self.prefilled = true;
+        let pos = prompt.len() - 1;
+        let (c1, c2) = (self.oracle.conf1(pos), self.oracle.conf2(pos));
+        Ok(EdgePrefillOut {
+            h1: (0..prompt.len()).flat_map(|p| self.oracle.h1(p)).collect(),
+            exit1: eval(self.oracle.exit_token(pos, c1), c1),
+            exit2: eval(self.oracle.exit_token(pos, c2), c2),
+        })
+    }
+
+    fn seg1(&mut self, _token: i32, pos: usize) -> Result<Seg1Out> {
+        anyhow::ensure!(self.prefilled, "seg1 before prefill");
+        self.seg1_calls += 1;
+        let c1 = self.oracle.conf1(pos);
+        Ok(Seg1Out { h1: self.oracle.h1(pos), exit1: eval(self.oracle.exit_token(pos, c1), c1) })
+    }
+
+    fn seg2(&mut self, _h1: &[f32], pos: usize) -> Result<Seg2Out> {
+        anyhow::ensure!(self.prefilled, "seg2 before prefill");
+        self.seg2_calls += 1;
+        let c2 = self.oracle.conf2(pos);
+        Ok(Seg2Out { exit2: eval(self.oracle.exit_token(pos, c2), c2) })
+    }
+
+    fn reset(&mut self) {
+        self.prefilled = false;
+    }
+}
+
+pub struct MockCloud {
+    pub oracle: MockOracle,
+    dims: ModelDims,
+    prefilled: bool,
+    pub prefill_calls: usize,
+    pub decode_calls: usize,
+    /// Positions decoded, for catch-up/content-manager assertions.
+    pub decoded_positions: Vec<usize>,
+}
+
+impl MockCloud {
+    pub fn new(oracle: MockOracle, dims: ModelDims) -> Self {
+        Self { oracle, dims, prefilled: false, prefill_calls: 0, decode_calls: 0, decoded_positions: vec![] }
+    }
+}
+
+impl CloudEngine for MockCloud {
+    fn dims(&self) -> &ModelDims {
+        &self.dims
+    }
+
+    fn prefill(&mut self, h1: &[f32], len: usize) -> Result<CloudOut> {
+        anyhow::ensure!(h1.len() == len * self.dims.d_model, "h1/len mismatch");
+        self.prefilled = true;
+        self.prefill_calls += 1;
+        let pos = len - 1;
+        Ok(CloudOut { exit: eval(self.oracle.cloud_token(pos), 0.95) })
+    }
+
+    fn decode(&mut self, h1: &[f32], pos: usize) -> Result<CloudOut> {
+        anyhow::ensure!(self.prefilled, "cloud decode before prefill");
+        anyhow::ensure!(h1.len() == self.dims.d_model, "h1 wrong length");
+        self.decode_calls += 1;
+        self.decoded_positions.push(pos);
+        Ok(CloudOut { exit: eval(self.oracle.cloud_token(pos), 0.95) })
+    }
+
+    fn is_prefilled(&self) -> bool {
+        self.prefilled
+    }
+
+    fn reset(&mut self) {
+        self.prefilled = false;
+        self.decoded_positions.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::test_manifest;
+
+    #[test]
+    fn oracle_deterministic_and_bounded() {
+        let o = MockOracle::new(7);
+        for pos in 0..100 {
+            let c1 = o.conf1(pos);
+            assert!((0.0..=1.0).contains(&c1));
+            assert!(o.conf2(pos) >= c1 - 1e-6);
+            assert_eq!(o.cloud_token(pos), o.cloud_token(pos));
+        }
+    }
+
+    #[test]
+    fn high_conf_exit_tokens_agree_with_cloud() {
+        let o = MockOracle::new(3);
+        for pos in 0..200 {
+            let c = o.conf1(pos);
+            if c >= 0.5 {
+                assert_eq!(o.exit_token(pos, c), o.cloud_token(pos));
+            }
+        }
+    }
+
+    #[test]
+    fn engine_ordering_enforced() {
+        let dims = test_manifest().model;
+        let o = MockOracle::new(1);
+        let mut e = MockEdge::new(o, dims.clone());
+        assert!(e.seg1(0, 0).is_err());
+        e.prefill(&[256, 97]).unwrap();
+        assert!(e.seg1(0, 2).is_ok());
+
+        let mut c = MockCloud::new(o, dims);
+        assert!(c.decode(&vec![0.0; 128], 2).is_err());
+        c.prefill(&vec![0.0; 2 * 128], 2).unwrap();
+        assert!(c.decode(&vec![0.0; 128], 2).is_ok());
+    }
+
+    #[test]
+    fn eos_scripting() {
+        let mut o = MockOracle::new(1);
+        o.eos_at = Some(5);
+        assert_eq!(o.cloud_token(5), o.eos_id);
+        assert_ne!(o.cloud_token(4), o.eos_id);
+    }
+}

@@ -1,0 +1,20 @@
+//! PJRT runtime: loads the AOT HLO artifacts and executes them on the CPU
+//! PJRT client.  Python never runs here — the artifacts are self-contained.
+//!
+//! Thread model: the `xla` crate's `PjRtClient` is `Rc`-based (`!Send`),
+//! so every PJRT object lives on the thread that created it.  The
+//! coordinator talks to engines through the [`traits`] interfaces; the
+//! cloud server hosts its engine on a dedicated "GPU thread" actor
+//! ([`crate::coordinator::cloud`]), which also gives the paper's
+//! single-GPU FIFO semantics for free.
+
+pub mod artifact;
+pub mod engines;
+pub mod literal;
+pub mod mock;
+pub mod stack;
+pub mod traits;
+
+pub use artifact::{Artifact, Outputs};
+pub use stack::LocalStack;
+pub use traits::{CloudEngine, CloudOut, EdgeEngine, EdgePrefillOut, ExitEval, Seg1Out, Seg2Out};

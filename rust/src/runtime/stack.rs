@@ -1,0 +1,118 @@
+//! `LocalStack`: one-stop loader for the artifact directory.
+//!
+//! Owns the PJRT client, the compiled artifacts, and the parameter
+//! buffers (staged to the device once — the request path never re-uploads
+//! weights).  Hands out per-request edge/cloud sessions that share them.
+
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+use xla::{PjRtBuffer, PjRtClient};
+
+use crate::model::manifest::Manifest;
+use crate::model::tokenizer::Tokenizer;
+use crate::model::weights::Weights;
+use crate::runtime::artifact::Artifact;
+use crate::runtime::engines::{EdgeSession, CloudSession};
+
+pub struct LoadedArtifacts {
+    pub edge_prefill: Artifact,
+    pub edge_seg1_decode: Artifact,
+    pub edge_seg2_decode: Artifact,
+    pub cloud_prefill: Artifact,
+    pub cloud_decode: Artifact,
+    /// Short-prompt prefill buckets (P=64) — optional perf artifacts that
+    /// skip ~3/4 of the prefill pad for Alpaca-length prompts.
+    pub edge_prefill_64: Option<Artifact>,
+    pub cloud_prefill_64: Option<Artifact>,
+}
+
+pub struct LocalStack {
+    pub client: PjRtClient,
+    pub manifest: Manifest,
+    pub artifacts: Rc<LoadedArtifacts>,
+    /// Edge-partition parameters, staged on device in manifest order.
+    pub edge_params: Rc<Vec<PjRtBuffer>>,
+    /// Cloud-partition parameters, staged on device in manifest order.
+    pub cloud_params: Rc<Vec<PjRtBuffer>>,
+    pub dir: PathBuf,
+}
+
+impl LocalStack {
+    /// Load manifest, weights and all five artifacts from `dir`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let weights = Weights::load(&dir.join("weights.bin"))?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+
+        let stage = |partition: &str| -> Result<Vec<PjRtBuffer>> {
+            let sigs = manifest
+                .partitions
+                .get(partition)
+                .with_context(|| format!("partition '{partition}'"))?;
+            let mut bufs = Vec::with_capacity(sigs.len());
+            for sig in sigs {
+                let t = weights.get(&sig.name)?;
+                anyhow::ensure!(
+                    t.shape == sig.shape,
+                    "weight '{}' shape {:?} != manifest {:?}",
+                    sig.name,
+                    t.shape,
+                    sig.shape
+                );
+                let buf = client
+                    .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
+                    .map_err(|e| anyhow::anyhow!("staging '{}': {e:?}", sig.name))?;
+                bufs.push(buf);
+            }
+            Ok(bufs)
+        };
+        let edge_params = Rc::new(stage("edge")?);
+        let cloud_params = Rc::new(stage("cloud")?);
+
+        let load = |name: &str| -> Result<Artifact> {
+            Artifact::load(&client, &dir, name, manifest.artifact(name)?)
+        };
+        let load_opt = |name: &str| -> Result<Option<Artifact>> {
+            match manifest.artifacts.get(name) {
+                Some(sig) => Ok(Some(Artifact::load(&client, &dir, name, sig)?)),
+                None => Ok(None),
+            }
+        };
+        let artifacts = Rc::new(LoadedArtifacts {
+            edge_prefill: load("edge_prefill")?,
+            edge_seg1_decode: load("edge_seg1_decode")?,
+            edge_seg2_decode: load("edge_seg2_decode")?,
+            cloud_prefill: load("cloud_prefill")?,
+            cloud_decode: load("cloud_decode")?,
+            edge_prefill_64: load_opt("edge_prefill_64")?,
+            cloud_prefill_64: load_opt("cloud_prefill_64")?,
+        });
+
+        Ok(Self { client, manifest, artifacts, edge_params, cloud_params, dir })
+    }
+
+    pub fn tokenizer(&self) -> Tokenizer {
+        Tokenizer::from_dims(&self.manifest.model)
+    }
+
+    /// A fresh edge session (empty KV caches) sharing this stack.
+    pub fn edge_session(&self) -> EdgeSession {
+        EdgeSession::new(
+            self.manifest.model.clone(),
+            Rc::clone(&self.artifacts),
+            Rc::clone(&self.edge_params),
+        )
+    }
+
+    /// A fresh cloud session (empty KV caches) sharing this stack.
+    pub fn cloud_session(&self) -> CloudSession {
+        CloudSession::new(
+            self.manifest.model.clone(),
+            Rc::clone(&self.artifacts),
+            Rc::clone(&self.cloud_params),
+        )
+    }
+}

@@ -1,0 +1,86 @@
+//! Engine interfaces the coordinator is written against.
+//!
+//! Real implementations ([`super::engines`]) execute PJRT artifacts;
+//! [`super::mock`] provides scripted engines so every coordinator policy
+//! and protocol path is testable without artifacts.  Neither is `Send`
+//! (PJRT handles are `Rc`-based); engines are owned by their thread.
+
+use anyhow::Result;
+
+use crate::model::manifest::ModelDims;
+
+/// Result of evaluating one exit head (paper §4.4 step 2): the argmax
+/// token, its confidence (max softmax probability, produced by the fused
+/// Pallas kernel), and the full logits for optional resampling.
+#[derive(Debug, Clone)]
+pub struct ExitEval {
+    pub token: i32,
+    pub conf: f32,
+    pub logits: Vec<f32>,
+}
+
+/// Edge prefill output: exit evaluations at the last prompt position plus
+/// the exit-1 hidden states for the whole prompt (the upload payload).
+#[derive(Debug, Clone)]
+pub struct EdgePrefillOut {
+    /// `[len * d_model]` hidden states at `l_ee1`, valid positions only.
+    pub h1: Vec<f32>,
+    pub exit1: ExitEval,
+    pub exit2: ExitEval,
+}
+
+/// Edge segment-1 decode output (layers `0..l_ee1` + exit head 1).
+#[derive(Debug, Clone)]
+pub struct Seg1Out {
+    /// `[d_model]` hidden state at `l_ee1` — uploaded to the cloud.
+    pub h1: Vec<f32>,
+    pub exit1: ExitEval,
+}
+
+/// Edge segment-2 decode output (layers `l_ee1..l_ee2` + exit head 2).
+#[derive(Debug, Clone)]
+pub struct Seg2Out {
+    pub exit2: ExitEval,
+}
+
+/// Cloud partition output (layers `l_ee1..n_layers` + final head).
+#[derive(Debug, Clone)]
+pub struct CloudOut {
+    pub exit: ExitEval,
+}
+
+/// The edge device's model partition (paper §4.1).
+pub trait EdgeEngine {
+    fn dims(&self) -> &ModelDims;
+
+    /// Process a full prompt (already tokenized, `BOS`-prefixed,
+    /// unpadded).  Fills the edge KV caches.
+    fn prefill(&mut self, prompt: &[i32]) -> Result<EdgePrefillOut>;
+
+    /// Layers `0..l_ee1` for one token at `pos`; evaluates exit 1.
+    fn seg1(&mut self, token: i32, pos: usize) -> Result<Seg1Out>;
+
+    /// Layers `l_ee1..l_ee2` from the exit-1 hidden; evaluates exit 2.
+    fn seg2(&mut self, h1: &[f32], pos: usize) -> Result<Seg2Out>;
+
+    /// Clear KV state for a new request (paper §4.4 step 6).
+    fn reset(&mut self);
+}
+
+/// The cloud's model partition (paper §4.2), one session per edge device.
+pub trait CloudEngine {
+    fn dims(&self) -> &ModelDims;
+
+    /// Build the cloud KV caches from uploaded prompt hidden states
+    /// (`[len * d_model]`) and return the final-head evaluation at the
+    /// last prompt position.
+    fn prefill(&mut self, h1: &[f32], len: usize) -> Result<CloudOut>;
+
+    /// One decode step from an uploaded `[d_model]` hidden at `pos`.
+    fn decode(&mut self, h1: &[f32], pos: usize) -> Result<CloudOut>;
+
+    /// Whether `prefill` has been run for the current session.
+    fn is_prefilled(&self) -> bool;
+
+    fn reset(&mut self);
+}

@@ -1,0 +1,102 @@
+//! Minimal benchmarking harness (the offline environment has no
+//! criterion).  Warmup + timed iterations, reporting mean / p50 / p90 in
+//! adaptive units; used by the `benches/` targets run via `cargo bench`.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p90_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10}/iter  p50 {:>10}  p90 {:>10}  ({} iters)",
+            self.name,
+            fmt_dur(self.mean_s),
+            fmt_dur(self.p50_s),
+            fmt_dur(self.p90_s),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_dur(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Run `f` repeatedly for roughly `budget_s` seconds (after warmup) and
+/// report per-iteration statistics.  `f`'s return value is black-boxed.
+pub fn bench<T>(name: &str, budget_s: f64, mut f: impl FnMut() -> T) -> BenchResult {
+    // warmup: one call, then estimate batch size
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let first = t0.elapsed().as_secs_f64().max(1e-9);
+
+    let target_iters = ((budget_s / first) as usize).clamp(1, 100_000);
+    let mut samples = Vec::with_capacity(target_iters);
+    let bench_start = Instant::now();
+    for _ in 0..target_iters {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t.elapsed().as_secs_f64());
+        if bench_start.elapsed().as_secs_f64() > budget_s * 2.0 {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.total_cmp(b));
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let r = BenchResult {
+        name: name.to_string(),
+        iters: n,
+        mean_s: mean,
+        p50_s: samples[n / 2],
+        p90_s: samples[(n * 9) / 10],
+    };
+    println!("{}", r.report());
+    r
+}
+
+/// Throughput helper: report bytes/s for a payload-processing closure.
+pub fn bench_throughput(name: &str, bytes_per_iter: usize, budget_s: f64, f: impl FnMut() -> Vec<u8>) {
+    let mut f = f;
+    let r = bench(name, budget_s, || f());
+    println!(
+        "{:<44} {:>10.2} MB/s",
+        format!("{name} (throughput)"),
+        bytes_per_iter as f64 / r.mean_s / 1e6
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let r = bench("noop", 0.02, || 1 + 1);
+        assert!(r.iters >= 1);
+        assert!(r.mean_s >= 0.0 && r.p50_s <= r.p90_s + 1e-12);
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert!(fmt_dur(2.0).ends_with(" s"));
+        assert!(fmt_dur(2e-3).ends_with(" ms"));
+        assert!(fmt_dur(2e-6).ends_with(" µs"));
+        assert!(fmt_dur(2e-9).ends_with(" ns"));
+    }
+}

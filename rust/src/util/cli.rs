@@ -1,0 +1,87 @@
+//! Tiny command-line parser for the `ce-collm` binary and examples
+//! (offline environment: no clap).  Supports `--flag`, `--key value`,
+//! `--key=value`, and positional arguments.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, Option<String>>,
+}
+
+impl Args {
+    pub fn parse_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(iter: I) -> Self {
+        let mut out = Args::default();
+        let mut iter = iter.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(rest) = arg.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), Some(v.to_string()));
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.flags.insert(rest.to_string(), iter.next());
+                } else {
+                    out.flags.insert(rest.to_string(), None);
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).and_then(|v| v.as_deref())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse("table 2 --repeats 5 --verbose --out=x.md");
+        assert_eq!(a.positional, vec!["table", "2"]);
+        assert_eq!(a.get("repeats"), Some("5"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.get("out"), Some("x.md"));
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = parse("--n 7");
+        assert_eq!(a.get_parse("n", 0usize), 7);
+        assert_eq!(a.get_parse("missing", 3.5f64), 3.5);
+        assert_eq!(a.get_parse("n", 0.0f64), 7.0);
+        assert_eq!(a.get_or("missing", "d"), "d");
+    }
+
+    #[test]
+    fn bare_flag_before_flag_not_greedy() {
+        let a = parse("--verbose --n 2");
+        assert!(a.has("verbose"));
+        assert_eq!(a.get("verbose"), None);
+        assert_eq!(a.get("n"), Some("2"));
+    }
+}

@@ -1,0 +1,166 @@
+//! IEEE 754 binary16 conversion (no `half` crate in the offline env).
+//!
+//! Round-to-nearest-even on narrowing, full subnormal/Inf/NaN handling —
+//! bit-exact with `numpy.float16` on every value the model transmits,
+//! which is what makes the Table 3 "f16 == f32 accuracy" comparison
+//! meaningful.
+
+/// Convert an `f32` to binary16 bits (round-to-nearest-even).
+pub fn f32_to_f16_bits(value: f32) -> u16 {
+    let x = value.to_bits();
+    let sign = ((x >> 16) & 0x8000) as u16;
+    let exp = ((x >> 23) & 0xFF) as i32;
+    let mant = x & 0x7F_FFFF;
+
+    if exp == 0xFF {
+        // Inf stays Inf; any NaN becomes a quiet NaN
+        return if mant != 0 { sign | 0x7E00 } else { sign | 0x7C00 };
+    }
+
+    // unbiased exponent in f16 terms
+    let e16 = exp - 127 + 15;
+    if e16 >= 0x1F {
+        return sign | 0x7C00; // overflow -> Inf
+    }
+    if e16 <= 0 {
+        // subnormal or zero in f16
+        if e16 < -10 {
+            return sign; // too small -> signed zero
+        }
+        // implicit leading 1 joins the mantissa
+        let m = mant | 0x80_0000;
+        let shift = (14 - e16) as u32;
+        let half_ulp = 1u32 << (shift - 1);
+        let mut out = (m >> shift) as u16;
+        // round to nearest even
+        let rem = m & ((1 << shift) - 1);
+        if rem > half_ulp || (rem == half_ulp && (out & 1) == 1) {
+            out += 1;
+        }
+        return sign | out;
+    }
+
+    // normal number: keep 10 mantissa bits, round-to-nearest-even
+    let mut out = sign | ((e16 as u16) << 10) | ((mant >> 13) as u16);
+    let rem = mant & 0x1FFF;
+    if rem > 0x1000 || (rem == 0x1000 && (out & 1) == 1) {
+        out = out.wrapping_add(1); // may carry into the exponent: correct (2^k)
+    }
+    out
+}
+
+/// Convert binary16 bits to `f32` (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x03FF) as u32;
+    let bits = match (exp, mant) {
+        (0, 0) => sign,
+        (0, m) => {
+            // subnormal: renormalize
+            let mut e = 127 - 15 - 10;
+            let mut m = m;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (((e + 10 + 1) as u32) << 23) | ((m & 0x03FF) << 13)
+        }
+        (0x1F, 0) => sign | 0x7F80_0000,
+        (0x1F, m) => sign | 0x7F80_0000 | (m << 13),
+        (e, m) => sign | ((e + 127 - 15) << 23) | (m << 13),
+    };
+    f32::from_bits(bits)
+}
+
+/// One round trip through f16.
+pub fn quantize(value: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(value))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_roundtrip() {
+        for v in [0.0f32, -0.0, 1.0, -1.0, 2.0, 0.5, 0.25, 65504.0, -65504.0, 1024.0] {
+            assert_eq!(quantize(v), v, "{v}");
+        }
+    }
+
+    #[test]
+    fn sign_preserved_on_zero() {
+        assert!(quantize(-0.0).is_sign_negative());
+        assert!(quantize(0.0).is_sign_positive());
+    }
+
+    #[test]
+    fn overflow_to_infinity() {
+        assert_eq!(quantize(70000.0), f32::INFINITY);
+        assert_eq!(quantize(-70000.0), f32::NEG_INFINITY);
+        // largest finite f16 is 65504; halfway rounds to inf
+        assert_eq!(quantize(65520.0), f32::INFINITY);
+    }
+
+    #[test]
+    fn inf_nan_preserved() {
+        assert_eq!(quantize(f32::INFINITY), f32::INFINITY);
+        assert_eq!(quantize(f32::NEG_INFINITY), f32::NEG_INFINITY);
+        assert!(quantize(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn subnormals() {
+        // smallest positive f16 subnormal = 2^-24
+        let tiny = 2.0f32.powi(-24);
+        assert_eq!(quantize(tiny), tiny);
+        // below half of it underflows to zero
+        assert_eq!(quantize(tiny / 4.0), 0.0);
+        // 2^-25 is exactly half an ulp: round-to-even -> 0
+        assert_eq!(quantize(2.0f32.powi(-25)), 0.0);
+        // just above half an ulp rounds up to the smallest subnormal
+        assert_eq!(quantize(2.0f32.powi(-25) * 1.5), tiny);
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and 1+2^-10:
+        // even mantissa (1.0) wins
+        let halfway = 1.0 + 2.0f32.powi(-11);
+        assert_eq!(quantize(halfway), 1.0);
+        // 1 + 3*2^-11 is halfway between 1+2^-10 and 1+2^-9: rounds up to even
+        let halfway2 = 1.0 + 3.0 * 2.0f32.powi(-11);
+        assert_eq!(quantize(halfway2), 1.0 + 2.0 * 2.0f32.powi(-10));
+    }
+
+    #[test]
+    fn relative_error_bound_for_normals() {
+        // f16 has 11 significand bits -> rel err <= 2^-11
+        let mut x = 1e-3f32;
+        while x < 6e4 {
+            let q = quantize(x);
+            let rel = (q - x).abs() / x;
+            assert!(rel <= 2.0f32.powi(-11), "x={x} q={q} rel={rel}");
+            x *= 1.37;
+        }
+    }
+
+    #[test]
+    fn paper_observed_range_fits() {
+        for v in [-6553.1875f32, 2126.2419] {
+            let q = quantize(v);
+            assert!((q - v).abs() / v.abs() < 1e-3);
+            assert!(q.is_finite());
+        }
+    }
+
+    #[test]
+    fn carry_into_exponent_on_mantissa_overflow() {
+        // 2047.9999... pattern: mantissa all-ones rounds up to next power of two
+        let v = f16_bits_to_f32(0x6BFF); // 4092
+        let next = f16_bits_to_f32(0x6C00); // 4096
+        let mid = (v + next) / 2.0 + 0.5; // just above halfway
+        assert_eq!(quantize(mid), next);
+    }
+}

@@ -1,0 +1,9 @@
+//! Dependency-free substrates: the deployment environment is offline, so
+//! JSON parsing, half-precision conversion, PRNG, and CLI parsing are
+//! implemented here rather than pulled from crates.io.
+
+pub mod bench;
+pub mod cli;
+pub mod f16;
+pub mod json;
+pub mod rng;

@@ -1,0 +1,352 @@
+//! Property-based tests over coordinator invariants (routing, batching,
+//! state management) using the in-tree deterministic PRNG — the offline
+//! environment has no proptest crate, so shrinking is replaced by
+//! printing the failing seed.
+
+use ce_collm::config::{AblationFlags, ExitPolicy};
+use ce_collm::coordinator::content_manager::ContentManager;
+use ce_collm::coordinator::policy::{ExitPoint, TokenPolicy};
+use ce_collm::coordinator::protocol::{Channel, Message};
+use ce_collm::harness::cost::CostModel;
+use ce_collm::harness::des::{simulate, SimConfig, Strategy};
+use ce_collm::harness::trace::{record, CallTimings};
+use ce_collm::model::manifest::test_manifest;
+use ce_collm::net::profiles::LinkProfile;
+use ce_collm::quant::{self, Precision};
+use ce_collm::runtime::mock::{MockCloud, MockEdge, MockOracle};
+use ce_collm::util::rng::Rng;
+
+const CASES: usize = 64;
+
+// ---------------------------------------------------------------------------
+// protocol: encode∘decode = id for arbitrary messages
+// ---------------------------------------------------------------------------
+
+fn arb_message(rng: &mut Rng) -> Message {
+    match rng.gen_range(7) {
+        0 => Message::Hello {
+            device_id: rng.next_u64(),
+            channel: if rng.gen_bool(0.5) { Channel::Upload } else { Channel::Infer },
+        },
+        1 => {
+            let precision = if rng.gen_bool(0.5) { Precision::F16 } else { Precision::F32 };
+            let count = rng.gen_range(4) as u32 + 1;
+            let n = count as usize * 8;
+            let values: Vec<f32> =
+                (0..n).map(|_| (rng.gen_f32() - 0.5) * 2000.0).collect();
+            Message::UploadHidden {
+                device_id: rng.next_u64(),
+                req_id: rng.next_u64() as u32,
+                start_pos: rng.gen_range(1000) as u32,
+                count,
+                prompt_len: rng.gen_range(256) as u32,
+                precision,
+                payload: quant::pack(&values, precision),
+            }
+        }
+        2 => Message::InferRequest {
+            device_id: rng.next_u64(),
+            req_id: rng.next_u64() as u32,
+            pos: rng.gen_range(4096) as u32,
+            prompt_len: rng.gen_range(256) as u32,
+        },
+        3 => Message::TokenResponse {
+            req_id: rng.next_u64() as u32,
+            token: rng.gen_range(384) as i32,
+            conf: rng.gen_f32(),
+            compute_s: rng.gen_f32() * 0.1,
+        },
+        4 => Message::EndSession { device_id: rng.next_u64(), req_id: rng.next_u64() as u32 },
+        5 => Message::Ack,
+        _ => Message::Error {
+            msg: (0..rng.gen_range(64)).map(|_| (rng.gen_range(94) as u8 + 32) as char).collect(),
+        },
+    }
+}
+
+#[test]
+fn prop_protocol_roundtrip() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::seed_from_u64(seed);
+        for _ in 0..8 {
+            let msg = arb_message(&mut rng);
+            let decoded = Message::decode(&msg.encode())
+                .unwrap_or_else(|e| panic!("seed {seed}: decode failed: {e:#} for {msg:?}"));
+            assert_eq!(decoded, msg, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_protocol_rejects_random_mutation() {
+    // flipping the tag byte to an invalid value must never decode
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::seed_from_u64(seed);
+        let msg = arb_message(&mut rng);
+        let mut enc = msg.encode();
+        enc[0] = 200 + rng.gen_range(55) as u8;
+        assert!(Message::decode(&enc).is_err(), "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// quantization: f16 round trip error bound over random activations
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_f16_roundtrip_error_bounded() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::seed_from_u64(seed);
+        // cover the paper's observed activation range ±6600
+        let v: Vec<f32> = (0..256).map(|_| (rng.gen_f32() - 0.5) * 13200.0).collect();
+        let back = quant::unpack(&quant::pack(&v, Precision::F16), Precision::F16).unwrap();
+        for (a, b) in v.iter().zip(&back) {
+            let rel = (a - b).abs() / a.abs().max(1e-3);
+            assert!(rel <= 2.0f32.powi(-10), "seed {seed}: {a} -> {b} rel {rel}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// content manager: random upload orders, duplication, interleaved devices
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_content_manager_consumes_each_position_once() {
+    const D: usize = 8;
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut cm = ContentManager::new(D);
+        let plen = 1 + rng.gen_range(8);
+        let total = plen + 1 + rng.gen_range(12);
+
+        // upload all positions in random order (decode positions one by
+        // one, prompt as one batch), with random duplicates
+        let mut order: Vec<usize> = (plen..total).collect();
+        rng.shuffle(&mut order);
+        let prompt: Vec<f32> = (0..plen).flat_map(|p| vec![p as f32; D]).collect();
+        cm.upload(7, 1, 0, plen as u32, &prompt).unwrap();
+        for &p in &order {
+            cm.upload(7, 1, p as u32, plen as u32, &vec![p as f32; D]).unwrap();
+            if rng.gen_bool(0.3) {
+                cm.upload(7, 1, p as u32, plen as u32, &vec![p as f32; D]).unwrap();
+            }
+        }
+
+        // request tokens at increasing positions; every position must be
+        // delivered exactly once with the right payload
+        let mut consumed = vec![false; total];
+        let mut pos = plen - 1;
+        while pos < total - 1 {
+            pos = (pos + 1 + rng.gen_range(3)).min(total - 1);
+            let plan = cm.plan(7, 1, pos as u32, plen as u32).unwrap();
+            if let Some((h, len)) = &plan.prefill {
+                assert_eq!(*len, plen, "seed {seed}");
+                assert_eq!(h.len(), plen * D);
+                for p in 0..plen {
+                    assert!(!consumed[p]);
+                    consumed[p] = true;
+                    assert_eq!(h[p * D], p as f32, "seed {seed}");
+                }
+            }
+            for (p, h) in &plan.decode {
+                let p = *p as usize;
+                assert!(!consumed[p], "seed {seed}: pos {p} delivered twice");
+                consumed[p] = true;
+                assert_eq!(h[0], p as f32, "seed {seed}");
+            }
+        }
+        assert!(consumed[..pos + 1].iter().all(|&c| c), "seed {seed}");
+        // release-on-complete leaves nothing resident beyond unconsumed tail
+        cm.end_session(7);
+        assert_eq!(cm.pending_floats(), 0, "seed {seed}");
+        assert_eq!(cm.device_count(), 0);
+    }
+}
+
+#[test]
+fn prop_content_manager_device_isolation() {
+    const D: usize = 4;
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::seed_from_u64(seed ^ 0xD15);
+        let mut cm = ContentManager::new(D);
+        let devices: Vec<u64> = (0..3).collect();
+        for &dev in &devices {
+            let marker = dev as f32 * 100.0;
+            cm.upload(dev, 0, 0, 2, &[marker, 0.0, 0.0, 0.0, marker + 1.0, 0.0, 0.0, 0.0])
+                .unwrap();
+        }
+        // consume in random device order; payloads must not cross devices
+        let mut order = devices.clone();
+        rng.shuffle(&mut order);
+        for dev in order {
+            let plan = cm.plan(dev, 0, 1, 2).unwrap();
+            let (h, _) = plan.prefill.unwrap();
+            assert_eq!(h[0], dev as f32 * 100.0, "seed {seed}");
+            assert_eq!(h[D], dev as f32 * 100.0 + 1.0);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// policy: monotonicity over random confidences
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_policy_monotone_in_threshold() {
+    let rank = |e: ExitPoint| match e {
+        ExitPoint::Exit1 => 0,
+        ExitPoint::Exit2 => 1,
+        ExitPoint::Cloud => 2,
+    };
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::seed_from_u64(seed);
+        for _ in 0..32 {
+            let c1 = rng.gen_f32();
+            let c2 = rng.gen_f32();
+            let t_lo = rng.gen_f32();
+            let t_hi = (t_lo + rng.gen_f32() * (1.0 - t_lo)).min(1.0);
+            let lo = TokenPolicy::new(ExitPolicy::Threshold(t_lo), AblationFlags::default());
+            let hi = TokenPolicy::new(ExitPolicy::Threshold(t_hi), AblationFlags::default());
+            assert!(
+                rank(lo.decide(c1, c2)) <= rank(hi.decide(c1, c2)),
+                "seed {seed}: c=({c1},{c2}) t=({t_lo},{t_hi})"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// trace + DES: structural invariants over random mock models
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_trace_cloud_catchup_partitions_positions() {
+    let dims = test_manifest().model;
+    for seed in 0..32u64 {
+        let o = MockOracle::new(seed);
+        let mut edge = MockEdge::new(o, dims.clone());
+        let mut cloud = MockCloud::new(o, dims.clone());
+        let mut t = CallTimings::default();
+        let tr = record(
+            &mut edge,
+            &mut cloud,
+            ExitPolicy::Threshold(0.7),
+            Precision::F16,
+            "a property test prompt",
+            24,
+            &mut t,
+        )
+        .unwrap();
+        // every cloud-decoded position is consumed exactly once and in order
+        let decoded = &cloud.decoded_positions;
+        let mut sorted = decoded.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(&sorted, decoded, "seed {seed}: out-of-order or duplicate decode");
+        // catch-up sums equal the number of cloud decode calls
+        let catchup: usize = tr.steps.iter().map(|s| s.cloud_catchup).sum();
+        assert_eq!(catchup, decoded.len(), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_des_total_bounds_parts() {
+    // makespan >= each client's edge time; comm and cloud non-negative
+    let dims = test_manifest().model;
+    let cost = CostModel::synthetic(&dims);
+    for seed in 0..32u64 {
+        let o = MockOracle::new(seed);
+        let mut edge = MockEdge::new(o, dims.clone());
+        let mut cloud = MockCloud::new(o, dims.clone());
+        let mut t = CallTimings::default();
+        let tr = record(
+            &mut edge,
+            &mut cloud,
+            ExitPolicy::Threshold(0.8),
+            Precision::F16,
+            "bounds check prompt",
+            16,
+            &mut t,
+        )
+        .unwrap();
+        for strategy in [
+            Strategy::CeCollm(AblationFlags::default()),
+            Strategy::CloudOnly,
+            Strategy::NaiveSplit,
+            Strategy::Standalone,
+        ] {
+            let traces = match strategy {
+                Strategy::Standalone => {
+                    let mut e2 = MockEdge::new(o, dims.clone());
+                    let mut c2 = MockCloud::new(o, dims.clone());
+                    let mut tt = CallTimings::default();
+                    vec![vec![record(
+                        &mut e2,
+                        &mut c2,
+                        ExitPolicy::Standalone { threshold: 0.8 },
+                        Precision::F16,
+                        "bounds check prompt",
+                        16,
+                        &mut tt,
+                    )
+                    .unwrap()]]
+                }
+                _ => vec![vec![tr.clone()]],
+            };
+            let out = simulate(
+                &traces,
+                &dims,
+                &cost,
+                &SimConfig { strategy, link: LinkProfile::wifi(), seed },
+            );
+            let (c, k) = out.summed();
+            assert!(out.makespan_s >= c.edge_s - 1e-9, "seed {seed} {strategy:?}");
+            assert!(c.cloud_s >= 0.0 && c.comm_s >= 0.0);
+            assert!(k.tokens_generated > 0);
+            assert_eq!(
+                k.tokens_generated,
+                k.tokens_exit1 + k.tokens_exit2 + k.tokens_cloud,
+                "seed {seed} {strategy:?}: exit counts must partition tokens"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_des_more_clients_never_faster() {
+    let dims = test_manifest().model;
+    let cost = CostModel::synthetic(&dims);
+    let o = MockOracle::new(5);
+    let mut edge = MockEdge::new(o, dims.clone());
+    let mut cloud = MockCloud::new(o, dims.clone());
+    let mut t = CallTimings::default();
+    let tr = record(
+        &mut edge,
+        &mut cloud,
+        ExitPolicy::Threshold(0.8),
+        Precision::F16,
+        "scaling prompt",
+        16,
+        &mut t,
+    )
+    .unwrap();
+    for strategy in [Strategy::CeCollm(AblationFlags::default()), Strategy::CloudOnly] {
+        let mut prev = 0.0;
+        for n in 1..=5 {
+            let traces: Vec<Vec<_>> = (0..n).map(|_| vec![tr.clone()]).collect();
+            let out = simulate(
+                &traces,
+                &dims,
+                &cost,
+                &SimConfig { strategy, link: LinkProfile::wifi(), seed: 0 },
+            );
+            assert!(
+                out.makespan_s >= prev - 1e-9,
+                "{strategy:?}: makespan shrank {prev} -> {}",
+                out.makespan_s
+            );
+            prev = out.makespan_s;
+        }
+    }
+}

@@ -42,6 +42,7 @@ fn main() {
                     strategy: Strategy::CeCollm(AblationFlags::default()),
                     link,
                     seed: 1,
+                    workers: 1,
                 },
             )
         });

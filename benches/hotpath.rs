@@ -64,6 +64,56 @@ fn main() {
         cm.end_session(1);
     });
 
+    println!("\n== scheduler (event-driven serving core, mock engine) ==");
+    {
+        use ce_collm::coordinator::scheduler::{SchedMsg, Scheduler, SessionFactory};
+        use std::sync::Arc;
+        let dims = test_manifest().model;
+        let d = dims.d_model;
+        let sdims = dims.clone();
+        let sched = Scheduler::spawn(
+            dims,
+            ce_collm::config::CloudConfig::default(),
+            Arc::new(move || {
+                let sdims = sdims.clone();
+                let f: SessionFactory = Box::new(move |_| {
+                    Ok(Box::new(MockCloud::new(MockOracle::new(1), sdims.clone())) as _)
+                });
+                Ok(f)
+            }),
+        )
+        .unwrap();
+        let router = sched.router();
+        let mut req = 0u32;
+        bench("scheduler upload+infer round trip (8-pos prompt)", 0.3, || {
+            req += 1;
+            router
+                .send(1, SchedMsg::Upload {
+                    device: 1,
+                    session: 0,
+                    req_id: req,
+                    start_pos: 0,
+                    prompt_len: 8,
+                    hiddens: vec![0.5; 8 * d],
+                })
+                .unwrap();
+            let (reply, rx) = std::sync::mpsc::channel();
+            router
+                .send(1, SchedMsg::Infer {
+                    device: 1,
+                    session: 0,
+                    req_id: req,
+                    pos: 7,
+                    prompt_len: 8,
+                    deadline: None,
+                    reply,
+                })
+                .unwrap();
+            rx.recv().unwrap().unwrap()
+        });
+        sched.shutdown();
+    }
+
     println!("\n== eval ==");
     let a = "the machine is a test of a system's ability to exhibit intelligent behaviour";
     let b = "the machine is a test of a network's ability to produce intelligent behaviour";
@@ -88,6 +138,7 @@ fn main() {
                 strategy: Strategy::CeCollm(AblationFlags::default()),
                 link: LinkProfile::paper_scaled(),
                 seed: 0,
+                workers: 1,
             },
         )
     });

@@ -40,7 +40,7 @@ fn main() {
                 &per_client,
                 &dims,
                 &rec.cost,
-                &SimConfig { strategy: Strategy::CeCollm(flags), link, seed: 1 },
+                &SimConfig { strategy: Strategy::CeCollm(flags), link, seed: 1, workers: 1 },
             )
         });
     }

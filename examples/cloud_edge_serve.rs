@@ -5,14 +5,14 @@
 //! the request-cloud rate.
 //!
 //!     cargo run --release --example cloud_edge_serve -- [--clients 3]
-//!         [--prompts 5] [--threshold 0.8] [--link wifi]
+//!         [--prompts 5] [--threshold 0.8] [--link wifi] [--workers 2]
 
 use std::net::TcpListener;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use ce_collm::config::DeploymentConfig;
+use ce_collm::config::{CloudConfig, DeploymentConfig};
 use ce_collm::coordinator::cloud::{CloudServer, SessionFactory};
 use ce_collm::coordinator::edge::{CloudLink, EdgeClient};
 use ce_collm::eval::datasets::{self, Dataset};
@@ -27,20 +27,30 @@ fn main() -> Result<()> {
     let n_clients: usize = args.get_parse("clients", 3);
     let n_prompts: usize = args.get_parse("prompts", 5);
     let threshold: f32 = args.get_parse("threshold", 0.8);
+    let workers: usize = args.get_parse("workers", 2);
     let link = LinkProfile::by_name(&args.get_or("link", "wifi")).expect("link profile");
     let artifacts = args.get_or("artifacts", "artifacts");
 
     let dims = Manifest::load(std::path::Path::new(&artifacts))?.model;
     let listener = TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?;
-    println!("starting cloud server on {addr} (link profile: {}, θ={threshold})", link.name);
+    println!(
+        "starting cloud server on {addr} (link profile: {}, θ={threshold}, {workers} workers)",
+        link.name
+    );
 
     let art2 = artifacts.clone();
-    let server = CloudServer::spawn(listener, dims.clone(), move || {
-        let stack = LocalStack::load(&art2)?;
-        let f: SessionFactory = Box::new(move |_| Ok(Box::new(stack.cloud_session()) as _));
-        Ok(f)
-    })?;
+    // the builder runs once per scheduler worker, on that worker's thread
+    let server = CloudServer::spawn(
+        listener,
+        dims.clone(),
+        CloudConfig::with_workers(workers),
+        move || {
+            let stack = LocalStack::load(&art2)?;
+            let f: SessionFactory = Box::new(move |_| Ok(Box::new(stack.cloud_session()) as _));
+            Ok(f)
+        },
+    )?;
 
     // Edge clients run on separate threads (separate PJRT stacks, as
     // separate edge devices would).  Requests are batched per client.

@@ -52,7 +52,7 @@ impl<E: EdgeEngine, C: CloudEngine> NaiveSplitRunner<E, C> {
         counters.bytes_up += (quant::pack(&h1_history, Precision::F32).len() + 30) as u64;
         counters.cloud_requests += 1;
         let first = self.cloud.prefill(&pre.h1, prompt_len)?;
-        counters.bytes_down += 17;
+        counters.bytes_down += 21; // TokenResponse frame
 
         let mut tokens = vec![first.exit.token];
         counters.tokens_generated = 1;
@@ -69,7 +69,7 @@ impl<E: EdgeEngine, C: CloudEngine> NaiveSplitRunner<E, C> {
             counters.bytes_up += (h1_history.len() * 4 + 30) as u64;
             counters.cloud_requests += 1;
             let out = self.cloud.decode(&s1.h1, pos)?;
-            counters.bytes_down += 17;
+            counters.bytes_down += 21; // TokenResponse frame
             counters.tokens_cloud += 1;
             counters.tokens_generated += 1;
             tokens.push(out.exit.token);

@@ -85,6 +85,12 @@ pub struct DeploymentConfig {
     pub max_new_tokens: usize,
     /// Logical device id reported to the cloud content manager.
     pub device_id: u64,
+    /// Per-token latency budget for cloud deferrals (paper §4.4,
+    /// latency-aware exit).  `Some(s)`: a deferred token that the cloud
+    /// has not answered within `s` seconds is emitted from the best local
+    /// exit instead, and a transport failure downgrades the whole run to
+    /// local exits.  `None`: block on the cloud indefinitely.
+    pub cloud_token_budget_s: Option<f64>,
 }
 
 impl Default for DeploymentConfig {
@@ -94,6 +100,7 @@ impl Default for DeploymentConfig {
             ablation: AblationFlags::default(),
             max_new_tokens: 96,
             device_id: 0,
+            cloud_token_budget_s: None,
         }
     }
 }
@@ -105,6 +112,34 @@ impl DeploymentConfig {
 
     pub fn standalone() -> Self {
         Self { policy: ExitPolicy::Standalone { threshold: 0.8 }, ..Self::default() }
+    }
+}
+
+/// Cloud serving-side configuration (the scheduler's worker pool).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CloudConfig {
+    /// Serving threads.  Each worker owns its own engine sessions and
+    /// content-manager shard; devices are assigned statically
+    /// (`device_id % workers`).  1 reproduces the paper's single
+    /// inference GPU.
+    pub workers: usize,
+    /// Upper bound, in seconds, on how long an infer request may stay
+    /// parked waiting for its uploads (the bound applies even when the
+    /// request carries no deadline of its own).  Protects the server and
+    /// the edge from a dead upload connection: the request fails with an
+    /// error instead of waiting forever.
+    pub max_park_s: f64,
+}
+
+impl Default for CloudConfig {
+    fn default() -> Self {
+        Self { workers: 1, max_park_s: 30.0 }
+    }
+}
+
+impl CloudConfig {
+    pub fn with_workers(workers: usize) -> Self {
+        Self { workers: workers.max(1), ..Self::default() }
     }
 }
 
@@ -133,4 +168,15 @@ mod tests {
         assert!(!ExitPolicy::Threshold(0.8).is_standalone());
     }
 
+    #[test]
+    fn cloud_config_floors_workers_at_one() {
+        assert_eq!(CloudConfig::default().workers, 1);
+        assert_eq!(CloudConfig::with_workers(0).workers, 1);
+        assert_eq!(CloudConfig::with_workers(4).workers, 4);
+    }
+
+    #[test]
+    fn deployment_default_has_no_latency_budget() {
+        assert!(DeploymentConfig::default().cloud_token_budget_s.is_none());
+    }
 }

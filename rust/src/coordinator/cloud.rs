@@ -1,190 +1,67 @@
 //! Cloud server (paper §4.2): receives hidden-state uploads, manages
 //! per-device context, and serves single-token inference requests.
 //!
-//! Thread model:
-//! * one **GPU worker** thread owns all `CloudEngine` sessions (PJRT
-//!   handles are `!Send`, and the paper's cloud has a single inference
-//!   GPU — FIFO processing falls out naturally from the mpsc queue);
+//! Thread model (see [`crate::coordinator::scheduler`] for the serving
+//! core itself):
+//! * a **worker pool** ([`Scheduler`]) — each worker thread owns its own
+//!   `CloudEngine` sessions and content-manager shard for the devices
+//!   assigned to it (`device_id % workers`; PJRT handles are `!Send`, so
+//!   each worker builds its engines on its own thread).  An infer request
+//!   whose uploads have not landed parks on its worker and is woken by
+//!   the covering `Upload` — purely event-driven, no polling;
 //! * one **acceptor** thread takes TCP connections;
-//! * one thread per connection decodes frames and forwards work.
+//! * one thread per connection decodes frames and routes work to the
+//!   owning worker through a [`Router`].
 //!
 //! The paper's "Dual API" maps to two connections per device (upload
-//! channel + infer channel), each announced by a `Hello`.
+//! channel + infer channel), each announced by a `Hello`.  Because the
+//! channels are independent, an `InferRequest` may overtake its own
+//! uploads in flight; the scheduler's parking makes that race benign.
 
-use std::collections::HashMap;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::content_manager::ContentManager;
-use crate::coordinator::protocol::Message;
+use crate::config::CloudConfig;
+use crate::coordinator::protocol::{Channel, Message, NO_REQ};
 use crate::model::manifest::ModelDims;
 use crate::net::transport::{TcpTransport, Transport};
 use crate::quant;
-use crate::runtime::traits::CloudEngine;
 
-/// Session factory living on the GPU worker thread.
-pub type SessionFactory = Box<dyn FnMut(u64) -> Result<Box<dyn CloudEngine>>>;
-
-/// Work items for the GPU worker.
-pub enum GpuMsg {
-    Upload { device: u64, req_id: u32, start_pos: u32, prompt_len: u32, hiddens: Vec<f32> },
-    Infer {
-        device: u64,
-        req_id: u32,
-        pos: u32,
-        prompt_len: u32,
-        reply: Sender<Result<(i32, f32, f64)>>,
-        /// Dependency-wait counter: an infer can overtake its own uploads
-        /// (they travel on a different connection); the worker requeues it
-        /// a bounded number of times until the uploads land.
-        retries: u16,
-    },
-    End { device: u64 },
-    Stats { reply: Sender<CloudStats> },
-    Shutdown,
-}
-
-#[derive(Debug, Clone, Default)]
-pub struct CloudStats {
-    pub requests_served: u64,
-    pub uploads: u64,
-    pub busy_s: f64,
-    pub active_devices: usize,
-    pub pending_floats: usize,
-}
-
-/// The GPU worker loop: single consumer of [`GpuMsg`], owner of every
-/// cloud session and the content manager.  Public so in-process tests and
-/// the DES harness can drive it without sockets.
-pub fn gpu_worker(
-    dims: ModelDims,
-    mut factory: SessionFactory,
-    rx: Receiver<GpuMsg>,
-    self_tx: Sender<GpuMsg>,
-) -> CloudStats {
-    let mut cm = ContentManager::new(dims.d_model);
-    let mut sessions: HashMap<u64, Box<dyn CloudEngine>> = HashMap::new();
-    let mut stats = CloudStats::default();
-
-    while let Ok(msg) = rx.recv() {
-        match msg {
-            GpuMsg::Upload { device, req_id, start_pos, prompt_len, hiddens } => {
-                stats.uploads += 1;
-                if let Err(e) = cm.upload(device, req_id, start_pos, prompt_len, &hiddens) {
-                    log::warn!("upload from device {device} rejected: {e:#}");
-                }
-            }
-            GpuMsg::Infer { device, req_id, pos, prompt_len, reply, retries } => {
-                let t0 = Instant::now();
-                let plan = match cm.plan(device, req_id, pos, prompt_len) {
-                    Ok(p) => p,
-                    Err(e) if retries < 500 => {
-                        // uploads still in flight on the other connection:
-                        // requeue behind them (paper: uploads always precede
-                        // the request logically)
-                        std::thread::sleep(std::time::Duration::from_millis(1));
-                        let _ = self_tx.send(GpuMsg::Infer {
-                            device,
-                            req_id,
-                            pos,
-                            prompt_len,
-                            reply,
-                            retries: retries + 1,
-                        });
-                        let _ = e;
-                        continue;
-                    }
-                    Err(e) => {
-                        stats.requests_served += 1;
-                        let _ = reply.send(Err(e));
-                        continue;
-                    }
-                };
-                let result = (|| -> Result<(i32, f32, f64)> {
-                    let session = match sessions.entry(device) {
-                        std::collections::hash_map::Entry::Occupied(o) => o.into_mut(),
-                        std::collections::hash_map::Entry::Vacant(v) => v.insert(factory(device)?),
-                    };
-                    let mut last = None;
-                    if let Some((h, len)) = &plan.prefill {
-                        session.reset();
-                        let out = session.prefill(h, *len)?;
-                        if pos as usize == *len - 1 {
-                            // request answered by the prefill head itself
-                            last = Some((out.exit.token, out.exit.conf));
-                        }
-                    }
-                    for (p, h) in &plan.decode {
-                        let out = session.decode(h, *p as usize)?;
-                        last = Some((out.exit.token, out.exit.conf));
-                    }
-                    let (token, conf) = match last {
-                        Some(tc) => tc,
-                        None => anyhow::bail!("nothing to compute for pos {pos}"),
-                    };
-                    Ok((token, conf, t0.elapsed().as_secs_f64()))
-                })();
-                stats.requests_served += 1;
-                stats.busy_s += t0.elapsed().as_secs_f64();
-                let _ = reply.send(result);
-            }
-            GpuMsg::End { device } => {
-                cm.end_session(device);
-                sessions.remove(&device);
-            }
-            GpuMsg::Stats { reply } => {
-                stats.active_devices = cm.device_count();
-                stats.pending_floats = cm.pending_floats();
-                let _ = reply.send(stats.clone());
-            }
-            GpuMsg::Shutdown => break,
-        }
-    }
-    stats
-}
+pub use crate::coordinator::scheduler::{
+    CloudStats, FactoryBuilder, Router, SchedMsg, Scheduler, SessionFactory, TokenOut,
+};
 
 /// A running cloud server bound to a TCP listener.
 pub struct CloudServer {
     pub addr: std::net::SocketAddr,
-    gpu_tx: Sender<GpuMsg>,
+    scheduler: Option<Scheduler>,
     stop: Arc<AtomicBool>,
     acceptor: Option<std::thread::JoinHandle<()>>,
-    gpu: Option<std::thread::JoinHandle<CloudStats>>,
 }
 
 impl CloudServer {
-    /// Spawn the server.  `builder` runs on the GPU thread and constructs
-    /// the engine factory there (PJRT objects never cross threads).
-    pub fn spawn<B>(listener: TcpListener, dims: ModelDims, builder: B) -> Result<CloudServer>
+    /// Spawn the server with `cfg.workers` serving threads.  `builder`
+    /// runs on every worker thread and constructs that worker's engine
+    /// factory there (PJRT objects never cross threads).
+    pub fn spawn<B>(
+        listener: TcpListener,
+        dims: ModelDims,
+        cfg: CloudConfig,
+        builder: B,
+    ) -> Result<CloudServer>
     where
-        B: FnOnce() -> Result<SessionFactory> + Send + 'static,
+        B: Fn() -> Result<SessionFactory> + Send + Sync + 'static,
     {
         let addr = listener.local_addr()?;
-        let (gpu_tx, gpu_rx) = channel::<GpuMsg>();
-        let gdims = dims.clone();
-        let self_tx = gpu_tx.clone();
-        let gpu = std::thread::Builder::new()
-            .name("cloud-gpu".into())
-            .spawn(move || {
-                let factory = match builder() {
-                    Ok(f) => f,
-                    Err(e) => {
-                        log::error!("cloud engine builder failed: {e:#}");
-                        return CloudStats::default();
-                    }
-                };
-                gpu_worker(gdims, factory, gpu_rx, self_tx)
-            })?;
+        let scheduler = Scheduler::spawn(dims.clone(), cfg, Arc::new(builder))?;
 
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = Arc::clone(&stop);
-        let conn_tx = gpu_tx.clone();
-        let dims2 = dims;
+        let conn_router = scheduler.router();
         let acceptor = std::thread::Builder::new().name("cloud-accept".into()).spawn(move || {
             for stream in listener.incoming() {
                 if stop2.load(Ordering::SeqCst) {
@@ -192,10 +69,10 @@ impl CloudServer {
                 }
                 match stream {
                     Ok(s) => {
-                        let tx = conn_tx.clone();
-                        let dims = dims2.clone();
+                        let router = conn_router.clone();
+                        let dims = dims.clone();
                         std::thread::spawn(move || {
-                            if let Err(e) = handle_connection(s, tx, &dims) {
+                            if let Err(e) = handle_connection(s, router, &dims) {
                                 log::debug!("connection closed: {e:#}");
                             }
                         });
@@ -205,46 +82,55 @@ impl CloudServer {
             }
         })?;
 
-        Ok(CloudServer { addr, gpu_tx, stop, acceptor: Some(acceptor), gpu: Some(gpu) })
+        Ok(CloudServer { addr, scheduler: Some(scheduler), stop, acceptor: Some(acceptor) })
     }
 
     pub fn stats(&self) -> Result<CloudStats> {
-        let (tx, rx) = channel();
-        self.gpu_tx.send(GpuMsg::Stats { reply: tx }).context("gpu thread gone")?;
-        rx.recv().context("stats reply")
+        self.scheduler.as_ref().context("scheduler gone")?.stats()
     }
 
-    /// Stop accepting and shut down the GPU worker; returns final stats.
+    /// Stop accepting and shut down the worker pool; returns final stats.
     pub fn shutdown(mut self) -> CloudStats {
         self.stop.store(true, Ordering::SeqCst);
-        let _ = self.gpu_tx.send(GpuMsg::Shutdown);
         // unblock the acceptor
         let _ = TcpStream::connect(self.addr);
         if let Some(a) = self.acceptor.take() {
             let _ = a.join();
         }
-        self.gpu.take().map(|g| g.join().unwrap_or_default()).unwrap_or_default()
+        self.scheduler.take().map(Scheduler::shutdown).unwrap_or_default()
     }
 }
 
 impl Drop for CloudServer {
     fn drop(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        let _ = self.gpu_tx.send(GpuMsg::Shutdown);
+        // dropping the scheduler tells every worker to stop
+        self.scheduler.take();
         let _ = TcpStream::connect(self.addr);
     }
 }
 
 /// Handle one client connection (either channel of the dual API).
-fn handle_connection(stream: TcpStream, gpu: Sender<GpuMsg>, dims: &ModelDims) -> Result<()> {
+fn handle_connection(stream: TcpStream, router: Router, dims: &ModelDims) -> Result<()> {
     let mut t = TcpTransport::new(stream)?;
     let hello = Message::decode(&t.recv()?)?;
-    let (device_id, channel) = match hello {
-        Message::Hello { device_id, channel } => (device_id, channel),
+    let (device_id, session, channel) = match hello {
+        Message::Hello { device_id, session, channel } => (device_id, session, channel),
         other => anyhow::bail!("expected Hello, got {other:?}"),
     };
+    if channel == Channel::Upload {
+        // A fresh upload channel means a fresh client session: clear any
+        // state (and end-request tombstones) left by a previous process
+        // that used this device id, and pin the device to this session so
+        // stragglers from the old connections are fenced out.  Sent
+        // before the Ack so it is queued ahead of everything the new
+        // session will send.
+        router
+            .send(device_id, SchedMsg::Reset { device: device_id, session })
+            .context("scheduler gone")?;
+    }
     t.send(&Message::Ack.encode())?;
-    log::debug!("device {device_id} opened {channel:?} channel");
+    log::debug!("device {device_id} opened {channel:?} channel (session {session:x})");
 
     loop {
         let frame = match t.recv() {
@@ -255,39 +141,59 @@ fn handle_connection(stream: TcpStream, gpu: Sender<GpuMsg>, dims: &ModelDims) -
             Message::UploadHidden { device_id, req_id, start_pos, prompt_len, precision, payload, .. } => {
                 let hiddens = quant::unpack(&payload, precision)?;
                 anyhow::ensure!(hiddens.len() % dims.d_model == 0, "ragged upload");
-                gpu.send(GpuMsg::Upload { device: device_id, req_id, start_pos, prompt_len, hiddens })
-                    .context("gpu thread gone")?;
+                router
+                    .send(
+                        device_id,
+                        SchedMsg::Upload { device: device_id, session, req_id, start_pos, prompt_len, hiddens },
+                    )
+                    .context("scheduler gone")?;
                 // uploads are fire-and-forget (parallel with edge compute);
                 // no ack so the uploader never stalls the edge
             }
-            Message::InferRequest { device_id, req_id, pos, prompt_len } => {
+            Message::InferRequest { device_id, req_id, pos, prompt_len, deadline_ms } => {
+                let deadline = (deadline_ms > 0)
+                    .then(|| Instant::now() + Duration::from_millis(deadline_ms as u64));
                 let (reply_tx, reply_rx) = std::sync::mpsc::channel();
-                gpu.send(GpuMsg::Infer {
-                    device: device_id,
-                    req_id,
-                    pos,
-                    prompt_len,
-                    reply: reply_tx,
-                    retries: 0,
-                })
-                .context("gpu thread gone")?;
-                match reply_rx.recv().context("gpu reply")? {
-                    Ok((token, conf, compute_s)) => t.send(
+                router
+                    .send(
+                        device_id,
+                        SchedMsg::Infer {
+                            device: device_id,
+                            session,
+                            req_id,
+                            pos,
+                            prompt_len,
+                            deadline,
+                            reply: reply_tx,
+                        },
+                    )
+                    .context("scheduler gone")?;
+                match reply_rx.recv().context("scheduler reply")? {
+                    Ok(out) => t.send(
                         &Message::TokenResponse {
                             req_id,
-                            token,
-                            conf,
-                            compute_s: compute_s as f32,
+                            pos,
+                            token: out.token,
+                            conf: out.conf,
+                            compute_s: out.compute_s as f32,
                         }
                         .encode(),
                     )?,
-                    Err(e) => t.send(&Message::Error { msg: format!("{e:#}") }.encode())?,
+                    Err(e) => {
+                        t.send(&Message::Error { req_id, pos, msg: format!("{e:#}") }.encode())?
+                    }
                 }
             }
-            Message::EndSession { device_id, .. } => {
-                gpu.send(GpuMsg::End { device: device_id }).context("gpu thread gone")?;
+            Message::EndSession { device_id, req_id } => {
+                router
+                    .send(device_id, SchedMsg::End { device: device_id, session, req_id })
+                    .context("scheduler gone")?;
             }
-            other => anyhow::bail!("unexpected message on {channel:?} channel: {other:?}"),
+            other => {
+                let msg = format!("unexpected message on {channel:?} channel: {other:?}");
+                let _ = t.send(&Message::Error { req_id: NO_REQ, pos: NO_REQ, msg: msg.clone() }.encode());
+                anyhow::bail!(msg)
+            }
         }
     }
 }

@@ -29,6 +29,33 @@ struct DeviceState {
     duplicates_dropped: u64,
 }
 
+impl DeviceState {
+    /// Upload watermark: every position `< watermark` is either consumed
+    /// or pending, i.e. the contiguous coverage frontier for this request.
+    fn watermark(&self) -> u32 {
+        let mut w = self.consumed_upto;
+        while self.pending.contains_key(&w) {
+            w += 1;
+        }
+        w
+    }
+}
+
+/// Whether an inference request is serviceable against the current
+/// upload state (the scheduler's park/wake decision).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Coverage {
+    /// Every hidden state the request needs has landed; `plan` will
+    /// succeed structurally.
+    Ready,
+    /// Uploads are still in flight; park the request and re-check when
+    /// the next upload for this device arrives.
+    Waiting,
+    /// A newer request from this device has superseded the buffered
+    /// state; the request can never complete and must be failed.
+    Stale,
+}
+
 /// What the inference loop must run to answer a request at `pos`.
 #[derive(Debug, PartialEq)]
 pub struct WorkPlan {
@@ -42,12 +69,18 @@ pub struct WorkPlan {
 #[derive(Debug, Default)]
 pub struct ContentManager {
     devices: HashMap<u64, DeviceState>,
+    /// Highest request id explicitly ended per device.  The upload and
+    /// infer channels are independent connections, so a straggling upload
+    /// can arrive *after* its request's `EndSession`; the tombstone keeps
+    /// it from resurrecting released state.  One entry per device ever
+    /// seen (device identities are long-lived).
+    ended: HashMap<u64, u32>,
     d_model: usize,
 }
 
 impl ContentManager {
     pub fn new(d_model: usize) -> Self {
-        Self { devices: HashMap::new(), d_model }
+        Self { devices: HashMap::new(), ended: HashMap::new(), d_model }
     }
 
     /// Ingest an upload of `count` hidden vectors starting at `start_pos`.
@@ -63,6 +96,11 @@ impl ContentManager {
     ) -> Result<()> {
         ensure!(self.d_model > 0, "content manager d_model not set");
         ensure!(hiddens.len() % self.d_model == 0, "ragged hidden payload");
+        if self.ended.get(&device).is_some_and(|&r| req_id <= r) {
+            // straggler from an already-ended request: ignore, do not
+            // resurrect released state
+            return Ok(());
+        }
         let count = hiddens.len() / self.d_model;
         let st = self.devices.entry(device).or_default();
         if st.req_id != req_id {
@@ -128,9 +166,71 @@ impl ContentManager {
         Ok(WorkPlan { prefill, decode })
     }
 
-    /// Release everything for a finished request (§4.4 step 6).
+    /// Classify an inference request at `pos` against the current upload
+    /// state.  [`Coverage::Ready`] guarantees the matching [`Self::plan`]
+    /// call finds every hidden state it needs; this is the pure check the
+    /// scheduler uses to park or wake requests without consuming anything.
+    pub fn coverage(&self, device: u64, req_id: u32, pos: u32, prompt_len: u32) -> Coverage {
+        if self.ended.get(&device).is_some_and(|&r| req_id <= r) {
+            return Coverage::Stale;
+        }
+        let Some(st) = self.devices.get(&device) else {
+            // no uploads from this device yet — they are on the wire
+            return Coverage::Waiting;
+        };
+        if st.req_id != req_id {
+            // the manager keeps exactly one request per device; a smaller
+            // id means the device has already moved on to a newer request
+            return if req_id < st.req_id { Coverage::Stale } else { Coverage::Waiting };
+        }
+        let plen = st.prompt_len.unwrap_or(prompt_len).max(prompt_len);
+        if plen == 0 {
+            return Coverage::Waiting;
+        }
+        // the plan consumes the full prompt first (when not yet prefilled),
+        // then every position up to and including `pos`
+        let mut need = pos + 1;
+        if st.consumed_upto == 0 {
+            need = need.max(plen);
+        }
+        if st.watermark() >= need {
+            Coverage::Ready
+        } else {
+            Coverage::Waiting
+        }
+    }
+
+    /// Contiguous upload coverage frontier for the device's current
+    /// request (0 for unknown devices).
+    pub fn watermark(&self, device: u64) -> u32 {
+        self.devices.get(&device).map(DeviceState::watermark).unwrap_or(0)
+    }
+
+    /// Release state for a finished request (§4.4 step 6) and tombstone
+    /// its id so straggling uploads cannot resurrect it.  State belonging
+    /// to a *newer* request (whose uploads raced ahead of this
+    /// `EndSession` on the other connection) is left untouched.
+    pub fn end_request(&mut self, device: u64, req_id: u32) {
+        let t = self.ended.entry(device).or_insert(req_id);
+        *t = (*t).max(req_id);
+        if self.devices.get(&device).is_some_and(|st| st.req_id <= req_id) {
+            self.devices.remove(&device);
+        }
+    }
+
+    /// Release everything buffered for a device unconditionally (local
+    /// harness teardown; the serving path uses [`Self::end_request`]).
     pub fn end_session(&mut self, device: u64) {
         self.devices.remove(&device);
+    }
+
+    /// Forget a device entirely, including its end-request tombstones.
+    /// Used when the device opens a fresh upload channel: a reconnecting
+    /// edge process restarts its request ids from 1, so tombstones from
+    /// its previous session must not outlive the connection.
+    pub fn reset_device(&mut self, device: u64) {
+        self.devices.remove(&device);
+        self.ended.remove(&device);
     }
 
     pub fn device_count(&self) -> usize {
@@ -262,5 +362,97 @@ mod tests {
     fn ragged_payload_rejected() {
         let mut m = cm();
         assert!(m.upload(1, 0, 0, 1, &[0.0; D + 1]).is_err());
+    }
+
+    #[test]
+    fn ended_request_tombstone_blocks_stragglers() {
+        let mut m = cm();
+        m.upload(1, 1, 0, 2, &[0.0; 2 * D]).unwrap();
+        m.end_request(1, 1);
+        assert_eq!(m.device_count(), 0);
+        // a straggling upload for the ended request is ignored
+        m.upload(1, 1, 0, 2, &[0.0; 2 * D]).unwrap();
+        assert_eq!(m.device_count(), 0);
+        assert_eq!(m.pending_floats(), 0);
+        assert_eq!(m.coverage(1, 1, 1, 2), Coverage::Stale);
+        // the next request is unaffected
+        m.upload(1, 2, 0, 2, &[0.0; 2 * D]).unwrap();
+        assert_eq!(m.coverage(1, 2, 1, 2), Coverage::Ready);
+    }
+
+    #[test]
+    fn reset_device_clears_tombstones_for_a_reconnecting_client() {
+        let mut m = cm();
+        m.upload(1, 1, 0, 1, &h(0)).unwrap();
+        m.end_request(1, 1);
+        // a fresh client process reuses device 1 and restarts at req 1
+        m.reset_device(1);
+        m.upload(1, 1, 0, 1, &h(0)).unwrap();
+        assert_eq!(m.coverage(1, 1, 0, 1), Coverage::Ready);
+        assert!(m.plan(1, 1, 0, 1).is_ok());
+    }
+
+    #[test]
+    fn end_request_spares_a_newer_requests_state() {
+        let mut m = cm();
+        // request 2's uploads raced ahead of request 1's EndSession
+        m.upload(1, 2, 0, 2, &[0.0; 2 * D]).unwrap();
+        m.end_request(1, 1);
+        assert_eq!(m.device_count(), 1, "request 2 state must survive");
+        assert_eq!(m.coverage(1, 2, 1, 2), Coverage::Ready);
+        assert!(m.plan(1, 2, 1, 2).is_ok());
+    }
+
+    #[test]
+    fn coverage_tracks_contiguous_uploads() {
+        let mut m = cm();
+        // nothing uploaded yet: wait
+        assert_eq!(m.coverage(1, 0, 2, 3), Coverage::Waiting);
+        assert_eq!(m.watermark(1), 0);
+        let prompt: Vec<f32> = (0..3).flat_map(h).collect();
+        m.upload(1, 0, 0, 3, &prompt).unwrap();
+        assert_eq!(m.watermark(1), 3);
+        // request at the last prompt position is now serviceable
+        assert_eq!(m.coverage(1, 0, 2, 3), Coverage::Ready);
+        // ... but a decode position past the watermark is not
+        assert_eq!(m.coverage(1, 0, 3, 3), Coverage::Waiting);
+        m.upload(1, 0, 3, 3, &h(3)).unwrap();
+        assert_eq!(m.coverage(1, 0, 3, 3), Coverage::Ready);
+        // Ready implies plan succeeds
+        assert!(m.plan(1, 0, 3, 3).is_ok());
+    }
+
+    #[test]
+    fn coverage_requires_gap_free_prompt() {
+        let mut m = cm();
+        m.upload(1, 0, 0, 3, &h(0)).unwrap();
+        m.upload(1, 0, 2, 3, &h(2)).unwrap(); // gap at position 1
+        assert_eq!(m.watermark(1), 1);
+        assert_eq!(m.coverage(1, 0, 2, 3), Coverage::Waiting);
+        m.upload(1, 0, 1, 3, &h(1)).unwrap();
+        assert_eq!(m.watermark(1), 3);
+        assert_eq!(m.coverage(1, 0, 2, 3), Coverage::Ready);
+    }
+
+    #[test]
+    fn coverage_request_id_transitions() {
+        let mut m = cm();
+        m.upload(1, 4, 0, 1, &h(0)).unwrap();
+        // older request: superseded, can never complete
+        assert_eq!(m.coverage(1, 3, 0, 1), Coverage::Stale);
+        // newer request: its uploads have not arrived yet
+        assert_eq!(m.coverage(1, 5, 0, 1), Coverage::Waiting);
+        assert_eq!(m.coverage(1, 4, 0, 1), Coverage::Ready);
+    }
+
+    #[test]
+    fn coverage_after_consumption_stays_ready() {
+        let mut m = cm();
+        m.upload(1, 0, 0, 2, &[0.0; 2 * D]).unwrap();
+        m.plan(1, 0, 1, 2).unwrap();
+        // an already-served position stays Ready (plan then reports
+        // "nothing to compute" — the scheduler surfaces that error)
+        assert_eq!(m.coverage(1, 0, 1, 2), Coverage::Ready);
+        assert_eq!(m.coverage(1, 0, 2, 2), Coverage::Waiting);
     }
 }

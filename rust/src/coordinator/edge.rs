@@ -1,22 +1,31 @@
 //! Edge client (paper §4.1, §4.4, Algorithm 1): the early-exit decode
-//! loop with asynchronous parallel hidden-state upload and adaptive
-//! cloud deferral.
+//! loop with asynchronous parallel hidden-state upload, adaptive cloud
+//! deferral, and a latency-aware local fallback.
 //!
 //! Thread model: the engine (PJRT) stays on the caller's thread; uploads
 //! go through a dedicated uploader thread feeding the upload channel
 //! (paper: "the edge device concurrently continues the inference process"
-//! while states transfer).  The infer channel is used synchronously —
-//! a deferred token cannot proceed without the cloud's response.
+//! while states transfer).  The infer channel carries one outstanding
+//! request at a time; the cloud's event-driven scheduler parks a request
+//! until its uploads land, so the edge never has to drain its upload
+//! queue before asking for a token.
+//!
+//! Latency-aware exit (§4.4): with `cloud_token_budget_s` configured, a
+//! deferred token the cloud has not answered within the budget is emitted
+//! from the best local exit instead ([`TokenPolicy::local_fallback`]),
+//! and the abandoned response is recognized by its `(req_id, pos)` echo
+//! and skipped when it eventually arrives.  A transport failure degrades
+//! the rest of the run to local exits rather than aborting it.
 
 use std::sync::mpsc::{channel, Sender};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::config::DeploymentConfig;
 use crate::coordinator::policy::{ExitPoint, TokenPolicy};
-use crate::coordinator::protocol::{Channel, Message};
+use crate::coordinator::protocol::{Channel, Message, NO_REQ};
 use crate::metrics::{CostBreakdown, RunCounters};
 use crate::model::tokenizer::Tokenizer;
 use crate::net::transport::Transport;
@@ -49,6 +58,21 @@ enum UploadJob {
     Done,
 }
 
+/// How long teardown waits for a wedged upload transport before
+/// detaching the uploader thread instead of joining it.
+const WEDGE_GUARD: Duration = Duration::from_secs(5);
+
+/// Nonce identifying one `CloudLink` connection pair; the server fences
+/// out frames from older connections of the same device id.  Never 0
+/// (0 means "untagged" on the wire).
+fn session_nonce() -> u64 {
+    let t = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    (t.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ ((std::process::id() as u64) << 32)).max(1)
+}
+
 /// The cloud half of the client: dual channels + upload thread.
 pub struct CloudLink {
     infer: Box<dyn Transport>,
@@ -64,9 +88,10 @@ impl CloudLink {
         mut upload: Box<dyn Transport + Send>,
         mut infer: Box<dyn Transport>,
     ) -> Result<Self> {
-        infer.send(&Message::Hello { device_id, channel: Channel::Infer }.encode())?;
+        let session = session_nonce();
+        infer.send(&Message::Hello { device_id, session, channel: Channel::Infer }.encode())?;
         expect_ack(&mut *infer)?;
-        upload.send(&Message::Hello { device_id, channel: Channel::Upload }.encode())?;
+        upload.send(&Message::Hello { device_id, session, channel: Channel::Upload }.encode())?;
         expect_ack(&mut *upload)?;
 
         let (upload_tx, upload_rx) = channel::<UploadJob>();
@@ -96,15 +121,32 @@ impl CloudLink {
         let _ = self.upload_tx.send(UploadJob::Send(msg));
     }
 
-    /// Block until every enqueued upload has been written to the wire.
-    fn flush_uploads(&self) {
+    /// Block until every upload enqueued so far is on the wire, or until
+    /// `timeout` (`None` waits indefinitely).  `false` means the wait
+    /// timed out: the uploader is wedged on a transport that stopped
+    /// accepting bytes.
+    fn flush_uploads_within(&self, timeout: Option<Duration>) -> bool {
         let (tx, rx) = channel();
-        if self.upload_tx.send(UploadJob::Flush(tx)).is_ok() {
-            let _ = rx.recv();
+        if self.upload_tx.send(UploadJob::Flush(tx)).is_err() {
+            return true; // uploader already exited; nothing left to flush
+        }
+        match timeout {
+            Some(t) => rx.recv_timeout(t).is_ok(),
+            None => rx.recv().is_ok(),
         }
     }
 
     fn close(&mut self) -> u64 {
+        // Bounded drain before the join: the queue is FIFO, so a flush
+        // ack proves every pending Send is on the wire and Done will be
+        // processed immediately.  A transport that stopped accepting
+        // bytes (cloud hung without closing the socket) must not wedge
+        // teardown — detach the uploader instead of joining it.
+        if !self.flush_uploads_within(Some(WEDGE_GUARD)) {
+            log::warn!("upload channel wedged; detaching uploader thread without joining");
+            self.uploader.take();
+            return 0;
+        }
         let _ = self.upload_tx.send(UploadJob::Done);
         self.uploader.take().map(|u| u.join().unwrap_or(0)).unwrap_or(0)
     }
@@ -112,7 +154,9 @@ impl CloudLink {
 
 impl Drop for CloudLink {
     fn drop(&mut self) {
-        let _ = self.upload_tx.send(UploadJob::Done);
+        // same guarantees as close(): tail uploads flushed when the
+        // transport is live, bounded detach when it is wedged
+        let _ = self.close();
     }
 }
 
@@ -123,12 +167,37 @@ fn expect_ack(t: &mut dyn Transport) -> Result<()> {
     }
 }
 
+/// Best local alternative to a cloud deferral (paper §4.4): the exit
+/// point the policy picks, with its token.
+fn best_local(
+    policy: &TokenPolicy,
+    conf1: f32,
+    tok1: i32,
+    exit2: Option<(f32, i32)>,
+) -> (ExitPoint, i32) {
+    match (policy.local_fallback(conf1, exit2.map(|(c, _)| c)), exit2) {
+        (ExitPoint::Exit2, Some((_, tok2))) => (ExitPoint::Exit2, tok2),
+        _ => (ExitPoint::Exit1, tok1),
+    }
+}
+
+/// How a cloud deferral concluded.
+enum CloudAnswer {
+    /// The cloud answered within budget.
+    Answered { token: i32 },
+    /// Budget expired with no answer yet.
+    DeadlineExpired,
+}
+
 /// The edge client: engine + policy + optional cloud link.
 pub struct EdgeClient<E: EdgeEngine> {
     pub engine: E,
     pub tokenizer: Tokenizer,
     pub cfg: DeploymentConfig,
     link: Option<CloudLink>,
+    /// Set when the infer transport failed mid-run (latency-aware mode
+    /// only): the rest of the run uses local exits.
+    link_broken: bool,
     req_id: u32,
 }
 
@@ -137,12 +206,12 @@ impl<E: EdgeEngine> EdgeClient<E> {
     /// policy, deferred tokens fail — use [`Self::with_cloud`].
     pub fn standalone(engine: E, cfg: DeploymentConfig) -> Self {
         let tokenizer = Tokenizer::from_dims(engine.dims());
-        Self { engine, tokenizer, cfg, link: None, req_id: 0 }
+        Self { engine, tokenizer, cfg, link: None, link_broken: false, req_id: 0 }
     }
 
     pub fn with_cloud(engine: E, cfg: DeploymentConfig, link: CloudLink) -> Self {
         let tokenizer = Tokenizer::from_dims(engine.dims());
-        Self { engine, tokenizer, cfg, link: Some(link), req_id: 0 }
+        Self { engine, tokenizer, cfg, link: Some(link), link_broken: false, req_id: 0 }
     }
 
     fn precision(&self) -> Precision {
@@ -270,18 +339,22 @@ impl<E: EdgeEngine> EdgeClient<E> {
                         },
                     )
                 } else {
-                    let (tok, conf) = self.cloud_token(
-                        req_id, pos, prompt_len, &mut cost, &mut counters, &mut h1_history,
+                    let fb = best_local(
+                        &policy,
+                        s1.exit1.conf,
+                        s1.exit1.token,
+                        Some((s2.exit2.conf, s2.exit2.token)),
+                    );
+                    let (tok, exit) = self.cloud_token(
+                        req_id, pos, prompt_len, Some(fb),
+                        &mut cost, &mut counters, &mut h1_history,
                     )?;
-                    counters.tokens_cloud += 1;
-                    counters.cloud_requests += 1;
-                    let _ = conf;
                     (
                         tok,
                         TokenTrace {
                             pos,
                             token: tok,
-                            exit: ExitPoint::Cloud,
+                            exit,
                             conf1: s1.exit1.conf,
                             conf2: Some(s2.exit2.conf),
                         },
@@ -293,7 +366,15 @@ impl<E: EdgeEngine> EdgeClient<E> {
         }
 
         // --- session teardown (§4.4 step 6) --------------------------------
+        let flush_cap = self.cfg.cloud_token_budget_s.map_or(WEDGE_GUARD, Duration::from_secs_f64);
         if let Some(link) = self.link.as_mut() {
+            // drain queued uploads first so EndSession (on the other
+            // connection) cannot release server state that a straggling
+            // upload would then recreate; bounded so a cloud that stopped
+            // reading cannot wedge the generate call
+            if !link.flush_uploads_within(Some(flush_cap)) {
+                log::warn!("upload flush timed out during teardown");
+            }
             let _ = link.infer.send(&Message::EndSession { device_id, req_id }.encode());
         }
 
@@ -338,15 +419,72 @@ impl<E: EdgeEngine> EdgeClient<E> {
                 TokenTrace { pos, token: tok2, exit: ExitPoint::Exit2, conf1, conf2: Some(conf2) },
             ));
         }
-        let (tok, _conf) =
-            self.cloud_token(req_id, pos, prompt_len, cost, counters, h1_history)?;
-        counters.tokens_cloud += 1;
-        counters.cloud_requests += 1;
-        Ok((tok, TokenTrace { pos, token: tok, exit: ExitPoint::Cloud, conf1, conf2: Some(conf2) }))
+        let fb = best_local(policy, conf1, tok1, Some((conf2, tok2)));
+        let (tok, exit) =
+            self.cloud_token(req_id, pos, prompt_len, Some(fb), cost, counters, h1_history)?;
+        Ok((tok, TokenTrace { pos, token: tok, exit, conf1, conf2: Some(conf2) }))
     }
 
-    /// Defer one token to the cloud (Algorithm 1, CloudInference call).
+    /// Defer one token to the cloud (Algorithm 1, CloudInference call),
+    /// degrading to `fallback` when the latency budget is configured and
+    /// the cloud cannot answer in time.  Returns the emitted token and
+    /// where it was produced; updates the cloud/fallback counters.
+    #[allow(clippy::too_many_arguments)]
     fn cloud_token(
+        &mut self,
+        req_id: u32,
+        pos: usize,
+        prompt_len: usize,
+        fallback: Option<(ExitPoint, i32)>,
+        cost: &mut CostBreakdown,
+        counters: &mut RunCounters,
+        h1_history: &mut Vec<Vec<f32>>,
+    ) -> Result<(i32, ExitPoint)> {
+        // the fallback only engages in latency-aware mode; without a
+        // budget the behaviour is the strict "block on the cloud" of the
+        // base algorithm
+        let fallback = match self.cfg.cloud_token_budget_s {
+            Some(_) => fallback,
+            None => None,
+        };
+        let emit_fallback = |counters: &mut RunCounters, (exit, tok): (ExitPoint, i32)| {
+            counters.cloud_fallbacks += 1;
+            match exit {
+                ExitPoint::Exit1 => counters.tokens_exit1 += 1,
+                _ => counters.tokens_exit2 += 1,
+            }
+            (tok, exit)
+        };
+
+        if self.link_broken {
+            let fb = fallback.context("cloud link failed earlier in this run")?;
+            return Ok(emit_fallback(counters, fb));
+        }
+
+        counters.cloud_requests += 1;
+        match self.cloud_roundtrip(req_id, pos, prompt_len, cost, counters, h1_history) {
+            Ok(CloudAnswer::Answered { token }) => {
+                counters.tokens_cloud += 1;
+                Ok((token, ExitPoint::Cloud))
+            }
+            Ok(CloudAnswer::DeadlineExpired) => {
+                let fb = fallback.context("cloud deadline expired with no local fallback")?;
+                Ok(emit_fallback(counters, fb))
+            }
+            Err(e) => match fallback {
+                Some(fb) => {
+                    log::warn!("cloud link failed ({e:#}); finishing the run on local exits");
+                    self.link_broken = true;
+                    Ok(emit_fallback(counters, fb))
+                }
+                None => Err(e),
+            },
+        }
+    }
+
+    /// One request/response round trip on the infer channel.
+    #[allow(clippy::too_many_arguments)]
+    fn cloud_roundtrip(
         &mut self,
         req_id: u32,
         pos: usize,
@@ -354,11 +492,12 @@ impl<E: EdgeEngine> EdgeClient<E> {
         cost: &mut CostBreakdown,
         counters: &mut RunCounters,
         h1_history: &mut Vec<Vec<f32>>,
-    ) -> Result<(i32, f32)> {
+    ) -> Result<CloudAnswer> {
         let device_id = self.cfg.device_id;
         let precision = self.precision();
         let flags = self.cfg.ablation;
         let dims_d = self.engine.dims().d_model;
+        let budget = self.cfg.cloud_token_budget_s;
 
         // without content manager / parallel upload the hidden states go
         // out synchronously now, on the infer channel (and without the
@@ -387,14 +526,14 @@ impl<E: EdgeEngine> EdgeClient<E> {
                 .encode(),
             )?;
             cost.comm_s += t0.elapsed().as_secs_f64();
-        } else {
-            // make sure async uploads for <= pos are on the wire before
-            // measuring the request round trip
-            let t0 = Instant::now();
-            self.link_ref()?.flush_uploads();
-            cost.comm_s += t0.elapsed().as_secs_f64();
         }
+        // with parallel upload there is nothing to wait for here: the
+        // scheduler parks the request until the covering upload lands, so
+        // the request overtaking its uploads is part of the design
 
+        let deadline = budget.map(|s| Instant::now() + Duration::from_secs_f64(s));
+        let deadline_ms =
+            budget.map(|s| (s * 1e3).clamp(1.0, u32::MAX as f64) as u32).unwrap_or(0);
         let t0 = Instant::now();
         let link = self.link.as_mut().context("collaborative policy without cloud link")?;
         let req = Message::InferRequest {
@@ -402,21 +541,42 @@ impl<E: EdgeEngine> EdgeClient<E> {
             req_id,
             pos: pos as u32,
             prompt_len: prompt_len as u32,
+            deadline_ms,
         };
         let frame = req.encode();
         counters.bytes_up += frame.len() as u64;
         link.infer.send(&frame)?;
-        let resp = Message::decode(&link.infer.recv()?)?;
-        let rtt = t0.elapsed().as_secs_f64();
-        match resp {
-            Message::TokenResponse { token, conf, compute_s, .. } => {
-                counters.bytes_down += 17; // token response frame size
-                cost.cloud_s += compute_s as f64;
-                cost.comm_s += (rtt - compute_s as f64).max(0.0);
-                Ok((token, conf))
+        loop {
+            let frame = match deadline {
+                Some(dl) => match link.infer.recv_deadline(dl)? {
+                    Some(f) => f,
+                    None => {
+                        cost.comm_s += t0.elapsed().as_secs_f64();
+                        return Ok(CloudAnswer::DeadlineExpired);
+                    }
+                },
+                None => link.infer.recv()?,
+            };
+            counters.bytes_down += frame.len() as u64;
+            let rtt = t0.elapsed().as_secs_f64();
+            match Message::decode(&frame)? {
+                Message::TokenResponse { req_id: r, pos: p, token, conf, compute_s } => {
+                    if r != req_id || p != pos as u32 {
+                        continue; // stale answer for an abandoned deferral
+                    }
+                    let _ = conf;
+                    cost.cloud_s += compute_s as f64;
+                    cost.comm_s += (rtt - compute_s as f64).max(0.0);
+                    return Ok(CloudAnswer::Answered { token });
+                }
+                Message::Error { req_id: r, pos: p, msg } => {
+                    if r == NO_REQ || (r == req_id && p == pos as u32) {
+                        anyhow::bail!("cloud error: {msg}");
+                    }
+                    continue; // stale error for an abandoned deferral
+                }
+                other => anyhow::bail!("unexpected response {other:?}"),
             }
-            Message::Error { msg } => anyhow::bail!("cloud error: {msg}"),
-            other => anyhow::bail!("unexpected response {other:?}"),
         }
     }
 

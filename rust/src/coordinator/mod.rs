@@ -3,5 +3,6 @@
 pub mod policy;
 pub mod protocol;
 pub mod content_manager;
+pub mod scheduler;
 pub mod edge;
 pub mod cloud;

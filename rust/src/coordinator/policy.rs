@@ -72,6 +72,17 @@ impl TokenPolicy {
     pub fn uses_cloud(&self) -> bool {
         !self.policy.is_standalone()
     }
+
+    /// Latency-aware exit (paper §4.4): when a cloud deferral cannot
+    /// complete within the per-token budget, pick the best *local* exit
+    /// to emit instead of blocking the stream.  Exit 2 has seen more
+    /// layers, so it wins whenever its confidence is at least exit 1's.
+    pub fn local_fallback(&self, conf1: f32, conf2: Option<f32>) -> ExitPoint {
+        match conf2 {
+            Some(c2) if c2 >= conf1 => ExitPoint::Exit2,
+            _ => ExitPoint::Exit1,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -120,6 +131,17 @@ mod tests {
     fn disabled_early_exit_forces_cloud() {
         let pol = TokenPolicy::new(ExitPolicy::Threshold(0.8), AblationFlags::without_early_exit());
         assert_eq!(pol.decide(0.99, 0.99), ExitPoint::Cloud);
+    }
+
+    #[test]
+    fn local_fallback_prefers_deeper_exit() {
+        let pol = p(0.8);
+        // the usual case: exit 2 at least as confident as exit 1
+        assert_eq!(pol.local_fallback(0.3, Some(0.5)), ExitPoint::Exit2);
+        assert_eq!(pol.local_fallback(0.5, Some(0.5)), ExitPoint::Exit2);
+        // exit 1 more confident, or exit 2 never evaluated
+        assert_eq!(pol.local_fallback(0.6, Some(0.4)), ExitPoint::Exit1);
+        assert_eq!(pol.local_fallback(0.2, None), ExitPoint::Exit1);
     }
 
     #[test]

@@ -22,8 +22,12 @@ pub enum Channel {
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum Message {
-    /// Opens a channel for `device_id`.
-    Hello { device_id: u64, channel: Channel },
+    /// Opens a channel for `device_id`.  `session` is a nonce chosen
+    /// once per [`CloudLink`](crate::coordinator::edge::CloudLink) and
+    /// shared by both channels; the server uses it to fence out frames
+    /// still in flight from a previous connection that reused the same
+    /// device id (0 = untagged, accepted for backward compatibility).
+    Hello { device_id: u64, session: u64, channel: Channel },
     /// Hidden states for positions `start_pos .. start_pos + count`
     /// at `l_ee1` (`count * d_model` elements in `precision`).
     /// `prompt_len` lets the server distinguish prompt uploads from
@@ -38,17 +42,28 @@ pub enum Message {
         payload: Vec<u8>,
     },
     /// "Continue my inference from the uploaded states and give me the
-    /// token at `pos`" (Algorithm 1, CloudInference).
-    InferRequest { device_id: u64, req_id: u32, pos: u32, prompt_len: u32 },
+    /// token at `pos`" (Algorithm 1, CloudInference).  `deadline_ms > 0`
+    /// is the edge's per-token latency budget (§4.4): the scheduler fails
+    /// the request instead of parking it past that long, because the edge
+    /// has already fallen back to its best local exit by then.
+    InferRequest { device_id: u64, req_id: u32, pos: u32, prompt_len: u32, deadline_ms: u32 },
     /// Single-token response (§4.2): the token, its confidence, and the
     /// server-side compute seconds (lets the edge split comm vs cloud
-    /// time in its metrics, as the paper's tables do).
-    TokenResponse { req_id: u32, token: i32, conf: f32, compute_s: f32 },
+    /// time in its metrics, as the paper's tables do).  `pos` echoes the
+    /// request so a deadline-abandoned response can be recognized as
+    /// stale and skipped by the edge.
+    TokenResponse { req_id: u32, pos: u32, token: i32, conf: f32, compute_s: f32 },
     /// Generation finished: release content-manager state (§4.4 step 6).
     EndSession { device_id: u64, req_id: u32 },
     Ack,
-    Error { msg: String },
+    /// Request failure.  `req_id`/`pos` echo the failed request so the
+    /// edge can correlate (or skip) it; both are [`NO_REQ`] for
+    /// connection-level errors not tied to any request.
+    Error { req_id: u32, pos: u32, msg: String },
 }
+
+/// Sentinel `req_id`/`pos` for errors not tied to a request.
+pub const NO_REQ: u32 = u32::MAX;
 
 const TAG_HELLO: u8 = 1;
 const TAG_UPLOAD: u8 = 2;
@@ -62,9 +77,11 @@ impl Message {
     pub fn encode(&self) -> Vec<u8> {
         let mut b = Vec::with_capacity(32);
         match self {
-            Message::Hello { device_id, channel } => {
+            Message::Hello { device_id, session, channel } => {
                 b.push(TAG_HELLO);
                 b.extend_from_slice(&device_id.to_le_bytes());
+                b.extend_from_slice(&session.to_le_bytes());
+                // channel stays the last byte of the frame
                 b.push(match channel {
                     Channel::Upload => 0,
                     Channel::Infer => 1,
@@ -92,16 +109,18 @@ impl Message {
                 b.extend_from_slice(&(payload.len() as u32).to_le_bytes());
                 b.extend_from_slice(payload);
             }
-            Message::InferRequest { device_id, req_id, pos, prompt_len } => {
+            Message::InferRequest { device_id, req_id, pos, prompt_len, deadline_ms } => {
                 b.push(TAG_INFER);
                 b.extend_from_slice(&device_id.to_le_bytes());
                 b.extend_from_slice(&req_id.to_le_bytes());
                 b.extend_from_slice(&pos.to_le_bytes());
                 b.extend_from_slice(&prompt_len.to_le_bytes());
+                b.extend_from_slice(&deadline_ms.to_le_bytes());
             }
-            Message::TokenResponse { req_id, token, conf, compute_s } => {
+            Message::TokenResponse { req_id, pos, token, conf, compute_s } => {
                 b.push(TAG_TOKEN);
                 b.extend_from_slice(&req_id.to_le_bytes());
+                b.extend_from_slice(&pos.to_le_bytes());
                 b.extend_from_slice(&token.to_le_bytes());
                 b.extend_from_slice(&conf.to_le_bytes());
                 b.extend_from_slice(&compute_s.to_le_bytes());
@@ -112,8 +131,10 @@ impl Message {
                 b.extend_from_slice(&req_id.to_le_bytes());
             }
             Message::Ack => b.push(TAG_ACK),
-            Message::Error { msg } => {
+            Message::Error { req_id, pos, msg } => {
                 b.push(TAG_ERROR);
+                b.extend_from_slice(&req_id.to_le_bytes());
+                b.extend_from_slice(&pos.to_le_bytes());
                 let bytes = msg.as_bytes();
                 b.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
                 b.extend_from_slice(bytes);
@@ -128,12 +149,13 @@ impl Message {
         let msg = match tag {
             TAG_HELLO => {
                 let device_id = r.u64()?;
+                let session = r.u64()?;
                 let channel = match r.u8()? {
                     0 => Channel::Upload,
                     1 => Channel::Infer,
                     c => bail!("bad channel {c}"),
                 };
-                Message::Hello { device_id, channel }
+                Message::Hello { device_id, session, channel }
             }
             TAG_UPLOAD => {
                 let device_id = r.u64()?;
@@ -167,9 +189,11 @@ impl Message {
                 req_id: r.u32()?,
                 pos: r.u32()?,
                 prompt_len: r.u32()?,
+                deadline_ms: r.u32()?,
             },
             TAG_TOKEN => Message::TokenResponse {
                 req_id: r.u32()?,
+                pos: r.u32()?,
                 token: r.i32()?,
                 conf: r.f32()?,
                 compute_s: r.f32()?,
@@ -177,9 +201,11 @@ impl Message {
             TAG_END => Message::EndSession { device_id: r.u64()?, req_id: r.u32()? },
             TAG_ACK => Message::Ack,
             TAG_ERROR => {
+                let req_id = r.u32()?;
+                let pos = r.u32()?;
                 let n = r.u32()? as usize;
                 let msg = String::from_utf8(r.bytes(n)?.to_vec()).context("error msg utf-8")?;
-                Message::Error { msg }
+                Message::Error { req_id, pos, msg }
             }
             t => bail!("unknown message tag {t}"),
         };
@@ -234,8 +260,8 @@ mod tests {
 
     #[test]
     fn roundtrip_all_variants() {
-        roundtrip(Message::Hello { device_id: 42, channel: Channel::Upload });
-        roundtrip(Message::Hello { device_id: 0, channel: Channel::Infer });
+        roundtrip(Message::Hello { device_id: 42, session: 7, channel: Channel::Upload });
+        roundtrip(Message::Hello { device_id: 0, session: u64::MAX, channel: Channel::Infer });
         roundtrip(Message::UploadHidden {
             device_id: u64::MAX,
             req_id: 7,
@@ -245,17 +271,43 @@ mod tests {
             precision: Precision::F16,
             payload: vec![1, 2, 3, 4, 5, 6, 7, 8],
         });
-        roundtrip(Message::InferRequest { device_id: 3, req_id: 9, pos: 55, prompt_len: 12 });
-        roundtrip(Message::TokenResponse { req_id: 9, token: -1, conf: 0.25, compute_s: 1e-3 });
+        roundtrip(Message::InferRequest {
+            device_id: 3,
+            req_id: 9,
+            pos: 55,
+            prompt_len: 12,
+            deadline_ms: 0,
+        });
+        roundtrip(Message::InferRequest {
+            device_id: 3,
+            req_id: 9,
+            pos: 55,
+            prompt_len: 12,
+            deadline_ms: 1500,
+        });
+        roundtrip(Message::TokenResponse {
+            req_id: 9,
+            pos: 55,
+            token: -1,
+            conf: 0.25,
+            compute_s: 1e-3,
+        });
         roundtrip(Message::EndSession { device_id: 3, req_id: 9 });
         roundtrip(Message::Ack);
-        roundtrip(Message::Error { msg: "kaboom — ω".into() });
+        roundtrip(Message::Error { req_id: 9, pos: 55, msg: "kaboom — ω".into() });
+        roundtrip(Message::Error { req_id: super::NO_REQ, pos: super::NO_REQ, msg: "hello?".into() });
     }
 
     #[test]
     fn rejects_truncated() {
-        let enc = Message::InferRequest { device_id: 3, req_id: 9, pos: 55, prompt_len: 2 }
-            .encode();
+        let enc = Message::InferRequest {
+            device_id: 3,
+            req_id: 9,
+            pos: 55,
+            prompt_len: 2,
+            deadline_ms: 40,
+        }
+        .encode();
         for cut in 1..enc.len() {
             assert!(Message::decode(&enc[..cut]).is_err(), "cut at {cut}");
         }
@@ -275,7 +327,8 @@ mod tests {
 
     #[test]
     fn rejects_bad_precision_and_channel() {
-        let mut enc = Message::Hello { device_id: 1, channel: Channel::Infer }.encode();
+        let mut enc =
+            Message::Hello { device_id: 1, session: 3, channel: Channel::Infer }.encode();
         *enc.last_mut().unwrap() = 9;
         assert!(Message::decode(&enc).is_err());
     }

@@ -1,0 +1,492 @@
+//! Event-driven serving core (paper §4.2, scaled out): a sharded worker
+//! pool with dependency-tracked inference requests.
+//!
+//! The seed implementation serialized every device through one GPU thread
+//! and resolved the upload-vs-infer race by re-queueing the request with a
+//! bounded retry counter.  This module replaces that with a scheduler that
+//! *parks* an infer request whose hidden states have not landed and wakes
+//! it the moment the covering `Upload` arrives — the wait is purely
+//! event-driven (a blocking channel receive), with no timers on the happy
+//! path and no retry counters anywhere.
+//!
+//! Architecture:
+//! * **Workers** (`CloudConfig::workers`): each worker thread owns its own
+//!   engine sessions and content-manager shard.  PJRT handles are `!Send`,
+//!   so the session factory is *built on the worker thread* via the
+//!   [`FactoryBuilder`] and nothing engine-related ever crosses threads.
+//! * **Sharding**: devices map to workers statically
+//!   (`device_id % workers`), so all messages of one device are totally
+//!   ordered by its worker's queue while independent devices are served
+//!   concurrently.
+//! * **Coalescing**: when an upload wakes several parked requests of one
+//!   device, a single engine pass covers every pending decode position
+//!   (the content manager's plan already batches catch-up positions) and
+//!   each request is answered from that one pass.
+//! * **Deadlines**: an infer request may carry a deadline (the edge's
+//!   per-token latency budget, §4.4), and every parked request is capped
+//!   by [`CloudConfig::max_park_s`] regardless, so a request whose
+//!   uploads never arrive resolves with an error instead of wedging its
+//!   connection.  A parked request whose deadline passes before its
+//!   uploads land is failed so the edge — which gave up at the same
+//!   budget — finds its connection drained, not wedged.  The only timed
+//!   wait in the loop is `recv_timeout` until the earliest parked
+//!   deadline; with nothing parked the loop blocks on the next message.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::CloudConfig;
+use crate::coordinator::content_manager::{ContentManager, Coverage};
+use crate::model::manifest::ModelDims;
+use crate::runtime::traits::CloudEngine;
+
+/// Session factory living on a worker thread.
+pub type SessionFactory = Box<dyn FnMut(u64) -> Result<Box<dyn CloudEngine>>>;
+
+/// Builds one [`SessionFactory`] per worker, invoked on that worker's own
+/// thread (PJRT objects never cross threads).
+pub type FactoryBuilder = Arc<dyn Fn() -> Result<SessionFactory> + Send + Sync>;
+
+/// One served token: the cloud head's prediction plus the engine seconds
+/// of the pass that produced it (a coalesced pass is attributed to every
+/// request it answered).
+#[derive(Debug, Clone, Copy)]
+pub struct TokenOut {
+    pub token: i32,
+    pub conf: f32,
+    pub compute_s: f64,
+}
+
+/// Work items for the scheduler.
+///
+/// `session` is the connection-pair nonce from the `Hello` handshake
+/// (0 = untagged, never fenced).  After a [`SchedMsg::Reset`] pins a
+/// device to a session, messages tagged with a *different* session are
+/// stragglers from a previous connection and are dropped (uploads,
+/// ends) or failed (infers) instead of corrupting the fresh session.
+pub enum SchedMsg {
+    Upload {
+        device: u64,
+        session: u64,
+        req_id: u32,
+        start_pos: u32,
+        prompt_len: u32,
+        hiddens: Vec<f32>,
+    },
+    Infer {
+        device: u64,
+        session: u64,
+        req_id: u32,
+        pos: u32,
+        prompt_len: u32,
+        /// Park no longer than this; `None` falls back to the worker's
+        /// [`CloudConfig::max_park_s`] bound, so a request whose uploads
+        /// never arrive (e.g. the upload connection died) fails with an
+        /// error instead of wedging the connection.
+        deadline: Option<Instant>,
+        reply: Sender<Result<TokenOut>>,
+    },
+    /// `EndSession` for one finished request.  Requests are ended by id:
+    /// a newer request's uploads that raced ahead on the upload
+    /// connection survive the teardown of the previous one.
+    End { device: u64, session: u64, req_id: u32 },
+    /// The device opened a fresh upload channel: drop all of its state,
+    /// including end-request tombstones (a reconnecting edge process
+    /// restarts its request ids), fail anything still parked, and pin
+    /// the device to `session`.
+    Reset { device: u64, session: u64 },
+    Stats { reply: Sender<CloudStats> },
+    Shutdown,
+}
+
+/// Serving statistics — per worker, or summed across the pool.
+#[derive(Debug, Clone, Default)]
+pub struct CloudStats {
+    pub requests_served: u64,
+    pub uploads: u64,
+    pub busy_s: f64,
+    pub active_devices: usize,
+    pub pending_floats: usize,
+    /// Infer requests currently parked waiting for their uploads.
+    pub parked: usize,
+    /// Parked requests failed because their deadline passed first.
+    pub deadline_expired: u64,
+    /// Workers contributing to this snapshot.
+    pub workers: usize,
+}
+
+impl CloudStats {
+    fn merge(&mut self, o: &CloudStats) {
+        self.requests_served += o.requests_served;
+        self.uploads += o.uploads;
+        self.busy_s += o.busy_s;
+        self.active_devices += o.active_devices;
+        self.pending_floats += o.pending_floats;
+        self.parked += o.parked;
+        self.deadline_expired += o.deadline_expired;
+        self.workers += o.workers;
+    }
+}
+
+/// Cheap cloneable handle routing device-addressed messages to the worker
+/// that owns the device.  Connection threads each hold their own clone.
+#[derive(Clone)]
+pub struct Router {
+    txs: Vec<Sender<SchedMsg>>,
+}
+
+impl Router {
+    pub fn workers(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Worker index owning `device` (static shard).
+    pub fn worker_for(&self, device: u64) -> usize {
+        (device % self.txs.len() as u64) as usize
+    }
+
+    /// Route one message to the worker owning `device`.
+    pub fn send(&self, device: u64, msg: SchedMsg) -> Result<()> {
+        self.txs[self.worker_for(device)].send(msg).map_err(|_| anyhow!("scheduler worker gone"))
+    }
+}
+
+/// The worker pool.  Owns the threads; hand out [`Router`]s for senders.
+pub struct Scheduler {
+    router: Router,
+    handles: Vec<JoinHandle<CloudStats>>,
+}
+
+impl Scheduler {
+    /// Spawn `cfg.workers` threads (at least one).  `builder` runs once
+    /// on each worker thread to construct that worker's session factory.
+    pub fn spawn(dims: ModelDims, cfg: CloudConfig, builder: FactoryBuilder) -> Result<Scheduler> {
+        let workers = cfg.workers.max(1);
+        let max_park = Duration::from_secs_f64(cfg.max_park_s.max(0.001));
+        let mut txs = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let (tx, rx) = channel::<SchedMsg>();
+            let builder = Arc::clone(&builder);
+            let dims = dims.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("cloud-worker-{w}"))
+                .spawn(move || {
+                    let factory = match builder() {
+                        Ok(f) => f,
+                        Err(e) => {
+                            log::error!("worker {w}: engine builder failed: {e:#}");
+                            return CloudStats::default();
+                        }
+                    };
+                    Worker::new(dims, factory, max_park).run(rx)
+                })?;
+            txs.push(tx);
+            handles.push(handle);
+        }
+        Ok(Scheduler { router: Router { txs }, handles })
+    }
+
+    pub fn router(&self) -> Router {
+        self.router.clone()
+    }
+
+    /// Aggregate statistics across the pool.
+    pub fn stats(&self) -> Result<CloudStats> {
+        let mut total = CloudStats::default();
+        for tx in &self.router.txs {
+            let (reply, rx) = channel();
+            tx.send(SchedMsg::Stats { reply }).map_err(|_| anyhow!("scheduler worker gone"))?;
+            total.merge(&rx.recv().context("worker stats reply")?);
+        }
+        Ok(total)
+    }
+
+    /// Stop every worker and return the summed final statistics.
+    pub fn shutdown(mut self) -> CloudStats {
+        for tx in &self.router.txs {
+            let _ = tx.send(SchedMsg::Shutdown);
+        }
+        let mut total = CloudStats::default();
+        for handle in self.handles.drain(..) {
+            total.merge(&handle.join().unwrap_or_default());
+        }
+        total
+    }
+}
+
+impl Drop for Scheduler {
+    fn drop(&mut self) {
+        // idempotent: workers already gone just drop the message
+        for tx in &self.router.txs {
+            let _ = tx.send(SchedMsg::Shutdown);
+        }
+    }
+}
+
+/// An infer request waiting for its uploads.
+struct Parked {
+    req_id: u32,
+    pos: u32,
+    prompt_len: u32,
+    /// Effective expiry: the client's deadline capped by the worker's
+    /// max-park bound, so every parked request eventually resolves.
+    deadline: Instant,
+    reply: Sender<Result<TokenOut>>,
+}
+
+/// One worker: engine sessions + content-manager shard + parking lot for
+/// the devices assigned to it.
+struct Worker {
+    cm: ContentManager,
+    factory: SessionFactory,
+    sessions: HashMap<u64, Box<dyn CloudEngine>>,
+    parked: HashMap<u64, Vec<Parked>>,
+    /// Connection-pair nonce each device is pinned to (set by `Reset`).
+    session_of: HashMap<u64, u64>,
+    max_park: Duration,
+    stats: CloudStats,
+}
+
+impl Worker {
+    fn new(dims: ModelDims, factory: SessionFactory, max_park: Duration) -> Worker {
+        Worker {
+            cm: ContentManager::new(dims.d_model),
+            factory,
+            sessions: HashMap::new(),
+            parked: HashMap::new(),
+            session_of: HashMap::new(),
+            max_park,
+            stats: CloudStats { workers: 1, ..CloudStats::default() },
+        }
+    }
+
+    /// A tagged message from a connection the device has moved past.
+    fn stale_session(&self, device: u64, session: u64) -> bool {
+        session != 0 && self.session_of.get(&device).is_some_and(|&cur| cur != session)
+    }
+
+    fn run(mut self, rx: Receiver<SchedMsg>) -> CloudStats {
+        loop {
+            // Block for the next message; with parked deadlines armed,
+            // wake at the earliest one to expire it.
+            let msg = match self.next_deadline() {
+                Some(deadline) => {
+                    match rx.recv_timeout(deadline.saturating_duration_since(Instant::now())) {
+                        Ok(m) => Some(m),
+                        Err(RecvTimeoutError::Timeout) => None,
+                        Err(RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+                None => match rx.recv() {
+                    Ok(m) => Some(m),
+                    Err(_) => break,
+                },
+            };
+            match msg {
+                None => self.expire_overdue(Instant::now()),
+                Some(SchedMsg::Upload { device, session, req_id, start_pos, prompt_len, hiddens }) => {
+                    if self.stale_session(device, session) {
+                        log::debug!("dropping stale-session upload from device {device}");
+                        continue;
+                    }
+                    self.stats.uploads += 1;
+                    if let Err(e) = self.cm.upload(device, req_id, start_pos, prompt_len, &hiddens)
+                    {
+                        log::warn!("upload from device {device} rejected: {e:#}");
+                    }
+                    self.drain(device);
+                }
+                Some(SchedMsg::Infer { device, session, req_id, pos, prompt_len, deadline, reply }) => {
+                    if self.stale_session(device, session) {
+                        self.stats.requests_served += 1;
+                        let _ = reply.send(Err(anyhow!(
+                            "infer request {req_id} from a stale connection of device {device}"
+                        )));
+                        continue;
+                    }
+                    let cap = Instant::now() + self.max_park;
+                    let deadline = deadline.map_or(cap, |d| d.min(cap));
+                    self.parked
+                        .entry(device)
+                        .or_default()
+                        .push(Parked { req_id, pos, prompt_len, deadline, reply });
+                    self.drain(device);
+                }
+                Some(SchedMsg::End { device, session, req_id }) => {
+                    if self.stale_session(device, session) {
+                        log::debug!("ignoring stale-session EndSession from device {device}");
+                        continue;
+                    }
+                    self.cm.end_request(device, req_id);
+                    self.sessions.remove(&device);
+                    if let Some(queue) = self.parked.get_mut(&device) {
+                        // fail parked requests of the ended (or older)
+                        // request; later ones keep waiting for coverage
+                        let mut i = 0;
+                        while i < queue.len() {
+                            if queue[i].req_id <= req_id {
+                                let p = queue.remove(i);
+                                self.stats.requests_served += 1;
+                                let _ = p.reply.send(Err(anyhow!(
+                                    "request {} for device {device} ended",
+                                    p.req_id
+                                )));
+                            } else {
+                                i += 1;
+                            }
+                        }
+                        if queue.is_empty() {
+                            self.parked.remove(&device);
+                        }
+                    }
+                }
+                Some(SchedMsg::Reset { device, session }) => {
+                    self.cm.reset_device(device);
+                    self.sessions.remove(&device);
+                    if session != 0 {
+                        self.session_of.insert(device, session);
+                    }
+                    if let Some(queue) = self.parked.remove(&device) {
+                        for p in queue {
+                            self.stats.requests_served += 1;
+                            let _ = p.reply.send(Err(anyhow!(
+                                "device {device} reconnected; request {} dropped",
+                                p.req_id
+                            )));
+                        }
+                    }
+                }
+                Some(SchedMsg::Stats { reply }) => {
+                    self.refresh_gauges();
+                    let _ = reply.send(self.stats.clone());
+                }
+                Some(SchedMsg::Shutdown) => break,
+            }
+        }
+        self.refresh_gauges();
+        self.stats
+    }
+
+    fn refresh_gauges(&mut self) {
+        self.stats.active_devices = self.cm.device_count();
+        self.stats.pending_floats = self.cm.pending_floats();
+        self.stats.parked = self.parked.values().map(Vec::len).sum();
+    }
+
+    fn next_deadline(&self) -> Option<Instant> {
+        self.parked.values().flatten().map(|p| p.deadline).min()
+    }
+
+    /// Fail every parked request whose deadline has passed.  The edge
+    /// that set the deadline has already emitted its local fallback; the
+    /// error reply keeps its infer connection drained and releases the
+    /// parking slot.
+    fn expire_overdue(&mut self, now: Instant) {
+        for (device, queue) in self.parked.iter_mut() {
+            let mut i = 0;
+            while i < queue.len() {
+                if queue[i].deadline <= now {
+                    let p = queue.remove(i);
+                    self.stats.requests_served += 1;
+                    self.stats.deadline_expired += 1;
+                    let _ = p.reply.send(Err(anyhow!(
+                        "deadline expired waiting for uploads from device {device} (pos {})",
+                        p.pos
+                    )));
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        self.parked.retain(|_, queue| !queue.is_empty());
+    }
+
+    /// Serve every parked request of `device` that the current upload
+    /// state covers, all in one engine pass; fail superseded ones.
+    fn drain(&mut self, device: u64) {
+        let Some(queue) = self.parked.get_mut(&device) else { return };
+        let mut batch: Vec<Parked> = Vec::new();
+        let mut i = 0;
+        while i < queue.len() {
+            let p = &queue[i];
+            match self.cm.coverage(device, p.req_id, p.pos, p.prompt_len) {
+                Coverage::Ready => batch.push(queue.remove(i)),
+                Coverage::Stale => {
+                    let p = queue.remove(i);
+                    self.stats.requests_served += 1;
+                    let _ = p.reply.send(Err(anyhow!(
+                        "request {} from device {device} superseded by a newer request",
+                        p.req_id
+                    )));
+                }
+                Coverage::Waiting => i += 1,
+            }
+        }
+        if queue.is_empty() {
+            self.parked.remove(&device);
+        }
+        if batch.is_empty() {
+            return;
+        }
+        batch.sort_by_key(|p| p.pos);
+        // Ready implies the request id matches the manager's current
+        // request for the device, so the whole batch shares one id and the
+        // highest position's plan covers every lower one.
+        let top = batch.last().expect("non-empty batch");
+        let t0 = Instant::now();
+        let served = self.engine_pass(device, top.req_id, top.pos, top.prompt_len);
+        let elapsed = t0.elapsed().as_secs_f64();
+        self.stats.busy_s += elapsed;
+        match served {
+            Ok(tokens) => {
+                for p in batch {
+                    self.stats.requests_served += 1;
+                    let out = tokens
+                        .get(&p.pos)
+                        .map(|&(token, conf)| TokenOut { token, conf, compute_s: elapsed })
+                        .ok_or_else(|| anyhow!("nothing to compute for pos {}", p.pos));
+                    let _ = p.reply.send(out);
+                }
+            }
+            Err(e) => {
+                for p in batch {
+                    self.stats.requests_served += 1;
+                    let _ = p.reply.send(Err(anyhow!("{e:#}")));
+                }
+            }
+        }
+    }
+
+    /// One engine pass answering every position up to `pos`: optional
+    /// prompt prefill, then per-position decode catch-up.
+    fn engine_pass(
+        &mut self,
+        device: u64,
+        req_id: u32,
+        pos: u32,
+        prompt_len: u32,
+    ) -> Result<HashMap<u32, (i32, f32)>> {
+        let plan = self.cm.plan(device, req_id, pos, prompt_len)?;
+        let session = match self.sessions.entry(device) {
+            std::collections::hash_map::Entry::Occupied(o) => o.into_mut(),
+            std::collections::hash_map::Entry::Vacant(v) => v.insert((self.factory)(device)?),
+        };
+        let mut tokens = HashMap::new();
+        if let Some((h, len)) = &plan.prefill {
+            session.reset();
+            let out = session.prefill(h, *len)?;
+            tokens.insert(*len as u32 - 1, (out.exit.token, out.exit.conf));
+        }
+        for (p, h) in &plan.decode {
+            let out = session.decode(h, *p as usize)?;
+            tokens.insert(*p, (out.exit.token, out.exit.conf));
+        }
+        Ok(tokens)
+    }
+}

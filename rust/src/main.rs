@@ -18,7 +18,7 @@ use std::net::TcpListener;
 
 use anyhow::{Context, Result};
 
-use ce_collm::config::DeploymentConfig;
+use ce_collm::config::{CloudConfig, DeploymentConfig};
 use ce_collm::coordinator::cloud::{CloudServer, SessionFactory};
 use ce_collm::coordinator::edge::{CloudLink, EdgeClient};
 use ce_collm::harness::runner::{record_main_experiments, ExperimentConfig};
@@ -163,19 +163,29 @@ fn run() -> Result<()> {
         }
         "serve-cloud" => {
             let addr = args.get_or("addr", "127.0.0.1:7433");
+            let workers: usize = args.get_parse("workers", 1);
             let listener = TcpListener::bind(&addr)?;
-            println!("cloud server listening on {addr} (artifacts: {artifacts})");
+            println!(
+                "cloud server listening on {addr} ({workers} workers, artifacts: {artifacts})"
+            );
             let dims = ce_collm::model::manifest::Manifest::load(
                 std::path::Path::new(&artifacts),
             )?
             .model;
             let art2 = artifacts.clone();
-            let server = CloudServer::spawn(listener, dims, move || {
-                let stack = LocalStack::load(&art2)?;
-                let f: SessionFactory =
-                    Box::new(move |_| Ok(Box::new(stack.cloud_session()) as _));
-                Ok(f)
-            })?;
+            // each worker loads its own stack on its own thread (PJRT is
+            // thread-local); the builder runs once per worker
+            let server = CloudServer::spawn(
+                listener,
+                dims,
+                CloudConfig::with_workers(workers),
+                move || {
+                    let stack = LocalStack::load(&art2)?;
+                    let f: SessionFactory =
+                        Box::new(move |_| Ok(Box::new(stack.cloud_session()) as _));
+                    Ok(f)
+                },
+            )?;
             println!("ready; Ctrl-C to stop");
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -193,6 +203,10 @@ fn run() -> Result<()> {
             let mut cfg = DeploymentConfig::with_threshold(args.get_parse("threshold", 0.8f32));
             cfg.max_new_tokens = args.get_parse("max-new", 64usize);
             cfg.device_id = args.get_parse("device-id", 1u64);
+            let budget_ms: u64 = args.get_parse("budget-ms", 0);
+            if budget_ms > 0 {
+                cfg.cloud_token_budget_s = Some(budget_ms as f64 / 1e3);
+            }
             let upload = Box::new(TcpTransport::connect(&addr)?);
             let infer = Box::new(TcpTransport::connect(&addr)?);
             let link = CloudLink::new(cfg.device_id, upload, infer)?;
@@ -200,9 +214,10 @@ fn run() -> Result<()> {
             let out = client.generate(&prompt)?;
             println!("{}", out.text);
             eprintln!(
-                "[{} tokens; cloud rate {:.1}%; {}]",
+                "[{} tokens; cloud rate {:.1}%; {} deadline fallbacks; {}]",
                 out.tokens.len(),
                 out.counters.request_cloud_rate() * 100.0,
+                out.counters.cloud_fallbacks,
                 out.cost
             );
         }
@@ -237,7 +252,9 @@ fn run() -> Result<()> {
                  \x20 calibrate          print the measured cost model\n\n\
                  flags: --artifacts DIR --prompts N --repeats N --max-new N\n\
                  \x20      --link wifi|lte|fiber|lan|ideal --threshold T\n\
-                 \x20      --clients N --addr HOST:PORT --seed N"
+                 \x20      --clients N --addr HOST:PORT --seed N\n\
+                 \x20      --workers N (serve-cloud scheduler pool)\n\
+                 \x20      --budget-ms N (run-edge per-token cloud latency budget)"
             );
         }
     }

@@ -54,6 +54,9 @@ pub struct RunCounters {
     pub bytes_down: u64,
     /// Cloud inference requests issued.
     pub cloud_requests: usize,
+    /// Tokens that wanted the cloud but were emitted from a local exit
+    /// because the latency budget expired or the link failed (§4.4).
+    pub cloud_fallbacks: usize,
 }
 
 impl RunCounters {
@@ -65,6 +68,7 @@ impl RunCounters {
         self.bytes_up += o.bytes_up;
         self.bytes_down += o.bytes_down;
         self.cloud_requests += o.cloud_requests;
+        self.cloud_fallbacks += o.cloud_fallbacks;
     }
 
     /// "Request Cloud Rate" — fraction of generated tokens that required a

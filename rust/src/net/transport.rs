@@ -7,8 +7,8 @@
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
-use std::sync::mpsc::{Receiver, Sender};
-use std::time::Duration;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -21,6 +21,15 @@ pub const MAX_FRAME: usize = 64 << 20;
 pub trait Transport: Send {
     fn send(&mut self, frame: &[u8]) -> Result<()>;
     fn recv(&mut self) -> Result<Vec<u8>>;
+    /// Receive with a deadline: `Ok(Some(frame))` on success, `Ok(None)`
+    /// once `deadline` passes with no frame started.  Used by the edge's
+    /// latency-aware exit (paper §4.4) so a slow or dead cloud cannot
+    /// block token generation.  The default implementation cannot time
+    /// out and simply blocks (implementations should override).
+    fn recv_deadline(&mut self, deadline: Instant) -> Result<Option<Vec<u8>>> {
+        let _ = deadline;
+        self.recv().map(Some)
+    }
     /// Bytes pushed through `send` so far (payload only).
     fn bytes_sent(&self) -> u64;
 }
@@ -48,6 +57,55 @@ impl TcpTransport {
     pub fn try_clone(&self) -> Result<Self> {
         Ok(Self { stream: self.stream.try_clone()?, sent: self.sent })
     }
+
+    /// Deadline-bounded receive.  A timeout *before the first byte* of a
+    /// frame is a clean `None`; a timeout mid-frame is an error, because
+    /// the length-prefixed stream can no longer be resynchronized.
+    fn recv_until(&mut self, deadline: Instant) -> Result<Option<Vec<u8>>> {
+        let mut len = [0u8; 4];
+        if !self.read_all_until(&mut len, deadline, true)? {
+            return Ok(None);
+        }
+        let n = u32::from_le_bytes(len) as usize;
+        anyhow::ensure!(n <= MAX_FRAME, "frame length {n} exceeds limit");
+        let mut buf = vec![0u8; n];
+        if !self.read_all_until(&mut buf, deadline, false)? {
+            anyhow::bail!("deadline passed mid-frame ({n}-byte body)");
+        }
+        Ok(Some(buf))
+    }
+
+    /// Fill `buf` before `deadline`.  Returns `Ok(false)` only when
+    /// nothing was consumed and `zero_ok` is set; a timeout after partial
+    /// progress is always an error (framing would be lost).
+    fn read_all_until(&mut self, buf: &mut [u8], deadline: Instant, zero_ok: bool) -> Result<bool> {
+        let mut got = 0usize;
+        while got < buf.len() {
+            let now = Instant::now();
+            if now >= deadline {
+                if got == 0 && zero_ok {
+                    return Ok(false);
+                }
+                anyhow::bail!("deadline passed mid-frame ({got}/{} bytes)", buf.len());
+            }
+            self.stream.set_read_timeout(Some(deadline - now)).context("set_read_timeout")?;
+            match self.stream.read(&mut buf[got..]) {
+                Ok(0) => anyhow::bail!("peer closed"),
+                Ok(k) => got += k,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    // loop back: the deadline check above decides between
+                    // a clean None and a mid-frame error
+                }
+                Err(e) => return Err(e).context("reading frame"),
+            }
+        }
+        Ok(true)
+    }
 }
 
 impl Transport for TcpTransport {
@@ -67,6 +125,13 @@ impl Transport for TcpTransport {
         let mut buf = vec![0u8; n];
         self.stream.read_exact(&mut buf).context("reading frame body")?;
         Ok(buf)
+    }
+
+    fn recv_deadline(&mut self, deadline: Instant) -> Result<Option<Vec<u8>>> {
+        let out = self.recv_until(deadline);
+        // always restore blocking mode for subsequent plain recv calls
+        let _ = self.stream.set_read_timeout(None);
+        out
     }
 
     fn bytes_sent(&self) -> u64 {
@@ -104,6 +169,14 @@ impl Transport for InProcTransport {
         self.rx.recv().map_err(|_| anyhow::anyhow!("peer closed"))
     }
 
+    fn recv_deadline(&mut self, deadline: Instant) -> Result<Option<Vec<u8>>> {
+        match self.rx.recv_timeout(deadline.saturating_duration_since(Instant::now())) {
+            Ok(f) => Ok(Some(f)),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => Err(anyhow::anyhow!("peer closed")),
+        }
+    }
+
     fn bytes_sent(&self) -> u64 {
         self.sent
     }
@@ -137,6 +210,10 @@ impl<T: Transport> Transport for Throttled<T> {
 
     fn recv(&mut self) -> Result<Vec<u8>> {
         self.inner.recv()
+    }
+
+    fn recv_deadline(&mut self, deadline: Instant) -> Result<Option<Vec<u8>>> {
+        self.inner.recv_deadline(deadline)
     }
 
     fn bytes_sent(&self) -> u64 {
@@ -196,6 +273,46 @@ mod tests {
         t.send(b"x").unwrap();
         assert!(start.elapsed() >= Duration::from_millis(19));
         assert_eq!(b.recv().unwrap(), b"x");
+    }
+
+    #[test]
+    fn in_proc_recv_deadline() {
+        let (mut a, mut b) = in_proc_pair();
+        // nothing queued: clean timeout
+        let t0 = Instant::now();
+        assert!(a.recv_deadline(t0 + Duration::from_millis(20)).unwrap().is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(19));
+        // queued frame delivered immediately
+        b.send(b"late").unwrap();
+        let got = a.recv_deadline(Instant::now() + Duration::from_secs(5)).unwrap();
+        assert_eq!(got.unwrap(), b"late");
+        // closed peer is an error, not a timeout
+        drop(b);
+        assert!(a.recv_deadline(Instant::now() + Duration::from_millis(10)).is_err());
+    }
+
+    #[test]
+    fn tcp_recv_deadline_times_out_then_recovers() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let (go_tx, go_rx) = std::sync::mpsc::channel::<()>();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut t = TcpTransport::new(stream).unwrap();
+            go_rx.recv().unwrap(); // hold the reply until the client timed out once
+            t.send(b"finally").unwrap();
+            t.recv().unwrap() // plain recv still works after deadline mode
+        });
+        let mut c = TcpTransport::connect(&addr.to_string()).unwrap();
+        assert!(c
+            .recv_deadline(Instant::now() + Duration::from_millis(30))
+            .unwrap()
+            .is_none());
+        go_tx.send(()).unwrap();
+        let got = c.recv_deadline(Instant::now() + Duration::from_secs(10)).unwrap();
+        assert_eq!(got.unwrap(), b"finally");
+        c.send(b"ok").unwrap();
+        assert_eq!(server.join().unwrap(), b"ok");
     }
 
     #[test]

@@ -5,9 +5,11 @@ use std::collections::HashMap;
 use std::path::Path;
 
 use anyhow::{Context, Result};
-use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
 
 use crate::model::manifest::ArtifactSig;
+use crate::runtime::xla::{
+    HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation,
+};
 
 pub struct Artifact {
     pub name: String,
@@ -21,11 +23,11 @@ impl Artifact {
     /// Load `<dir>/<sig.file>` (HLO text) and compile it.
     pub fn load(client: &PjRtClient, dir: &Path, name: &str, sig: &ArtifactSig) -> Result<Self> {
         let path = dir.join(&sig.file);
-        let proto = xla::HloModuleProto::from_text_file(
+        let proto = HloModuleProto::from_text_file(
             path.to_str().context("artifact path not utf-8")?,
         )
         .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
+        let comp = XlaComputation::from_proto(&proto);
         let exe = client
             .compile(&comp)
             .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;

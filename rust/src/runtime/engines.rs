@@ -8,7 +8,8 @@
 use std::rc::Rc;
 
 use anyhow::Result;
-use xla::{Literal, PjRtBuffer};
+
+use crate::runtime::xla::{Literal, PjRtBuffer};
 
 use crate::model::manifest::ModelDims;
 use crate::runtime::literal::{f32_literal, i32_literal, scalar_i32};

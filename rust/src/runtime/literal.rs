@@ -1,7 +1,8 @@
 //! Conversion helpers between rust slices and `xla::Literal`s.
 
 use anyhow::{Context, Result};
-use xla::Literal;
+
+use crate::runtime::xla::Literal;
 
 /// Build an f32 literal of the given shape.
 pub fn f32_literal(data: &[f32], dims: &[usize]) -> Result<Literal> {

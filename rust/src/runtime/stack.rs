@@ -8,7 +8,8 @@ use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
 use anyhow::{Context, Result};
-use xla::{PjRtBuffer, PjRtClient};
+
+use crate::runtime::xla::{PjRtBuffer, PjRtClient};
 
 use crate::model::manifest::Manifest;
 use crate::model::tokenizer::Tokenizer;

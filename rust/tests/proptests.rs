@@ -26,6 +26,7 @@ fn arb_message(rng: &mut Rng) -> Message {
     match rng.gen_range(7) {
         0 => Message::Hello {
             device_id: rng.next_u64(),
+            session: rng.next_u64(),
             channel: if rng.gen_bool(0.5) { Channel::Upload } else { Channel::Infer },
         },
         1 => {
@@ -49,9 +50,11 @@ fn arb_message(rng: &mut Rng) -> Message {
             req_id: rng.next_u64() as u32,
             pos: rng.gen_range(4096) as u32,
             prompt_len: rng.gen_range(256) as u32,
+            deadline_ms: rng.gen_range(5000) as u32,
         },
         3 => Message::TokenResponse {
             req_id: rng.next_u64() as u32,
+            pos: rng.gen_range(4096) as u32,
             token: rng.gen_range(384) as i32,
             conf: rng.gen_f32(),
             compute_s: rng.gen_f32() * 0.1,
@@ -59,6 +62,8 @@ fn arb_message(rng: &mut Rng) -> Message {
         4 => Message::EndSession { device_id: rng.next_u64(), req_id: rng.next_u64() as u32 },
         5 => Message::Ack,
         _ => Message::Error {
+            req_id: rng.next_u64() as u32,
+            pos: rng.gen_range(4096) as u32,
             msg: (0..rng.gen_range(64)).map(|_| (rng.gen_range(94) as u8 + 32) as char).collect(),
         },
     }
@@ -298,7 +303,7 @@ fn prop_des_total_bounds_parts() {
                 &traces,
                 &dims,
                 &cost,
-                &SimConfig { strategy, link: LinkProfile::wifi(), seed },
+                &SimConfig { strategy, link: LinkProfile::wifi(), seed, workers: 1 },
             );
             let (c, k) = out.summed();
             assert!(out.makespan_s >= c.edge_s - 1e-9, "seed {seed} {strategy:?}");
@@ -339,7 +344,7 @@ fn prop_des_more_clients_never_faster() {
                 &traces,
                 &dims,
                 &cost,
-                &SimConfig { strategy, link: LinkProfile::wifi(), seed: 0 },
+                &SimConfig { strategy, link: LinkProfile::wifi(), seed: 0, workers: 1 },
             );
             assert!(
                 out.makespan_s >= prev - 1e-9,

@@ -1,0 +1,342 @@
+//! Integration tests for the event-driven serving core: the scheduler's
+//! ordering contract (infer-before-upload parks and wakes — no polling,
+//! no retries), multi-worker concurrency, deadline expiry, and the edge's
+//! latency-aware local fallback against a stalled cloud.
+//!
+//! Everything runs on in-proc channels/transports with mock engines and
+//! zero test-side waiting: each assertion blocks on a reply that the
+//! system under test must produce.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use ce_collm::config::{CloudConfig, DeploymentConfig};
+use ce_collm::coordinator::policy::ExitPoint;
+use ce_collm::coordinator::scheduler::{Router, SchedMsg, Scheduler, SessionFactory, TokenOut};
+use ce_collm::coordinator::edge::{CloudLink, EdgeClient};
+use ce_collm::model::manifest::test_manifest;
+use ce_collm::net::transport::{in_proc_pair, Transport};
+use ce_collm::runtime::mock::{MockCloud, MockEdge, MockOracle};
+
+const D: usize = 128; // test manifest d_model
+
+fn mock_scheduler(seed: u64, workers: usize) -> Scheduler {
+    let dims = test_manifest().model;
+    let sdims = dims.clone();
+    Scheduler::spawn(
+        dims,
+        CloudConfig::with_workers(workers),
+        Arc::new(move || {
+            let sdims = sdims.clone();
+            let f: SessionFactory = Box::new(move |_device| {
+                Ok(Box::new(MockCloud::new(MockOracle::new(seed), sdims.clone())) as _)
+            });
+            Ok(f)
+        }),
+    )
+    .unwrap()
+}
+
+fn infer(
+    router: &Router,
+    device: u64,
+    req_id: u32,
+    pos: u32,
+    prompt_len: u32,
+    deadline: Option<Instant>,
+) -> mpsc::Receiver<anyhow::Result<TokenOut>> {
+    let (reply, rx) = mpsc::channel();
+    router
+        .send(
+            device,
+            SchedMsg::Infer { device, session: 0, req_id, pos, prompt_len, deadline, reply },
+        )
+        .unwrap();
+    rx
+}
+
+fn upload(router: &Router, device: u64, req_id: u32, start_pos: u32, count: usize, plen: u32) {
+    router
+        .send(
+            device,
+            SchedMsg::Upload {
+                device,
+                session: 0,
+                req_id,
+                start_pos,
+                prompt_len: plen,
+                hiddens: vec![0.5; count * D],
+            },
+        )
+        .unwrap();
+}
+
+#[test]
+fn infer_before_upload_parks_then_completes() {
+    let seed = 21;
+    let sched = mock_scheduler(seed, 1);
+    let router = sched.router();
+
+    // the infer request overtakes its own uploads (they travel on the
+    // other connection in the real system)
+    let rx = infer(&router, 1, 1, 2, 3, None);
+
+    // the stats round trip is processed after the infer on the same
+    // worker queue, so "parked == 1, no reply" proves the request parked
+    // rather than failed — with zero test-side waiting
+    let stats = sched.stats().unwrap();
+    assert_eq!(stats.parked, 1, "request must park while uploads are in flight");
+    assert_eq!(stats.requests_served, 0);
+    assert!(rx.try_recv().is_err(), "no token before the covering upload");
+
+    // the covering prompt upload lands -> the parked request is woken
+    upload(&router, 1, 1, 0, 3, 3);
+    let out = rx.recv().unwrap().expect("parked request must complete");
+    assert_eq!(out.token, MockOracle::new(seed).cloud_token(2));
+
+    let stats = sched.stats().unwrap();
+    assert_eq!(stats.parked, 0);
+    assert_eq!(stats.requests_served, 1);
+    assert_eq!(stats.uploads, 1);
+    let final_stats = sched.shutdown();
+    assert_eq!(final_stats.requests_served, 1);
+}
+
+#[test]
+fn one_upload_wakes_and_coalesces_all_covered_requests() {
+    let seed = 5;
+    let sched = mock_scheduler(seed, 1);
+    let router = sched.router();
+    let oracle = MockOracle::new(seed);
+
+    // normal start: prompt upload, then the first token via cloud prefill
+    upload(&router, 7, 1, 0, 3, 3);
+    let first = infer(&router, 7, 1, 2, 3, None).recv().unwrap().unwrap();
+    assert_eq!(first.token, oracle.cloud_token(2));
+
+    // two decode requests race ahead of their uploads and park
+    let rx4 = infer(&router, 7, 1, 4, 3, None);
+    let rx5 = infer(&router, 7, 1, 5, 3, None);
+    assert_eq!(sched.stats().unwrap().parked, 2);
+
+    // one upload covering positions 3..=5 wakes both; the worker answers
+    // them from a single catch-up pass over the pending positions
+    upload(&router, 7, 1, 3, 3, 3);
+    assert_eq!(rx4.recv().unwrap().unwrap().token, oracle.cloud_token(4));
+    assert_eq!(rx5.recv().unwrap().unwrap().token, oracle.cloud_token(5));
+
+    let stats = sched.stats().unwrap();
+    assert_eq!(stats.parked, 0);
+    assert_eq!(stats.requests_served, 3);
+    sched.shutdown();
+}
+
+#[test]
+fn superseded_request_fails_instead_of_parking_forever() {
+    let sched = mock_scheduler(3, 1);
+    let router = sched.router();
+    // request 1 parks...
+    let rx = infer(&router, 2, 1, 1, 2, None);
+    // ...then the device moves on to request 2: the old request can never
+    // be served and must fail promptly
+    upload(&router, 2, 2, 0, 2, 2);
+    let err = rx.recv().unwrap().expect_err("stale request must fail");
+    assert!(format!("{err:#}").contains("superseded"), "{err:#}");
+    sched.shutdown();
+}
+
+#[test]
+fn two_devices_progress_concurrently_with_two_workers() {
+    let seed = 9;
+    let sched = mock_scheduler(seed, 2);
+    let router = sched.router();
+    assert_eq!(router.workers(), 2);
+    assert_ne!(router.worker_for(0), router.worker_for(1), "devices shard across workers");
+
+    // device 0 (worker 0) parks indefinitely: its uploads never arrive
+    let rx0 = infer(&router, 0, 1, 1, 2, None);
+
+    // device 1 (worker 1) runs a complete request meanwhile: prompt,
+    // first token, then a decode token — every reply arrives even though
+    // the other worker has a parked request the whole time
+    let oracle = MockOracle::new(seed);
+    upload(&router, 1, 1, 0, 2, 2);
+    let t1 = infer(&router, 1, 1, 1, 2, None).recv().unwrap().unwrap();
+    assert_eq!(t1.token, oracle.cloud_token(1));
+    upload(&router, 1, 1, 2, 1, 2);
+    let t2 = infer(&router, 1, 1, 2, 2, None).recv().unwrap().unwrap();
+    assert_eq!(t2.token, oracle.cloud_token(2));
+    router.send(1, SchedMsg::End { device: 1, session: 0, req_id: 1 }).unwrap();
+
+    let stats = sched.stats().unwrap();
+    assert_eq!(stats.workers, 2);
+    assert_eq!(stats.parked, 1, "device 0 still parked");
+    assert_eq!(stats.requests_served, 2, "device 1 made full progress");
+
+    // shutdown drops the parked request's reply channel
+    sched.shutdown();
+    assert!(rx0.recv().is_err());
+}
+
+#[test]
+fn parked_request_deadline_expires_with_an_error() {
+    let sched = mock_scheduler(1, 1);
+    let router = sched.router();
+    let deadline = Instant::now() + Duration::from_millis(40);
+    let rx = infer(&router, 4, 1, 1, 2, Some(deadline));
+    // blocking on the reply: the worker must wake itself at the deadline
+    let err = rx.recv().unwrap().expect_err("deadline must expire the parked request");
+    assert!(format!("{err:#}").contains("deadline"), "{err:#}");
+    assert!(Instant::now() >= deadline, "no early expiry");
+    let stats = sched.stats().unwrap();
+    assert_eq!(stats.deadline_expired, 1);
+    assert_eq!(stats.parked, 0);
+    sched.shutdown();
+}
+
+#[test]
+fn stale_session_frames_are_fenced_after_reconnect() {
+    let seed = 13;
+    let sched = mock_scheduler(seed, 1);
+    let router = sched.router();
+    let dev = 5u64;
+
+    // connection pair A pins the device, then the client reconnects as B
+    router.send(dev, SchedMsg::Reset { device: dev, session: 0xA }).unwrap();
+    router.send(dev, SchedMsg::Reset { device: dev, session: 0xB }).unwrap();
+
+    // B's prompt upload is accepted
+    router
+        .send(dev, SchedMsg::Upload {
+            device: dev,
+            session: 0xB,
+            req_id: 1,
+            start_pos: 0,
+            prompt_len: 2,
+            hiddens: vec![0.5; 2 * D],
+        })
+        .unwrap();
+    // a straggling EndSession from A's infer connection must not tear
+    // down B's fresh state...
+    router.send(dev, SchedMsg::End { device: dev, session: 0xA, req_id: 1 }).unwrap();
+    // ...and a straggling upload from A is dropped outright
+    router
+        .send(dev, SchedMsg::Upload {
+            device: dev,
+            session: 0xA,
+            req_id: 1,
+            start_pos: 0,
+            prompt_len: 2,
+            hiddens: vec![0.5; 2 * D],
+        })
+        .unwrap();
+
+    // B's request still completes against its own uploads
+    let (reply, rx) = mpsc::channel();
+    router
+        .send(dev, SchedMsg::Infer {
+            device: dev,
+            session: 0xB,
+            req_id: 1,
+            pos: 1,
+            prompt_len: 2,
+            deadline: None,
+            reply,
+        })
+        .unwrap();
+    let out = rx.recv().unwrap().expect("session B must be unaffected by A's stragglers");
+    assert_eq!(out.token, MockOracle::new(seed).cloud_token(1));
+
+    let stats = sched.stats().unwrap();
+    assert_eq!(stats.uploads, 1, "A's straggling upload must be fenced");
+    assert_eq!(stats.requests_served, 1);
+    sched.shutdown();
+}
+
+#[test]
+fn missing_uploads_resolve_with_an_error_at_the_max_park_bound() {
+    // no client deadline at all: the worker's own bound must still
+    // resolve the request (a dead upload connection must not wedge it)
+    let dims = test_manifest().model;
+    let sdims = dims.clone();
+    let sched = Scheduler::spawn(
+        dims,
+        CloudConfig { workers: 1, max_park_s: 0.04 },
+        Arc::new(move || {
+            let sdims = sdims.clone();
+            let f: SessionFactory = Box::new(move |_device| {
+                Ok(Box::new(MockCloud::new(MockOracle::new(1), sdims.clone())) as _)
+            });
+            Ok(f)
+        }),
+    )
+    .unwrap();
+    let router = sched.router();
+    let rx = infer(&router, 6, 1, 1, 2, None);
+    let err = rx.recv().unwrap().expect_err("max-park bound must fire");
+    assert!(format!("{err:#}").contains("deadline"), "{err:#}");
+    let stats = sched.stats().unwrap();
+    assert_eq!(stats.deadline_expired, 1);
+    assert_eq!(stats.parked, 0);
+    sched.shutdown();
+}
+
+/// A cloud that completes the dual-API handshake and then swallows every
+/// frame without ever answering.
+fn stalled_cloud_link(device_id: u64) -> CloudLink {
+    use ce_collm::coordinator::protocol::Message;
+
+    let (edge_up, cloud_up) = in_proc_pair();
+    let (edge_inf, cloud_inf) = in_proc_pair();
+    std::thread::spawn(move || {
+        // CloudLink::new handshakes the infer channel first, then upload
+        let mut inf: Box<dyn Transport> = Box::new(cloud_inf);
+        let mut up: Box<dyn Transport> = Box::new(cloud_up);
+        let _ = inf.recv();
+        let _ = inf.send(&Message::Ack.encode());
+        let _ = up.recv();
+        let _ = up.send(&Message::Ack.encode());
+        // drain both channels forever, never replying
+        std::thread::spawn(move || while up.recv().is_ok() {});
+        while inf.recv().is_ok() {}
+    });
+    CloudLink::new(device_id, Box::new(edge_up), Box::new(edge_inf)).unwrap()
+}
+
+#[test]
+fn stalled_cloud_falls_back_to_best_local_exit_within_budget() {
+    let seed = 5;
+    let dims = test_manifest().model;
+    // θ = 1.0: every token wants the cloud (confidences are < 1)
+    let mut cfg = DeploymentConfig::with_threshold(1.0);
+    cfg.device_id = 3;
+    cfg.max_new_tokens = 4;
+    let budget = 0.05;
+    cfg.cloud_token_budget_s = Some(budget);
+
+    let link = stalled_cloud_link(cfg.device_id);
+    let mut client = EdgeClient::with_cloud(MockEdge::new(MockOracle::new(seed), dims), cfg, link);
+
+    let wall0 = Instant::now();
+    let out = client.generate("a stalled cloud must not block").unwrap();
+    let wall = wall0.elapsed().as_secs_f64();
+
+    assert_eq!(out.tokens.len(), 4);
+    // every deferral fell back to a local exit within the budget
+    assert_eq!(out.counters.cloud_fallbacks, 4, "{:?}", out.counters);
+    assert_eq!(out.counters.cloud_requests, 4);
+    assert_eq!(out.counters.tokens_cloud, 0);
+    assert_eq!(out.counters.tokens_exit2, 4, "mock exit-2 confidence >= exit-1");
+    assert!(
+        wall < 4.0 * budget + 2.0,
+        "fallbacks must not block past the budget (took {wall:.3}s)"
+    );
+
+    // deterministic fallback: the mock's exit-2 prediction at each position
+    let oracle = MockOracle::new(seed);
+    for t in &out.trace {
+        assert_eq!(t.exit, ExitPoint::Exit2, "trace records the local exit used");
+        assert_eq!(t.token, oracle.exit_token(t.pos, oracle.conf2(t.pos)));
+    }
+}

@@ -5,24 +5,28 @@
 
 use std::net::TcpListener;
 
-use ce_collm::config::DeploymentConfig;
+use ce_collm::config::{CloudConfig, DeploymentConfig};
 use ce_collm::coordinator::cloud::{CloudServer, SessionFactory};
 use ce_collm::coordinator::edge::{CloudLink, EdgeClient};
 use ce_collm::model::manifest::test_manifest;
 use ce_collm::net::transport::TcpTransport;
 use ce_collm::runtime::mock::{MockCloud, MockEdge, MockOracle};
 
-fn spawn_mock_server(seed: u64) -> CloudServer {
+fn spawn_mock_server_with(seed: u64, workers: usize) -> CloudServer {
     let dims = test_manifest().model;
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let sdims = dims.clone();
-    CloudServer::spawn(listener, dims, move || {
+    CloudServer::spawn(listener, dims, CloudConfig::with_workers(workers), move || {
         let f: SessionFactory = Box::new(move |_device| {
             Ok(Box::new(MockCloud::new(MockOracle::new(seed), sdims.clone())) as _)
         });
         Ok(f)
     })
     .unwrap()
+}
+
+fn spawn_mock_server(seed: u64) -> CloudServer {
+    spawn_mock_server_with(seed, 1)
 }
 
 fn connect_client(
@@ -86,7 +90,9 @@ fn tcp_multiple_sequential_requests_reuse_session() {
 
 #[test]
 fn tcp_concurrent_clients_are_isolated() {
-    let server = spawn_mock_server(11);
+    // two scheduler workers: devices shard across them and are served
+    // concurrently over the real TCP path
+    let server = spawn_mock_server_with(11, 2);
     let addr = server.addr;
     let mut handles = Vec::new();
     for device in 0..4u64 {

@@ -43,6 +43,7 @@ fn main() {
                     link,
                     seed: 1,
                     workers: 1,
+                    cross_device_batch: true,
                 },
             )
         });

@@ -1,14 +1,19 @@
 //! Hot-path microbenchmarks: everything that runs per token on the
-//! request path — quantization, protocol codec, content-manager ops,
-//! exit policy, DES replay — plus the real PJRT per-segment step costs
-//! when artifacts are available.
+//! request path — quantization, protocol codec (owned vs borrowed),
+//! content-manager ops, batched decode, exit policy, DES replay — plus
+//! the real PJRT per-segment step costs when artifacts are available.
 //!
-//!     cargo bench --bench hotpath
+//!     cargo bench --bench hotpath [-- --smoke] [-- --json PATH]
+//!
+//! `--smoke` shrinks every budget for CI; results are always written to
+//! `BENCH_hotpath.json` (override with `--json`) so the workflow can
+//! upload them as the perf-trajectory artifact.
 
-use ce_collm::config::{AblationFlags, ExitPolicy};
+use ce_collm::config::{AblationFlags, CloudConfig, ExitPolicy};
 use ce_collm::coordinator::content_manager::ContentManager;
 use ce_collm::coordinator::policy::TokenPolicy;
 use ce_collm::coordinator::protocol::Message;
+use ce_collm::coordinator::scheduler::{SchedMsg, Scheduler, SessionFactory};
 use ce_collm::eval::rouge::rouge_l;
 use ce_collm::harness::cost::CostModel;
 use ce_collm::harness::des::{simulate, SimConfig, Strategy};
@@ -17,21 +22,43 @@ use ce_collm::model::manifest::test_manifest;
 use ce_collm::net::profiles::LinkProfile;
 use ce_collm::quant::{self, Precision};
 use ce_collm::runtime::mock::{MockCloud, MockEdge, MockOracle};
-use ce_collm::runtime::traits::{CloudEngine, EdgeEngine};
-use ce_collm::util::bench::{bench, bench_throughput};
+use ce_collm::runtime::traits::{BatchItem, CloudEngine, EdgeEngine};
+use ce_collm::util::bench::{bench, bench_throughput, to_json, BenchResult};
+use ce_collm::util::cli::Args;
+use std::sync::Arc;
 
 fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let smoke = args.has("smoke");
+    let scale = if smoke { 0.15 } else { 1.0 };
+    let json_path = args.get_or("json", "BENCH_hotpath.json");
+    let mut results: Vec<BenchResult> = Vec::new();
+
     println!("== quantization (128-dim hidden state, the per-token upload) ==");
     let h: Vec<f32> = (0..128).map(|i| (i as f32 - 64.0) * 3.1).collect();
-    bench_throughput("quant::pack f16 [128]", 256, 0.3, || quant::pack(&h, Precision::F16));
-    bench_throughput("quant::pack f32 [128]", 512, 0.3, || quant::pack(&h, Precision::F32));
+    results.push(bench_throughput("quant::pack f16 [128]", 256, 0.3 * scale, || {
+        quant::pack(&h, Precision::F16)
+    }));
+    results.push(bench_throughput("quant::pack f32 [128]", 512, 0.3 * scale, || {
+        quant::pack(&h, Precision::F32)
+    }));
     let p16 = quant::pack(&h, Precision::F16);
-    bench("quant::unpack f16 [128]", 0.3, || quant::unpack(&p16, Precision::F16).unwrap());
+    results.push(bench("quant::unpack f16 [128] (alloc)", 0.3 * scale, || {
+        quant::unpack(&p16, Precision::F16).unwrap()
+    }));
+    let mut reuse = Vec::new();
+    results.push(bench("quant::unpack_into f16 [128] (reused buf)", 0.3 * scale, || {
+        quant::unpack_into(&p16, Precision::F16, &mut reuse).unwrap();
+        reuse.len()
+    }));
     // prompt-sized payload
     let hp: Vec<f32> = (0..256 * 128).map(|i| (i % 997) as f32).collect();
-    bench_throughput("quant::pack f16 [256x128] (prompt)", hp.len() * 2, 0.3, || {
-        quant::pack(&hp, Precision::F16)
-    });
+    results.push(bench_throughput(
+        "quant::pack f16 [256x128] (prompt)",
+        hp.len() * 2,
+        0.3 * scale,
+        || quant::pack(&hp, Precision::F16),
+    ));
 
     println!("\n== wire protocol ==");
     let up = Message::UploadHidden {
@@ -43,16 +70,34 @@ fn main() {
         precision: Precision::F16,
         payload: p16.clone(),
     };
-    bench("protocol encode UploadHidden[128]", 0.3, || up.encode());
+    results.push(bench("protocol encode UploadHidden[128]", 0.3 * scale, || up.encode()));
     let enc = up.encode();
-    bench("protocol decode UploadHidden[128]", 0.3, || Message::decode(&enc).unwrap());
+    results.push(bench("protocol decode UploadHidden[128] (owned)", 0.3 * scale, || {
+        Message::decode(&enc).unwrap()
+    }));
+    // the serve path's actual per-token upload codec: owned decode+unpack
+    // vs the borrowed fast path feeding a reused buffer
+    results.push(bench("upload codec: decode+unpack (owned)", 0.3 * scale, || {
+        match Message::decode(&enc).unwrap() {
+            Message::UploadHidden { payload, precision, .. } => {
+                quant::unpack(&payload, precision).unwrap().len()
+            }
+            _ => unreachable!(),
+        }
+    }));
+    let mut scratch = Vec::new();
+    results.push(bench("upload codec: decode_upload+unpack_into", 0.3 * scale, || {
+        let v = Message::decode_upload(&enc).unwrap().unwrap();
+        quant::unpack_into(v.payload, v.precision, &mut scratch).unwrap();
+        scratch.len()
+    }));
 
     println!("\n== exit policy ==");
     let pol = TokenPolicy::new(ExitPolicy::Threshold(0.8), AblationFlags::default());
-    bench("policy decide", 0.1, || pol.decide(0.7, 0.85));
+    results.push(bench("policy decide", 0.1 * scale, || pol.decide(0.7, 0.85)));
 
     println!("\n== content manager (per-token upload + plan) ==");
-    bench("cm upload+plan cycle", 0.3, || {
+    results.push(bench("cm upload+plan cycle", 0.3 * scale, || {
         let mut cm = ContentManager::new(128);
         let h = vec![0.5f32; 30 * 128];
         cm.upload(1, 0, 0, 30, &h).unwrap();
@@ -62,18 +107,47 @@ fn main() {
             cm.plan(1, 0, pos, 30).unwrap();
         }
         cm.end_session(1);
-    });
+    }));
+    results.push(bench("cm upload_owned+plan cycle (moved payloads)", 0.3 * scale, || {
+        let mut cm = ContentManager::new(128);
+        cm.upload_owned(1, 0, 0, 30, vec![0.5f32; 30 * 128]).unwrap();
+        cm.plan(1, 0, 29, 30).unwrap();
+        for pos in 30..60u32 {
+            cm.upload_owned(1, 0, pos, 30, vec![0.5f32; 128]).unwrap();
+            cm.plan(1, 0, pos, 30).unwrap();
+        }
+        cm.end_session(1);
+    }));
+
+    println!("\n== batched decode (mock engine) ==");
+    {
+        let dims = test_manifest().model;
+        let d = dims.d_model;
+        let mk = || {
+            let mut c = MockCloud::new(MockOracle::new(1), dims.clone());
+            c.prefill(&vec![0.5; 4 * d], 4).unwrap();
+            c
+        };
+        let items: Vec<BatchItem> =
+            (4..12).map(|pos| BatchItem { h1: vec![0.5; d], pos }).collect();
+        let mut fused = mk();
+        results.push(bench("decode_batch fused (8-pos run)", 0.3 * scale, || {
+            fused.decode_batch(&items).unwrap()
+        }));
+        let mut seq = mk();
+        results.push(bench("decode sequential loop (8-pos run)", 0.3 * scale, || {
+            items.iter().map(|b| seq.decode(&b.h1, b.pos).unwrap()).count()
+        }));
+    }
 
     println!("\n== scheduler (event-driven serving core, mock engine) ==");
     {
-        use ce_collm::coordinator::scheduler::{SchedMsg, Scheduler, SessionFactory};
-        use std::sync::Arc;
         let dims = test_manifest().model;
         let d = dims.d_model;
         let sdims = dims.clone();
         let sched = Scheduler::spawn(
             dims,
-            ce_collm::config::CloudConfig::default(),
+            CloudConfig::default(),
             Arc::new(move || {
                 let sdims = sdims.clone();
                 let f: SessionFactory = Box::new(move |_| {
@@ -85,7 +159,7 @@ fn main() {
         .unwrap();
         let router = sched.router();
         let mut req = 0u32;
-        bench("scheduler upload+infer round trip (8-pos prompt)", 0.3, || {
+        results.push(bench("scheduler upload+infer round trip (8-pos prompt)", 0.3 * scale, || {
             req += 1;
             router
                 .send(1, SchedMsg::Upload {
@@ -110,14 +184,55 @@ fn main() {
                 })
                 .unwrap();
             rx.recv().unwrap().unwrap()
-        });
-        sched.shutdown();
+        }));
+        // cross-device load: four devices' uploads + infers in flight at
+        // once — the padded per-worker pass serves them together
+        results.push(bench("scheduler 4-device cross-batch round trip", 0.3 * scale, || {
+            req += 1;
+            for dev in 0..4u64 {
+                router
+                    .send(dev, SchedMsg::Upload {
+                        device: dev,
+                        session: 0,
+                        req_id: req,
+                        start_pos: 0,
+                        prompt_len: 8,
+                        hiddens: vec![0.5; 8 * d],
+                    })
+                    .unwrap();
+            }
+            let rxs: Vec<_> = (0..4u64)
+                .map(|dev| {
+                    let (reply, rx) = std::sync::mpsc::channel();
+                    router
+                        .send(dev, SchedMsg::Infer {
+                            device: dev,
+                            session: 0,
+                            req_id: req,
+                            pos: 7,
+                            prompt_len: 8,
+                            deadline: None,
+                            reply,
+                        })
+                        .unwrap();
+                    rx
+                })
+                .collect();
+            for rx in rxs {
+                rx.recv().unwrap().unwrap();
+            }
+        }));
+        let stats = sched.shutdown();
+        println!(
+            "    ({} engine passes over {} served requests, widest pass {} devices)",
+            stats.engine_passes, stats.requests_served, stats.batch_devices_max
+        );
     }
 
     println!("\n== eval ==");
     let a = "the machine is a test of a system's ability to exhibit intelligent behaviour";
     let b = "the machine is a test of a network's ability to produce intelligent behaviour";
-    bench("rouge_l (2x ~80 chars)", 0.3, || rouge_l(a, b));
+    results.push(bench("rouge_l (2x ~80 chars)", 0.3 * scale, || rouge_l(a, b)));
 
     println!("\n== DES replay (mock trace, 1 client) ==");
     let dims = test_manifest().model;
@@ -129,7 +244,7 @@ fn main() {
                     "a benchmark prompt for des replay", 48, &mut t).unwrap();
     let cost = CostModel::synthetic(&dims);
     let traces = vec![vec![tr; 10]];
-    bench("DES replay 10 requests", 0.3, || {
+    results.push(bench("DES replay 10 requests (batched law)", 0.3 * scale, || {
         simulate(
             &traces,
             &dims,
@@ -139,12 +254,14 @@ fn main() {
                 link: LinkProfile::paper_scaled(),
                 seed: 0,
                 workers: 1,
+                cross_device_batch: true,
             },
         )
-    });
+    }));
 
-    // real PJRT segment costs — the actual compute hot path
-    if std::path::Path::new("artifacts/manifest.json").exists() {
+    // real PJRT segment costs — the actual compute hot path (skipped in
+    // smoke mode: CI has no artifacts and the budgets are long)
+    if !smoke && std::path::Path::new("artifacts/manifest.json").exists() {
         println!("\n== real PJRT segment steps (artifacts) ==");
         let stack = ce_collm::runtime::stack::LocalStack::load("artifacts").unwrap();
         let tokzr = stack.tokenizer();
@@ -152,10 +269,12 @@ fn main() {
         let mut edge = stack.edge_session();
         let mut cloud = stack.cloud_session();
 
-        bench("edge_prefill (short prompt -> P=64 bucket)", 2.0, || edge.prefill(&ids).unwrap());
+        results.push(bench("edge_prefill (short prompt -> P=64 bucket)", 2.0, || {
+            edge.prefill(&ids).unwrap()
+        }));
         let pre = edge.prefill(&ids).unwrap();
         let mut pos = ids.len();
-        bench("edge seg1 decode (layers 0..3 + exit head)", 2.0, || {
+        results.push(bench("edge seg1 decode (layers 0..3 + exit head)", 2.0, || {
             let out = edge.seg1(97, pos).unwrap();
             pos += 1;
             if pos >= stack.manifest.model.max_seq - 1 {
@@ -164,12 +283,12 @@ fn main() {
                 pos = ids.len();
             }
             out
-        });
+        }));
         edge.reset();
         let pre2 = edge.prefill(&ids).unwrap();
         let h1 = pre2.h1[(ids.len() - 1) * 128..].to_vec();
         let mut pos2 = ids.len();
-        bench("edge seg2 decode (layers 3..5 + exit head)", 2.0, || {
+        results.push(bench("edge seg2 decode (layers 3..5 + exit head)", 2.0, || {
             let out = edge.seg2(&h1, pos2).unwrap();
             pos2 += 1;
             if pos2 >= stack.manifest.model.max_seq - 1 {
@@ -178,10 +297,10 @@ fn main() {
                 pos2 = ids.len();
             }
             out
-        });
+        }));
         cloud.prefill(&pre.h1, ids.len()).unwrap();
         let mut pos3 = ids.len();
-        bench("cloud decode (layers 3..8 + final head)", 2.0, || {
+        results.push(bench("cloud decode (layers 3..8 + final head)", 2.0, || {
             let out = cloud.decode(&h1, pos3).unwrap();
             pos3 += 1;
             if pos3 >= stack.manifest.model.max_seq - 1 {
@@ -190,32 +309,30 @@ fn main() {
                 pos3 = ids.len();
             }
             out
-        });
-        bench("cloud_prefill (short prompt -> P=64 bucket)", 2.0, || {
+        }));
+        results.push(bench("cloud_prefill (short prompt -> P=64 bucket)", 2.0, || {
             cloud.reset();
             cloud.prefill(&pre.h1, ids.len()).unwrap()
-        });
+        }));
 
         println!("\n== PJRT copy overhead (seg1 KV cache = 2 x [3,4,384,32] f32) ==");
         let n = 3 * 4 * 384 * 32;
         let data = vec![0.5f32; n];
         let lit = ce_collm::runtime::literal::f32_literal(&data, &[3, 4, 384, 32]).unwrap();
-        bench("literal -> device buffer (589KB)", 0.5, || {
+        results.push(bench("literal -> device buffer (589KB)", 0.5, || {
             stack.client.buffer_from_host_literal(None, &lit).unwrap()
-        });
+        }));
         let buf = stack.client.buffer_from_host_literal(None, &lit).unwrap();
-        bench("device buffer -> host literal (589KB)", 0.5, || {
+        results.push(bench("device buffer -> host literal (589KB)", 0.5, || {
             buf.to_literal_sync().unwrap()
-        });
-        bench("host vec -> literal (589KB)", 0.5, || {
+        }));
+        results.push(bench("host vec -> literal (589KB)", 0.5, || {
             ce_collm::runtime::literal::f32_literal(&data, &[3, 4, 384, 32]).unwrap()
-        });
-    } else {
+        }));
+    } else if !smoke {
         println!("\n(artifacts/ missing — skipping real PJRT step benches)");
     }
-}
 
-// appended by perf pass: quantify the KV-cache host<->device round trip
-// that dominates per-step engine cost (see EXPERIMENTS.md §Perf).
-#[allow(dead_code)]
-fn cache_roundtrip_bench() {}
+    std::fs::write(&json_path, to_json(&results)).expect("write bench json");
+    println!("\nwrote {} results to {json_path}", results.len());
+}

@@ -40,7 +40,12 @@ fn main() {
     ] {
         let per_client = vec![traces.to_vec()];
         bench(&format!("table2 replay: {name}"), 0.3, || {
-            simulate(&per_client, &dims, &rec.cost, &SimConfig { strategy, link, seed: 1, workers: 1 })
+            simulate(
+                &per_client,
+                &dims,
+                &rec.cost,
+                &SimConfig { strategy, link, seed: 1, workers: 1, cross_device_batch: true },
+            )
         });
     }
 

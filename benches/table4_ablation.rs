@@ -40,7 +40,13 @@ fn main() {
                 &per_client,
                 &dims,
                 &rec.cost,
-                &SimConfig { strategy: Strategy::CeCollm(flags), link, seed: 1, workers: 1 },
+                &SimConfig {
+                    strategy: Strategy::CeCollm(flags),
+                    link,
+                    seed: 1,
+                    workers: 1,
+                    cross_device_batch: true,
+                },
             )
         });
     }

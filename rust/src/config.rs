@@ -129,11 +129,17 @@ pub struct CloudConfig {
     /// the edge from a dead upload connection: the request fails with an
     /// error instead of waiting forever.
     pub max_park_s: f64,
+    /// Fairness bound for cross-device batched decode: at most this many
+    /// catch-up positions of ONE device enter a single padded engine
+    /// pass.  A device with a deep backlog finishes over several passes
+    /// while other devices' pending tokens ride along in every one of
+    /// them, so a chatty device cannot starve the batch.
+    pub max_catchup_per_pass: usize,
 }
 
 impl Default for CloudConfig {
     fn default() -> Self {
-        Self { workers: 1, max_park_s: 30.0 }
+        Self { workers: 1, max_park_s: 30.0, max_catchup_per_pass: 32 }
     }
 }
 
@@ -173,6 +179,11 @@ mod tests {
         assert_eq!(CloudConfig::default().workers, 1);
         assert_eq!(CloudConfig::with_workers(0).workers, 1);
         assert_eq!(CloudConfig::with_workers(4).workers, 4);
+    }
+
+    #[test]
+    fn cloud_config_has_a_positive_fairness_bound() {
+        assert!(CloudConfig::default().max_catchup_per_pass >= 1);
     }
 
     #[test]

@@ -137,19 +137,33 @@ fn handle_connection(stream: TcpStream, router: Router, dims: &ModelDims) -> Res
             Ok(f) => f,
             Err(_) => return Ok(()), // peer closed
         };
+        // Zero-copy fast path for the dominant per-token frame: the
+        // payload stays borrowed from the frame buffer, so the owned
+        // `decode`'s payload copy disappears from the upload hot path.
+        // The unpacked vector itself must still be allocated — it is
+        // moved across threads into the scheduler (and from there into
+        // the content manager without further copies).
+        if let Some(v) = Message::decode_upload(&frame)? {
+            let hiddens = quant::unpack(v.payload, v.precision)?;
+            anyhow::ensure!(hiddens.len() % dims.d_model == 0, "ragged upload");
+            router
+                .send(
+                    v.device_id,
+                    SchedMsg::Upload {
+                        device: v.device_id,
+                        session,
+                        req_id: v.req_id,
+                        start_pos: v.start_pos,
+                        prompt_len: v.prompt_len,
+                        hiddens,
+                    },
+                )
+                .context("scheduler gone")?;
+            // uploads are fire-and-forget (parallel with edge compute);
+            // no ack so the uploader never stalls the edge
+            continue;
+        }
         match Message::decode(&frame)? {
-            Message::UploadHidden { device_id, req_id, start_pos, prompt_len, precision, payload, .. } => {
-                let hiddens = quant::unpack(&payload, precision)?;
-                anyhow::ensure!(hiddens.len() % dims.d_model == 0, "ragged upload");
-                router
-                    .send(
-                        device_id,
-                        SchedMsg::Upload { device: device_id, session, req_id, start_pos, prompt_len, hiddens },
-                    )
-                    .context("scheduler gone")?;
-                // uploads are fire-and-forget (parallel with edge compute);
-                // no ack so the uploader never stalls the edge
-            }
             Message::InferRequest { device_id, req_id, pos, prompt_len, deadline_ms } => {
                 let deadline = (deadline_ms > 0)
                     .then(|| Instant::now() + Duration::from_millis(deadline_ms as u64));

@@ -61,9 +61,23 @@ pub enum Coverage {
 pub struct WorkPlan {
     /// `Some((h1_concat, len))` if cloud prefill must run first.
     pub prefill: Option<(Vec<f32>, usize)>,
-    /// Per-position hidden states for decode catch-up, in order ending at
-    /// the requested position.
+    /// Per-position hidden states for decode catch-up, in order.  With a
+    /// catch-up cap the run may stop short of the requested position; the
+    /// request then stays parked and the next pass continues from
+    /// [`Self::frontier`].
     pub decode: Vec<(u32, Vec<f32>)>,
+    /// `consumed_upto` after this plan: every position `< frontier` has
+    /// been handed to the engine (by this plan or an earlier one).
+    pub frontier: u32,
+}
+
+/// One (device, request) head for [`ContentManager::plan_batch`].
+#[derive(Debug, Clone, Copy)]
+pub struct PlanReq {
+    pub device: u64,
+    pub req_id: u32,
+    pub pos: u32,
+    pub prompt_len: u32,
 }
 
 #[derive(Debug, Default)]
@@ -94,14 +108,58 @@ impl ContentManager {
         prompt_len: u32,
         hiddens: &[f32],
     ) -> Result<()> {
+        let d = self.d_model;
+        let st = match self.upload_state(device, req_id, prompt_len, hiddens.len())? {
+            Some(st) => st,
+            None => return Ok(()),
+        };
+        for (i, chunk) in hiddens.chunks_exact(d).enumerate() {
+            Self::insert_position(st, start_pos + i as u32, || chunk.to_vec());
+        }
+        Ok(())
+    }
+
+    /// [`Self::upload`] taking ownership of the payload: the dominant
+    /// per-token case (`count == 1`) moves the vector straight into the
+    /// pending buffer instead of copying it — the serving path's
+    /// per-upload copy disappears (see the hotpath bench).
+    pub fn upload_owned(
+        &mut self,
+        device: u64,
+        req_id: u32,
+        start_pos: u32,
+        prompt_len: u32,
+        hiddens: Vec<f32>,
+    ) -> Result<()> {
+        let d = self.d_model;
+        if hiddens.len() != d {
+            // multi-position payload: same chunked copy as the borrowed path
+            return self.upload(device, req_id, start_pos, prompt_len, &hiddens);
+        }
+        let st = match self.upload_state(device, req_id, prompt_len, hiddens.len())? {
+            Some(st) => st,
+            None => return Ok(()),
+        };
+        Self::insert_position(st, start_pos, || hiddens);
+        Ok(())
+    }
+
+    /// Shared upload bookkeeping: validation, tombstone check, request
+    /// rollover, byte accounting.  `Ok(None)` means a fenced straggler.
+    fn upload_state(
+        &mut self,
+        device: u64,
+        req_id: u32,
+        prompt_len: u32,
+        payload_len: usize,
+    ) -> Result<Option<&mut DeviceState>> {
         ensure!(self.d_model > 0, "content manager d_model not set");
-        ensure!(hiddens.len() % self.d_model == 0, "ragged hidden payload");
+        ensure!(payload_len % self.d_model == 0, "ragged hidden payload");
         if self.ended.get(&device).is_some_and(|&r| req_id <= r) {
             // straggler from an already-ended request: ignore, do not
             // resurrect released state
-            return Ok(());
+            return Ok(None);
         }
-        let count = hiddens.len() / self.d_model;
         let st = self.devices.entry(device).or_default();
         if st.req_id != req_id {
             // new request from this device: drop stale state
@@ -110,17 +168,19 @@ impl ContentManager {
         if st.prompt_len.is_none() && prompt_len > 0 {
             st.prompt_len = Some(prompt_len);
         }
-        st.bytes_received += (hiddens.len() * 4) as u64;
-        for i in 0..count {
-            let pos = start_pos + i as u32;
-            let v = hiddens[i * self.d_model..(i + 1) * self.d_model].to_vec();
-            if pos < st.consumed_upto || st.pending.contains_key(&pos) {
-                st.duplicates_dropped += 1;
-                continue;
-            }
-            st.pending.insert(pos, v);
+        st.bytes_received += (payload_len * 4) as u64;
+        Ok(Some(st))
+    }
+
+    /// Insert one position, deduplicating retransmissions.  The payload
+    /// closure is only invoked for fresh positions, so the owned fast
+    /// path never copies and duplicates never allocate.
+    fn insert_position(st: &mut DeviceState, pos: u32, payload: impl FnOnce() -> Vec<f32>) {
+        if pos < st.consumed_upto || st.pending.contains_key(&pos) {
+            st.duplicates_dropped += 1;
+            return;
         }
-        Ok(())
+        st.pending.insert(pos, payload());
     }
 
     /// Build the work plan to answer an inference request at `pos`.
@@ -129,6 +189,21 @@ impl ContentManager {
     /// violation: with parallel upload the edge always uploads at
     /// `l_ee1` *before* it can know it needs the cloud).
     pub fn plan(&mut self, device: u64, req_id: u32, pos: u32, prompt_len: u32) -> Result<WorkPlan> {
+        self.plan_capped(device, req_id, pos, prompt_len, usize::MAX)
+    }
+
+    /// [`Self::plan`] with a fairness cap: consume at most `max_decode`
+    /// catch-up positions.  A capped plan's [`WorkPlan::frontier`] stops
+    /// short of `pos + 1`; the scheduler keeps the request parked and
+    /// continues from the frontier in its next pass.
+    pub fn plan_capped(
+        &mut self,
+        device: u64,
+        req_id: u32,
+        pos: u32,
+        prompt_len: u32,
+        max_decode: usize,
+    ) -> Result<WorkPlan> {
         let d = self.d_model;
         let st = self
             .devices
@@ -154,7 +229,7 @@ impl ContentManager {
         }
 
         let mut decode = Vec::new();
-        while st.consumed_upto <= pos {
+        while st.consumed_upto <= pos && decode.len() < max_decode {
             let p = st.consumed_upto;
             let v = st
                 .pending
@@ -163,7 +238,20 @@ impl ContentManager {
             decode.push((p, v));
             st.consumed_upto += 1;
         }
-        Ok(WorkPlan { prefill, decode })
+        Ok(WorkPlan { prefill, decode, frontier: st.consumed_upto })
+    }
+
+    /// Build capped work plans for several (device, request) heads in one
+    /// call — the shape the scheduler's cross-device pass consumes.
+    /// Results are index-aligned with `reqs`.
+    pub fn plan_batch(
+        &mut self,
+        reqs: &[PlanReq],
+        max_decode_per_device: usize,
+    ) -> Vec<Result<WorkPlan>> {
+        reqs.iter()
+            .map(|r| self.plan_capped(r.device, r.req_id, r.pos, r.prompt_len, max_decode_per_device))
+            .collect()
     }
 
     /// Classify an inference request at `pos` against the current upload
@@ -401,6 +489,73 @@ mod tests {
         assert_eq!(m.device_count(), 1, "request 2 state must survive");
         assert_eq!(m.coverage(1, 2, 1, 2), Coverage::Ready);
         assert!(m.plan(1, 2, 1, 2).is_ok());
+    }
+
+    #[test]
+    fn upload_owned_matches_borrowed_semantics() {
+        let mut borrowed = cm();
+        let mut owned = cm();
+        let prompt: Vec<f32> = (0..2).flat_map(h).collect();
+        borrowed.upload(1, 0, 0, 2, &prompt).unwrap();
+        owned.upload_owned(1, 0, 0, 2, prompt).unwrap();
+        for p in 2..5u32 {
+            borrowed.upload(1, 0, p, 2, &h(p)).unwrap();
+            owned.upload_owned(1, 0, p, 2, h(p)).unwrap();
+            // duplicate per-token upload is dropped on both paths
+            borrowed.upload(1, 0, p, 2, &h(p)).unwrap();
+            owned.upload_owned(1, 0, p, 2, h(p)).unwrap();
+        }
+        assert_eq!(borrowed.duplicates_dropped(1), owned.duplicates_dropped(1));
+        assert_eq!(borrowed.bytes_received(1), owned.bytes_received(1));
+        let a = borrowed.plan(1, 0, 4, 2).unwrap();
+        let b = owned.plan(1, 0, 4, 2).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn capped_plan_stops_at_the_bound_and_resumes() {
+        let mut m = cm();
+        let prompt: Vec<f32> = (0..2).flat_map(h).collect();
+        m.upload(1, 0, 0, 2, &prompt).unwrap();
+        for p in 2..10u32 {
+            m.upload(1, 0, p, 2, &h(p)).unwrap();
+        }
+        // request at pos 9 with a cap of 3: prefill plus three positions
+        let plan = m.plan_capped(1, 0, 9, 2, 3).unwrap();
+        assert!(plan.prefill.is_some());
+        assert_eq!(plan.decode.iter().map(|(p, _)| *p).collect::<Vec<_>>(), vec![2, 3, 4]);
+        assert_eq!(plan.frontier, 5, "frontier short of the requested pos");
+        // the request is still serviceable; the next pass continues
+        assert_eq!(m.coverage(1, 0, 9, 2), Coverage::Ready);
+        let plan = m.plan_capped(1, 0, 9, 2, 3).unwrap();
+        assert!(plan.prefill.is_none());
+        assert_eq!(plan.decode.iter().map(|(p, _)| *p).collect::<Vec<_>>(), vec![5, 6, 7]);
+        let plan = m.plan_capped(1, 0, 9, 2, 3).unwrap();
+        assert_eq!(plan.decode.iter().map(|(p, _)| *p).collect::<Vec<_>>(), vec![8, 9]);
+        assert_eq!(plan.frontier, 10, "request position reached");
+        assert_eq!(m.pending_floats(), 0);
+    }
+
+    #[test]
+    fn plan_batch_plans_every_device_in_one_sweep() {
+        let mut m = cm();
+        for dev in 1..=3u64 {
+            let prompt: Vec<f32> = (0..2).flat_map(h).collect();
+            m.upload(dev, 0, 0, 2, &prompt).unwrap();
+            m.upload(dev, 0, 2, 2, &h(2)).unwrap();
+        }
+        let reqs: Vec<PlanReq> = (1..=3u64)
+            .map(|device| PlanReq { device, req_id: 0, pos: 2, prompt_len: 2 })
+            .collect();
+        let plans = m.plan_batch(&reqs, usize::MAX);
+        assert_eq!(plans.len(), 3);
+        for plan in &plans {
+            let plan = plan.as_ref().unwrap();
+            assert!(plan.prefill.is_some());
+            assert_eq!(plan.decode.len(), 1);
+            assert_eq!(plan.frontier, 3);
+        }
+        assert_eq!(m.pending_floats(), 0, "every device's state consumed");
     }
 
     #[test]

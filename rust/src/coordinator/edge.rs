@@ -245,10 +245,12 @@ impl<E: EdgeEngine> EdgeClient<E> {
         let pre = self.engine.prefill(&prompt_ids)?;
         cost.edge_s += t0.elapsed().as_secs_f64();
 
-        // h1 history retained only when the edge must retransmit (no
-        // content manager on the server)
+        // h1 history retained whenever the edge may have to transmit
+        // synchronously at request time: no content manager on the server
+        // (full retransmission), or parallel upload disabled (the whole
+        // history goes out on the infer channel; the manager dedups it)
         let mut h1_history: Vec<Vec<f32>> = Vec::new();
-        let keep_history = !flags.content_manager;
+        let keep_history = !flags.content_manager || !flags.parallel_upload;
         if keep_history {
             for c in pre.h1.chunks(dims.d_model) {
                 h1_history.push(c.to_vec());

@@ -65,6 +65,24 @@ pub enum Message {
 /// Sentinel `req_id`/`pos` for errors not tied to a request.
 pub const NO_REQ: u32 = u32::MAX;
 
+/// Borrowed view of an `UploadHidden` frame: identical fields to
+/// [`Message::UploadHidden`], but the payload borrows from the frame
+/// buffer instead of being copied into a fresh `Vec`.  The serve path
+/// decodes one of these per uploaded token, so skipping that copy (and
+/// unpacking straight out of the frame with
+/// [`crate::quant::unpack_into`]) takes an allocation plus a memcpy off
+/// the per-token hot loop.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UploadView<'a> {
+    pub device_id: u64,
+    pub req_id: u32,
+    pub start_pos: u32,
+    pub count: u32,
+    pub prompt_len: u32,
+    pub precision: Precision,
+    pub payload: &'a [u8],
+}
+
 const TAG_HELLO: u8 = 1;
 const TAG_UPLOAD: u8 = 2;
 const TAG_INFER: u8 = 3;
@@ -158,30 +176,15 @@ impl Message {
                 Message::Hello { device_id, session, channel }
             }
             TAG_UPLOAD => {
-                let device_id = r.u64()?;
-                let req_id = r.u32()?;
-                let start_pos = r.u32()?;
-                let count = r.u32()?;
-                let prompt_len = r.u32()?;
-                let precision = match r.u8()? {
-                    0 => Precision::F16,
-                    1 => Precision::F32,
-                    p => bail!("bad precision {p}"),
-                };
-                let n = r.u32()? as usize;
-                let payload = r.bytes(n)?.to_vec();
-                ensure!(
-                    payload.len() % (count.max(1) as usize * precision.bytes_per_elem()) == 0,
-                    "payload not a multiple of count*elem"
-                );
+                let v = read_upload(&mut r)?;
                 Message::UploadHidden {
-                    device_id,
-                    req_id,
-                    start_pos,
-                    count,
-                    prompt_len,
-                    precision,
-                    payload,
+                    device_id: v.device_id,
+                    req_id: v.req_id,
+                    start_pos: v.start_pos,
+                    count: v.count,
+                    prompt_len: v.prompt_len,
+                    precision: v.precision,
+                    payload: v.payload.to_vec(),
                 }
             }
             TAG_INFER => Message::InferRequest {
@@ -212,6 +215,44 @@ impl Message {
         ensure!(r.pos == buf.len(), "{} trailing bytes", buf.len() - r.pos);
         Ok(msg)
     }
+
+    /// Zero-copy fast path for the upload channel: decode an
+    /// `UploadHidden` frame with the payload borrowed from `buf`.
+    /// `Ok(None)` means the frame carries some other tag — fall through
+    /// to the full [`Self::decode`].  Validation is identical to
+    /// `decode` (shared parser).
+    pub fn decode_upload(buf: &[u8]) -> Result<Option<UploadView<'_>>> {
+        if buf.first() != Some(&TAG_UPLOAD) {
+            return Ok(None);
+        }
+        let mut r = Reader { buf, pos: 1 };
+        let view = read_upload(&mut r)?;
+        ensure!(r.pos == buf.len(), "{} trailing bytes", buf.len() - r.pos);
+        Ok(Some(view))
+    }
+}
+
+/// Parse the body of an `UploadHidden` frame (tag already consumed),
+/// borrowing the payload.  Shared by [`Message::decode`] and
+/// [`Message::decode_upload`] so both paths validate identically.
+fn read_upload<'a>(r: &mut Reader<'a>) -> Result<UploadView<'a>> {
+    let device_id = r.u64()?;
+    let req_id = r.u32()?;
+    let start_pos = r.u32()?;
+    let count = r.u32()?;
+    let prompt_len = r.u32()?;
+    let precision = match r.u8()? {
+        0 => Precision::F16,
+        1 => Precision::F32,
+        p => bail!("bad precision {p}"),
+    };
+    let n = r.u32()? as usize;
+    let payload = r.bytes(n)?;
+    ensure!(
+        payload.len() % (count.max(1) as usize * precision.bytes_per_elem()) == 0,
+        "payload not a multiple of count*elem"
+    );
+    Ok(UploadView { device_id, req_id, start_pos, count, prompt_len, precision, payload })
 }
 
 struct Reader<'a> {
@@ -331,6 +372,46 @@ mod tests {
             Message::Hello { device_id: 1, session: 3, channel: Channel::Infer }.encode();
         *enc.last_mut().unwrap() = 9;
         assert!(Message::decode(&enc).is_err());
+    }
+
+    #[test]
+    fn decode_upload_borrows_and_matches_decode() {
+        let msg = Message::UploadHidden {
+            device_id: 9,
+            req_id: 4,
+            start_pos: 17,
+            count: 2,
+            prompt_len: 12,
+            precision: Precision::F16,
+            payload: vec![1, 2, 3, 4, 5, 6, 7, 8],
+        };
+        let enc = msg.encode();
+        let view = Message::decode_upload(&enc).unwrap().expect("upload frame");
+        match &msg {
+            Message::UploadHidden { device_id, req_id, start_pos, count, prompt_len, precision, payload } => {
+                assert_eq!(view.device_id, *device_id);
+                assert_eq!(view.req_id, *req_id);
+                assert_eq!(view.start_pos, *start_pos);
+                assert_eq!(view.count, *count);
+                assert_eq!(view.prompt_len, *prompt_len);
+                assert_eq!(view.precision, *precision);
+                assert_eq!(view.payload, &payload[..]);
+            }
+            _ => unreachable!(),
+        }
+        // the payload really borrows the frame buffer (no copy)
+        assert!(std::ptr::eq(view.payload.as_ptr(), enc[enc.len() - 8..].as_ptr()));
+        // non-upload frames fall through cleanly
+        assert!(Message::decode_upload(&Message::Ack.encode()).unwrap().is_none());
+        assert!(Message::decode_upload(&[]).unwrap().is_none());
+        // truncation is rejected just like the owned decode
+        for cut in 1..enc.len() {
+            assert!(Message::decode_upload(&enc[..cut]).is_err(), "cut at {cut}");
+        }
+        // trailing bytes rejected
+        let mut bad = enc.clone();
+        bad.push(0);
+        assert!(Message::decode_upload(&bad).is_err());
     }
 
     #[test]

@@ -22,6 +22,17 @@
 //!   device, a single engine pass covers every pending decode position
 //!   (the content manager's plan already batches catch-up positions) and
 //!   each request is answered from that one pass.
+//! * **Cross-device batching**: a worker drains its whole message queue
+//!   before touching the engine, then serves *every* device whose
+//!   coverage is `Ready` in one padded pass — each device's coalesced
+//!   catch-up run enters the batch (via [`CloudEngine::decode_batch`]),
+//!   padded to the widest run, and results fan back out to the parked
+//!   requests.  Under load this turns N per-device passes into one
+//!   per-worker pass; when idle a single request still runs immediately.
+//!   [`CloudConfig::max_catchup_per_pass`] bounds how many positions one
+//!   device may contribute per pass, so a device with a deep backlog
+//!   spreads over several passes while everyone else rides along in each
+//!   of them (fairness: no device starves the batch).
 //! * **Deadlines**: an infer request may carry a deadline (the edge's
 //!   per-token latency budget, §4.4), and every parked request is capped
 //!   by [`CloudConfig::max_park_s`] regardless, so a request whose
@@ -41,9 +52,9 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Context, Result};
 
 use crate::config::CloudConfig;
-use crate::coordinator::content_manager::{ContentManager, Coverage};
+use crate::coordinator::content_manager::{ContentManager, Coverage, PlanReq, WorkPlan};
 use crate::model::manifest::ModelDims;
-use crate::runtime::traits::CloudEngine;
+use crate::runtime::traits::{BatchItem, CloudEngine};
 
 /// Session factory living on a worker thread.
 pub type SessionFactory = Box<dyn FnMut(u64) -> Result<Box<dyn CloudEngine>>>;
@@ -116,6 +127,14 @@ pub struct CloudStats {
     pub parked: usize,
     /// Parked requests failed because their deadline passed first.
     pub deadline_expired: u64,
+    /// Padded cross-device engine passes executed (one per batch, however
+    /// many devices and catch-up positions it covered).
+    pub engine_passes: u64,
+    /// Decode catch-up items served through batched passes.
+    pub batched_items: u64,
+    /// Widest pass so far, in devices — how much cross-device batching
+    /// the traffic actually yielded.
+    pub batch_devices_max: usize,
     /// Workers contributing to this snapshot.
     pub workers: usize,
 }
@@ -129,6 +148,9 @@ impl CloudStats {
         self.pending_floats += o.pending_floats;
         self.parked += o.parked;
         self.deadline_expired += o.deadline_expired;
+        self.engine_passes += o.engine_passes;
+        self.batched_items += o.batched_items;
+        self.batch_devices_max = self.batch_devices_max.max(o.batch_devices_max);
         self.workers += o.workers;
     }
 }
@@ -168,6 +190,7 @@ impl Scheduler {
     pub fn spawn(dims: ModelDims, cfg: CloudConfig, builder: FactoryBuilder) -> Result<Scheduler> {
         let workers = cfg.workers.max(1);
         let max_park = Duration::from_secs_f64(cfg.max_park_s.max(0.001));
+        let max_catchup = cfg.max_catchup_per_pass.max(1);
         let mut txs = Vec::with_capacity(workers);
         let mut handles = Vec::with_capacity(workers);
         for w in 0..workers {
@@ -184,7 +207,7 @@ impl Scheduler {
                             return CloudStats::default();
                         }
                     };
-                    Worker::new(dims, factory, max_park).run(rx)
+                    Worker::new(dims, factory, max_park, max_catchup).run(rx)
                 })?;
             txs.push(tx);
             handles.push(handle);
@@ -229,6 +252,14 @@ impl Drop for Scheduler {
     }
 }
 
+/// Tokens produced by one device's share of a pass, keyed by position.
+type PassTokens = HashMap<u32, (i32, f32)>;
+
+/// A device's outcome within one padded pass: its ready requests plus
+/// either the served tokens and post-plan frontier, or the error that
+/// fails them all.
+type DeviceOutcome = (u64, Vec<Parked>, Result<(PassTokens, u32)>);
+
 /// An infer request waiting for its uploads.
 struct Parked {
     req_id: u32,
@@ -240,6 +271,11 @@ struct Parked {
     reply: Sender<Result<TokenOut>>,
 }
 
+/// Most messages one greedy drain takes off the queue before the worker
+/// runs its padded batch pass — bounds the latency a full queue can add
+/// in front of already-ready work.
+const MAX_DRAIN: usize = 256;
+
 /// One worker: engine sessions + content-manager shard + parking lot for
 /// the devices assigned to it.
 struct Worker {
@@ -250,11 +286,19 @@ struct Worker {
     /// Connection-pair nonce each device is pinned to (set by `Reset`).
     session_of: HashMap<u64, u64>,
     max_park: Duration,
+    /// Fairness bound: catch-up positions one device may put into a
+    /// single padded pass ([`CloudConfig::max_catchup_per_pass`]).
+    max_catchup: usize,
     stats: CloudStats,
 }
 
 impl Worker {
-    fn new(dims: ModelDims, factory: SessionFactory, max_park: Duration) -> Worker {
+    fn new(
+        dims: ModelDims,
+        factory: SessionFactory,
+        max_park: Duration,
+        max_catchup: usize,
+    ) -> Worker {
         Worker {
             cm: ContentManager::new(dims.d_model),
             factory,
@@ -262,6 +306,7 @@ impl Worker {
             parked: HashMap::new(),
             session_of: HashMap::new(),
             max_park,
+            max_catchup,
             stats: CloudStats { workers: 1, ..CloudStats::default() },
         }
     }
@@ -272,7 +317,7 @@ impl Worker {
     }
 
     fn run(mut self, rx: Receiver<SchedMsg>) -> CloudStats {
-        loop {
+        'serve: loop {
             // Block for the next message; with parked deadlines armed,
             // wake at the earliest one to expire it.
             let msg = match self.next_deadline() {
@@ -290,87 +335,143 @@ impl Worker {
             };
             match msg {
                 None => self.expire_overdue(Instant::now()),
-                Some(SchedMsg::Upload { device, session, req_id, start_pos, prompt_len, hiddens }) => {
-                    if self.stale_session(device, session) {
-                        log::debug!("dropping stale-session upload from device {device}");
-                        continue;
+                Some(first) => {
+                    // Greedy drain: fold every already-queued message
+                    // into this wake before touching the engine, so the
+                    // pass below batches across devices exactly when the
+                    // queue is deep (i.e. when load is highest).
+                    let mut msg = first;
+                    let mut drained = 1;
+                    loop {
+                        if !self.handle(msg) {
+                            break 'serve;
+                        }
+                        if drained >= MAX_DRAIN {
+                            break;
+                        }
+                        match rx.try_recv() {
+                            Ok(m) => {
+                                msg = m;
+                                drained += 1;
+                            }
+                            Err(_) => break,
+                        }
                     }
-                    self.stats.uploads += 1;
-                    if let Err(e) = self.cm.upload(device, req_id, start_pos, prompt_len, &hiddens)
-                    {
-                        log::warn!("upload from device {device} rejected: {e:#}");
-                    }
-                    self.drain(device);
-                }
-                Some(SchedMsg::Infer { device, session, req_id, pos, prompt_len, deadline, reply }) => {
-                    if self.stale_session(device, session) {
-                        self.stats.requests_served += 1;
-                        let _ = reply.send(Err(anyhow!(
-                            "infer request {req_id} from a stale connection of device {device}"
-                        )));
-                        continue;
-                    }
-                    let cap = Instant::now() + self.max_park;
-                    let deadline = deadline.map_or(cap, |d| d.min(cap));
-                    self.parked
-                        .entry(device)
-                        .or_default()
-                        .push(Parked { req_id, pos, prompt_len, deadline, reply });
-                    self.drain(device);
-                }
-                Some(SchedMsg::End { device, session, req_id }) => {
-                    if self.stale_session(device, session) {
-                        log::debug!("ignoring stale-session EndSession from device {device}");
-                        continue;
-                    }
-                    self.cm.end_request(device, req_id);
-                    self.sessions.remove(&device);
-                    if let Some(queue) = self.parked.get_mut(&device) {
-                        // fail parked requests of the ended (or older)
-                        // request; later ones keep waiting for coverage
-                        let mut i = 0;
-                        while i < queue.len() {
-                            if queue[i].req_id <= req_id {
-                                let p = queue.remove(i);
-                                self.stats.requests_served += 1;
-                                let _ = p.reply.send(Err(anyhow!(
-                                    "request {} for device {device} ended",
-                                    p.req_id
-                                )));
-                            } else {
-                                i += 1;
+                    // One padded cross-device pass per iteration; capped
+                    // leftovers (fairness bound) keep the loop going.
+                    // Between passes, fold in whatever arrived while the
+                    // engine was busy, so mid-drain traffic joins the
+                    // very next pass instead of waiting out a deep
+                    // backlog behind the whole leftover loop.
+                    loop {
+                        let leftover = self.batch_pass();
+                        self.expire_overdue(Instant::now());
+                        if !leftover {
+                            break;
+                        }
+                        let mut extra = 0;
+                        while extra < MAX_DRAIN {
+                            match rx.try_recv() {
+                                Ok(m) => {
+                                    if !self.handle(m) {
+                                        break 'serve;
+                                    }
+                                    extra += 1;
+                                }
+                                Err(_) => break,
                             }
                         }
-                        if queue.is_empty() {
-                            self.parked.remove(&device);
-                        }
                     }
                 }
-                Some(SchedMsg::Reset { device, session }) => {
-                    self.cm.reset_device(device);
-                    self.sessions.remove(&device);
-                    if session != 0 {
-                        self.session_of.insert(device, session);
-                    }
-                    if let Some(queue) = self.parked.remove(&device) {
-                        for p in queue {
-                            self.stats.requests_served += 1;
-                            let _ = p.reply.send(Err(anyhow!(
-                                "device {device} reconnected; request {} dropped",
-                                p.req_id
-                            )));
-                        }
-                    }
-                }
-                Some(SchedMsg::Stats { reply }) => {
-                    self.refresh_gauges();
-                    let _ = reply.send(self.stats.clone());
-                }
-                Some(SchedMsg::Shutdown) => break,
             }
         }
         self.refresh_gauges();
         self.stats
+    }
+
+    /// Apply one message's state transition — park, buffer, end, reset —
+    /// without running any engine work (that happens in the batched pass
+    /// after the queue drain).  Returns `false` on `Shutdown`.
+    fn handle(&mut self, msg: SchedMsg) -> bool {
+        match msg {
+            SchedMsg::Upload { device, session, req_id, start_pos, prompt_len, hiddens } => {
+                if self.stale_session(device, session) {
+                    log::debug!("dropping stale-session upload from device {device}");
+                    return true;
+                }
+                self.stats.uploads += 1;
+                if let Err(e) =
+                    self.cm.upload_owned(device, req_id, start_pos, prompt_len, hiddens)
+                {
+                    log::warn!("upload from device {device} rejected: {e:#}");
+                }
+            }
+            SchedMsg::Infer { device, session, req_id, pos, prompt_len, deadline, reply } => {
+                if self.stale_session(device, session) {
+                    self.stats.requests_served += 1;
+                    let _ = reply.send(Err(anyhow!(
+                        "infer request {req_id} from a stale connection of device {device}"
+                    )));
+                    return true;
+                }
+                let cap = Instant::now() + self.max_park;
+                let deadline = deadline.map_or(cap, |d| d.min(cap));
+                self.parked
+                    .entry(device)
+                    .or_default()
+                    .push(Parked { req_id, pos, prompt_len, deadline, reply });
+            }
+            SchedMsg::End { device, session, req_id } => {
+                if self.stale_session(device, session) {
+                    log::debug!("ignoring stale-session EndSession from device {device}");
+                    return true;
+                }
+                self.cm.end_request(device, req_id);
+                self.sessions.remove(&device);
+                if let Some(queue) = self.parked.get_mut(&device) {
+                    // fail parked requests of the ended (or older)
+                    // request; later ones keep waiting for coverage
+                    let mut i = 0;
+                    while i < queue.len() {
+                        if queue[i].req_id <= req_id {
+                            let p = queue.remove(i);
+                            self.stats.requests_served += 1;
+                            let _ = p.reply.send(Err(anyhow!(
+                                "request {} for device {device} ended",
+                                p.req_id
+                            )));
+                        } else {
+                            i += 1;
+                        }
+                    }
+                    if queue.is_empty() {
+                        self.parked.remove(&device);
+                    }
+                }
+            }
+            SchedMsg::Reset { device, session } => {
+                self.cm.reset_device(device);
+                self.sessions.remove(&device);
+                if session != 0 {
+                    self.session_of.insert(device, session);
+                }
+                if let Some(queue) = self.parked.remove(&device) {
+                    for p in queue {
+                        self.stats.requests_served += 1;
+                        let _ = p.reply.send(Err(anyhow!(
+                            "device {device} reconnected; request {} dropped",
+                            p.req_id
+                        )));
+                    }
+                }
+            }
+            SchedMsg::Stats { reply } => {
+                self.refresh_gauges();
+                let _ = reply.send(self.stats.clone());
+            }
+            SchedMsg::Shutdown => return false,
+        }
+        true
     }
 
     fn refresh_gauges(&mut self) {
@@ -407,86 +508,168 @@ impl Worker {
         self.parked.retain(|_, queue| !queue.is_empty());
     }
 
-    /// Serve every parked request of `device` that the current upload
-    /// state covers, all in one engine pass; fail superseded ones.
-    fn drain(&mut self, device: u64) {
-        let Some(queue) = self.parked.get_mut(&device) else { return };
-        let mut batch: Vec<Parked> = Vec::new();
-        let mut i = 0;
-        while i < queue.len() {
-            let p = &queue[i];
-            match self.cm.coverage(device, p.req_id, p.pos, p.prompt_len) {
-                Coverage::Ready => batch.push(queue.remove(i)),
-                Coverage::Stale => {
-                    let p = queue.remove(i);
-                    self.stats.requests_served += 1;
-                    let _ = p.reply.send(Err(anyhow!(
-                        "request {} from device {device} superseded by a newer request",
-                        p.req_id
-                    )));
+    /// Serve every parked request the current upload state covers —
+    /// across ALL of this worker's devices — in one padded engine pass:
+    /// sweep the parking lot for `Ready` heads (failing `Stale` ones),
+    /// plan every device through a single content-manager call, run the
+    /// pass (per-device prefill + each device's coalesced catch-up run
+    /// via [`CloudEngine::decode_batch`], runs padded to the widest one),
+    /// then fan the tokens back out.  Engine seconds of the whole pass
+    /// are attributed to every request it answered, the same way
+    /// coalesced single-device passes always were.
+    ///
+    /// Returns `true` when the fairness cap left ready work behind (the
+    /// caller immediately runs another pass).
+    fn batch_pass(&mut self) -> bool {
+        // --- sweep the parking lot for ready heads ------------------------
+        let mut batch: Vec<(u64, Vec<Parked>)> = Vec::new();
+        let mut devices: Vec<u64> = self.parked.keys().copied().collect();
+        devices.sort_unstable();
+        for device in devices {
+            let Some(queue) = self.parked.get_mut(&device) else { continue };
+            let mut ready: Vec<Parked> = Vec::new();
+            let mut i = 0;
+            while i < queue.len() {
+                let p = &queue[i];
+                match self.cm.coverage(device, p.req_id, p.pos, p.prompt_len) {
+                    Coverage::Ready => ready.push(queue.remove(i)),
+                    Coverage::Stale => {
+                        let p = queue.remove(i);
+                        self.stats.requests_served += 1;
+                        let _ = p.reply.send(Err(anyhow!(
+                            "request {} from device {device} superseded by a newer request",
+                            p.req_id
+                        )));
+                    }
+                    Coverage::Waiting => i += 1,
                 }
-                Coverage::Waiting => i += 1,
             }
-        }
-        if queue.is_empty() {
-            self.parked.remove(&device);
+            if queue.is_empty() {
+                self.parked.remove(&device);
+            }
+            if !ready.is_empty() {
+                batch.push((device, ready));
+            }
         }
         if batch.is_empty() {
-            return;
+            return false;
         }
-        batch.sort_by_key(|p| p.pos);
-        // Ready implies the request id matches the manager's current
-        // request for the device, so the whole batch shares one id and the
-        // highest position's plan covers every lower one.
-        let top = batch.last().expect("non-empty batch");
-        let t0 = Instant::now();
-        let served = self.engine_pass(device, top.req_id, top.pos, top.prompt_len);
-        let elapsed = t0.elapsed().as_secs_f64();
-        self.stats.busy_s += elapsed;
-        match served {
-            Ok(tokens) => {
-                for p in batch {
-                    self.stats.requests_served += 1;
-                    let out = tokens
-                        .get(&p.pos)
-                        .map(|&(token, conf)| TokenOut { token, conf, compute_s: elapsed })
-                        .ok_or_else(|| anyhow!("nothing to compute for pos {}", p.pos));
-                    let _ = p.reply.send(out);
-                }
-            }
-            Err(e) => {
-                for p in batch {
-                    self.stats.requests_served += 1;
-                    let _ = p.reply.send(Err(anyhow!("{e:#}")));
-                }
-            }
-        }
-    }
 
-    /// One engine pass answering every position up to `pos`: optional
-    /// prompt prefill, then per-position decode catch-up.
-    fn engine_pass(
-        &mut self,
-        device: u64,
-        req_id: u32,
-        pos: u32,
-        prompt_len: u32,
-    ) -> Result<HashMap<u32, (i32, f32)>> {
-        let plan = self.cm.plan(device, req_id, pos, prompt_len)?;
-        let session = match self.sessions.entry(device) {
-            std::collections::hash_map::Entry::Occupied(o) => o.into_mut(),
-            std::collections::hash_map::Entry::Vacant(v) => v.insert((self.factory)(device)?),
-        };
-        let mut tokens = HashMap::new();
-        if let Some((h, len)) = &plan.prefill {
-            session.reset();
-            let out = session.prefill(h, *len)?;
-            tokens.insert(*len as u32 - 1, (out.exit.token, out.exit.conf));
+        // --- plan the whole batch in one manager sweep --------------------
+        // Ready implies the request id matches the manager's current
+        // request for the device, so each device's ready set shares one id
+        // and its highest position's plan covers every lower one.
+        let reqs: Vec<PlanReq> = batch
+            .iter()
+            .map(|(device, ready)| {
+                let top = ready.iter().max_by_key(|p| p.pos).expect("non-empty ready set");
+                PlanReq {
+                    device: *device,
+                    req_id: top.req_id,
+                    pos: top.pos,
+                    prompt_len: top.prompt_len,
+                }
+            })
+            .collect();
+        let plans = self.cm.plan_batch(&reqs, self.max_catchup);
+
+        // --- one padded engine pass over every planned device -------------
+        let t0 = Instant::now();
+        let mut served: Vec<DeviceOutcome> = Vec::with_capacity(batch.len());
+        let mut pass_devices = 0usize;
+        let mut pass_items = 0u64;
+        for ((device, ready), plan) in batch.into_iter().zip(plans) {
+            let outcome = match plan {
+                Err(e) => Err(e),
+                Ok(plan) => {
+                    let frontier = plan.frontier;
+                    let n_items = plan.decode.len() as u64;
+                    let session = match self.sessions.entry(device) {
+                        std::collections::hash_map::Entry::Occupied(o) => o.into_mut(),
+                        std::collections::hash_map::Entry::Vacant(v) => {
+                            match (self.factory)(device) {
+                                Ok(s) => v.insert(s),
+                                Err(e) => {
+                                    served.push((device, ready, Err(e)));
+                                    continue;
+                                }
+                            }
+                        }
+                    };
+                    // counted only once a session actually runs the work,
+                    // so failed devices don't inflate batching stats
+                    pass_devices += 1;
+                    pass_items += n_items;
+                    run_device_pass(session.as_mut(), plan).map(|tokens| (tokens, frontier))
+                }
+            };
+            served.push((device, ready, outcome));
         }
-        for (p, h) in &plan.decode {
-            let out = session.decode(h, *p as usize)?;
-            tokens.insert(*p, (out.exit.token, out.exit.conf));
+        let elapsed = t0.elapsed().as_secs_f64();
+        if pass_devices > 0 {
+            self.stats.busy_s += elapsed;
+            self.stats.engine_passes += 1;
+            self.stats.batched_items += pass_items;
+            self.stats.batch_devices_max = self.stats.batch_devices_max.max(pass_devices);
         }
-        Ok(tokens)
+
+        // --- fan results back out to the parked requests ------------------
+        let mut leftover = false;
+        for (device, ready, outcome) in served {
+            match outcome {
+                Ok((tokens, frontier)) => {
+                    for p in ready {
+                        if let Some(&(token, conf)) = tokens.get(&p.pos) {
+                            self.stats.requests_served += 1;
+                            let _ =
+                                p.reply.send(Ok(TokenOut { token, conf, compute_s: elapsed }));
+                        } else if p.pos < frontier {
+                            // position consumed by an earlier pass and
+                            // never re-requested: nothing left to compute
+                            self.stats.requests_served += 1;
+                            let _ = p
+                                .reply
+                                .send(Err(anyhow!("nothing to compute for pos {}", p.pos)));
+                        } else {
+                            // fairness cap stopped short of this position:
+                            // stays parked, next pass continues the run
+                            leftover = true;
+                            self.parked.entry(device).or_default().push(p);
+                        }
+                    }
+                }
+                Err(e) => {
+                    for p in ready {
+                        self.stats.requests_served += 1;
+                        let _ = p.reply.send(Err(anyhow!("{e:#}")));
+                    }
+                }
+            }
+        }
+        leftover
     }
+}
+
+/// One device's share of a padded pass: optional prompt prefill, then the
+/// coalesced catch-up run as a single [`CloudEngine::decode_batch`] call.
+fn run_device_pass(session: &mut dyn CloudEngine, plan: WorkPlan) -> Result<PassTokens> {
+    let mut tokens = HashMap::new();
+    if let Some((h, len)) = &plan.prefill {
+        session.reset();
+        let out = session.prefill(h, *len)?;
+        tokens.insert(*len as u32 - 1, (out.exit.token, out.exit.conf));
+    }
+    if !plan.decode.is_empty() {
+        let items: Vec<BatchItem> = plan
+            .decode
+            .into_iter()
+            .map(|(p, h)| BatchItem { h1: h, pos: p as usize })
+            .collect();
+        let outs = session.decode_batch(&items)?;
+        anyhow::ensure!(outs.len() == items.len(), "decode_batch returned a short batch");
+        for (item, out) in items.iter().zip(outs) {
+            tokens.insert(item.pos as u32, (out.exit.token, out.exit.conf));
+        }
+    }
+    Ok(tokens)
 }

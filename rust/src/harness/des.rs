@@ -57,6 +57,13 @@ pub struct SimConfig {
     /// shard statically onto workers, mirroring the real scheduler's
     /// `device_id % workers` assignment.
     pub workers: usize,
+    /// Model the scheduler's cross-device batched decode: every call
+    /// queued on a worker that is ready when a pass starts joins that
+    /// pass, which costs the *widest* call plus the batched marginal rate
+    /// for each extra lane — instead of the calls running FCFS one after
+    /// another.  `false` reproduces the pre-batching per-device serving
+    /// law.
+    pub cross_device_batch: bool,
 }
 
 #[derive(Debug, Clone)]
@@ -72,6 +79,10 @@ pub struct SimOutcome {
     pub makespan_s: f64,
     /// Total busy time summed over the cloud worker pool.
     pub cloud_busy_s: f64,
+    /// Engine passes the pool executed.  Without cross-device batching
+    /// this equals the number of cloud calls; with it, co-resident calls
+    /// fuse and the count drops — the ratio is the batching win.
+    pub cloud_passes: u64,
 }
 
 impl SimOutcome {
@@ -96,17 +107,25 @@ struct CloudCall {
     /// When the uploads this request depends on have all arrived.
     ready_s: f64,
     busy_s: f64,
+    /// Decode lanes this call puts into a padded pass (its coalesced
+    /// catch-up count) — sizes the batched marginal cost when the call
+    /// rides along in another call's pass.
+    items: usize,
     resp_bytes: usize,
 }
 
 struct HeapEntry {
     arrive_s: f64,
     client: usize,
+    /// Guards against stale entries: a call co-served by an earlier
+    /// batched pass leaves its heap entry behind; the sequence number
+    /// tells it apart from the client's next call.
+    seq: u64,
 }
 
 impl PartialEq for HeapEntry {
     fn eq(&self, other: &Self) -> bool {
-        self.arrive_s == other.arrive_s && self.client == other.client
+        self.arrive_s == other.arrive_s && self.client == other.client && self.seq == other.seq
     }
 }
 impl Eq for HeapEntry {}
@@ -117,11 +136,13 @@ impl PartialOrd for HeapEntry {
 }
 impl Ord for HeapEntry {
     fn cmp(&self, other: &Self) -> Ordering {
-        // min-heap by arrival time (FCFS), tie-break by client id
+        // min-heap by arrival time (FCFS), tie-break by client id, then
+        // seq — the full field set, keeping Ord consistent with Eq
         other
             .arrive_s
             .total_cmp(&self.arrive_s)
             .then_with(|| other.client.cmp(&self.client))
+            .then_with(|| other.seq.cmp(&self.seq))
     }
 }
 
@@ -260,6 +281,7 @@ impl<'a> ClientSim<'a> {
             arrive_s: arrive,
             ready_s: arrive,
             busy_s: busy,
+            items: tr.steps.len(),
             resp_bytes: UPLOAD_HDR + tr.tokens.len(),
         })
     }
@@ -314,6 +336,7 @@ impl<'a> ClientSim<'a> {
                 arrive_s: req_arrive,
                 ready_s: req_arrive,
                 busy_s: busy,
+                items: 1,
                 resp_bytes: RESP_BYTES,
             });
         }
@@ -428,6 +451,7 @@ impl<'a> ClientSim<'a> {
                         arrive_s: req_arrive,
                         ready_s: ready.max(req_arrive),
                         busy_s: busy,
+                        items: step.cloud_catchup.max(1),
                         resp_bytes: RESP_BYTES,
                     });
                 }
@@ -475,37 +499,88 @@ pub fn simulate(
         .collect();
 
     let mut heap: BinaryHeap<HeapEntry> = BinaryHeap::new();
-    let mut pending: Vec<Option<CloudCall>> = Vec::with_capacity(clients.len());
+    let mut pending: Vec<Option<(u64, CloudCall)>> = Vec::with_capacity(clients.len());
+    let mut seq = 0u64;
     for c in clients.iter_mut() {
         let call = c.advance();
         if let Some(call) = call {
-            heap.push(HeapEntry { arrive_s: call.arrive_s, client: call.client });
-            pending.push(Some(call));
+            seq += 1;
+            heap.push(HeapEntry { arrive_s: call.arrive_s, client: call.client, seq });
+            pending.push(Some((seq, call)));
         } else {
             pending.push(None);
         }
     }
 
     let workers = cfg.workers.max(1);
+    let marginal_s = cost_model.cloud_batch_marginal.mean_s;
     let mut worker_free = vec![0.0f64; workers];
     let mut cloud_busy_total = 0.0f64;
+    let mut cloud_passes = 0u64;
     while let Some(entry) = heap.pop() {
-        let call = pending[entry.client].take().expect("pending call");
-        let free = &mut worker_free[call.client % workers];
-        let start = free.max(call.arrive_s).max(call.ready_s);
-        let done = start + call.busy_s;
-        *free = done;
-        cloud_busy_total += call.busy_s;
-        let c = &mut clients[call.client];
-        c.resume(done, call.busy_s, call.resp_bytes);
-        if let Some(next) = c.advance() {
-            heap.push(HeapEntry { arrive_s: next.arrive_s, client: next.client });
-            pending[call.client] = Some(next);
+        // skip stale entries (their call was co-served by an earlier pass)
+        match &pending[entry.client] {
+            Some((s, _)) if *s == entry.seq => {}
+            _ => continue,
+        }
+        let (_, call) = pending[entry.client].take().expect("pending call");
+        let w = call.client % workers;
+        let start = worker_free[w].max(call.arrive_s).max(call.ready_s);
+
+        // Cross-device batching (the real scheduler's padded pass): every
+        // other call queued on this worker that is ready by `start` joins
+        // the pass instead of waiting its FCFS turn.
+        let mut calls = vec![call];
+        if cfg.cross_device_batch {
+            for (j, slot) in pending.iter_mut().enumerate() {
+                if j == entry.client || j % workers != w {
+                    continue;
+                }
+                let joins =
+                    matches!(slot, Some((_, c)) if c.arrive_s <= start && c.ready_s <= start);
+                if joins {
+                    calls.push(slot.take().expect("matched above").1);
+                }
+            }
+        }
+
+        // The padded pass costs its widest lane; every extra lane rides
+        // along at the batched marginal rate (paper §4.3: per-token
+        // overheads, not model math, dominate — fusing passes removes
+        // them).  A batch of one degenerates to exactly the old FCFS law.
+        let widest_idx = (0..calls.len())
+            .max_by(|&a, &b| calls[a].busy_s.total_cmp(&calls[b].busy_s))
+            .expect("non-empty pass");
+        let extra_items: usize = calls
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| i != widest_idx)
+            .map(|(_, c)| c.items)
+            .sum();
+        let busy_pass = calls[widest_idx].busy_s + marginal_s * extra_items as f64;
+        let done = start + busy_pass;
+        worker_free[w] = done;
+        cloud_busy_total += busy_pass;
+        cloud_passes += 1;
+        for call in calls {
+            let c = &mut clients[call.client];
+            // the whole pass is attributed to every call it answered,
+            // matching the real scheduler's compute_s accounting
+            c.resume(done, busy_pass, call.resp_bytes);
+            if let Some(next) = c.advance() {
+                seq += 1;
+                heap.push(HeapEntry { arrive_s: next.arrive_s, client: next.client, seq });
+                pending[call.client] = Some((seq, next));
+            }
         }
     }
 
-    let mut out =
-        SimOutcome { clients: Vec::with_capacity(clients.len()), makespan_s: 0.0, cloud_busy_s: cloud_busy_total };
+    let mut out = SimOutcome {
+        clients: Vec::with_capacity(clients.len()),
+        makespan_s: 0.0,
+        cloud_busy_s: cloud_busy_total,
+        cloud_passes,
+    };
     for c in clients {
         debug_assert!(c.done);
         out.makespan_s = out.makespan_s.max(c.cost.total_s);
@@ -571,7 +646,13 @@ mod tests {
     }
 
     fn cfg(strategy: Strategy) -> SimConfig {
-        SimConfig { strategy, link: LinkProfile::wifi(), seed: 7, workers: 1 }
+        SimConfig {
+            strategy,
+            link: LinkProfile::wifi(),
+            seed: 7,
+            workers: 1,
+            cross_device_batch: false,
+        }
     }
 
     use ExitPoint::*;
@@ -616,7 +697,8 @@ mod tests {
                        Cloud, Exit1, Cloud, Exit2, Cloud, Exit1, Cloud, Exit1];
         let traces = vec![vec![mk_trace(150, &pattern); 3]];
         let link = LinkProfile::paper_scaled();
-        let scfg = |s| SimConfig { strategy: s, link, seed: 7, workers: 1 };
+        let scfg =
+            |s| SimConfig { strategy: s, link, seed: 7, workers: 1, cross_device_batch: false };
         let full = simulate(&traces, &dims(), &cost(),
                             &scfg(Strategy::CeCollm(AblationFlags::default())));
         let nocm = simulate(&traces, &dims(), &cost(),
@@ -685,6 +767,7 @@ mod tests {
             link: LinkProfile::wifi(),
             seed: 7,
             workers,
+            cross_device_batch: false,
         };
         let w1 = simulate(&traces, &dims(), &cost(), &mk(1));
         let w2 = simulate(&traces, &dims(), &cost(), &mk(2));
@@ -696,6 +779,60 @@ mod tests {
         );
         // the same compute is done either way, just less serialized
         assert!((w1.cloud_busy_s - w2.cloud_busy_s).abs() / w1.cloud_busy_s < 0.05);
+    }
+
+    #[test]
+    fn cross_device_batching_fuses_contended_passes() {
+        // four cloud-heavy clients on one worker: under FCFS their calls
+        // queue; with batching, queued calls fuse into padded passes
+        let pattern = [Cloud; 12];
+        let traces: Vec<Vec<Trace>> = (0..4).map(|_| vec![mk_trace(16, &pattern); 3]).collect();
+        let mk = |batch| SimConfig {
+            strategy: Strategy::CeCollm(AblationFlags::default()),
+            link: LinkProfile::wifi(),
+            seed: 7,
+            workers: 1,
+            cross_device_batch: batch,
+        };
+        let fcfs = simulate(&traces, &dims(), &cost(), &mk(false));
+        let batched = simulate(&traces, &dims(), &cost(), &mk(true));
+        let calls = fcfs.summed().1.cloud_requests as u64;
+        assert_eq!(fcfs.cloud_passes, calls, "FCFS: one pass per call");
+        assert!(
+            batched.cloud_passes < fcfs.cloud_passes,
+            "contended calls must fuse: {} vs {}",
+            batched.cloud_passes,
+            fcfs.cloud_passes
+        );
+        assert!(
+            batched.makespan_s < fcfs.makespan_s,
+            "fused passes must shorten the makespan: {} vs {}",
+            batched.makespan_s,
+            fcfs.makespan_s
+        );
+        // same tokens served either way
+        assert_eq!(fcfs.summed().1.tokens_generated, batched.summed().1.tokens_generated);
+    }
+
+    #[test]
+    fn batching_a_single_client_is_a_no_op() {
+        // one client's calls never overlap (synchronous round trips), so
+        // every pass is a batch of one and the laws coincide exactly
+        let pattern = [Cloud, Exit1, Cloud, Exit2, Cloud, Cloud];
+        let traces = vec![vec![mk_trace(12, &pattern); 2]];
+        let mk = |batch| SimConfig {
+            strategy: Strategy::CeCollm(AblationFlags::default()),
+            link: LinkProfile::wifi(),
+            seed: 3,
+            workers: 1,
+            cross_device_batch: batch,
+        };
+        let a = simulate(&traces, &dims(), &cost(), &mk(false));
+        let b = simulate(&traces, &dims(), &cost(), &mk(true));
+        assert_eq!(a.cloud_passes, b.cloud_passes);
+        assert!((a.makespan_s - b.makespan_s).abs() < 1e-12);
+        assert!((a.cloud_busy_s - b.cloud_busy_s).abs() < 1e-12);
+        assert_eq!(a.summed().1.cloud_requests as u64, a.cloud_passes);
     }
 
     #[test]

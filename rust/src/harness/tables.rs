@@ -30,7 +30,13 @@ fn aggregate_strategy(
     let mut agg = Aggregate::default();
     let per_client = vec![traces.to_vec()];
     for r in 0..repeats.max(1) {
-        let cfg = SimConfig { strategy, link, seed: seed ^ (r as u64) << 17, workers: 1 };
+        let cfg = SimConfig {
+            strategy,
+            link,
+            seed: seed ^ (r as u64) << 17,
+            workers: 1,
+            cross_device_batch: true,
+        };
         let out = simulate(&per_client, dims, cost, &cfg);
         let (c, k) = out.summed();
         agg.push(&c, &k, None);
@@ -197,7 +203,13 @@ pub fn fig4(
                 let mut cloud = crate::metrics::MeanStd::default();
                 let mut comm = crate::metrics::MeanStd::default();
                 for r in 0..cfg.repeats.max(1) {
-                    let sim = SimConfig { strategy, link, seed: cfg.seed ^ (r as u64) << 9, workers: 1 };
+                    let sim = SimConfig {
+                        strategy,
+                        link,
+                        seed: cfg.seed ^ (r as u64) << 9,
+                        workers: 1,
+                        cross_device_batch: true,
+                    };
                     let o = simulate(&per_client, dims, &pt.cost, &sim);
                     let (c, _) = o.summed();
                     makespan.push(o.makespan_s);
@@ -228,7 +240,13 @@ pub fn fig4(
             ("CE-CoLLM θ=0.9", &pt.t09, Strategy::CeCollm(AblationFlags::default())),
             ("Naive Cloud-Edge", &pt.t10, Strategy::NaiveSplit),
         ] {
-            let sim = SimConfig { strategy, link, seed: cfg.seed, workers: 1 };
+            let sim = SimConfig {
+                strategy,
+                link,
+                seed: cfg.seed,
+                workers: 1,
+                cross_device_batch: true,
+            };
             let o = simulate(&[traces.to_vec()], dims, &pt.cost, &sim);
             let (_, k) = o.summed();
             t.row(vec![

@@ -54,12 +54,27 @@ pub fn pack(values: &[f32], precision: Precision) -> Vec<u8> {
 
 /// Unpack wire bytes back to f32.  Errors on length mismatch.
 pub fn unpack(bytes: &[u8], precision: Precision) -> anyhow::Result<Vec<f32>> {
+    let mut out = Vec::new();
+    unpack_into(bytes, precision, &mut out)?;
+    Ok(out)
+}
+
+/// [`unpack`] into a caller-owned buffer: the buffer is cleared and
+/// refilled, reusing its allocation.  The per-token serve path unpacks
+/// every uploaded hidden state; reusing one buffer per connection removes
+/// that allocation from the hot loop (see the hotpath bench).
+pub fn unpack_into(
+    bytes: &[u8],
+    precision: Precision,
+    out: &mut Vec<f32>,
+) -> anyhow::Result<()> {
     let esz = precision.bytes_per_elem();
     if bytes.len() % esz != 0 {
         anyhow::bail!("payload length {} not a multiple of {}", bytes.len(), esz);
     }
     let n = bytes.len() / esz;
-    let mut out = Vec::with_capacity(n);
+    out.clear();
+    out.reserve(n);
     match precision {
         Precision::F32 => {
             for c in bytes.chunks_exact(4) {
@@ -72,7 +87,7 @@ pub fn unpack(bytes: &[u8], precision: Precision) -> anyhow::Result<Vec<f32>> {
             }
         }
     }
-    Ok(out)
+    Ok(())
 }
 
 /// Statistics from quantizing a batch of activations — mirrors the paper's
@@ -153,6 +168,23 @@ mod tests {
     fn unpack_rejects_ragged_payload() {
         assert!(unpack(&[1, 2, 3], Precision::F16).is_err());
         assert!(unpack(&[1, 2, 3, 4, 5], Precision::F32).is_err());
+    }
+
+    #[test]
+    fn unpack_into_reuses_the_buffer() {
+        let v: Vec<f32> = (0..128).map(|i| i as f32 * 0.5).collect();
+        let b = pack(&v, Precision::F16);
+        let mut buf = Vec::new();
+        unpack_into(&b, Precision::F16, &mut buf).unwrap();
+        assert_eq!(buf, unpack(&b, Precision::F16).unwrap());
+        let cap = buf.capacity();
+        let ptr = buf.as_ptr();
+        unpack_into(&b, Precision::F16, &mut buf).unwrap();
+        assert_eq!(buf.capacity(), cap, "second unpack must not grow");
+        assert_eq!(buf.as_ptr(), ptr, "second unpack must not reallocate");
+        // a ragged payload errors before touching the buffer
+        assert!(unpack_into(&[1, 2, 3], Precision::F16, &mut buf).is_err());
+        assert_eq!(buf.len(), 128, "failed unpack must not corrupt the buffer");
     }
 
     #[test]

@@ -120,4 +120,9 @@ impl Outputs {
         let lit = self.slot(name)?.as_ref().context("output already taken")?;
         super::literal::to_i32_scalar(lit)
     }
+
+    pub fn i32_vec(&mut self, name: &str) -> Result<Vec<i32>> {
+        let lit = self.slot(name)?.as_ref().context("output already taken")?;
+        super::literal::to_i32_vec(lit)
+    }
 }

@@ -15,8 +15,14 @@ use crate::model::manifest::ModelDims;
 use crate::runtime::literal::{f32_literal, i32_literal, scalar_i32};
 use crate::runtime::stack::LoadedArtifacts;
 use crate::runtime::traits::{
-    CloudEngine, CloudOut, EdgeEngine, EdgePrefillOut, ExitEval, Seg1Out, Seg2Out,
+    BatchItem, CloudEngine, CloudOut, EdgeEngine, EdgePrefillOut, ExitEval, Seg1Out, Seg2Out,
 };
+
+/// Positions per fused catch-up execution: the `cloud_decode_catchup`
+/// artifact is AOT-compiled for a fixed `[CATCHUP_BUCKET, d_model]` input
+/// (padded with zeros, real count passed as a scalar), so longer runs are
+/// chunked into bucket-sized executions.
+pub const CATCHUP_BUCKET: usize = 8;
 
 pub struct EdgeSession {
     dims: ModelDims,
@@ -109,11 +115,12 @@ pub struct CloudSession {
     arts: Rc<LoadedArtifacts>,
     params: Rc<Vec<PjRtBuffer>>,
     kvc: Option<(Literal, Literal)>,
+    fused_passes: u64,
 }
 
 impl CloudSession {
     pub fn new(dims: ModelDims, arts: Rc<LoadedArtifacts>, params: Rc<Vec<PjRtBuffer>>) -> Self {
-        Self { dims, arts, params, kvc: None }
+        Self { dims, arts, params, kvc: None, fused_passes: 0 }
     }
 
     fn exit_eval(out: &mut super::artifact::Outputs) -> Result<ExitEval> {
@@ -122,6 +129,58 @@ impl CloudSession {
             conf: out.f32_scalar("conf")?,
             logits: out.f32_vec("logits")?,
         })
+    }
+
+    /// One fused execution over up to [`CATCHUP_BUCKET`] contiguous
+    /// positions: hiddens padded to the bucket, one KV round trip for the
+    /// whole chunk instead of one per position.
+    ///
+    /// Artifact contract (`cloud_decode_catchup`): inputs
+    /// `kv_k, kv_v, h1 [CATCHUP_BUCKET, d], start_pos, count`; outputs
+    /// `kvc_k, kvc_v, toks [B] i32, confs [B] f32, logits [B * vocab]`.
+    fn decode_chunk_fused(&mut self, chunk: &[BatchItem]) -> Result<Vec<CloudOut>> {
+        let arts = Rc::clone(&self.arts);
+        let artifact =
+            arts.cloud_decode_catchup.as_ref().expect("fused path requires the artifact");
+        let (kv_k, kv_v) =
+            self.kvc.take().ok_or_else(|| anyhow::anyhow!("cloud decode before prefill"))?;
+        let d = self.dims.d_model;
+        let start = chunk[0].pos;
+        let mut padded = vec![0f32; CATCHUP_BUCKET * d];
+        for (i, b) in chunk.iter().enumerate() {
+            padded[i * d..(i + 1) * d].copy_from_slice(&b.h1);
+        }
+        let mut out = artifact.execute(
+            &self.params,
+            &[
+                kv_k,
+                kv_v,
+                f32_literal(&padded, &[CATCHUP_BUCKET, d])?,
+                scalar_i32(start as i32),
+                scalar_i32(chunk.len() as i32),
+            ],
+        )?;
+        self.kvc = Some((out.take("kvc_k")?, out.take("kvc_v")?));
+        self.fused_passes += 1;
+        let toks = out.i32_vec("toks")?;
+        let confs = out.f32_vec("confs")?;
+        let logits = out.f32_vec("logits")?;
+        anyhow::ensure!(
+            toks.len() >= chunk.len() && confs.len() >= chunk.len(),
+            "fused outputs shorter than the chunk"
+        );
+        let vocab = logits.len() / toks.len().max(1);
+        Ok(chunk
+            .iter()
+            .enumerate()
+            .map(|(i, _)| CloudOut {
+                exit: ExitEval {
+                    token: toks[i],
+                    conf: confs[i],
+                    logits: logits[i * vocab..(i + 1) * vocab].to_vec(),
+                },
+            })
+            .collect())
     }
 }
 
@@ -160,6 +219,35 @@ impl CloudEngine for CloudSession {
         )?;
         self.kvc = Some((out.take("kvc_k")?, out.take("kvc_v")?));
         Ok(CloudOut { exit: Self::exit_eval(&mut out)? })
+    }
+
+    fn decode_batch(&mut self, items: &[BatchItem]) -> Result<Vec<CloudOut>> {
+        if items.is_empty() {
+            return Ok(Vec::new());
+        }
+        let d = self.dims.d_model;
+        for (i, b) in items.iter().enumerate() {
+            anyhow::ensure!(b.h1.len() == d, "h1 length {} != d_model {d}", b.h1.len());
+            anyhow::ensure!(b.pos < self.dims.max_seq, "pos {} >= max_seq", b.pos);
+            anyhow::ensure!(
+                i == 0 || b.pos == items[i - 1].pos + 1,
+                "catch-up run must be position-contiguous"
+            );
+        }
+        if self.arts.cloud_decode_catchup.is_none() {
+            // stack compiled without the fused artifact: per-position loop
+            // (one KV round trip per position; see EXPERIMENTS.md §Perf)
+            return items.iter().map(|b| self.decode(&b.h1, b.pos)).collect();
+        }
+        let mut out = Vec::with_capacity(items.len());
+        for chunk in items.chunks(CATCHUP_BUCKET) {
+            out.extend(self.decode_chunk_fused(chunk)?);
+        }
+        Ok(out)
+    }
+
+    fn batch_passes(&self) -> u64 {
+        self.fused_passes
     }
 
     fn is_prefilled(&self) -> bool {

@@ -47,6 +47,11 @@ pub fn to_i32_scalar(lit: &Literal) -> Result<i32> {
     lit.get_first_element::<i32>().context("literal -> i32 scalar")
 }
 
+/// Read an i32 literal to a host vector.
+pub fn to_i32_vec(lit: &Literal) -> Result<Vec<i32>> {
+    lit.to_vec::<i32>().context("literal -> Vec<i32>")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -10,7 +10,7 @@ use anyhow::Result;
 
 use crate::model::manifest::ModelDims;
 use crate::runtime::traits::{
-    CloudEngine, CloudOut, EdgeEngine, EdgePrefillOut, ExitEval, Seg1Out, Seg2Out,
+    BatchItem, CloudEngine, CloudOut, EdgeEngine, EdgePrefillOut, ExitEval, Seg1Out, Seg2Out,
 };
 
 fn splitmix64(mut x: u64) -> u64 {
@@ -135,13 +135,26 @@ pub struct MockCloud {
     prefilled: bool,
     pub prefill_calls: usize,
     pub decode_calls: usize,
+    /// Fused `decode_batch` passes executed (one per call, any width).
+    pub fused_passes: u64,
+    /// Items decoded through fused passes.
+    pub batched_items: u64,
     /// Positions decoded, for catch-up/content-manager assertions.
     pub decoded_positions: Vec<usize>,
 }
 
 impl MockCloud {
     pub fn new(oracle: MockOracle, dims: ModelDims) -> Self {
-        Self { oracle, dims, prefilled: false, prefill_calls: 0, decode_calls: 0, decoded_positions: vec![] }
+        Self {
+            oracle,
+            dims,
+            prefilled: false,
+            prefill_calls: 0,
+            decode_calls: 0,
+            fused_passes: 0,
+            batched_items: 0,
+            decoded_positions: vec![],
+        }
     }
 }
 
@@ -164,6 +177,29 @@ impl CloudEngine for MockCloud {
         self.decode_calls += 1;
         self.decoded_positions.push(pos);
         Ok(CloudOut { exit: eval(self.oracle.cloud_token(pos), 0.95) })
+    }
+
+    /// Fused catch-up pass: validates the whole run up front, then
+    /// produces every output in one sweep.  Output values come from the
+    /// same oracle as [`Self::decode`], so the batch is bit-identical to
+    /// the sequential loop by construction.
+    fn decode_batch(&mut self, items: &[BatchItem]) -> Result<Vec<CloudOut>> {
+        anyhow::ensure!(self.prefilled, "cloud decode before prefill");
+        for b in items {
+            anyhow::ensure!(b.h1.len() == self.dims.d_model, "h1 wrong length");
+        }
+        self.fused_passes += 1;
+        self.batched_items += items.len() as u64;
+        let mut out = Vec::with_capacity(items.len());
+        for b in items {
+            self.decoded_positions.push(b.pos);
+            out.push(CloudOut { exit: eval(self.oracle.cloud_token(b.pos), 0.95) });
+        }
+        Ok(out)
+    }
+
+    fn batch_passes(&self) -> u64 {
+        self.fused_passes
     }
 
     fn is_prefilled(&self) -> bool {
@@ -216,6 +252,34 @@ mod tests {
         assert!(c.decode(&vec![0.0; 128], 2).is_err());
         c.prefill(&vec![0.0; 2 * 128], 2).unwrap();
         assert!(c.decode(&vec![0.0; 128], 2).is_ok());
+    }
+
+    #[test]
+    fn fused_decode_batch_matches_sequential_decode() {
+        let dims = test_manifest().model;
+        let d = dims.d_model;
+        let o = MockOracle::new(9);
+        let mut fused = MockCloud::new(o, dims.clone());
+        let mut seq = MockCloud::new(o, dims);
+        fused.prefill(&vec![0.0; 2 * d], 2).unwrap();
+        seq.prefill(&vec![0.0; 2 * d], 2).unwrap();
+
+        let items: Vec<BatchItem> =
+            (2..7).map(|pos| BatchItem { h1: vec![0.5; d], pos }).collect();
+        let a = fused.decode_batch(&items).unwrap();
+        let b: Vec<CloudOut> =
+            items.iter().map(|it| seq.decode(&it.h1, it.pos).unwrap()).collect();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.exit.token, y.exit.token);
+            assert_eq!(x.exit.conf.to_bits(), y.exit.conf.to_bits());
+            assert_eq!(x.exit.logits, y.exit.logits);
+        }
+        assert_eq!(fused.batch_passes(), 1, "one fused pass for the whole run");
+        assert_eq!(fused.batched_items, 5);
+        assert_eq!(fused.decoded_positions, seq.decoded_positions);
+        // the sequential engine never took a fused pass
+        assert_eq!(seq.batch_passes(), 0);
     }
 
     #[test]

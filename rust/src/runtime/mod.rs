@@ -22,4 +22,6 @@ pub mod xla;
 
 pub use artifact::{Artifact, Outputs};
 pub use stack::LocalStack;
-pub use traits::{CloudEngine, CloudOut, EdgeEngine, EdgePrefillOut, ExitEval, Seg1Out, Seg2Out};
+pub use traits::{
+    BatchItem, CloudEngine, CloudOut, EdgeEngine, EdgePrefillOut, ExitEval, Seg1Out, Seg2Out,
+};

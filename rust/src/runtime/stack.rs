@@ -27,6 +27,11 @@ pub struct LoadedArtifacts {
     /// skip ~3/4 of the prefill pad for Alpaca-length prompts.
     pub edge_prefill_64: Option<Artifact>,
     pub cloud_prefill_64: Option<Artifact>,
+    /// Fused catch-up decode over a `[CATCHUP_BUCKET, d_model]` padded
+    /// run (see [`crate::runtime::engines::CATCHUP_BUCKET`]) — optional
+    /// batching artifact; stacks without it fall back to the sequential
+    /// per-position decode loop.
+    pub cloud_decode_catchup: Option<Artifact>,
 }
 
 pub struct LocalStack {
@@ -90,6 +95,7 @@ impl LocalStack {
             cloud_decode: load("cloud_decode")?,
             edge_prefill_64: load_opt("edge_prefill_64")?,
             cloud_prefill_64: load_opt("cloud_prefill_64")?,
+            cloud_decode_catchup: load_opt("cloud_decode_catchup")?,
         });
 
         Ok(Self { client, manifest, artifacts, edge_params, cloud_params, dir })

@@ -49,6 +49,17 @@ pub struct CloudOut {
     pub exit: ExitEval,
 }
 
+/// One lane of a batched cloud-decode pass: the uploaded `[d_model]`
+/// hidden state for `pos`.  A run of items within one session must be
+/// position-contiguous (each step extends the KV cache the next one
+/// reads); across sessions lanes are independent and the scheduler pads
+/// every session's run to the widest one in the pass.
+#[derive(Debug, Clone)]
+pub struct BatchItem {
+    pub h1: Vec<f32>,
+    pub pos: usize,
+}
+
 /// The edge device's model partition (paper §4.1).
 pub trait EdgeEngine {
     fn dims(&self) -> &ModelDims;
@@ -78,6 +89,26 @@ pub trait CloudEngine {
 
     /// One decode step from an uploaded `[d_model]` hidden at `pos`.
     fn decode(&mut self, h1: &[f32], pos: usize) -> Result<CloudOut>;
+
+    /// Decode a position-contiguous run of catch-up items in one engine
+    /// pass, returning one output per item in order.
+    ///
+    /// The default implementation is the per-position [`Self::decode`]
+    /// loop, so every engine is correct by construction.  Batch-aware
+    /// engines override it with a fused pass (one program execution over
+    /// the padded run) and MUST return outputs bit-identical to the
+    /// sequential loop — the scheduler relies on that equivalence when it
+    /// merges many devices' runs into one cross-device pass.
+    fn decode_batch(&mut self, items: &[BatchItem]) -> Result<Vec<CloudOut>> {
+        items.iter().map(|b| self.decode(&b.h1, b.pos)).collect()
+    }
+
+    /// Fused passes executed by [`Self::decode_batch`] overrides (0 for
+    /// engines using the sequential default) — observability for tests
+    /// and stats, not a correctness contract.
+    fn batch_passes(&self) -> u64 {
+        0
+    }
 
     /// Whether `prefill` has been run for the current session.
     fn is_prefilled(&self) -> bool;

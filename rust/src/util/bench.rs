@@ -71,7 +71,12 @@ pub fn bench<T>(name: &str, budget_s: f64, mut f: impl FnMut() -> T) -> BenchRes
 }
 
 /// Throughput helper: report bytes/s for a payload-processing closure.
-pub fn bench_throughput(name: &str, bytes_per_iter: usize, budget_s: f64, f: impl FnMut() -> Vec<u8>) {
+pub fn bench_throughput(
+    name: &str,
+    bytes_per_iter: usize,
+    budget_s: f64,
+    f: impl FnMut() -> Vec<u8>,
+) -> BenchResult {
     let mut f = f;
     let r = bench(name, budget_s, || f());
     println!(
@@ -79,6 +84,29 @@ pub fn bench_throughput(name: &str, bytes_per_iter: usize, budget_s: f64, f: imp
         format!("{name} (throughput)"),
         bytes_per_iter as f64 / r.mean_s / 1e6
     );
+    r
+}
+
+/// Serialize results as a JSON array (hand-rolled — the offline build has
+/// no serde).  CI uploads this as the `BENCH_hotpath.json` artifact so
+/// the perf trajectory accumulates across commits.
+pub fn to_json(results: &[BenchResult]) -> String {
+    let mut s = String::from("[\n");
+    for (i, r) in results.iter().enumerate() {
+        if i > 0 {
+            s.push_str(",\n");
+        }
+        s.push_str(&format!(
+            "  {{\"name\": \"{}\", \"iters\": {}, \"mean_s\": {:e}, \"p50_s\": {:e}, \"p90_s\": {:e}}}",
+            r.name.replace('\\', "\\\\").replace('"', "\\\""),
+            r.iters,
+            r.mean_s,
+            r.p50_s,
+            r.p90_s
+        ));
+    }
+    s.push_str("\n]\n");
+    s
 }
 
 #[cfg(test)]
@@ -90,6 +118,23 @@ mod tests {
         let r = bench("noop", 0.02, || 1 + 1);
         assert!(r.iters >= 1);
         assert!(r.mean_s >= 0.0 && r.p50_s <= r.p90_s + 1e-12);
+    }
+
+    #[test]
+    fn json_output_is_well_formed() {
+        let r = BenchResult {
+            name: "a \"quoted\" name".into(),
+            iters: 3,
+            mean_s: 1.5e-6,
+            p50_s: 0.0,
+            p90_s: 2e-6,
+        };
+        let j = to_json(&[r]);
+        assert!(j.starts_with("[\n") && j.ends_with("]\n"), "{j}");
+        assert!(j.contains("\\\"quoted\\\""), "{j}");
+        assert!(j.contains("\"iters\": 3"), "{j}");
+        // parses as one object per result
+        assert_eq!(j.matches("\"name\"").count(), 1);
     }
 
     #[test]

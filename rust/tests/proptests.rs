@@ -194,6 +194,53 @@ fn prop_content_manager_device_isolation() {
 }
 
 // ---------------------------------------------------------------------------
+// batched decode: fused passes bit-identical to sequential per-device decode
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_decode_batch_identical_to_sequential_per_device() {
+    use ce_collm::runtime::traits::{BatchItem, CloudEngine};
+
+    let dims = test_manifest().model;
+    let d = dims.d_model;
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::seed_from_u64(seed ^ 0xBA7C);
+        // a random cross-device batch: each device gets its own session
+        // pair and a random-length contiguous catch-up run
+        let n_devices = 1 + rng.gen_range(4);
+        for dev in 0..n_devices as u64 {
+            let o = MockOracle::new(seed ^ dev);
+            let mut fused = MockCloud::new(o, dims.clone());
+            let mut seq = MockCloud::new(o, dims.clone());
+            let plen = 1 + rng.gen_range(4);
+            let prompt = vec![0.25; plen * d];
+            fused.prefill(&prompt, plen).unwrap();
+            seq.prefill(&prompt, plen).unwrap();
+
+            let run = 1 + rng.gen_range(12);
+            let items: Vec<BatchItem> = (0..run)
+                .map(|i| BatchItem { h1: vec![rng.gen_f32(); d], pos: plen + i })
+                .collect();
+            let batched = fused.decode_batch(&items).unwrap();
+            let sequential: Vec<_> =
+                items.iter().map(|b| seq.decode(&b.h1, b.pos).unwrap()).collect();
+            assert_eq!(batched.len(), sequential.len(), "seed {seed} dev {dev}");
+            for (a, b) in batched.iter().zip(&sequential) {
+                assert_eq!(a.exit.token, b.exit.token, "seed {seed} dev {dev}");
+                assert_eq!(
+                    a.exit.conf.to_bits(),
+                    b.exit.conf.to_bits(),
+                    "seed {seed} dev {dev}: confidence must be bit-identical"
+                );
+                assert_eq!(a.exit.logits, b.exit.logits, "seed {seed} dev {dev}");
+            }
+            assert_eq!(fused.batch_passes(), 1, "seed {seed}: one fused pass per run");
+            assert_eq!(fused.decoded_positions, seq.decoded_positions, "seed {seed}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // policy: monotonicity over random confidences
 // ---------------------------------------------------------------------------
 
@@ -303,7 +350,13 @@ fn prop_des_total_bounds_parts() {
                 &traces,
                 &dims,
                 &cost,
-                &SimConfig { strategy, link: LinkProfile::wifi(), seed, workers: 1 },
+                &SimConfig {
+                    strategy,
+                    link: LinkProfile::wifi(),
+                    seed,
+                    workers: 1,
+                    cross_device_batch: false,
+                },
             );
             let (c, k) = out.summed();
             assert!(out.makespan_s >= c.edge_s - 1e-9, "seed {seed} {strategy:?}");
@@ -344,7 +397,13 @@ fn prop_des_more_clients_never_faster() {
                 &traces,
                 &dims,
                 &cost,
-                &SimConfig { strategy, link: LinkProfile::wifi(), seed: 0, workers: 1 },
+                &SimConfig {
+                    strategy,
+                    link: LinkProfile::wifi(),
+                    seed: 0,
+                    workers: 1,
+                    cross_device_batch: false,
+                },
             );
             assert!(
                 out.makespan_s >= prev - 1e-9,

@@ -262,7 +262,7 @@ fn missing_uploads_resolve_with_an_error_at_the_max_park_bound() {
     let sdims = dims.clone();
     let sched = Scheduler::spawn(
         dims,
-        CloudConfig { workers: 1, max_park_s: 0.04 },
+        CloudConfig { workers: 1, max_park_s: 0.04, ..Default::default() },
         Arc::new(move || {
             let sdims = sdims.clone();
             let f: SessionFactory = Box::new(move |_device| {
@@ -279,6 +279,155 @@ fn missing_uploads_resolve_with_an_error_at_the_max_park_bound() {
     let stats = sched.stats().unwrap();
     assert_eq!(stats.deadline_expired, 1);
     assert_eq!(stats.parked, 0);
+    sched.shutdown();
+}
+
+/// Scheduler whose worker blocks in its engine builder until the test
+/// releases `gate` — every message the test queues beforehand lands in
+/// the worker's channel and is drained in ONE wake, which makes the
+/// cross-device batch composition deterministic.  `spy` (when given)
+/// records every `decode_batch` call as `(device, items)` in engine
+/// order, so tests can observe pass composition from outside the worker
+/// thread.
+fn gated_scheduler(
+    seed: u64,
+    cfg: CloudConfig,
+    gate: Arc<std::sync::Barrier>,
+    spy: Option<Arc<std::sync::Mutex<Vec<(u64, usize)>>>>,
+) -> Scheduler {
+    use ce_collm::runtime::traits::{BatchItem, CloudEngine, CloudOut};
+
+    struct Spy {
+        inner: MockCloud,
+        device: u64,
+        log: Arc<std::sync::Mutex<Vec<(u64, usize)>>>,
+    }
+
+    impl CloudEngine for Spy {
+        fn dims(&self) -> &ce_collm::model::manifest::ModelDims {
+            self.inner.dims()
+        }
+        fn prefill(&mut self, h1: &[f32], len: usize) -> anyhow::Result<CloudOut> {
+            self.inner.prefill(h1, len)
+        }
+        fn decode(&mut self, h1: &[f32], pos: usize) -> anyhow::Result<CloudOut> {
+            self.inner.decode(h1, pos)
+        }
+        fn decode_batch(&mut self, items: &[BatchItem]) -> anyhow::Result<Vec<CloudOut>> {
+            self.log.lock().unwrap().push((self.device, items.len()));
+            self.inner.decode_batch(items)
+        }
+        fn batch_passes(&self) -> u64 {
+            self.inner.batch_passes()
+        }
+        fn is_prefilled(&self) -> bool {
+            self.inner.is_prefilled()
+        }
+        fn reset(&mut self) {
+            self.inner.reset()
+        }
+    }
+
+    let dims = test_manifest().model;
+    let sdims = dims.clone();
+    Scheduler::spawn(
+        dims,
+        cfg,
+        Arc::new(move || {
+            gate.wait();
+            let sdims = sdims.clone();
+            let spy = spy.clone();
+            let f: SessionFactory = Box::new(move |device| {
+                let inner = MockCloud::new(MockOracle::new(seed), sdims.clone());
+                Ok(match &spy {
+                    Some(log) => {
+                        Box::new(Spy { inner, device, log: Arc::clone(log) }) as Box<dyn CloudEngine>
+                    }
+                    None => Box::new(inner) as Box<dyn CloudEngine>,
+                })
+            });
+            Ok(f)
+        }),
+    )
+    .unwrap()
+}
+
+#[test]
+fn four_devices_share_one_padded_engine_pass() {
+    let seed = 11;
+    let gate = Arc::new(std::sync::Barrier::new(2));
+    let sched = gated_scheduler(seed, CloudConfig::default(), Arc::clone(&gate), None);
+    let router = sched.router();
+
+    // queue everything while the worker is still held at the gate: each
+    // device uploads its 3-position prompt plus decode hiddens for
+    // positions 3 and 4, then asks for the token at position 4
+    for dev in 0..4u64 {
+        upload(&router, dev, 1, 0, 3, 3);
+        upload(&router, dev, 1, 3, 2, 3);
+    }
+    let rxs: Vec<_> = (0..4u64).map(|dev| infer(&router, dev, 1, 4, 3, None)).collect();
+    gate.wait();
+
+    let oracle = MockOracle::new(seed);
+    for rx in &rxs {
+        let out = rx.recv().unwrap().expect("batched request must complete");
+        assert_eq!(out.token, oracle.cloud_token(4));
+    }
+    let stats = sched.stats().unwrap();
+    assert_eq!(
+        stats.engine_passes, 1,
+        "all four devices' pending decodes must share one padded pass: {stats:?}"
+    );
+    assert_eq!(stats.batch_devices_max, 4);
+    assert_eq!(stats.batched_items, 8, "positions 3 and 4 for each of the four devices");
+    assert_eq!(stats.requests_served, 4);
+    sched.shutdown();
+}
+
+#[test]
+fn deep_backlog_is_capped_and_cannot_starve_other_devices() {
+    let seed = 23;
+    let gate = Arc::new(std::sync::Barrier::new(2));
+    let log = Arc::new(std::sync::Mutex::new(Vec::new()));
+    let cfg = CloudConfig { max_catchup_per_pass: 4, ..Default::default() };
+    let sched = gated_scheduler(seed, cfg, Arc::clone(&gate), Some(Arc::clone(&log)));
+    let router = sched.router();
+
+    // device 0: 2-position prompt + a 20-position decode backlog
+    upload(&router, 0, 1, 0, 2, 2);
+    upload(&router, 0, 1, 2, 20, 2);
+    let rx0 = infer(&router, 0, 1, 21, 2, None);
+    // devices 1..4: one pending decode each
+    let mut rxs = Vec::new();
+    for dev in 1..4u64 {
+        upload(&router, dev, 1, 0, 2, 2);
+        upload(&router, dev, 1, 2, 1, 2);
+        rxs.push(infer(&router, dev, 1, 2, 2, None));
+    }
+    gate.wait();
+
+    let oracle = MockOracle::new(seed);
+    for rx in &rxs {
+        assert_eq!(rx.recv().unwrap().unwrap().token, oracle.cloud_token(2));
+    }
+    assert_eq!(rx0.recv().unwrap().unwrap().token, oracle.cloud_token(21));
+
+    let stats = sched.stats().unwrap();
+    // 20 backlog positions at <= 4 per pass: five passes, the other
+    // devices' single items riding along in the first one
+    assert_eq!(stats.engine_passes, 5, "{stats:?}");
+    assert_eq!(stats.batched_items, 23);
+    assert_eq!(stats.batch_devices_max, 4);
+
+    // the first pass interleaves every device (capped device 0 included);
+    // devices 1..4 never wait behind device 0's backlog
+    let log = log.lock().unwrap();
+    let first_pass: Vec<u64> = log.iter().take(4).map(|&(dev, _)| dev).collect();
+    assert_eq!(first_pass, vec![0, 1, 2, 3], "pass 1 must cover all devices: {log:?}");
+    assert_eq!(log[0].1, 4, "device 0 capped at 4 items in pass 1");
+    assert!(log[4..].iter().all(|&(dev, n)| dev == 0 && n == 4), "later passes drain the backlog");
+    assert_eq!(log.len(), 4 + 4, "5 passes total: 4 calls in pass 1, then 4 backlog chunks");
     sched.shutdown();
 }
 

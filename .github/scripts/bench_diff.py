@@ -1,0 +1,77 @@
+#!/usr/bin/env python3
+"""Diff two BENCH_hotpath.json artifacts and flag per-bench regressions.
+
+Usage: bench_diff.py PREVIOUS.json CURRENT.json
+
+Compares mean per-iteration seconds bench-by-bench (matched by name).
+Prints a trajectory table, emits GitHub warning annotations for benches
+that regressed past WARN_RATIO, and exits non-zero past FAIL_RATIO so
+the (continue-on-error) CI step shows red without blocking the build.
+CI runners are noisy, so the thresholds are deliberately loose and
+sub-microsecond benches are compared with an absolute floor.
+"""
+
+import json
+import sys
+
+WARN_RATIO = 1.30
+FAIL_RATIO = 2.00
+# ignore regressions where both sides are under this (timer noise)
+FLOOR_S = 2e-7
+
+
+def load(path):
+    with open(path) as f:
+        return {r["name"]: r for r in json.load(f)}
+
+
+def fmt(s):
+    if s >= 1.0:
+        return f"{s:.3f} s"
+    if s >= 1e-3:
+        return f"{s * 1e3:.3f} ms"
+    if s >= 1e-6:
+        return f"{s * 1e6:.3f} us"
+    return f"{s * 1e9:.1f} ns"
+
+
+def main():
+    prev, cur = load(sys.argv[1]), load(sys.argv[2])
+    common = [n for n in cur if n in prev]
+    added = [n for n in cur if n not in prev]
+    removed = [n for n in prev if n not in cur]
+
+    warnings, failures = [], []
+    print(f"{'bench':<48} {'prev':>12} {'cur':>12} {'ratio':>8}")
+    for name in common:
+        p, c = prev[name]["mean_s"], cur[name]["mean_s"]
+        ratio = c / p if p > 0 else float("inf")
+        marker = ""
+        if c > FLOOR_S and p > 0:
+            if ratio >= FAIL_RATIO:
+                marker = "  << REGRESSION"
+                failures.append((name, p, c, ratio))
+            elif ratio >= WARN_RATIO:
+                marker = "  <- slower"
+                warnings.append((name, p, c, ratio))
+        print(f"{name:<48} {fmt(p):>12} {fmt(c):>12} {ratio:>7.2f}x{marker}")
+
+    for name in added:
+        print(f"{name:<48} {'-':>12} {fmt(cur[name]['mean_s']):>12}     new")
+    for name in removed:
+        print(f"{name:<48} {fmt(prev[name]['mean_s']):>12} {'-':>12} removed")
+
+    for name, p, c, ratio in warnings + failures:
+        print(
+            f"::warning title=bench regression::{name}: "
+            f"{fmt(p)} -> {fmt(c)} ({ratio:.2f}x)"
+        )
+
+    if failures:
+        print(f"\n{len(failures)} bench(es) regressed past {FAIL_RATIO:.1f}x")
+        sys.exit(1)
+    print(f"\nbench trajectory OK ({len(common)} compared, {len(warnings)} warnings)")
+
+
+if __name__ == "__main__":
+    main()

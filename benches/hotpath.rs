@@ -13,13 +13,15 @@ use ce_collm::config::{AblationFlags, CloudConfig, ExitPolicy};
 use ce_collm::coordinator::content_manager::ContentManager;
 use ce_collm::coordinator::policy::TokenPolicy;
 use ce_collm::coordinator::protocol::Message;
-use ce_collm::coordinator::scheduler::{SchedMsg, Scheduler, SessionFactory};
+use ce_collm::coordinator::scheduler::{Reply, SchedMsg, Scheduler, SessionFactory};
 use ce_collm::eval::rouge::rouge_l;
 use ce_collm::harness::cost::CostModel;
 use ce_collm::harness::des::{simulate, SimConfig, Strategy};
 use ce_collm::harness::trace::{record, CallTimings};
 use ce_collm::model::manifest::test_manifest;
+use ce_collm::net::codec::FrameCodec;
 use ce_collm::net::profiles::LinkProfile;
+use ce_collm::net::transport::{TcpTransport, Transport};
 use ce_collm::quant::{self, Precision};
 use ce_collm::runtime::mock::{MockCloud, MockEdge, MockOracle};
 use ce_collm::runtime::traits::{BatchItem, CloudEngine, EdgeEngine};
@@ -91,6 +93,61 @@ fn main() {
         quant::unpack_into(v.payload, v.precision, &mut scratch).unwrap();
         scratch.len()
     }));
+    // the reactor's framing layer: a 4-frame chunk fed and drained
+    let mut wire4 = Vec::new();
+    for _ in 0..4 {
+        wire4.extend_from_slice(&ce_collm::net::codec::encode_frame(&enc));
+    }
+    results.push(bench("codec feed 4-frame chunk + drain", 0.3 * scale, || {
+        let mut c = FrameCodec::new();
+        let mut got = 0usize;
+        let mut next = c.feed(&wire4).unwrap();
+        while let Some(f) = next {
+            got += f.len();
+            next = c.next_frame().unwrap();
+        }
+        got
+    }));
+
+    println!("\n== tcp frame send (localhost, drained by sink threads) ==");
+    {
+        use std::io::Write;
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let sink = std::thread::spawn(move || {
+            let drainers: Vec<_> = listener
+                .incoming()
+                .take(2)
+                .map(|s| {
+                    let mut s = s.unwrap();
+                    std::thread::spawn(move || {
+                        use std::io::Read;
+                        let mut buf = [0u8; 65536];
+                        while matches!(s.read(&mut buf), Ok(n) if n > 0) {}
+                    })
+                })
+                .collect();
+            for d in drainers {
+                let _ = d.join();
+            }
+        });
+        // the pre-codec transport issued two write syscalls per frame
+        // (prefix, then payload); the codec path queues them contiguous
+        // and issues one — same ~286-byte UploadHidden frame on both
+        let mut legacy = std::net::TcpStream::connect(addr).unwrap();
+        legacy.set_nodelay(true).unwrap();
+        let mut codec_path = TcpTransport::connect(&addr.to_string()).unwrap();
+        results.push(bench("tcp send: prefix+payload (2 writes, legacy)", 0.3 * scale, || {
+            legacy.write_all(&(enc.len() as u32).to_le_bytes()).unwrap();
+            legacy.write_all(&enc).unwrap();
+        }));
+        results.push(bench("tcp send: codec single buffer (1 write)", 0.3 * scale, || {
+            codec_path.send(&enc).unwrap();
+        }));
+        drop(legacy);
+        drop(codec_path);
+        let _ = sink.join();
+    }
 
     println!("\n== exit policy ==");
     let pol = TokenPolicy::new(ExitPolicy::Threshold(0.8), AblationFlags::default());
@@ -171,7 +228,7 @@ fn main() {
                     hiddens: vec![0.5; 8 * d],
                 })
                 .unwrap();
-            let (reply, rx) = std::sync::mpsc::channel();
+            let (tx, rx) = std::sync::mpsc::channel();
             router
                 .send(1, SchedMsg::Infer {
                     device: 1,
@@ -180,7 +237,7 @@ fn main() {
                     pos: 7,
                     prompt_len: 8,
                     deadline: None,
-                    reply,
+                    reply: Reply::channel(tx),
                 })
                 .unwrap();
             rx.recv().unwrap().unwrap()
@@ -203,7 +260,7 @@ fn main() {
             }
             let rxs: Vec<_> = (0..4u64)
                 .map(|dev| {
-                    let (reply, rx) = std::sync::mpsc::channel();
+                    let (tx, rx) = std::sync::mpsc::channel();
                     router
                         .send(dev, SchedMsg::Infer {
                             device: dev,
@@ -212,7 +269,7 @@ fn main() {
                             pos: 7,
                             prompt_len: 8,
                             deadline: None,
-                            reply,
+                            reply: Reply::channel(tx),
                         })
                         .unwrap();
                     rx

@@ -115,6 +115,44 @@ impl DeploymentConfig {
     }
 }
 
+/// Knobs for the cloud's event-driven connection reactor
+/// ([`crate::net::reactor`]): one thread owns every cloud-side socket,
+/// so per-connection resource bounds are what protect the whole server.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReactorConfig {
+    /// Maximum simultaneously registered connections; connections
+    /// accepted beyond this are dropped immediately (the edge sees a
+    /// closed socket and degrades to local exits).  Each device costs
+    /// two (the dual API's upload + infer channels).
+    pub max_conns: usize,
+    /// Per-connection write-queue cap in bytes.  A reader too slow to
+    /// drain its token responses past this backlog is evicted (closed)
+    /// rather than allowed to buffer the server into the ground.
+    pub write_queue_cap: usize,
+    /// Scheduler backpressure threshold: when a worker's undrained queue
+    /// ([`crate::coordinator::scheduler::Router::queue_depth`]) exceeds
+    /// this many messages, the reactor pauses *reading* from that
+    /// worker's connections until it catches up, pushing the backlog
+    /// into the kernel's TCP flow control instead of heap memory.
+    pub worker_queue_cap: usize,
+    /// Seconds a freshly accepted connection may sit without completing
+    /// its `Hello` handshake before it is closed.  Prevents silent
+    /// sockets from squatting on `max_conns` slots and locking real
+    /// devices out.
+    pub hello_timeout_s: f64,
+}
+
+impl Default for ReactorConfig {
+    fn default() -> Self {
+        Self {
+            max_conns: 4096,
+            write_queue_cap: 4 << 20,
+            worker_queue_cap: 4096,
+            hello_timeout_s: 10.0,
+        }
+    }
+}
+
 /// Cloud serving-side configuration (the scheduler's worker pool).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CloudConfig {
@@ -135,11 +173,19 @@ pub struct CloudConfig {
     /// while other devices' pending tokens ride along in every one of
     /// them, so a chatty device cannot starve the batch.
     pub max_catchup_per_pass: usize,
+    /// Connection-reactor bounds (max connections, write-queue cap,
+    /// read-pause backpressure threshold).
+    pub reactor: ReactorConfig,
 }
 
 impl Default for CloudConfig {
     fn default() -> Self {
-        Self { workers: 1, max_park_s: 30.0, max_catchup_per_pass: 32 }
+        Self {
+            workers: 1,
+            max_park_s: 30.0,
+            max_catchup_per_pass: 32,
+            reactor: ReactorConfig::default(),
+        }
     }
 }
 
@@ -184,6 +230,14 @@ mod tests {
     #[test]
     fn cloud_config_has_a_positive_fairness_bound() {
         assert!(CloudConfig::default().max_catchup_per_pass >= 1);
+    }
+
+    #[test]
+    fn reactor_defaults_are_sane() {
+        let r = ReactorConfig::default();
+        assert!(r.max_conns >= 2, "room for at least one dual-API device");
+        assert!(r.write_queue_cap > 0 && r.worker_queue_cap > 0);
+        assert!(r.hello_timeout_s > 0.0, "silent sockets must not squat forever");
     }
 
     #[test]

@@ -1,52 +1,64 @@
 //! Cloud server (paper §4.2): receives hidden-state uploads, manages
 //! per-device context, and serves single-token inference requests.
 //!
-//! Thread model (see [`crate::coordinator::scheduler`] for the serving
-//! core itself):
+//! Thread model — `workers + 2` threads total, independent of how many
+//! devices are connected (see [`crate::coordinator::scheduler`] for the
+//! serving core and [`crate::net::reactor`] for the connection layer):
 //! * a **worker pool** ([`Scheduler`]) — each worker thread owns its own
 //!   `CloudEngine` sessions and content-manager shard for the devices
 //!   assigned to it (`device_id % workers`; PJRT handles are `!Send`, so
 //!   each worker builds its engines on its own thread).  An infer request
 //!   whose uploads have not landed parks on its worker and is woken by
 //!   the covering `Upload` — purely event-driven, no polling;
-//! * one **acceptor** thread takes TCP connections;
-//! * one thread per connection decodes frames and routes work to the
-//!   owning worker through a [`Router`].
+//! * one **acceptor** thread takes TCP connections and registers them
+//!   with the reactor;
+//! * one **reactor** thread owns *all* connection sockets (nonblocking,
+//!   `poll(2)`-multiplexed), decodes frames through the shared
+//!   [`FrameCodec`](crate::net::codec::FrameCodec), routes work to the
+//!   owning worker through a [`Router`], and writes responses back as
+//!   each socket accepts them.  The per-connection
+//!   `std::thread::spawn` of earlier revisions is gone: a thousand edge
+//!   devices now cost two thousand registered sockets, not two thousand
+//!   blocked threads.
 //!
 //! The paper's "Dual API" maps to two connections per device (upload
 //! channel + infer channel), each announced by a `Hello`.  Because the
 //! channels are independent, an `InferRequest` may overtake its own
 //! uploads in flight; the scheduler's parking makes that race benign.
+//!
+//! Shutdown is deterministic: [`CloudServer::shutdown`] stops the
+//! acceptor, then joins the reactor — which closes every registered
+//! socket before exiting — then drains the worker pool.  When it
+//! returns, no connection can still produce a response.
 
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::config::CloudConfig;
-use crate::coordinator::protocol::{Channel, Message, NO_REQ};
 use crate::model::manifest::ModelDims;
-use crate::net::transport::{TcpTransport, Transport};
-use crate::quant;
+use crate::net::reactor::{Reactor, ReactorStats};
 
 pub use crate::coordinator::scheduler::{
-    CloudStats, FactoryBuilder, Router, SchedMsg, Scheduler, SessionFactory, TokenOut,
+    CloudStats, FactoryBuilder, Reply, Router, SchedMsg, Scheduler, SessionFactory, TokenOut,
 };
 
 /// A running cloud server bound to a TCP listener.
 pub struct CloudServer {
     pub addr: std::net::SocketAddr,
     scheduler: Option<Scheduler>,
+    reactor: Option<Reactor>,
     stop: Arc<AtomicBool>,
     acceptor: Option<std::thread::JoinHandle<()>>,
 }
 
 impl CloudServer {
-    /// Spawn the server with `cfg.workers` serving threads.  `builder`
-    /// runs on every worker thread and constructs that worker's engine
-    /// factory there (PJRT objects never cross threads).
+    /// Spawn the server with `cfg.workers` serving threads plus the
+    /// acceptor and the connection reactor.  `builder` runs on every
+    /// worker thread and constructs that worker's engine factory there
+    /// (PJRT objects never cross threads).
     pub fn spawn<B>(
         listener: TcpListener,
         dims: ModelDims,
@@ -58,10 +70,11 @@ impl CloudServer {
     {
         let addr = listener.local_addr()?;
         let scheduler = Scheduler::spawn(dims.clone(), cfg, Arc::new(builder))?;
+        let reactor = Reactor::spawn(scheduler.router(), dims, cfg.reactor)?;
+        let conns = reactor.handle();
 
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = Arc::clone(&stop);
-        let conn_router = scheduler.router();
         let acceptor = std::thread::Builder::new().name("cloud-accept".into()).spawn(move || {
             for stream in listener.incoming() {
                 if stop2.load(Ordering::SeqCst) {
@@ -69,33 +82,52 @@ impl CloudServer {
                 }
                 match stream {
                     Ok(s) => {
-                        let router = conn_router.clone();
-                        let dims = dims.clone();
-                        std::thread::spawn(move || {
-                            if let Err(e) = handle_connection(s, router, &dims) {
-                                log::debug!("connection closed: {e:#}");
-                            }
-                        });
+                        if conns.register(s).is_err() {
+                            break; // reactor gone: the server is tearing down
+                        }
                     }
                     Err(e) => log::warn!("accept error: {e}"),
                 }
             }
         })?;
 
-        Ok(CloudServer { addr, scheduler: Some(scheduler), stop, acceptor: Some(acceptor) })
+        Ok(CloudServer {
+            addr,
+            scheduler: Some(scheduler),
+            reactor: Some(reactor),
+            stop,
+            acceptor: Some(acceptor),
+        })
     }
 
     pub fn stats(&self) -> Result<CloudStats> {
         self.scheduler.as_ref().context("scheduler gone")?.stats()
     }
 
-    /// Stop accepting and shut down the worker pool; returns final stats.
+    /// Connection-layer counters (open connections, evictions, frames).
+    pub fn reactor_stats(&self) -> Result<ReactorStats> {
+        self.reactor.as_ref().context("reactor gone")?.handle().stats()
+    }
+
+    /// Stop accepting, close every connection, and shut down the worker
+    /// pool; returns final serving stats.  Deterministic: when this
+    /// returns, every socket the server ever registered is closed.
     pub fn shutdown(mut self) -> CloudStats {
         self.stop.store(true, Ordering::SeqCst);
         // unblock the acceptor
         let _ = TcpStream::connect(self.addr);
         if let Some(a) = self.acceptor.take() {
             let _ = a.join();
+        }
+        if let Some(r) = self.reactor.take() {
+            let rs = r.shutdown();
+            log::debug!(
+                "reactor closed: {} conns opened, {} evicted slow, {} frames in / {} out",
+                rs.conns_opened,
+                rs.evicted_slow,
+                rs.frames_in,
+                rs.frames_out
+            );
         }
         self.scheduler.take().map(Scheduler::shutdown).unwrap_or_default()
     }
@@ -104,110 +136,10 @@ impl CloudServer {
 impl Drop for CloudServer {
     fn drop(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        // dropping the scheduler tells every worker to stop
+        // dropping the reactor closes every connection; dropping the
+        // scheduler tells every worker to stop
+        self.reactor.take();
         self.scheduler.take();
         let _ = TcpStream::connect(self.addr);
-    }
-}
-
-/// Handle one client connection (either channel of the dual API).
-fn handle_connection(stream: TcpStream, router: Router, dims: &ModelDims) -> Result<()> {
-    let mut t = TcpTransport::new(stream)?;
-    let hello = Message::decode(&t.recv()?)?;
-    let (device_id, session, channel) = match hello {
-        Message::Hello { device_id, session, channel } => (device_id, session, channel),
-        other => anyhow::bail!("expected Hello, got {other:?}"),
-    };
-    if channel == Channel::Upload {
-        // A fresh upload channel means a fresh client session: clear any
-        // state (and end-request tombstones) left by a previous process
-        // that used this device id, and pin the device to this session so
-        // stragglers from the old connections are fenced out.  Sent
-        // before the Ack so it is queued ahead of everything the new
-        // session will send.
-        router
-            .send(device_id, SchedMsg::Reset { device: device_id, session })
-            .context("scheduler gone")?;
-    }
-    t.send(&Message::Ack.encode())?;
-    log::debug!("device {device_id} opened {channel:?} channel (session {session:x})");
-
-    loop {
-        let frame = match t.recv() {
-            Ok(f) => f,
-            Err(_) => return Ok(()), // peer closed
-        };
-        // Zero-copy fast path for the dominant per-token frame: the
-        // payload stays borrowed from the frame buffer, so the owned
-        // `decode`'s payload copy disappears from the upload hot path.
-        // The unpacked vector itself must still be allocated — it is
-        // moved across threads into the scheduler (and from there into
-        // the content manager without further copies).
-        if let Some(v) = Message::decode_upload(&frame)? {
-            let hiddens = quant::unpack(v.payload, v.precision)?;
-            anyhow::ensure!(hiddens.len() % dims.d_model == 0, "ragged upload");
-            router
-                .send(
-                    v.device_id,
-                    SchedMsg::Upload {
-                        device: v.device_id,
-                        session,
-                        req_id: v.req_id,
-                        start_pos: v.start_pos,
-                        prompt_len: v.prompt_len,
-                        hiddens,
-                    },
-                )
-                .context("scheduler gone")?;
-            // uploads are fire-and-forget (parallel with edge compute);
-            // no ack so the uploader never stalls the edge
-            continue;
-        }
-        match Message::decode(&frame)? {
-            Message::InferRequest { device_id, req_id, pos, prompt_len, deadline_ms } => {
-                let deadline = (deadline_ms > 0)
-                    .then(|| Instant::now() + Duration::from_millis(deadline_ms as u64));
-                let (reply_tx, reply_rx) = std::sync::mpsc::channel();
-                router
-                    .send(
-                        device_id,
-                        SchedMsg::Infer {
-                            device: device_id,
-                            session,
-                            req_id,
-                            pos,
-                            prompt_len,
-                            deadline,
-                            reply: reply_tx,
-                        },
-                    )
-                    .context("scheduler gone")?;
-                match reply_rx.recv().context("scheduler reply")? {
-                    Ok(out) => t.send(
-                        &Message::TokenResponse {
-                            req_id,
-                            pos,
-                            token: out.token,
-                            conf: out.conf,
-                            compute_s: out.compute_s as f32,
-                        }
-                        .encode(),
-                    )?,
-                    Err(e) => {
-                        t.send(&Message::Error { req_id, pos, msg: format!("{e:#}") }.encode())?
-                    }
-                }
-            }
-            Message::EndSession { device_id, req_id } => {
-                router
-                    .send(device_id, SchedMsg::End { device: device_id, session, req_id })
-                    .context("scheduler gone")?;
-            }
-            other => {
-                let msg = format!("unexpected message on {channel:?} channel: {other:?}");
-                let _ = t.send(&Message::Error { req_id: NO_REQ, pos: NO_REQ, msg: msg.clone() }.encode());
-                anyhow::bail!(msg)
-            }
-        }
     }
 }

@@ -25,9 +25,10 @@ use anyhow::{Context, Result};
 
 use crate::config::DeploymentConfig;
 use crate::coordinator::policy::{ExitPoint, TokenPolicy};
-use crate::coordinator::protocol::{Channel, Message, NO_REQ};
+use crate::coordinator::protocol::{Channel, Message, NO_REQ, UPLOAD_HDR_LEN};
 use crate::metrics::{CostBreakdown, RunCounters};
 use crate::model::tokenizer::Tokenizer;
+use crate::net::codec::frame_wire_len;
 use crate::net::transport::Transport;
 use crate::quant::{self, Precision};
 use crate::runtime::traits::EdgeEngine;
@@ -260,7 +261,10 @@ impl<E: EdgeEngine> EdgeClient<E> {
         // parallel upload of prompt hidden states (Algorithm 1 line 12)
         if policy.uses_cloud() && flags.parallel_upload && flags.content_manager {
             let payload = quant::pack(&pre.h1, precision);
-            counters.bytes_up += payload.len() as u64;
+            // full wire cost (frame prefix + message header + payload):
+            // the same arithmetic the DES harness prices, so simulated
+            // and measured byte totals agree exactly
+            counters.bytes_up += frame_wire_len(UPLOAD_HDR_LEN + payload.len()) as u64;
             self.link_ref()?.enqueue_upload(Message::UploadHidden {
                 device_id,
                 req_id,
@@ -300,7 +304,7 @@ impl<E: EdgeEngine> EdgeClient<E> {
             }
             if policy.uses_cloud() && flags.parallel_upload && flags.content_manager {
                 let payload = quant::pack(&s1.h1, precision);
-                counters.bytes_up += payload.len() as u64;
+                counters.bytes_up += frame_wire_len(UPLOAD_HDR_LEN + payload.len()) as u64;
                 self.link_ref()?.enqueue_upload(Message::UploadHidden {
                     device_id,
                     req_id,
@@ -513,7 +517,7 @@ impl<E: EdgeEngine> EdgeClient<E> {
                 all.len()
             );
             let payload = quant::pack(&all, precision);
-            counters.bytes_up += payload.len() as u64;
+            counters.bytes_up += frame_wire_len(UPLOAD_HDR_LEN + payload.len()) as u64;
             let link = self.link.as_mut().context("collaborative policy without cloud link")?;
             link.infer.send(
                 &Message::UploadHidden {
@@ -546,7 +550,7 @@ impl<E: EdgeEngine> EdgeClient<E> {
             deadline_ms,
         };
         let frame = req.encode();
-        counters.bytes_up += frame.len() as u64;
+        counters.bytes_up += frame_wire_len(frame.len()) as u64;
         link.infer.send(&frame)?;
         loop {
             let frame = match deadline {
@@ -559,7 +563,7 @@ impl<E: EdgeEngine> EdgeClient<E> {
                 },
                 None => link.infer.recv()?,
             };
-            counters.bytes_down += frame.len() as u64;
+            counters.bytes_down += frame_wire_len(frame.len()) as u64;
             let rtt = t0.elapsed().as_secs_f64();
             match Message::decode(&frame)? {
                 Message::TokenResponse { req_id: r, pos: p, token, conf, compute_s } => {

@@ -65,6 +65,17 @@ pub enum Message {
 /// Sentinel `req_id`/`pos` for errors not tied to a request.
 pub const NO_REQ: u32 = u32::MAX;
 
+/// Exact encoded size of an `UploadHidden` with an empty payload (tag +
+/// device + req + start + count + prompt_len + precision + payload_len).
+/// The edge's byte counters and the DES harness both price messages
+/// from these constants, so simulated and measured wire bytes agree
+/// exactly; guarded against `encode()` by a test.
+pub const UPLOAD_HDR_LEN: usize = 30;
+/// Exact encoded `InferRequest` size.
+pub const INFER_REQ_LEN: usize = 25;
+/// Exact encoded `TokenResponse` size.
+pub const TOKEN_RESP_LEN: usize = 21;
+
 /// Borrowed view of an `UploadHidden` frame: identical fields to
 /// [`Message::UploadHidden`], but the payload borrows from the frame
 /// buffer instead of being copied into a fresh `Vec`.  The serve path
@@ -337,6 +348,25 @@ mod tests {
         roundtrip(Message::Ack);
         roundtrip(Message::Error { req_id: 9, pos: 55, msg: "kaboom — ω".into() });
         roundtrip(Message::Error { req_id: super::NO_REQ, pos: super::NO_REQ, msg: "hello?".into() });
+    }
+
+    #[test]
+    fn header_len_constants_match_encode() {
+        let up = Message::UploadHidden {
+            device_id: 1,
+            req_id: 1,
+            start_pos: 0,
+            count: 1,
+            prompt_len: 1,
+            precision: Precision::F16,
+            payload: vec![],
+        };
+        assert_eq!(up.encode().len(), UPLOAD_HDR_LEN);
+        let rq =
+            Message::InferRequest { device_id: 1, req_id: 1, pos: 0, prompt_len: 1, deadline_ms: 0 };
+        assert_eq!(rq.encode().len(), INFER_REQ_LEN);
+        let tk = Message::TokenResponse { req_id: 1, pos: 0, token: 0, conf: 0.0, compute_s: 0.0 };
+        assert_eq!(tk.encode().len(), TOKEN_RESP_LEN);
     }
 
     #[test]

@@ -44,6 +44,7 @@
 //!   deadline; with nothing parked the loop blocks on the next message.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -73,6 +74,31 @@ pub struct TokenOut {
     pub compute_s: f64,
 }
 
+/// Single-use completion sink for one infer request.  The blocking path
+/// wraps an mpsc sender ([`Reply::channel`]); the reactor wraps a closure
+/// that posts a completion record and wakes its poll loop ([`Reply::new`]).
+/// Dropping a `Reply` without calling [`Reply::send`] signals "never
+/// answered" to whoever holds the other end (a channel-backed reply makes
+/// the receiver's `recv` fail, exactly like the old dropped sender did).
+pub struct Reply(Box<dyn FnOnce(Result<TokenOut>) + Send>);
+
+impl Reply {
+    pub fn new(f: impl FnOnce(Result<TokenOut>) + Send + 'static) -> Self {
+        Reply(Box::new(f))
+    }
+
+    /// The classic blocking shape: the caller parks on `rx.recv()`.
+    pub fn channel(tx: Sender<Result<TokenOut>>) -> Self {
+        Self::new(move |out| {
+            let _ = tx.send(out);
+        })
+    }
+
+    pub fn send(self, out: Result<TokenOut>) {
+        (self.0)(out)
+    }
+}
+
 /// Work items for the scheduler.
 ///
 /// `session` is the connection-pair nonce from the `Hello` handshake
@@ -100,7 +126,7 @@ pub enum SchedMsg {
         /// never arrive (e.g. the upload connection died) fails with an
         /// error instead of wedging the connection.
         deadline: Option<Instant>,
-        reply: Sender<Result<TokenOut>>,
+        reply: Reply,
     },
     /// `EndSession` for one finished request.  Requests are ended by id:
     /// a newer request's uploads that raced ahead on the upload
@@ -156,10 +182,16 @@ impl CloudStats {
 }
 
 /// Cheap cloneable handle routing device-addressed messages to the worker
-/// that owns the device.  Connection threads each hold their own clone.
+/// that owns the device.  The reactor (and any connection-side code)
+/// holds its own clone.
 #[derive(Clone)]
 pub struct Router {
     txs: Vec<Sender<SchedMsg>>,
+    /// Messages sent but not yet taken off each worker's queue — the
+    /// reactor's backpressure signal (it pauses reading from sockets
+    /// whose owning worker has fallen too far behind, instead of
+    /// buffering unboundedly).
+    depths: Vec<Arc<AtomicUsize>>,
 }
 
 impl Router {
@@ -174,7 +206,27 @@ impl Router {
 
     /// Route one message to the worker owning `device`.
     pub fn send(&self, device: u64, msg: SchedMsg) -> Result<()> {
-        self.txs[self.worker_for(device)].send(msg).map_err(|_| anyhow!("scheduler worker gone"))
+        self.send_to(self.worker_for(device), msg)
+    }
+
+    /// Route one message to worker `w` directly, keeping the queue-depth
+    /// gauge consistent (every enqueue counted; workers decrement on
+    /// dequeue).  Also carries the scheduler's own control traffic.
+    fn send_to(&self, w: usize, msg: SchedMsg) -> Result<()> {
+        self.depths[w].fetch_add(1, Ordering::Relaxed);
+        if self.txs[w].send(msg).is_err() {
+            self.depths[w].fetch_sub(1, Ordering::Relaxed);
+            return Err(anyhow!("scheduler worker gone"));
+        }
+        Ok(())
+    }
+
+    /// Messages queued to worker `w` and not yet dequeued by it.  A
+    /// transient gauge: exactness only matters at the extremes (0 =
+    /// drained, large = the worker is drowning), which is what the
+    /// reactor's read-pause threshold consumes.
+    pub fn queue_depth(&self, w: usize) -> usize {
+        self.depths[w].load(Ordering::Relaxed)
     }
 }
 
@@ -192,11 +244,14 @@ impl Scheduler {
         let max_park = Duration::from_secs_f64(cfg.max_park_s.max(0.001));
         let max_catchup = cfg.max_catchup_per_pass.max(1);
         let mut txs = Vec::with_capacity(workers);
+        let mut depths = Vec::with_capacity(workers);
         let mut handles = Vec::with_capacity(workers);
         for w in 0..workers {
             let (tx, rx) = channel::<SchedMsg>();
+            let depth = Arc::new(AtomicUsize::new(0));
             let builder = Arc::clone(&builder);
             let dims = dims.clone();
+            let wdepth = Arc::clone(&depth);
             let handle = std::thread::Builder::new()
                 .name(format!("cloud-worker-{w}"))
                 .spawn(move || {
@@ -207,12 +262,13 @@ impl Scheduler {
                             return CloudStats::default();
                         }
                     };
-                    Worker::new(dims, factory, max_park, max_catchup).run(rx)
+                    Worker::new(dims, factory, max_park, max_catchup, wdepth).run(rx)
                 })?;
             txs.push(tx);
+            depths.push(depth);
             handles.push(handle);
         }
-        Ok(Scheduler { router: Router { txs }, handles })
+        Ok(Scheduler { router: Router { txs, depths }, handles })
     }
 
     pub fn router(&self) -> Router {
@@ -222,9 +278,9 @@ impl Scheduler {
     /// Aggregate statistics across the pool.
     pub fn stats(&self) -> Result<CloudStats> {
         let mut total = CloudStats::default();
-        for tx in &self.router.txs {
+        for w in 0..self.router.workers() {
             let (reply, rx) = channel();
-            tx.send(SchedMsg::Stats { reply }).map_err(|_| anyhow!("scheduler worker gone"))?;
+            self.router.send_to(w, SchedMsg::Stats { reply })?;
             total.merge(&rx.recv().context("worker stats reply")?);
         }
         Ok(total)
@@ -232,8 +288,8 @@ impl Scheduler {
 
     /// Stop every worker and return the summed final statistics.
     pub fn shutdown(mut self) -> CloudStats {
-        for tx in &self.router.txs {
-            let _ = tx.send(SchedMsg::Shutdown);
+        for w in 0..self.router.workers() {
+            let _ = self.router.send_to(w, SchedMsg::Shutdown);
         }
         let mut total = CloudStats::default();
         for handle in self.handles.drain(..) {
@@ -246,8 +302,8 @@ impl Scheduler {
 impl Drop for Scheduler {
     fn drop(&mut self) {
         // idempotent: workers already gone just drop the message
-        for tx in &self.router.txs {
-            let _ = tx.send(SchedMsg::Shutdown);
+        for w in 0..self.router.workers() {
+            let _ = self.router.send_to(w, SchedMsg::Shutdown);
         }
     }
 }
@@ -268,7 +324,7 @@ struct Parked {
     /// Effective expiry: the client's deadline capped by the worker's
     /// max-park bound, so every parked request eventually resolves.
     deadline: Instant,
-    reply: Sender<Result<TokenOut>>,
+    reply: Reply,
 }
 
 /// Most messages one greedy drain takes off the queue before the worker
@@ -289,6 +345,9 @@ struct Worker {
     /// Fairness bound: catch-up positions one device may put into a
     /// single padded pass ([`CloudConfig::max_catchup_per_pass`]).
     max_catchup: usize,
+    /// Shared with [`Router::queue_depth`]: decremented once per message
+    /// this worker takes off its queue.
+    depth: Arc<AtomicUsize>,
     stats: CloudStats,
 }
 
@@ -298,6 +357,7 @@ impl Worker {
         factory: SessionFactory,
         max_park: Duration,
         max_catchup: usize,
+        depth: Arc<AtomicUsize>,
     ) -> Worker {
         Worker {
             cm: ContentManager::new(dims.d_model),
@@ -307,6 +367,7 @@ impl Worker {
             session_of: HashMap::new(),
             max_park,
             max_catchup,
+            depth,
             stats: CloudStats { workers: 1, ..CloudStats::default() },
         }
     }
@@ -316,6 +377,11 @@ impl Worker {
         session != 0 && self.session_of.get(&device).is_some_and(|&cur| cur != session)
     }
 
+    /// One message dequeued: keep [`Router::queue_depth`] honest.
+    fn dequeued(&self) {
+        self.depth.fetch_sub(1, Ordering::Relaxed);
+    }
+
     fn run(mut self, rx: Receiver<SchedMsg>) -> CloudStats {
         'serve: loop {
             // Block for the next message; with parked deadlines armed,
@@ -323,13 +389,19 @@ impl Worker {
             let msg = match self.next_deadline() {
                 Some(deadline) => {
                     match rx.recv_timeout(deadline.saturating_duration_since(Instant::now())) {
-                        Ok(m) => Some(m),
+                        Ok(m) => {
+                            self.dequeued();
+                            Some(m)
+                        }
                         Err(RecvTimeoutError::Timeout) => None,
                         Err(RecvTimeoutError::Disconnected) => break,
                     }
                 }
                 None => match rx.recv() {
-                    Ok(m) => Some(m),
+                    Ok(m) => {
+                        self.dequeued();
+                        Some(m)
+                    }
                     Err(_) => break,
                 },
             };
@@ -351,6 +423,7 @@ impl Worker {
                         }
                         match rx.try_recv() {
                             Ok(m) => {
+                                self.dequeued();
                                 msg = m;
                                 drained += 1;
                             }
@@ -373,6 +446,7 @@ impl Worker {
                         while extra < MAX_DRAIN {
                             match rx.try_recv() {
                                 Ok(m) => {
+                                    self.dequeued();
                                     if !self.handle(m) {
                                         break 'serve;
                                     }

@@ -26,12 +26,17 @@ use crate::net::profiles::LinkProfile;
 use crate::net::simulated::SimLink;
 use crate::util::rng::Rng;
 
-/// Fixed protocol sizes (message header bytes; payloads added on top).
-const UPLOAD_HDR: usize = 30;
-/// `InferRequest`: tag + device + req + pos + prompt_len + deadline_ms.
-const REQ_BYTES: usize = 25;
-/// `TokenResponse`: tag + req + pos + token + conf + compute_s.
-const RESP_BYTES: usize = 21;
+use crate::coordinator::protocol::{INFER_REQ_LEN, TOKEN_RESP_LEN, UPLOAD_HDR_LEN};
+use crate::net::codec::frame_wire_len;
+
+/// Fixed wire sizes (codec frame prefix + exact message header bytes;
+/// payloads added on top), derived from the protocol's encoded-length
+/// constants through [`crate::net::codec::frame_wire_len`] — the same
+/// arithmetic the live edge counters use, so simulated and measured
+/// byte totals agree exactly.
+const UPLOAD_HDR: usize = frame_wire_len(UPLOAD_HDR_LEN);
+const REQ_BYTES: usize = frame_wire_len(INFER_REQ_LEN);
+const RESP_BYTES: usize = frame_wire_len(TOKEN_RESP_LEN);
 
 /// Deployment strategy to replay.
 #[derive(Debug, Clone, Copy, PartialEq)]

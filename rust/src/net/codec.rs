@@ -1,0 +1,429 @@
+//! Sans-I/O framing codec: the single place the wire format
+//! (`u32 LE payload length | payload`) is produced and parsed.
+//!
+//! The codec performs **no I/O**.  Callers push whatever bytes their
+//! socket happened to deliver through [`FrameCodec::feed`] and pop
+//! complete frames; on the write side they queue frames with
+//! [`FrameCodec::enqueue_frame`] and drain [`FrameCodec::writable_bytes`]
+//! into the socket at whatever pace it accepts, acknowledging progress
+//! with [`FrameCodec::consume_written`].  That inversion is what lets
+//! one event-driven thread ([`crate::net::reactor`]) own thousands of
+//! nonblocking sockets while the blocking adapters in
+//! [`crate::net::transport`] wrap the very same parser — the protocol
+//! framing exists exactly once.
+//!
+//! Properties:
+//! * **Incremental**: bytes may arrive one at a time or many frames at
+//!   once; partial frames persist across `feed` calls, so a read timeout
+//!   mid-frame loses nothing (the blocking transports exploit this for
+//!   deadline-bounded receives that can resume).
+//! * **Early bounds check**: [`MAX_FRAME`] is enforced as soon as the
+//!   four length bytes are visible — a corrupt length prefix fails the
+//!   stream before any body bytes are buffered.
+//! * **Single-buffer writes**: the length prefix and payload are queued
+//!   contiguously, so one `write` syscall covers both (and possibly a
+//!   whole run of queued frames) where the old transport issued two.
+//! * **Backpressure-aware**: [`FrameCodec::pending_out`] exposes the
+//!   unflushed byte count, which the reactor compares against its
+//!   write-queue cap to evict slow readers.
+
+use anyhow::{ensure, Result};
+
+/// Maximum accepted frame (guards against corrupt length prefixes).
+pub const MAX_FRAME: usize = 64 << 20;
+
+/// Bytes of framing per message: the `u32` little-endian length prefix.
+pub const FRAME_HEADER: usize = 4;
+
+/// Largest buffer capacity a drained codec keeps around.  One near-
+/// `MAX_FRAME` frame must not pin 64 MiB per connection for the rest of
+/// its life; past this, drained buffers are released to the allocator.
+const RETAIN_CAP: usize = 256 << 10;
+
+/// Wire bytes occupied by a frame carrying `payload_len` payload bytes.
+/// The DES harness uses this so simulated wire costs track the real
+/// codec's framing.
+pub const fn frame_wire_len(payload_len: usize) -> usize {
+    FRAME_HEADER + payload_len
+}
+
+/// The length prefix for a frame carrying `payload_len` payload bytes —
+/// the one place the prefix encoding is written down.
+pub fn frame_prefix(payload_len: usize) -> [u8; FRAME_HEADER] {
+    (payload_len as u32).to_le_bytes()
+}
+
+/// Encode one frame into a fresh buffer (prefix + payload, contiguous).
+/// One-shot convenience for paths that do not keep a codec around.
+pub fn encode_frame(payload: &[u8]) -> Vec<u8> {
+    let mut b = Vec::with_capacity(FRAME_HEADER + payload.len());
+    b.extend_from_slice(&frame_prefix(payload.len()));
+    b.extend_from_slice(payload);
+    b
+}
+
+/// Incremental, sans-I/O frame parser + write queue.  See the module
+/// docs for the contract.
+#[derive(Debug, Default)]
+pub struct FrameCodec {
+    /// Received-but-unparsed bytes; `in_pos` is the parse cursor.
+    in_buf: Vec<u8>,
+    in_pos: usize,
+    /// Queued-but-unwritten wire bytes; `out_pos` is the flush cursor.
+    out_buf: Vec<u8>,
+    out_pos: usize,
+    frames_in: u64,
+    frames_out: u64,
+    /// Payload bytes enqueued so far (framing excluded) — feeds
+    /// [`crate::net::transport::Transport::bytes_sent`].
+    payload_bytes_out: u64,
+}
+
+impl FrameCodec {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    // -- read half ----------------------------------------------------------
+
+    /// Push freshly received bytes.  Returns the first frame they
+    /// complete (if any); drain the rest with [`Self::next_frame`].
+    /// An error poisons the stream: the length prefix can no longer be
+    /// trusted and the connection should be dropped.
+    pub fn feed(&mut self, bytes: &[u8]) -> Result<Option<Vec<u8>>> {
+        // compact before growing so a long-lived connection's buffer
+        // stays bounded by its largest in-flight frame
+        if self.in_pos > 0 {
+            self.in_buf.drain(..self.in_pos);
+            self.in_pos = 0;
+        }
+        self.in_buf.extend_from_slice(bytes);
+        self.next_frame()
+    }
+
+    /// Pop the next already-buffered complete frame.  `Ok(None)` means
+    /// more bytes are needed.
+    pub fn next_frame(&mut self) -> Result<Option<Vec<u8>>> {
+        let avail = self.in_buf.len() - self.in_pos;
+        if avail < FRAME_HEADER {
+            return Ok(None);
+        }
+        let len: [u8; FRAME_HEADER] =
+            self.in_buf[self.in_pos..self.in_pos + FRAME_HEADER].try_into().unwrap();
+        let n = u32::from_le_bytes(len) as usize;
+        // enforced mid-stream, before any body byte is buffered or even
+        // received — a poisoned prefix cannot make us allocate 4 GiB
+        ensure!(n <= MAX_FRAME, "frame length {n} exceeds limit");
+        if avail < FRAME_HEADER + n {
+            return Ok(None);
+        }
+        let start = self.in_pos + FRAME_HEADER;
+        let frame = self.in_buf[start..start + n].to_vec();
+        self.in_pos = start + n;
+        if self.in_pos == self.in_buf.len() {
+            self.in_pos = 0;
+            if self.in_buf.capacity() > RETAIN_CAP {
+                self.in_buf = Vec::new();
+            } else {
+                self.in_buf.clear();
+            }
+        }
+        self.frames_in += 1;
+        Ok(Some(frame))
+    }
+
+    /// Drain one received chunk into `out`, parsing whole frames
+    /// **directly from `bytes`** whenever the read buffer is empty — on
+    /// the bulk-ingest path (the reactor's 64 KiB socket reads) payload
+    /// bytes then go kernel → scratch → frame without a staging copy
+    /// through the codec's buffer.  Only an incomplete tail (or the
+    /// completion of a previously buffered partial frame) touches
+    /// `in_buf`.  Identical framing semantics to `feed`+`next_frame`.
+    pub fn feed_all(&mut self, bytes: &[u8], out: &mut Vec<Vec<u8>>) -> Result<()> {
+        // drain frames already completed in the buffer (covers callers
+        // mixing `feed` and `feed_all`); afterwards anything buffered is
+        // strictly a partial frame
+        while let Some(f) = self.next_frame()? {
+            out.push(f);
+        }
+        let mut rest = bytes;
+        // finish the buffered partial frame first (rare): hand over only
+        // the bytes it still needs, then fall through
+        while !rest.is_empty() && self.buffered_in() > 0 {
+            let take = self.bytes_to_boundary().min(rest.len());
+            if let Some(f) = self.feed(&rest[..take])? {
+                out.push(f);
+            }
+            rest = &rest[take..];
+        }
+        // hot path: whole frames straight out of the input slice
+        while rest.len() >= FRAME_HEADER {
+            let n =
+                u32::from_le_bytes(rest[..FRAME_HEADER].try_into().unwrap()) as usize;
+            ensure!(n <= MAX_FRAME, "frame length {n} exceeds limit");
+            if rest.len() < FRAME_HEADER + n {
+                break;
+            }
+            out.push(rest[FRAME_HEADER..FRAME_HEADER + n].to_vec());
+            self.frames_in += 1;
+            rest = &rest[FRAME_HEADER + n..];
+        }
+        // incomplete tail: buffer for the next read.  A tail with a
+        // visible length prefix was already validated by the loop above;
+        // in_buf is empty and compacted whenever control reaches here.
+        if !rest.is_empty() {
+            self.in_buf.extend_from_slice(rest);
+        }
+        Ok(())
+    }
+
+    /// How many more bytes the *pending* partial frame needs before a
+    /// frame boundary decision can advance: the rest of the length
+    /// prefix, or the rest of the announced body.
+    fn bytes_to_boundary(&self) -> usize {
+        let have = self.buffered_in();
+        if have < FRAME_HEADER {
+            return FRAME_HEADER - have;
+        }
+        let len: [u8; FRAME_HEADER] =
+            self.in_buf[self.in_pos..self.in_pos + FRAME_HEADER].try_into().unwrap();
+        // the prefix was validated against MAX_FRAME when it became
+        // visible; `.max(1)` keeps callers' take-loops finite even if
+        // the partial-frame invariant were ever violated
+        (FRAME_HEADER + u32::from_le_bytes(len) as usize).saturating_sub(have).max(1)
+    }
+
+    /// Bytes buffered on the read side that do not yet form a frame.
+    pub fn buffered_in(&self) -> usize {
+        self.in_buf.len() - self.in_pos
+    }
+
+    // -- write half ---------------------------------------------------------
+
+    /// Queue `payload` as one length-prefixed frame.  Prefix and payload
+    /// are contiguous in the write buffer, so the caller's next `write`
+    /// can cover both in a single syscall.
+    pub fn enqueue_frame(&mut self, payload: &[u8]) -> Result<()> {
+        ensure!(payload.len() <= MAX_FRAME, "frame too large: {}", payload.len());
+        if self.out_pos == self.out_buf.len() {
+            self.out_pos = 0;
+            if self.out_buf.capacity() > RETAIN_CAP {
+                self.out_buf = Vec::new();
+            } else {
+                self.out_buf.clear();
+            }
+        } else if self.out_pos > 64 * 1024 {
+            // long-lived partially-flushed queues: reclaim the flushed
+            // prefix so the buffer tracks the backlog, not the history
+            self.out_buf.drain(..self.out_pos);
+            self.out_pos = 0;
+        }
+        self.out_buf.extend_from_slice(&frame_prefix(payload.len()));
+        self.out_buf.extend_from_slice(payload);
+        self.frames_out += 1;
+        self.payload_bytes_out += payload.len() as u64;
+        Ok(())
+    }
+
+    /// Queued wire bytes not yet written to the socket.
+    pub fn writable_bytes(&self) -> &[u8] {
+        &self.out_buf[self.out_pos..]
+    }
+
+    /// Acknowledge that the first `n` bytes of [`Self::writable_bytes`]
+    /// reached the socket.
+    pub fn consume_written(&mut self, n: usize) {
+        debug_assert!(self.out_pos + n <= self.out_buf.len(), "consumed more than queued");
+        self.out_pos = (self.out_pos + n).min(self.out_buf.len());
+    }
+
+    /// Unflushed wire bytes — the reactor's slow-reader signal.
+    pub fn pending_out(&self) -> usize {
+        self.out_buf.len() - self.out_pos
+    }
+
+    // -- counters -----------------------------------------------------------
+
+    pub fn frames_decoded(&self) -> u64 {
+        self.frames_in
+    }
+
+    pub fn frames_enqueued(&self) -> u64 {
+        self.frames_out
+    }
+
+    /// Payload bytes enqueued so far (framing prefix excluded).
+    pub fn payload_bytes_enqueued(&self) -> u64 {
+        self.payload_bytes_out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wire(frames: &[&[u8]]) -> Vec<u8> {
+        let mut w = Vec::new();
+        for f in frames {
+            w.extend_from_slice(&encode_frame(f));
+        }
+        w
+    }
+
+    fn drain(c: &mut FrameCodec, first: Option<Vec<u8>>) -> Vec<Vec<u8>> {
+        let mut got = Vec::new();
+        let mut cur = first;
+        while let Some(f) = cur {
+            got.push(f);
+            cur = c.next_frame().unwrap();
+        }
+        got
+    }
+
+    #[test]
+    fn one_feed_many_frames() {
+        let mut c = FrameCodec::new();
+        let first = c.feed(&wire(&[b"alpha".as_slice(), b"", b"gamma"])).unwrap();
+        let got = drain(&mut c, first);
+        assert_eq!(got, vec![b"alpha".to_vec(), Vec::new(), b"gamma".to_vec()]);
+        assert_eq!(c.frames_decoded(), 3);
+        assert_eq!(c.buffered_in(), 0);
+    }
+
+    #[test]
+    fn byte_at_a_time_preserves_frames() {
+        let frames: Vec<&[u8]> = vec![b"x".as_slice(), b"a longer frame payload", b""];
+        let w = wire(&frames);
+        let mut c = FrameCodec::new();
+        let mut got = Vec::new();
+        for b in &w {
+            let first = c.feed(std::slice::from_ref(b)).unwrap();
+            got.extend(drain(&mut c, first));
+        }
+        let want: Vec<Vec<u8>> = frames.iter().map(|f| f.to_vec()).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn partial_frame_survives_across_feeds() {
+        let w = wire(&[b"split across reads"]);
+        let mut c = FrameCodec::new();
+        let (a, b) = w.split_at(7);
+        assert!(c.feed(a).unwrap().is_none());
+        assert_eq!(c.buffered_in(), 7);
+        let f = c.feed(b).unwrap().expect("frame completes");
+        assert_eq!(f, b"split across reads");
+    }
+
+    #[test]
+    fn oversized_length_rejected_before_body_arrives() {
+        let mut c = FrameCodec::new();
+        // only the poisoned prefix, no body: must already error
+        let bad = ((MAX_FRAME + 1) as u32).to_le_bytes();
+        assert!(c.feed(&bad).is_err());
+    }
+
+    #[test]
+    fn max_frame_boundary_accepted() {
+        let mut c = FrameCodec::new();
+        let payload = vec![7u8; 1024];
+        let f = c.feed(&encode_frame(&payload)).unwrap().unwrap();
+        assert_eq!(f, payload);
+        assert!(c.enqueue_frame(&vec![0u8; MAX_FRAME + 1]).is_err());
+    }
+
+    #[test]
+    fn write_half_roundtrips_through_read_half() {
+        let mut w = FrameCodec::new();
+        w.enqueue_frame(b"first").unwrap();
+        w.enqueue_frame(b"second frame").unwrap();
+        assert_eq!(w.frames_enqueued(), 2);
+        assert_eq!(w.payload_bytes_enqueued(), (5 + 12) as u64);
+        assert_eq!(w.pending_out(), 5 + 12 + 2 * FRAME_HEADER);
+
+        // drain the wire bytes in awkward chunks into a reader codec
+        let mut r = FrameCodec::new();
+        let mut got = Vec::new();
+        while w.pending_out() > 0 {
+            let chunk: Vec<u8> = w.writable_bytes().iter().take(3).copied().collect();
+            w.consume_written(chunk.len());
+            let first = r.feed(&chunk).unwrap();
+            got.extend(drain(&mut r, first));
+        }
+        assert_eq!(got, vec![b"first".to_vec(), b"second frame".to_vec()]);
+    }
+
+    #[test]
+    fn consume_written_partial_then_rest() {
+        let mut c = FrameCodec::new();
+        c.enqueue_frame(b"payload").unwrap();
+        let total = c.pending_out();
+        c.consume_written(3);
+        assert_eq!(c.pending_out(), total - 3);
+        let rest = c.writable_bytes().len();
+        c.consume_written(rest);
+        assert_eq!(c.pending_out(), 0);
+        // a fresh enqueue reuses the drained buffer
+        c.enqueue_frame(b"x").unwrap();
+        assert_eq!(c.pending_out(), FRAME_HEADER + 1);
+    }
+
+    #[test]
+    fn feed_all_handles_partial_boundaries() {
+        let mut w = Vec::new();
+        w.extend_from_slice(&encode_frame(b"first"));
+        w.extend_from_slice(&encode_frame(b"second frame"));
+        w.extend_from_slice(&encode_frame(b"third"));
+        let mut c = FrameCodec::new();
+        let mut out = Vec::new();
+        // split mid-header of frame 2, then mid-body of frame 3
+        c.feed_all(&w[..11], &mut out).unwrap();
+        c.feed_all(&w[11..30], &mut out).unwrap();
+        c.feed_all(&w[30..], &mut out).unwrap();
+        assert_eq!(
+            out,
+            vec![b"first".to_vec(), b"second frame".to_vec(), b"third".to_vec()]
+        );
+        assert_eq!(c.buffered_in(), 0);
+        assert_eq!(c.frames_decoded(), 3);
+    }
+
+    #[test]
+    fn feed_all_rejects_oversize_prefix_in_tail() {
+        let mut c = FrameCodec::new();
+        let mut out = Vec::new();
+        let mut w = encode_frame(b"ok");
+        w.extend_from_slice(&((MAX_FRAME + 1) as u32).to_le_bytes());
+        assert!(c.feed_all(&w, &mut out).is_err());
+        assert_eq!(out, vec![b"ok".to_vec()], "good frames before the poison still land");
+    }
+
+    #[test]
+    fn drained_buffers_release_oversized_capacity() {
+        let mut c = FrameCodec::new();
+        let big = vec![7u8; RETAIN_CAP + 4096];
+        let f = c.feed(&encode_frame(&big)).unwrap().unwrap();
+        assert_eq!(f.len(), big.len());
+        assert!(
+            c.in_buf.capacity() <= RETAIN_CAP,
+            "drained read buffer retained {} bytes",
+            c.in_buf.capacity()
+        );
+        c.enqueue_frame(&big).unwrap();
+        let n = c.pending_out();
+        c.consume_written(n);
+        c.enqueue_frame(b"x").unwrap();
+        assert!(
+            c.out_buf.capacity() <= RETAIN_CAP,
+            "drained write buffer retained {} bytes",
+            c.out_buf.capacity()
+        );
+    }
+
+    #[test]
+    fn frame_wire_len_matches_encode_frame() {
+        for n in [0usize, 1, 17, 4096] {
+            assert_eq!(encode_frame(&vec![0u8; n]).len(), frame_wire_len(n));
+        }
+    }
+}

@@ -1,4 +1,28 @@
-//! Transports and WAN models.
+//! Networking: the sans-I/O wire layer and WAN models.
+//!
+//! The wire stack is layered so the protocol framing exists **exactly
+//! once** and every I/O strategy adapts around it:
+//!
+//! * [`codec`] — [`codec::FrameCodec`], the sans-I/O framing core.  It
+//!   performs no I/O: callers push received bytes in (`feed` /
+//!   `next_frame`) and drain queued wire bytes out (`enqueue_frame` /
+//!   `writable_bytes` / `consume_written`), with `MAX_FRAME` enforced
+//!   mid-stream and backpressure visible via `pending_out`.
+//! * [`reactor`] — the cloud side: one event-driven thread
+//!   ([`reactor::Reactor`], `poll(2)`-based) owns every accepted socket,
+//!   decodes frames in place (zero-copy upload path), routes work to the
+//!   scheduler's workers, and drains token responses through
+//!   per-connection write queues with slow-reader eviction and
+//!   worker-queue backpressure.
+//! * [`transport`] — the blocking adapters: [`transport::TcpTransport`]
+//!   (edge client side), [`transport::InProcTransport`] (tests), and the
+//!   [`transport::Throttled`] WAN wrapper, all wrapping the same codec.
+//! * [`profiles`], [`simulated`] — WAN link profiles and the analytic
+//!   link model used by the DES harness (which prices messages with
+//!   [`codec::frame_wire_len`], so simulated wire costs track the real
+//!   framing).
+pub mod codec;
 pub mod profiles;
+pub mod reactor;
 pub mod simulated;
 pub mod transport;

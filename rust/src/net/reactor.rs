@@ -1,0 +1,816 @@
+//! Event-driven cloud-side connection reactor: **one thread** owns every
+//! accepted socket, multiplexing thousands of edge links where the old
+//! transport burned a blocked OS thread per connection.
+//!
+//! Sans-I/O layering: the reactor does the I/O and the *scheduling of*
+//! I/O, while all framing lives in [`crate::net::codec::FrameCodec`] and
+//! all message semantics in [`crate::coordinator::protocol`].  Per
+//! readiness event the reactor reads a chunk, feeds the connection's
+//! codec, and routes every completed frame:
+//!
+//! * `Hello` — pins the connection to a device/session (upload channels
+//!   additionally reset the device, exactly like the old per-connection
+//!   thread did) and acks;
+//! * `UploadHidden` — decoded through the zero-copy
+//!   [`Message::decode_upload`] path and routed to the owning worker;
+//! * `InferRequest` — routed with a [`Reply`] that posts a completion
+//!   record back to the reactor and wakes its poll loop; the response
+//!   frame is queued on the connection's codec and drained as the
+//!   socket accepts it;
+//! * `EndSession` — routed; anything else is answered with an `Error`
+//!   frame and the connection is closed once that frame drains.
+//!
+//! Flow control (knobs: [`ReactorConfig`]):
+//! * **Slow-reader eviction** — a connection whose unflushed write queue
+//!   exceeds `write_queue_cap` is closed; one stuck reader cannot grow
+//!   server memory without bound.
+//! * **Worker backpressure** — when a scheduler worker's queue depth
+//!   ([`Router::queue_depth`]) exceeds `worker_queue_cap`, the reactor
+//!   stops *reading* from that worker's connections, pushing the
+//!   overload into kernel TCP flow control instead of heap memory.
+//! * **Connection-closed fencing** — completions for a connection that
+//!   has since closed are dropped (connection ids are never reused), so
+//!   a response can never be written to a recycled socket.
+//!
+//! Readiness comes from `poll(2)`, declared directly against the libc
+//! every Rust binary already links (no new dependency); cross-thread
+//! wakeups use a socketpair-style self-wake.  On non-unix targets a
+//! portable fallback probes nonblocking sockets at a small fixed
+//! cadence instead.
+//!
+//! Shutdown is deterministic: [`Reactor::shutdown`] (or drop) closes
+//! every registered socket *before* the reactor thread exits, so once
+//! the call returns no connection can still produce a response.
+
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::ReactorConfig;
+use crate::coordinator::protocol::{Channel, Message, NO_REQ};
+use crate::coordinator::scheduler::{Reply, Router, SchedMsg, TokenOut};
+use crate::model::manifest::ModelDims;
+use crate::net::codec::FrameCodec;
+use crate::quant;
+
+// ---------------------------------------------------------------------------
+// readiness primitives
+// ---------------------------------------------------------------------------
+
+#[cfg(unix)]
+type WakeStream = std::os::unix::net::UnixStream;
+#[cfg(not(unix))]
+type WakeStream = TcpStream;
+
+/// A connected nonblocking pair: `(write end, read end)` of the reactor's
+/// self-wake channel.
+#[cfg(unix)]
+fn wake_pair() -> io::Result<(WakeStream, WakeStream)> {
+    let (a, b) = std::os::unix::net::UnixStream::pair()?;
+    a.set_nonblocking(true)?;
+    b.set_nonblocking(true)?;
+    Ok((a, b))
+}
+
+#[cfg(not(unix))]
+fn wake_pair() -> io::Result<(WakeStream, WakeStream)> {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let a = TcpStream::connect(listener.local_addr()?)?;
+    let (b, _) = listener.accept()?;
+    a.set_nodelay(true)?;
+    a.set_nonblocking(true)?;
+    b.set_nonblocking(true)?;
+    Ok((a, b))
+}
+
+/// Cross-thread wake handle: one byte on the self-wake channel makes the
+/// reactor's poll return.  `WouldBlock` means wakes are already pending,
+/// which is just as good.
+#[derive(Clone)]
+struct Waker(Arc<WakeStream>);
+
+impl Waker {
+    fn wake(&self) {
+        // a full pipe (WouldBlock) means wakes are already pending and a
+        // closed one means the reactor is gone: both safe to ignore
+        let _ = (&*self.0).write_all(&[1]);
+    }
+}
+
+/// `poll(2)` via the platform libc that every Rust binary already links
+/// — keeps the default build dependency-light (no `libc`/`mio` crate).
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::c_int;
+    use std::os::unix::io::RawFd;
+
+    #[repr(C)]
+    pub struct PollFd {
+        pub fd: RawFd,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+    pub const POLLERR: i16 = 0x008;
+    pub const POLLHUP: i16 = 0x010;
+    pub const POLLNVAL: i16 = 0x020;
+
+    // nfds_t is `unsigned long` on linux, `unsigned int` on the BSDs/mac
+    #[cfg(any(target_os = "linux", target_os = "android", target_os = "emscripten"))]
+    type NFds = std::os::raw::c_ulong;
+    #[cfg(not(any(target_os = "linux", target_os = "android", target_os = "emscripten")))]
+    type NFds = std::os::raw::c_uint;
+
+    extern "C" {
+        #[link_name = "poll"]
+        fn poll_raw(fds: *mut PollFd, nfds: NFds, timeout_ms: c_int) -> c_int;
+    }
+
+    /// Block until a registered fd is ready or `timeout_ms` passes
+    /// (`-1` = forever).  EINTR retries transparently.
+    pub fn poll(fds: &mut [PollFd], timeout_ms: c_int) -> std::io::Result<usize> {
+        loop {
+            let r = unsafe { poll_raw(fds.as_mut_ptr(), fds.len() as NFds, timeout_ms) };
+            if r >= 0 {
+                return Ok(r as usize);
+            }
+            let e = std::io::Error::last_os_error();
+            if e.kind() != std::io::ErrorKind::Interrupted {
+                return Err(e);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// public handle
+// ---------------------------------------------------------------------------
+
+enum Ctl {
+    Conn(TcpStream),
+    Stats(Sender<ReactorStats>),
+    Shutdown,
+}
+
+/// A token (or error) served by a worker, heading back to the connection
+/// that asked for it.
+struct Completion {
+    conn: u64,
+    req_id: u32,
+    pos: u32,
+    out: Result<TokenOut>,
+}
+
+/// Cheap cloneable control handle: the acceptor registers connections,
+/// anyone may request stats or shutdown.
+#[derive(Clone)]
+pub struct ReactorHandle {
+    ctl: Sender<Ctl>,
+    waker: Waker,
+}
+
+impl ReactorHandle {
+    /// Hand a freshly accepted connection to the reactor.
+    pub fn register(&self, stream: TcpStream) -> Result<()> {
+        self.ctl.send(Ctl::Conn(stream)).map_err(|_| anyhow!("reactor gone"))?;
+        self.waker.wake();
+        Ok(())
+    }
+
+    /// Snapshot the reactor's counters (blocking round trip).
+    pub fn stats(&self) -> Result<ReactorStats> {
+        let (tx, rx) = channel();
+        self.ctl.send(Ctl::Stats(tx)).map_err(|_| anyhow!("reactor gone"))?;
+        self.waker.wake();
+        rx.recv().context("reactor stats reply")
+    }
+
+    /// Ask the reactor to close every connection and exit (idempotent).
+    pub fn shutdown(&self) {
+        let _ = self.ctl.send(Ctl::Shutdown);
+        self.waker.wake();
+    }
+}
+
+/// Reactor counters.
+#[derive(Debug, Clone, Default)]
+pub struct ReactorStats {
+    pub conns_opened: u64,
+    pub conns_closed: u64,
+    /// Accepted connections dropped because `max_conns` was reached.
+    pub conns_rejected: u64,
+    /// Connections closed because their write queue exceeded the cap.
+    pub evicted_slow: u64,
+    pub frames_in: u64,
+    pub frames_out: u64,
+    /// Times a connection's reads were paused by worker backpressure.
+    pub read_pauses: u64,
+    /// Connections closed for never completing their handshake.
+    pub hello_timeouts: u64,
+    /// Connections currently registered (gauge, set on snapshot).
+    pub open_conns: usize,
+}
+
+/// The reactor thread plus its control handle.
+pub struct Reactor {
+    handle: ReactorHandle,
+    thread: Option<JoinHandle<ReactorStats>>,
+}
+
+impl Reactor {
+    /// Spawn the reactor thread.  `router` is where decoded work goes;
+    /// `dims` validates upload payload shapes (same check the old
+    /// connection threads did).
+    pub fn spawn(router: Router, dims: ModelDims, cfg: ReactorConfig) -> Result<Reactor> {
+        let (ctl_tx, ctl_rx) = channel();
+        let (wake_tx, wake_rx) = wake_pair().context("reactor wake channel")?;
+        let waker = Waker(Arc::new(wake_tx));
+        let handle = ReactorHandle { ctl: ctl_tx, waker: waker.clone() };
+        let (comp_tx, comp_rx) = channel();
+        let thread = std::thread::Builder::new().name("cloud-reactor".into()).spawn(move || {
+            Loop {
+                router,
+                dims,
+                cfg,
+                wake_rx,
+                ctl_rx,
+                comp_tx,
+                comp_rx,
+                waker,
+                conns: HashMap::new(),
+                next_id: 1,
+                scratch: vec![0u8; 64 * 1024],
+                stats: ReactorStats::default(),
+                pending_hellos: 0,
+                paused_conns: false,
+                shutdown: false,
+            }
+            .run()
+        })?;
+        Ok(Reactor { handle, thread: Some(thread) })
+    }
+
+    pub fn handle(&self) -> ReactorHandle {
+        self.handle.clone()
+    }
+
+    /// Close every connection, stop the thread, return final counters.
+    pub fn shutdown(mut self) -> ReactorStats {
+        self.handle.shutdown();
+        self.thread.take().map(|t| t.join().unwrap_or_default()).unwrap_or_default()
+    }
+}
+
+impl Drop for Reactor {
+    fn drop(&mut self) {
+        self.handle.shutdown();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the loop
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy)]
+enum ConnState {
+    /// Handshake pending: the first frame must be a `Hello`.
+    AwaitingHello,
+    Active { device: u64, session: u64, channel: Channel },
+}
+
+struct Conn {
+    id: u64,
+    stream: TcpStream,
+    codec: FrameCodec,
+    state: ConnState,
+    /// Registration time — bounds how long a handshake may stay pending.
+    opened: Instant,
+    /// Reads paused by worker backpressure.
+    paused: bool,
+    /// Close as soon as the write queue drains (protocol error sent).
+    closing: bool,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct Ready {
+    readable: bool,
+    writable: bool,
+}
+
+struct Loop {
+    router: Router,
+    dims: ModelDims,
+    cfg: ReactorConfig,
+    wake_rx: WakeStream,
+    ctl_rx: Receiver<Ctl>,
+    comp_tx: Sender<Completion>,
+    comp_rx: Receiver<Completion>,
+    waker: Waker,
+    conns: HashMap<u64, Conn>,
+    next_id: u64,
+    scratch: Vec<u8>,
+    stats: ReactorStats,
+    /// Connections still awaiting their Hello — gates the reap scan and
+    /// the bounded poll timeout (maintained at register / handshake /
+    /// close).
+    pending_hellos: usize,
+    /// Whether any connection was left paused by the last backpressure
+    /// sweep — lets the sweep early-exit in the common unloaded case.
+    paused_conns: bool,
+    shutdown: bool,
+}
+
+impl Loop {
+    fn run(mut self) -> ReactorStats {
+        loop {
+            // channels first, poll second: a sender that raced past our
+            // drain has also written a wake byte we have not read yet,
+            // so the poll below cannot sleep through it
+            self.drain_ctl();
+            if self.shutdown {
+                break;
+            }
+            self.drain_completions();
+            self.refresh_pauses();
+            self.reap_stale_handshakes();
+            let (wake, ready) = self.poll_ready();
+            if wake {
+                self.drain_wake();
+            }
+            for (id, r) in ready {
+                if r.readable {
+                    self.on_readable(id);
+                }
+                if r.writable {
+                    self.on_writable(id);
+                }
+            }
+        }
+        // deterministic teardown: every socket is closed before the
+        // thread exits, so joining the reactor proves no connection can
+        // still produce a response
+        let ids: Vec<u64> = self.conns.keys().copied().collect();
+        for id in ids {
+            self.close_conn(id, "server shutdown");
+        }
+        self.stats.open_conns = 0;
+        self.stats
+    }
+
+    // -- control + completion channels --------------------------------------
+
+    fn drain_ctl(&mut self) {
+        while let Ok(ctl) = self.ctl_rx.try_recv() {
+            match ctl {
+                Ctl::Conn(stream) => {
+                    if self.conns.len() >= self.cfg.max_conns {
+                        self.stats.conns_rejected += 1;
+                        log::warn!(
+                            "reactor at max_conns={}; dropping new connection",
+                            self.cfg.max_conns
+                        );
+                        continue;
+                    }
+                    if stream.set_nonblocking(true).is_err() || stream.set_nodelay(true).is_err()
+                    {
+                        self.stats.conns_rejected += 1;
+                        continue;
+                    }
+                    let id = self.next_id;
+                    self.next_id += 1; // ids never reused: stale completions cannot alias
+                    self.conns.insert(
+                        id,
+                        Conn {
+                            id,
+                            stream,
+                            codec: FrameCodec::new(),
+                            state: ConnState::AwaitingHello,
+                            opened: Instant::now(),
+                            paused: false,
+                            closing: false,
+                        },
+                    );
+                    self.stats.conns_opened += 1;
+                    self.pending_hellos += 1;
+                }
+                Ctl::Stats(reply) => {
+                    let mut s = self.stats.clone();
+                    s.open_conns = self.conns.len();
+                    let _ = reply.send(s);
+                }
+                Ctl::Shutdown => self.shutdown = true,
+            }
+        }
+    }
+
+    fn drain_completions(&mut self) {
+        while let Ok(done) = self.comp_rx.try_recv() {
+            if !self.conns.contains_key(&done.conn) {
+                // connection-closed fencing: the socket is gone (peer
+                // closed, evicted, or reset); ids are never reused, so
+                // the response is dropped instead of misdelivered
+                continue;
+            }
+            let frame = match done.out {
+                Ok(t) => Message::TokenResponse {
+                    req_id: done.req_id,
+                    pos: done.pos,
+                    token: t.token,
+                    conf: t.conf,
+                    compute_s: t.compute_s as f32,
+                }
+                .encode(),
+                Err(e) => Message::Error {
+                    req_id: done.req_id,
+                    pos: done.pos,
+                    msg: format!("{e:#}"),
+                }
+                .encode(),
+            };
+            self.enqueue_and_flush(done.conn, &frame);
+        }
+    }
+
+    fn drain_wake(&mut self) {
+        let mut buf = [0u8; 64];
+        loop {
+            match self.wake_rx.read(&mut buf) {
+                Ok(0) => break,
+                Ok(_) => continue,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => break, // WouldBlock: fully drained
+            }
+        }
+    }
+
+    /// Close connections that never completed their handshake.  Without
+    /// this, sockets that connect and go silent would hold registration
+    /// slots forever — and with `max_conns` admission, enough of them
+    /// would lock every future device out.
+    fn reap_stale_handshakes(&mut self) {
+        if self.pending_hellos == 0 {
+            return; // the scan only runs while handshakes are pending
+        }
+        let timeout = Duration::from_secs_f64(self.cfg.hello_timeout_s.max(0.001));
+        let now = Instant::now();
+        let stale: Vec<u64> = self
+            .conns
+            .values()
+            .filter(|c| {
+                matches!(c.state, ConnState::AwaitingHello)
+                    && now.duration_since(c.opened) > timeout
+            })
+            .map(|c| c.id)
+            .collect();
+        for id in stale {
+            self.stats.hello_timeouts += 1;
+            self.close_conn(id, "no Hello within the handshake timeout");
+        }
+    }
+
+    /// Re-evaluate worker backpressure for every active connection.
+    /// Overload is a per-worker property, so the queue depths are read
+    /// once per worker, and the per-connection sweep runs only when
+    /// there is something to pause or unpause.
+    fn refresh_pauses(&mut self) {
+        let cap = self.cfg.worker_queue_cap;
+        let overloaded: Vec<bool> =
+            (0..self.router.workers()).map(|w| self.router.queue_depth(w) > cap).collect();
+        if !self.paused_conns && !overloaded.iter().any(|&o| o) {
+            return; // nothing paused, nothing to pause
+        }
+        let mut still_paused = false;
+        for c in self.conns.values_mut() {
+            if let ConnState::Active { device, .. } = c.state {
+                let o = overloaded[self.router.worker_for(device)];
+                if o && !c.paused {
+                    self.stats.read_pauses += 1;
+                }
+                c.paused = o;
+                still_paused |= o;
+            }
+        }
+        self.paused_conns = still_paused;
+    }
+
+    // -- readiness ----------------------------------------------------------
+
+    #[cfg(unix)]
+    fn poll_ready(&mut self) -> (bool, Vec<(u64, Ready)>) {
+        use std::os::unix::io::AsRawFd;
+        let mut fds = Vec::with_capacity(self.conns.len() + 1);
+        fds.push(sys::PollFd { fd: self.wake_rx.as_raw_fd(), events: sys::POLLIN, revents: 0 });
+        let mut ids = Vec::with_capacity(self.conns.len());
+        let mut any_paused = false;
+        let any_handshaking = self.pending_hellos > 0;
+        for c in self.conns.values() {
+            let mut ev = 0i16;
+            if !c.paused && !c.closing {
+                ev |= sys::POLLIN;
+            }
+            if c.codec.pending_out() > 0 {
+                ev |= sys::POLLOUT;
+            }
+            any_paused |= c.paused;
+            // fds with events == 0 still report ERR/HUP, so a paused
+            // connection whose peer vanished is reaped promptly
+            fds.push(sys::PollFd { fd: c.stream.as_raw_fd(), events: ev, revents: 0 });
+            ids.push(c.id);
+        }
+        // workers do not wake the reactor when they catch up, so paused
+        // reads re-check the queue depth at a short cadence; pending
+        // handshakes need a bounded sleep so a silent socket still hits
+        // its Hello timeout
+        let timeout_ms = if any_paused {
+            2
+        } else if any_handshaking {
+            500
+        } else {
+            -1
+        };
+        if let Err(e) = sys::poll(&mut fds, timeout_ms) {
+            log::warn!("reactor poll failed: {e}");
+            std::thread::sleep(Duration::from_millis(1));
+            return (true, Vec::new());
+        }
+        let wake = fds[0].revents != 0;
+        let err_mask = sys::POLLERR | sys::POLLHUP | sys::POLLNVAL;
+        let ready = ids
+            .into_iter()
+            .zip(fds.iter().skip(1))
+            .filter(|(_, f)| f.revents != 0)
+            .map(|(id, f)| {
+                (
+                    id,
+                    Ready {
+                        // ERR/HUP surface through a read() so the real
+                        // error (or EOF) is observed and the conn reaped
+                        readable: f.revents & (sys::POLLIN | err_mask) != 0,
+                        writable: f.revents & sys::POLLOUT != 0,
+                    },
+                )
+            })
+            .collect();
+        (wake, ready)
+    }
+
+    /// Portable fallback without `poll(2)`: probe nonblocking sockets at
+    /// a small fixed cadence (idle probes cost one `WouldBlock` read).
+    #[cfg(not(unix))]
+    fn poll_ready(&mut self) -> (bool, Vec<(u64, Ready)>) {
+        std::thread::sleep(Duration::from_millis(1));
+        let ready = self
+            .conns
+            .values()
+            .map(|c| {
+                (
+                    c.id,
+                    Ready {
+                        readable: !c.paused && !c.closing,
+                        writable: c.codec.pending_out() > 0,
+                    },
+                )
+            })
+            .collect();
+        (true, ready)
+    }
+
+    // -- per-connection I/O --------------------------------------------------
+
+    fn on_readable(&mut self, id: u64) {
+        let mut scratch = std::mem::take(&mut self.scratch);
+        let (frames, close) = match self.conns.get_mut(&id) {
+            Some(c) => read_frames(c, &mut scratch),
+            None => {
+                self.scratch = scratch;
+                return;
+            }
+        };
+        self.scratch = scratch;
+        // frames completed before any poison/EOF are still routed
+        for frame in frames {
+            // a mid-batch protocol error closes (or marks closing) the
+            // conn; later frames are void
+            match self.conns.get(&id) {
+                Some(c) if !c.closing => {}
+                _ => break,
+            }
+            if let Err(e) = self.on_frame(id, frame) {
+                self.close_conn(id, &format!("{e:#}"));
+                break;
+            }
+        }
+        if let Some(reason) = close {
+            self.close_conn(id, &reason); // idempotent if already closed
+        }
+    }
+
+    fn on_writable(&mut self, id: u64) {
+        let mut fail: Option<String> = None;
+        let mut drained_closing = false;
+        if let Some(c) = self.conns.get_mut(&id) {
+            match flush_conn(c) {
+                Err(e) => fail = Some(format!("write failed: {e}")),
+                Ok(()) => drained_closing = c.closing && c.codec.pending_out() == 0,
+            }
+        }
+        if let Some(reason) = fail {
+            self.close_conn(id, &reason);
+        } else if drained_closing {
+            self.close_conn(id, "closed after protocol error");
+        }
+    }
+
+    /// Handle one decoded frame.  `Err` means "close this connection".
+    fn on_frame(&mut self, id: u64, frame: Vec<u8>) -> Result<()> {
+        self.stats.frames_in += 1;
+        let Some(state) = self.conns.get(&id).map(|c| c.state) else { return Ok(()) };
+        match state {
+            ConnState::AwaitingHello => {
+                let (device_id, session, channel) = match Message::decode(&frame)? {
+                    Message::Hello { device_id, session, channel } => {
+                        (device_id, session, channel)
+                    }
+                    other => anyhow::bail!("expected Hello, got {other:?}"),
+                };
+                if channel == Channel::Upload {
+                    // fresh upload channel = fresh client session: reset
+                    // the device and pin it to this session, queued ahead
+                    // of everything the session will send (see the
+                    // coordinator::cloud docs)
+                    self.router
+                        .send(device_id, SchedMsg::Reset { device: device_id, session })
+                        .context("scheduler gone")?;
+                }
+                if let Some(c) = self.conns.get_mut(&id) {
+                    c.state = ConnState::Active { device: device_id, session, channel };
+                    self.pending_hellos = self.pending_hellos.saturating_sub(1);
+                }
+                log::debug!("device {device_id} opened {channel:?} channel (session {session:x})");
+                self.enqueue_and_flush(id, &Message::Ack.encode());
+                Ok(())
+            }
+            ConnState::Active { session, channel, .. } => {
+                // zero-copy fast path for the dominant per-token frame
+                // (payload borrowed from the frame buffer; only the
+                // unpacked floats are allocated, and they move through
+                // the scheduler without further copies)
+                if let Some(v) = Message::decode_upload(&frame)? {
+                    let hiddens = quant::unpack(v.payload, v.precision)?;
+                    anyhow::ensure!(hiddens.len() % self.dims.d_model == 0, "ragged upload");
+                    return self
+                        .router
+                        .send(
+                            v.device_id,
+                            SchedMsg::Upload {
+                                device: v.device_id,
+                                session,
+                                req_id: v.req_id,
+                                start_pos: v.start_pos,
+                                prompt_len: v.prompt_len,
+                                hiddens,
+                            },
+                        )
+                        .context("scheduler gone");
+                }
+                match Message::decode(&frame)? {
+                    Message::InferRequest { device_id, req_id, pos, prompt_len, deadline_ms } => {
+                        let deadline = (deadline_ms > 0)
+                            .then(|| Instant::now() + Duration::from_millis(deadline_ms as u64));
+                        let comp = self.comp_tx.clone();
+                        let waker = self.waker.clone();
+                        let conn = id;
+                        let reply = Reply::new(move |out| {
+                            let _ = comp.send(Completion { conn, req_id, pos, out });
+                            waker.wake();
+                        });
+                        self.router
+                            .send(
+                                device_id,
+                                SchedMsg::Infer {
+                                    device: device_id,
+                                    session,
+                                    req_id,
+                                    pos,
+                                    prompt_len,
+                                    deadline,
+                                    reply,
+                                },
+                            )
+                            .context("scheduler gone")
+                    }
+                    Message::EndSession { device_id, req_id } => self
+                        .router
+                        .send(device_id, SchedMsg::End { device: device_id, session, req_id })
+                        .context("scheduler gone"),
+                    other => {
+                        let msg = format!("unexpected message on {channel:?} channel: {other:?}");
+                        log::debug!("reactor: {msg}");
+                        self.enqueue_and_flush(
+                            id,
+                            &Message::Error { req_id: NO_REQ, pos: NO_REQ, msg }.encode(),
+                        );
+                        let drained = self
+                            .conns
+                            .get_mut(&id)
+                            .map(|c| {
+                                c.closing = true;
+                                c.codec.pending_out() == 0
+                            })
+                            .unwrap_or(false);
+                        if drained {
+                            self.close_conn(id, "closed after protocol error");
+                        }
+                        Ok(())
+                    }
+                }
+            }
+        }
+    }
+
+    /// Queue one frame on `id`'s codec, flush what the socket accepts
+    /// now, and evict the connection if its backlog exceeds the cap.
+    fn enqueue_and_flush(&mut self, id: u64, payload: &[u8]) {
+        let mut fail: Option<String> = None;
+        let mut evict = false;
+        if let Some(c) = self.conns.get_mut(&id) {
+            match c.codec.enqueue_frame(payload) {
+                Err(e) => fail = Some(format!("{e:#}")),
+                Ok(()) => {
+                    self.stats.frames_out += 1;
+                    match flush_conn(c) {
+                        Err(e) => fail = Some(format!("write failed: {e}")),
+                        Ok(()) => evict = c.codec.pending_out() > self.cfg.write_queue_cap,
+                    }
+                }
+            }
+        }
+        if let Some(reason) = fail {
+            self.close_conn(id, &reason);
+        } else if evict {
+            self.stats.evicted_slow += 1;
+            self.close_conn(id, "write queue over cap (slow reader evicted)");
+        }
+    }
+
+    fn close_conn(&mut self, id: u64, reason: &str) {
+        if let Some(c) = self.conns.remove(&id) {
+            if matches!(c.state, ConnState::AwaitingHello) {
+                self.pending_hellos = self.pending_hellos.saturating_sub(1);
+            }
+            let _ = c.stream.shutdown(std::net::Shutdown::Both);
+            self.stats.conns_closed += 1;
+            log::debug!("reactor: connection {id} closed: {reason}");
+        }
+    }
+}
+
+/// One nonblocking read, fed through the connection's codec.  Returns
+/// every frame the read completed plus an optional close reason — valid
+/// frames parsed before a poisoned one (or EOF) are still delivered, so
+/// an upload in the same TCP segment as the corruption is not lost.
+fn read_frames(c: &mut Conn, scratch: &mut [u8]) -> (Vec<Vec<u8>>, Option<String>) {
+    match c.stream.read(scratch) {
+        Ok(0) => (Vec::new(), Some("peer closed".into())),
+        Ok(n) => {
+            let mut frames = Vec::new();
+            // feed_all parses whole frames straight from the read chunk
+            // (no staging copy through the codec buffer on bulk ingest)
+            match c.codec.feed_all(&scratch[..n], &mut frames) {
+                Ok(()) => (frames, None),
+                Err(e) => (frames, Some(format!("bad frame: {e:#}"))),
+            }
+        }
+        Err(e)
+            if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::Interrupted) =>
+        {
+            (Vec::new(), None)
+        }
+        Err(e) => (Vec::new(), Some(format!("read failed: {e}"))),
+    }
+}
+
+/// Write as much of the connection's queue as the socket accepts now.
+fn flush_conn(c: &mut Conn) -> io::Result<()> {
+    while c.codec.pending_out() > 0 {
+        match c.stream.write(c.codec.writable_bytes()) {
+            Ok(0) => return Err(io::Error::new(io::ErrorKind::WriteZero, "write returned 0")),
+            Ok(n) => c.codec.consume_written(n),
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}

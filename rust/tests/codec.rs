@@ -1,0 +1,195 @@
+//! Property tests for the sans-I/O frame codec: however a byte stream is
+//! chopped up, the codec must deliver exactly the frames a one-shot
+//! parser sees, and every frame must decode to the identical protocol
+//! message.  Uses the in-tree deterministic PRNG (no proptest crate in
+//! the offline environment); failures print the seed.
+
+use ce_collm::coordinator::protocol::{Channel, Message};
+use ce_collm::net::codec::{encode_frame, frame_wire_len, FrameCodec, FRAME_HEADER, MAX_FRAME};
+use ce_collm::quant::{self, Precision};
+use ce_collm::util::rng::Rng;
+
+const CASES: usize = 64;
+
+/// Random protocol message (mirrors the generator in `proptests.rs`).
+fn arb_message(rng: &mut Rng) -> Message {
+    match rng.gen_range(7) {
+        0 => Message::Hello {
+            device_id: rng.next_u64(),
+            session: rng.next_u64(),
+            channel: if rng.gen_bool(0.5) { Channel::Upload } else { Channel::Infer },
+        },
+        1 => {
+            let precision = if rng.gen_bool(0.5) { Precision::F16 } else { Precision::F32 };
+            let count = rng.gen_range(4) as u32 + 1;
+            let n = count as usize * 8;
+            let values: Vec<f32> = (0..n).map(|_| (rng.gen_f32() - 0.5) * 2000.0).collect();
+            Message::UploadHidden {
+                device_id: rng.next_u64(),
+                req_id: rng.next_u64() as u32,
+                start_pos: rng.gen_range(1000) as u32,
+                count,
+                prompt_len: rng.gen_range(256) as u32,
+                precision,
+                payload: quant::pack(&values, precision),
+            }
+        }
+        2 => Message::InferRequest {
+            device_id: rng.next_u64(),
+            req_id: rng.next_u64() as u32,
+            pos: rng.gen_range(4096) as u32,
+            prompt_len: rng.gen_range(256) as u32,
+            deadline_ms: rng.gen_range(5000) as u32,
+        },
+        3 => Message::TokenResponse {
+            req_id: rng.next_u64() as u32,
+            pos: rng.gen_range(4096) as u32,
+            token: rng.gen_range(384) as i32,
+            conf: rng.gen_f32(),
+            compute_s: rng.gen_f32() * 0.1,
+        },
+        4 => Message::EndSession { device_id: rng.next_u64(), req_id: rng.next_u64() as u32 },
+        5 => Message::Ack,
+        _ => Message::Error {
+            req_id: rng.next_u64() as u32,
+            pos: rng.gen_range(4096) as u32,
+            msg: (0..rng.gen_range(64)).map(|_| (rng.gen_range(94) as u8 + 32) as char).collect(),
+        },
+    }
+}
+
+/// One-shot reference parse of a whole wire stream (the "blocking
+/// transport" view the incremental codec must agree with).
+fn one_shot_frames(wire: &[u8]) -> Vec<Vec<u8>> {
+    let mut frames = Vec::new();
+    let mut i = 0;
+    while i < wire.len() {
+        let n = u32::from_le_bytes(wire[i..i + FRAME_HEADER].try_into().unwrap()) as usize;
+        frames.push(wire[i + FRAME_HEADER..i + FRAME_HEADER + n].to_vec());
+        i += FRAME_HEADER + n;
+    }
+    frames
+}
+
+#[test]
+fn prop_byte_dribble_identical_to_one_shot() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::seed_from_u64(seed ^ 0xC0DE);
+        let msgs: Vec<Message> = (0..1 + rng.gen_range(8)).map(|_| arb_message(&mut rng)).collect();
+        let mut wire = Vec::new();
+        for m in &msgs {
+            wire.extend_from_slice(&encode_frame(&m.encode()));
+        }
+        let reference = one_shot_frames(&wire);
+        assert_eq!(reference.len(), msgs.len(), "seed {seed}");
+
+        // feed the stream 1..k bytes at a time (k varies per chunk)
+        let mut codec = FrameCodec::new();
+        let mut got: Vec<Vec<u8>> = Vec::new();
+        let mut i = 0;
+        while i < wire.len() {
+            let k = (1 + rng.gen_range(17)).min(wire.len() - i);
+            let mut next = codec
+                .feed(&wire[i..i + k])
+                .unwrap_or_else(|e| panic!("seed {seed}: feed failed: {e:#}"));
+            while let Some(f) = next {
+                got.push(f);
+                next = codec.next_frame().unwrap();
+            }
+            i += k;
+        }
+
+        // frame-for-frame identity with the one-shot parse...
+        assert_eq!(got, reference, "seed {seed}: dribbled frames diverge");
+        assert_eq!(codec.buffered_in(), 0, "seed {seed}: residue after a whole stream");
+        // ...and message-for-message identity with the originals
+        for (frame, msg) in got.iter().zip(&msgs) {
+            assert_eq!(&Message::decode(frame).unwrap(), msg, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_feed_all_identical_to_incremental() {
+    // the reactor's bulk-ingest entry point must agree with the
+    // byte-dribble path and the one-shot parse for any chunking
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::seed_from_u64(seed ^ 0xFA11);
+        let msgs: Vec<Message> = (0..1 + rng.gen_range(8)).map(|_| arb_message(&mut rng)).collect();
+        let mut wire = Vec::new();
+        for m in &msgs {
+            wire.extend_from_slice(&encode_frame(&m.encode()));
+        }
+        let reference = one_shot_frames(&wire);
+        let mut codec = FrameCodec::new();
+        let mut got = Vec::new();
+        let mut i = 0;
+        while i < wire.len() {
+            let k = (1 + rng.gen_range(33)).min(wire.len() - i);
+            codec
+                .feed_all(&wire[i..i + k], &mut got)
+                .unwrap_or_else(|e| panic!("seed {seed}: feed_all failed: {e:#}"));
+            i += k;
+        }
+        assert_eq!(got, reference, "seed {seed}: feed_all frames diverge");
+        assert_eq!(codec.buffered_in(), 0, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_write_half_roundtrips_under_random_flush_sizes() {
+    // enqueue random messages, drain writable_bytes in random-sized
+    // slices into a reader codec: bytes_sent accounting and frames must
+    // both survive any flush pattern
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::seed_from_u64(seed ^ 0xF1A5);
+        let msgs: Vec<Message> = (0..1 + rng.gen_range(6)).map(|_| arb_message(&mut rng)).collect();
+        let mut w = FrameCodec::new();
+        let mut payload_bytes = 0u64;
+        for m in &msgs {
+            let enc = m.encode();
+            payload_bytes += enc.len() as u64;
+            w.enqueue_frame(&enc).unwrap();
+        }
+        assert_eq!(w.payload_bytes_enqueued(), payload_bytes, "seed {seed}");
+        assert_eq!(
+            w.pending_out() as u64,
+            payload_bytes + (msgs.len() * FRAME_HEADER) as u64,
+            "seed {seed}: framing overhead must be exactly {FRAME_HEADER}/frame"
+        );
+
+        let mut r = FrameCodec::new();
+        let mut got = Vec::new();
+        while w.pending_out() > 0 {
+            let k = (1 + rng.gen_range(9)).min(w.pending_out());
+            let chunk = w.writable_bytes()[..k].to_vec();
+            w.consume_written(k);
+            let mut next = r.feed(&chunk).unwrap();
+            while let Some(f) = next {
+                got.push(Message::decode(&f).unwrap());
+                next = r.next_frame().unwrap();
+            }
+        }
+        assert_eq!(got, msgs, "seed {seed}");
+    }
+}
+
+#[test]
+fn mid_stream_oversize_fails_before_the_body() {
+    // a good frame, then a poisoned length prefix: the good frame is
+    // delivered, the poison is rejected as soon as its 4 length bytes
+    // are visible — no body needed, nothing allocated for it
+    let mut wire = encode_frame(&Message::Ack.encode());
+    wire.extend_from_slice(&((MAX_FRAME + 1) as u32).to_le_bytes());
+    let mut codec = FrameCodec::new();
+    let first = codec.feed(&wire[..wire.len() - 1]).unwrap();
+    assert_eq!(first.unwrap(), Message::Ack.encode());
+    assert!(codec.feed(&wire[wire.len() - 1..]).is_err());
+}
+
+#[test]
+fn wire_len_helper_is_exact() {
+    for n in [0usize, 1, 30, 286] {
+        assert_eq!(frame_wire_len(n), encode_frame(&vec![0u8; n]).len());
+    }
+}

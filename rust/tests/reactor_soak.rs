@@ -1,0 +1,199 @@
+//! Soak test for the event-driven connection reactor: 256 concurrent
+//! edge devices (512 sockets via the dual API) served end-to-end by a
+//! cloud using **workers + 2** threads total — one worker, one acceptor,
+//! one reactor — with every device's token stream bit-identical to the
+//! blocking single-client path.
+//!
+//! This file holds exactly one `#[test]` so the thread-count assertions
+//! cannot race other tests in the same binary.
+
+use std::net::TcpListener;
+use std::sync::{Arc, Barrier};
+
+use ce_collm::config::{CloudConfig, DeploymentConfig, ExitPolicy};
+use ce_collm::coordinator::cloud::{CloudServer, SessionFactory};
+use ce_collm::coordinator::edge::{CloudLink, EdgeClient};
+use ce_collm::harness::trace::{record, CallTimings};
+use ce_collm::model::manifest::test_manifest;
+use ce_collm::net::transport::TcpTransport;
+use ce_collm::quant::Precision;
+use ce_collm::runtime::mock::{MockCloud, MockEdge, MockOracle};
+
+const DEVICES: usize = 256;
+const SEED: u64 = 33;
+const PROMPT: &str = "soak test prompt for the reactor";
+const MAX_NEW: usize = 8;
+/// θ = 1.0 (the paper's high-accuracy row): confidences are < 1, so
+/// EVERY token defers to the cloud — each device exercises the full
+/// upload/park/wake/respond loop through the reactor for all
+/// `MAX_NEW` positions, deterministically.
+const THRESHOLD: f32 = 1.0;
+
+/// Live thread count of this process (linux); `None` elsewhere.
+fn thread_count() -> Option<usize> {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()?
+        .lines()
+        .find_map(|l| l.strip_prefix("Threads:"))
+        .and_then(|v| v.trim().parse().ok())
+}
+
+/// Both endpoints of all 512 dual-API connections live in this one test
+/// process (~1024 sockets + listener + wake pair + harness fds), which
+/// exceeds the common RLIMIT_NOFILE soft default of 1024 — raise the
+/// soft limit toward the hard limit before fanning out.
+#[cfg(target_os = "linux")]
+fn ensure_fd_capacity(want: u64) -> bool {
+    #[repr(C)]
+    struct RLimit {
+        cur: u64,
+        max: u64,
+    }
+    extern "C" {
+        fn getrlimit(resource: i32, rlim: *mut RLimit) -> i32;
+        fn setrlimit(resource: i32, rlim: *const RLimit) -> i32;
+    }
+    const RLIMIT_NOFILE: i32 = 7;
+    unsafe {
+        let mut r = RLimit { cur: 0, max: 0 };
+        if getrlimit(RLIMIT_NOFILE, &mut r) != 0 {
+            return false;
+        }
+        if r.cur >= want {
+            return true;
+        }
+        let bumped = RLimit { cur: want.min(r.max), max: r.max };
+        let _ = setrlimit(RLIMIT_NOFILE, &bumped);
+        getrlimit(RLIMIT_NOFILE, &mut r) == 0 && r.cur >= want
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+fn ensure_fd_capacity(_want: u64) -> bool {
+    true // no portable probe; a too-low limit will surface as EMFILE
+}
+
+#[test]
+fn soak_256_devices_through_one_reactor_thread() {
+    assert!(
+        ensure_fd_capacity(4 * DEVICES as u64 + 64),
+        "this soak needs ~{} file descriptors (both endpoints of 512 \
+         connections live in-process) and the RLIMIT_NOFILE hard limit \
+         is below that; raise `ulimit -n`",
+        4 * DEVICES + 64
+    );
+    let dims = test_manifest().model;
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let sdims = dims.clone();
+
+    let baseline = thread_count();
+    let server = CloudServer::spawn(
+        listener,
+        dims.clone(),
+        CloudConfig::with_workers(1),
+        move || {
+            let sdims = sdims.clone();
+            let f: SessionFactory = Box::new(move |_device| {
+                Ok(Box::new(MockCloud::new(MockOracle::new(SEED), sdims.clone())) as _)
+            });
+            Ok(f)
+        },
+    )
+    .unwrap();
+
+    // thread budget at spawn: acceptor + reactor + one worker, nothing else
+    if let (Some(b), Some(now)) = (baseline, thread_count()) {
+        assert!(
+            now <= b + 3,
+            "cloud spawn must add at most workers+2 threads (added {})",
+            now - b
+        );
+    }
+
+    // every client thread connects its dual API, then all rendezvous so
+    // the thread census sees all 512 sockets open simultaneously
+    let barrier = Arc::new(Barrier::new(DEVICES + 1));
+    let addr = server.addr.to_string();
+    let mut handles = Vec::with_capacity(DEVICES);
+    for device in 0..DEVICES as u64 {
+        let addr = addr.clone();
+        let barrier = Arc::clone(&barrier);
+        let dims = dims.clone();
+        handles.push(std::thread::spawn(move || {
+            let upload = Box::new(TcpTransport::connect(&addr).unwrap());
+            let infer = Box::new(TcpTransport::connect(&addr).unwrap());
+            let link = CloudLink::new(device, upload, infer).unwrap();
+            barrier.wait(); // (1) everyone connected
+            barrier.wait(); // (2) census taken
+            let mut cfg = DeploymentConfig::with_threshold(THRESHOLD);
+            cfg.device_id = device;
+            cfg.max_new_tokens = MAX_NEW;
+            let mut client =
+                EdgeClient::with_cloud(MockEdge::new(MockOracle::new(SEED), dims), cfg, link);
+            let out = client.generate(PROMPT).unwrap();
+            (out.tokens, out.counters.cloud_requests)
+        }));
+    }
+
+    barrier.wait(); // (1) all 512 sockets are up
+    // census: baseline + cloud (worker + acceptor + reactor) + per-client
+    // threads (each client thread spawned one uploader).  The old
+    // thread-per-connection server would add another 512 here.
+    if let (Some(b), Some(now)) = (baseline, thread_count()) {
+        assert!(
+            now <= b + 3 + 2 * DEVICES,
+            "server must not spawn per-connection threads \
+             (baseline {b}, now {now}, clients account for {})",
+            2 * DEVICES
+        );
+    }
+    let rs = server.reactor_stats().unwrap();
+    assert_eq!(rs.open_conns, 2 * DEVICES, "all dual-API sockets registered: {rs:?}");
+    barrier.wait(); // (2) release the fleet
+
+    let results: Vec<(Vec<i32>, usize)> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    // the blocking reference path: one locally recorded trace with the
+    // same seed/policy must match every device bit-for-bit
+    let oracle = MockOracle::new(SEED);
+    let mut edge = MockEdge::new(oracle, dims.clone());
+    let mut cloud = MockCloud::new(oracle, dims);
+    let mut timings = CallTimings::default();
+    let reference = record(
+        &mut edge,
+        &mut cloud,
+        ExitPolicy::Threshold(THRESHOLD),
+        Precision::F16,
+        PROMPT,
+        MAX_NEW,
+        &mut timings,
+    )
+    .unwrap();
+    assert!(!reference.tokens.is_empty());
+    let mut cloud_requests = 0usize;
+    for (device, (tokens, reqs)) in results.iter().enumerate() {
+        assert_eq!(
+            tokens, &reference.tokens,
+            "device {device}: reactor-served tokens diverge from the blocking path"
+        );
+        cloud_requests += reqs;
+    }
+    assert!(cloud_requests > 0, "the soak must actually exercise cloud deferrals");
+
+    let stats = server.shutdown();
+    assert_eq!(
+        stats.requests_served as usize, cloud_requests,
+        "every deferral answered exactly once: {stats:?}"
+    );
+    assert!(stats.uploads as usize >= DEVICES, "parallel uploads must have landed");
+
+    // reactor + acceptor + worker are gone and every client (plus its
+    // uploader) was joined; allow one thread of slack for runtime noise
+    if let (Some(b), Some(now)) = (baseline, thread_count()) {
+        assert!(
+            now <= b + 1,
+            "no cloud threads may outlive shutdown (baseline {b}, now {now})"
+        );
+    }
+}

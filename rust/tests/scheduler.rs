@@ -13,7 +13,9 @@ use std::time::{Duration, Instant};
 
 use ce_collm::config::{CloudConfig, DeploymentConfig};
 use ce_collm::coordinator::policy::ExitPoint;
-use ce_collm::coordinator::scheduler::{Router, SchedMsg, Scheduler, SessionFactory, TokenOut};
+use ce_collm::coordinator::scheduler::{
+    Reply, Router, SchedMsg, Scheduler, SessionFactory, TokenOut,
+};
 use ce_collm::coordinator::edge::{CloudLink, EdgeClient};
 use ce_collm::model::manifest::test_manifest;
 use ce_collm::net::transport::{in_proc_pair, Transport};
@@ -46,11 +48,19 @@ fn infer(
     prompt_len: u32,
     deadline: Option<Instant>,
 ) -> mpsc::Receiver<anyhow::Result<TokenOut>> {
-    let (reply, rx) = mpsc::channel();
+    let (tx, rx) = mpsc::channel();
     router
         .send(
             device,
-            SchedMsg::Infer { device, session: 0, req_id, pos, prompt_len, deadline, reply },
+            SchedMsg::Infer {
+                device,
+                session: 0,
+                req_id,
+                pos,
+                prompt_len,
+                deadline,
+                reply: Reply::channel(tx),
+            },
         )
         .unwrap();
     rx
@@ -233,7 +243,7 @@ fn stale_session_frames_are_fenced_after_reconnect() {
         .unwrap();
 
     // B's request still completes against its own uploads
-    let (reply, rx) = mpsc::channel();
+    let (tx, rx) = mpsc::channel();
     router
         .send(dev, SchedMsg::Infer {
             device: dev,
@@ -242,7 +252,7 @@ fn stale_session_frames_are_fenced_after_reconnect() {
             pos: 1,
             prompt_len: 2,
             deadline: None,
-            reply,
+            reply: Reply::channel(tx),
         })
         .unwrap();
     let out = rx.recv().unwrap().expect("session B must be unaffected by A's stragglers");
@@ -428,6 +438,30 @@ fn deep_backlog_is_capped_and_cannot_starve_other_devices() {
     assert_eq!(log[0].1, 4, "device 0 capped at 4 items in pass 1");
     assert!(log[4..].iter().all(|&(dev, n)| dev == 0 && n == 4), "later passes drain the backlog");
     assert_eq!(log.len(), 4 + 4, "5 passes total: 4 calls in pass 1, then 4 backlog chunks");
+    sched.shutdown();
+}
+
+#[test]
+fn router_queue_depth_tracks_undrained_messages() {
+    // the reactor's backpressure signal: depth rises while the worker is
+    // held at the gate, returns to zero once everything is drained
+    let gate = Arc::new(std::sync::Barrier::new(2));
+    let sched = gated_scheduler(1, CloudConfig::default(), Arc::clone(&gate), None);
+    let router = sched.router();
+    assert_eq!(router.queue_depth(0), 0);
+
+    upload(&router, 0, 1, 0, 2, 2);
+    for pos in 2..6u32 {
+        upload(&router, 0, 1, pos, 1, 2);
+    }
+    assert_eq!(router.queue_depth(0), 5, "five undrained uploads");
+
+    gate.wait();
+    // the reply arrives only after the worker drained its whole queue,
+    // so the gauge must read zero again by then
+    let rx = infer(&router, 0, 1, 1, 2, None);
+    rx.recv().unwrap().unwrap();
+    assert_eq!(router.queue_depth(0), 0);
     sched.shutdown();
 }
 

@@ -8,8 +8,9 @@ use std::net::TcpListener;
 use ce_collm::config::{CloudConfig, DeploymentConfig};
 use ce_collm::coordinator::cloud::{CloudServer, SessionFactory};
 use ce_collm::coordinator::edge::{CloudLink, EdgeClient};
+use ce_collm::coordinator::protocol::{Channel, Message};
 use ce_collm::model::manifest::test_manifest;
-use ce_collm::net::transport::TcpTransport;
+use ce_collm::net::transport::{TcpTransport, Transport};
 use ce_collm::runtime::mock::{MockCloud, MockEdge, MockOracle};
 
 fn spawn_mock_server_with(seed: u64, workers: usize) -> CloudServer {
@@ -138,6 +139,80 @@ fn tcp_end_session_releases_content_manager_state() {
         }
     }
     panic!("content manager still holds device state after EndSession");
+}
+
+#[test]
+fn silent_connection_is_reaped_by_hello_timeout() {
+    // a socket that connects and never says Hello must not squat on a
+    // max_conns slot forever
+    let dims = test_manifest().model;
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let sdims = dims.clone();
+    let mut cfg = CloudConfig::with_workers(1);
+    cfg.reactor.hello_timeout_s = 0.05;
+    let server = CloudServer::spawn(listener, dims, cfg, move || {
+        let sdims = sdims.clone();
+        let f: SessionFactory = Box::new(move |_device| {
+            Ok(Box::new(MockCloud::new(MockOracle::new(1), sdims.clone())) as _)
+        });
+        Ok(f)
+    })
+    .unwrap();
+
+    let silent = std::net::TcpStream::connect(server.addr).unwrap();
+    for _ in 0..100 {
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let rs = server.reactor_stats().unwrap();
+        if rs.hello_timeouts >= 1 && rs.open_conns == 0 {
+            drop(silent);
+            server.shutdown();
+            return;
+        }
+    }
+    panic!("silent connection was never reaped by the hello timeout");
+}
+
+#[test]
+fn shutdown_closes_every_connection_with_no_stragglers() {
+    // the pre-reactor server joined its acceptor but *detached* the
+    // per-connection threads, which lingered holding their sockets; the
+    // reactor must close every registered connection before shutdown()
+    // returns, so a straggling request can never be answered
+    let server = spawn_mock_server(19);
+    let addr = server.addr.to_string();
+    let mut conns: Vec<TcpTransport> = (0..3u64)
+        .map(|i| {
+            let mut t = TcpTransport::connect(&addr).unwrap();
+            t.send(
+                &Message::Hello { device_id: 40 + i, session: 7, channel: Channel::Infer }
+                    .encode(),
+            )
+            .unwrap();
+            assert_eq!(t.recv().unwrap(), Message::Ack.encode(), "handshake must complete");
+            t
+        })
+        .collect();
+
+    server.shutdown();
+
+    for (i, t) in conns.iter_mut().enumerate() {
+        // the send may still land in a dead socket's buffer; what must
+        // never happen is a response coming back
+        let _ = t.send(
+            &Message::InferRequest {
+                device_id: 40 + i as u64,
+                req_id: 1,
+                pos: 1,
+                prompt_len: 2,
+                deadline_ms: 0,
+            }
+            .encode(),
+        );
+        assert!(
+            t.recv().is_err(),
+            "connection {i} still answered after shutdown() returned"
+        );
+    }
 }
 
 #[test]

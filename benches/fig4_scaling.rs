@@ -44,6 +44,7 @@ fn main() {
                     seed: 1,
                     workers: 1,
                     cross_device_batch: true,
+                    ..Default::default()
                 },
             )
         });

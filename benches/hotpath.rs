@@ -10,10 +10,13 @@
 //! upload them as the perf-trajectory artifact.
 
 use ce_collm::config::{AblationFlags, CloudConfig, ExitPolicy};
-use ce_collm::coordinator::content_manager::ContentManager;
+use ce_collm::coordinator::content_manager::{ContentManager, PlanReq};
+use ce_collm::coordinator::context_store::ContextStore;
 use ce_collm::coordinator::policy::TokenPolicy;
 use ce_collm::coordinator::protocol::Message;
-use ce_collm::coordinator::scheduler::{Reply, SchedMsg, Scheduler, SessionFactory};
+use ce_collm::coordinator::scheduler::{
+    InferOutcome, Reply, SchedMsg, Scheduler, SessionFactory, UploadPayload,
+};
 use ce_collm::eval::rouge::rouge_l;
 use ce_collm::harness::cost::CostModel;
 use ce_collm::harness::des::{simulate, SimConfig, Strategy};
@@ -176,6 +179,60 @@ fn main() {
         cm.end_session(1);
     }));
 
+    println!("\n== context store (budget metering + LRU on the serve path) ==");
+    {
+        use ce_collm::coordinator::context_store::SessionFactory as StoreFactory;
+        let dims = test_manifest().model;
+        let d = dims.d_model;
+        let mut factory: StoreFactory = {
+            let fdims = dims.clone();
+            Box::new(move |_| Ok(Box::new(MockCloud::new(MockOracle::new(1), fdims.clone())) as _))
+        };
+        let settle = |store: &mut ContextStore, f: &mut StoreFactory, dev: u64| {
+            store.upload_owned(dev, 1, 0, 8, vec![0.5; 8 * d]).unwrap();
+            let req = PlanReq { device: dev, req_id: 1, pos: 7, prompt_len: 8 };
+            let plan = store.plan_batch(&[req], usize::MAX).remove(0).unwrap();
+            let s = store.session(dev, f).unwrap();
+            s.reset();
+            let (h, len) = plan.prefill.unwrap();
+            s.prefill(&h, len).unwrap();
+        };
+        // the per-token store ops with 32 resident devices to scan past
+        let mut store = ContextStore::new(&dims, Some(u64::MAX), None);
+        for dev in 0..32u64 {
+            settle(&mut store, &mut factory, dev);
+        }
+        let mut pos = 8u32;
+        results.push(bench("store touch: upload+plan (32 resident devices)", 0.3 * scale, || {
+            store.upload_owned(7, 1, pos, 8, vec![0.5; d]).unwrap();
+            let req = PlanReq { device: 7, req_id: 1, pos, prompt_len: 8 };
+            store.plan_batch(&[req], usize::MAX).remove(0).unwrap();
+            pos += 1;
+        }));
+        results.push(bench("store budget sweep, under budget (32 devices)", 0.3 * scale, || {
+            store.reap_ttl(std::time::Instant::now(), |_| false);
+            store.enforce_budget(|_| false)
+        }));
+        // evict + replay-plan: the full recovery cycle of one device
+        let kv8 = 8 * dims.cloud_kv_bytes_per_pos() as u64;
+        let mut tight = ContextStore::new(&dims, Some(kv8 + kv8 / 2), None);
+        settle(&mut tight, &mut factory, 1);
+        settle(&mut tight, &mut factory, 2);
+        results.push(bench("store evict + replay-plan cycle", 0.3 * scale, || {
+            // over budget: the LRU of {1, 2} is evicted...
+            tight.enforce_budget(|_| false);
+            let victim = if tight.evicted_req(1).is_some() { 1u64 } else { 2 };
+            // ...and replays its history from position 0
+            tight.upload_owned(victim, 1, 0, 8, vec![0.5; 8 * d]).unwrap();
+            let req = PlanReq { device: victim, req_id: 1, pos: 7, prompt_len: 8 };
+            let plan = tight.plan_batch(&[req], usize::MAX).remove(0).unwrap();
+            let s = tight.session(victim, &mut factory).unwrap();
+            s.reset();
+            let (h, len) = plan.prefill.unwrap();
+            s.prefill(&h, len).unwrap();
+        }));
+    }
+
     println!("\n== batched decode (mock engine) ==");
     {
         let dims = test_manifest().model;
@@ -225,7 +282,7 @@ fn main() {
                     req_id: req,
                     start_pos: 0,
                     prompt_len: 8,
-                    hiddens: vec![0.5; 8 * d],
+                    payload: UploadPayload::Floats(vec![0.5; 8 * d]),
                 })
                 .unwrap();
             let (tx, rx) = std::sync::mpsc::channel();
@@ -240,7 +297,10 @@ fn main() {
                     reply: Reply::channel(tx),
                 })
                 .unwrap();
-            rx.recv().unwrap().unwrap()
+            match rx.recv().unwrap().unwrap() {
+                InferOutcome::Token(t) => t,
+                InferOutcome::Evicted => unreachable!("no budget configured"),
+            }
         }));
         // cross-device load: four devices' uploads + infers in flight at
         // once — the padded per-worker pass serves them together
@@ -254,7 +314,7 @@ fn main() {
                         req_id: req,
                         start_pos: 0,
                         prompt_len: 8,
-                        hiddens: vec![0.5; 8 * d],
+                        payload: UploadPayload::Floats(vec![0.5; 8 * d]),
                     })
                     .unwrap();
             }
@@ -276,7 +336,7 @@ fn main() {
                 })
                 .collect();
             for rx in rxs {
-                rx.recv().unwrap().unwrap();
+                let _ = rx.recv().unwrap().unwrap();
             }
         }));
         let stats = sched.shutdown();
@@ -312,6 +372,7 @@ fn main() {
                 seed: 0,
                 workers: 1,
                 cross_device_batch: true,
+                ..Default::default()
             },
         )
     }));

@@ -44,7 +44,14 @@ fn main() {
                 &per_client,
                 &dims,
                 &rec.cost,
-                &SimConfig { strategy, link, seed: 1, workers: 1, cross_device_batch: true },
+                &SimConfig {
+                    strategy,
+                    link,
+                    seed: 1,
+                    workers: 1,
+                    cross_device_batch: true,
+                    ..Default::default()
+                },
             )
         });
     }

@@ -91,6 +91,16 @@ pub struct DeploymentConfig {
     /// exit instead, and a transport failure downgrades the whole run to
     /// local exits.  `None`: block on the cloud indefinitely.
     pub cloud_token_budget_s: Option<f64>,
+    /// Positions of exit-1 hidden-state history the edge retains per
+    /// request for cloud-eviction replay (the cloud's context store may
+    /// evict an idle session; a `SessionEvicted` response is answered by
+    /// re-uploading the history from position 0 so the cloud can
+    /// re-prefill).  When a run outgrows the ring, position 0 is dropped
+    /// and an eviction becomes unrecoverable (it then degrades exactly
+    /// like a cloud error: local fallback with a latency budget, a hard
+    /// error without one).  The default comfortably covers `max_seq` of
+    /// every shipped manifest.
+    pub replay_ring_positions: usize,
 }
 
 impl Default for DeploymentConfig {
@@ -101,6 +111,7 @@ impl Default for DeploymentConfig {
             max_new_tokens: 96,
             device_id: 0,
             cloud_token_budget_s: None,
+            replay_ring_positions: 4096,
         }
     }
 }
@@ -140,6 +151,19 @@ pub struct ReactorConfig {
     /// sockets from squatting on `max_conns` slots and locking real
     /// devices out.
     pub hello_timeout_s: f64,
+    /// Seconds an *established* connection may go without a single byte
+    /// read from or written to its peer before it is closed.  Catches
+    /// silently-dead peers (NAT table expiry, powered-off devices) that
+    /// would otherwise hold a `max_conns` slot until a write to them
+    /// failed.  `0.0` (the default) disables the reap: the current edge
+    /// client sends no keepalives and never reconnects, so an idle — but
+    /// alive — infer channel (a long stretch of locally-served tokens)
+    /// must not be cut out from under it.  Deployments whose edges
+    /// reconnect (or traffic-shape every connection) opt in.  Pairs with
+    /// the context store's `session_ttl_s`: once a dead device's
+    /// connections are reaped, its cloud session goes idle and the TTL
+    /// sweep releases the bytes.
+    pub idle_timeout_s: f64,
 }
 
 impl Default for ReactorConfig {
@@ -149,6 +173,7 @@ impl Default for ReactorConfig {
             write_queue_cap: 4 << 20,
             worker_queue_cap: 4096,
             hello_timeout_s: 10.0,
+            idle_timeout_s: 0.0,
         }
     }
 }
@@ -173,6 +198,23 @@ pub struct CloudConfig {
     /// while other devices' pending tokens ride along in every one of
     /// them, so a chatty device cannot starve the batch.
     pub max_catchup_per_pass: usize,
+    /// Global bound on resident per-device cloud context bytes — engine
+    /// KV-cache positions plus buffered (pending) hidden states — across
+    /// the whole worker pool.  The context store meters every device and
+    /// evicts whole *idle* sessions in LRU order (last touch) until the
+    /// pool fits; an evicted device recovers by replaying its hidden
+    /// history from position 0 (see `protocol::Message::SessionEvicted`).
+    /// Enforced as an even `budget / workers` share per worker (static
+    /// device sharding makes the shares independent).  `None` disables
+    /// eviction entirely: sessions live until `EndSession`, exactly the
+    /// pre-store behaviour.
+    pub memory_budget_bytes: Option<u64>,
+    /// Idle TTL for per-device cloud context: a device whose session has
+    /// not been touched (upload, plan, or serve) for this many seconds is
+    /// evicted by the worker's sweep even when the pool is under budget.
+    /// Recovery is the same replay path as a budget eviction.  `None`
+    /// disables the reaper.
+    pub session_ttl_s: Option<f64>,
     /// Connection-reactor bounds (max connections, write-queue cap,
     /// read-pause backpressure threshold).
     pub reactor: ReactorConfig,
@@ -184,6 +226,8 @@ impl Default for CloudConfig {
             workers: 1,
             max_park_s: 30.0,
             max_catchup_per_pass: 32,
+            memory_budget_bytes: None,
+            session_ttl_s: None,
             reactor: ReactorConfig::default(),
         }
     }
@@ -238,10 +282,26 @@ mod tests {
         assert!(r.max_conns >= 2, "room for at least one dual-API device");
         assert!(r.write_queue_cap > 0 && r.worker_queue_cap > 0);
         assert!(r.hello_timeout_s > 0.0, "silent sockets must not squat forever");
+        // idle reap is opt-in: today's edge never reconnects, so a quiet
+        // but alive link must not be cut by default
+        assert_eq!(r.idle_timeout_s, 0.0);
     }
 
     #[test]
     fn deployment_default_has_no_latency_budget() {
         assert!(DeploymentConfig::default().cloud_token_budget_s.is_none());
+    }
+
+    #[test]
+    fn context_store_is_disabled_by_default() {
+        // unset budget/TTL must reproduce the pre-store behaviour exactly
+        let c = CloudConfig::default();
+        assert!(c.memory_budget_bytes.is_none());
+        assert!(c.session_ttl_s.is_none());
+    }
+
+    #[test]
+    fn replay_ring_default_covers_shipped_manifests() {
+        assert!(DeploymentConfig::default().replay_ring_positions >= 4096);
     }
 }

@@ -41,8 +41,10 @@ use crate::config::CloudConfig;
 use crate::model::manifest::ModelDims;
 use crate::net::reactor::{Reactor, ReactorStats};
 
+pub use crate::coordinator::context_store::{ContextStore, ContextStoreStats};
 pub use crate::coordinator::scheduler::{
-    CloudStats, FactoryBuilder, Reply, Router, SchedMsg, Scheduler, SessionFactory, TokenOut,
+    CloudStats, FactoryBuilder, InferOutcome, Reply, Router, SchedMsg, Scheduler, SessionFactory,
+    TokenOut, UploadPayload,
 };
 
 /// A running cloud server bound to a TCP listener.

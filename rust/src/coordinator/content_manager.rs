@@ -23,6 +23,9 @@ struct DeviceState {
     prompt_len: Option<u32>,
     /// Uploaded, not yet consumed hidden states keyed by position.
     pending: BTreeMap<u32, Vec<f32>>,
+    /// Running float count of `pending` (the context store meters
+    /// resident bytes per upload/plan, so this must be O(1)).
+    pending_floats: usize,
     /// Positions `< consumed_upto` have been folded into the KV cache.
     consumed_upto: u32,
     bytes_received: u64,
@@ -180,7 +183,9 @@ impl ContentManager {
             st.duplicates_dropped += 1;
             return;
         }
-        st.pending.insert(pos, payload());
+        let v = payload();
+        st.pending_floats += v.len();
+        st.pending.insert(pos, v);
     }
 
     /// Build the work plan to answer an inference request at `pos`.
@@ -222,6 +227,7 @@ impl ContentManager {
                     .pending
                     .remove(&p)
                     .ok_or_else(|| anyhow::anyhow!("missing prompt hidden at pos {p}"))?;
+                st.pending_floats -= v.len();
                 h.extend_from_slice(&v);
             }
             st.consumed_upto = plen;
@@ -235,6 +241,7 @@ impl ContentManager {
                 .pending
                 .remove(&p)
                 .ok_or_else(|| anyhow::anyhow!("missing hidden at pos {p} (requested {pos})"))?;
+            st.pending_floats -= v.len();
             decode.push((p, v));
             st.consumed_upto += 1;
         }
@@ -312,6 +319,16 @@ impl ContentManager {
         self.devices.remove(&device);
     }
 
+    /// Drop a device's buffered state *without* tombstoning its request:
+    /// the context-store eviction path.  The request is still live on the
+    /// edge — a replayed upload with the same request id must be accepted
+    /// and rebuild the state (which `end_request`'s tombstone would
+    /// block).  Returns the request id the dropped state belonged to, so
+    /// the store can tell a genuine replay from a new request's uploads.
+    pub fn evict_device(&mut self, device: u64) -> Option<u32> {
+        self.devices.remove(&device).map(|st| st.req_id)
+    }
+
     /// Forget a device entirely, including its end-request tombstones.
     /// Used when the device opens a fresh upload channel: a reconnecting
     /// edge process restarts its request ids from 1, so tombstones from
@@ -325,9 +342,39 @@ impl ContentManager {
         self.devices.len()
     }
 
+    /// Whether the manager holds any state for `device` (tombstones do
+    /// not count — they are metadata, not resident bytes).
+    pub fn has_device(&self, device: u64) -> bool {
+        self.devices.contains_key(&device)
+    }
+
+    /// Request id of the state currently held for `device`, if any.
+    pub fn current_req(&self, device: u64) -> Option<u32> {
+        self.devices.get(&device).map(|s| s.req_id)
+    }
+
+    /// Devices with resident state, for the context store's metering
+    /// sweep.
+    pub fn device_ids(&self) -> Vec<u64> {
+        self.devices.keys().copied().collect()
+    }
+
     /// Resident hidden-state floats (for the resource-release invariant).
     pub fn pending_floats(&self) -> usize {
-        self.devices.values().map(|s| s.pending.values().map(|v| v.len()).sum::<usize>()).sum()
+        self.devices.values().map(|s| s.pending_floats).sum()
+    }
+
+    /// Resident hidden-state floats buffered for one device (O(1): the
+    /// context store meters every upload and plan against this).
+    pub fn pending_floats_of(&self, device: u64) -> usize {
+        self.devices.get(&device).map(|s| s.pending_floats).unwrap_or(0)
+    }
+
+    /// Positions of `device`'s current request already folded into the
+    /// engine KV cache — what a resident session's KV footprint scales
+    /// with (0 for unknown devices).
+    pub fn consumed_upto(&self, device: u64) -> u32 {
+        self.devices.get(&device).map(|s| s.consumed_upto).unwrap_or(0)
     }
 
     pub fn duplicates_dropped(&self, device: u64) -> u64 {
@@ -466,6 +513,50 @@ mod tests {
         // the next request is unaffected
         m.upload(1, 2, 0, 2, &[0.0; 2 * D]).unwrap();
         assert_eq!(m.coverage(1, 2, 1, 2), Coverage::Ready);
+    }
+
+    #[test]
+    fn evicted_device_accepts_a_replay_of_the_same_request() {
+        let mut m = cm();
+        let prompt: Vec<f32> = (0..2).flat_map(h).collect();
+        m.upload(1, 3, 0, 2, &prompt).unwrap();
+        m.upload(1, 3, 2, 2, &h(2)).unwrap();
+        m.plan(1, 3, 2, 2).unwrap(); // positions 0..=2 consumed
+        assert_eq!(m.consumed_upto(1), 3);
+        // eviction drops the state but leaves NO tombstone
+        assert_eq!(m.evict_device(1), Some(3));
+        assert!(!m.has_device(1));
+        assert_eq!(m.consumed_upto(1), 0);
+        // the edge replays the SAME request from position 0: accepted,
+        // and the rebuilt plan re-prefills from scratch
+        let replay: Vec<f32> = (0..3).flat_map(h).collect();
+        m.upload(1, 3, 0, 2, &replay).unwrap();
+        assert_eq!(m.coverage(1, 3, 2, 2), Coverage::Ready);
+        let plan = m.plan(1, 3, 2, 2).unwrap();
+        assert_eq!(plan.prefill.as_ref().unwrap().1, 2);
+        assert_eq!(plan.decode.len(), 1);
+    }
+
+    #[test]
+    fn per_device_metering_accessors() {
+        let mut m = cm();
+        m.upload(1, 0, 0, 2, &[0.0; 2 * D]).unwrap();
+        m.upload(2, 0, 0, 1, &h(0)).unwrap();
+        assert_eq!(m.pending_floats_of(1), 2 * D);
+        assert_eq!(m.pending_floats_of(2), D);
+        assert_eq!(m.pending_floats_of(9), 0);
+        let mut ids = m.device_ids();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![1, 2]);
+        m.plan(1, 0, 1, 2).unwrap();
+        assert_eq!(m.pending_floats_of(1), 0);
+        assert_eq!(m.consumed_upto(1), 2);
+        // the O(1) counter tracks the map exactly, duplicates included
+        m.upload(2, 0, 0, 1, &h(0)).unwrap(); // dropped duplicate
+        m.upload(2, 0, 1, 1, &h(1)).unwrap();
+        let by_map: usize =
+            m.devices.get(&2).unwrap().pending.values().map(Vec::len).sum();
+        assert_eq!(m.pending_floats_of(2), by_map);
     }
 
     #[test]

@@ -1,0 +1,616 @@
+//! Cloud context store: every byte of per-device cloud state — engine KV
+//! sessions and content-manager pending buffers — owned under an explicit
+//! memory budget, so "millions of users" stops meaning "millions of KV
+//! caches resident forever".
+//!
+//! Layering (the contract with the scheduler): **the store owns bytes,
+//! the scheduler owns compute.**  A worker never touches its
+//! [`ContentManager`] or its engine sessions directly any more; every
+//! upload, coverage check, plan, and session lookup goes through the
+//! store, which meters residency and refreshes the device's LRU clock as
+//! a side effect.  The scheduler decides *when* to run passes and what
+//! to protect; the store decides *what fits*.
+//!
+//! Accounting: a device's resident bytes are
+//!
+//! ```text
+//!   kv_bytes_per_pos × consumed_upto      (engine KV, while a session exists)
+//! + pending_floats × 4                    (buffered uploads not yet consumed)
+//! ```
+//!
+//! with `kv_bytes_per_pos` from [`ModelDims::cloud_kv_bytes_per_pos`] —
+//! the same rate the DES harness prices, so the simulated and enforced
+//! budgets agree.
+//!
+//! Eviction policy:
+//! * **Budget (LRU)** — [`ContextStore::enforce_budget`] evicts whole
+//!   devices in last-touch order until the shard fits its share of
+//!   `CloudConfig::memory_budget_bytes`.  Callers pass a `protected`
+//!   predicate (the scheduler protects every device with parked
+//!   requests, and enforcement only ever runs *between* passes, so a
+//!   device being served in a batch pass is never evicted).  The single
+//!   most-recently-touched device is additionally never evicted: that
+//!   guarantees forward progress — a device replaying its history after
+//!   an eviction is MRU when its re-upload lands, so even a budget
+//!   smaller than one session cannot evict it back into a replay loop.
+//! * **TTL** — [`ContextStore::reap_ttl`] evicts devices idle past
+//!   `CloudConfig::session_ttl_s` regardless of budget (the abandoned-
+//!   edge-device leak the budget alone would only catch under pressure).
+//!
+//! Eviction is *recoverable*: the store remembers the evicted request id
+//! and the scheduler answers the device's next infer with
+//! [`SessionEvicted`](crate::coordinator::protocol::Message::SessionEvicted)
+//! instead of parking it.  The edge replays its retained exit-layer
+//! hidden states from position 0 (same request id), the replay upload
+//! clears the eviction mark, the content manager rebuilds coverage, and
+//! the next plan re-prefills a fresh engine session — the request
+//! completes with bit-identical tokens at the cost of one extra upload
+//! round trip.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::content_manager::{ContentManager, Coverage, PlanReq, WorkPlan};
+use crate::model::manifest::ModelDims;
+use crate::runtime::traits::CloudEngine;
+
+/// Session factory living on a worker thread (PJRT objects never cross
+/// threads, so the store builds sessions with whatever factory the
+/// worker hands it at the call site).
+pub type SessionFactory = Box<dyn FnMut(u64) -> Result<Box<dyn CloudEngine>>>;
+
+/// Context-store counters, surfaced through
+/// [`CloudStats`](crate::coordinator::scheduler::CloudStats).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ContextStoreStats {
+    /// Resident per-device context bytes (gauge: KV positions + pending
+    /// hidden states, summed over this shard's devices).
+    pub resident_bytes: u64,
+    /// Devices evicted by budget pressure (LRU order).
+    pub evictions: u64,
+    /// Devices evicted by the idle TTL reaper.
+    pub ttl_reaps: u64,
+    /// Evicted contexts rebuilt by an edge replay (a position-0 upload
+    /// with the evicted request id landed after the eviction).
+    pub replays: u64,
+}
+
+impl ContextStoreStats {
+    pub fn merge(&mut self, o: &ContextStoreStats) {
+        self.resident_bytes += o.resident_bytes;
+        self.evictions += o.evictions;
+        self.ttl_reaps += o.ttl_reaps;
+        self.replays += o.replays;
+    }
+}
+
+/// Owner of one worker shard's per-device cloud state.
+pub struct ContextStore {
+    cm: ContentManager,
+    sessions: HashMap<u64, Box<dyn CloudEngine>>,
+    /// LRU clock AND device index: holds exactly the devices with
+    /// resident state (content-manager buffers and/or an engine
+    /// session), refreshed by uploads, plans, and session lookups —
+    /// [`Self::settle`] maintains the invariant.  Sweeps iterate this
+    /// map directly instead of rebuilding a device list per call.
+    last_touch: HashMap<u64, Instant>,
+    /// Running resident gauge, kept in lockstep with every mutation by
+    /// the before/after deltas in [`Self::settle`] — the per-pass budget
+    /// check is O(1) instead of a full shard walk.
+    resident: u64,
+    /// Devices whose context was dropped, keyed to the request id that
+    /// was live at eviction time — the scheduler's "answer the next
+    /// infer with `SessionEvicted`" signal.  Cleared by a position-0
+    /// upload (replay or a new request's prompt), `EndSession`, or a
+    /// device reset.
+    evicted: HashMap<u64, u32>,
+    kv_bytes_per_pos: u64,
+    budget: Option<u64>,
+    ttl: Option<Duration>,
+    evictions: u64,
+    ttl_reaps: u64,
+    replays: u64,
+}
+
+impl ContextStore {
+    /// `budget` is this shard's share (the scheduler splits the global
+    /// `CloudConfig::memory_budget_bytes` evenly across workers).
+    pub fn new(dims: &ModelDims, budget: Option<u64>, ttl_s: Option<f64>) -> Self {
+        Self {
+            cm: ContentManager::new(dims.d_model),
+            sessions: HashMap::new(),
+            last_touch: HashMap::new(),
+            resident: 0,
+            evicted: HashMap::new(),
+            kv_bytes_per_pos: dims.cloud_kv_bytes_per_pos() as u64,
+            budget,
+            ttl: ttl_s.map(|s| Duration::from_secs_f64(s.max(0.0))),
+            evictions: 0,
+            ttl_reaps: 0,
+            replays: 0,
+        }
+    }
+
+    /// Fold one device's state change into the gauge and the index:
+    /// callers snapshot [`Self::device_resident_bytes`] *before* mutating
+    /// and settle with it afterwards.  A device that still holds state is
+    /// (re)stamped as most recently used; one that released everything
+    /// leaves the index, so sweeps and TTL deadlines never see ghosts.
+    fn settle(&mut self, device: u64, before: u64) {
+        let after = self.device_resident_bytes(device);
+        self.resident = self.resident.saturating_sub(before) + after;
+        if self.cm.has_device(device) || self.sessions.contains_key(&device) {
+            self.last_touch.insert(device, Instant::now());
+        } else {
+            self.last_touch.remove(&device);
+        }
+    }
+
+    // -- the scheduler's data path (every call refreshes the LRU clock) --
+
+    /// Ingest an upload, taking ownership of the payload.  An *accepted*
+    /// position-0 upload clears the device's eviction mark: either the
+    /// edge replayed the evicted request's history (counted as a replay)
+    /// or a new request's prompt landed (the old context is moot either
+    /// way).  Mid-stream uploads (start > 0) leave the mark in place —
+    /// they cannot rebuild coverage from position 0 on their own — and
+    /// so does a position-0 upload the content manager fenced or
+    /// rejected (watermark still 0): clearing on those would leave the
+    /// next infer parking forever instead of being told to replay.
+    pub fn upload_owned(
+        &mut self,
+        device: u64,
+        req_id: u32,
+        start_pos: u32,
+        prompt_len: u32,
+        hiddens: Vec<f32>,
+    ) -> Result<()> {
+        let before = self.device_resident_bytes(device);
+        let out = self.cm.upload_owned(device, req_id, start_pos, prompt_len, hiddens);
+        self.settle(device, before);
+        if start_pos == 0 && out.is_ok() && self.cm.watermark(device) > 0 {
+            if let Some(evicted_req) = self.evicted.remove(&device) {
+                if self.cm.current_req(device) == Some(evicted_req) {
+                    self.replays += 1;
+                }
+            }
+        }
+        out
+    }
+
+    /// Pure park/wake classification (no touch: a coverage probe is not
+    /// device activity).
+    pub fn coverage(&self, device: u64, req_id: u32, pos: u32, prompt_len: u32) -> Coverage {
+        self.cm.coverage(device, req_id, pos, prompt_len)
+    }
+
+    /// Capped work plans for a batch pass; every planned device counts as
+    /// touched (it is about to be served).
+    pub fn plan_batch(
+        &mut self,
+        reqs: &[PlanReq],
+        max_decode_per_device: usize,
+    ) -> Vec<Result<WorkPlan>> {
+        reqs.iter()
+            .map(|r| {
+                let before = self.device_resident_bytes(r.device);
+                let cap = max_decode_per_device;
+                let plan = self.cm.plan_capped(r.device, r.req_id, r.pos, r.prompt_len, cap);
+                self.settle(r.device, before);
+                plan
+            })
+            .collect()
+    }
+
+    /// The device's engine session, building one with `factory` on first
+    /// use (or after an eviction dropped the previous one).
+    #[allow(clippy::borrowed_box)] // `&mut SessionFactory` is the worker's field type
+    pub fn session(
+        &mut self,
+        device: u64,
+        factory: &mut SessionFactory,
+    ) -> Result<&mut dyn CloudEngine> {
+        if !self.sessions.contains_key(&device) {
+            // a fresh session makes the consumed KV positions resident
+            let before = self.device_resident_bytes(device);
+            let session = factory(device)?;
+            self.sessions.insert(device, session);
+            self.settle(device, before);
+        } else {
+            self.last_touch.insert(device, Instant::now());
+        }
+        Ok(self.sessions.get_mut(&device).expect("present by construction").as_mut())
+    }
+
+    /// The request id a pending `SessionEvicted` notice carries for this
+    /// device, if its context was evicted and not yet replayed.
+    pub fn evicted_req(&self, device: u64) -> Option<u32> {
+        self.evicted.get(&device).copied()
+    }
+
+    /// Release a finished request (tombstoned against stragglers) and its
+    /// engine session; a pending eviction notice is moot once the request
+    /// is over.
+    pub fn end_request(&mut self, device: u64, req_id: u32) {
+        let before = self.device_resident_bytes(device);
+        self.cm.end_request(device, req_id);
+        self.sessions.remove(&device);
+        self.evicted.remove(&device);
+        // a newer request's racing uploads may have survived the
+        // teardown; settle keeps the device indexed exactly then
+        self.settle(device, before);
+    }
+
+    /// Forget a device entirely (fresh upload-channel Hello).
+    pub fn reset_device(&mut self, device: u64) {
+        let before = self.device_resident_bytes(device);
+        self.cm.reset_device(device);
+        self.sessions.remove(&device);
+        self.evicted.remove(&device);
+        self.settle(device, before);
+    }
+
+    // -- metering ------------------------------------------------------------
+
+    /// Resident context bytes of one device: KV positions already folded
+    /// into its engine session plus buffered hidden states.
+    pub fn device_resident_bytes(&self, device: u64) -> u64 {
+        let kv = if self.sessions.contains_key(&device) {
+            self.kv_bytes_per_pos * self.cm.consumed_upto(device) as u64
+        } else {
+            0
+        };
+        kv + self.cm.pending_floats_of(device) as u64 * 4
+    }
+
+    /// Resident context bytes across this shard (the per-worker gauge;
+    /// the scheduler sums shards into the global one).  O(1): a running
+    /// counter maintained by [`Self::settle`], not a shard walk.
+    pub fn resident_bytes(&self) -> u64 {
+        self.resident
+    }
+
+    /// Recompute the gauge from first principles — the invariant the
+    /// running counter must match; tests pin the two together.
+    #[cfg(test)]
+    fn recompute_resident_bytes(&self) -> u64 {
+        let mut devices: Vec<u64> = self.cm.device_ids();
+        devices.extend(self.sessions.keys().copied());
+        devices.sort_unstable();
+        devices.dedup();
+        devices.into_iter().map(|d| self.device_resident_bytes(d)).sum()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.cm.device_count()
+    }
+
+    pub fn pending_floats(&self) -> usize {
+        self.cm.pending_floats()
+    }
+
+    pub fn stats(&self) -> ContextStoreStats {
+        ContextStoreStats {
+            resident_bytes: self.resident_bytes(),
+            evictions: self.evictions,
+            ttl_reaps: self.ttl_reaps,
+            replays: self.replays,
+        }
+    }
+
+    // -- eviction ------------------------------------------------------------
+
+    fn evict(&mut self, device: u64) {
+        let before = self.device_resident_bytes(device);
+        let req = self.cm.evict_device(device);
+        self.sessions.remove(&device);
+        self.evicted.insert(device, req.unwrap_or(0));
+        self.settle(device, before); // releases the bytes and the index slot
+    }
+
+    /// Evict idle devices in LRU order until the shard fits its budget.
+    /// `protected` devices (the scheduler's parked set) and the single
+    /// most-recently-touched device are never evicted; if nothing
+    /// evictable remains the shard stays over budget rather than break a
+    /// live pass or livelock a replaying device.  Returns the number of
+    /// devices evicted.  The budget check is O(1) per pass; victim
+    /// selection walks the index only while actually evicting.
+    pub fn enforce_budget(&mut self, protected: impl Fn(u64) -> bool) -> usize {
+        let Some(budget) = self.budget else { return 0 };
+        let mut evicted_n = 0;
+        while self.resident > budget {
+            // ties broken by device id so eviction order is deterministic
+            // even when the monotonic clock is coarse
+            let mru =
+                self.last_touch.iter().map(|(&d, &t)| (t, d)).max().map(|(_, d)| d);
+            let victim = self
+                .last_touch
+                .iter()
+                .map(|(&d, &t)| (t, d))
+                .filter(|&(_, d)| !protected(d) && Some(d) != mru)
+                .min()
+                .map(|(_, d)| d);
+            let Some(victim) = victim else { break };
+            self.evict(victim);
+            self.evictions += 1;
+            evicted_n += 1;
+        }
+        evicted_n
+    }
+
+    /// Evict devices idle past the TTL (explicit `now` so tests need no
+    /// sleeping).  Same protection rule as the budget path, minus the
+    /// MRU exemption — an MRU device idle past a whole TTL is still dead
+    /// weight.  Returns the number of devices reaped.
+    pub fn reap_ttl(&mut self, now: Instant, protected: impl Fn(u64) -> bool) -> usize {
+        let Some(ttl) = self.ttl else { return 0 };
+        let stale: Vec<u64> = self
+            .last_touch
+            .iter()
+            .filter(|&(&d, &t)| !protected(d) && now.saturating_duration_since(t) >= ttl)
+            .map(|(&d, _)| d)
+            .collect();
+        let n = stale.len();
+        for d in stale {
+            self.evict(d);
+            self.ttl_reaps += 1;
+        }
+        n
+    }
+
+    /// Earliest instant at which a currently resident, *unprotected*
+    /// device crosses the TTL — the scheduler caps its idle wait here so
+    /// the reaper runs without polling.  Protected (parked) devices are
+    /// excluded: the reaper will skip them anyway, and arming their
+    /// already-expired deadline would spin the worker's wait loop at
+    /// zero timeout until the park resolves.  `None` when the TTL is off
+    /// or nothing unprotected is resident.
+    pub fn next_ttl_deadline(&self, protected: impl Fn(u64) -> bool) -> Option<Instant> {
+        let ttl = self.ttl?;
+        self.last_touch
+            .iter()
+            .filter(|&(&d, _)| !protected(d))
+            .map(|(_, &t)| t + ttl)
+            .min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::test_manifest;
+    use crate::runtime::mock::{MockCloud, MockOracle};
+
+    fn dims() -> ModelDims {
+        test_manifest().model
+    }
+
+    fn factory() -> SessionFactory {
+        Box::new(|_| Ok(Box::new(MockCloud::new(MockOracle::new(1), test_manifest().model)) as _))
+    }
+
+    /// Upload a `plen`-position prompt and plan it to completion, leaving
+    /// the device with a resident session of `plen` KV positions.
+    fn settle(store: &mut ContextStore, f: &mut SessionFactory, device: u64, plen: u32) {
+        let d = dims().d_model;
+        store.upload_owned(device, 1, 0, plen, vec![0.5; plen as usize * d]).unwrap();
+        let req = PlanReq { device, req_id: 1, pos: plen - 1, prompt_len: plen };
+        let plan = store.plan_batch(&[req], usize::MAX).remove(0).unwrap();
+        let s = store.session(device, f).unwrap();
+        s.reset();
+        let (h, len) = plan.prefill.unwrap();
+        s.prefill(&h, len).unwrap();
+    }
+
+    #[test]
+    fn resident_bytes_meter_pending_and_kv() {
+        let m = dims();
+        let mut store = ContextStore::new(&m, None, None);
+        let mut f = factory();
+        store.upload_owned(1, 1, 0, 3, vec![0.5; 3 * m.d_model]).unwrap();
+        // buffered only: 3 positions of pending floats, no KV yet
+        assert_eq!(store.device_resident_bytes(1), 3 * m.d_model as u64 * 4);
+        settle(&mut store, &mut f, 1, 3);
+        // consumed: pending released, 3 KV positions resident
+        assert_eq!(store.device_resident_bytes(1), 3 * m.cloud_kv_bytes_per_pos() as u64);
+        assert_eq!(store.resident_bytes(), store.device_resident_bytes(1));
+        store.end_request(1, 1);
+        assert_eq!(store.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn budget_evicts_in_lru_order() {
+        let m = dims();
+        let kv3 = 3 * m.cloud_kv_bytes_per_pos() as u64;
+        // room for exactly two settled devices
+        let mut store = ContextStore::new(&m, Some(2 * kv3), None);
+        let mut f = factory();
+        for dev in [1u64, 2, 3] {
+            settle(&mut store, &mut f, dev, 3);
+        }
+        assert!(store.resident_bytes() > 2 * kv3);
+        let n = store.enforce_budget(|_| false);
+        assert_eq!(n, 1);
+        // device 1 is the least recently touched -> evicted first
+        assert_eq!(store.evicted_req(1), Some(1));
+        assert!(store.evicted_req(2).is_none() && store.evicted_req(3).is_none());
+        assert!(store.resident_bytes() <= 2 * kv3);
+        assert_eq!(store.stats().evictions, 1);
+    }
+
+    #[test]
+    fn protected_and_mru_devices_are_never_evicted() {
+        let m = dims();
+        let mut store = ContextStore::new(&m, Some(1), None); // absurd budget
+        let mut f = factory();
+        settle(&mut store, &mut f, 1, 3);
+        settle(&mut store, &mut f, 2, 3);
+        settle(&mut store, &mut f, 3, 3); // MRU
+        // device 1 is protected (parked), device 3 is MRU: only 2 goes
+        let n = store.enforce_budget(|d| d == 1);
+        assert_eq!(n, 1);
+        assert!(store.evicted_req(1).is_none(), "protected device evicted");
+        assert_eq!(store.evicted_req(2), Some(1));
+        assert!(store.evicted_req(3).is_none(), "MRU device evicted");
+        // still over budget, but nothing evictable remains -> no livelock
+        assert!(store.resident_bytes() > 1);
+        assert_eq!(store.enforce_budget(|d| d == 1), 0);
+    }
+
+    #[test]
+    fn replay_upload_clears_the_eviction_mark_and_counts() {
+        let m = dims();
+        let mut store = ContextStore::new(&m, Some(1), None);
+        let mut f = factory();
+        settle(&mut store, &mut f, 1, 3);
+        settle(&mut store, &mut f, 2, 3);
+        store.enforce_budget(|_| false);
+        assert_eq!(store.evicted_req(1), Some(1));
+        // a mid-stream upload does NOT clear the mark (cannot rebuild
+        // coverage from position 0 on its own)
+        store.upload_owned(1, 1, 3, 3, vec![0.5; m.d_model]).unwrap();
+        assert_eq!(store.evicted_req(1), Some(1));
+        // the position-0 replay of the same request does, and counts
+        store.upload_owned(1, 1, 0, 3, vec![0.5; 3 * m.d_model]).unwrap();
+        assert!(store.evicted_req(1).is_none());
+        assert_eq!(store.stats().replays, 1);
+        // the rebuilt plan re-prefills from scratch
+        let req = PlanReq { device: 1, req_id: 1, pos: 3, prompt_len: 3 };
+        let plan = store.plan_batch(&[req], usize::MAX).remove(0).unwrap();
+        assert!(plan.prefill.is_some());
+        assert_eq!(plan.decode.len(), 1);
+    }
+
+    #[test]
+    fn fenced_or_partial_uploads_do_not_clear_the_eviction_mark() {
+        let m = dims();
+        let d = m.d_model;
+        let mut store = ContextStore::new(&m, Some(1), None);
+        let mut f = factory();
+        // request 1 of device 1 runs and ends (tombstoned at req 1)
+        settle(&mut store, &mut f, 1, 3);
+        store.end_request(1, 1);
+        // request 2 runs and is evicted under pressure from device 9
+        store.upload_owned(1, 2, 0, 3, vec![0.5; 3 * d]).unwrap();
+        let req = PlanReq { device: 1, req_id: 2, pos: 2, prompt_len: 3 };
+        store.plan_batch(&[req], usize::MAX).remove(0).unwrap();
+        store.session(1, &mut f).unwrap();
+        settle(&mut store, &mut f, 9, 3);
+        store.enforce_budget(|_| false);
+        assert_eq!(store.evicted_req(1), Some(2));
+        // a tombstoned position-0 straggler (old request 1) builds no
+        // coverage: the mark MUST survive, and no replay is counted
+        store.upload_owned(1, 1, 0, 3, vec![0.5; 3 * d]).unwrap();
+        assert_eq!(store.evicted_req(1), Some(2), "fenced upload cleared the mark");
+        assert_eq!(store.stats().replays, 0);
+        // the genuine replay of request 2 clears and counts
+        store.upload_owned(1, 2, 0, 3, vec![0.5; 3 * d]).unwrap();
+        assert!(store.evicted_req(1).is_none());
+        assert_eq!(store.stats().replays, 1);
+    }
+
+    #[test]
+    fn new_request_prompt_clears_the_mark_without_counting_a_replay() {
+        let m = dims();
+        let mut store = ContextStore::new(&m, Some(1), None);
+        let mut f = factory();
+        settle(&mut store, &mut f, 1, 3);
+        settle(&mut store, &mut f, 2, 3);
+        store.enforce_budget(|_| false);
+        assert_eq!(store.evicted_req(1), Some(1));
+        // request 2's prompt upload: the evicted request 1 context is moot
+        store.upload_owned(1, 2, 0, 3, vec![0.5; 3 * m.d_model]).unwrap();
+        assert!(store.evicted_req(1).is_none());
+        assert_eq!(store.stats().replays, 0);
+    }
+
+    #[test]
+    fn ttl_reaps_idle_devices_with_an_explicit_clock() {
+        let m = dims();
+        let mut store = ContextStore::new(&m, None, Some(10.0));
+        let mut f = factory();
+        settle(&mut store, &mut f, 1, 3);
+        let armed =
+            store.next_ttl_deadline(|_| false).expect("TTL armed while state is resident");
+        // not idle long enough: nothing reaped
+        assert_eq!(store.reap_ttl(Instant::now(), |_| false), 0);
+        // idle past the TTL: reaped (and recoverable)
+        assert_eq!(store.reap_ttl(armed + Duration::from_secs(1), |_| false), 1);
+        assert_eq!(store.evicted_req(1), Some(1));
+        assert_eq!(store.resident_bytes(), 0);
+        let s = store.stats();
+        assert_eq!((s.ttl_reaps, s.evictions), (1, 0), "TTL reaps are not budget evictions");
+        assert!(
+            store.next_ttl_deadline(|_| false).is_none(),
+            "nothing resident, nothing to arm"
+        );
+        // a protected (parked) device survives even past the TTL...
+        settle(&mut store, &mut f, 2, 3);
+        let far = Instant::now() + Duration::from_secs(3600);
+        assert_eq!(store.reap_ttl(far, |d| d == 2), 0);
+        // ...and never arms the wake-up deadline (the reaper would skip
+        // it, so arming an expired deadline would spin the worker)
+        assert!(store.next_ttl_deadline(|d| d == 2).is_none());
+        assert!(store.next_ttl_deadline(|_| false).is_some());
+    }
+
+    #[test]
+    fn running_resident_gauge_matches_recomputation() {
+        let m = dims();
+        let mut store = ContextStore::new(&m, Some(1), None);
+        let mut f = factory();
+        // a workload hitting every mutation path: settles, partial
+        // uploads, evictions, replays, ends, resets
+        settle(&mut store, &mut f, 1, 3);
+        store.upload_owned(1, 1, 3, 3, vec![0.5; m.d_model]).unwrap();
+        settle(&mut store, &mut f, 2, 3);
+        store.enforce_budget(|_| false);
+        store.upload_owned(1, 1, 0, 3, vec![0.5; 3 * m.d_model]).unwrap();
+        store.end_request(2, 1);
+        store.reset_device(3); // no-op reset of an unknown device
+        assert_eq!(store.resident_bytes(), store.recompute_resident_bytes());
+        assert!(store.resident_bytes() > 0);
+        store.end_request(1, 1);
+        assert_eq!(store.resident_bytes(), 0);
+        assert_eq!(store.recompute_resident_bytes(), 0);
+    }
+
+    #[test]
+    fn disabled_store_never_evicts() {
+        let m = dims();
+        let mut store = ContextStore::new(&m, None, None);
+        let mut f = factory();
+        for dev in 0..8u64 {
+            settle(&mut store, &mut f, dev, 3);
+        }
+        assert_eq!(store.enforce_budget(|_| false), 0);
+        assert_eq!(store.reap_ttl(Instant::now() + Duration::from_secs(3600), |_| false), 0);
+        assert!(store.next_ttl_deadline(|_| false).is_none());
+        let s = store.stats();
+        assert_eq!((s.evictions, s.ttl_reaps, s.replays), (0, 0, 0));
+        assert_eq!(store.device_count(), 8);
+    }
+
+    #[test]
+    fn end_and_reset_clear_eviction_marks() {
+        let m = dims();
+        let mut store = ContextStore::new(&m, Some(1), None);
+        let mut f = factory();
+        settle(&mut store, &mut f, 1, 3);
+        settle(&mut store, &mut f, 2, 3);
+        store.enforce_budget(|_| false);
+        assert_eq!(store.evicted_req(1), Some(1));
+        store.end_request(1, 1);
+        assert!(store.evicted_req(1).is_none());
+        settle(&mut store, &mut f, 3, 3);
+        store.enforce_budget(|_| false);
+        let marked = store.evicted_req(2).is_some() || store.evicted_req(3).is_some();
+        assert!(marked);
+        for dev in [2u64, 3] {
+            store.reset_device(dev);
+            assert!(store.evicted_req(dev).is_none());
+        }
+    }
+}

@@ -17,6 +17,7 @@
 //! and skipped when it eventually arrives.  A transport failure degrades
 //! the rest of the run to local exits rather than aborting it.
 
+use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Sender};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -190,6 +191,103 @@ enum CloudAnswer {
     DeadlineExpired,
 }
 
+/// Evictions one deferral will recover from before giving up — a cloud
+/// that evicts the session faster than the edge can replay it is treated
+/// like a failing link, not retried forever.
+const REPLAY_LIMIT: usize = 3;
+
+/// Bounded per-request retention of the exit-1 hidden states, kept
+/// whenever the policy may use the cloud:
+///
+/// * the cloud's context store may evict this device's session (memory
+///   budget or idle TTL); the `SessionEvicted` response is answered by
+///   replaying the history from position 0 so the cloud can re-prefill —
+///   one extra upload round trip, bit-identical tokens;
+/// * the no-content-manager / no-parallel-upload ablations retransmit the
+///   history synchronously on every cloud request (paper §5.4).
+///
+/// The ring is bounded by `DeploymentConfig::replay_ring_positions`;
+/// once position 0 has been dropped, [`ReplayRing::history_upto`]
+/// returns `None` and an eviction degrades exactly like a cloud error.
+struct ReplayRing {
+    cap: usize,
+    /// Position of `bufs[0]` (> 0 once the cap has forced drops).
+    start: usize,
+    bufs: VecDeque<Vec<f32>>,
+}
+
+impl ReplayRing {
+    fn new(cap: usize) -> Self {
+        Self { cap: cap.max(1), start: 0, bufs: VecDeque::new() }
+    }
+
+    /// Retain the hidden state of the next position, dropping the oldest
+    /// one past the cap.
+    fn push(&mut self, h: Vec<f32>) {
+        if self.bufs.len() == self.cap {
+            self.bufs.pop_front();
+            self.start += 1;
+        }
+        self.bufs.push_back(h);
+    }
+
+    /// Concatenated history for positions `0..=pos`, or `None` when the
+    /// ring no longer reaches back to position 0 (or has not reached
+    /// `pos` yet).
+    fn history_upto(&self, pos: usize) -> Option<Vec<f32>> {
+        if self.start > 0 || self.bufs.len() < pos + 1 {
+            return None;
+        }
+        let total: usize = self.bufs.iter().take(pos + 1).map(Vec::len).sum();
+        let mut out = Vec::with_capacity(total);
+        for b in self.bufs.iter().take(pos + 1) {
+            out.extend_from_slice(b);
+        }
+        Some(out)
+    }
+}
+
+/// Send the full `0..=pos` hidden-state history on the infer channel as
+/// one `UploadHidden` (start 0, same request id), with the standard byte
+/// accounting.  One definition serves both users of the shape — the
+/// synchronous-retransmit ablations and the eviction replay — so the
+/// wire format and counters cannot drift apart.
+#[allow(clippy::too_many_arguments)]
+fn send_full_history(
+    infer: &mut dyn Transport,
+    ring: &ReplayRing,
+    device_id: u64,
+    req_id: u32,
+    pos: usize,
+    prompt_len: usize,
+    d_model: usize,
+    precision: Precision,
+    counters: &mut RunCounters,
+) -> Result<()> {
+    let all = ring.history_upto(pos).with_context(|| {
+        format!("hidden-state history no longer reaches position 0 at pos {pos} (ring overflow)")
+    })?;
+    anyhow::ensure!(
+        all.len() == (pos + 1) * d_model,
+        "history incomplete: {} floats for pos {pos}",
+        all.len()
+    );
+    let payload = quant::pack(&all, precision);
+    counters.bytes_up += frame_wire_len(UPLOAD_HDR_LEN + payload.len()) as u64;
+    infer.send(
+        &Message::UploadHidden {
+            device_id,
+            req_id,
+            start_pos: 0,
+            count: (pos + 1) as u32,
+            prompt_len: prompt_len as u32,
+            precision,
+            payload,
+        }
+        .encode(),
+    )
+}
+
 /// The edge client: engine + policy + optional cloud link.
 pub struct EdgeClient<E: EdgeEngine> {
     pub engine: E,
@@ -246,15 +344,17 @@ impl<E: EdgeEngine> EdgeClient<E> {
         let pre = self.engine.prefill(&prompt_ids)?;
         cost.edge_s += t0.elapsed().as_secs_f64();
 
-        // h1 history retained whenever the edge may have to transmit
-        // synchronously at request time: no content manager on the server
-        // (full retransmission), or parallel upload disabled (the whole
-        // history goes out on the infer channel; the manager dedups it)
-        let mut h1_history: Vec<Vec<f32>> = Vec::new();
-        let keep_history = !flags.content_manager || !flags.parallel_upload;
+        // h1 history retained UNCONDITIONALLY (but bounded) whenever the
+        // policy may use the cloud: the cloud's context store can evict
+        // this device's session at any idle moment, and recovery replays
+        // the history from position 0.  The non-CM / non-parallel-upload
+        // ablations read the same ring for their synchronous
+        // retransmissions.
+        let keep_history = policy.uses_cloud();
+        let mut ring = ReplayRing::new(self.cfg.replay_ring_positions);
         if keep_history {
             for c in pre.h1.chunks(dims.d_model) {
-                h1_history.push(c.to_vec());
+                ring.push(c.to_vec());
             }
         }
 
@@ -282,7 +382,7 @@ impl<E: EdgeEngine> EdgeClient<E> {
             &policy, req_id, pos, prompt_len,
             pre.exit1.conf, pre.exit1.token,
             Some((pre.exit2.conf, pre.exit2.token)),
-            &mut cost, &mut counters, &mut h1_history,
+            &mut cost, &mut counters, &ring,
         )?;
         trace.push(next.1.clone());
         tokens.push(next.0);
@@ -300,7 +400,7 @@ impl<E: EdgeEngine> EdgeClient<E> {
             cost.edge_s += t0.elapsed().as_secs_f64();
 
             if keep_history {
-                h1_history.push(s1.h1.clone());
+                ring.push(s1.h1.clone());
             }
             if policy.uses_cloud() && flags.parallel_upload && flags.content_manager {
                 let payload = quant::pack(&s1.h1, precision);
@@ -353,7 +453,7 @@ impl<E: EdgeEngine> EdgeClient<E> {
                     );
                     let (tok, exit) = self.cloud_token(
                         req_id, pos, prompt_len, Some(fb),
-                        &mut cost, &mut counters, &mut h1_history,
+                        &mut cost, &mut counters, &ring,
                     )?;
                     (
                         tok,
@@ -408,7 +508,7 @@ impl<E: EdgeEngine> EdgeClient<E> {
         exit2: Option<(f32, i32)>,
         cost: &mut CostBreakdown,
         counters: &mut RunCounters,
-        h1_history: &mut Vec<Vec<f32>>,
+        ring: &ReplayRing,
     ) -> Result<(i32, TokenTrace)> {
         if policy.exit_at_1(conf1) {
             counters.tokens_exit1 += 1;
@@ -427,7 +527,7 @@ impl<E: EdgeEngine> EdgeClient<E> {
         }
         let fb = best_local(policy, conf1, tok1, Some((conf2, tok2)));
         let (tok, exit) =
-            self.cloud_token(req_id, pos, prompt_len, Some(fb), cost, counters, h1_history)?;
+            self.cloud_token(req_id, pos, prompt_len, Some(fb), cost, counters, ring)?;
         Ok((tok, TokenTrace { pos, token: tok, exit, conf1, conf2: Some(conf2) }))
     }
 
@@ -444,7 +544,7 @@ impl<E: EdgeEngine> EdgeClient<E> {
         fallback: Option<(ExitPoint, i32)>,
         cost: &mut CostBreakdown,
         counters: &mut RunCounters,
-        h1_history: &mut Vec<Vec<f32>>,
+        ring: &ReplayRing,
     ) -> Result<(i32, ExitPoint)> {
         // the fallback only engages in latency-aware mode; without a
         // budget the behaviour is the strict "block on the cloud" of the
@@ -468,7 +568,7 @@ impl<E: EdgeEngine> EdgeClient<E> {
         }
 
         counters.cloud_requests += 1;
-        match self.cloud_roundtrip(req_id, pos, prompt_len, cost, counters, h1_history) {
+        match self.cloud_roundtrip(req_id, pos, prompt_len, cost, counters, ring) {
             Ok(CloudAnswer::Answered { token }) => {
                 counters.tokens_cloud += 1;
                 Ok((token, ExitPoint::Cloud))
@@ -488,7 +588,10 @@ impl<E: EdgeEngine> EdgeClient<E> {
         }
     }
 
-    /// One request/response round trip on the infer channel.
+    /// One request/response round trip on the infer channel.  A
+    /// `SessionEvicted` response is recovered from in place: the retained
+    /// history replays from position 0 (same request id) and the request
+    /// is re-issued — the loop then continues waiting for the token.
     #[allow(clippy::too_many_arguments)]
     fn cloud_roundtrip(
         &mut self,
@@ -497,7 +600,7 @@ impl<E: EdgeEngine> EdgeClient<E> {
         prompt_len: usize,
         cost: &mut CostBreakdown,
         counters: &mut RunCounters,
-        h1_history: &mut Vec<Vec<f32>>,
+        ring: &ReplayRing,
     ) -> Result<CloudAnswer> {
         let device_id = self.cfg.device_id;
         let precision = self.precision();
@@ -510,26 +613,17 @@ impl<E: EdgeEngine> EdgeClient<E> {
         // manager, the WHOLE history is retransmitted every request)
         if !flags.content_manager || !flags.parallel_upload {
             let t0 = Instant::now();
-            let all: Vec<f32> = h1_history.iter().flatten().copied().collect();
-            anyhow::ensure!(
-                all.len() == (pos + 1) * dims_d,
-                "history incomplete: {} floats for pos {pos}",
-                all.len()
-            );
-            let payload = quant::pack(&all, precision);
-            counters.bytes_up += frame_wire_len(UPLOAD_HDR_LEN + payload.len()) as u64;
             let link = self.link.as_mut().context("collaborative policy without cloud link")?;
-            link.infer.send(
-                &Message::UploadHidden {
-                    device_id,
-                    req_id,
-                    start_pos: 0,
-                    count: (pos + 1) as u32,
-                    prompt_len: prompt_len as u32,
-                    precision,
-                    payload,
-                }
-                .encode(),
+            send_full_history(
+                &mut *link.infer,
+                ring,
+                device_id,
+                req_id,
+                pos,
+                prompt_len,
+                dims_d,
+                precision,
+                counters,
             )?;
             cost.comm_s += t0.elapsed().as_secs_f64();
         }
@@ -549,9 +643,10 @@ impl<E: EdgeEngine> EdgeClient<E> {
             prompt_len: prompt_len as u32,
             deadline_ms,
         };
-        let frame = req.encode();
-        counters.bytes_up += frame_wire_len(frame.len()) as u64;
-        link.infer.send(&frame)?;
+        let req_frame = req.encode();
+        counters.bytes_up += frame_wire_len(req_frame.len()) as u64;
+        link.infer.send(&req_frame)?;
+        let mut replays = 0usize;
         loop {
             let frame = match deadline {
                 Some(dl) => match link.infer.recv_deadline(dl)? {
@@ -580,6 +675,35 @@ impl<E: EdgeEngine> EdgeClient<E> {
                         anyhow::bail!("cloud error: {msg}");
                     }
                     continue; // stale error for an abandoned deferral
+                }
+                Message::SessionEvicted { device_id: d, req_id: r, pos: p } => {
+                    if d != device_id || r != req_id || p != pos as u32 {
+                        continue; // stale notice for an abandoned deferral
+                    }
+                    anyhow::ensure!(
+                        replays < REPLAY_LIMIT,
+                        "cloud evicted the session {replays} times within one deferral"
+                    );
+                    replays += 1;
+                    counters.context_replays += 1;
+                    // replay the whole history from position 0 on THIS
+                    // channel (ordered ahead of the re-issued request),
+                    // then ask again: the cloud re-prefills and the
+                    // token comes out bit-identical
+                    send_full_history(
+                        &mut *link.infer,
+                        ring,
+                        device_id,
+                        req_id,
+                        pos,
+                        prompt_len,
+                        dims_d,
+                        precision,
+                        counters,
+                    )?;
+                    counters.bytes_up += frame_wire_len(req_frame.len()) as u64;
+                    link.infer.send(&req_frame)?;
+                    continue;
                 }
                 other => anyhow::bail!("unexpected response {other:?}"),
             }

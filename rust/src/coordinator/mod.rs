@@ -1,8 +1,33 @@
 //! The paper's L3 contribution: early-exit edge client, cloud server with
 //! content manager, wire protocol, and exit policy.
+//!
+//! Cloud-side layering (bottom to top):
+//!
+//! * [`content_manager`] — pure hidden-state bookkeeping per device:
+//!   dedup, coverage, and work planning.  Knows nothing about time,
+//!   memory budgets, or engines.
+//! * [`context_store`] — **owns the bytes**: every engine KV session and
+//!   every content-manager buffer lives inside a per-worker store shard
+//!   that meters residency, refreshes an LRU clock on every touch, and
+//!   evicts whole idle devices under `CloudConfig::memory_budget_bytes`
+//!   pressure or past `CloudConfig::session_ttl_s`.  Eviction is
+//!   recoverable: the edge is told via
+//!   [`protocol::Message::SessionEvicted`] and replays its retained
+//!   hidden-state history from position 0.
+//! * [`scheduler`] — **owns the compute**: parks infer requests until
+//!   coverage, coalesces and cross-device-batches engine passes, expires
+//!   deadlines, and runs the store's eviction sweeps strictly *between*
+//!   passes (a device being served is never evicted mid-pass).
+//! * [`cloud`] — the serving binary's shell: acceptor + reactor + worker
+//!   pool wiring.
+//!
+//! The edge side ([`edge`]) keeps a bounded replay ring of its exit-1
+//! hidden states per request, so a `SessionEvicted` response costs one
+//! extra upload round trip and zero token differences.
 pub mod policy;
 pub mod protocol;
 pub mod content_manager;
+pub mod context_store;
 pub mod scheduler;
 pub mod edge;
 pub mod cloud;

@@ -55,6 +55,17 @@ pub enum Message {
     TokenResponse { req_id: u32, pos: u32, token: i32, conf: f32, compute_s: f32 },
     /// Generation finished: release content-manager state (§4.4 step 6).
     EndSession { device_id: u64, req_id: u32 },
+    /// Sent instead of a `TokenResponse` when the device's cloud context
+    /// (engine KV session + buffered hidden states) was evicted by the
+    /// context store (memory budget or idle TTL).  `req_id`/`pos` echo
+    /// the request that hit the eviction, so a stale notice for an
+    /// abandoned deferral can be recognized and skipped (like
+    /// `TokenResponse`/`Error`).  Recovery: the edge re-uploads its
+    /// retained exit-layer hidden states from position 0 under the same
+    /// `req_id` and re-issues the `InferRequest`; the cloud re-prefills
+    /// and serving resumes with bit-identical tokens, at the cost of one
+    /// extra upload round trip.
+    SessionEvicted { device_id: u64, req_id: u32, pos: u32 },
     Ack,
     /// Request failure.  `req_id`/`pos` echo the failed request so the
     /// edge can correlate (or skip) it; both are [`NO_REQ`] for
@@ -75,6 +86,9 @@ pub const UPLOAD_HDR_LEN: usize = 30;
 pub const INFER_REQ_LEN: usize = 25;
 /// Exact encoded `TokenResponse` size.
 pub const TOKEN_RESP_LEN: usize = 21;
+/// Exact encoded `SessionEvicted` size (the DES prices the eviction
+/// notice with it, matching the live edge's byte counters).
+pub const EVICTED_LEN: usize = 17;
 
 /// Borrowed view of an `UploadHidden` frame: identical fields to
 /// [`Message::UploadHidden`], but the payload borrows from the frame
@@ -101,6 +115,7 @@ const TAG_TOKEN: u8 = 4;
 const TAG_END: u8 = 5;
 const TAG_ACK: u8 = 6;
 const TAG_ERROR: u8 = 7;
+const TAG_EVICTED: u8 = 8;
 
 impl Message {
     pub fn encode(&self) -> Vec<u8> {
@@ -159,6 +174,12 @@ impl Message {
                 b.extend_from_slice(&device_id.to_le_bytes());
                 b.extend_from_slice(&req_id.to_le_bytes());
             }
+            Message::SessionEvicted { device_id, req_id, pos } => {
+                b.push(TAG_EVICTED);
+                b.extend_from_slice(&device_id.to_le_bytes());
+                b.extend_from_slice(&req_id.to_le_bytes());
+                b.extend_from_slice(&pos.to_le_bytes());
+            }
             Message::Ack => b.push(TAG_ACK),
             Message::Error { req_id, pos, msg } => {
                 b.push(TAG_ERROR);
@@ -213,6 +234,9 @@ impl Message {
                 compute_s: r.f32()?,
             },
             TAG_END => Message::EndSession { device_id: r.u64()?, req_id: r.u32()? },
+            TAG_EVICTED => {
+                Message::SessionEvicted { device_id: r.u64()?, req_id: r.u32()?, pos: r.u32()? }
+            }
             TAG_ACK => Message::Ack,
             TAG_ERROR => {
                 let req_id = r.u32()?;
@@ -345,6 +369,8 @@ mod tests {
             compute_s: 1e-3,
         });
         roundtrip(Message::EndSession { device_id: 3, req_id: 9 });
+        roundtrip(Message::SessionEvicted { device_id: 3, req_id: 9, pos: 55 });
+        roundtrip(Message::SessionEvicted { device_id: u64::MAX, req_id: u32::MAX, pos: 0 });
         roundtrip(Message::Ack);
         roundtrip(Message::Error { req_id: 9, pos: 55, msg: "kaboom — ω".into() });
         roundtrip(Message::Error { req_id: super::NO_REQ, pos: super::NO_REQ, msg: "hello?".into() });
@@ -367,6 +393,8 @@ mod tests {
         assert_eq!(rq.encode().len(), INFER_REQ_LEN);
         let tk = Message::TokenResponse { req_id: 1, pos: 0, token: 0, conf: 0.0, compute_s: 0.0 };
         assert_eq!(tk.encode().len(), TOKEN_RESP_LEN);
+        let ev = Message::SessionEvicted { device_id: 1, req_id: 1, pos: 0 };
+        assert_eq!(ev.encode().len(), EVICTED_LEN);
     }
 
     #[test]
@@ -381,6 +409,10 @@ mod tests {
         .encode();
         for cut in 1..enc.len() {
             assert!(Message::decode(&enc[..cut]).is_err(), "cut at {cut}");
+        }
+        let ev = Message::SessionEvicted { device_id: 3, req_id: 9, pos: 1 }.encode();
+        for cut in 1..ev.len() {
+            assert!(Message::decode(&ev[..cut]).is_err(), "evicted cut at {cut}");
         }
     }
 

@@ -10,10 +10,17 @@
 //! path and no retry counters anywhere.
 //!
 //! Architecture:
-//! * **Workers** (`CloudConfig::workers`): each worker thread owns its own
-//!   engine sessions and content-manager shard.  PJRT handles are `!Send`,
-//!   so the session factory is *built on the worker thread* via the
-//!   [`FactoryBuilder`] and nothing engine-related ever crosses threads.
+//! * **Workers** (`CloudConfig::workers`): each worker thread owns a
+//!   [`ContextStore`] shard holding its engine sessions and
+//!   content-manager state.  PJRT handles are `!Send`, so the session
+//!   factory is *built on the worker thread* via the [`FactoryBuilder`]
+//!   and nothing engine-related ever crosses threads.
+//! * **Bounded memory**: the store meters every device's resident bytes
+//!   and, between passes, TTL-reaps idle sessions and LRU-evicts under
+//!   `CloudConfig::memory_budget_bytes` pressure.  An infer request for
+//!   an evicted device resolves with [`InferOutcome::Evicted`] instead of
+//!   parking; the edge replays its history and the request completes
+//!   with bit-identical tokens (see `coordinator::context_store`).
 //! * **Sharding**: devices map to workers statically
 //!   (`device_id % workers`), so all messages of one device are totally
 //!   ordered by its worker's queue while independent devices are served
@@ -53,12 +60,13 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Context, Result};
 
 use crate::config::CloudConfig;
-use crate::coordinator::content_manager::{ContentManager, Coverage, PlanReq, WorkPlan};
+use crate::coordinator::content_manager::{Coverage, PlanReq, WorkPlan};
+use crate::coordinator::context_store::{ContextStore, ContextStoreStats};
 use crate::model::manifest::ModelDims;
+use crate::quant::{self, Precision};
 use crate::runtime::traits::{BatchItem, CloudEngine};
 
-/// Session factory living on a worker thread.
-pub type SessionFactory = Box<dyn FnMut(u64) -> Result<Box<dyn CloudEngine>>>;
+pub use crate::coordinator::context_store::SessionFactory;
 
 /// Builds one [`SessionFactory`] per worker, invoked on that worker's own
 /// thread (PJRT objects never cross threads).
@@ -74,28 +82,67 @@ pub struct TokenOut {
     pub compute_s: f64,
 }
 
+/// How an infer request resolved (successfully).
+#[derive(Debug, Clone, Copy)]
+pub enum InferOutcome {
+    /// A served token.
+    Token(TokenOut),
+    /// The device's cloud context was evicted by the context store
+    /// (memory budget or idle TTL) — there is nothing to serve the
+    /// request from.  The connection layer turns this into a
+    /// [`SessionEvicted`](crate::coordinator::protocol::Message::SessionEvicted)
+    /// frame; the edge replays its hidden-state history from position 0
+    /// and re-issues the request.
+    Evicted,
+}
+
 /// Single-use completion sink for one infer request.  The blocking path
 /// wraps an mpsc sender ([`Reply::channel`]); the reactor wraps a closure
 /// that posts a completion record and wakes its poll loop ([`Reply::new`]).
 /// Dropping a `Reply` without calling [`Reply::send`] signals "never
 /// answered" to whoever holds the other end (a channel-backed reply makes
 /// the receiver's `recv` fail, exactly like the old dropped sender did).
-pub struct Reply(Box<dyn FnOnce(Result<TokenOut>) + Send>);
+pub struct Reply(Box<dyn FnOnce(Result<InferOutcome>) + Send>);
 
 impl Reply {
-    pub fn new(f: impl FnOnce(Result<TokenOut>) + Send + 'static) -> Self {
+    pub fn new(f: impl FnOnce(Result<InferOutcome>) + Send + 'static) -> Self {
         Reply(Box::new(f))
     }
 
     /// The classic blocking shape: the caller parks on `rx.recv()`.
-    pub fn channel(tx: Sender<Result<TokenOut>>) -> Self {
+    pub fn channel(tx: Sender<Result<InferOutcome>>) -> Self {
         Self::new(move |out| {
             let _ = tx.send(out);
         })
     }
 
-    pub fn send(self, out: Result<TokenOut>) {
+    pub fn send(self, out: Result<InferOutcome>) {
         (self.0)(out)
+    }
+
+    fn send_token(self, t: TokenOut) {
+        self.send(Ok(InferOutcome::Token(t)))
+    }
+}
+
+/// Payload of an upload message.  The reactor forwards the *packed* wire
+/// payload and the owning worker unpacks it (f16→f32), so ingest CPU
+/// scales with the worker pool instead of serializing on the one reactor
+/// thread; in-process senders (tests, benches, harnesses) pass floats
+/// directly.
+pub enum UploadPayload {
+    /// Already-unpacked hidden floats.
+    Floats(Vec<f32>),
+    /// Packed wire payload, unpacked on the owning worker thread.
+    Packed { bytes: Vec<u8>, precision: Precision },
+}
+
+impl UploadPayload {
+    fn into_floats(self) -> Result<Vec<f32>> {
+        match self {
+            UploadPayload::Floats(v) => Ok(v),
+            UploadPayload::Packed { bytes, precision } => quant::unpack(&bytes, precision),
+        }
     }
 }
 
@@ -113,7 +160,7 @@ pub enum SchedMsg {
         req_id: u32,
         start_pos: u32,
         prompt_len: u32,
-        hiddens: Vec<f32>,
+        payload: UploadPayload,
     },
     Infer {
         device: u64,
@@ -161,6 +208,9 @@ pub struct CloudStats {
     /// Widest pass so far, in devices — how much cross-device batching
     /// the traffic actually yielded.
     pub batch_devices_max: usize,
+    /// Context-store counters (resident bytes, evictions, TTL reaps,
+    /// replays), summed over the pool's shards.
+    pub context: ContextStoreStats,
     /// Workers contributing to this snapshot.
     pub workers: usize,
 }
@@ -177,6 +227,7 @@ impl CloudStats {
         self.engine_passes += o.engine_passes;
         self.batched_items += o.batched_items;
         self.batch_devices_max = self.batch_devices_max.max(o.batch_devices_max);
+        self.context.merge(&o.context);
         self.workers += o.workers;
     }
 }
@@ -241,8 +292,12 @@ impl Scheduler {
     /// on each worker thread to construct that worker's session factory.
     pub fn spawn(dims: ModelDims, cfg: CloudConfig, builder: FactoryBuilder) -> Result<Scheduler> {
         let workers = cfg.workers.max(1);
-        let max_park = Duration::from_secs_f64(cfg.max_park_s.max(0.001));
-        let max_catchup = cfg.max_catchup_per_pass.max(1);
+        // the global memory budget splits into even per-worker shares:
+        // static device sharding makes each shard's enforcement
+        // independent, and the shares sum back to the global bound
+        let mut wcfg = cfg;
+        wcfg.memory_budget_bytes =
+            cfg.memory_budget_bytes.map(|b| (b / workers as u64).max(1));
         let mut txs = Vec::with_capacity(workers);
         let mut depths = Vec::with_capacity(workers);
         let mut handles = Vec::with_capacity(workers);
@@ -262,7 +317,7 @@ impl Scheduler {
                             return CloudStats::default();
                         }
                     };
-                    Worker::new(dims, factory, max_park, max_catchup, wdepth).run(rx)
+                    Worker::new(dims, factory, &wcfg, wdepth).run(rx)
                 })?;
             txs.push(tx);
             depths.push(depth);
@@ -332,12 +387,12 @@ struct Parked {
 /// in front of already-ready work.
 const MAX_DRAIN: usize = 256;
 
-/// One worker: engine sessions + content-manager shard + parking lot for
-/// the devices assigned to it.
+/// One worker: a context-store shard (which owns the engine sessions and
+/// hidden-state buffers — the bytes) plus the parking lot and pass logic
+/// (the compute) for the devices assigned to it.
 struct Worker {
-    cm: ContentManager,
+    store: ContextStore,
     factory: SessionFactory,
-    sessions: HashMap<u64, Box<dyn CloudEngine>>,
     parked: HashMap<u64, Vec<Parked>>,
     /// Connection-pair nonce each device is pinned to (set by `Reset`).
     session_of: HashMap<u64, u64>,
@@ -355,18 +410,16 @@ impl Worker {
     fn new(
         dims: ModelDims,
         factory: SessionFactory,
-        max_park: Duration,
-        max_catchup: usize,
+        cfg: &CloudConfig,
         depth: Arc<AtomicUsize>,
     ) -> Worker {
         Worker {
-            cm: ContentManager::new(dims.d_model),
+            store: ContextStore::new(&dims, cfg.memory_budget_bytes, cfg.session_ttl_s),
             factory,
-            sessions: HashMap::new(),
             parked: HashMap::new(),
             session_of: HashMap::new(),
-            max_park,
-            max_catchup,
+            max_park: Duration::from_secs_f64(cfg.max_park_s.max(0.001)),
+            max_catchup: cfg.max_catchup_per_pass.max(1),
             depth,
             stats: CloudStats { workers: 1, ..CloudStats::default() },
         }
@@ -385,7 +438,9 @@ impl Worker {
     fn run(mut self, rx: Receiver<SchedMsg>) -> CloudStats {
         'serve: loop {
             // Block for the next message; with parked deadlines armed,
-            // wake at the earliest one to expire it.
+            // wake at the earliest one to expire it, and with a session
+            // TTL configured, wake when the oldest idle context crosses
+            // it so the reaper needs no polling.
             let msg = match self.next_deadline() {
                 Some(deadline) => {
                     match rx.recv_timeout(deadline.saturating_duration_since(Instant::now())) {
@@ -406,7 +461,10 @@ impl Worker {
                 },
             };
             match msg {
-                None => self.expire_overdue(Instant::now()),
+                None => {
+                    self.expire_overdue(Instant::now());
+                    self.sweep_store();
+                }
                 Some(first) => {
                     // Greedy drain: fold every already-queued message
                     // into this wake before touching the engine, so the
@@ -436,9 +494,13 @@ impl Worker {
                     // engine was busy, so mid-drain traffic joins the
                     // very next pass instead of waiting out a deep
                     // backlog behind the whole leftover loop.
+                    // Store housekeeping runs strictly BETWEEN passes
+                    // (never inside one), so a device being served in a
+                    // batch pass can never be evicted mid-pass.
                     loop {
                         let leftover = self.batch_pass();
                         self.expire_overdue(Instant::now());
+                        self.sweep_store();
                         if !leftover {
                             break;
                         }
@@ -468,14 +530,23 @@ impl Worker {
     /// after the queue drain).  Returns `false` on `Shutdown`.
     fn handle(&mut self, msg: SchedMsg) -> bool {
         match msg {
-            SchedMsg::Upload { device, session, req_id, start_pos, prompt_len, hiddens } => {
+            SchedMsg::Upload { device, session, req_id, start_pos, prompt_len, payload } => {
                 if self.stale_session(device, session) {
                     log::debug!("dropping stale-session upload from device {device}");
                     return true;
                 }
                 self.stats.uploads += 1;
+                // packed payloads unpack HERE, on the owning worker —
+                // the reactor thread never pays the f16→f32 conversion
+                let hiddens = match payload.into_floats() {
+                    Ok(h) => h,
+                    Err(e) => {
+                        log::warn!("upload from device {device} rejected: {e:#}");
+                        return true;
+                    }
+                };
                 if let Err(e) =
-                    self.cm.upload_owned(device, req_id, start_pos, prompt_len, hiddens)
+                    self.store.upload_owned(device, req_id, start_pos, prompt_len, hiddens)
                 {
                     log::warn!("upload from device {device} rejected: {e:#}");
                 }
@@ -486,6 +557,18 @@ impl Worker {
                     let _ = reply.send(Err(anyhow!(
                         "infer request {req_id} from a stale connection of device {device}"
                     )));
+                    return true;
+                }
+                if self.store.evicted_req(device).is_some() {
+                    // the device's context is gone: parking would wait
+                    // forever for uploads the edge believes have already
+                    // landed.  Tell it to replay instead; the position-0
+                    // re-upload clears the mark and the re-issued
+                    // request parks and serves normally.  Not counted in
+                    // requests_served — the same logical request comes
+                    // back and is served (or fails) exactly once; the
+                    // bounce is visible as `context.replays`.
+                    reply.send(Ok(InferOutcome::Evicted));
                     return true;
                 }
                 let cap = Instant::now() + self.max_park;
@@ -500,8 +583,7 @@ impl Worker {
                     log::debug!("ignoring stale-session EndSession from device {device}");
                     return true;
                 }
-                self.cm.end_request(device, req_id);
-                self.sessions.remove(&device);
+                self.store.end_request(device, req_id);
                 if let Some(queue) = self.parked.get_mut(&device) {
                     // fail parked requests of the ended (or older)
                     // request; later ones keep waiting for coverage
@@ -524,8 +606,7 @@ impl Worker {
                 }
             }
             SchedMsg::Reset { device, session } => {
-                self.cm.reset_device(device);
-                self.sessions.remove(&device);
+                self.store.reset_device(device);
                 if session != 0 {
                     self.session_of.insert(device, session);
                 }
@@ -540,6 +621,10 @@ impl Worker {
                 }
             }
             SchedMsg::Stats { reply } => {
+                // enforce before reporting, so a stats reader never sees
+                // a transiently over-budget gauge for state a sweep
+                // would have already released
+                self.sweep_store();
                 self.refresh_gauges();
                 let _ = reply.send(self.stats.clone());
             }
@@ -548,14 +633,35 @@ impl Worker {
         true
     }
 
+    /// Store housekeeping between passes: TTL-reap idle devices, then
+    /// enforce the memory budget.  Devices with parked requests are
+    /// protected — they are either waiting on in-flight uploads or about
+    /// to be served by the next pass.
+    fn sweep_store(&mut self) {
+        let parked = &self.parked;
+        let store = &mut self.store;
+        store.reap_ttl(Instant::now(), |d| parked.contains_key(&d));
+        store.enforce_budget(|d| parked.contains_key(&d));
+    }
+
     fn refresh_gauges(&mut self) {
-        self.stats.active_devices = self.cm.device_count();
-        self.stats.pending_floats = self.cm.pending_floats();
+        self.stats.active_devices = self.store.device_count();
+        self.stats.pending_floats = self.store.pending_floats();
         self.stats.parked = self.parked.values().map(Vec::len).sum();
+        self.stats.context = self.store.stats();
     }
 
     fn next_deadline(&self) -> Option<Instant> {
-        self.parked.values().flatten().map(|p| p.deadline).min()
+        let parked = self.parked.values().flatten().map(|p| p.deadline).min();
+        // parked (protected) devices are excluded from the TTL deadline —
+        // the reaper skips them, so arming their expired deadline would
+        // spin this wait at zero timeout; their own park deadline bounds
+        // the wake instead
+        let ttl = self.store.next_ttl_deadline(|d| self.parked.contains_key(&d));
+        match (parked, ttl) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
     }
 
     /// Fail every parked request whose deadline has passed.  The edge
@@ -605,7 +711,7 @@ impl Worker {
             let mut i = 0;
             while i < queue.len() {
                 let p = &queue[i];
-                match self.cm.coverage(device, p.req_id, p.pos, p.prompt_len) {
+                match self.store.coverage(device, p.req_id, p.pos, p.prompt_len) {
                     Coverage::Ready => ready.push(queue.remove(i)),
                     Coverage::Stale => {
                         let p = queue.remove(i);
@@ -645,7 +751,7 @@ impl Worker {
                 }
             })
             .collect();
-        let plans = self.cm.plan_batch(&reqs, self.max_catchup);
+        let plans = self.store.plan_batch(&reqs, self.max_catchup);
 
         // --- one padded engine pass over every planned device -------------
         let t0 = Instant::now();
@@ -658,23 +764,18 @@ impl Worker {
                 Ok(plan) => {
                     let frontier = plan.frontier;
                     let n_items = plan.decode.len() as u64;
-                    let session = match self.sessions.entry(device) {
-                        std::collections::hash_map::Entry::Occupied(o) => o.into_mut(),
-                        std::collections::hash_map::Entry::Vacant(v) => {
-                            match (self.factory)(device) {
-                                Ok(s) => v.insert(s),
-                                Err(e) => {
-                                    served.push((device, ready, Err(e)));
-                                    continue;
-                                }
-                            }
+                    let session = match self.store.session(device, &mut self.factory) {
+                        Ok(s) => s,
+                        Err(e) => {
+                            served.push((device, ready, Err(e)));
+                            continue;
                         }
                     };
                     // counted only once a session actually runs the work,
                     // so failed devices don't inflate batching stats
                     pass_devices += 1;
                     pass_items += n_items;
-                    run_device_pass(session.as_mut(), plan).map(|tokens| (tokens, frontier))
+                    run_device_pass(session, plan).map(|tokens| (tokens, frontier))
                 }
             };
             served.push((device, ready, outcome));
@@ -695,8 +796,7 @@ impl Worker {
                     for p in ready {
                         if let Some(&(token, conf)) = tokens.get(&p.pos) {
                             self.stats.requests_served += 1;
-                            let _ =
-                                p.reply.send(Ok(TokenOut { token, conf, compute_s: elapsed }));
+                            p.reply.send_token(TokenOut { token, conf, compute_s: elapsed });
                         } else if p.pos < frontier {
                             // position consumed by an earlier pass and
                             // never re-requested: nothing left to compute

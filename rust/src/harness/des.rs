@@ -26,7 +26,7 @@ use crate::net::profiles::LinkProfile;
 use crate::net::simulated::SimLink;
 use crate::util::rng::Rng;
 
-use crate::coordinator::protocol::{INFER_REQ_LEN, TOKEN_RESP_LEN, UPLOAD_HDR_LEN};
+use crate::coordinator::protocol::{EVICTED_LEN, INFER_REQ_LEN, TOKEN_RESP_LEN, UPLOAD_HDR_LEN};
 use crate::net::codec::frame_wire_len;
 
 /// Fixed wire sizes (codec frame prefix + exact message header bytes;
@@ -37,6 +37,7 @@ use crate::net::codec::frame_wire_len;
 const UPLOAD_HDR: usize = frame_wire_len(UPLOAD_HDR_LEN);
 const REQ_BYTES: usize = frame_wire_len(INFER_REQ_LEN);
 const RESP_BYTES: usize = frame_wire_len(TOKEN_RESP_LEN);
+const EVICTED_BYTES: usize = frame_wire_len(EVICTED_LEN);
 
 /// Deployment strategy to replay.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -69,6 +70,35 @@ pub struct SimConfig {
     /// another.  `false` reproduces the pre-batching per-device serving
     /// law.
     pub cross_device_batch: bool,
+    /// Model the cloud context store's memory budget
+    /// (`CloudConfig::memory_budget_bytes`): per-client resident context
+    /// — KV positions at [`ModelDims::cloud_kv_bytes_per_pos`] — is
+    /// metered per worker (even `budget / workers` shares), and when a
+    /// shard runs over, idle contexts are LRU-evicted.  A client whose
+    /// context was evicted mid-request pays a full history re-upload
+    /// plus a re-prefill on its next cloud call — extra bytes and time,
+    /// never different tokens.  `None` disables the law (today's
+    /// behaviour: zero evictions, zero extra uploads).
+    pub memory_budget_bytes: Option<u64>,
+    /// Model the store's idle TTL (`CloudConfig::session_ttl_s`):
+    /// contexts untouched for this many simulated seconds are reaped
+    /// when their worker next starts a pass.  Recovery is priced the
+    /// same as a budget eviction.
+    pub session_ttl_s: Option<f64>,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self {
+            strategy: Strategy::CeCollm(AblationFlags::default()),
+            link: LinkProfile::wifi(),
+            seed: 0,
+            workers: 1,
+            cross_device_batch: false,
+            memory_budget_bytes: None,
+            session_ttl_s: None,
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -88,6 +118,12 @@ pub struct SimOutcome {
     /// this equals the number of cloud calls; with it, co-resident calls
     /// fuse and the count drops — the ratio is the batching win.
     pub cloud_passes: u64,
+    /// Contexts evicted by memory-budget pressure (LRU).
+    pub cloud_evictions: u64,
+    /// Contexts reaped by the idle TTL.
+    pub cloud_ttl_reaps: u64,
+    /// Mid-request evictions recovered by a priced history replay.
+    pub cloud_replays: u64,
 }
 
 impl SimOutcome {
@@ -117,6 +153,19 @@ struct CloudCall {
     /// rides along in another call's pass.
     items: usize,
     resp_bytes: usize,
+    /// Token position the call answers — sizes the resident KV context
+    /// after the pass, and the history replay if the context was lost.
+    pos: usize,
+    /// This call prefills the cloud anyway (first cloud step of its
+    /// request), so a lost context costs it nothing extra.
+    prefills: bool,
+    /// Bytes of a full-history re-upload, if an eviction must be
+    /// recovered before this call (0 when the law is off or the
+    /// strategy retains no cloud context).
+    replay_bytes: usize,
+    /// Re-prefill seconds a recovery adds to this call's busy time
+    /// (pre-sampled so the rng stream stays deterministic per config).
+    replay_prefill_s: f64,
 }
 
 struct HeapEntry {
@@ -167,6 +216,11 @@ struct ClientSim<'a> {
     edge_t: f64,
     /// Arrival time of the newest upload the cloud may need.
     upload_ready: f64,
+    /// Price context-store evictions: each cloud call pre-samples its
+    /// would-be recovery cost (replay upload + re-prefill).  Off when
+    /// the sim has no budget/TTL, keeping the rng stream — and thus
+    /// every cost — bit-identical to the pre-store law.
+    price_replay: bool,
     /// Pending (not yet cloud-requested) call produced by `advance`.
     cost: CostBreakdown,
     counters: RunCounters,
@@ -174,6 +228,7 @@ struct ClientSim<'a> {
 }
 
 impl<'a> ClientSim<'a> {
+    #[allow(clippy::too_many_arguments)]
     fn new(
         id: usize,
         traces: &'a [Trace],
@@ -182,6 +237,7 @@ impl<'a> ClientSim<'a> {
         cost_model: &'a CostModel,
         link: LinkProfile,
         seed: u64,
+        price_replay: bool,
     ) -> Self {
         Self {
             id,
@@ -196,6 +252,7 @@ impl<'a> ClientSim<'a> {
             step_idx: 0,
             edge_t: 0.0,
             upload_ready: 0.0,
+            price_replay,
             cost: CostBreakdown::default(),
             counters: RunCounters::default(),
             done: false,
@@ -288,6 +345,10 @@ impl<'a> ClientSim<'a> {
             busy_s: busy,
             items: tr.steps.len(),
             resp_bytes: UPLOAD_HDR + tr.tokens.len(),
+            pos: 0,
+            prefills: true,
+            replay_bytes: 0,
+            replay_prefill_s: 0.0,
         })
     }
 
@@ -343,6 +404,12 @@ impl<'a> ClientSim<'a> {
                 busy_s: busy,
                 items: 1,
                 resp_bytes: RESP_BYTES,
+                // the naïve split retransmits everything anyway: no
+                // retained cloud context, nothing to evict
+                pos: 0,
+                prefills: first,
+                replay_bytes: 0,
+                replay_prefill_s: 0.0,
             });
         }
     }
@@ -451,6 +518,16 @@ impl<'a> ClientSim<'a> {
                             .cost_model
                             .sample_cloud_request(step.cloud_catchup.max(1), &mut self.rng);
                     }
+                    // recovery cost of a context-store eviction hitting
+                    // this call: full-history re-upload + re-prefill
+                    // (pre-sampled; only priced if the eviction happens)
+                    let price = self.price_replay && flags.content_manager;
+                    let replay_bytes = if price { self.hidden_bytes(step.pos + 1) } else { 0 };
+                    let replay_prefill_s = if price {
+                        self.cost_model.sample_cloud_prefill(&mut self.rng)
+                    } else {
+                        0.0
+                    };
                     return Some(CloudCall {
                         client: self.id,
                         arrive_s: req_arrive,
@@ -458,6 +535,10 @@ impl<'a> ClientSim<'a> {
                         busy_s: busy,
                         items: step.cloud_catchup.max(1),
                         resp_bytes: RESP_BYTES,
+                        pos: step.pos,
+                        prefills: step.cloud_prefill,
+                        replay_bytes,
+                        replay_prefill_s,
                     });
                 }
             }
@@ -486,21 +567,44 @@ impl<'a> ClientSim<'a> {
     }
 }
 
+/// Per-client cloud context the eviction law tracks (the real store's
+/// resident gauge + LRU clock, one entry per client).
+#[derive(Clone, Copy, Default)]
+struct SimCtx {
+    resident_bytes: u64,
+    last_touch_s: f64,
+    alive: bool,
+}
+
 /// Replay `traces_per_client` under `cfg`.  The cloud is a pool of
 /// `cfg.workers` engines (1 = the paper's single GPU); each client's
 /// requests run FCFS on its statically assigned worker, and a request
 /// whose uploads are still in flight parks until `ready_s` — the same
 /// dependency rule the real scheduler enforces.
+///
+/// With `memory_budget_bytes`/`session_ttl_s` set, the context store's
+/// law runs on top: per-client resident KV context is metered against an
+/// even per-worker budget share, idle contexts are LRU-evicted (or
+/// TTL-reaped as a worker's clock passes their deadline), and a client
+/// whose context was lost mid-request pays a full-history re-upload plus
+/// a re-prefill before its next call serves — more bytes and time, the
+/// same tokens.  A context is implicitly released when its client's next
+/// request prefills (the DES replays requests back-to-back, so this
+/// coincides with the real `EndSession` release up to the think-time the
+/// traces do not model).
 pub fn simulate(
     traces_per_client: &[Vec<Trace>],
     dims: &ModelDims,
     cost_model: &CostModel,
     cfg: &SimConfig,
 ) -> SimOutcome {
+    let price_replay = cfg.memory_budget_bytes.is_some() || cfg.session_ttl_s.is_some();
     let mut clients: Vec<ClientSim> = traces_per_client
         .iter()
         .enumerate()
-        .map(|(i, t)| ClientSim::new(i, t, cfg.strategy, dims, cost_model, cfg.link, cfg.seed))
+        .map(|(i, t)| {
+            ClientSim::new(i, t, cfg.strategy, dims, cost_model, cfg.link, cfg.seed, price_replay)
+        })
         .collect();
 
     let mut heap: BinaryHeap<HeapEntry> = BinaryHeap::new();
@@ -519,6 +623,15 @@ pub fn simulate(
 
     let workers = cfg.workers.max(1);
     let marginal_s = cost_model.cloud_batch_marginal.mean_s;
+    let kv_per_pos = dims.cloud_kv_bytes_per_pos() as u64;
+    let budget_share = cfg.memory_budget_bytes.map(|b| (b / workers as u64).max(1));
+    // only CE-CoLLM keeps per-device cloud context between calls; the
+    // baselines are stateless per call, so the law is a no-op for them
+    let track_ctx = price_replay && matches!(cfg.strategy, Strategy::CeCollm(_));
+    let mut ctx: Vec<SimCtx> = vec![SimCtx::default(); clients.len()];
+    let mut cloud_evictions = 0u64;
+    let mut cloud_ttl_reaps = 0u64;
+    let mut cloud_replays = 0u64;
     let mut worker_free = vec![0.0f64; workers];
     let mut cloud_busy_total = 0.0f64;
     let mut cloud_passes = 0u64;
@@ -528,21 +641,62 @@ pub fn simulate(
             Some((s, _)) if *s == entry.seq => {}
             _ => continue,
         }
-        let (_, call) = pending[entry.client].take().expect("pending call");
+        let (_, mut call) = pending[entry.client].take().expect("pending call");
         let w = call.client % workers;
-        let start = worker_free[w].max(call.arrive_s).max(call.ready_s);
+        let mut start = worker_free[w].max(call.arrive_s).max(call.ready_s);
+
+        // TTL reap: as this worker's clock reaches `start`, contexts
+        // idle past the TTL are gone (same sweep the real worker runs
+        // between passes).
+        if let Some(ttl) = cfg.session_ttl_s {
+            for (j, c) in ctx.iter_mut().enumerate() {
+                if j % workers == w && c.alive && start - c.last_touch_s > ttl {
+                    c.alive = false;
+                    c.resident_bytes = 0;
+                    cloud_ttl_reaps += 1;
+                }
+            }
+        }
+
+        // Eviction recovery: a mid-request call whose context was lost
+        // pays the full SessionEvicted round trip — the edge only
+        // *discovers* the eviction when the worker picks the call up and
+        // bounces it (at `start`, not at the call's arrival), then the
+        // notice travels down, the full history replays up, and the
+        // re-issued request rides behind it; the pass re-prefills on top.
+        if call.replay_bytes > 0 && !call.prefills && !ctx[call.client].alive {
+            let c = &mut clients[call.client];
+            let notice_at = c.downlink.transfer(start, EVICTED_BYTES);
+            c.counters.bytes_down += EVICTED_BYTES as u64;
+            let replay_done = c.uplink.transfer(notice_at, call.replay_bytes);
+            c.counters.bytes_up += call.replay_bytes as u64;
+            let rerequest_at = c.uplink.transfer(replay_done, REQ_BYTES);
+            c.counters.bytes_up += REQ_BYTES as u64;
+            c.counters.context_replays += 1;
+            c.cost.comm_s += rerequest_at - start;
+            call.ready_s = call.ready_s.max(rerequest_at);
+            call.busy_s += call.replay_prefill_s;
+            cloud_replays += 1;
+            start = worker_free[w].max(call.arrive_s).max(call.ready_s);
+        }
 
         // Cross-device batching (the real scheduler's padded pass): every
         // other call queued on this worker that is ready by `start` joins
-        // the pass instead of waiting its FCFS turn.
+        // the pass instead of waiting its FCFS turn.  A call that must
+        // first recover an evicted context never rides along — it pays
+        // its replay as its own pass head later.
         let mut calls = vec![call];
         if cfg.cross_device_batch {
             for (j, slot) in pending.iter_mut().enumerate() {
                 if j == entry.client || j % workers != w {
                     continue;
                 }
-                let joins =
-                    matches!(slot, Some((_, c)) if c.arrive_s <= start && c.ready_s <= start);
+                let joins = matches!(
+                    slot,
+                    Some((_, c)) if c.arrive_s <= start
+                        && c.ready_s <= start
+                        && (c.replay_bytes == 0 || c.prefills || ctx[j].alive)
+                );
                 if joins {
                     calls.push(slot.take().expect("matched above").1);
                 }
@@ -567,7 +721,17 @@ pub fn simulate(
         worker_free[w] = done;
         cloud_busy_total += busy_pass;
         cloud_passes += 1;
+        let pass_clients: Vec<usize> = calls.iter().map(|c| c.client).collect();
         for call in calls {
+            // the served context is resident and MRU (the real store's
+            // post-pass state: pending drained into pos+1 KV positions)
+            if track_ctx && (call.replay_bytes > 0 || call.prefills) {
+                ctx[call.client] = SimCtx {
+                    resident_bytes: kv_per_pos * (call.pos + 1) as u64,
+                    last_touch_s: done,
+                    alive: true,
+                };
+            }
             let c = &mut clients[call.client];
             // the whole pass is attributed to every call it answered,
             // matching the real scheduler's compute_s accounting
@@ -578,6 +742,36 @@ pub fn simulate(
                 pending[call.client] = Some((seq, next));
             }
         }
+
+        // Budget enforcement between passes: LRU-evict idle contexts on
+        // this worker until its shard fits.  Clients of the pass that
+        // just ran are never the victim (they are MRU, and the real
+        // sweep protects the devices it is about to serve again).
+        if let Some(share) = budget_share {
+            loop {
+                let used: u64 = ctx
+                    .iter()
+                    .enumerate()
+                    .filter(|(j, c)| j % workers == w && c.alive)
+                    .map(|(_, c)| c.resident_bytes)
+                    .sum();
+                if used <= share {
+                    break;
+                }
+                let victim = ctx
+                    .iter()
+                    .enumerate()
+                    .filter(|(j, c)| {
+                        *j % workers == w && c.alive && !pass_clients.contains(j)
+                    })
+                    .min_by(|(_, a), (_, b)| a.last_touch_s.total_cmp(&b.last_touch_s))
+                    .map(|(j, _)| j);
+                let Some(victim) = victim else { break };
+                ctx[victim].alive = false;
+                ctx[victim].resident_bytes = 0;
+                cloud_evictions += 1;
+            }
+        }
     }
 
     let mut out = SimOutcome {
@@ -585,6 +779,9 @@ pub fn simulate(
         makespan_s: 0.0,
         cloud_busy_s: cloud_busy_total,
         cloud_passes,
+        cloud_evictions,
+        cloud_ttl_reaps,
+        cloud_replays,
     };
     for c in clients {
         debug_assert!(c.done);
@@ -657,6 +854,7 @@ mod tests {
             seed: 7,
             workers: 1,
             cross_device_batch: false,
+            ..Default::default()
         }
     }
 
@@ -702,8 +900,14 @@ mod tests {
                        Cloud, Exit1, Cloud, Exit2, Cloud, Exit1, Cloud, Exit1];
         let traces = vec![vec![mk_trace(150, &pattern); 3]];
         let link = LinkProfile::paper_scaled();
-        let scfg =
-            |s| SimConfig { strategy: s, link, seed: 7, workers: 1, cross_device_batch: false };
+        let scfg = |s| SimConfig {
+            strategy: s,
+            link,
+            seed: 7,
+            workers: 1,
+            cross_device_batch: false,
+            ..Default::default()
+        };
         let full = simulate(&traces, &dims(), &cost(),
                             &scfg(Strategy::CeCollm(AblationFlags::default())));
         let nocm = simulate(&traces, &dims(), &cost(),
@@ -773,6 +977,7 @@ mod tests {
             seed: 7,
             workers,
             cross_device_batch: false,
+            ..Default::default()
         };
         let w1 = simulate(&traces, &dims(), &cost(), &mk(1));
         let w2 = simulate(&traces, &dims(), &cost(), &mk(2));
@@ -798,6 +1003,7 @@ mod tests {
             seed: 7,
             workers: 1,
             cross_device_batch: batch,
+            ..Default::default()
         };
         let fcfs = simulate(&traces, &dims(), &cost(), &mk(false));
         let batched = simulate(&traces, &dims(), &cost(), &mk(true));
@@ -831,6 +1037,7 @@ mod tests {
             seed: 3,
             workers: 1,
             cross_device_batch: batch,
+            ..Default::default()
         };
         let a = simulate(&traces, &dims(), &cost(), &mk(false));
         let b = simulate(&traces, &dims(), &cost(), &mk(true));
@@ -838,6 +1045,103 @@ mod tests {
         assert!((a.makespan_s - b.makespan_s).abs() < 1e-12);
         assert!((a.cloud_busy_s - b.cloud_busy_s).abs() < 1e-12);
         assert_eq!(a.summed().1.cloud_requests as u64, a.cloud_passes);
+    }
+
+    #[test]
+    fn tight_budget_prices_replays_not_wrong_tokens() {
+        // two cloud-heavy clients on one worker: a budget below their
+        // combined context forces LRU ping-pong evictions, each priced
+        // as a full-history re-upload + re-prefill — more bytes, more
+        // time, identical token counts
+        let pattern = [Cloud; 10];
+        let traces: Vec<Vec<Trace>> = (0..2).map(|_| vec![mk_trace(16, &pattern); 2]).collect();
+        let d = dims();
+        // one client's context peaks at ~26 positions; fit one, not two
+        let one_ctx = (26 * d.cloud_kv_bytes_per_pos()) as u64;
+        let mk = |budget| SimConfig {
+            strategy: Strategy::CeCollm(AblationFlags::default()),
+            link: LinkProfile::wifi(),
+            seed: 7,
+            workers: 1,
+            cross_device_batch: false,
+            memory_budget_bytes: budget,
+            session_ttl_s: None,
+        };
+        let free = simulate(&traces, &d, &cost(), &mk(None));
+        let tight = simulate(&traces, &d, &cost(), &mk(Some(one_ctx)));
+        assert_eq!(free.cloud_evictions, 0);
+        assert_eq!(free.cloud_replays, 0);
+        assert!(tight.cloud_evictions > 0, "budget below working set must evict");
+        assert!(tight.cloud_replays > 0, "mid-request evictions must be replayed");
+        let (fc, fk) = free.summed();
+        let (tc, tk) = tight.summed();
+        assert!(
+            tk.bytes_up > fk.bytes_up,
+            "replays cost extra uploads: {} vs {}",
+            tk.bytes_up,
+            fk.bytes_up
+        );
+        assert_eq!(tk.context_replays as u64, tight.cloud_replays);
+        assert!(tc.total_s >= fc.total_s - 1e-9, "eviction cannot make the run faster");
+        // same tokens served either way — eviction is a cost, never a
+        // correctness change
+        assert_eq!(fk.tokens_generated, tk.tokens_generated);
+        assert_eq!(fk.tokens_cloud, tk.tokens_cloud);
+    }
+
+    #[test]
+    fn unset_budget_matches_the_legacy_law_exactly() {
+        let pattern = [Cloud, Exit1, Cloud, Exit2, Cloud];
+        let traces = vec![vec![mk_trace(12, &pattern); 3]];
+        let base = simulate(
+            &traces,
+            &dims(),
+            &cost(),
+            &cfg(Strategy::CeCollm(AblationFlags::default())),
+        );
+        let with_fields = simulate(
+            &traces,
+            &dims(),
+            &cost(),
+            &SimConfig {
+                strategy: Strategy::CeCollm(AblationFlags::default()),
+                link: LinkProfile::wifi(),
+                seed: 7,
+                workers: 1,
+                cross_device_batch: false,
+                memory_budget_bytes: None,
+                session_ttl_s: None,
+            },
+        );
+        assert_eq!(base.summed().0, with_fields.summed().0);
+        assert_eq!(with_fields.cloud_evictions + with_fields.cloud_ttl_reaps, 0);
+    }
+
+    #[test]
+    fn ttl_reaps_are_priced_like_evictions() {
+        // two alternating cloud-heavy clients with a near-zero TTL: every
+        // pass reaps the other client's idle context, so mid-request
+        // calls keep paying the replay
+        let pattern = [Cloud; 6];
+        let traces: Vec<Vec<Trace>> = (0..2).map(|_| vec![mk_trace(12, &pattern)]).collect();
+        let mk = |ttl| SimConfig {
+            strategy: Strategy::CeCollm(AblationFlags::default()),
+            link: LinkProfile::wifi(),
+            seed: 3,
+            workers: 1,
+            cross_device_batch: false,
+            memory_budget_bytes: None,
+            session_ttl_s: ttl,
+        };
+        let free = simulate(&traces, &dims(), &cost(), &mk(None));
+        let reaped = simulate(&traces, &dims(), &cost(), &mk(Some(1e-9)));
+        assert_eq!(free.cloud_ttl_reaps, 0);
+        assert!(reaped.cloud_ttl_reaps > 0, "near-zero TTL must reap between passes");
+        assert!(reaped.cloud_replays > 0);
+        let (_, fk) = free.summed();
+        let (_, rk) = reaped.summed();
+        assert!(rk.bytes_up > fk.bytes_up);
+        assert_eq!(fk.tokens_generated, rk.tokens_generated);
     }
 
     #[test]

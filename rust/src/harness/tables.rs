@@ -36,6 +36,7 @@ fn aggregate_strategy(
             seed: seed ^ (r as u64) << 17,
             workers: 1,
             cross_device_batch: true,
+            ..Default::default()
         };
         let out = simulate(&per_client, dims, cost, &cfg);
         let (c, k) = out.summed();
@@ -209,6 +210,7 @@ pub fn fig4(
                         seed: cfg.seed ^ (r as u64) << 9,
                         workers: 1,
                         cross_device_batch: true,
+                        ..Default::default()
                     };
                     let o = simulate(&per_client, dims, &pt.cost, &sim);
                     let (c, _) = o.summed();
@@ -246,6 +248,7 @@ pub fn fig4(
                 seed: cfg.seed,
                 workers: 1,
                 cross_device_batch: true,
+                ..Default::default()
             };
             let o = simulate(&[traces.to_vec()], dims, &pt.cost, &sim);
             let (_, k) = o.summed();

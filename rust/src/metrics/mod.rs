@@ -57,6 +57,11 @@ pub struct RunCounters {
     /// Tokens that wanted the cloud but were emitted from a local exit
     /// because the latency budget expired or the link failed (§4.4).
     pub cloud_fallbacks: usize,
+    /// Times the cloud evicted this device's context (memory budget or
+    /// idle TTL) and the edge recovered by replaying its hidden-state
+    /// history from position 0 — each one costs an extra upload round
+    /// trip but zero token differences.
+    pub context_replays: usize,
 }
 
 impl RunCounters {
@@ -69,6 +74,7 @@ impl RunCounters {
         self.bytes_down += o.bytes_down;
         self.cloud_requests += o.cloud_requests;
         self.cloud_fallbacks += o.cloud_fallbacks;
+        self.context_replays += o.context_replays;
     }
 
     /// "Request Cloud Rate" — fraction of generated tokens that required a

@@ -39,6 +39,15 @@ impl ModelDims {
         self.d_model * bytes_per_elem
     }
 
+    /// Bytes of cloud-partition KV cache one resident position costs: K
+    /// and V (f32) for every layer the cloud runs (`l_ee1..n_layers`).
+    /// The context store meters per-device residency against
+    /// `CloudConfig::memory_budget_bytes` with this rate, and the DES
+    /// prices the same law, so simulated and enforced budgets agree.
+    pub fn cloud_kv_bytes_per_pos(&self) -> usize {
+        2 * self.n_layers.saturating_sub(self.l_ee1) * self.n_heads * self.head_dim * 4
+    }
+
     fn from_json(j: &Json) -> Result<Self> {
         let u = |k: &str| -> Result<usize> {
             j.req(k)?.as_usize().with_context(|| format!("model.{k} not a usize"))
@@ -270,6 +279,13 @@ mod tests {
     #[test]
     fn test_manifest_validates() {
         test_manifest().validate().unwrap();
+    }
+
+    #[test]
+    fn cloud_kv_bytes_per_pos_counts_cloud_layers_only() {
+        let m = test_manifest().model;
+        // K + V, f32, for the 5 cloud layers (l_ee1=3 .. n_layers=8)
+        assert_eq!(m.cloud_kv_bytes_per_pos(), 2 * 5 * 4 * 32 * 4);
     }
 
     #[test]

@@ -31,6 +31,11 @@
 //! * **Connection-closed fencing** — completions for a connection that
 //!   has since closed are dropped (connection ids are never reused), so
 //!   a response can never be written to a recycled socket.
+//! * **Idle reap** — established connections with no bytes read or
+//!   written for `idle_timeout_s` are closed: a silently-dead peer (NAT
+//!   expiry, powered-off device) releases its `max_conns` slot instead
+//!   of holding it until a write fails, and its now-idle cloud session
+//!   becomes eligible for the context store's TTL sweep.
 //!
 //! Readiness comes from `poll(2)`, declared directly against the libc
 //! every Rust binary already links (no new dependency); cross-thread
@@ -54,10 +59,9 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::config::ReactorConfig;
 use crate::coordinator::protocol::{Channel, Message, NO_REQ};
-use crate::coordinator::scheduler::{Reply, Router, SchedMsg, TokenOut};
+use crate::coordinator::scheduler::{InferOutcome, Reply, Router, SchedMsg, UploadPayload};
 use crate::model::manifest::ModelDims;
 use crate::net::codec::FrameCodec;
-use crate::quant;
 
 // ---------------------------------------------------------------------------
 // readiness primitives
@@ -160,13 +164,14 @@ enum Ctl {
     Shutdown,
 }
 
-/// A token (or error) served by a worker, heading back to the connection
-/// that asked for it.
+/// A token, eviction notice, or error served by a worker, heading back
+/// to the connection that asked for it.
 struct Completion {
     conn: u64,
+    device: u64,
     req_id: u32,
     pos: u32,
-    out: Result<TokenOut>,
+    out: Result<InferOutcome>,
 }
 
 /// Cheap cloneable control handle: the acceptor registers connections,
@@ -215,6 +220,9 @@ pub struct ReactorStats {
     pub read_pauses: u64,
     /// Connections closed for never completing their handshake.
     pub hello_timeouts: u64,
+    /// Established connections closed for exceeding the idle timeout
+    /// (no bytes read or written) — silently-dead NAT peers.
+    pub idle_timeouts: u64,
     /// Connections currently registered (gauge, set on snapshot).
     pub open_conns: usize,
 }
@@ -296,6 +304,10 @@ struct Conn {
     state: ConnState,
     /// Registration time — bounds how long a handshake may stay pending.
     opened: Instant,
+    /// Last successful byte read from or written to the peer — the
+    /// established-connection idle clock
+    /// ([`ReactorConfig::idle_timeout_s`]).
+    last_activity: Instant,
     /// Reads paused by worker backpressure.
     paused: bool,
     /// Close as soon as the write queue drains (protocol error sent).
@@ -344,6 +356,7 @@ impl Loop {
             self.drain_completions();
             self.refresh_pauses();
             self.reap_stale_handshakes();
+            self.reap_idle_conns();
             let (wake, ready) = self.poll_ready();
             if wake {
                 self.drain_wake();
@@ -389,6 +402,7 @@ impl Loop {
                     }
                     let id = self.next_id;
                     self.next_id += 1; // ids never reused: stale completions cannot alias
+                    let now = Instant::now();
                     self.conns.insert(
                         id,
                         Conn {
@@ -396,7 +410,8 @@ impl Loop {
                             stream,
                             codec: FrameCodec::new(),
                             state: ConnState::AwaitingHello,
-                            opened: Instant::now(),
+                            opened: now,
+                            last_activity: now,
                             paused: false,
                             closing: false,
                         },
@@ -423,12 +438,20 @@ impl Loop {
                 continue;
             }
             let frame = match done.out {
-                Ok(t) => Message::TokenResponse {
+                Ok(InferOutcome::Token(t)) => Message::TokenResponse {
                     req_id: done.req_id,
                     pos: done.pos,
                     token: t.token,
                     conf: t.conf,
                     compute_s: t.compute_s as f32,
+                }
+                .encode(),
+                // context-store eviction: the edge replays its history
+                // from position 0 and re-issues the request
+                Ok(InferOutcome::Evicted) => Message::SessionEvicted {
+                    device_id: done.device,
+                    req_id: done.req_id,
+                    pos: done.pos,
                 }
                 .encode(),
                 Err(e) => Message::Error {
@@ -479,6 +502,38 @@ impl Loop {
         }
     }
 
+    /// Close *established* connections whose peer has gone silent: no
+    /// byte read from or written to them for `idle_timeout_s`.  A NAT
+    /// table that expired, or a device that powered off mid-session,
+    /// leaves a socket that never errors until written to — without this
+    /// reap it holds a `max_conns` slot forever.  Reaping the connection
+    /// also idles the device's cloud session, which the context store's
+    /// TTL sweep then releases.
+    fn reap_idle_conns(&mut self) {
+        if self.cfg.idle_timeout_s <= 0.0 || self.conns.is_empty() {
+            return;
+        }
+        let timeout = Duration::from_secs_f64(self.cfg.idle_timeout_s);
+        let now = Instant::now();
+        let stale: Vec<u64> = self
+            .conns
+            .values()
+            .filter(|c| {
+                // a backpressure-paused conn is not idle: the reactor is
+                // refusing to read it, so its peer may be sending into
+                // the kernel buffer this whole time
+                !c.paused
+                    && matches!(c.state, ConnState::Active { .. })
+                    && now.saturating_duration_since(c.last_activity) > timeout
+            })
+            .map(|c| c.id)
+            .collect();
+        for id in stale {
+            self.stats.idle_timeouts += 1;
+            self.close_conn(id, "idle timeout (no reads or writes from peer)");
+        }
+    }
+
     /// Re-evaluate worker backpressure for every active connection.
     /// Overload is a per-worker property, so the queue depths are read
     /// once per worker, and the per-connection sweep runs only when
@@ -497,6 +552,12 @@ impl Loop {
                 if o && !c.paused {
                     self.stats.read_pauses += 1;
                 }
+                if !o && c.paused {
+                    // resuming reads: the pause was the reactor's doing,
+                    // so the quiet stretch must not count toward the
+                    // peer's idle timeout
+                    c.last_activity = Instant::now();
+                }
                 c.paused = o;
                 still_paused |= o;
             }
@@ -514,6 +575,9 @@ impl Loop {
         let mut ids = Vec::with_capacity(self.conns.len());
         let mut any_paused = false;
         let any_handshaking = self.pending_hellos > 0;
+        let idle_timeout = (self.cfg.idle_timeout_s > 0.0)
+            .then(|| Duration::from_secs_f64(self.cfg.idle_timeout_s));
+        let mut oldest_activity: Option<Instant> = None;
         for c in self.conns.values() {
             let mut ev = 0i16;
             if !c.paused && !c.closing {
@@ -523,6 +587,11 @@ impl Loop {
                 ev |= sys::POLLOUT;
             }
             any_paused |= c.paused;
+            if idle_timeout.is_some() && !c.paused && matches!(c.state, ConnState::Active { .. })
+            {
+                oldest_activity =
+                    Some(oldest_activity.map_or(c.last_activity, |o| o.min(c.last_activity)));
+            }
             // fds with events == 0 still report ERR/HUP, so a paused
             // connection whose peer vanished is reaped promptly
             fds.push(sys::PollFd { fd: c.stream.as_raw_fd(), events: ev, revents: 0 });
@@ -530,14 +599,21 @@ impl Loop {
         }
         // workers do not wake the reactor when they catch up, so paused
         // reads re-check the queue depth at a short cadence; pending
-        // handshakes need a bounded sleep so a silent socket still hits
-        // its Hello timeout
+        // handshakes and armed idle timeouts need bounded sleeps so a
+        // silent socket still hits its reap deadline
         let timeout_ms = if any_paused {
             2
-        } else if any_handshaking {
-            500
         } else {
-            -1
+            let mut t: i64 = if any_handshaking { 500 } else { -1 };
+            if let (Some(idle), Some(oldest)) = (idle_timeout, oldest_activity) {
+                let deadline = oldest + idle;
+                let ms = deadline.saturating_duration_since(Instant::now()).as_millis() as i64;
+                // floor keeps a just-missed deadline from busy-spinning;
+                // cap keeps the pollfd rebuild cadence reasonable
+                let ms = (ms + 1).clamp(10, 60_000);
+                t = if t < 0 { ms } else { t.min(ms) };
+            }
+            t as std::os::raw::c_int
         };
         if let Err(e) = sys::poll(&mut fds, timeout_ms) {
             log::warn!("reactor poll failed: {e}");
@@ -663,12 +739,15 @@ impl Loop {
             }
             ConnState::Active { session, channel, .. } => {
                 // zero-copy fast path for the dominant per-token frame
-                // (payload borrowed from the frame buffer; only the
-                // unpacked floats are allocated, and they move through
-                // the scheduler without further copies)
+                // (payload borrowed from the frame buffer); the packed
+                // bytes are forwarded as-is and the f16→f32 unpack runs
+                // on the OWNING WORKER, so ingest CPU scales with the
+                // pool instead of serializing on this one thread
                 if let Some(v) = Message::decode_upload(&frame)? {
-                    let hiddens = quant::unpack(v.payload, v.precision)?;
-                    anyhow::ensure!(hiddens.len() % self.dims.d_model == 0, "ragged upload");
+                    anyhow::ensure!(
+                        v.payload.len() % (self.dims.d_model * v.precision.bytes_per_elem()) == 0,
+                        "ragged upload"
+                    );
                     return self
                         .router
                         .send(
@@ -679,7 +758,10 @@ impl Loop {
                                 req_id: v.req_id,
                                 start_pos: v.start_pos,
                                 prompt_len: v.prompt_len,
-                                hiddens,
+                                payload: UploadPayload::Packed {
+                                    bytes: v.payload.to_vec(),
+                                    precision: v.precision,
+                                },
                             },
                         )
                         .context("scheduler gone");
@@ -692,7 +774,8 @@ impl Loop {
                         let waker = self.waker.clone();
                         let conn = id;
                         let reply = Reply::new(move |out| {
-                            let _ = comp.send(Completion { conn, req_id, pos, out });
+                            let _ =
+                                comp.send(Completion { conn, device: device_id, req_id, pos, out });
                             waker.wake();
                         });
                         self.router
@@ -784,6 +867,7 @@ fn read_frames(c: &mut Conn, scratch: &mut [u8]) -> (Vec<Vec<u8>>, Option<String
     match c.stream.read(scratch) {
         Ok(0) => (Vec::new(), Some("peer closed".into())),
         Ok(n) => {
+            c.last_activity = Instant::now();
             let mut frames = Vec::new();
             // feed_all parses whole frames straight from the read chunk
             // (no staging copy through the codec buffer on bulk ingest)
@@ -806,7 +890,10 @@ fn flush_conn(c: &mut Conn) -> io::Result<()> {
     while c.codec.pending_out() > 0 {
         match c.stream.write(c.codec.writable_bytes()) {
             Ok(0) => return Err(io::Error::new(io::ErrorKind::WriteZero, "write returned 0")),
-            Ok(n) => c.codec.consume_written(n),
+            Ok(n) => {
+                c.last_activity = Instant::now();
+                c.codec.consume_written(n);
+            }
             Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
             Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
             Err(e) => return Err(e),

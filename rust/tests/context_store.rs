@@ -1,0 +1,284 @@
+//! Integration tests for the cloud context store through the scheduler:
+//! budget-pressure LRU eviction with bit-identical replay recovery, the
+//! idle-TTL reaper, and the "never evict a device inside the batch pass
+//! that serves it" protection — all with mock engines and deterministic
+//! message ordering (no sleeps except where the TTL clock itself is the
+//! thing under test).
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+use ce_collm::config::CloudConfig;
+use ce_collm::coordinator::scheduler::{
+    InferOutcome, Reply, Router, SchedMsg, Scheduler, SessionFactory, UploadPayload,
+};
+use ce_collm::model::manifest::test_manifest;
+use ce_collm::runtime::mock::{MockCloud, MockOracle};
+
+const D: usize = 128; // test manifest d_model
+const KV_POS: u64 = 5120; // test manifest cloud_kv_bytes_per_pos()
+
+fn scheduler(seed: u64, cfg: CloudConfig, gate: Option<Arc<std::sync::Barrier>>) -> Scheduler {
+    let dims = test_manifest().model;
+    let sdims = dims.clone();
+    Scheduler::spawn(
+        dims,
+        cfg,
+        Arc::new(move || {
+            if let Some(g) = &gate {
+                g.wait();
+            }
+            let sdims = sdims.clone();
+            let f: SessionFactory = Box::new(move |_device| {
+                Ok(Box::new(MockCloud::new(MockOracle::new(seed), sdims.clone())) as _)
+            });
+            Ok(f)
+        }),
+    )
+    .unwrap()
+}
+
+fn upload(router: &Router, device: u64, req_id: u32, start_pos: u32, count: usize, plen: u32) {
+    router
+        .send(
+            device,
+            SchedMsg::Upload {
+                device,
+                session: 0,
+                req_id,
+                start_pos,
+                prompt_len: plen,
+                payload: UploadPayload::Floats(vec![0.5; count * D]),
+            },
+        )
+        .unwrap();
+}
+
+fn infer(
+    router: &Router,
+    device: u64,
+    req_id: u32,
+    pos: u32,
+    plen: u32,
+) -> mpsc::Receiver<anyhow::Result<InferOutcome>> {
+    let (tx, rx) = mpsc::channel();
+    router
+        .send(
+            device,
+            SchedMsg::Infer {
+                device,
+                session: 0,
+                req_id,
+                pos,
+                prompt_len: plen,
+                deadline: None,
+                reply: Reply::channel(tx),
+            },
+        )
+        .unwrap();
+    rx
+}
+
+fn expect_token(rx: mpsc::Receiver<anyhow::Result<InferOutcome>>) -> i32 {
+    match rx.recv().unwrap().unwrap() {
+        InferOutcome::Token(t) => t.token,
+        InferOutcome::Evicted => panic!("expected a token, got an eviction notice"),
+    }
+}
+
+fn expect_evicted(rx: mpsc::Receiver<anyhow::Result<InferOutcome>>) {
+    match rx.recv().unwrap().unwrap() {
+        InferOutcome::Evicted => {}
+        InferOutcome::Token(t) => panic!("expected an eviction notice, got token {}", t.token),
+    }
+}
+
+/// The driver loop of these tests, shared with the no-budget reference
+/// run: device 1 serves positions 2..=4 of a 3-token prompt, with device
+/// 2 wedged in between to create budget pressure, recovering from any
+/// eviction notice by replaying the history from position 0 exactly as
+/// the edge client does.  Returns device 1's tokens.
+fn drive(sched: &Scheduler) -> (Vec<i32>, u64) {
+    let router = sched.router();
+    let mut tokens = Vec::new();
+    let mut replays = 0u64;
+    // device 1: prompt + first token
+    upload(&router, 1, 1, 0, 3, 3);
+    tokens.push(expect_token(infer(&router, 1, 1, 2, 3)));
+    // device 2 becomes the most recent tenant (pressure on device 1)
+    upload(&router, 2, 1, 0, 3, 3);
+    expect_token(infer(&router, 2, 1, 2, 3));
+    // device 1 continues at positions 3 and 4; on eviction, replay
+    // 0..=pos under the same request id and ask again
+    for pos in 3..=4u32 {
+        upload(&router, 1, 1, pos, 1, 3);
+        let mut rx = infer(&router, 1, 1, pos, 3);
+        loop {
+            match rx.recv().unwrap().unwrap() {
+                InferOutcome::Token(t) => {
+                    tokens.push(t.token);
+                    break;
+                }
+                InferOutcome::Evicted => {
+                    replays += 1;
+                    assert!(replays <= 4, "replay loop must converge");
+                    upload(&router, 1, 1, 0, pos as usize + 1, 3);
+                    rx = infer(&router, 1, 1, pos, 3);
+                }
+            }
+        }
+    }
+    router.send(1, SchedMsg::End { device: 1, session: 0, req_id: 1 }).unwrap();
+    router.send(2, SchedMsg::End { device: 2, session: 0, req_id: 1 }).unwrap();
+    (tokens, replays)
+}
+
+#[test]
+fn unset_budget_is_behaviorally_identical_to_today() {
+    let sched = scheduler(17, CloudConfig::default(), None);
+    let (tokens, replays) = drive(&sched);
+    assert_eq!(tokens.len(), 3);
+    assert_eq!(replays, 0, "no budget -> no eviction notices");
+    let stats = sched.shutdown();
+    let c = stats.context;
+    assert_eq!((c.evictions, c.ttl_reaps, c.replays), (0, 0, 0));
+    assert_eq!(c.resident_bytes, 0, "everything released by EndSession");
+}
+
+#[test]
+fn budget_pressure_evicts_lru_and_replay_is_bit_identical() {
+    // budget above any single device's working set (5 positions = 25600)
+    // but below two settled devices (>= 30720): pressure must evict, the
+    // gauge must never exceed the budget, and the tokens must match the
+    // unbudgeted reference exactly
+    let budget = 28_000u64;
+    let seed = 17;
+    let reference = {
+        let sched = scheduler(seed, CloudConfig::default(), None);
+        drive(&sched).0
+    };
+    let cfg = CloudConfig { memory_budget_bytes: Some(budget), ..Default::default() };
+    let sched = scheduler(seed, cfg, None);
+
+    let router = sched.router();
+    let mut tokens = Vec::new();
+    upload(&router, 1, 1, 0, 3, 3);
+    tokens.push(expect_token(infer(&router, 1, 1, 2, 3)));
+    assert!(sched.stats().unwrap().context.resident_bytes <= budget);
+
+    // device 2's pass pushes the pool over budget: idle device 1 (LRU)
+    // is evicted, device 2 (just served, MRU) survives
+    upload(&router, 2, 1, 0, 3, 3);
+    expect_token(infer(&router, 2, 1, 2, 3));
+    let stats = sched.stats().unwrap();
+    assert_eq!(stats.context.evictions, 1);
+    assert!(stats.context.resident_bytes <= budget, "{stats:?}");
+
+    // device 1's next request hits the eviction notice...
+    upload(&router, 1, 1, 3, 1, 3);
+    expect_evicted(infer(&router, 1, 1, 3, 3));
+    // ...and recovers by replaying positions 0..=3 under the same req id
+    upload(&router, 1, 1, 0, 4, 3);
+    tokens.push(expect_token(infer(&router, 1, 1, 3, 3)));
+    // the continuation serves normally (device 1 is resident again)
+    upload(&router, 1, 1, 4, 1, 3);
+    tokens.push(expect_token(infer(&router, 1, 1, 4, 3)));
+
+    assert_eq!(tokens, reference, "evict-then-replay must be bit-identical");
+    let stats = sched.stats().unwrap();
+    assert!(stats.context.resident_bytes <= budget, "{stats:?}");
+    assert_eq!(stats.context.replays, 1, "one replayed context");
+    assert!(stats.context.evictions >= 2, "device 2 evicted under device 1's replay pressure");
+    assert_eq!(stats.context.ttl_reaps, 0);
+    sched.shutdown();
+}
+
+#[test]
+fn eviction_never_targets_a_device_in_the_current_batch_pass() {
+    // absurd budget (1 byte) + a gated worker: three devices' uploads
+    // and infers are queued before the worker drains anything, so one
+    // batch pass serves all three.  Every request must resolve with a
+    // TOKEN — eviction sweeps run only between passes — and only then
+    // may the sweep evict the now-idle losers.
+    let gate = Arc::new(std::sync::Barrier::new(2));
+    let cfg = CloudConfig { memory_budget_bytes: Some(1), ..Default::default() };
+    let sched = scheduler(5, cfg, Some(Arc::clone(&gate)));
+    let router = sched.router();
+    for dev in 1..=3u64 {
+        upload(&router, dev, 1, 0, 3, 3);
+    }
+    let rxs: Vec<_> = (1..=3u64).map(|dev| infer(&router, dev, 1, 2, 3)).collect();
+    gate.wait();
+    let oracle = MockOracle::new(5);
+    for rx in rxs {
+        assert_eq!(expect_token(rx), oracle.cloud_token(2), "served, not evicted, mid-pass");
+    }
+    let stats = sched.stats().unwrap();
+    assert_eq!(stats.engine_passes, 1, "one padded pass over all three devices: {stats:?}");
+    // after the pass the sweep evicts everything but the MRU device
+    assert_eq!(stats.context.evictions, 2, "{stats:?}");
+    assert!(stats.context.resident_bytes <= 3 * KV_POS, "at most one settled device left");
+    sched.shutdown();
+}
+
+#[test]
+fn idle_ttl_reaps_and_the_session_recovers_by_replay() {
+    let seed = 9;
+    let cfg = CloudConfig { session_ttl_s: Some(0.05), ..Default::default() };
+    let sched = scheduler(seed, cfg, None);
+    let router = sched.router();
+    let oracle = MockOracle::new(seed);
+
+    upload(&router, 1, 1, 0, 3, 3);
+    assert_eq!(expect_token(infer(&router, 1, 1, 2, 3)), oracle.cloud_token(2));
+    assert!(sched.stats().unwrap().context.resident_bytes > 0);
+
+    // idle past the TTL: the worker wakes itself at the deadline and
+    // reaps the session with no traffic arriving at all
+    std::thread::sleep(Duration::from_millis(200));
+    let stats = sched.stats().unwrap();
+    assert_eq!(stats.context.ttl_reaps, 1, "{stats:?}");
+    assert_eq!(stats.context.resident_bytes, 0);
+
+    // the device's next deferral is told to replay, then serves
+    upload(&router, 1, 1, 3, 1, 3);
+    expect_evicted(infer(&router, 1, 1, 3, 3));
+    upload(&router, 1, 1, 0, 4, 3);
+    assert_eq!(expect_token(infer(&router, 1, 1, 3, 3)), oracle.cloud_token(3));
+    let stats = sched.shutdown();
+    assert_eq!(stats.context.replays, 1);
+}
+
+#[test]
+fn budget_splits_evenly_across_workers() {
+    // two workers, budget 2 * (one settled device): each shard fits one
+    // device, so two devices on DIFFERENT workers coexist while a second
+    // device on the SAME worker evicts its shard-mate
+    let budget = 2 * 3 * KV_POS + 2; // per-worker share: 3*KV_POS + 1
+    let cfg = CloudConfig {
+        workers: 2,
+        memory_budget_bytes: Some(budget),
+        ..Default::default()
+    };
+    let sched = scheduler(3, cfg, None);
+    let router = sched.router();
+    // devices 0 and 1 land on different workers and both stay resident
+    for dev in [0u64, 1] {
+        upload(&router, dev, 1, 0, 3, 3);
+        expect_token(infer(&router, dev, 1, 2, 3));
+    }
+    let stats = sched.stats().unwrap();
+    assert_eq!(stats.context.evictions, 0, "shards independent: {stats:?}");
+    // device 2 shares worker 0 with device 0: its pass evicts device 0
+    upload(&router, 2, 1, 0, 3, 3);
+    expect_token(infer(&router, 2, 1, 2, 3));
+    let stats = sched.stats().unwrap();
+    assert_eq!(stats.context.evictions, 1, "{stats:?}");
+    upload(&router, 0, 1, 3, 1, 3);
+    expect_evicted(infer(&router, 0, 1, 3, 3));
+    // device 1's shard was never pressured
+    upload(&router, 1, 1, 3, 1, 3);
+    expect_token(infer(&router, 1, 1, 3, 3));
+    sched.shutdown();
+}

@@ -356,6 +356,7 @@ fn prop_des_total_bounds_parts() {
                     seed,
                     workers: 1,
                     cross_device_batch: false,
+                    ..Default::default()
                 },
             );
             let (c, k) = out.summed();
@@ -403,6 +404,7 @@ fn prop_des_more_clients_never_faster() {
                     seed: 0,
                     workers: 1,
                     cross_device_batch: false,
+                    ..Default::default()
                 },
             );
             assert!(

@@ -14,7 +14,7 @@ use std::time::{Duration, Instant};
 use ce_collm::config::{CloudConfig, DeploymentConfig};
 use ce_collm::coordinator::policy::ExitPoint;
 use ce_collm::coordinator::scheduler::{
-    Reply, Router, SchedMsg, Scheduler, SessionFactory, TokenOut,
+    InferOutcome, Reply, Router, SchedMsg, Scheduler, SessionFactory, TokenOut, UploadPayload,
 };
 use ce_collm::coordinator::edge::{CloudLink, EdgeClient};
 use ce_collm::model::manifest::test_manifest;
@@ -22,6 +22,15 @@ use ce_collm::net::transport::{in_proc_pair, Transport};
 use ce_collm::runtime::mock::{MockCloud, MockEdge, MockOracle};
 
 const D: usize = 128; // test manifest d_model
+
+/// Unwrap a reply into its served token (panics on an eviction notice —
+/// these tests never configure a memory budget).
+fn token(out: anyhow::Result<InferOutcome>) -> anyhow::Result<TokenOut> {
+    out.map(|o| match o {
+        InferOutcome::Token(t) => t,
+        InferOutcome::Evicted => panic!("unexpected eviction notice"),
+    })
+}
 
 fn mock_scheduler(seed: u64, workers: usize) -> Scheduler {
     let dims = test_manifest().model;
@@ -47,7 +56,7 @@ fn infer(
     pos: u32,
     prompt_len: u32,
     deadline: Option<Instant>,
-) -> mpsc::Receiver<anyhow::Result<TokenOut>> {
+) -> mpsc::Receiver<anyhow::Result<InferOutcome>> {
     let (tx, rx) = mpsc::channel();
     router
         .send(
@@ -76,7 +85,7 @@ fn upload(router: &Router, device: u64, req_id: u32, start_pos: u32, count: usiz
                 req_id,
                 start_pos,
                 prompt_len: plen,
-                hiddens: vec![0.5; count * D],
+                payload: UploadPayload::Floats(vec![0.5; count * D]),
             },
         )
         .unwrap();
@@ -102,7 +111,7 @@ fn infer_before_upload_parks_then_completes() {
 
     // the covering prompt upload lands -> the parked request is woken
     upload(&router, 1, 1, 0, 3, 3);
-    let out = rx.recv().unwrap().expect("parked request must complete");
+    let out = token(rx.recv().unwrap()).expect("parked request must complete");
     assert_eq!(out.token, MockOracle::new(seed).cloud_token(2));
 
     let stats = sched.stats().unwrap();
@@ -122,7 +131,7 @@ fn one_upload_wakes_and_coalesces_all_covered_requests() {
 
     // normal start: prompt upload, then the first token via cloud prefill
     upload(&router, 7, 1, 0, 3, 3);
-    let first = infer(&router, 7, 1, 2, 3, None).recv().unwrap().unwrap();
+    let first = token(infer(&router, 7, 1, 2, 3, None).recv().unwrap()).unwrap();
     assert_eq!(first.token, oracle.cloud_token(2));
 
     // two decode requests race ahead of their uploads and park
@@ -133,8 +142,8 @@ fn one_upload_wakes_and_coalesces_all_covered_requests() {
     // one upload covering positions 3..=5 wakes both; the worker answers
     // them from a single catch-up pass over the pending positions
     upload(&router, 7, 1, 3, 3, 3);
-    assert_eq!(rx4.recv().unwrap().unwrap().token, oracle.cloud_token(4));
-    assert_eq!(rx5.recv().unwrap().unwrap().token, oracle.cloud_token(5));
+    assert_eq!(token(rx4.recv().unwrap()).unwrap().token, oracle.cloud_token(4));
+    assert_eq!(token(rx5.recv().unwrap()).unwrap().token, oracle.cloud_token(5));
 
     let stats = sched.stats().unwrap();
     assert_eq!(stats.parked, 0);
@@ -172,10 +181,10 @@ fn two_devices_progress_concurrently_with_two_workers() {
     // the other worker has a parked request the whole time
     let oracle = MockOracle::new(seed);
     upload(&router, 1, 1, 0, 2, 2);
-    let t1 = infer(&router, 1, 1, 1, 2, None).recv().unwrap().unwrap();
+    let t1 = token(infer(&router, 1, 1, 1, 2, None).recv().unwrap()).unwrap();
     assert_eq!(t1.token, oracle.cloud_token(1));
     upload(&router, 1, 1, 2, 1, 2);
-    let t2 = infer(&router, 1, 1, 2, 2, None).recv().unwrap().unwrap();
+    let t2 = token(infer(&router, 1, 1, 2, 2, None).recv().unwrap()).unwrap();
     assert_eq!(t2.token, oracle.cloud_token(2));
     router.send(1, SchedMsg::End { device: 1, session: 0, req_id: 1 }).unwrap();
 
@@ -224,7 +233,7 @@ fn stale_session_frames_are_fenced_after_reconnect() {
             req_id: 1,
             start_pos: 0,
             prompt_len: 2,
-            hiddens: vec![0.5; 2 * D],
+            payload: UploadPayload::Floats(vec![0.5; 2 * D]),
         })
         .unwrap();
     // a straggling EndSession from A's infer connection must not tear
@@ -238,7 +247,7 @@ fn stale_session_frames_are_fenced_after_reconnect() {
             req_id: 1,
             start_pos: 0,
             prompt_len: 2,
-            hiddens: vec![0.5; 2 * D],
+            payload: UploadPayload::Floats(vec![0.5; 2 * D]),
         })
         .unwrap();
 
@@ -255,7 +264,7 @@ fn stale_session_frames_are_fenced_after_reconnect() {
             reply: Reply::channel(tx),
         })
         .unwrap();
-    let out = rx.recv().unwrap().expect("session B must be unaffected by A's stragglers");
+    let out = token(rx.recv().unwrap()).expect("session B must be unaffected by A's stragglers");
     assert_eq!(out.token, MockOracle::new(seed).cloud_token(1));
 
     let stats = sched.stats().unwrap();
@@ -381,7 +390,7 @@ fn four_devices_share_one_padded_engine_pass() {
 
     let oracle = MockOracle::new(seed);
     for rx in &rxs {
-        let out = rx.recv().unwrap().expect("batched request must complete");
+        let out = token(rx.recv().unwrap()).expect("batched request must complete");
         assert_eq!(out.token, oracle.cloud_token(4));
     }
     let stats = sched.stats().unwrap();
@@ -419,9 +428,9 @@ fn deep_backlog_is_capped_and_cannot_starve_other_devices() {
 
     let oracle = MockOracle::new(seed);
     for rx in &rxs {
-        assert_eq!(rx.recv().unwrap().unwrap().token, oracle.cloud_token(2));
+        assert_eq!(token(rx.recv().unwrap()).unwrap().token, oracle.cloud_token(2));
     }
-    assert_eq!(rx0.recv().unwrap().unwrap().token, oracle.cloud_token(21));
+    assert_eq!(token(rx0.recv().unwrap()).unwrap().token, oracle.cloud_token(21));
 
     let stats = sched.stats().unwrap();
     // 20 backlog positions at <= 4 per pass: five passes, the other
@@ -460,7 +469,7 @@ fn router_queue_depth_tracks_undrained_messages() {
     // the reply arrives only after the worker drained its whole queue,
     // so the gauge must read zero again by then
     let rx = infer(&router, 0, 1, 1, 2, None);
-    rx.recv().unwrap().unwrap();
+    token(rx.recv().unwrap()).unwrap();
     assert_eq!(router.queue_depth(0), 0);
     sched.shutdown();
 }

@@ -173,6 +173,117 @@ fn silent_connection_is_reaped_by_hello_timeout() {
 }
 
 #[test]
+fn established_idle_connection_is_reaped_by_idle_timeout() {
+    // an established (post-Hello) connection whose peer goes silent —
+    // the NAT-expiry shape — must release its slot via the idle reap
+    let dims = test_manifest().model;
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let sdims = dims.clone();
+    let mut cfg = CloudConfig::with_workers(1);
+    cfg.reactor.idle_timeout_s = 0.05;
+    let server = CloudServer::spawn(listener, dims, cfg, move || {
+        let sdims = sdims.clone();
+        let f: SessionFactory = Box::new(move |_device| {
+            Ok(Box::new(MockCloud::new(MockOracle::new(1), sdims.clone())) as _)
+        });
+        Ok(f)
+    })
+    .unwrap();
+
+    let mut conn = TcpTransport::connect(&server.addr.to_string()).unwrap();
+    conn.send(&Message::Hello { device_id: 77, session: 1, channel: Channel::Upload }.encode())
+        .unwrap();
+    assert_eq!(conn.recv().unwrap(), Message::Ack.encode(), "handshake completes");
+    // ... and then the peer says nothing, forever
+    for _ in 0..100 {
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let rs = server.reactor_stats().unwrap();
+        if rs.idle_timeouts >= 1 && rs.open_conns == 0 {
+            server.shutdown();
+            return;
+        }
+    }
+    panic!("established idle connection was never reaped by the idle timeout");
+}
+
+#[test]
+fn tcp_eviction_replay_keeps_tokens_bit_identical() {
+    // two concurrent clients against a 1-byte context budget: the store
+    // ping-pongs evictions between their devices, every cloud deferral
+    // risks a SessionEvicted round trip, and the token streams must
+    // still match the local (never-evicted) reference exactly
+    let dims = test_manifest().model;
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let sdims = dims.clone();
+    let mut cfg = CloudConfig::with_workers(1);
+    cfg.memory_budget_bytes = Some(1);
+    let server = CloudServer::spawn(listener, dims, cfg, move || {
+        let sdims = sdims.clone();
+        let f: SessionFactory = Box::new(move |device| {
+            Ok(Box::new(MockCloud::new(MockOracle::new(200 + device), sdims.clone())) as _)
+        });
+        Ok(f)
+    })
+    .unwrap();
+
+    let addr = server.addr;
+    let gate = std::sync::Arc::new(std::sync::Barrier::new(2));
+    let mut handles = Vec::new();
+    for device in 0..2u64 {
+        let addr = addr.to_string();
+        let gate = std::sync::Arc::clone(&gate);
+        handles.push(std::thread::spawn(move || {
+            let dims = test_manifest().model;
+            // θ = 1.0: every token defers to the cloud, so both devices
+            // stay active for the whole run and keep evicting each other
+            let mut cfg = DeploymentConfig::with_threshold(1.0);
+            cfg.device_id = device;
+            cfg.max_new_tokens = 16;
+            let upload = Box::new(TcpTransport::connect(&addr).unwrap());
+            let infer = Box::new(TcpTransport::connect(&addr).unwrap());
+            let link = CloudLink::new(device, upload, infer).unwrap();
+            let mut client = EdgeClient::with_cloud(
+                MockEdge::new(MockOracle::new(200 + device), dims),
+                cfg,
+                link,
+            );
+            gate.wait();
+            let out = client.generate("an eviction storm prompt").unwrap();
+            (device, out)
+        }));
+    }
+    let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    for (device, out) in &results {
+        // local reference: same engines, no wire, no eviction
+        let o = MockOracle::new(200 + device);
+        let dims = test_manifest().model;
+        let mut edge = MockEdge::new(o, dims.clone());
+        let mut cloud = MockCloud::new(o, dims);
+        let mut timings = ce_collm::harness::trace::CallTimings::default();
+        let tr = ce_collm::harness::trace::record(
+            &mut edge,
+            &mut cloud,
+            ce_collm::config::ExitPolicy::Threshold(1.0),
+            ce_collm::quant::Precision::F16,
+            "an eviction storm prompt",
+            16,
+            &mut timings,
+        )
+        .unwrap();
+        assert_eq!(out.tokens, tr.tokens, "device {device}: replay must be bit-identical");
+    }
+
+    let stats = server.shutdown();
+    // with a 1-byte budget and overlapping runs the store must have
+    // evicted, and every eviction the clients hit was replayed through
+    let replayed: usize = results.iter().map(|(_, o)| o.counters.context_replays).sum();
+    assert!(stats.context.evictions > 0, "no eviction under a 1-byte budget? {stats:?}");
+    assert!(replayed > 0, "clients never saw a SessionEvicted");
+    assert_eq!(stats.context.replays as usize, replayed, "server/client replay counts agree");
+}
+
+#[test]
 fn shutdown_closes_every_connection_with_no_stragglers() {
     // the pre-reactor server joined its acceptor but *detached* the
     // per-connection threads, which lingered holding their sockets; the

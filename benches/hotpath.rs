@@ -1,7 +1,9 @@
 //! Hot-path microbenchmarks: everything that runs per token on the
 //! request path — quantization, protocol codec (owned vs borrowed),
-//! content-manager ops, batched decode, exit policy, DES replay — plus
-//! the real PJRT per-segment step costs when artifacts are available.
+//! frame ingest (scratch-copy `feed_all` vs single-copy `read_into`),
+//! reactor wake cost per backend, content-manager ops, batched decode,
+//! exit policy, DES replay — plus the real PJRT per-segment step costs
+//! when artifacts are available.
 //!
 //!     cargo bench --bench hotpath [-- --smoke] [-- --json PATH]
 //!
@@ -112,6 +114,71 @@ fn main() {
         got
     }));
 
+    println!("\n== ingest: scratch copy vs single-copy read_into (64KiB upload frame) ==");
+    {
+        // A 64KiB upload body arriving through 16KiB socket reads (the
+        // TcpTransport scratch size).  Baseline = the old path: every
+        // chunk lands in scratch (the memcpy below stands in for the
+        // kernel's copyout), then feed_all stages it through the codec
+        // buffer into the frame — two user-space passes per payload
+        // byte.  read_into = the reserve-then-fill path: once the
+        // length prefix is visible the codec hands out the frame's own
+        // tail and the "kernel" fills it directly — one pass.
+        let payload = vec![42u8; 64 << 10];
+        let wire = ce_collm::net::codec::encode_frame(&payload);
+        const CHUNK: usize = 16 << 10;
+        let mut scratch = vec![0u8; CHUNK];
+        results.push(bench_throughput(
+            "ingest feed_all 64KiB frame (scratch copy)",
+            wire.len(),
+            0.3 * scale,
+            || {
+                let mut c = FrameCodec::new();
+                let mut out = Vec::new();
+                let mut off = 0;
+                while off < wire.len() {
+                    let n = CHUNK.min(wire.len() - off);
+                    scratch[..n].copy_from_slice(&wire[off..off + n]); // "kernel" copy
+                    c.feed_all(&scratch[..n], &mut out).unwrap();
+                    off += n;
+                }
+                assert_eq!(out.len(), 1);
+                out
+            },
+        ));
+        results.push(bench_throughput(
+            "ingest read_into 64KiB frame (single copy)",
+            wire.len(),
+            0.3 * scale,
+            || {
+                let mut c = FrameCodec::new();
+                let mut out = Vec::new();
+                let mut off = 0;
+                while off < wire.len() {
+                    let n = if let Some(slot) = c.read_slot() {
+                        let n = slot.len().min(CHUNK).min(wire.len() - off);
+                        slot[..n].copy_from_slice(&wire[off..off + n]); // "kernel" copy
+                        c.commit(n);
+                        n
+                    } else {
+                        // header phase: stage through scratch like a
+                        // real socket read would
+                        let n = CHUNK.min(wire.len() - off);
+                        scratch[..n].copy_from_slice(&wire[off..off + n]); // "kernel" copy
+                        c.feed_all(&scratch[..n], &mut out).unwrap();
+                        n
+                    };
+                    off += n;
+                    while let Some(f) = c.next_frame().unwrap() {
+                        out.push(f);
+                    }
+                }
+                assert_eq!(out.len(), 1);
+                out
+            },
+        ));
+    }
+
     println!("\n== tcp frame send (localhost, drained by sink threads) ==");
     {
         use std::io::Write;
@@ -150,6 +217,67 @@ fn main() {
         drop(legacy);
         drop(codec_path);
         let _ = sink.join();
+    }
+
+    println!("\n== reactor wake (stats round trip past 256 idle conns) ==");
+    {
+        // A stats() call forces exactly one wake: the poll backend
+        // rebuilds a 256-entry pollfd array to serve it, epoll does
+        // O(1) work.  The conns are handshaken (Active) so no reap
+        // scan pollutes the wake path.
+        use ce_collm::config::{ReactorBackend, ReactorConfig};
+        use ce_collm::coordinator::protocol::Channel;
+        use ce_collm::net::reactor::Reactor;
+        let mut backends = vec![("poll", ReactorBackend::Poll)];
+        if cfg!(target_os = "linux") {
+            backends.push(("epoll", ReactorBackend::Epoll));
+        }
+        for (name, backend) in backends {
+            let dims = test_manifest().model;
+            let sdims = dims.clone();
+            let sched = Scheduler::spawn(
+                dims.clone(),
+                CloudConfig::default(),
+                Arc::new(move || {
+                    let sdims = sdims.clone();
+                    let f: SessionFactory = Box::new(move |_| {
+                        Ok(Box::new(MockCloud::new(MockOracle::new(1), sdims.clone())) as _)
+                    });
+                    Ok(f)
+                }),
+            )
+            .unwrap();
+            let rcfg = ReactorConfig { backend, ..ReactorConfig::default() };
+            let reactor = Reactor::spawn(sched.router(), dims, rcfg, None).unwrap();
+            let handle = reactor.handle();
+            let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            let mut clients = Vec::with_capacity(256);
+            for i in 0..256u64 {
+                let mut t = TcpTransport::connect(&addr.to_string()).unwrap();
+                let (server_end, _) = listener.accept().unwrap();
+                handle.register(server_end).unwrap();
+                t.send(
+                    &Message::Hello { device_id: i, session: 1, channel: Channel::Infer }
+                        .encode(),
+                )
+                .unwrap();
+                assert_eq!(t.recv().unwrap(), Message::Ack.encode());
+                clients.push(t);
+            }
+            results.push(bench(
+                if name == "epoll" {
+                    "reactor wake round trip, 256 idle conns (epoll)"
+                } else {
+                    "reactor wake round trip, 256 idle conns (poll)"
+                },
+                0.2 * scale,
+                || handle.stats().unwrap().wakes,
+            ));
+            drop(clients);
+            reactor.shutdown();
+            sched.shutdown();
+        }
     }
 
     println!("\n== exit policy ==");

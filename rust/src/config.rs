@@ -126,6 +126,24 @@ impl DeploymentConfig {
     }
 }
 
+/// Readiness backend for the reactor's event loop
+/// ([`crate::net::event::EventSet`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ReactorBackend {
+    /// `CE_REACTOR_BACKEND=poll|epoll` when the env var is set, else
+    /// the platform default: edge-triggered `epoll` on Linux, `poll(2)`
+    /// elsewhere.
+    #[default]
+    Auto,
+    /// The portable `poll(2)` loop: every wake rebuilds an O(conns)
+    /// pollfd array.
+    Poll,
+    /// Linux `epoll`: interest changes are O(1) `epoll_ctl` calls and a
+    /// wake costs only the connections that are actually ready.
+    /// Degrades to `poll` (with a warning) off Linux.
+    Epoll,
+}
+
 /// Knobs for the cloud's event-driven connection reactor
 /// ([`crate::net::reactor`]): one thread owns every cloud-side socket,
 /// so per-connection resource bounds are what protect the whole server.
@@ -164,6 +182,10 @@ pub struct ReactorConfig {
     /// connections are reaped, its cloud session goes idle and the TTL
     /// sweep releases the bytes.
     pub idle_timeout_s: f64,
+    /// Which readiness backend the reactor runs on.  `Auto` (default)
+    /// honours the `CE_REACTOR_BACKEND` env toggle and otherwise picks
+    /// `epoll` on Linux, `poll` elsewhere.
+    pub backend: ReactorBackend,
 }
 
 impl Default for ReactorConfig {
@@ -174,6 +196,7 @@ impl Default for ReactorConfig {
             worker_queue_cap: 4096,
             hello_timeout_s: 10.0,
             idle_timeout_s: 0.0,
+            backend: ReactorBackend::Auto,
         }
     }
 }
@@ -285,6 +308,8 @@ mod tests {
         // idle reap is opt-in: today's edge never reconnects, so a quiet
         // but alive link must not be cut by default
         assert_eq!(r.idle_timeout_s, 0.0);
+        // backend choice defaults to Auto (env toggle, then platform)
+        assert_eq!(r.backend, ReactorBackend::Auto);
     }
 
     #[test]

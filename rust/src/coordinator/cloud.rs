@@ -1,7 +1,7 @@
 //! Cloud server (paper §4.2): receives hidden-state uploads, manages
 //! per-device context, and serves single-token inference requests.
 //!
-//! Thread model — `workers + 2` threads total, independent of how many
+//! Thread model — `workers + 1` threads total, independent of how many
 //! devices are connected (see [`crate::coordinator::scheduler`] for the
 //! serving core and [`crate::net::reactor`] for the connection layer):
 //! * a **worker pool** ([`Scheduler`]) — each worker thread owns its own
@@ -10,29 +10,30 @@
 //!   each worker builds its engines on its own thread).  An infer request
 //!   whose uploads have not landed parks on its worker and is woken by
 //!   the covering `Upload` — purely event-driven, no polling;
-//! * one **acceptor** thread takes TCP connections and registers them
-//!   with the reactor;
-//! * one **reactor** thread owns *all* connection sockets (nonblocking,
-//!   `poll(2)`-multiplexed), decodes frames through the shared
+//! * one **reactor** thread owns the listener fd *and* all connection
+//!   sockets (nonblocking, multiplexed through
+//!   [`EventSet`](crate::net::event::EventSet) — edge-triggered `epoll`
+//!   on Linux, `poll(2)` elsewhere).  Accepting happens inside the wake
+//!   loop, so the dedicated acceptor thread of earlier revisions is
+//!   gone along with the per-connection `std::thread::spawn` before it:
+//!   a thousand edge devices cost two thousand registered sockets, not
+//!   two thousand blocked threads plus an acceptor.  The reactor
+//!   decodes frames through the shared
 //!   [`FrameCodec`](crate::net::codec::FrameCodec), routes work to the
 //!   owning worker through a [`Router`], and writes responses back as
-//!   each socket accepts them.  The per-connection
-//!   `std::thread::spawn` of earlier revisions is gone: a thousand edge
-//!   devices now cost two thousand registered sockets, not two thousand
-//!   blocked threads.
+//!   each socket accepts them.
 //!
 //! The paper's "Dual API" maps to two connections per device (upload
 //! channel + infer channel), each announced by a `Hello`.  Because the
 //! channels are independent, an `InferRequest` may overtake its own
 //! uploads in flight; the scheduler's parking makes that race benign.
 //!
-//! Shutdown is deterministic: [`CloudServer::shutdown`] stops the
-//! acceptor, then joins the reactor — which closes every registered
-//! socket before exiting — then drains the worker pool.  When it
-//! returns, no connection can still produce a response.
+//! Shutdown is deterministic: [`CloudServer::shutdown`] joins the
+//! reactor — which stops accepting and closes every registered socket
+//! before exiting — then drains the worker pool.  When it returns, no
+//! connection can still produce a response.
 
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::net::TcpListener;
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
@@ -52,15 +53,14 @@ pub struct CloudServer {
     pub addr: std::net::SocketAddr,
     scheduler: Option<Scheduler>,
     reactor: Option<Reactor>,
-    stop: Arc<AtomicBool>,
-    acceptor: Option<std::thread::JoinHandle<()>>,
 }
 
 impl CloudServer {
     /// Spawn the server with `cfg.workers` serving threads plus the
-    /// acceptor and the connection reactor.  `builder` runs on every
-    /// worker thread and constructs that worker's engine factory there
-    /// (PJRT objects never cross threads).
+    /// connection reactor (which owns the listener — no acceptor
+    /// thread).  `builder` runs on every worker thread and constructs
+    /// that worker's engine factory there (PJRT objects never cross
+    /// threads).
     pub fn spawn<B>(
         listener: TcpListener,
         dims: ModelDims,
@@ -72,34 +72,8 @@ impl CloudServer {
     {
         let addr = listener.local_addr()?;
         let scheduler = Scheduler::spawn(dims.clone(), cfg, Arc::new(builder))?;
-        let reactor = Reactor::spawn(scheduler.router(), dims, cfg.reactor)?;
-        let conns = reactor.handle();
-
-        let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = Arc::clone(&stop);
-        let acceptor = std::thread::Builder::new().name("cloud-accept".into()).spawn(move || {
-            for stream in listener.incoming() {
-                if stop2.load(Ordering::SeqCst) {
-                    break;
-                }
-                match stream {
-                    Ok(s) => {
-                        if conns.register(s).is_err() {
-                            break; // reactor gone: the server is tearing down
-                        }
-                    }
-                    Err(e) => log::warn!("accept error: {e}"),
-                }
-            }
-        })?;
-
-        Ok(CloudServer {
-            addr,
-            scheduler: Some(scheduler),
-            reactor: Some(reactor),
-            stop,
-            acceptor: Some(acceptor),
-        })
+        let reactor = Reactor::spawn(scheduler.router(), dims, cfg.reactor, Some(listener))?;
+        Ok(CloudServer { addr, scheduler: Some(scheduler), reactor: Some(reactor) })
     }
 
     pub fn stats(&self) -> Result<CloudStats> {
@@ -115,20 +89,18 @@ impl CloudServer {
     /// pool; returns final serving stats.  Deterministic: when this
     /// returns, every socket the server ever registered is closed.
     pub fn shutdown(mut self) -> CloudStats {
-        self.stop.store(true, Ordering::SeqCst);
-        // unblock the acceptor
-        let _ = TcpStream::connect(self.addr);
-        if let Some(a) = self.acceptor.take() {
-            let _ = a.join();
-        }
         if let Some(r) = self.reactor.take() {
+            // joining the reactor closes the listener and every socket
             let rs = r.shutdown();
             log::debug!(
-                "reactor closed: {} conns opened, {} evicted slow, {} frames in / {} out",
+                "reactor ({}) closed: {} conns opened, {} evicted slow, \
+                 {} frames in / {} out over {} wakes",
+                rs.backend,
                 rs.conns_opened,
                 rs.evicted_slow,
                 rs.frames_in,
-                rs.frames_out
+                rs.frames_out,
+                rs.wakes
             );
         }
         self.scheduler.take().map(Scheduler::shutdown).unwrap_or_default()
@@ -137,11 +109,9 @@ impl CloudServer {
 
 impl Drop for CloudServer {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        // dropping the reactor closes every connection; dropping the
-        // scheduler tells every worker to stop
+        // dropping the reactor stops accepting and closes every
+        // connection; dropping the scheduler tells every worker to stop
         self.reactor.take();
         self.scheduler.take();
-        let _ = TcpStream::connect(self.addr);
     }
 }

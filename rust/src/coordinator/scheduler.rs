@@ -57,11 +57,12 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, ensure, Context, Result};
 
 use crate::config::CloudConfig;
 use crate::coordinator::content_manager::{Coverage, PlanReq, WorkPlan};
 use crate::coordinator::context_store::{ContextStore, ContextStoreStats};
+use crate::coordinator::protocol::UPLOAD_HDR_LEN;
 use crate::model::manifest::ModelDims;
 use crate::quant::{self, Precision};
 use crate::runtime::traits::{BatchItem, CloudEngine};
@@ -135,6 +136,13 @@ pub enum UploadPayload {
     Floats(Vec<f32>),
     /// Packed wire payload, unpacked on the owning worker thread.
     Packed { bytes: Vec<u8>, precision: Precision },
+    /// Packed wire payload still sitting inside its frame buffer: the
+    /// reactor moves the WHOLE `UploadHidden` frame (payload =
+    /// `frame[UPLOAD_HDR_LEN..]`, guaranteed by the fixed-width header
+    /// + the decoder's trailing-bytes check) instead of copying the
+    /// payload out — for a large single-copy-ingested upload this keeps
+    /// the reactor thread free of per-byte work entirely.
+    PackedFrame { frame: Vec<u8>, precision: Precision },
 }
 
 impl UploadPayload {
@@ -142,6 +150,10 @@ impl UploadPayload {
         match self {
             UploadPayload::Floats(v) => Ok(v),
             UploadPayload::Packed { bytes, precision } => quant::unpack(&bytes, precision),
+            UploadPayload::PackedFrame { frame, precision } => {
+                ensure!(frame.len() >= UPLOAD_HDR_LEN, "upload frame shorter than its header");
+                quant::unpack(&frame[UPLOAD_HDR_LEN..], precision)
+            }
         }
     }
 }

@@ -1,19 +1,33 @@
 //! Networking: the sans-I/O wire layer and WAN models.
 //!
 //! The wire stack is layered so the protocol framing exists **exactly
-//! once** and every I/O strategy adapts around it:
+//! once**, readiness exists exactly once, and every I/O strategy adapts
+//! around them:
 //!
 //! * [`codec`] — [`codec::FrameCodec`], the sans-I/O framing core.  It
 //!   performs no I/O: callers push received bytes in (`feed` /
-//!   `next_frame`) and drain queued wire bytes out (`enqueue_frame` /
-//!   `writable_bytes` / `consume_written`), with `MAX_FRAME` enforced
-//!   mid-stream and backpressure visible via `pending_out`.
+//!   `next_frame` / bulk `feed_all`) and drain queued wire bytes out
+//!   (`enqueue_frame` / `writable_bytes` / `consume_written`), with
+//!   `MAX_FRAME` enforced mid-stream and backpressure visible via
+//!   `pending_out`.  Large frame bodies use the reserve-then-fill
+//!   single-copy path (`read_slot` / `commit`): the codec hands out a
+//!   writable slice sized from the decoded length prefix and the caller
+//!   reads from the fd straight into the frame's final buffer.
+//! * [`event`] — [`event::EventSet`], the readiness abstraction: an
+//!   edge-triggered `epoll(7)` backend on Linux (O(1) interest changes,
+//!   O(ready) wakes) and a portable `poll(2)` fallback, both declared
+//!   straight against the platform libc (no new crate), selected at
+//!   runtime (`ReactorConfig::backend` / `CE_REACTOR_BACKEND`).  It
+//!   knows nothing about frames or connections — only fds, tokens, and
+//!   interest.
 //! * [`reactor`] — the cloud side: one event-driven thread
-//!   ([`reactor::Reactor`], `poll(2)`-based) owns every accepted socket,
-//!   decodes frames in place (zero-copy upload path), routes work to the
-//!   scheduler's workers, and drains token responses through
-//!   per-connection write queues with slow-reader eviction and
-//!   worker-queue backpressure.
+//!   ([`reactor::Reactor`]) owns the listener fd *and* every accepted
+//!   socket (accepting happens inside the wake loop, so the cloud's
+//!   thread budget is `workers + 1`), decodes frames through the shared
+//!   codec (zero-copy upload path, single-copy large-frame ingest),
+//!   routes work to the scheduler's workers, and drains token responses
+//!   through per-connection write queues with slow-reader eviction and
+//!   worker-queue backpressure expressed as O(1) interest changes.
 //! * [`transport`] — the blocking adapters: [`transport::TcpTransport`]
 //!   (edge client side), [`transport::InProcTransport`] (tests), and the
 //!   [`transport::Throttled`] WAN wrapper, all wrapping the same codec.
@@ -22,6 +36,7 @@
 //!   [`codec::frame_wire_len`], so simulated wire costs track the real
 //!   framing).
 pub mod codec;
+pub mod event;
 pub mod profiles;
 pub mod reactor;
 pub mod simulated;

@@ -1,12 +1,19 @@
-//! Event-driven cloud-side connection reactor: **one thread** owns every
-//! accepted socket, multiplexing thousands of edge links where the old
-//! transport burned a blocked OS thread per connection.
+//! Event-driven cloud-side connection reactor: **one thread** owns the
+//! listener and every accepted socket, multiplexing thousands of edge
+//! links where the old transport burned a blocked OS thread per
+//! connection (and a dedicated acceptor thread besides).
 //!
 //! Sans-I/O layering: the reactor does the I/O and the *scheduling of*
-//! I/O, while all framing lives in [`crate::net::codec::FrameCodec`] and
-//! all message semantics in [`crate::coordinator::protocol`].  Per
-//! readiness event the reactor reads a chunk, feeds the connection's
-//! codec, and routes every completed frame:
+//! I/O, while all framing lives in [`crate::net::codec::FrameCodec`],
+//! all message semantics in [`crate::coordinator::protocol`], and all
+//! readiness in [`crate::net::event::EventSet`].  Per readiness event
+//! the reactor reads until `WouldBlock` (the edge-triggered contract)
+//! or a per-event budget (`READS_PER_EVENT`; the event is re-armed so
+//! one firehose peer cannot starve the others), feeds the connection's
+//! codec — large upload bodies land straight in their final frame
+//! buffer via the codec's single-copy
+//! [`read_slot`](crate::net::codec::FrameCodec::read_slot) path — and
+//! routes every completed frame:
 //!
 //! * `Hello` — pins the connection to a device/session (upload channels
 //!   additionally reset the device, exactly like the old per-connection
@@ -14,11 +21,17 @@
 //! * `UploadHidden` — decoded through the zero-copy
 //!   [`Message::decode_upload`] path and routed to the owning worker;
 //! * `InferRequest` — routed with a [`Reply`] that posts a completion
-//!   record back to the reactor and wakes its poll loop; the response
+//!   record back to the reactor and wakes its event loop; the response
 //!   frame is queued on the connection's codec and drained as the
 //!   socket accepts it;
 //! * `EndSession` — routed; anything else is answered with an `Error`
 //!   frame and the connection is closed once that frame drains.
+//!
+//! Accepting happens *inside* the wake loop: the listener fd sits in
+//! the same event set as every connection, so a readable listener is
+//! just another event and the cloud's thread budget is `workers + 1` —
+//! no acceptor thread.  Admission (`max_conns`) and handshake arming
+//! (`hello_timeout_s`) run at accept time, same as the old acceptor.
 //!
 //! Flow control (knobs: [`ReactorConfig`]):
 //! * **Slow-reader eviction** — a connection whose unflushed write queue
@@ -28,6 +41,9 @@
 //!   ([`Router::queue_depth`]) exceeds `worker_queue_cap`, the reactor
 //!   stops *reading* from that worker's connections, pushing the
 //!   overload into kernel TCP flow control instead of heap memory.
+//!   Pausing and resuming are O(1) interest changes on the event set,
+//!   and re-arming re-delivers the edge for bytes that arrived
+//!   mid-pause, so resumption cannot stall.
 //! * **Connection-closed fencing** — completions for a connection that
 //!   has since closed are dropped (connection ids are never reused), so
 //!   a response can never be written to a recycled socket.
@@ -37,11 +53,15 @@
 //!   of holding it until a write fails, and its now-idle cloud session
 //!   becomes eligible for the context store's TTL sweep.
 //!
-//! Readiness comes from `poll(2)`, declared directly against the libc
-//! every Rust binary already links (no new dependency); cross-thread
-//! wakeups use a socketpair-style self-wake.  On non-unix targets a
-//! portable fallback probes nonblocking sockets at a small fixed
-//! cadence instead.
+//! Per-wake cost: with no pauses, pending handshakes, or armed idle
+//! timers, a wake touches only the channels (`try_recv` until empty),
+//! one queue-depth read per *worker*, and the connections that are
+//! actually ready — on the epoll backend that is independent of how
+//! many sockets are registered ([`ReactorStats::wakes`] /
+//! [`ReactorStats::events_seen`] make the claim measurable).  The
+//! `poll(2)` backend keeps the portable O(conns)-per-wake behaviour.
+//! Cross-thread wakeups use a socketpair-style self-wake registered in
+//! the same event set.
 //!
 //! Shutdown is deterministic: [`Reactor::shutdown`] (or drop) closes
 //! every registered socket *before* the reactor thread exits, so once
@@ -49,7 +69,7 @@
 
 use std::collections::HashMap;
 use std::io::{self, Read, Write};
-use std::net::TcpStream;
+use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -62,6 +82,7 @@ use crate::coordinator::protocol::{Channel, Message, NO_REQ};
 use crate::coordinator::scheduler::{InferOutcome, Reply, Router, SchedMsg, UploadPayload};
 use crate::model::manifest::ModelDims;
 use crate::net::codec::FrameCodec;
+use crate::net::event::{Event, EventSet, Interest, SourceFd, Token};
 
 // ---------------------------------------------------------------------------
 // readiness primitives
@@ -93,8 +114,23 @@ fn wake_pair() -> io::Result<(WakeStream, WakeStream)> {
     Ok((a, b))
 }
 
+/// The event-set key of the reactor's self-wake channel.
+const WAKE_TOKEN: Token = 0;
+/// The event-set key of the listener fd (connection ids start at 1 and
+/// never reach this).
+const LISTEN_TOKEN: Token = u64::MAX;
+
+#[cfg(unix)]
+fn raw_fd<T: std::os::unix::io::AsRawFd>(t: &T) -> SourceFd {
+    t.as_raw_fd()
+}
+#[cfg(not(unix))]
+fn raw_fd<T>(_t: &T) -> SourceFd {
+    0 // the probe backend keys on tokens alone
+}
+
 /// Cross-thread wake handle: one byte on the self-wake channel makes the
-/// reactor's poll return.  `WouldBlock` means wakes are already pending,
+/// reactor's wait return.  `WouldBlock` means wakes are already pending,
 /// which is just as good.
 #[derive(Clone)]
 struct Waker(Arc<WakeStream>);
@@ -104,53 +140,6 @@ impl Waker {
         // a full pipe (WouldBlock) means wakes are already pending and a
         // closed one means the reactor is gone: both safe to ignore
         let _ = (&*self.0).write_all(&[1]);
-    }
-}
-
-/// `poll(2)` via the platform libc that every Rust binary already links
-/// — keeps the default build dependency-light (no `libc`/`mio` crate).
-#[cfg(unix)]
-mod sys {
-    use std::os::raw::c_int;
-    use std::os::unix::io::RawFd;
-
-    #[repr(C)]
-    pub struct PollFd {
-        pub fd: RawFd,
-        pub events: i16,
-        pub revents: i16,
-    }
-
-    pub const POLLIN: i16 = 0x001;
-    pub const POLLOUT: i16 = 0x004;
-    pub const POLLERR: i16 = 0x008;
-    pub const POLLHUP: i16 = 0x010;
-    pub const POLLNVAL: i16 = 0x020;
-
-    // nfds_t is `unsigned long` on linux, `unsigned int` on the BSDs/mac
-    #[cfg(any(target_os = "linux", target_os = "android", target_os = "emscripten"))]
-    type NFds = std::os::raw::c_ulong;
-    #[cfg(not(any(target_os = "linux", target_os = "android", target_os = "emscripten")))]
-    type NFds = std::os::raw::c_uint;
-
-    extern "C" {
-        #[link_name = "poll"]
-        fn poll_raw(fds: *mut PollFd, nfds: NFds, timeout_ms: c_int) -> c_int;
-    }
-
-    /// Block until a registered fd is ready or `timeout_ms` passes
-    /// (`-1` = forever).  EINTR retries transparently.
-    pub fn poll(fds: &mut [PollFd], timeout_ms: c_int) -> std::io::Result<usize> {
-        loop {
-            let r = unsafe { poll_raw(fds.as_mut_ptr(), fds.len() as NFds, timeout_ms) };
-            if r >= 0 {
-                return Ok(r as usize);
-            }
-            let e = std::io::Error::last_os_error();
-            if e.kind() != std::io::ErrorKind::Interrupted {
-                return Err(e);
-            }
-        }
     }
 }
 
@@ -174,8 +163,8 @@ struct Completion {
     out: Result<InferOutcome>,
 }
 
-/// Cheap cloneable control handle: the acceptor registers connections,
-/// anyone may request stats or shutdown.
+/// Cheap cloneable control handle: tests and in-process servers may
+/// register connections directly; anyone may request stats or shutdown.
 #[derive(Clone)]
 pub struct ReactorHandle {
     ctl: Sender<Ctl>,
@@ -183,7 +172,9 @@ pub struct ReactorHandle {
 }
 
 impl ReactorHandle {
-    /// Hand a freshly accepted connection to the reactor.
+    /// Hand an externally accepted connection to the reactor.  The
+    /// serve path does not need this (the reactor owns its listener);
+    /// it remains for tests and embedding.
     pub fn register(&self, stream: TcpStream) -> Result<()> {
         self.ctl.send(Ctl::Conn(stream)).map_err(|_| anyhow!("reactor gone"))?;
         self.waker.wake();
@@ -223,6 +214,18 @@ pub struct ReactorStats {
     /// Established connections closed for exceeding the idle timeout
     /// (no bytes read or written) — silently-dead NAT peers.
     pub idle_timeouts: u64,
+    /// Event-loop iterations (one `EventSet::wait` return each).
+    pub wakes: u64,
+    /// Sockets accepted in-loop from the listener fd (includes ones
+    /// later rejected by admission).
+    pub accepts: u64,
+    /// Readiness events dispatched across all wakes; `events_seen /
+    /// wakes` is the measured per-wake fan-out the epoll backend keeps
+    /// independent of connection count.
+    pub events_seen: u64,
+    /// Which readiness backend the loop runs on ("epoll", "poll", or
+    /// the non-unix "probe").
+    pub backend: &'static str,
     /// Connections currently registered (gauge, set on snapshot).
     pub open_conns: usize,
 }
@@ -236,10 +239,18 @@ pub struct Reactor {
 impl Reactor {
     /// Spawn the reactor thread.  `router` is where decoded work goes;
     /// `dims` validates upload payload shapes (same check the old
-    /// connection threads did).
-    pub fn spawn(router: Router, dims: ModelDims, cfg: ReactorConfig) -> Result<Reactor> {
+    /// connection threads did).  With `listener` set the reactor also
+    /// owns accepting: the listener fd joins the event set and new
+    /// connections are admitted inside the wake loop.
+    pub fn spawn(
+        router: Router,
+        dims: ModelDims,
+        cfg: ReactorConfig,
+        listener: Option<TcpListener>,
+    ) -> Result<Reactor> {
         let (ctl_tx, ctl_rx) = channel();
         let (wake_tx, wake_rx) = wake_pair().context("reactor wake channel")?;
+        let events = EventSet::new(cfg.backend).context("reactor readiness backend")?;
         let waker = Waker(Arc::new(wake_tx));
         let handle = ReactorHandle { ctl: ctl_tx, waker: waker.clone() };
         let (comp_tx, comp_rx) = channel();
@@ -249,10 +260,13 @@ impl Reactor {
                 dims,
                 cfg,
                 wake_rx,
+                listener,
                 ctl_rx,
                 comp_tx,
                 comp_rx,
                 waker,
+                events,
+                evbuf: Vec::with_capacity(1024),
                 conns: HashMap::new(),
                 next_id: 1,
                 scratch: vec![0u8; 64 * 1024],
@@ -312,12 +326,9 @@ struct Conn {
     paused: bool,
     /// Close as soon as the write queue drains (protocol error sent).
     closing: bool,
-}
-
-#[derive(Debug, Clone, Copy, Default)]
-struct Ready {
-    readable: bool,
-    writable: bool,
+    /// Interest currently installed in the event set; [`Loop::
+    /// sync_interest`] reconciles it after state changes.
+    interest: Interest,
 }
 
 struct Loop {
@@ -325,16 +336,20 @@ struct Loop {
     dims: ModelDims,
     cfg: ReactorConfig,
     wake_rx: WakeStream,
+    listener: Option<TcpListener>,
     ctl_rx: Receiver<Ctl>,
     comp_tx: Sender<Completion>,
     comp_rx: Receiver<Completion>,
     waker: Waker,
+    events: EventSet,
+    /// Reused readiness buffer (taken/restored around each dispatch).
+    evbuf: Vec<Event>,
     conns: HashMap<u64, Conn>,
     next_id: u64,
     scratch: Vec<u8>,
     stats: ReactorStats,
     /// Connections still awaiting their Hello — gates the reap scan and
-    /// the bounded poll timeout (maintained at register / handshake /
+    /// the bounded wait timeout (maintained at admit / handshake /
     /// close).
     pending_hellos: usize,
     /// Whether any connection was left paused by the last backpressure
@@ -345,10 +360,25 @@ struct Loop {
 
 impl Loop {
     fn run(mut self) -> ReactorStats {
+        self.stats.backend = self.events.backend_name();
+        if let Err(e) = self.events.register(raw_fd(&self.wake_rx), WAKE_TOKEN, Interest::READ) {
+            log::error!("reactor: cannot watch the wake channel: {e}");
+            return self.stats;
+        }
+        if let Some(l) = &self.listener {
+            let armed = l.set_nonblocking(true).is_ok()
+                && self.events.register(raw_fd(l), LISTEN_TOKEN, Interest::READ).is_ok();
+            if !armed {
+                log::error!(
+                    "reactor: cannot watch the listener fd; no connections will be accepted"
+                );
+                self.listener = None;
+            }
+        }
         loop {
-            // channels first, poll second: a sender that raced past our
+            // channels first, wait second: a sender that raced past our
             // drain has also written a wake byte we have not read yet,
-            // so the poll below cannot sleep through it
+            // so the wait below cannot sleep through it
             self.drain_ctl();
             if self.shutdown {
                 break;
@@ -357,18 +387,30 @@ impl Loop {
             self.refresh_pauses();
             self.reap_stale_handshakes();
             self.reap_idle_conns();
-            let (wake, ready) = self.poll_ready();
-            if wake {
-                self.drain_wake();
+            let timeout_ms = self.wait_timeout_ms();
+            let mut evbuf = std::mem::take(&mut self.evbuf);
+            evbuf.clear();
+            if let Err(e) = self.events.wait(timeout_ms, &mut evbuf) {
+                log::warn!("reactor {} wait failed: {e}", self.stats.backend);
+                std::thread::sleep(Duration::from_millis(1));
             }
-            for (id, r) in ready {
-                if r.readable {
-                    self.on_readable(id);
-                }
-                if r.writable {
-                    self.on_writable(id);
+            self.stats.wakes += 1;
+            self.stats.events_seen += evbuf.len() as u64;
+            for ev in &evbuf {
+                match ev.token {
+                    WAKE_TOKEN => self.drain_wake(),
+                    LISTEN_TOKEN => self.accept_ready(),
+                    id => {
+                        if ev.readable {
+                            self.on_readable(id);
+                        }
+                        if ev.writable {
+                            self.on_writable(id);
+                        }
+                    }
                 }
             }
+            self.evbuf = evbuf;
         }
         // deterministic teardown: every socket is closed before the
         // thread exits, so joining the reactor proves no connection can
@@ -386,45 +428,93 @@ impl Loop {
     fn drain_ctl(&mut self) {
         while let Ok(ctl) = self.ctl_rx.try_recv() {
             match ctl {
-                Ctl::Conn(stream) => {
-                    if self.conns.len() >= self.cfg.max_conns {
-                        self.stats.conns_rejected += 1;
-                        log::warn!(
-                            "reactor at max_conns={}; dropping new connection",
-                            self.cfg.max_conns
-                        );
-                        continue;
-                    }
-                    if stream.set_nonblocking(true).is_err() || stream.set_nodelay(true).is_err()
-                    {
-                        self.stats.conns_rejected += 1;
-                        continue;
-                    }
-                    let id = self.next_id;
-                    self.next_id += 1; // ids never reused: stale completions cannot alias
-                    let now = Instant::now();
-                    self.conns.insert(
-                        id,
-                        Conn {
-                            id,
-                            stream,
-                            codec: FrameCodec::new(),
-                            state: ConnState::AwaitingHello,
-                            opened: now,
-                            last_activity: now,
-                            paused: false,
-                            closing: false,
-                        },
-                    );
-                    self.stats.conns_opened += 1;
-                    self.pending_hellos += 1;
-                }
+                Ctl::Conn(stream) => self.admit(stream),
                 Ctl::Stats(reply) => {
                     let mut s = self.stats.clone();
                     s.open_conns = self.conns.len();
                     let _ = reply.send(s);
                 }
                 Ctl::Shutdown => self.shutdown = true,
+            }
+        }
+    }
+
+    /// Admit one freshly accepted connection: `max_conns` gate, then
+    /// registration in the event set with the handshake timer armed.
+    fn admit(&mut self, stream: TcpStream) {
+        if self.conns.len() >= self.cfg.max_conns {
+            self.stats.conns_rejected += 1;
+            log::warn!("reactor at max_conns={}; dropping new connection", self.cfg.max_conns);
+            return;
+        }
+        if stream.set_nonblocking(true).is_err() || stream.set_nodelay(true).is_err() {
+            self.stats.conns_rejected += 1;
+            return;
+        }
+        let id = self.next_id;
+        let interest = Interest::READ;
+        if let Err(e) = self.events.register(raw_fd(&stream), id, interest) {
+            log::warn!("reactor: cannot watch new connection: {e}");
+            self.stats.conns_rejected += 1;
+            return;
+        }
+        self.next_id += 1; // ids never reused: stale completions cannot alias
+        let now = Instant::now();
+        self.conns.insert(
+            id,
+            Conn {
+                id,
+                stream,
+                codec: FrameCodec::new(),
+                state: ConnState::AwaitingHello,
+                opened: now,
+                last_activity: now,
+                paused: false,
+                closing: false,
+                interest,
+            },
+        );
+        self.stats.conns_opened += 1;
+        self.pending_hellos += 1;
+    }
+
+    /// Accept until `WouldBlock`.  Edge-triggered caveat: the listener
+    /// event is only re-delivered on a *new* arrival, so a non-transient
+    /// accept failure (EMFILE under a burst) must not strand the
+    /// connections already queued in the kernel backlog — the listener
+    /// is explicitly re-armed (an identity `modify` re-delivers while
+    /// the condition holds) and the retry is paced by a short sleep.
+    fn accept_ready(&mut self) {
+        loop {
+            let accepted = match &self.listener {
+                Some(l) => l.accept(),
+                None => return,
+            };
+            match accepted {
+                Ok((stream, _)) => {
+                    self.stats.accepts += 1;
+                    self.admit(stream);
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        io::ErrorKind::Interrupted | io::ErrorKind::ConnectionAborted
+                    ) =>
+                {
+                    continue; // transient: the next pending socket may be fine
+                }
+                Err(e) => {
+                    // e.g. EMFILE: the backlog still holds accepted-able
+                    // sockets, so keep the event coming (paced) instead
+                    // of waiting for a SYN that may never arrive
+                    log::warn!("accept error: {e}");
+                    std::thread::sleep(Duration::from_millis(1));
+                    if let Some(l) = &self.listener {
+                        let _ = self.events.modify(raw_fd(l), LISTEN_TOKEN, Interest::READ);
+                    }
+                    return;
+                }
             }
         }
     }
@@ -537,7 +627,8 @@ impl Loop {
     /// Re-evaluate worker backpressure for every active connection.
     /// Overload is a per-worker property, so the queue depths are read
     /// once per worker, and the per-connection sweep runs only when
-    /// there is something to pause or unpause.
+    /// there is something to pause or unpause.  Pause state lands in
+    /// the event set as an interest change per affected connection.
     fn refresh_pauses(&mut self) {
         let cap = self.cfg.worker_queue_cap;
         let overloaded: Vec<bool> =
@@ -546,127 +637,89 @@ impl Loop {
             return; // nothing paused, nothing to pause
         }
         let mut still_paused = false;
+        let mut changed: Vec<u64> = Vec::new();
         for c in self.conns.values_mut() {
             if let ConnState::Active { device, .. } = c.state {
                 let o = overloaded[self.router.worker_for(device)];
-                if o && !c.paused {
-                    self.stats.read_pauses += 1;
-                }
-                if !o && c.paused {
-                    // resuming reads: the pause was the reactor's doing,
-                    // so the quiet stretch must not count toward the
-                    // peer's idle timeout
-                    c.last_activity = Instant::now();
+                if o != c.paused {
+                    if o {
+                        self.stats.read_pauses += 1;
+                    } else {
+                        // resuming reads: the pause was the reactor's
+                        // doing, so the quiet stretch must not count
+                        // toward the peer's idle timeout
+                        c.last_activity = Instant::now();
+                    }
+                    changed.push(c.id);
                 }
                 c.paused = o;
                 still_paused |= o;
             }
         }
         self.paused_conns = still_paused;
+        for id in changed {
+            self.sync_interest(id);
+        }
     }
 
     // -- readiness ----------------------------------------------------------
 
-    #[cfg(unix)]
-    fn poll_ready(&mut self) -> (bool, Vec<(u64, Ready)>) {
-        use std::os::unix::io::AsRawFd;
-        let mut fds = Vec::with_capacity(self.conns.len() + 1);
-        fds.push(sys::PollFd { fd: self.wake_rx.as_raw_fd(), events: sys::POLLIN, revents: 0 });
-        let mut ids = Vec::with_capacity(self.conns.len());
-        let mut any_paused = false;
-        let any_handshaking = self.pending_hellos > 0;
-        let idle_timeout = (self.cfg.idle_timeout_s > 0.0)
-            .then(|| Duration::from_secs_f64(self.cfg.idle_timeout_s));
-        let mut oldest_activity: Option<Instant> = None;
-        for c in self.conns.values() {
-            let mut ev = 0i16;
-            if !c.paused && !c.closing {
-                ev |= sys::POLLIN;
-            }
-            if c.codec.pending_out() > 0 {
-                ev |= sys::POLLOUT;
-            }
-            any_paused |= c.paused;
-            if idle_timeout.is_some() && !c.paused && matches!(c.state, ConnState::Active { .. })
-            {
-                oldest_activity =
-                    Some(oldest_activity.map_or(c.last_activity, |o| o.min(c.last_activity)));
-            }
-            // fds with events == 0 still report ERR/HUP, so a paused
-            // connection whose peer vanished is reaped promptly
-            fds.push(sys::PollFd { fd: c.stream.as_raw_fd(), events: ev, revents: 0 });
-            ids.push(c.id);
+    /// How long the next wait may sleep.  Paused reads re-check worker
+    /// queues at a 2ms cadence (workers do not wake the reactor when
+    /// they catch up); pending handshakes and armed idle timeouts need
+    /// bounded sleeps so a silent socket still hits its reap deadline.
+    /// Otherwise: sleep until an event or a cross-thread wake.
+    fn wait_timeout_ms(&self) -> i32 {
+        if self.paused_conns {
+            return 2;
         }
-        // workers do not wake the reactor when they catch up, so paused
-        // reads re-check the queue depth at a short cadence; pending
-        // handshakes and armed idle timeouts need bounded sleeps so a
-        // silent socket still hits its reap deadline
-        let timeout_ms = if any_paused {
-            2
-        } else {
-            let mut t: i64 = if any_handshaking { 500 } else { -1 };
-            if let (Some(idle), Some(oldest)) = (idle_timeout, oldest_activity) {
-                let deadline = oldest + idle;
-                let ms = deadline.saturating_duration_since(Instant::now()).as_millis() as i64;
+        let mut t: i64 = if self.pending_hellos > 0 { 500 } else { -1 };
+        if self.cfg.idle_timeout_s > 0.0 && !self.conns.is_empty() {
+            // O(conns) deadline scan, but only while the opt-in idle
+            // reap is armed
+            let idle = Duration::from_secs_f64(self.cfg.idle_timeout_s);
+            let oldest = self
+                .conns
+                .values()
+                .filter(|c| !c.paused && matches!(c.state, ConnState::Active { .. }))
+                .map(|c| c.last_activity)
+                .min();
+            if let Some(oldest) = oldest {
+                let ms =
+                    (oldest + idle).saturating_duration_since(Instant::now()).as_millis() as i64;
                 // floor keeps a just-missed deadline from busy-spinning;
-                // cap keeps the pollfd rebuild cadence reasonable
+                // cap keeps the reap cadence reasonable
                 let ms = (ms + 1).clamp(10, 60_000);
                 t = if t < 0 { ms } else { t.min(ms) };
             }
-            t as std::os::raw::c_int
-        };
-        if let Err(e) = sys::poll(&mut fds, timeout_ms) {
-            log::warn!("reactor poll failed: {e}");
-            std::thread::sleep(Duration::from_millis(1));
-            return (true, Vec::new());
         }
-        let wake = fds[0].revents != 0;
-        let err_mask = sys::POLLERR | sys::POLLHUP | sys::POLLNVAL;
-        let ready = ids
-            .into_iter()
-            .zip(fds.iter().skip(1))
-            .filter(|(_, f)| f.revents != 0)
-            .map(|(id, f)| {
-                (
-                    id,
-                    Ready {
-                        // ERR/HUP surface through a read() so the real
-                        // error (or EOF) is observed and the conn reaped
-                        readable: f.revents & (sys::POLLIN | err_mask) != 0,
-                        writable: f.revents & sys::POLLOUT != 0,
-                    },
-                )
-            })
-            .collect();
-        (wake, ready)
+        t as i32
     }
 
-    /// Portable fallback without `poll(2)`: probe nonblocking sockets at
-    /// a small fixed cadence (idle probes cost one `WouldBlock` read).
-    #[cfg(not(unix))]
-    fn poll_ready(&mut self) -> (bool, Vec<(u64, Ready)>) {
-        std::thread::sleep(Duration::from_millis(1));
-        let ready = self
-            .conns
-            .values()
-            .map(|c| {
-                (
-                    c.id,
-                    Ready {
-                        readable: !c.paused && !c.closing,
-                        writable: c.codec.pending_out() > 0,
-                    },
-                )
-            })
-            .collect();
-        (true, ready)
+    /// Align the event set's interest with the connection's state — an
+    /// O(1) `epoll_ctl` on the epoll backend, a map write on poll.
+    /// Re-arming read interest on a socket whose bytes arrived while
+    /// paused re-delivers the edge, so resume cannot stall.
+    fn sync_interest(&mut self, id: u64) {
+        let Some(c) = self.conns.get_mut(&id) else { return };
+        let want = Interest {
+            readable: !c.paused && !c.closing,
+            writable: c.codec.pending_out() > 0,
+        };
+        if want == c.interest {
+            return;
+        }
+        match self.events.modify(raw_fd(&c.stream), id, want) {
+            Ok(()) => c.interest = want,
+            Err(e) => log::warn!("reactor: interest change failed for conn {id}: {e}"),
+        }
     }
 
     // -- per-connection I/O --------------------------------------------------
 
     fn on_readable(&mut self, id: u64) {
         let mut scratch = std::mem::take(&mut self.scratch);
-        let (frames, close) = match self.conns.get_mut(&id) {
+        let (frames, close, more) = match self.conns.get_mut(&id) {
             Some(c) => read_frames(c, &mut scratch),
             None => {
                 self.scratch = scratch;
@@ -689,7 +742,25 @@ impl Loop {
         }
         if let Some(reason) = close {
             self.close_conn(id, &reason); // idempotent if already closed
+        } else {
+            self.sync_interest(id); // closing/write-queue state may have changed
+            if more {
+                // read budget exhausted with bytes likely still queued:
+                // re-deliver the event instead of reading on, so other
+                // connections, completions, and the backpressure sweep
+                // interleave with this peer's stream
+                self.rearm(id);
+            }
         }
+    }
+
+    /// Ask the event set to re-deliver `id`'s readiness on the next
+    /// wait if its condition still holds — an identity `modify` (epoll
+    /// re-checks on MOD; the poll/probe backends re-report pending data
+    /// on every wait anyway).
+    fn rearm(&mut self, id: u64) {
+        let Some(c) = self.conns.get(&id) else { return };
+        let _ = self.events.modify(raw_fd(&c.stream), id, c.interest);
     }
 
     fn on_writable(&mut self, id: u64) {
@@ -705,6 +776,8 @@ impl Loop {
             self.close_conn(id, &reason);
         } else if drained_closing {
             self.close_conn(id, "closed after protocol error");
+        } else {
+            self.sync_interest(id); // disarm write interest once drained
         }
     }
 
@@ -748,20 +821,23 @@ impl Loop {
                         v.payload.len() % (self.dims.d_model * v.precision.bytes_per_elem()) == 0,
                         "ragged upload"
                     );
+                    let (device, req_id, start_pos, prompt_len, precision) =
+                        (v.device_id, v.req_id, v.start_pos, v.prompt_len, v.precision);
                     return self
                         .router
                         .send(
-                            v.device_id,
+                            device,
                             SchedMsg::Upload {
-                                device: v.device_id,
+                                device,
                                 session,
-                                req_id: v.req_id,
-                                start_pos: v.start_pos,
-                                prompt_len: v.prompt_len,
-                                payload: UploadPayload::Packed {
-                                    bytes: v.payload.to_vec(),
-                                    precision: v.precision,
-                                },
+                                req_id,
+                                start_pos,
+                                prompt_len,
+                                // the WHOLE frame moves to the worker —
+                                // zero payload copies on this thread; a
+                                // single-copy-ingested upload stays at
+                                // one user-space copy end to end
+                                payload: UploadPayload::PackedFrame { frame, precision },
                             },
                         )
                         .context("scheduler gone");
@@ -844,11 +920,14 @@ impl Loop {
         } else if evict {
             self.stats.evicted_slow += 1;
             self.close_conn(id, "write queue over cap (slow reader evicted)");
+        } else {
+            self.sync_interest(id); // arm write interest for the backlog
         }
     }
 
     fn close_conn(&mut self, id: u64, reason: &str) {
         if let Some(c) = self.conns.remove(&id) {
+            let _ = self.events.deregister(raw_fd(&c.stream), id);
             if matches!(c.state, ConnState::AwaitingHello) {
                 self.pending_hellos = self.pending_hellos.saturating_sub(1);
             }
@@ -859,29 +938,60 @@ impl Loop {
     }
 }
 
-/// One nonblocking read, fed through the connection's codec.  Returns
-/// every frame the read completed plus an optional close reason — valid
-/// frames parsed before a poisoned one (or EOF) are still delivered, so
-/// an upload in the same TCP segment as the corruption is not lost.
-fn read_frames(c: &mut Conn, scratch: &mut [u8]) -> (Vec<Vec<u8>>, Option<String>) {
-    match c.stream.read(scratch) {
-        Ok(0) => (Vec::new(), Some("peer closed".into())),
-        Ok(n) => {
-            c.last_activity = Instant::now();
-            let mut frames = Vec::new();
-            // feed_all parses whole frames straight from the read chunk
-            // (no staging copy through the codec buffer on bulk ingest)
-            match c.codec.feed_all(&scratch[..n], &mut frames) {
-                Ok(()) => (frames, None),
-                Err(e) => (frames, Some(format!("bad frame: {e:#}"))),
+/// Cap on socket reads consumed by ONE readiness event (8 × 64 KiB
+/// scratch reads ≈ 512 KiB): a single fast peer must not monopolize the
+/// reactor thread, grow the frame batch without bound, or starve the
+/// between-wakes backpressure sweep.  When the budget runs out the
+/// event is re-armed ([`Loop::rearm`]) so the stream continues on the
+/// next wake with everything else interleaved.
+const READS_PER_EVENT: usize = 8;
+
+/// Read until `WouldBlock` or the per-event budget, feeding the
+/// connection's codec.  Large frame bodies land straight in their final
+/// buffer through the codec's `read_slot` (single copy); everything
+/// else batches through the shared scratch + `feed_all`.  Returns the
+/// frames the reads completed, an optional close reason, and whether
+/// the budget ran out with bytes likely still queued — valid frames
+/// parsed before a poisoned one (or EOF) are still delivered, so an
+/// upload in the same TCP segment as the corruption is not lost.
+fn read_frames(c: &mut Conn, scratch: &mut [u8]) -> (Vec<Vec<u8>>, Option<String>, bool) {
+    let mut frames = Vec::new();
+    let mut reads = 0usize;
+    loop {
+        if reads >= READS_PER_EVENT {
+            return (frames, None, true);
+        }
+        // one nonblocking read: into the frame's own buffer when the
+        // codec is mid-large-frame, into scratch otherwise
+        let read = if let Some(slot) = c.codec.read_slot() {
+            c.stream.read(slot).map(|n| (n, true))
+        } else {
+            c.stream.read(scratch).map(|n| (n, false))
+        };
+        match read {
+            Ok((0, _)) => return (frames, Some("peer closed".into()), false),
+            Ok((n, direct)) => {
+                reads += 1;
+                c.last_activity = Instant::now();
+                if direct {
+                    c.codec.commit(n);
+                } else if let Err(e) = c.codec.feed_all(&scratch[..n], &mut frames) {
+                    return (frames, Some(format!("bad frame: {e:#}")), false);
+                }
+                // drain direct completions so frame order is preserved
+                // across the two ingest styles
+                loop {
+                    match c.codec.next_frame() {
+                        Ok(Some(f)) => frames.push(f),
+                        Ok(None) => break,
+                        Err(e) => return (frames, Some(format!("bad frame: {e:#}")), false),
+                    }
+                }
             }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return (frames, None, false),
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return (frames, Some(format!("read failed: {e}")), false),
         }
-        Err(e)
-            if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::Interrupted) =>
-        {
-            (Vec::new(), None)
-        }
-        Err(e) => (Vec::new(), Some(format!("read failed: {e}"))),
     }
 }
 

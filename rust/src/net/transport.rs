@@ -8,7 +8,11 @@
 //! exactly once whether the peer is the event-driven cloud reactor
 //! ([`crate::net::reactor`]), a blocking test double, or an in-process
 //! pair.  Frames go out prefix+payload in one contiguous buffer — a
-//! single `write` syscall where the old transport issued two.
+//! single `write` syscall where the old transport issued two — and
+//! large frame bodies come *in* through the codec's reserve-then-fill
+//! [`FrameCodec::read_slot`] path, read from the socket straight into
+//! the frame's own buffer (`read_exact`'s single copy, resumable across
+//! deadline timeouts).
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -89,9 +93,17 @@ impl TcpTransport {
                 return Ok(None);
             }
             self.stream.set_read_timeout(Some(deadline - now)).context("set_read_timeout")?;
-            match self.stream.read(&mut self.scratch) {
-                Ok(0) => anyhow::bail!("peer closed"),
-                Ok(n) => {
+            // mid-large-frame the codec offers the frame's own tail
+            // (single copy); otherwise bytes stage through scratch
+            let read = if let Some(slot) = self.codec.read_slot() {
+                self.stream.read(slot).map(|n| (n, true))
+            } else {
+                self.stream.read(&mut self.scratch).map(|n| (n, false))
+            };
+            match read {
+                Ok((0, _)) => anyhow::bail!("peer closed"),
+                Ok((n, true)) => self.codec.commit(n),
+                Ok((n, false)) => {
                     if let Some(f) = self.codec.feed(&self.scratch[..n])? {
                         return Ok(Some(f));
                     }
@@ -144,9 +156,17 @@ impl Transport for TcpTransport {
             if let Some(f) = self.codec.next_frame()? {
                 return Ok(f);
             }
-            match self.stream.read(&mut self.scratch) {
-                Ok(0) => anyhow::bail!("peer closed"),
-                Ok(n) => {
+            // mid-large-frame the codec offers the frame's own tail
+            // (single copy); otherwise bytes stage through scratch
+            let read = if let Some(slot) = self.codec.read_slot() {
+                self.stream.read(slot).map(|n| (n, true))
+            } else {
+                self.stream.read(&mut self.scratch).map(|n| (n, false))
+            };
+            match read {
+                Ok((0, _)) => anyhow::bail!("peer closed"),
+                Ok((n, true)) => self.codec.commit(n),
+                Ok((n, false)) => {
                     if let Some(f) = self.codec.feed(&self.scratch[..n])? {
                         return Ok(f);
                     }

@@ -5,7 +5,9 @@
 //! the offline environment); failures print the seed.
 
 use ce_collm::coordinator::protocol::{Channel, Message};
-use ce_collm::net::codec::{encode_frame, frame_wire_len, FrameCodec, FRAME_HEADER, MAX_FRAME};
+use ce_collm::net::codec::{
+    encode_frame, frame_wire_len, FrameCodec, DIRECT_READ_MIN, FRAME_HEADER, MAX_FRAME,
+};
 use ce_collm::quant::{self, Precision};
 use ce_collm::util::rng::Rng;
 
@@ -171,6 +173,79 @@ fn prop_write_half_roundtrips_under_random_flush_sizes() {
             }
         }
         assert_eq!(got, msgs, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_read_into_identical_to_byte_dribbled_feed() {
+    // the reserve-then-fill single-copy path (read_slot/commit) must
+    // deliver exactly the frames — and the same frames_decoded count —
+    // as the byte-dribbled feed path, for any mix of small and
+    // threshold-clearing frame sizes and any read chunking
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::seed_from_u64(seed ^ 0x51D7);
+        let mut wire = Vec::new();
+        let mut want: Vec<Vec<u8>> = Vec::new();
+        for _ in 0..1 + rng.gen_range(6) {
+            // bias payload sizes toward the direct threshold's edges
+            let n = match rng.gen_range(4) {
+                0 => rng.gen_range(64),
+                1 => DIRECT_READ_MIN - 1 - rng.gen_range(16),
+                2 => DIRECT_READ_MIN + rng.gen_range(16),
+                _ => DIRECT_READ_MIN * (2 + rng.gen_range(3)),
+            };
+            let payload: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+            wire.extend_from_slice(&encode_frame(&payload));
+            want.push(payload);
+        }
+
+        // reference: the byte-dribbled feed path
+        let mut rc = FrameCodec::new();
+        let mut reference: Vec<Vec<u8>> = Vec::new();
+        let mut i = 0;
+        while i < wire.len() {
+            let k = (1 + rng.gen_range(2048)).min(wire.len() - i);
+            let mut next = rc.feed(&wire[i..i + k]).unwrap();
+            while let Some(f) = next {
+                reference.push(f);
+                next = rc.next_frame().unwrap();
+            }
+            i += k;
+        }
+        assert_eq!(reference, want, "seed {seed}: feed reference diverges from encode");
+
+        // read_into: take the codec's slot whenever it offers one
+        // (direct single-copy fill), fall back to feed otherwise —
+        // exactly the shape of the reactor's and transport's read loops
+        let mut c = FrameCodec::new();
+        let mut got: Vec<Vec<u8>> = Vec::new();
+        let mut i = 0;
+        while i < wire.len() {
+            let k = (1 + rng.gen_range(2048)).min(wire.len() - i);
+            if let Some(slot) = c.read_slot() {
+                let take = slot.len().min(k);
+                slot[..take].copy_from_slice(&wire[i..i + take]);
+                c.commit(take);
+                i += take;
+            } else {
+                let mut next = c.feed(&wire[i..i + k]).unwrap();
+                while let Some(f) = next {
+                    got.push(f);
+                    next = c.next_frame().unwrap();
+                }
+                i += k;
+            }
+            while let Some(f) = c.next_frame().unwrap() {
+                got.push(f);
+            }
+        }
+        assert_eq!(got, reference, "seed {seed}: read_into frames diverge");
+        assert_eq!(c.buffered_in(), 0, "seed {seed}: residue after a whole stream");
+        assert_eq!(
+            c.frames_decoded(),
+            rc.frames_decoded(),
+            "seed {seed}: frame accounting diverges across ingest styles"
+        );
     }
 }
 

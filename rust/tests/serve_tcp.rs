@@ -5,7 +5,7 @@
 
 use std::net::TcpListener;
 
-use ce_collm::config::{CloudConfig, DeploymentConfig};
+use ce_collm::config::{CloudConfig, DeploymentConfig, ReactorBackend};
 use ce_collm::coordinator::cloud::{CloudServer, SessionFactory};
 use ce_collm::coordinator::edge::{CloudLink, EdgeClient};
 use ce_collm::coordinator::protocol::{Channel, Message};
@@ -13,17 +13,27 @@ use ce_collm::model::manifest::test_manifest;
 use ce_collm::net::transport::{TcpTransport, Transport};
 use ce_collm::runtime::mock::{MockCloud, MockEdge, MockOracle};
 
-fn spawn_mock_server_with(seed: u64, workers: usize) -> CloudServer {
+/// The non-default readiness backend for this platform, so the flow-
+/// control tests cover both event loops: Linux defaults to epoll and
+/// cross-checks poll; elsewhere the default IS poll, so the "other"
+/// run is redundant but harmless.
+const OTHER_BACKEND: ReactorBackend = ReactorBackend::Poll;
+
+fn spawn_mock_server_cfg(seed: u64, cfg: CloudConfig) -> CloudServer {
     let dims = test_manifest().model;
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let sdims = dims.clone();
-    CloudServer::spawn(listener, dims, CloudConfig::with_workers(workers), move || {
+    CloudServer::spawn(listener, dims, cfg, move || {
         let f: SessionFactory = Box::new(move |_device| {
             Ok(Box::new(MockCloud::new(MockOracle::new(seed), sdims.clone())) as _)
         });
         Ok(f)
     })
     .unwrap()
+}
+
+fn spawn_mock_server_with(seed: u64, workers: usize) -> CloudServer {
+    spawn_mock_server_cfg(seed, CloudConfig::with_workers(workers))
 }
 
 fn spawn_mock_server(seed: u64) -> CloudServer {
@@ -141,23 +151,13 @@ fn tcp_end_session_releases_content_manager_state() {
     panic!("content manager still holds device state after EndSession");
 }
 
-#[test]
-fn silent_connection_is_reaped_by_hello_timeout() {
+fn hello_timeout_reaps_silent_connection(backend: ReactorBackend) {
     // a socket that connects and never says Hello must not squat on a
     // max_conns slot forever
-    let dims = test_manifest().model;
-    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-    let sdims = dims.clone();
     let mut cfg = CloudConfig::with_workers(1);
     cfg.reactor.hello_timeout_s = 0.05;
-    let server = CloudServer::spawn(listener, dims, cfg, move || {
-        let sdims = sdims.clone();
-        let f: SessionFactory = Box::new(move |_device| {
-            Ok(Box::new(MockCloud::new(MockOracle::new(1), sdims.clone())) as _)
-        });
-        Ok(f)
-    })
-    .unwrap();
+    cfg.reactor.backend = backend;
+    let server = spawn_mock_server_cfg(1, cfg);
 
     let silent = std::net::TcpStream::connect(server.addr).unwrap();
     for _ in 0..100 {
@@ -169,26 +169,26 @@ fn silent_connection_is_reaped_by_hello_timeout() {
             return;
         }
     }
-    panic!("silent connection was never reaped by the hello timeout");
+    panic!("silent connection was never reaped by the hello timeout ({backend:?})");
 }
 
 #[test]
-fn established_idle_connection_is_reaped_by_idle_timeout() {
+fn silent_connection_is_reaped_by_hello_timeout() {
+    hello_timeout_reaps_silent_connection(ReactorBackend::Auto);
+}
+
+#[test]
+fn silent_connection_is_reaped_by_hello_timeout_other_backend() {
+    hello_timeout_reaps_silent_connection(OTHER_BACKEND);
+}
+
+fn idle_timeout_reaps_established_connection(backend: ReactorBackend) {
     // an established (post-Hello) connection whose peer goes silent —
     // the NAT-expiry shape — must release its slot via the idle reap
-    let dims = test_manifest().model;
-    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-    let sdims = dims.clone();
     let mut cfg = CloudConfig::with_workers(1);
     cfg.reactor.idle_timeout_s = 0.05;
-    let server = CloudServer::spawn(listener, dims, cfg, move || {
-        let sdims = sdims.clone();
-        let f: SessionFactory = Box::new(move |_device| {
-            Ok(Box::new(MockCloud::new(MockOracle::new(1), sdims.clone())) as _)
-        });
-        Ok(f)
-    })
-    .unwrap();
+    cfg.reactor.backend = backend;
+    let server = spawn_mock_server_cfg(1, cfg);
 
     let mut conn = TcpTransport::connect(&server.addr.to_string()).unwrap();
     conn.send(&Message::Hello { device_id: 77, session: 1, channel: Channel::Upload }.encode())
@@ -203,7 +203,121 @@ fn established_idle_connection_is_reaped_by_idle_timeout() {
             return;
         }
     }
-    panic!("established idle connection was never reaped by the idle timeout");
+    panic!("established idle connection was never reaped by the idle timeout ({backend:?})");
+}
+
+#[test]
+fn established_idle_connection_is_reaped_by_idle_timeout() {
+    idle_timeout_reaps_established_connection(ReactorBackend::Auto);
+}
+
+#[test]
+fn established_idle_connection_is_reaped_by_idle_timeout_other_backend() {
+    idle_timeout_reaps_established_connection(OTHER_BACKEND);
+}
+
+fn slow_reader_gets_evicted(backend: ReactorBackend) {
+    // a client that requests responses and never reads them must be
+    // evicted once the kernel stops absorbing writes and the reactor's
+    // write queue crosses the cap — not allowed to buffer the server
+    // into the ground
+    let mut cfg = CloudConfig::with_workers(1);
+    cfg.max_park_s = 0.02; // park → fast error responses
+    cfg.reactor.write_queue_cap = 1024;
+    cfg.reactor.backend = backend;
+    let server = spawn_mock_server_cfg(2, cfg);
+
+    let mut conn = TcpTransport::connect(&server.addr.to_string()).unwrap();
+    conn.send(&Message::Hello { device_id: 3, session: 9, channel: Channel::Infer }.encode())
+        .unwrap();
+    assert_eq!(conn.recv().unwrap(), Message::Ack.encode(), "handshake completes");
+    // each request parks (its uploads never come), expires after
+    // max_park_s, and produces an Error frame this client never reads;
+    // enough of them overflow the kernel buffers, then the cap
+    for req in 0..10_000u32 {
+        let msg = Message::InferRequest {
+            device_id: 3,
+            req_id: req,
+            pos: 0,
+            prompt_len: 1,
+            deadline_ms: 0,
+        };
+        if conn.send(&msg.encode()).is_err() {
+            break; // already evicted: the dead socket is the success path
+        }
+    }
+    for _ in 0..500 {
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let rs = server.reactor_stats().unwrap();
+        if rs.evicted_slow >= 1 {
+            assert_eq!(rs.open_conns, 0, "evicted conn must be closed: {rs:?}");
+            server.shutdown();
+            return;
+        }
+    }
+    panic!("slow reader was never evicted past write_queue_cap ({backend:?})");
+}
+
+#[test]
+fn slow_reader_is_evicted() {
+    slow_reader_gets_evicted(ReactorBackend::Auto);
+}
+
+#[test]
+fn slow_reader_is_evicted_other_backend() {
+    slow_reader_gets_evicted(OTHER_BACKEND);
+}
+
+fn backpressure_pauses_then_serves_identically(backend: ReactorBackend) {
+    // worker_queue_cap = 0: any undrained scheduler message pauses
+    // reads on that worker's connections.  The pause/resume cycling
+    // must be invisible to the client — tokens still bit-identical to
+    // the blocking path — and the pause counter must prove the
+    // interest-toggling machinery actually engaged.
+    let seed = 29;
+    let mut cfg = CloudConfig::with_workers(1);
+    cfg.reactor.worker_queue_cap = 0;
+    cfg.reactor.backend = backend;
+    let server = spawn_mock_server_cfg(seed, cfg);
+    // θ = 1.0: every token defers, maximizing upload+infer traffic
+    let mut client = connect_client(&server, 6, seed, 1.0);
+    let out = client.generate("a backpressure prompt").unwrap();
+    assert!(!out.tokens.is_empty());
+
+    let dims = test_manifest().model;
+    let o = MockOracle::new(seed);
+    let mut edge = MockEdge::new(o, dims.clone());
+    let mut cloud = MockCloud::new(o, dims);
+    let mut timings = ce_collm::harness::trace::CallTimings::default();
+    let tr = ce_collm::harness::trace::record(
+        &mut edge,
+        &mut cloud,
+        ce_collm::config::ExitPolicy::Threshold(1.0),
+        ce_collm::quant::Precision::F16,
+        "a backpressure prompt",
+        20,
+        &mut timings,
+    )
+    .unwrap();
+    assert_eq!(out.tokens, tr.tokens, "pause/resume must not corrupt the stream ({backend:?})");
+
+    let rs = server.reactor_stats().unwrap();
+    assert!(
+        rs.read_pauses >= 1,
+        "a zero worker-queue cap must pause reads at least once ({backend:?}): {rs:?}"
+    );
+    assert_eq!(rs.evicted_slow, 0, "backpressure must not evict ({backend:?}): {rs:?}");
+    server.shutdown();
+}
+
+#[test]
+fn backpressure_pause_resume_is_transparent() {
+    backpressure_pauses_then_serves_identically(ReactorBackend::Auto);
+}
+
+#[test]
+fn backpressure_pause_resume_is_transparent_other_backend() {
+    backpressure_pauses_then_serves_identically(OTHER_BACKEND);
 }
 
 #[test]

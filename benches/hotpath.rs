@@ -233,50 +233,54 @@ fn main() {
             backends.push(("epoll", ReactorBackend::Epoll));
         }
         for (name, backend) in backends {
-            let dims = test_manifest().model;
-            let sdims = dims.clone();
-            let sched = Scheduler::spawn(
-                dims.clone(),
-                CloudConfig::default(),
-                Arc::new(move || {
-                    let sdims = sdims.clone();
-                    let f: SessionFactory = Box::new(move |_| {
-                        Ok(Box::new(MockCloud::new(MockOracle::new(1), sdims.clone())) as _)
-                    });
-                    Ok(f)
-                }),
-            )
-            .unwrap();
-            let rcfg = ReactorConfig { backend, ..ReactorConfig::default() };
-            let reactor = Reactor::spawn(sched.router(), dims, rcfg, None).unwrap();
-            let handle = reactor.handle();
-            let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
-            let addr = listener.local_addr().unwrap();
-            let mut clients = Vec::with_capacity(256);
-            for i in 0..256u64 {
-                let mut t = TcpTransport::connect(&addr.to_string()).unwrap();
-                let (server_end, _) = listener.accept().unwrap();
-                handle.register(server_end).unwrap();
-                t.send(
-                    &Message::Hello { device_id: i, session: 1, channel: Channel::Infer }
-                        .encode(),
+            // shards ∈ {1, 4}: the 1-shard labels match earlier runs
+            // for bench_diff continuity; the 4-shard pair tracks the
+            // fleet's fan-out cost (a stats round trip touches EVERY
+            // shard, and the 256 conns spread round-robin across them)
+            for shards in [1usize, 4] {
+                let dims = test_manifest().model;
+                let sdims = dims.clone();
+                let sched = Scheduler::spawn(
+                    dims.clone(),
+                    CloudConfig::default(),
+                    Arc::new(move || {
+                        let sdims = sdims.clone();
+                        let f: SessionFactory = Box::new(move |_| {
+                            Ok(Box::new(MockCloud::new(MockOracle::new(1), sdims.clone())) as _)
+                        });
+                        Ok(f)
+                    }),
                 )
                 .unwrap();
-                assert_eq!(t.recv().unwrap(), Message::Ack.encode());
-                clients.push(t);
+                let rcfg = ReactorConfig { backend, shards, ..ReactorConfig::default() };
+                let reactor = Reactor::spawn(sched.router(), dims, rcfg, None).unwrap();
+                let handle = reactor.handle();
+                let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+                let addr = listener.local_addr().unwrap();
+                let mut clients = Vec::with_capacity(256);
+                for i in 0..256u64 {
+                    let mut t = TcpTransport::connect(&addr.to_string()).unwrap();
+                    let (server_end, _) = listener.accept().unwrap();
+                    handle.register(server_end).unwrap();
+                    t.send(
+                        &Message::Hello { device_id: i, session: 1, channel: Channel::Infer }
+                            .encode(),
+                    )
+                    .unwrap();
+                    assert_eq!(t.recv().unwrap(), Message::Ack.encode());
+                    clients.push(t);
+                }
+                let label = match (name, shards) {
+                    ("epoll", 1) => "reactor wake round trip, 256 idle conns (epoll)",
+                    ("epoll", _) => "reactor wake round trip, 256 idle conns (epoll, 4 shards)",
+                    (_, 1) => "reactor wake round trip, 256 idle conns (poll)",
+                    (_, _) => "reactor wake round trip, 256 idle conns (poll, 4 shards)",
+                };
+                results.push(bench(label, 0.2 * scale, || handle.stats().unwrap().wakes));
+                drop(clients);
+                reactor.shutdown();
+                sched.shutdown();
             }
-            results.push(bench(
-                if name == "epoll" {
-                    "reactor wake round trip, 256 idle conns (epoll)"
-                } else {
-                    "reactor wake round trip, 256 idle conns (poll)"
-                },
-                0.2 * scale,
-                || handle.stats().unwrap().wakes,
-            ));
-            drop(clients);
-            reactor.shutdown();
-            sched.shutdown();
         }
     }
 

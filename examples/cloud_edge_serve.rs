@@ -7,7 +7,6 @@
 //!     cargo run --release --example cloud_edge_serve -- [--clients 3]
 //!         [--prompts 5] [--threshold 0.8] [--link wifi] [--workers 2]
 
-use std::net::TcpListener;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -32,17 +31,12 @@ fn main() -> Result<()> {
     let artifacts = args.get_or("artifacts", "artifacts");
 
     let dims = Manifest::load(std::path::Path::new(&artifacts))?.model;
-    let listener = TcpListener::bind("127.0.0.1:0")?;
-    let addr = listener.local_addr()?;
-    println!(
-        "starting cloud server on {addr} (link profile: {}, θ={threshold}, {workers} workers)",
-        link.name
-    );
-
     let art2 = artifacts.clone();
-    // the builder runs once per scheduler worker, on that worker's thread
-    let server = CloudServer::spawn(
-        listener,
+    // the builder runs once per scheduler worker, on that worker's
+    // thread; bind() gives the reactor fleet per-shard SO_REUSEPORT
+    // listeners on Linux
+    let server = CloudServer::bind(
+        "127.0.0.1:0",
         dims.clone(),
         CloudConfig::with_workers(workers),
         move || {
@@ -51,6 +45,14 @@ fn main() -> Result<()> {
             Ok(f)
         },
     )?;
+    let addr = server.addr;
+    println!(
+        "starting cloud server on {addr} (link profile: {}, θ={threshold}, {} workers, \
+         {} reactor shards)",
+        link.name,
+        workers,
+        server.shards()
+    );
 
     // Edge clients run on separate threads (separate PJRT stacks, as
     // separate edge devices would).  Requests are batched per client.

@@ -144,15 +144,40 @@ pub enum ReactorBackend {
     Epoll,
 }
 
-/// Knobs for the cloud's event-driven connection reactor
-/// ([`crate::net::reactor`]): one thread owns every cloud-side socket,
-/// so per-connection resource bounds are what protect the whole server.
+/// Env var consulted by [`ReactorConfig::resolved_shards`] when
+/// `shards` is 0 (auto): `CE_REACTOR_SHARDS=<n>` pins the reactor fleet
+/// size without a recompile.  An explicit `shards` value always wins,
+/// so tests that assert exact thread budgets stay deterministic.
+pub const SHARDS_ENV: &str = "CE_REACTOR_SHARDS";
+
+/// Hard cap on reactor shards.  Connection ids carry the owning shard
+/// in their top 8 bits (see `net::reactor`), so the representable
+/// ceiling is 256; 64 is already far past the point where accept and
+/// readiness stop being the bottleneck.
+pub const MAX_REACTOR_SHARDS: usize = 64;
+
+/// Knobs for the cloud's event-driven connection reactor fleet
+/// ([`crate::net::reactor`]): `shards` threads share every cloud-side
+/// socket (each owning its own event set and connection table), so
+/// per-connection resource bounds are what protect the whole server.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ReactorConfig {
+    /// Reactor shard count.  `0` (the default) resolves at spawn time:
+    /// the [`SHARDS_ENV`] env override if set, else `min(4, cores)` —
+    /// see [`ReactorConfig::resolved_shards`].  Each shard is one
+    /// thread with its own epoll/poll set, connection table, and (on
+    /// Linux, when the server binds its own listeners) its own
+    /// `SO_REUSEPORT` accept queue; the cloud's total thread budget is
+    /// exactly `workers + shards`.
+    pub shards: usize,
     /// Maximum simultaneously registered connections; connections
     /// accepted beyond this are dropped immediately (the edge sees a
     /// closed socket and degrades to local exits).  Each device costs
-    /// two (the dual API's upload + infer channels).
+    /// two (the dual API's upload + infer channels).  Enforced as an
+    /// even `max_conns / shards` share per shard (same split as the
+    /// context store's per-worker budget): the kernel's reuseport hash
+    /// spreads connections uniformly, so the shares sum back to the
+    /// global bound without any cross-shard coordination.
     pub max_conns: usize,
     /// Per-connection write-queue cap in bytes.  A reader too slow to
     /// drain its token responses past this backlog is evicted (closed)
@@ -191,6 +216,7 @@ pub struct ReactorConfig {
 impl Default for ReactorConfig {
     fn default() -> Self {
         Self {
+            shards: 0,
             max_conns: 4096,
             write_queue_cap: 4 << 20,
             worker_queue_cap: 4096,
@@ -198,6 +224,29 @@ impl Default for ReactorConfig {
             idle_timeout_s: 0.0,
             backend: ReactorBackend::Auto,
         }
+    }
+}
+
+impl ReactorConfig {
+    /// The shard count the fleet will actually spawn.  An explicit
+    /// `shards` value is clamped and used as-is; `0` (auto) honours the
+    /// [`SHARDS_ENV`] env override and otherwise picks `min(4, cores)`
+    /// — one reactor saturates around ~100k connections, and four
+    /// shards cover that envelope without stealing cores from the
+    /// worker pool on small machines.
+    pub fn resolved_shards(&self) -> usize {
+        let n = if self.shards == 0 {
+            std::env::var(SHARDS_ENV)
+                .ok()
+                .and_then(|v| v.trim().parse::<usize>().ok())
+                .filter(|&n| n > 0)
+                .unwrap_or_else(|| {
+                    std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1).min(4)
+                })
+        } else {
+            self.shards
+        };
+        n.clamp(1, MAX_REACTOR_SHARDS)
     }
 }
 
@@ -310,6 +359,25 @@ mod tests {
         assert_eq!(r.idle_timeout_s, 0.0);
         // backend choice defaults to Auto (env toggle, then platform)
         assert_eq!(r.backend, ReactorBackend::Auto);
+        // shard count defaults to auto (env toggle, then min(4, cores))
+        assert_eq!(r.shards, 0);
+    }
+
+    #[test]
+    fn reactor_shards_resolve_within_bounds() {
+        // explicit values win and clamp; auto lands in [1, cap]
+        let mut r = ReactorConfig::default();
+        let auto = r.resolved_shards();
+        assert!((1..=MAX_REACTOR_SHARDS).contains(&auto), "auto resolved to {auto}");
+        if std::env::var(SHARDS_ENV).is_err() {
+            assert!(auto <= 4, "auto must not exceed min(4, cores)");
+        }
+        r.shards = 1;
+        assert_eq!(r.resolved_shards(), 1);
+        r.shards = 4;
+        assert_eq!(r.resolved_shards(), 4);
+        r.shards = MAX_REACTOR_SHARDS + 100;
+        assert_eq!(r.resolved_shards(), MAX_REACTOR_SHARDS, "explicit values clamp to the cap");
     }
 
     #[test]

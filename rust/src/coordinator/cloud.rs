@@ -1,37 +1,46 @@
 //! Cloud server (paper §4.2): receives hidden-state uploads, manages
 //! per-device context, and serves single-token inference requests.
 //!
-//! Thread model — `workers + 1` threads total, independent of how many
-//! devices are connected (see [`crate::coordinator::scheduler`] for the
-//! serving core and [`crate::net::reactor`] for the connection layer):
+//! Thread model — **`workers + shards`** threads total, independent of
+//! how many devices are connected (see [`crate::coordinator::scheduler`]
+//! for the serving core and [`crate::net::reactor`] for the connection
+//! layer):
 //! * a **worker pool** ([`Scheduler`]) — each worker thread owns its own
 //!   `CloudEngine` sessions and content-manager shard for the devices
 //!   assigned to it (`device_id % workers`; PJRT handles are `!Send`, so
 //!   each worker builds its engines on its own thread).  An infer request
 //!   whose uploads have not landed parks on its worker and is woken by
 //!   the covering `Upload` — purely event-driven, no polling;
-//! * one **reactor** thread owns the listener fd *and* all connection
-//!   sockets (nonblocking, multiplexed through
-//!   [`EventSet`](crate::net::event::EventSet) — edge-triggered `epoll`
-//!   on Linux, `poll(2)` elsewhere).  Accepting happens inside the wake
-//!   loop, so the dedicated acceptor thread of earlier revisions is
-//!   gone along with the per-connection `std::thread::spawn` before it:
-//!   a thousand edge devices cost two thousand registered sockets, not
-//!   two thousand blocked threads plus an acceptor.  The reactor
-//!   decodes frames through the shared
+//! * a **reactor fleet** ([`Reactor`]) of `cfg.reactor` shards (default
+//!   `min(4, cores)`, `CE_REACTOR_SHARDS` override) — each shard owns
+//!   its own [`EventSet`](crate::net::event::EventSet) (edge-triggered
+//!   `epoll` on Linux, `poll(2)` elsewhere), its own connection table
+//!   and write queues, and its own accept path.  Servers started with
+//!   [`CloudServer::bind`] get per-shard `SO_REUSEPORT` listeners on
+//!   Linux (kernel-level accept load balancing, no shared queue);
+//!   [`CloudServer::spawn`] with a caller-bound listener shares its
+//!   accept queue across the shards via dup'd fds.  Either way
+//!   accepting happens inside each shard's wake loop — a thousand edge
+//!   devices cost two thousand registered sockets spread over the
+//!   fleet, not two thousand blocked threads plus an acceptor.  Each
+//!   shard decodes frames through the shared
 //!   [`FrameCodec`](crate::net::codec::FrameCodec), routes work to the
 //!   owning worker through a [`Router`], and writes responses back as
-//!   each socket accepts them.
+//!   each socket accepts them; completions come back to the shard that
+//!   owns the connection (conn ids are shard-tagged).
 //!
 //! The paper's "Dual API" maps to two connections per device (upload
 //! channel + infer channel), each announced by a `Hello`.  Because the
 //! channels are independent, an `InferRequest` may overtake its own
 //! uploads in flight; the scheduler's parking makes that race benign.
+//! The two connections of one device may land on *different* shards —
+//! that is fine, because uploads and infers meet at the device's
+//! worker, not in the connection layer.
 //!
 //! Shutdown is deterministic: [`CloudServer::shutdown`] joins the
-//! reactor — which stops accepting and closes every registered socket
-//! before exiting — then drains the worker pool.  When it returns, no
-//! connection can still produce a response.
+//! reactor fleet — every shard stops accepting and closes every socket
+//! it registered before exiting — then drains the worker pool.  When it
+//! returns, no connection can still produce a response.
 
 use std::net::TcpListener;
 use std::sync::Arc;
@@ -40,6 +49,7 @@ use anyhow::{Context, Result};
 
 use crate::config::CloudConfig;
 use crate::model::manifest::ModelDims;
+use crate::net::listener::bind_shard_listeners;
 use crate::net::reactor::{Reactor, ReactorStats};
 
 pub use crate::coordinator::context_store::{ContextStore, ContextStoreStats};
@@ -48,7 +58,7 @@ pub use crate::coordinator::scheduler::{
     TokenOut, UploadPayload,
 };
 
-/// A running cloud server bound to a TCP listener.
+/// A running cloud server bound to a TCP listening address.
 pub struct CloudServer {
     pub addr: std::net::SocketAddr,
     scheduler: Option<Scheduler>,
@@ -56,11 +66,37 @@ pub struct CloudServer {
 }
 
 impl CloudServer {
-    /// Spawn the server with `cfg.workers` serving threads plus the
-    /// connection reactor (which owns the listener — no acceptor
-    /// thread).  `builder` runs on every worker thread and constructs
-    /// that worker's engine factory there (PJRT objects never cross
-    /// threads).
+    /// Bind `addr` and spawn the server with `cfg.workers` serving
+    /// threads plus the reactor fleet.  This is the preferred entry
+    /// point: on Linux with more than one shard it binds one
+    /// `SO_REUSEPORT` listener *per shard* — the kernel load-balances
+    /// accepts across the fleet and no shard ever touches another's
+    /// accept queue.  (Elsewhere, or at one shard, it degrades to the
+    /// same shared/single accept arrangement as [`CloudServer::spawn`].)
+    /// `builder` runs on every worker thread and constructs that
+    /// worker's engine factory there (PJRT objects never cross threads).
+    pub fn bind<B>(addr: &str, dims: ModelDims, cfg: CloudConfig, builder: B) -> Result<CloudServer>
+    where
+        B: Fn() -> Result<SessionFactory> + Send + Sync + 'static,
+    {
+        let shards = cfg.reactor.resolved_shards();
+        let (mode, listeners) = bind_shard_listeners(addr, shards)?;
+        let bound = listeners
+            .iter()
+            .flatten()
+            .next()
+            .context("no listener bound")?
+            .local_addr()?;
+        let scheduler = Scheduler::spawn(dims.clone(), cfg, Arc::new(builder))?;
+        let reactor = Reactor::spawn_fleet(scheduler.router(), dims, cfg.reactor, listeners, mode)?;
+        Ok(CloudServer { addr: bound, scheduler: Some(scheduler), reactor: Some(reactor) })
+    }
+
+    /// Spawn the server on a caller-bound listener.  The fleet shares
+    /// the listener's one accept queue (dup'd fds, every shard races
+    /// `accept`) — correct everywhere, but without the kernel-level
+    /// balancing of [`CloudServer::bind`]'s per-shard reuseport
+    /// listeners.
     pub fn spawn<B>(
         listener: TcpListener,
         dims: ModelDims,
@@ -76,34 +112,65 @@ impl CloudServer {
         Ok(CloudServer { addr, scheduler: Some(scheduler), reactor: Some(reactor) })
     }
 
-    pub fn stats(&self) -> Result<CloudStats> {
-        self.scheduler.as_ref().context("scheduler gone")?.stats()
+    /// Reactor shards actually spawned.
+    pub fn shards(&self) -> usize {
+        self.reactor.as_ref().map(Reactor::shards).unwrap_or(0)
     }
 
-    /// Connection-layer counters (open connections, evictions, frames).
+    /// Full serving snapshot: worker-pool counters with the connection
+    /// layer filled in ([`CloudStats::reactor`] aggregate plus the
+    /// per-shard [`CloudStats::reactor_shards`] vector).
+    pub fn stats(&self) -> Result<CloudStats> {
+        let mut stats = self.scheduler.as_ref().context("scheduler gone")?.stats()?;
+        if let Some(r) = &self.reactor {
+            stats.reactor_shards = r.handle().shard_stats()?;
+            for s in &stats.reactor_shards {
+                stats.reactor.merge(s);
+            }
+        }
+        Ok(stats)
+    }
+
+    /// Connection-layer counters summed across the fleet.
     pub fn reactor_stats(&self) -> Result<ReactorStats> {
         self.reactor.as_ref().context("reactor gone")?.handle().stats()
     }
 
+    /// Connection-layer counters per shard (index = shard).
+    pub fn reactor_shard_stats(&self) -> Result<Vec<ReactorStats>> {
+        self.reactor.as_ref().context("reactor gone")?.handle().shard_stats()
+    }
+
     /// Stop accepting, close every connection, and shut down the worker
-    /// pool; returns final serving stats.  Deterministic: when this
-    /// returns, every socket the server ever registered is closed.
+    /// pool; returns final serving stats with the fleet's final
+    /// connection counters folded in.  Deterministic: when this returns,
+    /// every socket the server ever registered is closed.
     pub fn shutdown(mut self) -> CloudStats {
+        let mut shard_finals = Vec::new();
         if let Some(r) = self.reactor.take() {
-            // joining the reactor closes the listener and every socket
-            let rs = r.shutdown();
-            log::debug!(
-                "reactor ({}) closed: {} conns opened, {} evicted slow, \
-                 {} frames in / {} out over {} wakes",
-                rs.backend,
-                rs.conns_opened,
-                rs.evicted_slow,
-                rs.frames_in,
-                rs.frames_out,
-                rs.wakes
-            );
+            // joining the fleet closes the listeners and every socket
+            shard_finals = r.shutdown();
+            for (shard, rs) in shard_finals.iter().enumerate() {
+                log::debug!(
+                    "reactor shard {shard} ({}/{}) closed: {} accepted, {} conns opened, \
+                     {} evicted slow, {} frames in / {} out over {} wakes",
+                    rs.backend,
+                    rs.accept_mode,
+                    rs.accepts,
+                    rs.conns_opened,
+                    rs.evicted_slow,
+                    rs.frames_in,
+                    rs.frames_out,
+                    rs.wakes
+                );
+            }
         }
-        self.scheduler.take().map(Scheduler::shutdown).unwrap_or_default()
+        let mut stats = self.scheduler.take().map(Scheduler::shutdown).unwrap_or_default();
+        for s in &shard_finals {
+            stats.reactor.merge(s);
+        }
+        stats.reactor_shards = shard_finals;
+        stats
     }
 }
 

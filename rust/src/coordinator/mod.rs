@@ -18,9 +18,10 @@
 //!   coverage, coalesces and cross-device-batches engine passes, expires
 //!   deadlines, and runs the store's eviction sweeps strictly *between*
 //!   passes (a device being served is never evicted mid-pass).
-//! * [`cloud`] — the serving binary's shell: reactor (which owns the
-//!   listener and accepts in-loop) + worker pool wiring, `workers + 1`
-//!   threads total.
+//! * [`cloud`] — the serving binary's shell: reactor fleet (each shard
+//!   owns its accept path and accepts in-loop; per-shard `SO_REUSEPORT`
+//!   listeners on Linux) + worker pool wiring, exactly
+//!   `workers + shards` threads total.
 //!
 //! The edge side ([`edge`]) keeps a bounded replay ring of its exit-1
 //! hidden states per request, so a `SessionEvicted` response costs one

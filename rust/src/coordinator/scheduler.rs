@@ -64,6 +64,7 @@ use crate::coordinator::content_manager::{Coverage, PlanReq, WorkPlan};
 use crate::coordinator::context_store::{ContextStore, ContextStoreStats};
 use crate::coordinator::protocol::UPLOAD_HDR_LEN;
 use crate::model::manifest::ModelDims;
+use crate::net::reactor::ReactorStats;
 use crate::quant::{self, Precision};
 use crate::runtime::traits::{BatchItem, CloudEngine};
 
@@ -98,8 +99,11 @@ pub enum InferOutcome {
 }
 
 /// Single-use completion sink for one infer request.  The blocking path
-/// wraps an mpsc sender ([`Reply::channel`]); the reactor wraps a closure
-/// that posts a completion record and wakes its poll loop ([`Reply::new`]).
+/// wraps an mpsc sender ([`Reply::channel`]); a reactor shard wraps a
+/// closure that posts a completion record to *that shard's* completion
+/// channel and wakes *that shard's* event loop ([`Reply::new`]) — the
+/// sink resolves to the shard that created it, so a worker's answer can
+/// never land on another shard.
 /// Dropping a `Reply` without calling [`Reply::send`] signals "never
 /// answered" to whoever holds the other end (a channel-backed reply makes
 /// the receiver's `recv` fail, exactly like the old dropped sender did).
@@ -225,6 +229,14 @@ pub struct CloudStats {
     pub context: ContextStoreStats,
     /// Workers contributing to this snapshot.
     pub workers: usize,
+    /// Connection-layer counters aggregated across the reactor fleet.
+    /// Worker-local snapshots leave this zeroed; the serving shell
+    /// ([`crate::coordinator::cloud::CloudServer`]) fills it in.
+    pub reactor: ReactorStats,
+    /// The same counters per reactor shard (index = shard), so shard
+    /// imbalance — a skewed `SO_REUSEPORT` hash, one hot shard — stays
+    /// observable next to the aggregate.
+    pub reactor_shards: Vec<ReactorStats>,
 }
 
 impl CloudStats {
@@ -241,6 +253,8 @@ impl CloudStats {
         self.batch_devices_max = self.batch_devices_max.max(o.batch_devices_max);
         self.context.merge(&o.context);
         self.workers += o.workers;
+        self.reactor.merge(&o.reactor);
+        self.reactor_shards.extend(o.reactor_shards.iter().cloned());
     }
 }
 

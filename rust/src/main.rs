@@ -14,8 +14,6 @@
 //! --repeats N, --max-new N, --link wifi|lte|fiber|lan|ideal,
 //! --threshold T, --clients N, --addr HOST:PORT, --seed N.
 
-use std::net::TcpListener;
-
 use anyhow::{Context, Result};
 
 use ce_collm::config::{CloudConfig, DeploymentConfig};
@@ -164,28 +162,28 @@ fn run() -> Result<()> {
         "serve-cloud" => {
             let addr = args.get_or("addr", "127.0.0.1:7433");
             let workers: usize = args.get_parse("workers", 1);
-            let listener = TcpListener::bind(&addr)?;
-            println!(
-                "cloud server listening on {addr} ({workers} workers, artifacts: {artifacts})"
-            );
             let dims = ce_collm::model::manifest::Manifest::load(
                 std::path::Path::new(&artifacts),
             )?
             .model;
+            let mut cfg = CloudConfig::with_workers(workers);
+            cfg.reactor.shards = args.get_parse("shards", 0usize); // 0 = auto
             let art2 = artifacts.clone();
             // each worker loads its own stack on its own thread (PJRT is
-            // thread-local); the builder runs once per worker
-            let server = CloudServer::spawn(
-                listener,
-                dims,
-                CloudConfig::with_workers(workers),
-                move || {
-                    let stack = LocalStack::load(&art2)?;
-                    let f: SessionFactory =
-                        Box::new(move |_| Ok(Box::new(stack.cloud_session()) as _));
-                    Ok(f)
-                },
-            )?;
+            // thread-local); the builder runs once per worker.  bind()
+            // gives the reactor fleet per-shard SO_REUSEPORT listeners
+            // on Linux (kernel-balanced accepts)
+            let server = CloudServer::bind(&addr, dims, cfg, move || {
+                let stack = LocalStack::load(&art2)?;
+                let f: SessionFactory =
+                    Box::new(move |_| Ok(Box::new(stack.cloud_session()) as _));
+                Ok(f)
+            })?;
+            println!(
+                "cloud server listening on {addr} ({workers} workers, {} reactor shards, \
+                 artifacts: {artifacts})",
+                server.shards()
+            );
             println!("ready; Ctrl-C to stop");
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(3600));

@@ -4,6 +4,15 @@
 //! platform libc every Rust binary already links — same no-new-crate
 //! discipline as the rest of the wire layer.
 //!
+//! An `EventSet` is single-owner state: the reactor fleet creates **one
+//! set per shard** (each its own epoll instance / pollfd table), so
+//! interest changes and wakes never contend across shards.  Sets are
+//! fully independent — the same underlying file *description* may be
+//! registered in several sets at once (the shared-accept fallback
+//! registers dup'd listener fds in every shard's set; each dup is its
+//! own fd with its own interest), and the kernel reports readiness to
+//! each set that watches it.
+//!
 //! Why two backends: `poll(2)` rebuilds an O(conns) pollfd array on
 //! every wake, which is the scalability wall once connection counts go
 //! past a few thousand.  `epoll` splits the cost the right way —

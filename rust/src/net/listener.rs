@@ -1,0 +1,357 @@
+//! Listener provisioning and admission syscalls for the reactor fleet:
+//! how N reactor shards come to own N accept paths, and how one socket
+//! is accepted with the fewest syscalls the platform allows.
+//!
+//! Two fleet shapes ([`bind_shard_listeners`] / [`share_listener`]):
+//!
+//! * **Per-shard `SO_REUSEPORT` listeners** (Linux, and only when this
+//!   module does the binding): every shard binds its *own* listener to
+//!   the same address with `SO_REUSEPORT` set **before** `bind(2)`, so
+//!   all of them join one kernel reuseport group and incoming
+//!   connections are spread across shards by the kernel's 4-tuple hash
+//!   — no accept lock, no shared accept queue, no thundering herd.
+//!   The flag must be present at bind time on *every* member for the
+//!   group to form correctly, which is why this shape is only offered
+//!   when the fleet binds its listeners itself
+//!   ([`crate::coordinator::cloud::CloudServer::bind`]); a listener
+//!   bound elsewhere cannot be retrofitted into a balanced group.
+//! * **Shared accept queue** (fallback everywhere): one listener's fd is
+//!   dup'd into every shard's event set ([`TcpListener::try_clone`]).
+//!   All shards race `accept` on the same kernel queue; losers observe
+//!   `WouldBlock` and move on.  Strictly correct on every platform —
+//!   the herd costs a few spurious wakes under connection bursts, which
+//!   is the price of a caller-provided listener.
+//!
+//! Admission ([`accept_nonblocking`]): on Linux one
+//! `accept4(SOCK_NONBLOCK | SOCK_CLOEXEC)` yields a connection that is
+//! already nonblocking — the fcntl round trips the portable
+//! `accept` + `set_nonblocking` pair pays per admitted socket are gone.
+//! The portable pair is kept as [`accept_portable`] (compiled and
+//! unit-tested on every platform, including Linux, so the fallback leg
+//! cannot rot).
+//!
+//! Everything here is declared straight against the platform libc — the
+//! same no-new-crate discipline as [`crate::net::event`].
+
+use std::io;
+use std::net::{TcpListener, TcpStream};
+
+/// How a fleet's listeners were provisioned (reported through
+/// `ReactorStats::accept_mode`).
+pub const MODE_REUSEPORT: &str = "reuseport";
+/// All shards share one dup'd accept queue.
+pub const MODE_SHARED: &str = "shared";
+/// A single shard owns the single listener (no sharing needed).
+pub const MODE_SINGLE: &str = "single";
+/// No listener at all: connections arrive via `ReactorHandle::register`.
+pub const MODE_NONE: &str = "none";
+
+#[cfg(target_os = "linux")]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const AF_INET: c_int = 2;
+    pub const AF_INET6: c_int = 10;
+    pub const SOCK_STREAM: c_int = 1;
+    // x86_64 / aarch64 values (the targets this tree builds for); both
+    // flags were introduced in 2.6.27
+    pub const SOCK_NONBLOCK: c_int = 0o4000;
+    pub const SOCK_CLOEXEC: c_int = 0o2000000;
+    pub const SOL_SOCKET: c_int = 1;
+    pub const SO_REUSEADDR: c_int = 2;
+    pub const SO_REUSEPORT: c_int = 15;
+
+    extern "C" {
+        pub fn socket(domain: c_int, ty: c_int, protocol: c_int) -> c_int;
+        pub fn setsockopt(
+            fd: c_int,
+            level: c_int,
+            name: c_int,
+            value: *const c_void,
+            len: u32,
+        ) -> c_int;
+        pub fn bind(fd: c_int, addr: *const c_void, len: u32) -> c_int;
+        pub fn listen(fd: c_int, backlog: c_int) -> c_int;
+        pub fn accept4(fd: c_int, addr: *mut c_void, len: *mut u32, flags: c_int) -> c_int;
+    }
+}
+
+/// Bind one listener per shard at `addr`.  Returns the accept mode plus
+/// exactly `shards` listener slots (index = shard).  On Linux with more
+/// than one shard this binds a true `SO_REUSEPORT` fleet; if that fails
+/// (exotic kernel, permissions) — or off Linux — every shard shares one
+/// accept queue instead, so the fleet always comes up.
+pub fn bind_shard_listeners(
+    addr: &str,
+    shards: usize,
+) -> io::Result<(&'static str, Vec<Option<TcpListener>>)> {
+    if shards <= 1 {
+        return Ok((MODE_SINGLE, vec![Some(TcpListener::bind(addr)?)]));
+    }
+    #[cfg(target_os = "linux")]
+    {
+        match bind_reuseport_fleet(addr, shards) {
+            Ok(fleet) => {
+                return Ok((MODE_REUSEPORT, fleet.into_iter().map(Some).collect()));
+            }
+            Err(e) => log::warn!(
+                "SO_REUSEPORT listener fleet unavailable ({e}); \
+                 shards will share one accept queue"
+            ),
+        }
+    }
+    Ok(share_listener(TcpListener::bind(addr)?, shards))
+}
+
+/// Spread one already-bound listener across `shards` shards by dup'ing
+/// its fd: every shard registers the same accept queue and races
+/// `accept` (losers see `WouldBlock`).  A dup failure leaves that shard
+/// with no listener — it still serves connections handed to it via
+/// `ReactorHandle::register`.
+pub fn share_listener(
+    listener: TcpListener,
+    shards: usize,
+) -> (&'static str, Vec<Option<TcpListener>>) {
+    if shards <= 1 {
+        return (MODE_SINGLE, vec![Some(listener)]);
+    }
+    let mut out: Vec<Option<TcpListener>> = Vec::with_capacity(shards);
+    for shard in 1..shards {
+        match listener.try_clone() {
+            Ok(dup) => out.push(Some(dup)),
+            Err(e) => {
+                log::warn!("cannot dup listener for reactor shard {shard}: {e}");
+                out.push(None);
+            }
+        }
+    }
+    out.insert(0, Some(listener));
+    (MODE_SHARED, out)
+}
+
+/// Accept one pending connection, nonblocking from birth.  Linux:
+/// a single `accept4(SOCK_NONBLOCK | SOCK_CLOEXEC)` — no per-accept
+/// fcntl round trips.  Elsewhere: [`accept_portable`].
+#[cfg(target_os = "linux")]
+pub fn accept_nonblocking(listener: &TcpListener) -> io::Result<TcpStream> {
+    use std::os::fd::{AsRawFd, FromRawFd};
+    let fd = unsafe {
+        sys::accept4(
+            listener.as_raw_fd(),
+            std::ptr::null_mut(),
+            std::ptr::null_mut(),
+            sys::SOCK_NONBLOCK | sys::SOCK_CLOEXEC,
+        )
+    };
+    if fd < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(unsafe { TcpStream::from_raw_fd(fd) })
+}
+
+#[cfg(not(target_os = "linux"))]
+pub fn accept_nonblocking(listener: &TcpListener) -> io::Result<TcpStream> {
+    accept_portable(listener)
+}
+
+/// The portable accept path: `accept(2)` then an explicit
+/// `set_nonblocking`.  Compiled on every platform (Linux included) so
+/// the non-`accept4` leg stays exercised by the test suite.
+pub fn accept_portable(listener: &TcpListener) -> io::Result<TcpStream> {
+    let (stream, _) = listener.accept()?;
+    stream.set_nonblocking(true)?;
+    Ok(stream)
+}
+
+/// Bind `n` fresh `SO_REUSEPORT` listeners to `addr` (the first resolves
+/// an ephemeral port for the rest).  All-or-nothing: any failure closes
+/// what was bound and reports the error so the caller can fall back.
+#[cfg(target_os = "linux")]
+fn bind_reuseport_fleet(addr: &str, n: usize) -> io::Result<Vec<TcpListener>> {
+    use std::net::ToSocketAddrs;
+    let sa = addr
+        .to_socket_addrs()?
+        .next()
+        .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidInput, "address resolved to nothing"))?;
+    let first = bind_reuseport(sa)?;
+    // with port 0 the kernel picked one; every other member binds to it
+    let concrete = first.local_addr()?;
+    let mut fleet = Vec::with_capacity(n);
+    fleet.push(first);
+    for _ in 1..n {
+        fleet.push(bind_reuseport(concrete)?);
+    }
+    Ok(fleet)
+}
+
+/// One `SO_REUSEPORT` listener: socket → REUSEADDR + REUSEPORT (both
+/// **before** bind, which is what admits it into the reuseport group) →
+/// bind → listen.  The fd is owned from creation, so every error path
+/// closes it.
+#[cfg(target_os = "linux")]
+fn bind_reuseport(addr: std::net::SocketAddr) -> io::Result<TcpListener> {
+    use std::os::fd::{AsRawFd, FromRawFd, OwnedFd};
+    let (family, sa, sa_len) = sockaddr_bytes(&addr);
+    let fd = unsafe { sys::socket(family, sys::SOCK_STREAM | sys::SOCK_CLOEXEC, 0) };
+    if fd < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    let owned = unsafe { OwnedFd::from_raw_fd(fd) };
+    set_sockopt_one(owned.as_raw_fd(), sys::SO_REUSEADDR)?;
+    set_sockopt_one(owned.as_raw_fd(), sys::SO_REUSEPORT)?;
+    if unsafe { sys::bind(owned.as_raw_fd(), sa.as_ptr() as *const _, sa_len) } != 0 {
+        return Err(io::Error::last_os_error());
+    }
+    if unsafe { sys::listen(owned.as_raw_fd(), 1024) } != 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(TcpListener::from(owned))
+}
+
+#[cfg(target_os = "linux")]
+fn set_sockopt_one(fd: std::os::raw::c_int, opt: std::os::raw::c_int) -> io::Result<()> {
+    let one: std::os::raw::c_int = 1;
+    let rc = unsafe {
+        sys::setsockopt(
+            fd,
+            sys::SOL_SOCKET,
+            opt,
+            &one as *const std::os::raw::c_int as *const _,
+            std::mem::size_of::<std::os::raw::c_int>() as u32,
+        )
+    };
+    if rc != 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(())
+}
+
+/// Serialize a `SocketAddr` into the raw `sockaddr_in` / `sockaddr_in6`
+/// layout `bind(2)` expects.  Returned buffer is sized for the larger
+/// v6 form; the length says how much of it is live.
+#[cfg(target_os = "linux")]
+fn sockaddr_bytes(addr: &std::net::SocketAddr) -> (std::os::raw::c_int, [u8; 28], u32) {
+    let mut buf = [0u8; 28];
+    match addr {
+        std::net::SocketAddr::V4(a) => {
+            buf[0..2].copy_from_slice(&(sys::AF_INET as u16).to_ne_bytes());
+            buf[2..4].copy_from_slice(&a.port().to_be_bytes());
+            buf[4..8].copy_from_slice(&a.ip().octets());
+            (sys::AF_INET, buf, 16)
+        }
+        std::net::SocketAddr::V6(a) => {
+            buf[0..2].copy_from_slice(&(sys::AF_INET6 as u16).to_ne_bytes());
+            buf[2..4].copy_from_slice(&a.port().to_be_bytes());
+            buf[4..8].copy_from_slice(&a.flowinfo().to_be_bytes());
+            buf[8..24].copy_from_slice(&a.ip().octets());
+            buf[24..28].copy_from_slice(&a.scope_id().to_ne_bytes());
+            (sys::AF_INET6, buf, 28)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+
+    /// The portable accept leg stays exercised on Linux too: accepted
+    /// sockets come back nonblocking and wired to the right peer.
+    #[test]
+    fn accept_portable_yields_nonblocking_stream() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let mut server = accept_portable(&listener).unwrap();
+        // nonblocking: a read with nothing pending is WouldBlock, not a hang
+        let mut buf = [0u8; 8];
+        match server.read(&mut buf) {
+            Err(e) => assert_eq!(e.kind(), io::ErrorKind::WouldBlock),
+            Ok(n) => panic!("read of an empty socket returned {n} bytes"),
+        }
+        client.write_all(b"ping").unwrap();
+        client.flush().unwrap();
+        let mut got = 0usize;
+        for _ in 0..200 {
+            match server.read(&mut buf[got..]) {
+                Ok(n) => {
+                    got += n;
+                    if got >= 4 {
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(1))
+                }
+                Err(e) => panic!("read failed: {e}"),
+            }
+        }
+        assert_eq!(&buf[..4], b"ping");
+    }
+
+    /// Same contract for the platform-default admission path (accept4 on
+    /// Linux): nonblocking from birth.
+    #[test]
+    fn accept_nonblocking_yields_nonblocking_stream() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let _client = TcpStream::connect(addr).unwrap();
+        let mut server = accept_nonblocking(&listener).unwrap();
+        let mut buf = [0u8; 8];
+        match server.read(&mut buf) {
+            Err(e) => assert_eq!(e.kind(), io::ErrorKind::WouldBlock),
+            Ok(n) => panic!("read of an empty socket returned {n} bytes"),
+        }
+    }
+
+    #[test]
+    fn share_listener_duplicates_one_accept_queue() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let (mode, slots) = share_listener(listener, 3);
+        assert_eq!(mode, MODE_SHARED);
+        assert_eq!(slots.len(), 3);
+        // every dup answers for the same port
+        for slot in &slots {
+            assert_eq!(slot.as_ref().unwrap().local_addr().unwrap(), addr);
+        }
+        // a connection through the shared queue is acceptable from any dup
+        let _client = TcpStream::connect(addr).unwrap();
+        let accepted = slots
+            .iter()
+            .any(|slot| accept_portable(slot.as_ref().unwrap()).is_ok());
+        assert!(accepted, "no dup of the shared listener could accept");
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn reuseport_fleet_binds_one_port_and_serves_from_any_member() {
+        let (mode, slots) = bind_shard_listeners("127.0.0.1:0", 4).unwrap();
+        assert_eq!(mode, MODE_REUSEPORT, "linux must get the reuseport fleet");
+        assert_eq!(slots.len(), 4);
+        let addr = slots[0].as_ref().unwrap().local_addr().unwrap();
+        for slot in &slots {
+            let l = slot.as_ref().unwrap();
+            l.set_nonblocking(true).unwrap();
+            assert_eq!(l.local_addr().unwrap(), addr, "fleet spans one port");
+        }
+        // the kernel hashes each connection to exactly one member; with
+        // several connections, every one must be acceptable by exactly
+        // one listener of the group
+        let clients: Vec<TcpStream> =
+            (0..16).map(|_| TcpStream::connect(addr).unwrap()).collect();
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let mut accepted = 0usize;
+        for slot in &slots {
+            let l = slot.as_ref().unwrap();
+            loop {
+                match accept_nonblocking(l) {
+                    Ok(_) => accepted += 1,
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(e) => panic!("accept failed: {e}"),
+                }
+            }
+        }
+        assert_eq!(accepted, clients.len(), "every connection lands on exactly one member");
+    }
+}

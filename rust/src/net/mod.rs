@@ -20,14 +20,27 @@
 //!   runtime (`ReactorConfig::backend` / `CE_REACTOR_BACKEND`).  It
 //!   knows nothing about frames or connections — only fds, tokens, and
 //!   interest.
-//! * [`reactor`] — the cloud side: one event-driven thread
-//!   ([`reactor::Reactor`]) owns the listener fd *and* every accepted
-//!   socket (accepting happens inside the wake loop, so the cloud's
-//!   thread budget is `workers + 1`), decodes frames through the shared
-//!   codec (zero-copy upload path, single-copy large-frame ingest),
-//!   routes work to the scheduler's workers, and drains token responses
-//!   through per-connection write queues with slow-reader eviction and
-//!   worker-queue backpressure expressed as O(1) interest changes.
+//! * [`listener`] — accept-path provisioning: per-shard `SO_REUSEPORT`
+//!   listeners on Linux (bound flag-first so every member joins the
+//!   kernel's load-balancing group), dup'd shared-accept-queue fallback
+//!   elsewhere or for caller-bound listeners, and the
+//!   `accept4(SOCK_NONBLOCK | SOCK_CLOEXEC)` admission helper with its
+//!   portable `accept` + `set_nonblocking` twin.  Raw libc, no new
+//!   crate; it knows nothing about events or frames — only how
+//!   listeners come to exist and how sockets leave them.
+//! * [`reactor`] — the cloud side: a fleet of event-driven shard
+//!   threads ([`reactor::Reactor`], `ReactorConfig::shards`, default
+//!   `min(4, cores)`).  Each shard owns its own `EventSet`, its own
+//!   connection table and write queues, and its own accept path
+//!   (accepting happens inside each shard's wake loop, so the cloud's
+//!   thread budget is exactly `workers + shards`), decodes frames
+//!   through the shared codec (zero-copy upload path, single-copy
+//!   large-frame ingest), routes work to the scheduler's workers, and
+//!   drains token responses through per-connection write queues with
+//!   slow-reader eviction and worker-queue backpressure expressed as
+//!   O(1) interest changes.  Connection ids are shard-tagged, so
+//!   completions resolve to the owning shard and dead-conn fencing
+//!   holds across the fleet.
 //! * [`transport`] — the blocking adapters: [`transport::TcpTransport`]
 //!   (edge client side), [`transport::InProcTransport`] (tests), and the
 //!   [`transport::Throttled`] WAN wrapper, all wrapping the same codec.
@@ -37,6 +50,7 @@
 //!   framing).
 pub mod codec;
 pub mod event;
+pub mod listener;
 pub mod profiles;
 pub mod reactor;
 pub mod simulated;

@@ -1,13 +1,51 @@
-//! Event-driven cloud-side connection reactor: **one thread** owns the
-//! listener and every accepted socket, multiplexing thousands of edge
-//! links where the old transport burned a blocked OS thread per
-//! connection (and a dedicated acceptor thread besides).
+//! Event-driven cloud-side connection reactor **fleet**: `shards`
+//! threads (default `min(4, cores)`, [`crate::config::SHARDS_ENV`]
+//! override) share every cloud-side socket, where the old transport
+//! burned a blocked OS thread per connection.  One shard is the PR-5
+//! single reactor, unchanged in spirit; the fleet exists because one
+//! event loop saturates somewhere around ~100k connections, and the
+//! cloud's north star is millions.
+//!
+//! Sharding contract — **zero cross-shard locking on the hot path**:
+//!
+//! * every shard owns its own [`EventSet`] (epoll on Linux, poll
+//!   fallback), its own connection table, write queues, codec scratch,
+//!   stats, and completion channel.  Admission, reads, backpressure
+//!   pause/resume, and completion fan-out never touch another shard's
+//!   state — the only shared objects are the scheduler's [`Router`]
+//!   (lock-free channel sends + atomic depth gauges) and the listener
+//!   arrangement below;
+//! * **accepting** is per-shard: on Linux, when the server binds its
+//!   own listeners ([`crate::net::listener::bind_shard_listeners`]),
+//!   each shard owns a private `SO_REUSEPORT` listener and the kernel's
+//!   4-tuple hash spreads connections across the fleet with no shared
+//!   accept queue at all.  A caller-provided listener (or a platform
+//!   without reuseport) degrades to a shared accept queue: every shard
+//!   registers a dup of the same listener fd and races `accept`
+//!   (losers see `WouldBlock`).  Admission uses
+//!   `accept4(SOCK_NONBLOCK | SOCK_CLOEXEC)` on Linux — no per-accept
+//!   fcntl round trips — with the portable `accept` + `set_nonblocking`
+//!   pair elsewhere;
+//! * **connection ids are shard-tagged**: the top [`SHARD_BITS`] bits
+//!   of a conn id name the owning shard, the low bits a per-shard
+//!   counter that never reuses values.  Completions therefore resolve
+//!   to exactly one shard's completion channel and waker
+//!   ([`ReactorHandle`] fans control out; [`Reply`] sinks created by a
+//!   shard post back to that same shard), and the dead-conn fencing of
+//!   the single-reactor design carries over: a completion for a closed
+//!   conn on shard A is dropped by shard A and *cannot* alias a live
+//!   conn on shard B, because B's table only ever holds B-tagged ids;
+//! * `max_conns` admission becomes an even per-shard share
+//!   (`max_conns / shards`, floor 1 — the same split as the context
+//!   store's per-worker budget), so no shard consults any global count.
+//!
+//! Everything below the fleet layer is the single-reactor design:
 //!
 //! Sans-I/O layering: the reactor does the I/O and the *scheduling of*
 //! I/O, while all framing lives in [`crate::net::codec::FrameCodec`],
 //! all message semantics in [`crate::coordinator::protocol`], and all
 //! readiness in [`crate::net::event::EventSet`].  Per readiness event
-//! the reactor reads until `WouldBlock` (the edge-triggered contract)
+//! the shard reads until `WouldBlock` (the edge-triggered contract)
 //! or a per-event budget (`READS_PER_EVENT`; the event is re-armed so
 //! one firehose peer cannot starve the others), feeds the connection's
 //! codec — large upload bodies land straight in their final frame
@@ -21,61 +59,59 @@
 //! * `UploadHidden` — decoded through the zero-copy
 //!   [`Message::decode_upload`] path and routed to the owning worker;
 //! * `InferRequest` — routed with a [`Reply`] that posts a completion
-//!   record back to the reactor and wakes its event loop; the response
-//!   frame is queued on the connection's codec and drained as the
-//!   socket accepts it;
+//!   record back to the owning shard and wakes its event loop; the
+//!   response frame is queued on the connection's codec and drained as
+//!   the socket accepts it;
 //! * `EndSession` — routed; anything else is answered with an `Error`
 //!   frame and the connection is closed once that frame drains.
-//!
-//! Accepting happens *inside* the wake loop: the listener fd sits in
-//! the same event set as every connection, so a readable listener is
-//! just another event and the cloud's thread budget is `workers + 1` —
-//! no acceptor thread.  Admission (`max_conns`) and handshake arming
-//! (`hello_timeout_s`) run at accept time, same as the old acceptor.
 //!
 //! Flow control (knobs: [`ReactorConfig`]):
 //! * **Slow-reader eviction** — a connection whose unflushed write queue
 //!   exceeds `write_queue_cap` is closed; one stuck reader cannot grow
 //!   server memory without bound.
 //! * **Worker backpressure** — when a scheduler worker's queue depth
-//!   ([`Router::queue_depth`]) exceeds `worker_queue_cap`, the reactor
-//!   stops *reading* from that worker's connections, pushing the
-//!   overload into kernel TCP flow control instead of heap memory.
-//!   Pausing and resuming are O(1) interest changes on the event set,
-//!   and re-arming re-delivers the edge for bytes that arrived
-//!   mid-pause, so resumption cannot stall.
+//!   ([`Router::queue_depth`]) exceeds `worker_queue_cap`, each shard
+//!   stops *reading* from that worker's connections it owns, pushing
+//!   the overload into kernel TCP flow control instead of heap memory.
+//!   Pausing and resuming are O(1) interest changes on the shard's own
+//!   event set, and re-arming re-delivers the edge for bytes that
+//!   arrived mid-pause, so resumption cannot stall.
 //! * **Connection-closed fencing** — completions for a connection that
-//!   has since closed are dropped (connection ids are never reused), so
-//!   a response can never be written to a recycled socket.
+//!   has since closed are dropped (connection ids are never reused, and
+//!   carry their shard), so a response can never be written to a
+//!   recycled — or foreign — socket.
 //! * **Idle reap** — established connections with no bytes read or
 //!   written for `idle_timeout_s` are closed: a silently-dead peer (NAT
-//!   expiry, powered-off device) releases its `max_conns` slot instead
+//!   expiry, powered-off device) releases its admission slot instead
 //!   of holding it until a write fails, and its now-idle cloud session
 //!   becomes eligible for the context store's TTL sweep.
 //!
 //! Per-wake cost: with no pauses, pending handshakes, or armed idle
-//! timers, a wake touches only the channels (`try_recv` until empty),
-//! one queue-depth read per *worker*, and the connections that are
-//! actually ready — on the epoll backend that is independent of how
-//! many sockets are registered ([`ReactorStats::wakes`] /
-//! [`ReactorStats::events_seen`] make the claim measurable).  The
-//! `poll(2)` backend keeps the portable O(conns)-per-wake behaviour.
+//! timers, a shard's wake touches only its channels (`try_recv` until
+//! empty), one queue-depth read per *worker*, and the connections that
+//! are actually ready — on the epoll backend that is independent of how
+//! many sockets the shard holds ([`ReactorStats::wakes`] /
+//! [`ReactorStats::events_seen`] make the claim measurable, per shard
+//! and aggregated).  The `poll(2)` backend keeps the portable
+//! O(conns-per-shard) behaviour — itself a 1/shards improvement.
 //! Cross-thread wakeups use a socketpair-style self-wake registered in
-//! the same event set.
+//! each shard's event set.
 //!
 //! Shutdown is deterministic: [`Reactor::shutdown`] (or drop) closes
-//! every registered socket *before* the reactor thread exits, so once
-//! the call returns no connection can still produce a response.
+//! every registered socket on every shard *before* the fleet's threads
+//! exit, so once the call returns no connection can still produce a
+//! response.
 
 use std::collections::HashMap;
 use std::io::{self, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, ensure, Context, Result};
 
 use crate::config::ReactorConfig;
 use crate::coordinator::protocol::{Channel, Message, NO_REQ};
@@ -83,6 +119,7 @@ use crate::coordinator::scheduler::{InferOutcome, Reply, Router, SchedMsg, Uploa
 use crate::model::manifest::ModelDims;
 use crate::net::codec::FrameCodec;
 use crate::net::event::{Event, EventSet, Interest, SourceFd, Token};
+use crate::net::listener::{self, MODE_NONE};
 
 // ---------------------------------------------------------------------------
 // readiness primitives
@@ -93,7 +130,7 @@ type WakeStream = std::os::unix::net::UnixStream;
 #[cfg(not(unix))]
 type WakeStream = TcpStream;
 
-/// A connected nonblocking pair: `(write end, read end)` of the reactor's
+/// A connected nonblocking pair: `(write end, read end)` of a shard's
 /// self-wake channel.
 #[cfg(unix)]
 fn wake_pair() -> io::Result<(WakeStream, WakeStream)> {
@@ -114,11 +151,28 @@ fn wake_pair() -> io::Result<(WakeStream, WakeStream)> {
     Ok((a, b))
 }
 
-/// The event-set key of the reactor's self-wake channel.
+/// The event-set key of a shard's self-wake channel.
 const WAKE_TOKEN: Token = 0;
-/// The event-set key of the listener fd (connection ids start at 1 and
-/// never reach this).
+/// The event-set key of a shard's listener fd (shard-local conn ids
+/// start at 1 and never reach the all-ones pattern).
 const LISTEN_TOKEN: Token = u64::MAX;
+
+/// Bits of a connection id reserved for the owning shard's index.
+/// `config::MAX_REACTOR_SHARDS` keeps real fleets far below 2^8, and a
+/// 56-bit per-shard counter never wraps in practice.
+const SHARD_BITS: u32 = 8;
+const SHARD_SHIFT: u32 = 64 - SHARD_BITS;
+
+/// Tag a shard-local connection counter with its owning shard.
+fn tag_conn(shard: usize, local: u64) -> u64 {
+    debug_assert!(local > 0 && local < (1u64 << SHARD_SHIFT));
+    ((shard as u64) << SHARD_SHIFT) | local
+}
+
+/// The shard that owns (and alone may resolve) connection id `conn`.
+fn shard_of(conn: u64) -> usize {
+    (conn >> SHARD_SHIFT) as usize
+}
 
 #[cfg(unix)]
 fn raw_fd<T: std::os::unix::io::AsRawFd>(t: &T) -> SourceFd {
@@ -129,16 +183,16 @@ fn raw_fd<T>(_t: &T) -> SourceFd {
     0 // the probe backend keys on tokens alone
 }
 
-/// Cross-thread wake handle: one byte on the self-wake channel makes the
-/// reactor's wait return.  `WouldBlock` means wakes are already pending,
-/// which is just as good.
+/// Cross-thread wake handle: one byte on a shard's self-wake channel
+/// makes that shard's wait return.  `WouldBlock` means wakes are
+/// already pending, which is just as good.
 #[derive(Clone)]
 struct Waker(Arc<WakeStream>);
 
 impl Waker {
     fn wake(&self) {
         // a full pipe (WouldBlock) means wakes are already pending and a
-        // closed one means the reactor is gone: both safe to ignore
+        // closed one means the shard is gone: both safe to ignore
         let _ = (&*self.0).write_all(&[1]);
     }
 }
@@ -154,7 +208,9 @@ enum Ctl {
 }
 
 /// A token, eviction notice, or error served by a worker, heading back
-/// to the connection that asked for it.
+/// to the connection that asked for it.  Created by a shard, posted to
+/// that same shard's completion channel: `conn` is shard-tagged, so the
+/// record can never be resolved against another shard's table.
 struct Completion {
     conn: u64,
     device: u64,
@@ -163,45 +219,90 @@ struct Completion {
     out: Result<InferOutcome>,
 }
 
-/// Cheap cloneable control handle: tests and in-process servers may
-/// register connections directly; anyone may request stats or shutdown.
+/// One shard's control surface: its command channel plus its waker.
 #[derive(Clone)]
-pub struct ReactorHandle {
+struct ShardHandle {
     ctl: Sender<Ctl>,
     waker: Waker,
 }
 
-impl ReactorHandle {
-    /// Hand an externally accepted connection to the reactor.  The
-    /// serve path does not need this (the reactor owns its listener);
-    /// it remains for tests and embedding.
-    pub fn register(&self, stream: TcpStream) -> Result<()> {
-        self.ctl.send(Ctl::Conn(stream)).map_err(|_| anyhow!("reactor gone"))?;
+impl ShardHandle {
+    fn send(&self, ctl: Ctl) -> Result<()> {
+        self.ctl.send(ctl).map_err(|_| anyhow!("reactor shard gone"))?;
         self.waker.wake();
         Ok(())
     }
+}
 
-    /// Snapshot the reactor's counters (blocking round trip).
-    pub fn stats(&self) -> Result<ReactorStats> {
-        let (tx, rx) = channel();
-        self.ctl.send(Ctl::Stats(tx)).map_err(|_| anyhow!("reactor gone"))?;
-        self.waker.wake();
-        rx.recv().context("reactor stats reply")
+/// Cheap cloneable control handle over the whole fleet: tests and
+/// in-process servers may register connections directly (spread
+/// round-robin across shards); anyone may request stats or shutdown.
+/// Control fan-out resolves to the owning shard's channel + waker —
+/// there is no fleet-global lock.
+#[derive(Clone)]
+pub struct ReactorHandle {
+    shards: Vec<ShardHandle>,
+    /// Round-robin cursor for [`ReactorHandle::register`].
+    next: Arc<AtomicUsize>,
+}
+
+impl ReactorHandle {
+    /// Shards in the fleet.
+    pub fn shards(&self) -> usize {
+        self.shards.len()
     }
 
-    /// Ask the reactor to close every connection and exit (idempotent).
+    /// Hand an externally accepted connection to the fleet (round-robin
+    /// across shards — deterministic: the `i`-th registration lands on
+    /// shard `i % shards`).  The serve path does not need this (each
+    /// shard owns its accept path); it remains for tests and embedding.
+    pub fn register(&self, stream: TcpStream) -> Result<()> {
+        let shard = self.next.fetch_add(1, Ordering::Relaxed) % self.shards.len();
+        self.shards[shard].send(Ctl::Conn(stream))
+    }
+
+    /// Snapshot every shard's counters, in shard order.  All shards are
+    /// asked first and awaited second, so the round trips overlap.
+    pub fn shard_stats(&self) -> Result<Vec<ReactorStats>> {
+        let mut pending = Vec::with_capacity(self.shards.len());
+        for shard in &self.shards {
+            let (tx, rx) = channel();
+            shard.send(Ctl::Stats(tx))?;
+            pending.push(rx);
+        }
+        pending.into_iter().map(|rx| rx.recv().context("reactor shard stats reply")).collect()
+    }
+
+    /// Snapshot the fleet's counters, summed across shards
+    /// ([`ReactorStats::merge`]); per-shard resolution is a
+    /// [`ReactorHandle::shard_stats`] away.
+    pub fn stats(&self) -> Result<ReactorStats> {
+        let mut total = ReactorStats::default();
+        for s in self.shard_stats()? {
+            total.merge(&s);
+        }
+        Ok(total)
+    }
+
+    /// Ask every shard to close its connections and exit (idempotent).
     pub fn shutdown(&self) {
-        let _ = self.ctl.send(Ctl::Shutdown);
-        self.waker.wake();
+        for shard in &self.shards {
+            let _ = shard.ctl.send(Ctl::Shutdown);
+            shard.waker.wake();
+        }
     }
 }
 
-/// Reactor counters.
+/// One shard's counters — or, after [`ReactorStats::merge`], the
+/// fleet's aggregate.  The soak test prints the per-shard accept
+/// histogram from the un-merged vector, which is how shard imbalance
+/// (a skewed reuseport hash, a hot register path) stays observable.
 #[derive(Debug, Clone, Default)]
 pub struct ReactorStats {
     pub conns_opened: u64,
     pub conns_closed: u64,
-    /// Accepted connections dropped because `max_conns` was reached.
+    /// Accepted connections dropped because the shard's `max_conns`
+    /// share was reached.
     pub conns_rejected: u64,
     /// Connections closed because their write queue exceeded the cap.
     pub evicted_slow: u64,
@@ -216,8 +317,8 @@ pub struct ReactorStats {
     pub idle_timeouts: u64,
     /// Event-loop iterations (one `EventSet::wait` return each).
     pub wakes: u64,
-    /// Sockets accepted in-loop from the listener fd (includes ones
-    /// later rejected by admission).
+    /// Sockets accepted in-loop from the shard's listener fd (includes
+    /// ones later rejected by admission).
     pub accepts: u64,
     /// Readiness events dispatched across all wakes; `events_seen /
     /// wakes` is the measured per-wake fan-out the epoll backend keeps
@@ -226,82 +327,166 @@ pub struct ReactorStats {
     /// Which readiness backend the loop runs on ("epoll", "poll", or
     /// the non-unix "probe").
     pub backend: &'static str,
+    /// How this shard's accept path was provisioned ("reuseport",
+    /// "shared", "single", or "none" — see [`crate::net::listener`]).
+    pub accept_mode: &'static str,
     /// Connections currently registered (gauge, set on snapshot).
     pub open_conns: usize,
 }
 
-/// The reactor thread plus its control handle.
+impl ReactorStats {
+    /// Fold another shard's counters into this one.  Counters and
+    /// gauges sum; maxima take the max; the backend/accept-mode labels
+    /// keep the first non-empty value (shards of one fleet share them).
+    pub fn merge(&mut self, o: &ReactorStats) {
+        self.conns_opened += o.conns_opened;
+        self.conns_closed += o.conns_closed;
+        self.conns_rejected += o.conns_rejected;
+        self.evicted_slow += o.evicted_slow;
+        self.frames_in += o.frames_in;
+        self.frames_out += o.frames_out;
+        self.read_pauses += o.read_pauses;
+        self.hello_timeouts += o.hello_timeouts;
+        self.idle_timeouts += o.idle_timeouts;
+        self.wakes += o.wakes;
+        self.accepts += o.accepts;
+        self.events_seen += o.events_seen;
+        self.open_conns += o.open_conns;
+        if self.backend.is_empty() {
+            self.backend = o.backend;
+        }
+        if self.accept_mode.is_empty() {
+            self.accept_mode = o.accept_mode;
+        }
+    }
+}
+
+/// The reactor fleet: `shards` event-loop threads plus their fan-out
+/// control handle.
 pub struct Reactor {
     handle: ReactorHandle,
-    thread: Option<JoinHandle<ReactorStats>>,
+    threads: Vec<JoinHandle<ReactorStats>>,
 }
 
 impl Reactor {
-    /// Spawn the reactor thread.  `router` is where decoded work goes;
-    /// `dims` validates upload payload shapes (same check the old
-    /// connection threads did).  With `listener` set the reactor also
-    /// owns accepting: the listener fd joins the event set and new
-    /// connections are admitted inside the wake loop.
+    /// Spawn the fleet from a single optional pre-bound listener.
+    /// `router` is where decoded work goes; `dims` validates upload
+    /// payload shapes (same check the old connection threads did).
+    /// With `listener` set, its accept queue is *shared* across the
+    /// shards (dup'd fd — the only arrangement a caller-bound listener
+    /// admits); servers that want true per-shard `SO_REUSEPORT`
+    /// listeners bind them through
+    /// [`crate::net::listener::bind_shard_listeners`] and call
+    /// [`Reactor::spawn_fleet`].  With `listener` unset, connections
+    /// arrive only via [`ReactorHandle::register`].
     pub fn spawn(
         router: Router,
         dims: ModelDims,
         cfg: ReactorConfig,
         listener: Option<TcpListener>,
     ) -> Result<Reactor> {
-        let (ctl_tx, ctl_rx) = channel();
-        let (wake_tx, wake_rx) = wake_pair().context("reactor wake channel")?;
-        let events = EventSet::new(cfg.backend).context("reactor readiness backend")?;
-        let waker = Waker(Arc::new(wake_tx));
-        let handle = ReactorHandle { ctl: ctl_tx, waker: waker.clone() };
-        let (comp_tx, comp_rx) = channel();
-        let thread = std::thread::Builder::new().name("cloud-reactor".into()).spawn(move || {
-            Loop {
-                router,
-                dims,
-                cfg,
-                wake_rx,
-                listener,
-                ctl_rx,
-                comp_tx,
-                comp_rx,
-                waker,
-                events,
-                evbuf: Vec::with_capacity(1024),
-                conns: HashMap::new(),
-                next_id: 1,
-                scratch: vec![0u8; 64 * 1024],
-                stats: ReactorStats::default(),
-                pending_hellos: 0,
-                paused_conns: false,
-                shutdown: false,
-            }
-            .run()
-        })?;
-        Ok(Reactor { handle, thread: Some(thread) })
+        let shards = cfg.resolved_shards();
+        let (mode, listeners) = match listener {
+            Some(l) => listener::share_listener(l, shards),
+            None => (MODE_NONE, (0..shards).map(|_| None).collect()),
+        };
+        Self::spawn_fleet(router, dims, cfg, listeners, mode)
+    }
+
+    /// Spawn one shard per listener slot (`listeners.len()` shards; a
+    /// `None` slot is a shard that only serves registered connections).
+    /// `accept_mode` labels how the slots were provisioned, for stats.
+    pub fn spawn_fleet(
+        router: Router,
+        dims: ModelDims,
+        cfg: ReactorConfig,
+        listeners: Vec<Option<TcpListener>>,
+        accept_mode: &'static str,
+    ) -> Result<Reactor> {
+        let shards = listeners.len();
+        ensure!(shards >= 1, "a reactor fleet needs at least one shard");
+        ensure!(
+            shards <= crate::config::MAX_REACTOR_SHARDS,
+            "reactor fleet of {shards} shards exceeds the id-tag cap"
+        );
+        // the admission bound splits into even per-shard shares (floor
+        // 1), exactly like the context store's per-worker budget split:
+        // enforcement needs no cross-shard coordination and the shares
+        // sum back to (at least) the configured bound
+        let mut scfg = cfg;
+        scfg.max_conns = (cfg.max_conns / shards).max(1);
+        let mut shard_handles = Vec::with_capacity(shards);
+        let mut threads = Vec::with_capacity(shards);
+        for (shard, slot) in listeners.into_iter().enumerate() {
+            let (ctl_tx, ctl_rx) = channel();
+            let (wake_tx, wake_rx) = wake_pair().context("reactor wake channel")?;
+            let events = EventSet::new(cfg.backend).context("reactor readiness backend")?;
+            let waker = Waker(Arc::new(wake_tx));
+            let (comp_tx, comp_rx) = channel();
+            let router = router.clone();
+            let dims = dims.clone();
+            let loop_waker = waker.clone();
+            let thread = std::thread::Builder::new()
+                .name(format!("cloud-reactor-{shard}"))
+                .spawn(move || {
+                    Loop {
+                        shard,
+                        router,
+                        dims,
+                        cfg: scfg,
+                        wake_rx,
+                        listener: slot,
+                        ctl_rx,
+                        comp_tx,
+                        comp_rx,
+                        waker: loop_waker,
+                        events,
+                        evbuf: Vec::with_capacity(1024),
+                        conns: HashMap::new(),
+                        next_local: 1,
+                        scratch: vec![0u8; 64 * 1024],
+                        stats: ReactorStats { accept_mode, ..ReactorStats::default() },
+                        pending_hellos: 0,
+                        paused_conns: false,
+                        shutdown: false,
+                    }
+                    .run()
+                })?;
+            shard_handles.push(ShardHandle { ctl: ctl_tx, waker });
+            threads.push(thread);
+        }
+        let handle = ReactorHandle { shards: shard_handles, next: Arc::new(AtomicUsize::new(0)) };
+        Ok(Reactor { handle, threads })
     }
 
     pub fn handle(&self) -> ReactorHandle {
         self.handle.clone()
     }
 
-    /// Close every connection, stop the thread, return final counters.
-    pub fn shutdown(mut self) -> ReactorStats {
+    /// Shards in the fleet.
+    pub fn shards(&self) -> usize {
+        self.threads.len()
+    }
+
+    /// Close every connection on every shard, stop the threads, and
+    /// return each shard's final counters (index = shard).
+    pub fn shutdown(mut self) -> Vec<ReactorStats> {
         self.handle.shutdown();
-        self.thread.take().map(|t| t.join().unwrap_or_default()).unwrap_or_default()
+        self.threads.drain(..).map(|t| t.join().unwrap_or_default()).collect()
     }
 }
 
 impl Drop for Reactor {
     fn drop(&mut self) {
         self.handle.shutdown();
-        if let Some(t) = self.thread.take() {
+        for t in self.threads.drain(..) {
             let _ = t.join();
         }
     }
 }
 
 // ---------------------------------------------------------------------------
-// the loop
+// the per-shard loop
 // ---------------------------------------------------------------------------
 
 #[derive(Debug, Clone, Copy)]
@@ -332,6 +517,8 @@ struct Conn {
 }
 
 struct Loop {
+    /// This shard's index in the fleet — the tag its conn ids carry.
+    shard: usize,
     router: Router,
     dims: ModelDims,
     cfg: ReactorConfig,
@@ -345,7 +532,8 @@ struct Loop {
     /// Reused readiness buffer (taken/restored around each dispatch).
     evbuf: Vec<Event>,
     conns: HashMap<u64, Conn>,
-    next_id: u64,
+    /// Shard-local id counter; ids handed out are `tag_conn(shard, ·)`.
+    next_local: u64,
     scratch: Vec<u8>,
     stats: ReactorStats,
     /// Connections still awaiting their Hello — gates the reap scan and
@@ -362,7 +550,7 @@ impl Loop {
     fn run(mut self) -> ReactorStats {
         self.stats.backend = self.events.backend_name();
         if let Err(e) = self.events.register(raw_fd(&self.wake_rx), WAKE_TOKEN, Interest::READ) {
-            log::error!("reactor: cannot watch the wake channel: {e}");
+            log::error!("reactor shard {}: cannot watch the wake channel: {e}", self.shard);
             return self.stats;
         }
         if let Some(l) = &self.listener {
@@ -370,7 +558,9 @@ impl Loop {
                 && self.events.register(raw_fd(l), LISTEN_TOKEN, Interest::READ).is_ok();
             if !armed {
                 log::error!(
-                    "reactor: cannot watch the listener fd; no connections will be accepted"
+                    "reactor shard {}: cannot watch the listener fd; \
+                     it will not accept connections",
+                    self.shard
                 );
                 self.listener = None;
             }
@@ -413,7 +603,7 @@ impl Loop {
             self.evbuf = evbuf;
         }
         // deterministic teardown: every socket is closed before the
-        // thread exits, so joining the reactor proves no connection can
+        // thread exits, so joining the fleet proves no connection can
         // still produce a response
         let ids: Vec<u64> = self.conns.keys().copied().collect();
         for id in ids {
@@ -428,7 +618,9 @@ impl Loop {
     fn drain_ctl(&mut self) {
         while let Ok(ctl) = self.ctl_rx.try_recv() {
             match ctl {
-                Ctl::Conn(stream) => self.admit(stream),
+                // register() streams are blocking-mode strangers; the
+                // accept path admits pre-nonblocking sockets itself
+                Ctl::Conn(stream) => self.admit(stream, false),
                 Ctl::Stats(reply) => {
                     let mut s = self.stats.clone();
                     s.open_conns = self.conns.len();
@@ -439,26 +631,36 @@ impl Loop {
         }
     }
 
-    /// Admit one freshly accepted connection: `max_conns` gate, then
-    /// registration in the event set with the handshake timer armed.
-    fn admit(&mut self, stream: TcpStream) {
+    /// Admit one freshly accepted connection: per-shard `max_conns`
+    /// share gate, then registration in the event set with the
+    /// handshake timer armed.  `nonblocking` says the socket already is
+    /// (Linux `accept4` admissions skip the extra fcntl).
+    fn admit(&mut self, stream: TcpStream, nonblocking: bool) {
         if self.conns.len() >= self.cfg.max_conns {
             self.stats.conns_rejected += 1;
-            log::warn!("reactor at max_conns={}; dropping new connection", self.cfg.max_conns);
+            log::warn!(
+                "reactor shard {} at its max_conns share ({}); dropping new connection",
+                self.shard,
+                self.cfg.max_conns
+            );
             return;
         }
-        if stream.set_nonblocking(true).is_err() || stream.set_nodelay(true).is_err() {
+        if !nonblocking && stream.set_nonblocking(true).is_err() {
             self.stats.conns_rejected += 1;
             return;
         }
-        let id = self.next_id;
+        if stream.set_nodelay(true).is_err() {
+            self.stats.conns_rejected += 1;
+            return;
+        }
+        let id = tag_conn(self.shard, self.next_local);
         let interest = Interest::READ;
         if let Err(e) = self.events.register(raw_fd(&stream), id, interest) {
-            log::warn!("reactor: cannot watch new connection: {e}");
+            log::warn!("reactor shard {}: cannot watch new connection: {e}", self.shard);
             self.stats.conns_rejected += 1;
             return;
         }
-        self.next_id += 1; // ids never reused: stale completions cannot alias
+        self.next_local += 1; // ids never reused: stale completions cannot alias
         let now = Instant::now();
         self.conns.insert(
             id,
@@ -484,16 +686,18 @@ impl Loop {
     /// connections already queued in the kernel backlog — the listener
     /// is explicitly re-armed (an identity `modify` re-delivers while
     /// the condition holds) and the retry is paced by a short sleep.
+    /// With a shared accept queue, `WouldBlock` may simply mean a
+    /// sibling shard won the race — same handling either way.
     fn accept_ready(&mut self) {
         loop {
             let accepted = match &self.listener {
-                Some(l) => l.accept(),
+                Some(l) => listener::accept_nonblocking(l),
                 None => return,
             };
             match accepted {
-                Ok((stream, _)) => {
+                Ok(stream) => {
                     self.stats.accepts += 1;
-                    self.admit(stream);
+                    self.admit(stream, true);
                 }
                 Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
                 Err(e)
@@ -521,10 +725,18 @@ impl Loop {
 
     fn drain_completions(&mut self) {
         while let Ok(done) = self.comp_rx.try_recv() {
+            debug_assert_eq!(
+                shard_of(done.conn),
+                self.shard,
+                "completion crossed shards: conn {:#x} on shard {}",
+                done.conn,
+                self.shard
+            );
             if !self.conns.contains_key(&done.conn) {
                 // connection-closed fencing: the socket is gone (peer
-                // closed, evicted, or reset); ids are never reused, so
-                // the response is dropped instead of misdelivered
+                // closed, evicted, or reset); ids are never reused — and
+                // carry this shard's tag — so the response is dropped
+                // instead of misdelivered
                 continue;
             }
             let frame = match done.out {
@@ -596,7 +808,7 @@ impl Loop {
     /// byte read from or written to them for `idle_timeout_s`.  A NAT
     /// table that expired, or a device that powered off mid-session,
     /// leaves a socket that never errors until written to — without this
-    /// reap it holds a `max_conns` slot forever.  Reaping the connection
+    /// reap it holds an admission slot forever.  Reaping the connection
     /// also idles the device's cloud session, which the context store's
     /// TTL sweep then releases.
     fn reap_idle_conns(&mut self) {
@@ -624,11 +836,12 @@ impl Loop {
         }
     }
 
-    /// Re-evaluate worker backpressure for every active connection.
-    /// Overload is a per-worker property, so the queue depths are read
-    /// once per worker, and the per-connection sweep runs only when
-    /// there is something to pause or unpause.  Pause state lands in
-    /// the event set as an interest change per affected connection.
+    /// Re-evaluate worker backpressure for every active connection this
+    /// shard owns.  Overload is a per-worker property, so the queue
+    /// depths are read once per worker, and the per-connection sweep
+    /// runs only when there is something to pause or unpause.  Pause
+    /// state lands in the event set as an interest change per affected
+    /// connection.
     fn refresh_pauses(&mut self) {
         let cap = self.cfg.worker_queue_cap;
         let overloaded: Vec<bool> =
@@ -846,6 +1059,10 @@ impl Loop {
                     Message::InferRequest { device_id, req_id, pos, prompt_len, deadline_ms } => {
                         let deadline = (deadline_ms > 0)
                             .then(|| Instant::now() + Duration::from_millis(deadline_ms as u64));
+                        // the Reply resolves to THIS shard: it captures
+                        // this shard's completion channel and waker, and
+                        // `conn` carries the shard tag, so the worker's
+                        // answer cannot land anywhere else
                         let comp = self.comp_tx.clone();
                         let waker = self.waker.clone();
                         let conn = id;
@@ -939,8 +1156,8 @@ impl Loop {
 }
 
 /// Cap on socket reads consumed by ONE readiness event (8 × 64 KiB
-/// scratch reads ≈ 512 KiB): a single fast peer must not monopolize the
-/// reactor thread, grow the frame batch without bound, or starve the
+/// scratch reads ≈ 512 KiB): a single fast peer must not monopolize its
+/// shard's thread, grow the frame batch without bound, or starve the
 /// between-wakes backpressure sweep.  When the budget runs out the
 /// event is re-armed ([`Loop::rearm`]) so the stream continues on the
 /// next wake with everything else interleaved.
@@ -1010,4 +1227,66 @@ fn flush_conn(c: &mut Conn) -> io::Result<()> {
         }
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conn_ids_are_shard_tagged_and_disjoint() {
+        // the fencing invariant in miniature: two shards minting the
+        // SAME local counter values produce disjoint conn ids, and each
+        // id names its owner exactly
+        for shard in [0usize, 1, 3, crate::config::MAX_REACTOR_SHARDS - 1] {
+            for local in [1u64, 2, 1 << 20, (1 << SHARD_SHIFT) - 1] {
+                let id = tag_conn(shard, local);
+                assert_eq!(shard_of(id), shard, "shard round-trips through the tag");
+                assert_ne!(id, WAKE_TOKEN, "tagged ids never collide with the wake token");
+                assert_ne!(id, LISTEN_TOKEN, "tagged ids never collide with the listen token");
+            }
+        }
+        let a = tag_conn(0, 42);
+        let b = tag_conn(1, 42);
+        assert_ne!(a, b, "same local id on different shards must differ");
+    }
+
+    #[test]
+    fn stats_merge_sums_counters_and_keeps_labels() {
+        let mut a = ReactorStats {
+            conns_opened: 3,
+            accepts: 2,
+            wakes: 10,
+            events_seen: 12,
+            open_conns: 1,
+            backend: "epoll",
+            accept_mode: "reuseport",
+            ..ReactorStats::default()
+        };
+        let b = ReactorStats {
+            conns_opened: 4,
+            accepts: 5,
+            wakes: 7,
+            events_seen: 9,
+            open_conns: 2,
+            evicted_slow: 1,
+            backend: "epoll",
+            accept_mode: "reuseport",
+            ..ReactorStats::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.conns_opened, 7);
+        assert_eq!(a.accepts, 7);
+        assert_eq!(a.wakes, 17);
+        assert_eq!(a.events_seen, 21);
+        assert_eq!(a.open_conns, 3);
+        assert_eq!(a.evicted_slow, 1);
+        assert_eq!(a.backend, "epoll");
+        assert_eq!(a.accept_mode, "reuseport");
+        // merging into an empty aggregate adopts the labels
+        let mut empty = ReactorStats::default();
+        empty.merge(&b);
+        assert_eq!(empty.backend, "epoll");
+        assert_eq!(empty.accept_mode, "reuseport");
+    }
 }

@@ -1,17 +1,19 @@
-//! Soak test for the event-driven connection reactor, run on BOTH
-//! readiness backends: the portable `poll(2)` loop at 256 devices (512
-//! sockets via the dual API) and, on Linux, the edge-triggered `epoll`
-//! backend at 1024 devices (2048 sockets — the O(1)-readiness scale).
-//! Every device is served end-to-end by a cloud using **workers + 1**
-//! threads total — one worker plus one reactor that also owns the
-//! listener; the acceptor thread is gone — with every device's token
-//! stream bit-identical to the blocking single-client path AND
-//! bit-identical across the two backends.
+//! Soak test for the sharded reactor fleet, run across backends AND
+//! shard counts: the portable `poll(2)` loop at 256 devices (512
+//! sockets via the dual API, 1 shard), and on Linux the edge-triggered
+//! `epoll` backend at 1024 devices on 1 shard plus a **multi-shard
+//! leg** — 4 shards × 4096 devices (8192 sockets spread across
+//! per-shard `SO_REUSEPORT` listeners by the kernel's 4-tuple hash),
+//! fd-limit- and pid-limit-aware fallback to smaller scales.  Every
+//! device is served end-to-end by a cloud using **workers + shards**
+//! threads total — the thread census is asserted exactly at spawn,
+//! mid-soak, and post-shutdown — with every device's token stream
+//! bit-identical to the blocking single-client path AND bit-identical
+//! across backends and shard counts.
 //!
 //! This file holds exactly one `#[test]` so the thread-count assertions
 //! cannot race other tests in the same binary.
 
-use std::net::TcpListener;
 use std::sync::{Arc, Barrier};
 
 use ce_collm::config::{CloudConfig, DeploymentConfig, ExitPolicy, ReactorBackend};
@@ -42,7 +44,7 @@ fn thread_count() -> Option<usize> {
 }
 
 /// Both endpoints of all dual-API connections live in this one test
-/// process (4 fds per device + listener + wake pair + harness fds),
+/// process (4 fds per device + listeners + wake pairs + harness fds),
 /// which can exceed the common RLIMIT_NOFILE soft default of 1024 —
 /// raise the soft limit toward the hard limit before fanning out.
 #[cfg(target_os = "linux")]
@@ -76,21 +78,40 @@ fn ensure_fd_capacity(_want: u64) -> bool {
     true // no portable probe; a too-low limit will surface as EMFILE
 }
 
-/// One full soak on the given backend: `devices` concurrent edge
-/// devices (2 sockets each), thread census checked at spawn, mid-soak,
-/// and post-shutdown, tokens checked against the blocking reference.
-/// Returns the (single, shared) per-device token stream so the caller
-/// can compare backends against each other.
-fn run_soak(devices: usize, backend: ReactorBackend, expect_backend: &str) -> Vec<i32> {
+/// The big fan-out also spawns 2 threads per device; respect a cgroup
+/// pids ceiling where one is readable (the common container limit).
+/// `pids.max` of "max" parses to `None` → unconstrained.
+#[cfg(target_os = "linux")]
+fn thread_capacity_allows(extra: usize) -> bool {
+    let limit = std::fs::read_to_string("/sys/fs/cgroup/pids.max")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok());
+    match limit {
+        Some(l) => thread_count().unwrap_or(0) + extra + 64 <= l,
+        None => true,
+    }
+}
+
+/// One full soak: `devices` concurrent edge devices (2 sockets each)
+/// against a fleet of exactly `shards` reactor shards, thread census
+/// checked at spawn, mid-soak, and post-shutdown, tokens checked
+/// against the blocking reference.  Returns the (single, shared)
+/// per-device token stream so the caller can compare legs — across
+/// backends AND shard counts — against each other.
+fn run_soak(devices: usize, shards: usize, backend: ReactorBackend, expect: &str) -> Vec<i32> {
     let dims = test_manifest().model;
-    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let sdims = dims.clone();
 
     let mut cfg = CloudConfig::with_workers(1);
     cfg.reactor.backend = backend;
+    cfg.reactor.shards = shards; // explicit: wins over CE_REACTOR_SHARDS
+    // headroom over the per-shard max_conns share: the reuseport hash
+    // is uniform-ish, not exact, so give each shard's share room for
+    // the whole socket population and assert zero rejections below
+    cfg.reactor.max_conns = (8 * devices).max(4096);
 
     let baseline = thread_count();
-    let server = CloudServer::spawn(listener, dims.clone(), cfg, move || {
+    let server = CloudServer::bind("127.0.0.1:0", dims.clone(), cfg, move || {
         let sdims = sdims.clone();
         let f: SessionFactory = Box::new(move |_device| {
             Ok(Box::new(MockCloud::new(MockOracle::new(SEED), sdims.clone())) as _)
@@ -98,14 +119,15 @@ fn run_soak(devices: usize, backend: ReactorBackend, expect_backend: &str) -> Ve
         Ok(f)
     })
     .unwrap();
+    assert_eq!(server.shards(), shards, "fleet size must be exactly as configured");
 
-    // thread budget at spawn: EXACTLY workers + 1 — one worker plus the
-    // reactor (which owns the listener; no acceptor thread)
+    // thread budget at spawn: EXACTLY workers + shards — one worker plus
+    // the reactor shards (each owns an accept path; no acceptor thread)
     if let (Some(b), Some(now)) = (baseline, thread_count()) {
         assert_eq!(
             now,
-            b + 2,
-            "{expect_backend}: cloud spawn must add exactly workers+1 threads \
+            b + 1 + shards,
+            "{expect}/{shards}: cloud spawn must add exactly workers+shards threads \
              (baseline {b}, now {now})"
         );
     }
@@ -119,61 +141,98 @@ fn run_soak(devices: usize, backend: ReactorBackend, expect_backend: &str) -> Ve
         let addr = addr.clone();
         let barrier = Arc::clone(&barrier);
         let dims = dims.clone();
-        handles.push(std::thread::spawn(move || {
-            let upload = Box::new(TcpTransport::connect(&addr).unwrap());
-            let infer = Box::new(TcpTransport::connect(&addr).unwrap());
-            let link = CloudLink::new(device, upload, infer).unwrap();
-            barrier.wait(); // (1) everyone connected
-            barrier.wait(); // (2) census taken
-            let mut cfg = DeploymentConfig::with_threshold(THRESHOLD);
-            cfg.device_id = device;
-            cfg.max_new_tokens = MAX_NEW;
-            let mut client =
-                EdgeClient::with_cloud(MockEdge::new(MockOracle::new(SEED), dims), cfg, link);
-            let out = client.generate(PROMPT).unwrap();
-            (out.tokens, out.counters.cloud_requests)
-        }));
+        // small stacks: the 4-shard leg runs thousands of client threads
+        // in this one process, and the mock engines need very little
+        handles.push(
+            std::thread::Builder::new()
+                .stack_size(192 * 1024)
+                .spawn(move || {
+                    let upload = Box::new(TcpTransport::connect(&addr).unwrap());
+                    let infer = Box::new(TcpTransport::connect(&addr).unwrap());
+                    let link = CloudLink::new(device, upload, infer).unwrap();
+                    barrier.wait(); // (1) everyone connected
+                    barrier.wait(); // (2) census taken
+                    let mut cfg = DeploymentConfig::with_threshold(THRESHOLD);
+                    cfg.device_id = device;
+                    cfg.max_new_tokens = MAX_NEW;
+                    let mut client = EdgeClient::with_cloud(
+                        MockEdge::new(MockOracle::new(SEED), dims),
+                        cfg,
+                        link,
+                    );
+                    let out = client.generate(PROMPT).unwrap();
+                    (out.tokens, out.counters.cloud_requests)
+                })
+                .unwrap(),
+        );
     }
 
     barrier.wait(); // (1) all sockets are up
-    // census: baseline + cloud (worker + reactor) + per-device client
+    // census: baseline + cloud (worker + shards) + per-device client
     // threads (each client thread spawned one uploader).  The old
     // design would add an acceptor here; thread-per-connection would
     // add 2×devices more.
     if let (Some(b), Some(now)) = (baseline, thread_count()) {
         assert_eq!(
             now,
-            b + 2 + 2 * devices,
-            "{expect_backend}: cloud must stay at workers+1 threads mid-soak \
+            b + 1 + shards + 2 * devices,
+            "{expect}/{shards}: cloud must stay at workers+shards threads mid-soak \
              (baseline {b}, clients account for {})",
             2 * devices
         );
     }
-    let rs = server.reactor_stats().unwrap();
-    assert_eq!(rs.open_conns, 2 * devices, "all dual-API sockets registered: {rs:?}");
+    // fleet-level invariants, per shard: every socket registered, every
+    // accept attributed to exactly one shard, no admission rejections
+    let per_shard = server.reactor_shard_stats().unwrap();
+    assert_eq!(per_shard.len(), shards);
+    let open: usize = per_shard.iter().map(|s| s.open_conns).sum();
+    let accepts: u64 = per_shard.iter().map(|s| s.accepts).sum();
+    let opened: u64 = per_shard.iter().map(|s| s.conns_opened).sum();
+    let rejected: u64 = per_shard.iter().map(|s| s.conns_rejected).sum();
+    assert_eq!(open, 2 * devices, "all dual-API sockets registered: {per_shard:?}");
+    assert_eq!(
+        accepts, 2 * devices as u64,
+        "accepts summed across shards == connections opened: {per_shard:?}"
+    );
+    assert_eq!(opened, accepts, "every accept admitted: {per_shard:?}");
+    assert_eq!(rejected, 0, "no admission rejections expected: {per_shard:?}");
     if cfg!(unix) {
         // non-unix targets run the probe fallback regardless of config
-        assert_eq!(rs.backend, expect_backend, "wrong readiness backend selected: {rs:?}");
+        for s in &per_shard {
+            assert_eq!(s.backend, expect, "wrong readiness backend selected: {s:?}");
+        }
     }
-    assert_eq!(
-        rs.accepts, 2 * devices as u64,
-        "every socket must have been accepted in-reactor: {rs:?}"
-    );
-    assert_eq!(rs.conns_opened, rs.accepts, "no admission rejections expected: {rs:?}");
+    #[cfg(target_os = "linux")]
+    {
+        if shards > 1 {
+            for s in &per_shard {
+                assert_eq!(
+                    s.accept_mode, "reuseport",
+                    "multi-shard bound fleets must get per-shard listeners: {s:?}"
+                );
+            }
+        }
+    }
     barrier.wait(); // (2) release the fleet
 
     let mut results: Vec<(Vec<i32>, usize)> =
         handles.into_iter().map(|h| h.join().unwrap()).collect();
 
-    // the O(1)-readiness counters: measured, not just asserted
-    let rs = server.reactor_stats().unwrap();
-    assert!(rs.wakes > 0 && rs.events_seen > 0, "wake accounting dead: {rs:?}");
+    // the O(1)-readiness counters: measured, not just asserted — and the
+    // per-shard accept histogram, so shard imbalance is observable
+    let per_shard = server.reactor_shard_stats().unwrap();
+    let hist: Vec<u64> = per_shard.iter().map(|s| s.accepts).collect();
+    let wakes: u64 = per_shard.iter().map(|s| s.wakes).sum();
+    let events: u64 = per_shard.iter().map(|s| s.events_seen).sum();
+    assert!(wakes > 0 && events > 0, "wake accounting dead: {per_shard:?}");
     println!(
-        "{expect_backend}: {} devices, {} wakes, {} events ({:.1} events/wake)",
+        "{expect}/{shards} shards: {} devices, {} wakes, {} events \
+         ({:.1} events/wake), accept histogram {:?}",
         devices,
-        rs.wakes,
-        rs.events_seen,
-        rs.events_seen as f64 / rs.wakes as f64
+        wakes,
+        events,
+        events as f64 / wakes as f64,
+        hist
     );
 
     // the blocking reference path: one locally recorded trace with the
@@ -197,7 +256,7 @@ fn run_soak(devices: usize, backend: ReactorBackend, expect_backend: &str) -> Ve
     for (device, (tokens, reqs)) in results.iter().enumerate() {
         assert_eq!(
             tokens, &reference.tokens,
-            "{expect_backend}: device {device} diverges from the blocking path"
+            "{expect}/{shards}: device {device} diverges from the blocking path"
         );
         cloud_requests += reqs;
     }
@@ -209,11 +268,18 @@ fn run_soak(devices: usize, backend: ReactorBackend, expect_backend: &str) -> Ve
         "every deferral answered exactly once: {stats:?}"
     );
     assert!(stats.uploads as usize >= devices, "parallel uploads must have landed");
+    // shutdown folds the fleet's finals into CloudStats, per shard and
+    // aggregated
+    assert_eq!(stats.reactor_shards.len(), shards, "per-shard finals retained: {stats:?}");
+    assert_eq!(
+        stats.reactor.conns_opened, 2 * devices as u64,
+        "aggregate reactor stats must fold every shard: {stats:?}"
+    );
 
-    // reactor + worker are gone and every client (plus its uploader)
-    // was joined; the count must return EXACTLY to baseline (a retry
-    // loop absorbs kernel task-reaping lag, and an exact landing keeps
-    // the next leg's fresh baseline uncontaminated)
+    // reactor shards + worker are gone and every client (plus its
+    // uploader) was joined; the count must return EXACTLY to baseline
+    // (a retry loop absorbs kernel task-reaping lag, and an exact
+    // landing keeps the next leg's fresh baseline uncontaminated)
     if let Some(b) = baseline {
         let mut now = thread_count();
         for _ in 0..200 {
@@ -226,43 +292,63 @@ fn run_soak(devices: usize, backend: ReactorBackend, expect_backend: &str) -> Ve
         assert_eq!(
             now,
             Some(b),
-            "{expect_backend}: cloud threads outlive shutdown (baseline {b})"
+            "{expect}/{shards}: cloud threads outlive shutdown (baseline {b})"
         );
     }
     // the tokens the wire actually served (already proven equal to the
-    // reference above) — returned so the caller's cross-backend
-    // bit-identity assert compares two *served* streams, not two
-    // copies of the local recomputation
+    // reference above) — returned so the caller's cross-leg bit-identity
+    // asserts compare *served* streams, not two copies of the local
+    // recomputation
     results.swap_remove(0).0
 }
 
 #[test]
-fn soak_both_backends_one_reactor_thread() {
-    // portable poll(2) fallback: 256 devices / 512 sockets
+fn soak_shard_fleet_exact_thread_budget() {
+    // portable poll(2) fallback: 256 devices / 512 sockets, 1 shard
     assert!(
         ensure_fd_capacity(4 * 256 + 64),
         "this soak needs ~{} file descriptors and the RLIMIT_NOFILE hard \
          limit is below that; raise `ulimit -n`",
         4 * 256 + 64
     );
-    let poll_tokens = run_soak(256, ReactorBackend::Poll, "poll");
+    let poll_tokens = run_soak(256, 1, ReactorBackend::Poll, "poll");
 
-    // epoll (linux): 2048 sockets if the fd budget allows, else the
-    // same 256-device scale — the backend still gets full coverage
     #[cfg(target_os = "linux")]
     {
+        // epoll, single shard: 2048 sockets if the fd budget allows,
+        // else the same 256-device scale
         let devices = if ensure_fd_capacity(4 * 1024 + 128) {
             1024
         } else {
             eprintln!("RLIMIT_NOFILE too low for 2048 sockets; epoll leg at 256 devices");
             256
         };
-        let epoll_tokens = run_soak(devices, ReactorBackend::Epoll, "epoll");
+        let epoll_tokens = run_soak(devices, 1, ReactorBackend::Epoll, "epoll");
         // cross-backend bit-identity: the same device script must yield
         // the same token stream whichever readiness backend served it
         assert_eq!(
             poll_tokens, epoll_tokens,
             "poll and epoll backends produced diverging token streams"
+        );
+
+        // the multi-shard leg: 4 SO_REUSEPORT shards at 8192 sockets
+        // (4096 devices), laddering down where fd or pid limits bite
+        let mut devices = 4096usize;
+        while devices > 256
+            && !(ensure_fd_capacity(4 * devices as u64 + 256)
+                && thread_capacity_allows(2 * devices + 16))
+        {
+            devices /= 4;
+        }
+        if devices < 4096 {
+            eprintln!("fd/pid limits too low for 8192 sockets; multi-shard leg at {devices}");
+        }
+        let fleet_tokens = run_soak(devices, 4, ReactorBackend::Epoll, "epoll");
+        // cross-shard-count bit-identity: sharding the reactor must
+        // never change the served bytes
+        assert_eq!(
+            poll_tokens, fleet_tokens,
+            "1-shard and 4-shard fleets produced diverging token streams"
         );
     }
     #[cfg(not(target_os = "linux"))]

@@ -20,10 +20,12 @@ use ce_collm::runtime::mock::{MockCloud, MockEdge, MockOracle};
 const OTHER_BACKEND: ReactorBackend = ReactorBackend::Poll;
 
 fn spawn_mock_server_cfg(seed: u64, cfg: CloudConfig) -> CloudServer {
+    // the preferred entry point: binds the reactor fleet's own
+    // listeners (per-shard SO_REUSEPORT on Linux when shards > 1, which
+    // the CE_REACTOR_SHARDS=4 CI leg exercises across this whole file)
     let dims = test_manifest().model;
-    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let sdims = dims.clone();
-    CloudServer::spawn(listener, dims, cfg, move || {
+    CloudServer::bind("127.0.0.1:0", dims, cfg, move || {
         let f: SessionFactory = Box::new(move |_device| {
             Ok(Box::new(MockCloud::new(MockOracle::new(seed), sdims.clone())) as _)
         });
@@ -438,6 +440,217 @@ fn shutdown_closes_every_connection_with_no_stragglers() {
             "connection {i} still answered after shutdown() returned"
         );
     }
+}
+
+/// One full e2e pass against a fleet of exactly `shards` reactor
+/// shards: 8 devices, θ = 1.0 (every token defers), served streams
+/// returned for cross-shard-count comparison.
+fn serve_with_shards(shards: usize, seed: u64) -> Vec<Vec<i32>> {
+    let mut cfg = CloudConfig::with_workers(2);
+    cfg.reactor.shards = shards; // explicit: wins over CE_REACTOR_SHARDS
+    let server = spawn_mock_server_cfg(seed, cfg);
+    assert_eq!(server.shards(), shards, "fleet must spawn exactly as configured");
+
+    let devices = 8u64;
+    let addr = server.addr.to_string();
+    let mut handles = Vec::new();
+    for device in 0..devices {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let dims = test_manifest().model;
+            let mut cfg = DeploymentConfig::with_threshold(1.0);
+            cfg.device_id = device;
+            cfg.max_new_tokens = 10;
+            let upload = Box::new(TcpTransport::connect(&addr).unwrap());
+            let infer = Box::new(TcpTransport::connect(&addr).unwrap());
+            let link = CloudLink::new(device, upload, infer).unwrap();
+            let mut client = EdgeClient::with_cloud(
+                MockEdge::new(MockOracle::new(seed), dims),
+                cfg,
+                link,
+            );
+            client.generate("a sharded fleet prompt").unwrap().tokens
+        }));
+    }
+    let results: Vec<Vec<i32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    // the fleet-level invariants: per-shard stats retained next to the
+    // aggregate, every accept attributed to exactly one shard
+    let per_shard = server.reactor_shard_stats().unwrap();
+    assert_eq!(per_shard.len(), shards);
+    let accepted: u64 = per_shard.iter().map(|s| s.accepts).sum();
+    assert_eq!(accepted, 2 * devices, "accepts summed across shards == sockets opened");
+    #[cfg(target_os = "linux")]
+    {
+        let want = if shards > 1 { "reuseport" } else { "single" };
+        for s in &per_shard {
+            assert_eq!(s.accept_mode, want, "bound servers get per-shard listeners: {s:?}");
+        }
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.reactor_shards.len(), shards, "finals keep per-shard resolution");
+    assert_eq!(stats.reactor.conns_opened, 2 * devices, "aggregate folds the fleet");
+    results
+}
+
+#[test]
+fn tcp_sharded_fleet_serves_bit_identical_streams() {
+    let seed = 41;
+    let single = serve_with_shards(1, seed);
+    let fleet = serve_with_shards(4, seed);
+
+    // blocking reference: same engines, no wire, no fleet
+    let dims = test_manifest().model;
+    let o = MockOracle::new(seed);
+    let mut edge = MockEdge::new(o, dims.clone());
+    let mut cloud = MockCloud::new(o, dims);
+    let mut timings = ce_collm::harness::trace::CallTimings::default();
+    let tr = ce_collm::harness::trace::record(
+        &mut edge,
+        &mut cloud,
+        ce_collm::config::ExitPolicy::Threshold(1.0),
+        ce_collm::quant::Precision::F16,
+        "a sharded fleet prompt",
+        10,
+        &mut timings,
+    )
+    .unwrap();
+    for (device, tokens) in single.iter().enumerate() {
+        assert_eq!(tokens, &tr.tokens, "1-shard device {device} diverges from blocking path");
+    }
+    for (device, tokens) in fleet.iter().enumerate() {
+        assert_eq!(tokens, &tr.tokens, "4-shard device {device} diverges from blocking path");
+    }
+    assert_eq!(single, fleet, "shard count must never change served bytes");
+}
+
+#[test]
+fn dead_conn_completion_never_crosses_shards() {
+    use ce_collm::config::ReactorConfig;
+    use ce_collm::coordinator::cloud::Scheduler;
+    use ce_collm::net::reactor::Reactor;
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    // two shards, hand-registered connections (round-robin: the i-th
+    // register lands on shard i % 2), so conn placement is exact:
+    // conn A (device 1) on shard 0, conn B (device 2) on shard 1.
+    // A's infer request parks, A dies, the park expires — the error
+    // completion must be FENCED on shard 0, not delivered anywhere,
+    // and shard 1's live connection must stay untouched and healthy.
+    let dims = test_manifest().model;
+    let seed = 53u64;
+    let mut cfg = CloudConfig::with_workers(1);
+    cfg.max_park_s = 0.2; // A's request fails quickly
+    let sdims = dims.clone();
+    let scheduler = Scheduler::spawn(
+        dims.clone(),
+        cfg,
+        Arc::new(move || {
+            let sdims = sdims.clone();
+            let f: SessionFactory = Box::new(move |_device| {
+                Ok(Box::new(MockCloud::new(MockOracle::new(seed), sdims.clone())) as _)
+            });
+            Ok(f)
+        }),
+    )
+    .unwrap();
+    let rcfg = ReactorConfig { shards: 2, ..ReactorConfig::default() };
+    let reactor = Reactor::spawn(scheduler.router(), dims.clone(), rcfg, None).unwrap();
+    let handle = reactor.handle();
+    assert_eq!(reactor.shards(), 2);
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let register = |device: u64| -> TcpTransport {
+        let mut t = TcpTransport::connect(&addr).unwrap();
+        let (srv, _) = listener.accept().unwrap();
+        handle.register(srv).unwrap();
+        t.send(&Message::Hello { device_id: device, session: 0, channel: Channel::Infer }.encode())
+            .unwrap();
+        assert_eq!(t.recv().unwrap(), Message::Ack.encode(), "handshake completes");
+        t
+    };
+    let mut conn_a = register(1); // shard 0
+    let mut conn_b = register(2); // shard 1
+
+    // A asks, then dies before the answer can exist
+    conn_a
+        .send(
+            &Message::InferRequest { device_id: 1, req_id: 1, pos: 1, prompt_len: 2, deadline_ms: 0 }
+                .encode(),
+        )
+        .unwrap();
+    drop(conn_a);
+
+    // shard 0 reaps A on EOF ...
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let open: usize = handle.shard_stats().unwrap().iter().map(|s| s.open_conns).sum();
+        if open == 1 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "dead connection was never reaped");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // ... then the parked request expires on the worker
+    loop {
+        if scheduler.stats().unwrap().deadline_expired >= 1 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "parked request never expired");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // the completion must be dropped by shard 0's fence: B sees nothing
+    assert_eq!(
+        conn_b.recv_deadline(Instant::now() + Duration::from_millis(400)).unwrap(),
+        None,
+        "a dead conn's completion leaked to a live conn on another shard"
+    );
+    let per_shard = handle.shard_stats().unwrap();
+    // each shard wrote exactly its own Hello ack — the fenced error
+    // frame was never written anywhere
+    assert_eq!(per_shard[0].frames_out, 1, "shard 0 must fence the dead conn: {per_shard:?}");
+    assert_eq!(per_shard[1].frames_out, 1, "shard 1 must stay untouched: {per_shard:?}");
+    assert_eq!(per_shard[0].conns_closed, 1, "shard 0 reaped exactly conn A: {per_shard:?}");
+
+    // both shards still serve: a full client through freshly registered
+    // connections (round-robin puts one on each shard) stays
+    // bit-identical to the blocking path
+    let mut dcfg = DeploymentConfig::with_threshold(1.0);
+    dcfg.device_id = 5;
+    dcfg.max_new_tokens = 6;
+    let connect_raw = || -> TcpTransport {
+        let t = TcpTransport::connect(&addr).unwrap();
+        let (srv, _) = listener.accept().unwrap();
+        handle.register(srv).unwrap();
+        t
+    };
+    let upload = Box::new(connect_raw()); // shard 0
+    let infer = Box::new(connect_raw()); // shard 1
+    let link = CloudLink::new(5, upload, infer).unwrap();
+    let mut client =
+        EdgeClient::with_cloud(MockEdge::new(MockOracle::new(seed), dims.clone()), dcfg, link);
+    let out = client.generate("after the fence").unwrap();
+    let o = MockOracle::new(seed);
+    let mut edge = MockEdge::new(o, dims.clone());
+    let mut cloud = MockCloud::new(o, dims);
+    let mut timings = ce_collm::harness::trace::CallTimings::default();
+    let tr = ce_collm::harness::trace::record(
+        &mut edge,
+        &mut cloud,
+        ce_collm::config::ExitPolicy::Threshold(1.0),
+        ce_collm::quant::Precision::F16,
+        "after the fence",
+        6,
+        &mut timings,
+    )
+    .unwrap();
+    assert_eq!(out.tokens, tr.tokens, "post-fence serving must stay bit-identical");
+
+    drop(reactor);
+    scheduler.shutdown();
 }
 
 #[test]

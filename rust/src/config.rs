@@ -76,6 +76,65 @@ impl AblationFlags {
     }
 }
 
+/// Edge-side reconnect policy: what a [`CloudLink`] does when one of
+/// its transports breaks mid-run.  The link re-dials the current cloud
+/// endpoint under exponential backoff, re-`Hello`s both channels with
+/// the *same* session nonce (`resume = true`), and replays its retained
+/// hidden-state history so the stream continues bit-identically — the
+/// same recovery path as a context-store eviction.  When every attempt
+/// against one endpoint fails, the link rotates to the next configured
+/// endpoint (failover) and starts the attempt budget over.
+///
+/// [`CloudLink`]: crate::coordinator::edge::CloudLink
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReconnectPolicy {
+    /// Dial attempts per endpoint before rotating to the next one.
+    /// `0` disables reconnect entirely: a broken transport permanently
+    /// downgrades the run to local exits (the pre-resilience behaviour).
+    pub max_attempts: u32,
+    /// Backoff before attempt `n` (0-based) is
+    /// `min(backoff_base_s * 2^n, backoff_cap_s)`, jittered.
+    pub backoff_base_s: f64,
+    /// Ceiling on a single backoff sleep.
+    pub backoff_cap_s: f64,
+    /// Jitter fraction in `[0, 1]`: the actual sleep is drawn uniformly
+    /// from `[(1 - jitter) * b, b]` so a severed fleet doesn't re-dial
+    /// in lockstep (the reconnect-storm shape).
+    pub jitter: f64,
+    /// Per-attempt TCP connect timeout, seconds.
+    pub connect_timeout_s: f64,
+}
+
+impl Default for ReconnectPolicy {
+    fn default() -> Self {
+        Self {
+            max_attempts: 4,
+            backoff_base_s: 0.05,
+            backoff_cap_s: 2.0,
+            jitter: 0.5,
+            connect_timeout_s: 5.0,
+        }
+    }
+}
+
+impl ReconnectPolicy {
+    /// The legacy no-reconnect behaviour: first transport error
+    /// permanently downgrades the run.
+    pub fn disabled() -> Self {
+        Self { max_attempts: 0, ..Self::default() }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.max_attempts > 0
+    }
+
+    /// Deterministic backoff for 0-based attempt `n`, before jitter.
+    pub fn backoff_s(&self, attempt: u32) -> f64 {
+        let b = self.backoff_base_s * f64::powi(2.0, attempt.min(30) as i32);
+        b.min(self.backoff_cap_s)
+    }
+}
+
 /// Everything the edge client needs to run one deployment.
 #[derive(Debug, Clone)]
 pub struct DeploymentConfig {
@@ -101,6 +160,17 @@ pub struct DeploymentConfig {
     /// error without one).  The default comfortably covers `max_seq` of
     /// every shipped manifest.
     pub replay_ring_positions: usize,
+    /// What the [`CloudLink`](crate::coordinator::edge::CloudLink) does
+    /// when a transport breaks: re-dial, resume the session, replay.
+    /// Default is on (4 attempts/endpoint); `ReconnectPolicy::disabled()`
+    /// restores the legacy permanent-downgrade behaviour.
+    pub reconnect: ReconnectPolicy,
+    /// Seconds an edge channel may sit idle before the link probes it
+    /// with a keepalive `Ping` (answered by the server's `Pong`; the
+    /// round trip is recorded as `ping_rtt_last_ms`).  Must stay well
+    /// under the server's `ReactorConfig::idle_timeout_s` so a
+    /// quiet-but-alive link is never reaped.  `0.0` disables keepalive.
+    pub keepalive_idle_s: f64,
 }
 
 impl Default for DeploymentConfig {
@@ -112,6 +182,8 @@ impl Default for DeploymentConfig {
             device_id: 0,
             cloud_token_budget_s: None,
             replay_ring_positions: 4096,
+            reconnect: ReconnectPolicy::default(),
+            keepalive_idle_s: 45.0,
         }
     }
 }
@@ -198,19 +270,23 @@ pub struct ReactorConfig {
     /// read from or written to its peer before it is closed.  Catches
     /// silently-dead peers (NAT table expiry, powered-off devices) that
     /// would otherwise hold a `max_conns` slot until a write to them
-    /// failed.  `0.0` (the default) disables the reap: the current edge
-    /// client sends no keepalives and never reconnects, so an idle — but
-    /// alive — infer channel (a long stretch of locally-served tokens)
-    /// must not be cut out from under it.  Deployments whose edges
-    /// reconnect (or traffic-shape every connection) opt in.  Pairs with
-    /// the context store's `session_ttl_s`: once a dead device's
-    /// connections are reaped, its cloud session goes idle and the TTL
-    /// sweep releases the bytes.
+    /// failed.  On by default (120s) now that the edge keeps quiet links
+    /// alive with `Ping`/`Pong` keepalives
+    /// (`DeploymentConfig::keepalive_idle_s`, well under this bound) and
+    /// reconnects with session resume if a link is cut anyway — a reaped
+    /// edge costs one replay round trip, not a degraded run.  `0.0`
+    /// disables the reap.  Pairs with the context store's
+    /// `session_ttl_s`: once a dead device's connections are reaped, its
+    /// cloud session goes idle and the TTL sweep releases the bytes.
     pub idle_timeout_s: f64,
     /// Which readiness backend the reactor runs on.  `Auto` (default)
     /// honours the `CE_REACTOR_BACKEND` env toggle and otherwise picks
     /// `epoll` on Linux, `poll` elsewhere.
     pub backend: ReactorBackend,
+    /// Deterministic fault schedule applied to every connection
+    /// (test/CI only — `None` in production).  `None` falls back to the
+    /// `CE_FAULT` env spec; see [`crate::net::fault::ReactorFault`].
+    pub fault: Option<crate::net::fault::ReactorFault>,
 }
 
 impl Default for ReactorConfig {
@@ -221,8 +297,9 @@ impl Default for ReactorConfig {
             write_queue_cap: 4 << 20,
             worker_queue_cap: 4096,
             hello_timeout_s: 10.0,
-            idle_timeout_s: 0.0,
+            idle_timeout_s: 120.0,
             backend: ReactorBackend::Auto,
+            fault: None,
         }
     }
 }
@@ -354,13 +431,17 @@ mod tests {
         assert!(r.max_conns >= 2, "room for at least one dual-API device");
         assert!(r.write_queue_cap > 0 && r.worker_queue_cap > 0);
         assert!(r.hello_timeout_s > 0.0, "silent sockets must not squat forever");
-        // idle reap is opt-in: today's edge never reconnects, so a quiet
-        // but alive link must not be cut by default
-        assert_eq!(r.idle_timeout_s, 0.0);
+        // idle reap is on by default: the edge pings quiet links alive
+        // and reconnects with session resume if one is cut anyway, so
+        // the keepalive interval must sit well under the reap bound
+        assert_eq!(r.idle_timeout_s, 120.0);
+        assert!(DeploymentConfig::default().keepalive_idle_s * 2.0 <= r.idle_timeout_s);
         // backend choice defaults to Auto (env toggle, then platform)
         assert_eq!(r.backend, ReactorBackend::Auto);
         // shard count defaults to auto (env toggle, then min(4, cores))
         assert_eq!(r.shards, 0);
+        // no fault schedule unless a test (or CE_FAULT) asks for one
+        assert_eq!(r.fault, None);
     }
 
     #[test]
@@ -396,5 +477,18 @@ mod tests {
     #[test]
     fn replay_ring_default_covers_shipped_manifests() {
         assert!(DeploymentConfig::default().replay_ring_positions >= 4096);
+    }
+
+    #[test]
+    fn reconnect_policy_defaults_and_backoff() {
+        let p = ReconnectPolicy::default();
+        assert!(p.enabled() && p.max_attempts >= 1);
+        assert!(!ReconnectPolicy::disabled().enabled());
+        // backoff doubles then saturates at the cap
+        assert_eq!(p.backoff_s(0), p.backoff_base_s);
+        assert_eq!(p.backoff_s(1), p.backoff_base_s * 2.0);
+        assert_eq!(p.backoff_s(63), p.backoff_cap_s);
+        assert!((0.0..=1.0).contains(&p.jitter));
+        assert!(p.connect_timeout_s > 0.0);
     }
 }

@@ -243,6 +243,24 @@ impl ContextStore {
         self.settle(device, before);
     }
 
+    /// Drop a device's buffered state and engine session *without*
+    /// tombstoning its request and *without* marking an eviction: the
+    /// session-resume path.  A reconnecting edge replays its history
+    /// from position 0 proactively (it cannot know whether a served
+    /// token was lost with the severed socket), so no `SessionEvicted`
+    /// bounce is needed — and the rebuild is not an eviction replay, so
+    /// it must not count as one.  Tombstones survive: the old
+    /// connection's stragglers carry the *same* session nonce (resume
+    /// keeps it), so they pass the session fence and only the
+    /// tombstones keep them from resurrecting released state.
+    pub fn suspend_device(&mut self, device: u64) {
+        let before = self.device_resident_bytes(device);
+        self.cm.evict_device(device);
+        self.sessions.remove(&device);
+        self.evicted.remove(&device);
+        self.settle(device, before);
+    }
+
     /// Forget a device entirely (fresh upload-channel Hello).
     pub fn reset_device(&mut self, device: u64) {
         let before = self.device_resident_bytes(device);
@@ -591,6 +609,37 @@ mod tests {
         let s = store.stats();
         assert_eq!((s.evictions, s.ttl_reaps, s.replays), (0, 0, 0));
         assert_eq!(store.device_count(), 8);
+    }
+
+    #[test]
+    fn suspend_drops_state_without_tombstones_or_replay_counts() {
+        let m = dims();
+        let mut store = ContextStore::new(&m, Some(1), None);
+        let mut f = factory();
+        settle(&mut store, &mut f, 1, 3);
+        settle(&mut store, &mut f, 2, 3);
+        store.enforce_budget(|_| false);
+        assert_eq!(store.evicted_req(1), Some(1));
+        // a resume supersedes the pending eviction bounce: the edge
+        // replays proactively, no SessionEvicted round trip needed
+        store.suspend_device(1);
+        assert!(store.evicted_req(1).is_none());
+        assert_eq!(store.device_resident_bytes(1), 0);
+        // the proactive replay rebuilds coverage and re-prefills, and
+        // is NOT an eviction replay
+        store.upload_owned(1, 1, 0, 3, vec![0.5; 3 * m.d_model]).unwrap();
+        assert_eq!(store.stats().replays, 0);
+        let req = PlanReq { device: 1, req_id: 1, pos: 2, prompt_len: 3 };
+        let plan = store.plan_batch(&[req], usize::MAX).remove(0).unwrap();
+        assert!(plan.prefill.is_some());
+        // end-request tombstones survive a suspend (old-connection
+        // stragglers carry the same session nonce — only the tombstone
+        // fences them)
+        store.end_request(1, 1);
+        store.suspend_device(1);
+        store.upload_owned(1, 1, 0, 3, vec![0.5; 3 * m.d_model]).unwrap();
+        assert_eq!(store.device_count(), 0, "tombstone must survive a suspend");
+        assert_eq!(store.resident_bytes(), store.recompute_resident_bytes());
     }
 
     #[test]

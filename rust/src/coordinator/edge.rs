@@ -14,25 +14,40 @@
 //! deferred token the cloud has not answered within the budget is emitted
 //! from the best local exit instead ([`TokenPolicy::local_fallback`]),
 //! and the abandoned response is recognized by its `(req_id, pos)` echo
-//! and skipped when it eventually arrives.  A transport failure degrades
-//! the rest of the run to local exits rather than aborting it.
+//! and skipped when it eventually arrives.
+//!
+//! Resilience: a broken transport no longer ends the collaboration.
+//! Under `DeploymentConfig::reconnect` the link re-dials (exponential
+//! backoff + jitter, rotating through its endpoint list on exhaustion —
+//! failover), re-`Hello`s both channels with the *same* session nonce
+//! and `resume = true`, replays the retained hidden-state history from
+//! the [`ReplayRing`], and re-issues the in-flight request — the exact
+//! recovery path a `SessionEvicted` already exercises, so a severed
+//! link costs one replay round trip and zero token differences.  Only
+//! when reconnect is disabled or exhausted does the run degrade to
+//! local exits (latency-aware mode) or fail (strict mode).  Quiet links
+//! are kept alive — and dead ones detected early — by `Ping`/`Pong`
+//! keepalives (`DeploymentConfig::keepalive_idle_s`).
 
 use std::collections::VecDeque;
-use std::sync::mpsc::{channel, Sender};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::config::DeploymentConfig;
+use crate::config::{DeploymentConfig, ReconnectPolicy};
 use crate::coordinator::policy::{ExitPoint, TokenPolicy};
 use crate::coordinator::protocol::{Channel, Message, NO_REQ, UPLOAD_HDR_LEN};
 use crate::metrics::{CostBreakdown, RunCounters};
 use crate::model::tokenizer::Tokenizer;
 use crate::net::codec::frame_wire_len;
-use crate::net::transport::Transport;
+use crate::net::transport::{TcpTransport, Transport};
 use crate::quant::{self, Precision};
 use crate::runtime::traits::EdgeEngine;
+use crate::util::rng::Rng;
 
 /// One generated token with its provenance (Table 1 columns).
 #[derive(Debug, Clone)]
@@ -75,48 +90,359 @@ fn session_nonce() -> u64 {
     (t.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ ((std::process::id() as u64) << 32)).max(1)
 }
 
-/// The cloud half of the client: dual channels + upload thread.
+/// Produces a fresh `(upload, infer)` transport pair for an endpoint
+/// address.  The default dialer opens two TCP connections under the
+/// policy's connect timeout; tests substitute dialers that wrap the
+/// transports in [`crate::net::fault::FaultTransport`] or refuse
+/// certain endpoints to script failover.
+pub type DialFn =
+    Box<dyn FnMut(&str) -> Result<(Box<dyn Transport + Send>, Box<dyn Transport>)> + Send>;
+
+/// How long a keepalive probe waits for its `Pong` before declaring the
+/// channel dead.
+const PONG_WAIT: Duration = Duration::from_secs(5);
+
+/// The cloud half of the client: dual channels + upload thread, plus
+/// the reconnect state machine (endpoint list, dialer, backoff policy).
 pub struct CloudLink {
+    device_id: u64,
+    /// Session nonce, chosen once and kept across reconnects: a resume
+    /// `Hello` re-announces it so the cloud can tell "same edge, new
+    /// socket" from "new edge reusing the device id".
+    session: u64,
     infer: Box<dyn Transport>,
     upload_tx: Sender<UploadJob>,
     uploader: Option<JoinHandle<u64>>,
+    /// Set by the uploader thread when the upload transport fails (a
+    /// send error or a keepalive probe with no answer): the next cloud
+    /// round trip reconnects instead of parking forever on a dead
+    /// upload channel.
+    upload_dead: Arc<AtomicBool>,
+    /// Keepalive interval in f64 bits, shared with the uploader thread
+    /// so `EdgeClient::with_cloud` can apply its config after the link
+    /// was built.  `0.0` disables keepalive.
+    keepalive_bits: Arc<AtomicU64>,
+    /// Ordered cloud endpoints; `endpoint_idx` is the one currently
+    /// connected.  Empty for transport-injected links, which cannot
+    /// reconnect.
+    endpoints: Vec<String>,
+    endpoint_idx: usize,
+    dial: Option<DialFn>,
+    policy: ReconnectPolicy,
+    /// Jitter source for backoff and ping nonces (splitmix64; seeded
+    /// from the session nonce, so two links never share a sequence).
+    rng: Rng,
+    /// Successful reconnects over this link's lifetime.
+    pub reconnects: u64,
+    /// Reconnects that landed on a *different* endpoint than the one
+    /// that broke (cloud-restart failovers).
+    pub failovers: u64,
+    /// Last measured keepalive round trip on the infer channel, ms.
+    /// `0.0` until the first ping completes.
+    pub ping_rtt_last_ms: f64,
+    /// Upload bytes pushed by uploader threads already retired by
+    /// reconnects, so [`CloudLink::close`] reports the link-lifetime
+    /// total rather than only the final uploader's share.
+    retired_upload_bytes: u64,
+}
+
+/// Send both `Hello`s and wait for both `Ack`s.  Waiting for the
+/// upload-channel `Ack` before returning is what makes resume safe: the
+/// reactor forwards the session pin/reset to the worker *before* it
+/// acks, and the worker drains its queue in order, so a replay sent
+/// after this handshake can never be wiped by its own Hello.
+fn handshake(
+    device_id: u64,
+    session: u64,
+    resume: bool,
+    upload: &mut dyn Transport,
+    infer: &mut dyn Transport,
+) -> Result<()> {
+    infer
+        .send(&Message::Hello { device_id, session, channel: Channel::Infer, resume }.encode())?;
+    expect_ack(infer)?;
+    upload
+        .send(&Message::Hello { device_id, session, channel: Channel::Upload, resume }.encode())?;
+    expect_ack(upload)?;
+    Ok(())
+}
+
+/// Spawn the upload drain thread.  When idle past the keepalive
+/// interval it probes the channel with a `Ping` and waits for the
+/// `Pong`; any failure marks the link dead (`upload_dead`) so the next
+/// round trip reconnects instead of discovering the corpse via a park
+/// timeout.  Returns the job sender and the join handle (whose value is
+/// the bytes pushed onto the channel).
+fn spawn_uploader(
+    mut upload: Box<dyn Transport + Send>,
+    keepalive_bits: Arc<AtomicU64>,
+    dead: Arc<AtomicBool>,
+) -> Result<(Sender<UploadJob>, JoinHandle<u64>)> {
+    let (tx, rx) = channel::<UploadJob>();
+    let handle = std::thread::Builder::new().name("edge-upload".into()).spawn(move || {
+        let mut sent = 0u64;
+        let mut nonce = 0u64;
+        loop {
+            let ka = f64::from_bits(keepalive_bits.load(Ordering::Relaxed));
+            let job = if ka > 0.0 {
+                match rx.recv_timeout(Duration::from_secs_f64(ka)) {
+                    Ok(job) => job,
+                    Err(RecvTimeoutError::Timeout) => {
+                        nonce += 1;
+                        let ping = Message::Ping { nonce }.encode();
+                        sent += ping.len() as u64;
+                        let alive = upload.send(&ping).is_ok()
+                            && matches!(
+                                upload.recv_deadline(Instant::now() + PONG_WAIT),
+                                Ok(Some(_))
+                            );
+                        if !alive {
+                            dead.store(true, Ordering::Release);
+                            break;
+                        }
+                        continue;
+                    }
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            } else {
+                match rx.recv() {
+                    Ok(job) => job,
+                    Err(_) => break,
+                }
+            };
+            match job {
+                UploadJob::Send(msg) => {
+                    let frame = msg.encode();
+                    sent += frame.len() as u64;
+                    if upload.send(&frame).is_err() {
+                        dead.store(true, Ordering::Release);
+                        break;
+                    }
+                }
+                UploadJob::Flush(ack) => {
+                    let _ = ack.send(());
+                }
+                UploadJob::Done => break,
+            }
+        }
+        sent
+    })?;
+    Ok((tx, handle))
 }
 
 impl CloudLink {
-    /// Open the dual API from two transports (paper §4.2): `upload` is
-    /// drained by a background thread, `infer` is synchronous.
+    /// Open the dual API from two injected transports (paper §4.2):
+    /// `upload` is drained by a background thread, `infer` is
+    /// synchronous.  A link built this way has no dialer, so it cannot
+    /// reconnect — a broken transport degrades the run exactly as
+    /// before the resilience layer.  Use [`CloudLink::connect`] (or
+    /// [`CloudLink::connect_via`]) for reconnect + failover.
     pub fn new(
         device_id: u64,
         mut upload: Box<dyn Transport + Send>,
         mut infer: Box<dyn Transport>,
     ) -> Result<Self> {
         let session = session_nonce();
-        infer.send(&Message::Hello { device_id, session, channel: Channel::Infer }.encode())?;
-        expect_ack(&mut *infer)?;
-        upload.send(&Message::Hello { device_id, session, channel: Channel::Upload }.encode())?;
-        expect_ack(&mut *upload)?;
+        handshake(device_id, session, false, &mut *upload, &mut *infer)?;
+        let keepalive_bits =
+            Arc::new(AtomicU64::new(DeploymentConfig::default().keepalive_idle_s.to_bits()));
+        let upload_dead = Arc::new(AtomicBool::new(false));
+        let (upload_tx, uploader) =
+            spawn_uploader(upload, Arc::clone(&keepalive_bits), Arc::clone(&upload_dead))?;
+        Ok(Self {
+            device_id,
+            session,
+            infer,
+            upload_tx,
+            uploader: Some(uploader),
+            upload_dead,
+            keepalive_bits,
+            endpoints: Vec::new(),
+            endpoint_idx: 0,
+            dial: None,
+            policy: ReconnectPolicy::disabled(),
+            rng: Rng::seed_from_u64(session),
+            reconnects: 0,
+            failovers: 0,
+            ping_rtt_last_ms: 0.0,
+            retired_upload_bytes: 0,
+        })
+    }
 
-        let (upload_tx, upload_rx) = channel::<UploadJob>();
-        let uploader = std::thread::Builder::new().name("edge-upload".into()).spawn(move || {
-            let mut sent = 0u64;
-            while let Ok(job) = upload_rx.recv() {
-                match job {
-                    UploadJob::Send(msg) => {
-                        let frame = msg.encode();
-                        sent += frame.len() as u64;
-                        if upload.send(&frame).is_err() {
-                            break;
+    /// Dial an ordered list of cloud endpoints over TCP and open the
+    /// dual API against the first one that answers.  The link keeps the
+    /// endpoint list and `policy`: a transport broken mid-run is
+    /// re-dialed under exponential backoff, and when every attempt
+    /// against the current endpoint fails the link rotates to the next
+    /// one (failover) — a cloud restart costs one replay round trip
+    /// instead of a degraded run.
+    pub fn connect(device_id: u64, endpoints: &[String], policy: ReconnectPolicy) -> Result<Self> {
+        let timeout = Duration::from_secs_f64(policy.connect_timeout_s.max(1e-3));
+        let dial: DialFn = Box::new(move |addr: &str| {
+            let upload = Box::new(TcpTransport::connect_timeout(addr, timeout)?);
+            let infer = Box::new(TcpTransport::connect_timeout(addr, timeout)?);
+            Ok((upload as Box<dyn Transport + Send>, infer as Box<dyn Transport>))
+        });
+        Self::connect_via(device_id, endpoints.to_vec(), policy, dial)
+    }
+
+    /// [`CloudLink::connect`] with a caller-supplied dialer — the
+    /// fault-injection seam: tests dial through
+    /// [`crate::net::fault::FaultTransport`] wrappers or refuse
+    /// endpoints to script severs and failovers deterministically.
+    pub fn connect_via(
+        device_id: u64,
+        endpoints: Vec<String>,
+        policy: ReconnectPolicy,
+        mut dial: DialFn,
+    ) -> Result<Self> {
+        anyhow::ensure!(!endpoints.is_empty(), "no cloud endpoints");
+        let session = session_nonce();
+        let mut last_err = None;
+        for (idx, ep) in endpoints.iter().enumerate() {
+            match dial(ep).and_then(|(mut upload, mut infer)| {
+                handshake(device_id, session, false, &mut *upload, &mut *infer)?;
+                Ok((upload, infer))
+            }) {
+                Ok((upload, infer)) => {
+                    let keepalive_bits = Arc::new(AtomicU64::new(
+                        DeploymentConfig::default().keepalive_idle_s.to_bits(),
+                    ));
+                    let upload_dead = Arc::new(AtomicBool::new(false));
+                    let (upload_tx, uploader) = spawn_uploader(
+                        upload,
+                        Arc::clone(&keepalive_bits),
+                        Arc::clone(&upload_dead),
+                    )?;
+                    return Ok(Self {
+                        device_id,
+                        session,
+                        infer,
+                        upload_tx,
+                        uploader: Some(uploader),
+                        upload_dead,
+                        keepalive_bits,
+                        endpoints,
+                        endpoint_idx: idx,
+                        dial: Some(dial),
+                        policy,
+                        rng: Rng::seed_from_u64(session),
+                        reconnects: 0,
+                        failovers: 0,
+                        ping_rtt_last_ms: 0.0,
+                        retired_upload_bytes: 0,
+                    });
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(last_err.unwrap_or_else(|| anyhow::anyhow!("no cloud endpoints")))
+            .context("every cloud endpoint refused the initial connection")
+    }
+
+    /// Apply the deployment's keepalive interval (seconds; `0` off).
+    pub fn set_keepalive(&self, idle_s: f64) {
+        self.keepalive_bits.store(idle_s.to_bits(), Ordering::Relaxed);
+    }
+
+    /// True when the uploader thread has declared its transport dead.
+    fn upload_is_dead(&self) -> bool {
+        self.upload_dead.load(Ordering::Acquire)
+    }
+
+    /// Probe the infer channel with a `Ping` and record the round trip
+    /// in `ping_rtt_last_ms`.  Stale frames from an earlier abandoned
+    /// deferral are drained and skipped while waiting for the `Pong`.
+    pub fn ping(&mut self) -> Result<f64> {
+        let nonce = self.rng.next_u64();
+        let t0 = Instant::now();
+        self.infer.send(&Message::Ping { nonce }.encode())?;
+        let deadline = t0 + PONG_WAIT;
+        loop {
+            let frame = self
+                .infer
+                .recv_deadline(deadline)?
+                .context("keepalive ping timed out with no pong")?;
+            match Message::decode(&frame)? {
+                Message::Pong { nonce: n } if n == nonce => {
+                    let rtt_ms = t0.elapsed().as_secs_f64() * 1e3;
+                    self.ping_rtt_last_ms = rtt_ms;
+                    return Ok(rtt_ms);
+                }
+                // stale token/error/evicted/pong frames from an
+                // abandoned deferral: skip, keep waiting for our pong
+                _ => continue,
+            }
+        }
+    }
+
+    /// The reconnect state machine: tear down the dead pair, then
+    /// re-dial under the policy — `max_attempts` backoff-jittered tries
+    /// against the current endpoint, rotating through the endpoint list
+    /// on exhaustion — and re-`Hello` both channels with the same
+    /// session nonce (`resume = true`).  On success the link is live
+    /// again (counters updated); the caller still owns replaying the
+    /// in-flight request's history.  Fails only once every endpoint is
+    /// exhausted, or when the link has no dialer / a disabled policy.
+    pub fn reestablish(&mut self) -> Result<()> {
+        anyhow::ensure!(self.policy.enabled(), "reconnect disabled by policy");
+        let mut dial = self
+            .dial
+            .take()
+            .context("link was built from injected transports; no dialer to reconnect with")?;
+        let result = self.reestablish_with(&mut dial);
+        self.dial = Some(dial);
+        result
+    }
+
+    fn reestablish_with(&mut self, dial: &mut DialFn) -> Result<()> {
+        // the old pair is dead: stop the uploader (it usually already
+        // exited on a send error) and let the transports drop
+        self.retired_upload_bytes += self.stop_uploader();
+        let mut last_err: Option<anyhow::Error> = None;
+        for round in 0..self.endpoints.len() {
+            let ep = self.endpoints[self.endpoint_idx].clone();
+            for attempt in 0..self.policy.max_attempts {
+                let backoff = self.policy.backoff_s(attempt);
+                let jittered = backoff * (1.0 - self.policy.jitter * self.rng.gen_f64());
+                if jittered > 0.0 {
+                    std::thread::sleep(Duration::from_secs_f64(jittered));
+                }
+                match dial(&ep).and_then(|(mut upload, mut infer)| {
+                    handshake(self.device_id, self.session, true, &mut *upload, &mut *infer)?;
+                    Ok((upload, infer))
+                }) {
+                    Ok((upload, infer)) => {
+                        self.upload_dead.store(false, Ordering::Release);
+                        let (upload_tx, uploader) = spawn_uploader(
+                            upload,
+                            Arc::clone(&self.keepalive_bits),
+                            Arc::clone(&self.upload_dead),
+                        )?;
+                        self.infer = infer;
+                        self.upload_tx = upload_tx;
+                        self.uploader = Some(uploader);
+                        self.reconnects += 1;
+                        if round > 0 {
+                            self.failovers += 1;
+                            log::info!(
+                                "failover: device {} resumed session on {ep}",
+                                self.device_id
+                            );
                         }
+                        return Ok(());
                     }
-                    UploadJob::Flush(ack) => {
-                        let _ = ack.send(());
-                    }
-                    UploadJob::Done => break,
+                    Err(e) => last_err = Some(e),
                 }
             }
-            sent
-        })?;
-        Ok(Self { infer, upload_tx, uploader: Some(uploader) })
+            // this endpoint is exhausted: rotate and start the attempt
+            // budget over against the next one
+            self.endpoint_idx = (self.endpoint_idx + 1) % self.endpoints.len();
+        }
+        Err(last_err.unwrap_or_else(|| anyhow::anyhow!("reconnect disabled")))
+            .with_context(|| {
+                format!("reconnect exhausted across {} endpoint(s)", self.endpoints.len())
+            })
     }
 
     fn enqueue_upload(&self, msg: Message) {
@@ -138,12 +464,16 @@ impl CloudLink {
         }
     }
 
-    fn close(&mut self) -> u64 {
-        // Bounded drain before the join: the queue is FIFO, so a flush
-        // ack proves every pending Send is on the wire and Done will be
-        // processed immediately.  A transport that stopped accepting
-        // bytes (cloud hung without closing the socket) must not wedge
-        // teardown — detach the uploader instead of joining it.
+    /// Stop the uploader thread, returning the bytes it put on the wire.
+    ///
+    /// Bounded drain before the join: the queue is FIFO, so a flush ack
+    /// proves every pending Send is on the wire and Done will be
+    /// processed immediately.  A transport that stopped accepting bytes
+    /// (cloud hung without closing the socket) must not wedge teardown —
+    /// detach the uploader instead of joining it.  Used both by final
+    /// teardown ([`Self::close`]) and by reconnect, which retires the
+    /// dead pair's uploader before spawning one on the fresh transport.
+    fn stop_uploader(&mut self) -> u64 {
         if !self.flush_uploads_within(Some(WEDGE_GUARD)) {
             log::warn!("upload channel wedged; detaching uploader thread without joining");
             self.uploader.take();
@@ -151,6 +481,10 @@ impl CloudLink {
         }
         let _ = self.upload_tx.send(UploadJob::Done);
         self.uploader.take().map(|u| u.join().unwrap_or(0)).unwrap_or(0)
+    }
+
+    fn close(&mut self) -> u64 {
+        self.retired_upload_bytes + self.stop_uploader()
     }
 }
 
@@ -310,6 +644,10 @@ impl<E: EdgeEngine> EdgeClient<E> {
 
     pub fn with_cloud(engine: E, cfg: DeploymentConfig, link: CloudLink) -> Self {
         let tokenizer = Tokenizer::from_dims(engine.dims());
+        // the uploader thread owns the keepalive cadence; hand it the
+        // deployment's idle bound (must stay under the cloud reactor's
+        // idle_timeout_s for quiet links to survive the reap)
+        link.set_keepalive(cfg.keepalive_idle_s);
         Self { engine, tokenizer, cfg, link: Some(link), link_broken: false, req_id: 0 }
     }
 
@@ -336,6 +674,11 @@ impl<E: EdgeEngine> EdgeClient<E> {
         let mut counters = RunCounters::default();
         let mut trace: Vec<TokenTrace> = Vec::new();
         let mut tokens: Vec<i32> = Vec::new();
+
+        // resilience counters are link-lifetime totals; snapshot so this
+        // run reports only its own reconnect/failover deltas
+        let (reconnects0, failovers0) =
+            self.link.as_ref().map(|l| (l.reconnects, l.failovers)).unwrap_or((0, 0));
 
         self.engine.reset();
 
@@ -486,6 +829,11 @@ impl<E: EdgeEngine> EdgeClient<E> {
 
         cost.total_s = wall0.elapsed().as_secs_f64();
         counters.tokens_generated = tokens.len();
+        if let Some(link) = self.link.as_ref() {
+            counters.reconnects = link.reconnects - reconnects0;
+            counters.failovers = link.failovers - failovers0;
+            counters.ping_rtt_last_ms = link.ping_rtt_last_ms;
+        }
         Ok(GenerateOutput {
             text: self.tokenizer.decode(&tokens),
             tokens,
@@ -568,7 +916,7 @@ impl<E: EdgeEngine> EdgeClient<E> {
         }
 
         counters.cloud_requests += 1;
-        match self.cloud_roundtrip(req_id, pos, prompt_len, cost, counters, ring) {
+        match self.cloud_roundtrip_resilient(req_id, pos, prompt_len, cost, counters, ring) {
             Ok(CloudAnswer::Answered { token }) => {
                 counters.tokens_cloud += 1;
                 Ok((token, ExitPoint::Cloud))
@@ -586,6 +934,104 @@ impl<E: EdgeEngine> EdgeClient<E> {
                 None => Err(e),
             },
         }
+    }
+
+    /// Reconnect rounds one deferral will attempt before the failure
+    /// propagates to [`Self::cloud_token`]'s degrade path.  Bounds the
+    /// worst case at `rounds × endpoints × max_attempts` dials.
+    const RECONNECT_ROUNDS: usize = 3;
+
+    /// [`Self::cloud_roundtrip`] under the reconnect policy: a transport
+    /// failure re-establishes the link with session resume
+    /// ([`CloudLink::reestablish`]), replays the retained history on the
+    /// fresh infer channel, and retries the round trip.  The replay is
+    /// NOT counted as a context replay — the resumed session was
+    /// suspended cooperatively, not evicted — so replay counters keep
+    /// measuring context-store pressure only.  When the link cannot
+    /// reconnect (disabled policy, injected transports, exhausted
+    /// endpoints) the original error propagates and the caller degrades
+    /// exactly as before this wrapper existed.
+    #[allow(clippy::too_many_arguments)]
+    fn cloud_roundtrip_resilient(
+        &mut self,
+        req_id: u32,
+        pos: usize,
+        prompt_len: usize,
+        cost: &mut CostBreakdown,
+        counters: &mut RunCounters,
+        ring: &ReplayRing,
+    ) -> Result<CloudAnswer> {
+        let mut rounds = 0usize;
+        loop {
+            // the uploader noticing a dead transport is the earliest
+            // failure signal (keepalive probes fire on idle links); act
+            // on it before spending a request on a socket known broken
+            let preempt = self.link.as_ref().is_some_and(|l| l.upload_is_dead());
+            if preempt && self.can_reconnect() {
+                anyhow::ensure!(
+                    rounds < Self::RECONNECT_ROUNDS,
+                    "cloud link kept dying through {rounds} reconnect(s) within one deferral"
+                );
+                rounds += 1;
+                log::warn!("upload channel dead; reconnecting before the deferral");
+                self.reconnect_and_replay(req_id, pos, prompt_len, cost, counters, ring)?;
+            }
+            match self.cloud_roundtrip(req_id, pos, prompt_len, cost, counters, ring) {
+                Ok(answer) => return Ok(answer),
+                Err(e) if rounds < Self::RECONNECT_ROUNDS && self.can_reconnect() => {
+                    rounds += 1;
+                    log::warn!("cloud round trip failed ({e:#}); reconnecting (round {rounds})");
+                    self.reconnect_and_replay(req_id, pos, prompt_len, cost, counters, ring)
+                        .with_context(|| format!("after transport failure: {e:#}"))?;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Whether the link can be re-established at all (reconnect policy
+    /// enabled and a dialer present — injected-transport links have
+    /// neither).
+    fn can_reconnect(&self) -> bool {
+        self.link.as_ref().is_some_and(|l| l.policy.enabled() && l.dial.is_some())
+    }
+
+    /// Re-establish the severed link (same session nonce, `resume`
+    /// Hello) and replay the full retained history on the fresh infer
+    /// channel.  The cloud suspended the session on the resume Hello —
+    /// state dropped, tombstones kept — so the next request must
+    /// re-prefill from position 0; the replay also covers any parallel
+    /// uploads that died with the old upload channel.  Bit-identical
+    /// tokens, one extra round trip, no `context_replays` increment.
+    #[allow(clippy::too_many_arguments)]
+    fn reconnect_and_replay(
+        &mut self,
+        req_id: u32,
+        pos: usize,
+        prompt_len: usize,
+        cost: &mut CostBreakdown,
+        counters: &mut RunCounters,
+        ring: &ReplayRing,
+    ) -> Result<()> {
+        let device_id = self.cfg.device_id;
+        let precision = self.precision();
+        let dims_d = self.engine.dims().d_model;
+        let t0 = Instant::now();
+        let link = self.link.as_mut().context("collaborative policy without cloud link")?;
+        link.reestablish()?;
+        send_full_history(
+            &mut *link.infer,
+            ring,
+            device_id,
+            req_id,
+            pos,
+            prompt_len,
+            dims_d,
+            precision,
+            counters,
+        )?;
+        cost.comm_s += t0.elapsed().as_secs_f64();
+        Ok(())
     }
 
     /// One request/response round trip on the infer channel.  A

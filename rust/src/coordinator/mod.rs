@@ -26,6 +26,35 @@
 //! The edge side ([`edge`]) keeps a bounded replay ring of its exit-1
 //! hidden states per request, so a `SessionEvicted` response costs one
 //! extra upload round trip and zero token differences.
+//!
+//! The same ring powers the [`edge::CloudLink`] reconnect state
+//! machine (paper §4.4's resilience requirement — a flaky edge link
+//! must degrade latency, never correctness):
+//!
+//! ```text
+//!            transport error / dead upload channel
+//!   CONNECTED ────────────────────────────────────────► BROKEN
+//!       ▲                                                  │
+//!       │                              re-dial endpoint[i] │ backoff
+//!       │                              (≤ max_attempts,    │ 2^n·base,
+//!       │                               jittered)          │ jittered
+//!       │              exhausted: i ← i+1 (FAILOVER)  ◄────┤
+//!       │                                                  ▼
+//!       │   resume Hello (same session nonce, resume=1) RE-DIALED
+//!       │   dual handshake: infer Ack, then upload Ack     │
+//!       │                                                  ▼
+//!       │       full-history replay from the ring      RESUMING
+//!       │   cloud: suspend (honored) or reset (stale),     │
+//!       └───────── re-prefill, answer the pending request ─┘
+//! ```
+//!
+//! Ordering invariant: the scheduler's `Reset` is enqueued when the
+//! upload-channel Hello is routed, *before* its `Ack` is queued, and
+//! the replay is only sent after that `Ack` arrives — per-worker FIFO
+//! then guarantees the reset always precedes the replayed history, on
+//! any shard.  A resumed nonce is cooperative suspension: tombstones
+//! survive (stale frames from the dead socket stay fenced) and nothing
+//! is billed to the eviction counters.
 pub mod policy;
 pub mod protocol;
 pub mod content_manager;

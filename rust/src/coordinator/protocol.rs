@@ -27,7 +27,16 @@ pub enum Message {
     /// shared by both channels; the server uses it to fence out frames
     /// still in flight from a previous connection that reused the same
     /// device id (0 = untagged, accepted for backward compatibility).
-    Hello { device_id: u64, session: u64, channel: Channel },
+    /// `resume = true` marks a reconnect Hello: the edge re-dialed after
+    /// a broken link and is re-announcing the *same* session nonce.  A
+    /// resume whose nonce matches the server's pinned session must NOT
+    /// reset the device's cloud context (the edge replays only what the
+    /// store reports missing); a stale resume (mismatched or unknown
+    /// nonce — e.g. after a cloud restart or failover) is counted and
+    /// degrades to a fresh session, which the edge's full-history replay
+    /// then rebuilds.  On the wire the flag rides the high bit of the
+    /// channel byte, so pre-resume Hellos decode as `resume = false`.
+    Hello { device_id: u64, session: u64, channel: Channel, resume: bool },
     /// Hidden states for positions `start_pos .. start_pos + count`
     /// at `l_ee1` (`count * d_model` elements in `precision`).
     /// `prompt_len` lets the server distinguish prompt uploads from
@@ -71,6 +80,15 @@ pub enum Message {
     /// edge can correlate (or skip) it; both are [`NO_REQ`] for
     /// connection-level errors not tied to any request.
     Error { req_id: u32, pos: u32, msg: String },
+    /// Edge keepalive probe on an otherwise idle channel.  The server
+    /// answers with a [`Message::Pong`] echoing `nonce` on the same
+    /// connection; the edge measures the round trip and the traffic
+    /// keeps quiet-but-alive links from tripping the reactor's
+    /// `idle_timeout_s` reap (on by default now that the edge both
+    /// pings and reconnects).
+    Ping { nonce: u64 },
+    /// Server's echo of a [`Message::Ping`].
+    Pong { nonce: u64 },
 }
 
 /// Sentinel `req_id`/`pos` for errors not tied to a request.
@@ -89,6 +107,11 @@ pub const TOKEN_RESP_LEN: usize = 21;
 /// Exact encoded `SessionEvicted` size (the DES prices the eviction
 /// notice with it, matching the live edge's byte counters).
 pub const EVICTED_LEN: usize = 17;
+/// Exact encoded `Hello` size (the DES prices a reconnect's re-`Hello`
+/// pair with it, matching the live edge's byte counters).
+pub const HELLO_LEN: usize = 18;
+/// Exact encoded `Ping`/`Pong` size (keepalive pricing).
+pub const PING_LEN: usize = 9;
 
 /// Borrowed view of an `UploadHidden` frame: identical fields to
 /// [`Message::UploadHidden`], but the payload borrows from the frame
@@ -116,20 +139,29 @@ const TAG_END: u8 = 5;
 const TAG_ACK: u8 = 6;
 const TAG_ERROR: u8 = 7;
 const TAG_EVICTED: u8 = 8;
+const TAG_PING: u8 = 9;
+const TAG_PONG: u8 = 10;
+
+/// High bit of the `Hello` channel byte: set on a reconnect (resume)
+/// Hello.  The low 7 bits stay the channel role, so decoders that
+/// predate resume reject the flag instead of misreading the channel.
+const CHANNEL_RESUME_BIT: u8 = 0x80;
 
 impl Message {
     pub fn encode(&self) -> Vec<u8> {
         let mut b = Vec::with_capacity(32);
         match self {
-            Message::Hello { device_id, session, channel } => {
+            Message::Hello { device_id, session, channel, resume } => {
                 b.push(TAG_HELLO);
                 b.extend_from_slice(&device_id.to_le_bytes());
                 b.extend_from_slice(&session.to_le_bytes());
-                // channel stays the last byte of the frame
-                b.push(match channel {
+                // channel stays the last byte of the frame; resume rides
+                // its high bit so a fresh Hello encodes exactly as before
+                let base = match channel {
                     Channel::Upload => 0,
                     Channel::Infer => 1,
-                });
+                };
+                b.push(if *resume { base | CHANNEL_RESUME_BIT } else { base });
             }
             Message::UploadHidden {
                 device_id,
@@ -181,6 +213,14 @@ impl Message {
                 b.extend_from_slice(&pos.to_le_bytes());
             }
             Message::Ack => b.push(TAG_ACK),
+            Message::Ping { nonce } => {
+                b.push(TAG_PING);
+                b.extend_from_slice(&nonce.to_le_bytes());
+            }
+            Message::Pong { nonce } => {
+                b.push(TAG_PONG);
+                b.extend_from_slice(&nonce.to_le_bytes());
+            }
             Message::Error { req_id, pos, msg } => {
                 b.push(TAG_ERROR);
                 b.extend_from_slice(&req_id.to_le_bytes());
@@ -200,12 +240,14 @@ impl Message {
             TAG_HELLO => {
                 let device_id = r.u64()?;
                 let session = r.u64()?;
-                let channel = match r.u8()? {
+                let c = r.u8()?;
+                let resume = c & CHANNEL_RESUME_BIT != 0;
+                let channel = match c & !CHANNEL_RESUME_BIT {
                     0 => Channel::Upload,
                     1 => Channel::Infer,
-                    c => bail!("bad channel {c}"),
+                    _ => bail!("bad channel {c}"),
                 };
-                Message::Hello { device_id, session, channel }
+                Message::Hello { device_id, session, channel, resume }
             }
             TAG_UPLOAD => {
                 let v = read_upload(&mut r)?;
@@ -238,6 +280,8 @@ impl Message {
                 Message::SessionEvicted { device_id: r.u64()?, req_id: r.u32()?, pos: r.u32()? }
             }
             TAG_ACK => Message::Ack,
+            TAG_PING => Message::Ping { nonce: r.u64()? },
+            TAG_PONG => Message::Pong { nonce: r.u64()? },
             TAG_ERROR => {
                 let req_id = r.u32()?;
                 let pos = r.u32()?;
@@ -336,8 +380,30 @@ mod tests {
 
     #[test]
     fn roundtrip_all_variants() {
-        roundtrip(Message::Hello { device_id: 42, session: 7, channel: Channel::Upload });
-        roundtrip(Message::Hello { device_id: 0, session: u64::MAX, channel: Channel::Infer });
+        roundtrip(Message::Hello {
+            device_id: 42,
+            session: 7,
+            channel: Channel::Upload,
+            resume: false,
+        });
+        roundtrip(Message::Hello {
+            device_id: 0,
+            session: u64::MAX,
+            channel: Channel::Infer,
+            resume: false,
+        });
+        roundtrip(Message::Hello {
+            device_id: 42,
+            session: 7,
+            channel: Channel::Upload,
+            resume: true,
+        });
+        roundtrip(Message::Hello {
+            device_id: 1,
+            session: 2,
+            channel: Channel::Infer,
+            resume: true,
+        });
         roundtrip(Message::UploadHidden {
             device_id: u64::MAX,
             req_id: 7,
@@ -374,6 +440,31 @@ mod tests {
         roundtrip(Message::Ack);
         roundtrip(Message::Error { req_id: 9, pos: 55, msg: "kaboom — ω".into() });
         roundtrip(Message::Error { req_id: super::NO_REQ, pos: super::NO_REQ, msg: "hello?".into() });
+        roundtrip(Message::Ping { nonce: 0 });
+        roundtrip(Message::Ping { nonce: u64::MAX });
+        roundtrip(Message::Pong { nonce: 0xDEAD_BEEF });
+    }
+
+    #[test]
+    fn fresh_hello_wire_format_is_unchanged() {
+        // resume = false must encode byte-for-byte like the pre-resume
+        // format: tag | device | session | channel, channel ∈ {0, 1} as
+        // the last byte — old decoders keep accepting fresh Hellos.
+        let enc =
+            Message::Hello { device_id: 5, session: 11, channel: Channel::Infer, resume: false }
+                .encode();
+        assert_eq!(enc.len(), HELLO_LEN);
+        assert_eq!(*enc.last().unwrap(), 1);
+        let up =
+            Message::Hello { device_id: 5, session: 11, channel: Channel::Upload, resume: false }
+                .encode();
+        assert_eq!(*up.last().unwrap(), 0);
+        // ... and the resume bit only flips the high bit
+        let res =
+            Message::Hello { device_id: 5, session: 11, channel: Channel::Infer, resume: true }
+                .encode();
+        assert_eq!(*res.last().unwrap(), 0x81);
+        assert_eq!(enc[..enc.len() - 1], res[..res.len() - 1]);
     }
 
     #[test]
@@ -395,6 +486,11 @@ mod tests {
         assert_eq!(tk.encode().len(), TOKEN_RESP_LEN);
         let ev = Message::SessionEvicted { device_id: 1, req_id: 1, pos: 0 };
         assert_eq!(ev.encode().len(), EVICTED_LEN);
+        let hl =
+            Message::Hello { device_id: 1, session: 1, channel: Channel::Upload, resume: true };
+        assert_eq!(hl.encode().len(), HELLO_LEN);
+        assert_eq!(Message::Ping { nonce: 1 }.encode().len(), PING_LEN);
+        assert_eq!(Message::Pong { nonce: 1 }.encode().len(), PING_LEN);
     }
 
     #[test]
@@ -414,6 +510,15 @@ mod tests {
         for cut in 1..ev.len() {
             assert!(Message::decode(&ev[..cut]).is_err(), "evicted cut at {cut}");
         }
+        let pg = Message::Ping { nonce: 77 }.encode();
+        for cut in 1..pg.len() {
+            assert!(Message::decode(&pg[..cut]).is_err(), "ping cut at {cut}");
+        }
+        let hl = Message::Hello { device_id: 3, session: 9, channel: Channel::Infer, resume: true }
+            .encode();
+        for cut in 1..hl.len() {
+            assert!(Message::decode(&hl[..cut]).is_err(), "hello cut at {cut}");
+        }
     }
 
     #[test]
@@ -431,8 +536,12 @@ mod tests {
     #[test]
     fn rejects_bad_precision_and_channel() {
         let mut enc =
-            Message::Hello { device_id: 1, session: 3, channel: Channel::Infer }.encode();
+            Message::Hello { device_id: 1, session: 3, channel: Channel::Infer, resume: false }
+                .encode();
         *enc.last_mut().unwrap() = 9;
+        assert!(Message::decode(&enc).is_err());
+        // a resume bit on a bad channel is still a bad channel
+        *enc.last_mut().unwrap() = 0x80 | 9;
         assert!(Message::decode(&enc).is_err());
     }
 

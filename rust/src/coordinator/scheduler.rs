@@ -195,11 +195,26 @@ pub enum SchedMsg {
     /// a newer request's uploads that raced ahead on the upload
     /// connection survive the teardown of the previous one.
     End { device: u64, session: u64, req_id: u32 },
-    /// The device opened a fresh upload channel: drop all of its state,
-    /// including end-request tombstones (a reconnecting edge process
-    /// restarts its request ids), fail anything still parked, and pin
-    /// the device to `session`.
-    Reset { device: u64, session: u64 },
+    /// The device opened a new upload channel.
+    ///
+    /// `resume = false` (a fresh `Hello`): drop all of its state,
+    /// including end-request tombstones (a fresh edge process restarts
+    /// its request ids), fail anything still parked, and pin the device
+    /// to `session`.
+    ///
+    /// `resume = true` (a reconnect re-announcing its session): when
+    /// `session` matches the pinned nonce, the worker *suspends* the
+    /// device instead — buffered state and the engine session are
+    /// dropped (the edge replays its history from position 0 right
+    /// after the handshake, so the rebuild is deterministic even when a
+    /// served token died with the old socket), parked requests are
+    /// failed (their reply sinks belong to the dead connection), but
+    /// end-request tombstones survive: the old connection's stragglers
+    /// carry the *same* nonce and only the tombstones fence them.  A
+    /// resume whose nonce the worker cannot honor (unknown device or a
+    /// different pinned session — e.g. after failover to a restarted
+    /// cloud) is counted and degraded to the full reset.
+    Reset { device: u64, session: u64, resume: bool },
     Stats { reply: Sender<CloudStats> },
     Shutdown,
 }
@@ -216,6 +231,14 @@ pub struct CloudStats {
     pub parked: usize,
     /// Parked requests failed because their deadline passed first.
     pub deadline_expired: u64,
+    /// Resume `Hello`s honored: the nonce matched the pinned session,
+    /// so the device was suspended (state dropped for the deterministic
+    /// replay) instead of fully reset.
+    pub sessions_resumed: u64,
+    /// Resume `Hello`s the worker could not honor — unknown device or a
+    /// mismatched session nonce (a restarted cloud, a failover target) —
+    /// degraded to a full reset.
+    pub stale_resumes: u64,
     /// Padded cross-device engine passes executed (one per batch, however
     /// many devices and catch-up positions it covered).
     pub engine_passes: u64,
@@ -248,6 +271,8 @@ impl CloudStats {
         self.pending_floats += o.pending_floats;
         self.parked += o.parked;
         self.deadline_expired += o.deadline_expired;
+        self.sessions_resumed += o.sessions_resumed;
+        self.stale_resumes += o.stale_resumes;
         self.engine_passes += o.engine_passes;
         self.batched_items += o.batched_items;
         self.batch_devices_max = self.batch_devices_max.max(o.batch_devices_max);
@@ -631,11 +656,24 @@ impl Worker {
                     }
                 }
             }
-            SchedMsg::Reset { device, session } => {
-                self.store.reset_device(device);
-                if session != 0 {
-                    self.session_of.insert(device, session);
+            SchedMsg::Reset { device, session, resume } => {
+                let honored = resume
+                    && session != 0
+                    && self.session_of.get(&device) == Some(&session);
+                if honored {
+                    self.store.suspend_device(device);
+                    self.stats.sessions_resumed += 1;
+                } else {
+                    if resume {
+                        self.stats.stale_resumes += 1;
+                    }
+                    self.store.reset_device(device);
+                    if session != 0 {
+                        self.session_of.insert(device, session);
+                    }
                 }
+                // parked replies belong to the dead connection either
+                // way: fail them so the slots free up immediately
                 if let Some(queue) = self.parked.remove(&device) {
                     for p in queue {
                         self.stats.requests_served += 1;

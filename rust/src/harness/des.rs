@@ -26,7 +26,9 @@ use crate::net::profiles::LinkProfile;
 use crate::net::simulated::SimLink;
 use crate::util::rng::Rng;
 
-use crate::coordinator::protocol::{EVICTED_LEN, INFER_REQ_LEN, TOKEN_RESP_LEN, UPLOAD_HDR_LEN};
+use crate::coordinator::protocol::{
+    EVICTED_LEN, HELLO_LEN, INFER_REQ_LEN, TOKEN_RESP_LEN, UPLOAD_HDR_LEN,
+};
 use crate::net::codec::frame_wire_len;
 
 /// Fixed wire sizes (codec frame prefix + exact message header bytes;
@@ -38,6 +40,9 @@ const UPLOAD_HDR: usize = frame_wire_len(UPLOAD_HDR_LEN);
 const REQ_BYTES: usize = frame_wire_len(INFER_REQ_LEN);
 const RESP_BYTES: usize = frame_wire_len(TOKEN_RESP_LEN);
 const EVICTED_BYTES: usize = frame_wire_len(EVICTED_LEN);
+const HELLO_BYTES: usize = frame_wire_len(HELLO_LEN);
+/// An `Ack` encodes to its tag byte alone.
+const ACK_BYTES: usize = frame_wire_len(1);
 
 /// Deployment strategy to replay.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -85,6 +90,27 @@ pub struct SimConfig {
     /// when their worker next starts a pass.  Recovery is priced the
     /// same as a budget eviction.
     pub session_ttl_s: Option<f64>,
+    /// Model link severs recovered by reconnect with session resume
+    /// (`DeploymentConfig::reconnect`): every [`LinkFaultSim`]-selected
+    /// cloud call first pays a reconnect — backoff delay, a fresh dual
+    /// `Hello`/`Ack` handshake, the full-history replay the suspended
+    /// cloud session needs, and a re-prefill on the cloud side.  Extra
+    /// bytes and time, never different tokens.  `None` keeps the rng
+    /// stream — and thus every cost — bit-identical to the no-fault law.
+    pub link_fault: Option<LinkFaultSim>,
+}
+
+/// Deterministic sever schedule for [`SimConfig::link_fault`], mirroring
+/// the frame-ordinal keying of the live fault injector
+/// ([`crate::net::fault`]): faults land on fixed call ordinals, not on
+/// sampled times, so two runs of the same config sever identically.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkFaultSim {
+    /// Sever the link ahead of every n-th cloud call of each client
+    /// (call numbers n, 2n, ...).  `0` never severs.
+    pub sever_every: u64,
+    /// Reconnect delay priced per sever (the policy's backoff sleep).
+    pub reconnect_delay_s: f64,
 }
 
 impl Default for SimConfig {
@@ -97,6 +123,7 @@ impl Default for SimConfig {
             cross_device_batch: false,
             memory_budget_bytes: None,
             session_ttl_s: None,
+            link_fault: None,
         }
     }
 }
@@ -221,6 +248,10 @@ struct ClientSim<'a> {
     /// the sim has no budget/TTL, keeping the rng stream — and thus
     /// every cost — bit-identical to the pre-store law.
     price_replay: bool,
+    /// Sever schedule ([`SimConfig::link_fault`]); `None` prices nothing.
+    link_fault: Option<LinkFaultSim>,
+    /// Cloud calls issued so far — the ordinal the sever schedule keys on.
+    cloud_calls: u64,
     /// Pending (not yet cloud-requested) call produced by `advance`.
     cost: CostBreakdown,
     counters: RunCounters,
@@ -238,6 +269,7 @@ impl<'a> ClientSim<'a> {
         link: LinkProfile,
         seed: u64,
         price_replay: bool,
+        link_fault: Option<LinkFaultSim>,
     ) -> Self {
         Self {
             id,
@@ -253,6 +285,8 @@ impl<'a> ClientSim<'a> {
             edge_t: 0.0,
             upload_ready: 0.0,
             price_replay,
+            link_fault,
+            cloud_calls: 0,
             cost: CostBreakdown::default(),
             counters: RunCounters::default(),
             done: false,
@@ -474,6 +508,34 @@ impl<'a> ClientSim<'a> {
                 ExitPoint::Cloud => {
                     self.counters.tokens_cloud += 1;
                     self.counters.cloud_requests += 1;
+                    self.cloud_calls += 1;
+                    // scheduled link sever: the edge reconnects with
+                    // session resume before this call — backoff, dual
+                    // re-Hello/Ack, then the full-history replay the
+                    // suspended cloud session needs (the same bytes the
+                    // live edge's reconnect path sends).  Counted as a
+                    // reconnect, NOT a context replay; the pass below
+                    // additionally re-prefills on the cloud side.
+                    let severed = self.link_fault.is_some_and(|f| {
+                        f.sever_every > 0 && self.cloud_calls % f.sever_every == 0
+                    });
+                    let mut resume_prefill_s = 0.0;
+                    if severed {
+                        let f = self.link_fault.expect("checked above");
+                        let t0 = self.edge_t;
+                        self.edge_t += f.reconnect_delay_s.max(0.0);
+                        let hello_at = self.uplink.transfer(self.edge_t, 2 * HELLO_BYTES);
+                        self.counters.bytes_up += 2 * HELLO_BYTES as u64;
+                        let ack_at = self.downlink.transfer(hello_at, 2 * ACK_BYTES);
+                        self.counters.bytes_down += 2 * ACK_BYTES as u64;
+                        let replay_bytes = self.hidden_bytes(step.pos + 1);
+                        let replay_at = self.uplink.transfer(ack_at, replay_bytes);
+                        self.counters.bytes_up += replay_bytes as u64;
+                        self.edge_t = replay_at;
+                        self.cost.comm_s += replay_at - t0;
+                        self.counters.reconnects += 1;
+                        resume_prefill_s = self.cost_model.sample_cloud_prefill(&mut self.rng);
+                    }
                     let mut ready = self.upload_ready;
                     if !flags.content_manager {
                         // synchronous full-history retransmission
@@ -503,7 +565,7 @@ impl<'a> ClientSim<'a> {
                     // waiting for a still-in-flight upload is comm time
                     self.cost.comm_s += (ready - req_arrive).max(0.0);
 
-                    let mut busy = 0.0;
+                    let mut busy = resume_prefill_s;
                     if step.cloud_prefill {
                         busy += self.cost_model.sample_cloud_prefill(&mut self.rng);
                         if step.cloud_catchup > 0 {
@@ -603,7 +665,17 @@ pub fn simulate(
         .iter()
         .enumerate()
         .map(|(i, t)| {
-            ClientSim::new(i, t, cfg.strategy, dims, cost_model, cfg.link, cfg.seed, price_replay)
+            ClientSim::new(
+                i,
+                t,
+                cfg.strategy,
+                dims,
+                cost_model,
+                cfg.link,
+                cfg.seed,
+                price_replay,
+                cfg.link_fault,
+            )
         })
         .collect();
 
@@ -1066,6 +1138,7 @@ mod tests {
             cross_device_batch: false,
             memory_budget_bytes: budget,
             session_ttl_s: None,
+            link_fault: None,
         };
         let free = simulate(&traces, &d, &cost(), &mk(None));
         let tight = simulate(&traces, &d, &cost(), &mk(Some(one_ctx)));
@@ -1111,6 +1184,7 @@ mod tests {
                 cross_device_batch: false,
                 memory_budget_bytes: None,
                 session_ttl_s: None,
+                link_fault: None,
             },
         );
         assert_eq!(base.summed().0, with_fields.summed().0);
@@ -1132,6 +1206,7 @@ mod tests {
             cross_device_batch: false,
             memory_budget_bytes: None,
             session_ttl_s: ttl,
+            link_fault: None,
         };
         let free = simulate(&traces, &dims(), &cost(), &mk(None));
         let reaped = simulate(&traces, &dims(), &cost(), &mk(Some(1e-9)));
@@ -1142,6 +1217,37 @@ mod tests {
         let (_, rk) = reaped.summed();
         assert!(rk.bytes_up > fk.bytes_up);
         assert_eq!(fk.tokens_generated, rk.tokens_generated);
+    }
+
+    #[test]
+    fn link_faults_price_reconnects_not_wrong_tokens() {
+        let pattern = [Cloud, Exit1, Cloud, Exit2, Cloud, Exit1, Cloud, Exit1];
+        let traces = vec![vec![mk_trace(12, &pattern); 3]];
+        let base = cfg(Strategy::CeCollm(AblationFlags::default()));
+        let faulty = SimConfig {
+            link_fault: Some(LinkFaultSim { sever_every: 3, reconnect_delay_s: 0.05 }),
+            ..base
+        };
+        let clean = simulate(&traces, &dims(), &cost(), &base);
+        let hurt = simulate(&traces, &dims(), &cost(), &faulty);
+        let (cc, ck) = clean.summed();
+        let (hc, hk) = hurt.summed();
+        // a sever costs bytes and time, never different tokens — and a
+        // resume is not an eviction replay
+        assert_eq!(ck.reconnects, 0);
+        assert!(hk.reconnects > 0, "scheduled severs must be priced");
+        assert!(hk.bytes_up > ck.bytes_up, "{} vs {}", hk.bytes_up, ck.bytes_up);
+        assert!(hc.total_s > cc.total_s);
+        assert_eq!(hk.context_replays, ck.context_replays);
+        assert_eq!(ck.tokens_generated, hk.tokens_generated);
+        assert_eq!(ck.tokens_cloud, hk.tokens_cloud);
+        // the schedule keys on call ordinals: identical config, identical
+        // severs, identical costs
+        let again = simulate(&traces, &dims(), &cost(), &faulty);
+        let (ac, ak) = again.summed();
+        assert_eq!(ak.reconnects, hk.reconnects);
+        assert_eq!(ak.bytes_up, hk.bytes_up);
+        assert_eq!(ac, hc);
     }
 
     #[test]

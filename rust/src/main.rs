@@ -23,7 +23,6 @@ use ce_collm::harness::runner::{record_main_experiments, ExperimentConfig};
 use ce_collm::harness::tables;
 use ce_collm::harness::trace::CallTimings;
 use ce_collm::net::profiles::LinkProfile;
-use ce_collm::net::transport::TcpTransport;
 use ce_collm::runtime::stack::LocalStack;
 use ce_collm::util::cli::Args;
 
@@ -196,7 +195,12 @@ fn run() -> Result<()> {
                 .get(1)
                 .cloned()
                 .unwrap_or_else(|| "the machine is a".to_string());
-            let addr = args.get_or("addr", "127.0.0.1:7433");
+            // --addrs takes an ordered failover list; --addr stays as the
+            // single-endpoint spelling (both feed the same reconnect path)
+            let endpoints: Vec<String> = match args.get("addrs") {
+                Some(list) => list.split(',').map(|s| s.trim().to_string()).collect(),
+                None => vec![args.get_or("addr", "127.0.0.1:7433")],
+            };
             let stack = LocalStack::load(&artifacts)?;
             let mut cfg = DeploymentConfig::with_threshold(args.get_parse("threshold", 0.8f32));
             cfg.max_new_tokens = args.get_parse("max-new", 64usize);
@@ -205,17 +209,18 @@ fn run() -> Result<()> {
             if budget_ms > 0 {
                 cfg.cloud_token_budget_s = Some(budget_ms as f64 / 1e3);
             }
-            let upload = Box::new(TcpTransport::connect(&addr)?);
-            let infer = Box::new(TcpTransport::connect(&addr)?);
-            let link = CloudLink::new(cfg.device_id, upload, infer)?;
+            let link = CloudLink::connect(cfg.device_id, &endpoints, cfg.reconnect)?;
             let mut client = EdgeClient::with_cloud(stack.edge_session(), cfg, link);
             let out = client.generate(&prompt)?;
             println!("{}", out.text);
             eprintln!(
-                "[{} tokens; cloud rate {:.1}%; {} deadline fallbacks; {}]",
+                "[{} tokens; cloud rate {:.1}%; {} deadline fallbacks; {} reconnects \
+                 ({} failovers); {}]",
                 out.tokens.len(),
                 out.counters.request_cloud_rate() * 100.0,
                 out.counters.cloud_fallbacks,
+                out.counters.reconnects,
+                out.counters.failovers,
                 out.cost
             );
         }
@@ -252,7 +257,8 @@ fn run() -> Result<()> {
                  \x20      --link wifi|lte|fiber|lan|ideal --threshold T\n\
                  \x20      --clients N --addr HOST:PORT --seed N\n\
                  \x20      --workers N (serve-cloud scheduler pool)\n\
-                 \x20      --budget-ms N (run-edge per-token cloud latency budget)"
+                 \x20      --budget-ms N (run-edge per-token cloud latency budget)\n\
+                 \x20      --addrs A,B,... (run-edge ordered failover endpoints)"
             );
         }
     }

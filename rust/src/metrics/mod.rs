@@ -62,6 +62,19 @@ pub struct RunCounters {
     /// history from position 0 — each one costs an extra upload round
     /// trip but zero token differences.
     pub context_replays: usize,
+    /// Times a severed cloud link was re-established with session resume
+    /// during this run (reconnect policy).  Each one costs a re-dial,
+    /// re-`Hello`, and one history replay round trip — zero token
+    /// differences.  Distinct from `context_replays`: a resumed session
+    /// was suspended cooperatively, not evicted.
+    pub reconnects: u64,
+    /// Reconnects that landed on a *different* endpoint than the one
+    /// that failed (multi-endpoint failover).  Always <= `reconnects`.
+    pub failovers: u64,
+    /// Round-trip time of the most recent keepalive `Ping` on the infer
+    /// channel, in milliseconds (`0.0` when no ping was issued).  A
+    /// gauge, not a counter: `add` keeps the last non-zero observation.
+    pub ping_rtt_last_ms: f64,
 }
 
 impl RunCounters {
@@ -75,6 +88,11 @@ impl RunCounters {
         self.cloud_requests += o.cloud_requests;
         self.cloud_fallbacks += o.cloud_fallbacks;
         self.context_replays += o.context_replays;
+        self.reconnects += o.reconnects;
+        self.failovers += o.failovers;
+        if o.ping_rtt_last_ms != 0.0 {
+            self.ping_rtt_last_ms = o.ping_rtt_last_ms;
+        }
     }
 
     /// "Request Cloud Rate" — fraction of generated tokens that required a

@@ -1,0 +1,437 @@
+//! Deterministic fault injection for the wire layer.
+//!
+//! Two hooks, one per side of the link:
+//!
+//! * [`FaultTransport`] wraps any blocking [`Transport`] on the edge
+//!   side (same shape as [`Throttled`](super::transport::Throttled))
+//!   and applies a scripted [`FaultPlan`]: sever, drop, delay, or
+//!   black-hole the Nth frame in either direction.  Frame ordinals —
+//!   not wall-clock time — key the schedule, so a fault lands at
+//!   exactly the same protocol step on every run.
+//! * [`ReactorFault`] is the cloud-side hook: the reactor closes a
+//!   connection right after its Nth inbound frame, which from the
+//!   edge's point of view is a server that restarted or a NAT that
+//!   expired mid-run.  It is carried on `ReactorConfig` and, when left
+//!   unset, resolved from the [`FAULT_ENV`] env var — the `CE_FAULT`
+//!   CI leg runs the whole fault suite with every cloud connection
+//!   being cut out from under the clients, and the reconnect path must
+//!   keep every token stream bit-identical anyway.
+//!
+//! This module is also the seed of the ROADMAP's trace-level fault
+//! injector: a recorded trace replayed through a `FaultPlan` reproduces
+//! NAT expiry, mid-replay severs, and reconnect storms in-process.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use super::transport::Transport;
+use crate::util::rng::Rng;
+
+/// Env var consulted by [`ReactorFault::resolve`] when the reactor
+/// config carries no explicit fault: `CE_FAULT=sever_in:<n>` severs
+/// every cloud-side connection after its `n`-th inbound frame.
+pub const FAULT_ENV: &str = "CE_FAULT";
+
+/// What happens to one frame (or to the link from that frame on).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// Fail the operation and kill the transport: every later call
+    /// errors too (the TCP-reset shape).
+    Sever,
+    /// Silently lose this one frame: a faulted send reports success, a
+    /// faulted receive skips to the next frame.
+    Drop,
+    /// Hold the frame this long, then let it through.
+    DelayMs(u64),
+    /// From this frame on the link is a black hole (the NAT-expiry
+    /// shape): sends are swallowed "successfully", deadline receives
+    /// time out cleanly, and a blocking receive fails after a short
+    /// grace sleep instead of hanging the caller forever.
+    BlackHole,
+}
+
+/// A scripted fault schedule keyed by 0-based frame ordinal, one
+/// ordinal space per direction.  Built either explicitly
+/// (`sever_send_at(3)`) or from a seed ([`FaultPlan::seeded_sever`]);
+/// both are pure data, so the same plan replays identically.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    on_send: BTreeMap<u64, Fault>,
+    on_recv: BTreeMap<u64, Fault>,
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn sever_send_at(mut self, frame: u64) -> Self {
+        self.on_send.insert(frame, Fault::Sever);
+        self
+    }
+
+    pub fn sever_recv_at(mut self, frame: u64) -> Self {
+        self.on_recv.insert(frame, Fault::Sever);
+        self
+    }
+
+    pub fn drop_send_at(mut self, frame: u64) -> Self {
+        self.on_send.insert(frame, Fault::Drop);
+        self
+    }
+
+    pub fn drop_recv_at(mut self, frame: u64) -> Self {
+        self.on_recv.insert(frame, Fault::Drop);
+        self
+    }
+
+    pub fn delay_send_at(mut self, frame: u64, ms: u64) -> Self {
+        self.on_send.insert(frame, Fault::DelayMs(ms));
+        self
+    }
+
+    pub fn delay_recv_at(mut self, frame: u64, ms: u64) -> Self {
+        self.on_recv.insert(frame, Fault::DelayMs(ms));
+        self
+    }
+
+    pub fn black_hole_send_at(mut self, frame: u64) -> Self {
+        self.on_send.insert(frame, Fault::BlackHole);
+        self
+    }
+
+    pub fn black_hole_recv_at(mut self, frame: u64) -> Self {
+        self.on_recv.insert(frame, Fault::BlackHole);
+        self
+    }
+
+    /// A seeded single-sever plan: cuts the link at a pseudo-random
+    /// frame ordinal in `[0, horizon)`, in a pseudo-random direction.
+    /// Same seed, same plan — the reproducible way to scatter sever
+    /// points across a test matrix without hand-picking each one.
+    pub fn seeded_sever(seed: u64, horizon: u64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        let frame = rng.gen_range(horizon.max(1) as usize) as u64;
+        if rng.gen_bool(0.5) {
+            Self::new().sever_send_at(frame)
+        } else {
+            Self::new().sever_recv_at(frame)
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.on_send.is_empty() && self.on_recv.is_empty()
+    }
+
+    fn send_fault(&self, frame: u64) -> Option<Fault> {
+        self.on_send.get(&frame).copied()
+    }
+
+    fn recv_fault(&self, frame: u64) -> Option<Fault> {
+        self.on_recv.get(&frame).copied()
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum LinkState {
+    Alive,
+    Severed,
+    BlackHole,
+}
+
+/// A [`Transport`] wrapper that executes a [`FaultPlan`].  Ordinals
+/// count frames actually consumed in each direction (a dropped frame
+/// consumes its ordinal; a sever does not advance past it), so a plan
+/// describes the exact protocol step where the failure lands.
+pub struct FaultTransport<T: Transport> {
+    inner: T,
+    plan: FaultPlan,
+    sent: u64,
+    recvd: u64,
+    state: LinkState,
+}
+
+impl<T: Transport> FaultTransport<T> {
+    pub fn new(inner: T, plan: FaultPlan) -> Self {
+        Self { inner, plan, sent: 0, recvd: 0, state: LinkState::Alive }
+    }
+
+    /// Frames let through (or dropped) in each direction so far.
+    pub fn frames(&self) -> (u64, u64) {
+        (self.sent, self.recvd)
+    }
+
+    fn check_alive(&self) -> Result<()> {
+        match self.state {
+            LinkState::Alive => Ok(()),
+            LinkState::Severed => bail!("fault: link severed"),
+            LinkState::BlackHole => bail!("fault: black hole"),
+        }
+    }
+}
+
+impl<T: Transport> Transport for FaultTransport<T> {
+    fn send(&mut self, frame: &[u8]) -> Result<()> {
+        match self.state {
+            LinkState::Severed => bail!("fault: link severed"),
+            // swallowed "successfully": the peer just never hears it
+            LinkState::BlackHole => {
+                self.sent += 1;
+                return Ok(());
+            }
+            LinkState::Alive => {}
+        }
+        match self.plan.send_fault(self.sent) {
+            Some(Fault::Sever) => {
+                self.state = LinkState::Severed;
+                bail!("fault: sever at send frame {}", self.sent)
+            }
+            Some(Fault::BlackHole) => {
+                self.state = LinkState::BlackHole;
+                self.sent += 1;
+                Ok(())
+            }
+            Some(Fault::Drop) => {
+                self.sent += 1;
+                Ok(())
+            }
+            Some(Fault::DelayMs(ms)) => {
+                std::thread::sleep(Duration::from_millis(ms));
+                self.sent += 1;
+                self.inner.send(frame)
+            }
+            None => {
+                self.sent += 1;
+                self.inner.send(frame)
+            }
+        }
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        loop {
+            self.check_alive()?;
+            match self.plan.recv_fault(self.recvd) {
+                Some(Fault::Sever) => {
+                    self.state = LinkState::Severed;
+                    bail!("fault: sever at recv frame {}", self.recvd)
+                }
+                Some(Fault::BlackHole) => {
+                    self.state = LinkState::BlackHole;
+                    // grace sleep instead of hanging a blocking caller
+                    std::thread::sleep(Duration::from_millis(10));
+                    bail!("fault: black hole")
+                }
+                Some(Fault::Drop) => {
+                    let _ = self.inner.recv()?;
+                    self.recvd += 1;
+                }
+                Some(Fault::DelayMs(ms)) => {
+                    std::thread::sleep(Duration::from_millis(ms));
+                    let f = self.inner.recv()?;
+                    self.recvd += 1;
+                    return Ok(f);
+                }
+                None => {
+                    let f = self.inner.recv()?;
+                    self.recvd += 1;
+                    return Ok(f);
+                }
+            }
+        }
+    }
+
+    fn recv_deadline(&mut self, deadline: Instant) -> Result<Option<Vec<u8>>> {
+        loop {
+            match self.state {
+                LinkState::Severed => bail!("fault: link severed"),
+                // unreachable peer: the deadline passes with silence
+                LinkState::BlackHole => {
+                    let wait = deadline.saturating_duration_since(Instant::now());
+                    std::thread::sleep(wait);
+                    return Ok(None);
+                }
+                LinkState::Alive => {}
+            }
+            match self.plan.recv_fault(self.recvd) {
+                Some(Fault::Sever) => {
+                    self.state = LinkState::Severed;
+                    bail!("fault: sever at recv frame {}", self.recvd)
+                }
+                Some(Fault::BlackHole) => {
+                    self.state = LinkState::BlackHole;
+                    // loop back into the black-hole arm above
+                }
+                Some(Fault::Drop) => match self.inner.recv_deadline(deadline)? {
+                    Some(_) => self.recvd += 1,
+                    None => return Ok(None),
+                },
+                Some(Fault::DelayMs(ms)) => {
+                    std::thread::sleep(Duration::from_millis(ms));
+                    let got = self.inner.recv_deadline(deadline)?;
+                    if got.is_some() {
+                        self.recvd += 1;
+                    }
+                    return Ok(got);
+                }
+                None => {
+                    let got = self.inner.recv_deadline(deadline)?;
+                    if got.is_some() {
+                        self.recvd += 1;
+                    }
+                    return Ok(got);
+                }
+            }
+        }
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.inner.bytes_sent()
+    }
+}
+
+/// Cloud-side fault hook, applied by every reactor shard to every
+/// connection it owns.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ReactorFault {
+    /// Close a connection right after its `n`-th inbound frame
+    /// (0-based: `Some(0)` severs on the very first frame, the Hello).
+    /// From the edge it looks like a cloud restart: the next send or
+    /// receive on that channel fails and the reconnect path takes over.
+    pub sever_in_at: Option<u64>,
+}
+
+impl ReactorFault {
+    /// Parse a `CE_FAULT` spec.  Grammar: `sever_in:<n>`.
+    pub fn parse(spec: &str) -> Result<ReactorFault> {
+        let spec = spec.trim();
+        if let Some(n) = spec.strip_prefix("sever_in:") {
+            let n: u64 = n.trim().parse()?;
+            return Ok(ReactorFault { sever_in_at: Some(n) });
+        }
+        bail!("bad {FAULT_ENV} spec '{spec}' (expected sever_in:<n>)")
+    }
+
+    /// The plan a reactor shard should run: an explicit config value
+    /// wins; otherwise the [`FAULT_ENV`] env var is consulted (bad
+    /// specs are ignored — fault injection must never take down a
+    /// production server); `None` means no injected faults.
+    pub fn resolve(explicit: Option<ReactorFault>) -> Option<ReactorFault> {
+        explicit.or_else(|| {
+            std::env::var(FAULT_ENV).ok().and_then(|v| ReactorFault::parse(&v).ok())
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::transport::in_proc_pair;
+
+    #[test]
+    fn clean_plan_is_transparent() {
+        let (a, mut b) = in_proc_pair();
+        let mut f = FaultTransport::new(a, FaultPlan::new());
+        f.send(b"hello").unwrap();
+        assert_eq!(b.recv().unwrap(), b"hello");
+        b.send(b"world").unwrap();
+        assert_eq!(f.recv().unwrap(), b"world");
+        assert_eq!(f.frames(), (1, 1));
+        assert_eq!(f.bytes_sent(), 5);
+    }
+
+    #[test]
+    fn sever_at_nth_send_is_sticky() {
+        let (a, mut b) = in_proc_pair();
+        let mut f = FaultTransport::new(a, FaultPlan::new().sever_send_at(2));
+        f.send(b"0").unwrap();
+        f.send(b"1").unwrap();
+        assert!(f.send(b"2").is_err(), "frame 2 must sever");
+        assert!(f.send(b"3").is_err(), "severed links stay severed");
+        assert!(f.recv().is_err(), "both directions die");
+        assert_eq!(b.recv().unwrap(), b"0");
+        assert_eq!(b.recv().unwrap(), b"1");
+    }
+
+    #[test]
+    fn sever_at_nth_recv() {
+        let (a, mut b) = in_proc_pair();
+        let mut f = FaultTransport::new(a, FaultPlan::new().sever_recv_at(1));
+        b.send(b"0").unwrap();
+        b.send(b"1").unwrap();
+        assert_eq!(f.recv().unwrap(), b"0");
+        assert!(f.recv().is_err(), "recv frame 1 must sever");
+        assert!(f.send(b"x").is_err());
+    }
+
+    #[test]
+    fn drop_loses_exactly_one_frame() {
+        let (a, mut b) = in_proc_pair();
+        let mut f = FaultTransport::new(a, FaultPlan::new().drop_send_at(1).drop_recv_at(0));
+        f.send(b"s0").unwrap();
+        f.send(b"s1").unwrap(); // dropped
+        f.send(b"s2").unwrap();
+        assert_eq!(b.recv().unwrap(), b"s0");
+        assert_eq!(b.recv().unwrap(), b"s2");
+        b.send(b"r0").unwrap(); // dropped on receipt
+        b.send(b"r1").unwrap();
+        assert_eq!(f.recv().unwrap(), b"r1");
+        assert_eq!(f.frames(), (3, 2), "dropped frames consume their ordinal");
+    }
+
+    #[test]
+    fn delay_holds_then_delivers() {
+        let (a, mut b) = in_proc_pair();
+        let mut f = FaultTransport::new(a, FaultPlan::new().delay_send_at(0, 30));
+        let t0 = Instant::now();
+        f.send(b"slow").unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(29));
+        assert_eq!(b.recv().unwrap(), b"slow");
+    }
+
+    #[test]
+    fn black_hole_swallows_sends_and_times_out_recvs() {
+        let (a, mut b) = in_proc_pair();
+        let mut f = FaultTransport::new(a, FaultPlan::new().black_hole_send_at(1));
+        f.send(b"heard").unwrap();
+        f.send(b"void").unwrap(); // enters the hole: reported ok
+        f.send(b"void2").unwrap(); // still "ok"
+        assert_eq!(b.recv().unwrap(), b"heard");
+        b.send(b"reply").unwrap();
+        // deadline recv: clean timeout even though a frame is queued
+        let got = f.recv_deadline(Instant::now() + Duration::from_millis(20)).unwrap();
+        assert!(got.is_none(), "black hole must look like silence");
+        // blocking recv: fails after a grace sleep instead of hanging
+        assert!(f.recv().is_err());
+    }
+
+    #[test]
+    fn seeded_plans_are_reproducible() {
+        for seed in 0..32u64 {
+            let a = FaultPlan::seeded_sever(seed, 100);
+            let b = FaultPlan::seeded_sever(seed, 100);
+            assert_eq!(a, b, "seed {seed} must rebuild the same plan");
+            assert!(!a.is_empty());
+        }
+        // different seeds land on different points (spot check)
+        assert_ne!(FaultPlan::seeded_sever(1, 1000), FaultPlan::seeded_sever(2, 1000));
+    }
+
+    #[test]
+    fn reactor_fault_spec_parses() {
+        assert_eq!(
+            ReactorFault::parse("sever_in:48").unwrap(),
+            ReactorFault { sever_in_at: Some(48) }
+        );
+        assert_eq!(
+            ReactorFault::parse(" sever_in: 0 ").unwrap(),
+            ReactorFault { sever_in_at: Some(0) }
+        );
+        assert!(ReactorFault::parse("sever_in:").is_err());
+        assert!(ReactorFault::parse("chaos").is_err());
+        // explicit config wins over anything the env might say
+        let explicit = ReactorFault { sever_in_at: Some(7) };
+        assert_eq!(ReactorFault::resolve(Some(explicit)), Some(explicit));
+    }
+}

@@ -44,12 +44,23 @@
 //! * [`transport`] — the blocking adapters: [`transport::TcpTransport`]
 //!   (edge client side), [`transport::InProcTransport`] (tests), and the
 //!   [`transport::Throttled`] WAN wrapper, all wrapping the same codec.
+//! * [`fault`] — deterministic fault injection, one layer above
+//!   [`transport`] and orthogonal to it: [`fault::FaultTransport`]
+//!   wraps any `Transport` (the same adapter shape as `Throttled`) and
+//!   executes a scripted [`fault::FaultPlan`] — sever/drop/delay/
+//!   black-hole at the Nth frame, keyed by frame ordinal so every
+//!   failure lands at the same protocol step on every run — while
+//!   [`fault::ReactorFault`] is the cloud-side twin the reactor applies
+//!   per connection (`CE_FAULT` env / `ReactorConfig::fault`).  It
+//!   knows nothing about framing or readiness — only which frame
+//!   ordinal dies and how.
 //! * [`profiles`], [`simulated`] — WAN link profiles and the analytic
 //!   link model used by the DES harness (which prices messages with
 //!   [`codec::frame_wire_len`], so simulated wire costs track the real
 //!   framing).
 pub mod codec;
 pub mod event;
+pub mod fault;
 pub mod listener;
 pub mod profiles;
 pub mod reactor;

@@ -119,6 +119,7 @@ use crate::coordinator::scheduler::{InferOutcome, Reply, Router, SchedMsg, Uploa
 use crate::model::manifest::ModelDims;
 use crate::net::codec::FrameCodec;
 use crate::net::event::{Event, EventSet, Interest, SourceFd, Token};
+use crate::net::fault::ReactorFault;
 use crate::net::listener::{self, MODE_NONE};
 
 // ---------------------------------------------------------------------------
@@ -315,6 +316,9 @@ pub struct ReactorStats {
     /// Established connections closed for exceeding the idle timeout
     /// (no bytes read or written) — silently-dead NAT peers.
     pub idle_timeouts: u64,
+    /// Connections severed by the deterministic fault hook
+    /// ([`ReactorFault`], `CE_FAULT`).  Always 0 in production.
+    pub faults_injected: u64,
     /// Event-loop iterations (one `EventSet::wait` return each).
     pub wakes: u64,
     /// Sockets accepted in-loop from the shard's listener fd (includes
@@ -348,6 +352,7 @@ impl ReactorStats {
         self.read_pauses += o.read_pauses;
         self.hello_timeouts += o.hello_timeouts;
         self.idle_timeouts += o.idle_timeouts;
+        self.faults_injected += o.faults_injected;
         self.wakes += o.wakes;
         self.accepts += o.accepts;
         self.events_seen += o.events_seen;
@@ -415,6 +420,13 @@ impl Reactor {
         // sum back to (at least) the configured bound
         let mut scfg = cfg;
         scfg.max_conns = (cfg.max_conns / shards).max(1);
+        // the fault hook resolves once for the whole fleet (explicit
+        // config wins over the CE_FAULT env var), so every shard runs
+        // the same deterministic schedule
+        let fault = ReactorFault::resolve(cfg.fault);
+        if let Some(f) = fault {
+            log::warn!("reactor fleet running with injected faults: {f:?}");
+        }
         let mut shard_handles = Vec::with_capacity(shards);
         let mut threads = Vec::with_capacity(shards);
         for (shard, slot) in listeners.into_iter().enumerate() {
@@ -446,6 +458,7 @@ impl Reactor {
                         next_local: 1,
                         scratch: vec![0u8; 64 * 1024],
                         stats: ReactorStats { accept_mode, ..ReactorStats::default() },
+                        fault,
                         pending_hellos: 0,
                         paused_conns: false,
                         shutdown: false,
@@ -509,6 +522,9 @@ struct Conn {
     last_activity: Instant,
     /// Reads paused by worker backpressure.
     paused: bool,
+    /// Inbound frames routed so far — the ordinal the fault hook keys
+    /// on ([`ReactorFault::sever_in_at`]).
+    frames_seen: u64,
     /// Close as soon as the write queue drains (protocol error sent).
     closing: bool,
     /// Interest currently installed in the event set; [`Loop::
@@ -536,6 +552,9 @@ struct Loop {
     next_local: u64,
     scratch: Vec<u8>,
     stats: ReactorStats,
+    /// Deterministic fault schedule every connection of this shard runs
+    /// under (`None` in production — see [`ReactorFault::resolve`]).
+    fault: Option<ReactorFault>,
     /// Connections still awaiting their Hello — gates the reap scan and
     /// the bounded wait timeout (maintained at admit / handshake /
     /// close).
@@ -673,6 +692,7 @@ impl Loop {
                 last_activity: now,
                 paused: false,
                 closing: false,
+                frames_seen: 0,
                 interest,
             },
         );
@@ -995,14 +1015,42 @@ impl Loop {
     }
 
     /// Handle one decoded frame.  `Err` means "close this connection".
+    ///
+    /// This is a thin fault-injection shim around [`Self::route_frame`]:
+    /// the frame is routed FIRST and only then checked against the
+    /// shard's [`ReactorFault`] schedule, so a scripted sever models a
+    /// crash *after* the n-th inbound frame was acted on (the hardest
+    /// case for the client — state advanced, acknowledgement lost).
     fn on_frame(&mut self, id: u64, frame: Vec<u8>) -> Result<()> {
         self.stats.frames_in += 1;
+        let ordinal = match self.conns.get_mut(&id) {
+            Some(c) => {
+                let o = c.frames_seen;
+                c.frames_seen += 1;
+                o
+            }
+            None => return Ok(()),
+        };
+        let out = self.route_frame(id, frame);
+        if out.is_ok() {
+            if let Some(n) = self.fault.and_then(|f| f.sever_in_at) {
+                if ordinal == n {
+                    self.stats.faults_injected += 1;
+                    anyhow::bail!("fault injection: severed after inbound frame {n}");
+                }
+            }
+        }
+        out
+    }
+
+    /// Dispatch one decoded frame to the scheduler or protocol handler.
+    fn route_frame(&mut self, id: u64, frame: Vec<u8>) -> Result<()> {
         let Some(state) = self.conns.get(&id).map(|c| c.state) else { return Ok(()) };
         match state {
             ConnState::AwaitingHello => {
-                let (device_id, session, channel) = match Message::decode(&frame)? {
-                    Message::Hello { device_id, session, channel } => {
-                        (device_id, session, channel)
+                let (device_id, session, channel, resume) = match Message::decode(&frame)? {
+                    Message::Hello { device_id, session, channel, resume } => {
+                        (device_id, session, channel, resume)
                     }
                     other => anyhow::bail!("expected Hello, got {other:?}"),
                 };
@@ -1010,9 +1058,12 @@ impl Loop {
                     // fresh upload channel = fresh client session: reset
                     // the device and pin it to this session, queued ahead
                     // of everything the session will send (see the
-                    // coordinator::cloud docs)
+                    // coordinator::cloud docs).  A resume Hello carries
+                    // the SAME nonce and asks the worker to suspend
+                    // (keep tombstones, drop state) instead of reset —
+                    // the distinction lives in the scheduler, not here.
                     self.router
-                        .send(device_id, SchedMsg::Reset { device: device_id, session })
+                        .send(device_id, SchedMsg::Reset { device: device_id, session, resume })
                         .context("scheduler gone")?;
                 }
                 if let Some(c) = self.conns.get_mut(&id) {
@@ -1090,6 +1141,13 @@ impl Loop {
                         .router
                         .send(device_id, SchedMsg::End { device: device_id, session, req_id })
                         .context("scheduler gone"),
+                    // keepalive probe: reflect the nonce without touching
+                    // the scheduler — liveness must not depend on worker
+                    // queue depth
+                    Message::Ping { nonce } => {
+                        self.enqueue_and_flush(id, &Message::Pong { nonce }.encode());
+                        Ok(())
+                    }
                     other => {
                         let msg = format!("unexpected message on {channel:?} channel: {other:?}");
                         log::debug!("reactor: {msg}");

@@ -80,6 +80,22 @@ impl TcpTransport {
         Self::new(stream)
     }
 
+    /// Connect with a per-attempt bound (the reconnect dialer's
+    /// `ReconnectPolicy::connect_timeout_s`): a cloud that is down hard
+    /// fails fast, one that is black-holed fails in `timeout` instead
+    /// of the kernel's minutes-long SYN retry ladder.
+    pub fn connect_timeout(addr: &str, timeout: Duration) -> Result<Self> {
+        use std::net::ToSocketAddrs;
+        let sock = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolve {addr}"))?
+            .next()
+            .with_context(|| format!("no address for {addr}"))?;
+        let stream = TcpStream::connect_timeout(&sock, timeout)
+            .with_context(|| format!("connect {addr}"))?;
+        Self::new(stream)
+    }
+
     /// Deadline-bounded receive.  Unlike the pre-codec transport, a
     /// timeout mid-frame is *not* fatal: the partial bytes stay in the
     /// codec and the next receive continues where this one stopped.

@@ -1,0 +1,398 @@
+//! Edge-resilience integration tests: scripted link faults against the
+//! real TCP serving path.  Every fault here is deterministic — either a
+//! client-side [`FaultTransport`] schedule injected through the
+//! `CloudLink` dialer seam, or a server-side [`ReactorFault`] severing
+//! connections at a fixed inbound-frame ordinal — so reconnect, session
+//! resume, and failover are exercised at exact protocol steps and the
+//! recovered token streams can be compared bit-for-bit against the
+//! local (never-severed) reference.
+//!
+//! The whole file also runs under the CI `CE_FAULT=sever_in:7` leg,
+//! where every server connection additionally severs after its 7th
+//! inbound frame.  Assertions are therefore lower bounds (`>=`) on
+//! fault/recovery counters wherever the env schedule can add rounds.
+
+use std::sync::{Arc, Barrier};
+
+use ce_collm::config::{
+    CloudConfig, DeploymentConfig, ExitPolicy, ReactorBackend, ReconnectPolicy,
+};
+use ce_collm::coordinator::cloud::{CloudServer, SessionFactory};
+use ce_collm::coordinator::edge::{CloudLink, DialFn, EdgeClient};
+use ce_collm::coordinator::protocol::{Channel, Message};
+use ce_collm::model::manifest::test_manifest;
+use ce_collm::net::fault::{FaultPlan, FaultTransport, ReactorFault};
+use ce_collm::net::transport::{TcpTransport, Transport};
+use ce_collm::runtime::mock::{MockCloud, MockEdge, MockOracle};
+
+/// See `serve_tcp.rs`: the non-default readiness backend, so severs and
+/// resumes are exercised under both event loops.
+const OTHER_BACKEND: ReactorBackend = ReactorBackend::Poll;
+
+/// Server config for fault runs: parks must expire fast, because a
+/// sever can eat an upload and leave its infer request waiting for
+/// state that will never arrive — the expiry error is what hands
+/// control back to the client's reconnect loop.
+fn fault_cloud_config(workers: usize) -> CloudConfig {
+    let mut cfg = CloudConfig::with_workers(workers);
+    cfg.max_park_s = 0.2;
+    cfg
+}
+
+/// One mock engine per device, all seeded `seed_base + device`, so each
+/// client thread has its own deterministic local reference.
+fn spawn_server(seed_base: u64, cfg: CloudConfig) -> CloudServer {
+    let dims = test_manifest().model;
+    let sdims = dims.clone();
+    CloudServer::bind("127.0.0.1:0", dims, cfg, move || {
+        let sdims = sdims.clone();
+        let f: SessionFactory = Box::new(move |device| {
+            Ok(Box::new(MockCloud::new(MockOracle::new(seed_base + device), sdims.clone())) as _)
+        });
+        Ok(f)
+    })
+    .unwrap()
+}
+
+/// The local (in-process, never-severed) reference stream every
+/// recovered wire run must match bit-for-bit.
+fn local_trace(seed: u64, threshold: f32, prompt: &str, max_new: usize) -> Vec<i32> {
+    let dims = test_manifest().model;
+    let o = MockOracle::new(seed);
+    let mut edge = MockEdge::new(o, dims.clone());
+    let mut cloud = MockCloud::new(o, dims);
+    let mut timings = ce_collm::harness::trace::CallTimings::default();
+    ce_collm::harness::trace::record(
+        &mut edge,
+        &mut cloud,
+        ExitPolicy::Threshold(threshold),
+        ce_collm::quant::Precision::F16,
+        prompt,
+        max_new,
+        &mut timings,
+    )
+    .unwrap()
+    .tokens
+}
+
+/// Clean TCP `(upload, infer)` pair — the test twin of the default
+/// dialer inside [`CloudLink::connect`].
+fn tcp_pair(addr: &str) -> anyhow::Result<(Box<dyn Transport + Send>, Box<dyn Transport>)> {
+    let upload = Box::new(TcpTransport::connect(addr)?);
+    let infer = Box::new(TcpTransport::connect(addr)?);
+    Ok((upload as Box<dyn Transport + Send>, infer as Box<dyn Transport>))
+}
+
+fn clean_dial() -> DialFn {
+    Box::new(tcp_pair)
+}
+
+/// A dialer whose FIRST dial wraps the infer channel in `plan`; every
+/// redial is clean TCP.  The scripted sever therefore fires exactly
+/// once per run (the env-leg reactor schedule may add more).
+fn faulty_first_dial(plan: FaultPlan) -> DialFn {
+    let mut first = Some(plan);
+    Box::new(move |addr: &str| match first.take() {
+        Some(plan) => {
+            let upload = Box::new(TcpTransport::connect(addr)?);
+            let infer = FaultTransport::new(TcpTransport::connect(addr)?, plan);
+            Ok((upload as Box<dyn Transport + Send>, Box::new(infer) as Box<dyn Transport>))
+        }
+        None => tcp_pair(addr),
+    })
+}
+
+fn client_via(
+    addr: &str,
+    device: u64,
+    seed: u64,
+    threshold: f32,
+    max_new: usize,
+    policy: ReconnectPolicy,
+    dial: DialFn,
+) -> EdgeClient<MockEdge> {
+    let dims = test_manifest().model;
+    let mut cfg = DeploymentConfig::with_threshold(threshold);
+    cfg.device_id = device;
+    cfg.max_new_tokens = max_new;
+    let link = CloudLink::connect_via(device, vec![addr.to_string()], policy, dial).unwrap();
+    EdgeClient::with_cloud(MockEdge::new(MockOracle::new(seed), dims), cfg, link)
+}
+
+/// Sever the infer channel exactly when the first deferred token's
+/// response is on the wire (recv ordinal 0 is the handshake `Ack`): the
+/// cloud has served the token but the edge never hears it — the
+/// "lost response" hole.  The reconnect must resume the session (same
+/// nonce), replay the full exit-1 history, and re-derive the identical
+/// token; nothing about the recovery may be billed as an eviction.
+fn severed_link_resumes_bit_identical(backend: ReactorBackend) {
+    let seed = 17;
+    let mut cfg = fault_cloud_config(1);
+    cfg.reactor.backend = backend;
+    let server = spawn_server(seed, cfg);
+
+    let dial = faulty_first_dial(FaultPlan::new().sever_recv_at(1));
+    let mut client = client_via(
+        &server.addr.to_string(),
+        0,
+        seed,
+        0.8,
+        20,
+        ReconnectPolicy::default(),
+        dial,
+    );
+    let out = client.generate("a tcp test prompt").unwrap();
+    assert_eq!(
+        out.tokens,
+        local_trace(seed, 0.8, "a tcp test prompt", 20),
+        "resumed stream diverges from the unsevered reference ({backend:?})"
+    );
+    assert!(out.counters.reconnects >= 1, "the sever must reconnect: {:?}", out.counters);
+    assert_eq!(out.counters.failovers, 0, "one endpoint: rotation is impossible");
+    assert_eq!(
+        out.counters.context_replays, 0,
+        "a resume replay must not be billed as an eviction replay"
+    );
+
+    let stats = server.shutdown();
+    assert!(stats.sessions_resumed >= 1, "the resume Hello must be honored: {stats:?}");
+    assert_eq!(stats.stale_resumes, 0, "the server never lost the session: {stats:?}");
+}
+
+#[test]
+fn severed_link_resumes_bit_identically() {
+    severed_link_resumes_bit_identical(ReactorBackend::Auto);
+}
+
+#[test]
+fn severed_link_resumes_bit_identically_other_backend() {
+    severed_link_resumes_bit_identical(OTHER_BACKEND);
+}
+
+/// Two devices ping-pong evictions under a 1-byte context budget while
+/// device 0's infer channel is severed mid-churn (recv ordinal 4 lands
+/// among `SessionEvicted` responses and replay acks).  Reconnect-resume
+/// and eviction-replay recovery compose: both streams must still match
+/// the never-evicted, never-severed local reference.
+#[test]
+fn sever_during_eviction_replay_stays_bit_identical() {
+    let mut cfg = fault_cloud_config(1);
+    cfg.memory_budget_bytes = Some(1);
+    let server = spawn_server(500, cfg);
+
+    let addr = server.addr.to_string();
+    let gate = Arc::new(Barrier::new(2));
+    let mut handles = Vec::new();
+    for device in 0..2u64 {
+        let addr = addr.clone();
+        let gate = Arc::clone(&gate);
+        handles.push(std::thread::spawn(move || {
+            let dial = if device == 0 {
+                faulty_first_dial(FaultPlan::new().sever_recv_at(4))
+            } else {
+                clean_dial()
+            };
+            // θ = 1.0: every token defers, keeping both devices active
+            // so the budget keeps evicting whichever is idle
+            let mut client = client_via(
+                &addr,
+                device,
+                500 + device,
+                1.0,
+                16,
+                ReconnectPolicy::default(),
+                dial,
+            );
+            gate.wait();
+            (device, client.generate("an eviction sever prompt").unwrap())
+        }));
+    }
+    let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    for (device, out) in &results {
+        assert_eq!(
+            out.tokens,
+            local_trace(500 + device, 1.0, "an eviction sever prompt", 16),
+            "device {device}: recovery must be bit-identical"
+        );
+    }
+    let severed = &results.iter().find(|(d, _)| *d == 0).unwrap().1;
+    assert!(severed.counters.reconnects >= 1, "device 0 must reconnect: {:?}", severed.counters);
+
+    let stats = server.shutdown();
+    assert!(stats.context.evictions > 0, "no eviction under a 1-byte budget? {stats:?}");
+    assert!(stats.sessions_resumed >= 1, "device 0's resume must be honored: {stats:?}");
+}
+
+/// Endpoint A dies mid-generation and refuses every redial — the
+/// cloud-restart shape.  The link must exhaust A's attempt budget,
+/// rotate to endpoint B, and present the session nonce there; B has
+/// never seen it (stale resume → full reset + pin), so the edge replay
+/// re-prefills B and the stream continues bit-identically.
+#[test]
+fn cloud_restart_fails_over_to_second_endpoint() {
+    let seed = 61;
+    let server_a = spawn_server(seed, fault_cloud_config(1));
+    let server_b = spawn_server(seed, fault_cloud_config(1));
+    let addr_a = server_a.addr.to_string();
+    let addr_b = server_b.addr.to_string();
+
+    let policy = ReconnectPolicy {
+        max_attempts: 2,
+        backoff_base_s: 0.001,
+        backoff_cap_s: 0.01,
+        jitter: 0.5,
+        connect_timeout_s: 1.0,
+    };
+    let gate_a = addr_a.clone();
+    let mut a_dials = 0u32;
+    let dial: DialFn = Box::new(move |addr: &str| {
+        if addr == gate_a {
+            a_dials += 1;
+            anyhow::ensure!(a_dials == 1, "endpoint A is down (cloud restart)");
+            let upload = Box::new(TcpTransport::connect(addr)?);
+            let infer = FaultTransport::new(
+                TcpTransport::connect(addr)?,
+                FaultPlan::new().sever_recv_at(1),
+            );
+            Ok((upload as Box<dyn Transport + Send>, Box::new(infer) as Box<dyn Transport>))
+        } else {
+            tcp_pair(addr)
+        }
+    });
+
+    let dims = test_manifest().model;
+    let mut cfg = DeploymentConfig::with_threshold(1.0);
+    cfg.device_id = 0;
+    cfg.max_new_tokens = 12;
+    cfg.reconnect = policy;
+    let link = CloudLink::connect_via(0, vec![addr_a, addr_b], policy, dial).unwrap();
+    let mut client = EdgeClient::with_cloud(MockEdge::new(MockOracle::new(seed), dims), cfg, link);
+
+    let out = client.generate("a failover prompt").unwrap();
+    assert_eq!(
+        out.tokens,
+        local_trace(seed, 1.0, "a failover prompt", 12),
+        "failover must not change served bytes"
+    );
+    assert!(out.counters.failovers >= 1, "rotation to B must be counted: {:?}", out.counters);
+    assert!(out.counters.reconnects >= 1, "a failover is a reconnect: {:?}", out.counters);
+
+    let stats_b = server_b.shutdown();
+    assert!(stats_b.stale_resumes >= 1, "B never saw the session; resume must be stale: {stats_b:?}");
+    assert!(stats_b.requests_served > 0, "B must serve the remainder of the run: {stats_b:?}");
+    server_a.shutdown();
+}
+
+/// 32 edges lose their first infer connection simultaneously and
+/// re-dial under jittered backoff — the reconnect-storm shape.  Every
+/// device must resume its own session and finish bit-identical to its
+/// own local reference.
+#[test]
+fn reconnect_storm_every_edge_resumes() {
+    let devices = 32u64;
+    let server = spawn_server(300, fault_cloud_config(4));
+    let addr = server.addr.to_string();
+    let gate = Arc::new(Barrier::new(devices as usize));
+    let mut handles = Vec::new();
+    for device in 0..devices {
+        let addr = addr.clone();
+        let gate = Arc::clone(&gate);
+        handles.push(std::thread::spawn(move || {
+            let dial = faulty_first_dial(FaultPlan::new().sever_recv_at(1));
+            let mut client = client_via(
+                &addr,
+                device,
+                300 + device,
+                1.0,
+                8,
+                ReconnectPolicy::default(),
+                dial,
+            );
+            gate.wait();
+            (device, client.generate("a reconnect storm prompt").unwrap())
+        }));
+    }
+    let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    for (device, out) in &results {
+        assert_eq!(
+            out.tokens,
+            local_trace(300 + device, 1.0, "a reconnect storm prompt", 8),
+            "device {device}: storm recovery must be bit-identical"
+        );
+        assert!(out.counters.reconnects >= 1, "device {device} never reconnected");
+    }
+    let stats = server.shutdown();
+    assert!(
+        stats.sessions_resumed >= devices,
+        "all {devices} edges must resume their sessions: {stats:?}"
+    );
+}
+
+/// Server-side schedule: every reactor connection is severed after its
+/// 7th inbound frame (an explicit [`ReactorFault`], which wins over the
+/// `CE_FAULT` env).  The edge sees repeated mid-run disconnects on both
+/// channels and must reconnect through each one; n = 7 leaves room for
+/// the resume replay plus several requests per round, so every round
+/// makes forward progress.
+fn reactor_sever_schedule_recovers(backend: ReactorBackend) {
+    let seed = 83;
+    let mut cfg = fault_cloud_config(1);
+    cfg.reactor.backend = backend;
+    cfg.reactor.fault = Some(ReactorFault { sever_in_at: Some(7) });
+    let server = spawn_server(seed, cfg);
+
+    let link =
+        CloudLink::connect(0, &[server.addr.to_string()], ReconnectPolicy::default()).unwrap();
+    let dims = test_manifest().model;
+    let mut dcfg = DeploymentConfig::with_threshold(1.0);
+    dcfg.device_id = 0;
+    dcfg.max_new_tokens = 16;
+    let mut client = EdgeClient::with_cloud(MockEdge::new(MockOracle::new(seed), dims), dcfg, link);
+
+    let out = client.generate("a server fault prompt").unwrap();
+    assert_eq!(
+        out.tokens,
+        local_trace(seed, 1.0, "a server fault prompt", 16),
+        "reactor severs must be invisible in the stream ({backend:?})"
+    );
+    assert!(out.counters.reconnects >= 1, "severs must force reconnects: {:?}", out.counters);
+
+    let stats = server.shutdown();
+    assert!(stats.reactor.faults_injected >= 1, "the schedule must have fired: {stats:?}");
+    assert!(stats.sessions_resumed >= 1, "reconnects must resume, not reset: {stats:?}");
+}
+
+#[test]
+fn reactor_sever_schedule_recovers_bit_identically() {
+    reactor_sever_schedule_recovers(ReactorBackend::Auto);
+}
+
+#[test]
+fn reactor_sever_schedule_recovers_bit_identically_other_backend() {
+    reactor_sever_schedule_recovers(OTHER_BACKEND);
+}
+
+/// Raw keepalive round trip: a `Ping` on an established infer channel
+/// is answered in-reactor with a `Pong` carrying the same nonce (no
+/// scheduler involvement, so it works even while workers are busy).
+#[test]
+fn ping_is_answered_with_matching_pong() {
+    let server = spawn_server(5, fault_cloud_config(1));
+    let mut conn = TcpTransport::connect(&server.addr.to_string()).unwrap();
+    conn.send(
+        &Message::Hello { device_id: 12, session: 3, channel: Channel::Infer, resume: false }
+            .encode(),
+    )
+    .unwrap();
+    assert_eq!(conn.recv().unwrap(), Message::Ack.encode(), "handshake completes");
+
+    conn.send(&Message::Ping { nonce: 42 }.encode()).unwrap();
+    assert_eq!(
+        Message::decode(&conn.recv().unwrap()).unwrap(),
+        Message::Pong { nonce: 42 },
+        "pong must echo the ping nonce"
+    );
+    server.shutdown();
+}

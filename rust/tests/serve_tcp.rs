@@ -193,7 +193,10 @@ fn idle_timeout_reaps_established_connection(backend: ReactorBackend) {
     let server = spawn_mock_server_cfg(1, cfg);
 
     let mut conn = TcpTransport::connect(&server.addr.to_string()).unwrap();
-    conn.send(&Message::Hello { device_id: 77, session: 1, channel: Channel::Upload }.encode())
+    conn.send(
+        &Message::Hello { device_id: 77, session: 1, channel: Channel::Upload, resume: false }
+            .encode(),
+    )
         .unwrap();
     assert_eq!(conn.recv().unwrap(), Message::Ack.encode(), "handshake completes");
     // ... and then the peer says nothing, forever
@@ -230,7 +233,10 @@ fn slow_reader_gets_evicted(backend: ReactorBackend) {
     let server = spawn_mock_server_cfg(2, cfg);
 
     let mut conn = TcpTransport::connect(&server.addr.to_string()).unwrap();
-    conn.send(&Message::Hello { device_id: 3, session: 9, channel: Channel::Infer }.encode())
+    conn.send(
+        &Message::Hello { device_id: 3, session: 9, channel: Channel::Infer, resume: false }
+            .encode(),
+    )
         .unwrap();
     assert_eq!(conn.recv().unwrap(), Message::Ack.encode(), "handshake completes");
     // each request parks (its uploads never come), expires after
@@ -411,8 +417,13 @@ fn shutdown_closes_every_connection_with_no_stragglers() {
         .map(|i| {
             let mut t = TcpTransport::connect(&addr).unwrap();
             t.send(
-                &Message::Hello { device_id: 40 + i, session: 7, channel: Channel::Infer }
-                    .encode(),
+                &Message::Hello {
+                    device_id: 40 + i,
+                    session: 7,
+                    channel: Channel::Infer,
+                    resume: false,
+                }
+                .encode(),
             )
             .unwrap();
             assert_eq!(t.recv().unwrap(), Message::Ack.encode(), "handshake must complete");
@@ -566,8 +577,16 @@ fn dead_conn_completion_never_crosses_shards() {
         let mut t = TcpTransport::connect(&addr).unwrap();
         let (srv, _) = listener.accept().unwrap();
         handle.register(srv).unwrap();
-        t.send(&Message::Hello { device_id: device, session: 0, channel: Channel::Infer }.encode())
-            .unwrap();
+        t.send(
+            &Message::Hello {
+                device_id: device,
+                session: 0,
+                channel: Channel::Infer,
+                resume: false,
+            }
+            .encode(),
+        )
+        .unwrap();
         assert_eq!(t.recv().unwrap(), Message::Ack.encode(), "handshake completes");
         t
     };

@@ -1,0 +1,132 @@
+#!/usr/bin/env python3
+"""Regenerate rust/tests/data/golden_trace.jsonl (TRACE v1 golden recording).
+
+The golden trace is a hand-derived recording of a single-worker mock
+cloud run: two devices, a global memory budget tight enough to force
+eviction churn, one evicted-request replay, and one mid-run
+sever/resume (an honored `resume` reset).  The replayer
+(`rust/src/trace/replay.rs`) re-drives it and must reproduce every
+token bit-for-bit plus the final counters.
+
+Scenario (workers=1, d_model=128, cloud kv = 5120 B/pos from
+`test_manifest`, budget 24000 B, mock oracle seed 1):
+
+  * device 1 (session 0x11) and device 2 (session 0x22) each upload a
+    3-position prompt and take the prompt-frontier token (pos 2);
+  * serving device 2 pushes residency to 30720 B -> device 1 evicted;
+  * device 1's next infer bounces with `evicted_notice`, the edge
+    replays its 4-position history (replay counter = 1), and the token
+    at pos 3 is served -> device 2 evicted (35840 B over budget);
+  * device 2 reconnects with resume=true (honored: suspend clears the
+    eviction mark, resumed counter = 1, NOT a replay), re-uploads its
+    history, takes pos 3 -> device 1 evicted again (evictions = 3);
+  * both requests end; worker 0 emits its stats line.
+
+Every field mirrors what `scheduler.rs` would emit; if the scheduler's
+trace schema changes, bump TRACE v and re-derive this file.
+
+Usage: python3 .github/scripts/gen_golden_trace.py [out.jsonl]
+"""
+
+import json
+import struct
+import sys
+
+MASK = (1 << 64) - 1
+
+
+def splitmix64(x: int) -> int:
+    x = (x + 0x9E3779B97F4A7C15) & MASK
+    x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & MASK
+    return (x ^ (x >> 31)) & MASK
+
+
+SEED = 1
+D_MODEL = 128
+CONF_BITS = struct.unpack("<I", struct.pack("<f", 0.95))[0]  # 0x3F733333
+
+
+def token(pos: int) -> int:
+    # MockOracle::cloud_token: 97 + splitmix64(seed ^ 0x77 ^ pos) % 26
+    return 97 + splitmix64((SEED ^ 0x77 ^ pos) & MASK) % 26
+
+
+def hidden_hex(positions: int) -> str:
+    # 0.5f32 little-endian, d_model floats per position
+    return "0000003f" * (positions * D_MODEL)
+
+
+def main() -> None:
+    out = sys.argv[1] if len(sys.argv) > 1 else "rust/tests/data/golden_trace.jsonl"
+    w = 0  # single worker owns both devices (device % workers == 0)
+    events = [
+        {"ev": "run_meta", "workers": 1, "d_model": D_MODEL, "max_catchup": 8,
+         "budget": 24000},
+        {"ev": "reset", "worker": w, "device": 1, "session": "0x11",
+         "resume": False, "honored": False},
+        {"ev": "reset", "worker": w, "device": 2, "session": "0x22",
+         "resume": False, "honored": False},
+        # --- device 1 prompt: upload 3 positions, take the frontier token
+        {"ev": "upload", "worker": w, "device": 1, "session": "0x11", "req": 1,
+         "start": 0, "plen": 3, "data": hidden_hex(3)},
+        {"ev": "infer", "worker": w, "device": 1, "session": "0x11", "req": 1,
+         "pos": 2, "plen": 3},
+        {"ev": "park", "worker": w, "device": 1, "req": 1, "pos": 2},
+        {"ev": "pass", "worker": w, "devices": 1, "items": 0},
+        {"ev": "token", "worker": w, "device": 1, "req": 1, "pos": 2,
+         "token": token(2), "conf_bits": CONF_BITS},
+        # --- device 2 prompt: serving it breaks the budget -> evict device 1
+        {"ev": "upload", "worker": w, "device": 2, "session": "0x22", "req": 1,
+         "start": 0, "plen": 3, "data": hidden_hex(3)},
+        {"ev": "infer", "worker": w, "device": 2, "session": "0x22", "req": 1,
+         "pos": 2, "plen": 3},
+        {"ev": "park", "worker": w, "device": 2, "req": 1, "pos": 2},
+        {"ev": "pass", "worker": w, "devices": 1, "items": 0},
+        {"ev": "token", "worker": w, "device": 2, "req": 1, "pos": 2,
+         "token": token(2), "conf_bits": CONF_BITS},
+        {"ev": "evict", "worker": w, "device": 1},
+        # --- device 1 bounces, replays its 4-position history (replays = 1)
+        {"ev": "infer", "worker": w, "device": 1, "session": "0x11", "req": 1,
+         "pos": 3, "plen": 3},
+        {"ev": "evicted_notice", "worker": w, "device": 1, "req": 1, "pos": 3},
+        {"ev": "upload", "worker": w, "device": 1, "session": "0x11", "req": 1,
+         "start": 0, "plen": 3, "data": hidden_hex(4)},
+        {"ev": "infer", "worker": w, "device": 1, "session": "0x11", "req": 1,
+         "pos": 3, "plen": 3},
+        {"ev": "park", "worker": w, "device": 1, "req": 1, "pos": 3},
+        {"ev": "pass", "worker": w, "devices": 1, "items": 0},
+        {"ev": "token", "worker": w, "device": 1, "req": 1, "pos": 3,
+         "token": token(3), "conf_bits": CONF_BITS},
+        {"ev": "evict", "worker": w, "device": 2},
+        # --- device 2 severed mid-run; reconnect with an honored resume
+        #     (resumed = 1; suspend clears the eviction mark, so the
+        #     re-upload below is NOT counted as a replay)
+        {"ev": "reset", "worker": w, "device": 2, "session": "0x22",
+         "resume": True, "honored": True},
+        {"ev": "upload", "worker": w, "device": 2, "session": "0x22", "req": 1,
+         "start": 0, "plen": 3, "data": hidden_hex(4)},
+        {"ev": "infer", "worker": w, "device": 2, "session": "0x22", "req": 1,
+         "pos": 3, "plen": 3},
+        {"ev": "park", "worker": w, "device": 2, "req": 1, "pos": 3},
+        {"ev": "pass", "worker": w, "devices": 1, "items": 0},
+        {"ev": "token", "worker": w, "device": 2, "req": 1, "pos": 3,
+         "token": token(3), "conf_bits": CONF_BITS},
+        {"ev": "evict", "worker": w, "device": 1},
+        # --- both requests end; worker 0 reports its final counters
+        {"ev": "end", "worker": w, "device": 1, "session": "0x11", "req": 1},
+        {"ev": "end", "worker": w, "device": 2, "session": "0x22", "req": 1},
+        {"ev": "worker_stats", "worker": w, "served": 4, "uploads": 4,
+         "resumed": 1, "stale_resumes": 0, "evictions": 3, "ttl_reaps": 0,
+         "replays": 1},
+    ]
+    with open(out, "w") as f:
+        for seq, ev in enumerate(events):
+            line = {"v": 1, "seq": seq, "t_us": 1000 + 250 * seq}
+            line.update(ev)
+            f.write(json.dumps(line) + "\n")
+    print(f"wrote {len(events)} events to {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -263,8 +263,13 @@ fn main() {
                     let (server_end, _) = listener.accept().unwrap();
                     handle.register(server_end).unwrap();
                     t.send(
-                        &Message::Hello { device_id: i, session: 1, channel: Channel::Infer }
-                            .encode(),
+                        &Message::Hello {
+                            device_id: i,
+                            session: 1,
+                            channel: Channel::Infer,
+                            resume: false,
+                        }
+                        .encode(),
                     )
                     .unwrap();
                     assert_eq!(t.recv().unwrap(), Message::Ack.encode());
@@ -282,6 +287,74 @@ fn main() {
                 sched.shutdown();
             }
         }
+    }
+
+    println!("\n== reactor frame route: trace off vs on ==");
+    {
+        // A Ping answered in-reactor is the purest frame-route cycle
+        // (no scheduler hop): the pair bounds what `CE_TRACE` costs per
+        // frame when recording, and documents that the off path stays
+        // a no-op (a None sink is two branch tests per frame).
+        use ce_collm::config::ReactorConfig;
+        use ce_collm::coordinator::protocol::Channel;
+        use ce_collm::net::reactor::Reactor;
+        use ce_collm::trace::TraceSink;
+        let trace_path = std::env::temp_dir()
+            .join(format!("ce_bench_trace_{}.jsonl", std::process::id()))
+            .display()
+            .to_string();
+        for traced in [false, true] {
+            let dims = test_manifest().model;
+            let sdims = dims.clone();
+            let sched = Scheduler::spawn(
+                dims.clone(),
+                CloudConfig::default(),
+                Arc::new(move || {
+                    let sdims = sdims.clone();
+                    let f: SessionFactory = Box::new(move |_| {
+                        Ok(Box::new(MockCloud::new(MockOracle::new(1), sdims.clone())) as _)
+                    });
+                    Ok(f)
+                }),
+            )
+            .unwrap();
+            let sink = if traced { Some(TraceSink::to_file(&trace_path).unwrap()) } else { None };
+            let reactor = Reactor::spawn_traced(
+                sched.router(),
+                dims,
+                ReactorConfig { shards: 1, ..ReactorConfig::default() },
+                None,
+                sink,
+            )
+            .unwrap();
+            let handle = reactor.handle();
+            let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            let mut t = TcpTransport::connect(&addr.to_string()).unwrap();
+            let (server_end, _) = listener.accept().unwrap();
+            handle.register(server_end).unwrap();
+            t.send(
+                &Message::Hello { device_id: 1, session: 1, channel: Channel::Infer, resume: false }
+                    .encode(),
+            )
+            .unwrap();
+            assert_eq!(t.recv().unwrap(), Message::Ack.encode());
+            let label = if traced {
+                "reactor frame route: ping round trip (trace on)"
+            } else {
+                "reactor frame route: ping round trip (trace off)"
+            };
+            let mut nonce = 0u64;
+            results.push(bench(label, 0.2 * scale, || {
+                nonce += 1;
+                t.send(&Message::Ping { nonce }.encode()).unwrap();
+                t.recv().unwrap()
+            }));
+            drop(t);
+            reactor.shutdown();
+            sched.shutdown();
+        }
+        let _ = std::fs::remove_file(&trace_path);
     }
 
     println!("\n== exit policy ==");

@@ -367,6 +367,15 @@ pub struct CloudConfig {
     /// Connection-reactor bounds (max connections, write-queue cap,
     /// read-pause backpressure threshold).
     pub reactor: ReactorConfig,
+    /// Deterministic trace recording (see [`crate::trace`]): `Some(path)`
+    /// opens a JSONL [`TraceSink`](crate::trace::TraceSink) at spawn and
+    /// taps every scheduler event and (when the server wires it through)
+    /// every reactor frame into it.  `None` (the default) falls back to
+    /// the `CE_TRACE` env var, and with neither set tracing is off — the
+    /// hot path pays a single `Option` check per event site.  The path is
+    /// `&'static str` so the config stays `Copy`; CLI callers leak the
+    /// argument string (a one-off, process-lifetime allocation).
+    pub trace: Option<&'static str>,
 }
 
 impl Default for CloudConfig {
@@ -378,6 +387,7 @@ impl Default for CloudConfig {
             memory_budget_bytes: None,
             session_ttl_s: None,
             reactor: ReactorConfig::default(),
+            trace: None,
         }
     }
 }
@@ -472,6 +482,12 @@ mod tests {
         let c = CloudConfig::default();
         assert!(c.memory_budget_bytes.is_none());
         assert!(c.session_ttl_s.is_none());
+    }
+
+    #[test]
+    fn trace_is_off_by_default() {
+        // recording must be strictly opt-in (config or CE_TRACE env)
+        assert_eq!(CloudConfig::default().trace, None);
     }
 
     #[test]

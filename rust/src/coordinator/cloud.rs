@@ -88,7 +88,17 @@ impl CloudServer {
             .context("no listener bound")?
             .local_addr()?;
         let scheduler = Scheduler::spawn(dims.clone(), cfg, Arc::new(builder))?;
-        let reactor = Reactor::spawn_fleet(scheduler.router(), dims, cfg.reactor, listeners, mode)?;
+        // the fleet shares the scheduler's sink so reactor frames and
+        // scheduler events interleave in one seq-ordered recording
+        let sink = scheduler.trace_sink();
+        let reactor = Reactor::spawn_fleet_traced(
+            scheduler.router(),
+            dims,
+            cfg.reactor,
+            listeners,
+            mode,
+            sink,
+        )?;
         Ok(CloudServer { addr: bound, scheduler: Some(scheduler), reactor: Some(reactor) })
     }
 
@@ -108,7 +118,9 @@ impl CloudServer {
     {
         let addr = listener.local_addr()?;
         let scheduler = Scheduler::spawn(dims.clone(), cfg, Arc::new(builder))?;
-        let reactor = Reactor::spawn(scheduler.router(), dims, cfg.reactor, Some(listener))?;
+        let sink = scheduler.trace_sink();
+        let reactor =
+            Reactor::spawn_traced(scheduler.router(), dims, cfg.reactor, Some(listener), sink)?;
         Ok(CloudServer { addr, scheduler: Some(scheduler), reactor: Some(reactor) })
     }
 

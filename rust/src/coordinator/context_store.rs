@@ -332,12 +332,13 @@ impl ContextStore {
     /// `protected` devices (the scheduler's parked set) and the single
     /// most-recently-touched device are never evicted; if nothing
     /// evictable remains the shard stays over budget rather than break a
-    /// live pass or livelock a replaying device.  Returns the number of
-    /// devices evicted.  The budget check is O(1) per pass; victim
-    /// selection walks the index only while actually evicting.
-    pub fn enforce_budget(&mut self, protected: impl Fn(u64) -> bool) -> usize {
-        let Some(budget) = self.budget else { return 0 };
-        let mut evicted_n = 0;
+    /// live pass or livelock a replaying device.  Returns the evicted
+    /// device ids in eviction order (the scheduler's trace tap emits one
+    /// `evict` event per victim).  The budget check is O(1) per pass;
+    /// victim selection walks the index only while actually evicting.
+    pub fn enforce_budget(&mut self, protected: impl Fn(u64) -> bool) -> Vec<u64> {
+        let Some(budget) = self.budget else { return Vec::new() };
+        let mut victims = Vec::new();
         while self.resident > budget {
             // ties broken by device id so eviction order is deterministic
             // even when the monotonic clock is coarse
@@ -353,29 +354,30 @@ impl ContextStore {
             let Some(victim) = victim else { break };
             self.evict(victim);
             self.evictions += 1;
-            evicted_n += 1;
+            victims.push(victim);
         }
-        evicted_n
+        victims
     }
 
     /// Evict devices idle past the TTL (explicit `now` so tests need no
     /// sleeping).  Same protection rule as the budget path, minus the
     /// MRU exemption — an MRU device idle past a whole TTL is still dead
-    /// weight.  Returns the number of devices reaped.
-    pub fn reap_ttl(&mut self, now: Instant, protected: impl Fn(u64) -> bool) -> usize {
-        let Some(ttl) = self.ttl else { return 0 };
-        let stale: Vec<u64> = self
+    /// weight.  Returns the reaped device ids (in deterministic id order,
+    /// for the scheduler's trace tap).
+    pub fn reap_ttl(&mut self, now: Instant, protected: impl Fn(u64) -> bool) -> Vec<u64> {
+        let Some(ttl) = self.ttl else { return Vec::new() };
+        let mut stale: Vec<u64> = self
             .last_touch
             .iter()
             .filter(|&(&d, &t)| !protected(d) && now.saturating_duration_since(t) >= ttl)
             .map(|(&d, _)| d)
             .collect();
-        let n = stale.len();
-        for d in stale {
+        stale.sort_unstable();
+        for &d in &stale {
             self.evict(d);
             self.ttl_reaps += 1;
         }
-        n
+        stale
     }
 
     /// Earliest instant at which a currently resident, *unprotected*
@@ -449,8 +451,8 @@ mod tests {
             settle(&mut store, &mut f, dev, 3);
         }
         assert!(store.resident_bytes() > 2 * kv3);
-        let n = store.enforce_budget(|_| false);
-        assert_eq!(n, 1);
+        let victims = store.enforce_budget(|_| false);
+        assert_eq!(victims, vec![1]);
         // device 1 is the least recently touched -> evicted first
         assert_eq!(store.evicted_req(1), Some(1));
         assert!(store.evicted_req(2).is_none() && store.evicted_req(3).is_none());
@@ -467,14 +469,14 @@ mod tests {
         settle(&mut store, &mut f, 2, 3);
         settle(&mut store, &mut f, 3, 3); // MRU
         // device 1 is protected (parked), device 3 is MRU: only 2 goes
-        let n = store.enforce_budget(|d| d == 1);
-        assert_eq!(n, 1);
+        let victims = store.enforce_budget(|d| d == 1);
+        assert_eq!(victims, vec![2]);
         assert!(store.evicted_req(1).is_none(), "protected device evicted");
         assert_eq!(store.evicted_req(2), Some(1));
         assert!(store.evicted_req(3).is_none(), "MRU device evicted");
         // still over budget, but nothing evictable remains -> no livelock
         assert!(store.resident_bytes() > 1);
-        assert_eq!(store.enforce_budget(|d| d == 1), 0);
+        assert!(store.enforce_budget(|d| d == 1).is_empty());
     }
 
     #[test]
@@ -553,9 +555,9 @@ mod tests {
         let armed =
             store.next_ttl_deadline(|_| false).expect("TTL armed while state is resident");
         // not idle long enough: nothing reaped
-        assert_eq!(store.reap_ttl(Instant::now(), |_| false), 0);
+        assert!(store.reap_ttl(Instant::now(), |_| false).is_empty());
         // idle past the TTL: reaped (and recoverable)
-        assert_eq!(store.reap_ttl(armed + Duration::from_secs(1), |_| false), 1);
+        assert_eq!(store.reap_ttl(armed + Duration::from_secs(1), |_| false), vec![1]);
         assert_eq!(store.evicted_req(1), Some(1));
         assert_eq!(store.resident_bytes(), 0);
         let s = store.stats();
@@ -567,7 +569,7 @@ mod tests {
         // a protected (parked) device survives even past the TTL...
         settle(&mut store, &mut f, 2, 3);
         let far = Instant::now() + Duration::from_secs(3600);
-        assert_eq!(store.reap_ttl(far, |d| d == 2), 0);
+        assert!(store.reap_ttl(far, |d| d == 2).is_empty());
         // ...and never arms the wake-up deadline (the reaper would skip
         // it, so arming an expired deadline would spin the worker)
         assert!(store.next_ttl_deadline(|d| d == 2).is_none());
@@ -603,8 +605,10 @@ mod tests {
         for dev in 0..8u64 {
             settle(&mut store, &mut f, dev, 3);
         }
-        assert_eq!(store.enforce_budget(|_| false), 0);
-        assert_eq!(store.reap_ttl(Instant::now() + Duration::from_secs(3600), |_| false), 0);
+        assert!(store.enforce_budget(|_| false).is_empty());
+        assert!(store
+            .reap_ttl(Instant::now() + Duration::from_secs(3600), |_| false)
+            .is_empty());
         assert!(store.next_ttl_deadline(|_| false).is_none());
         let s = store.stats();
         assert_eq!((s.evictions, s.ttl_reaps, s.replays), (0, 0, 0));

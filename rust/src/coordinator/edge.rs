@@ -32,7 +32,7 @@
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -47,6 +47,7 @@ use crate::net::codec::frame_wire_len;
 use crate::net::transport::{TcpTransport, Transport};
 use crate::quant::{self, Precision};
 use crate::runtime::traits::EdgeEngine;
+use crate::trace::{Ev, TraceSink, EDGE_TRACE_ENV};
 use crate::util::rng::Rng;
 
 /// One generated token with its provenance (Table 1 columns).
@@ -102,6 +103,26 @@ pub type DialFn =
 /// channel dead.
 const PONG_WAIT: Duration = Duration::from_secs(5);
 
+/// Process-wide edge-side trace recorder, resolved once from
+/// [`EDGE_TRACE_ENV`].  Separate from the cloud sink because edge and
+/// cloud are typically separate processes — and in-process tests want
+/// the two recordings distinguishable anyway.  A path that cannot be
+/// opened logs a warning and leaves tracing off.
+fn edge_sink() -> Option<&'static Arc<TraceSink>> {
+    static SINK: OnceLock<Option<Arc<TraceSink>>> = OnceLock::new();
+    SINK.get_or_init(|| match std::env::var(EDGE_TRACE_ENV) {
+        Ok(p) if !p.trim().is_empty() => match TraceSink::to_file(&p) {
+            Ok(s) => Some(s),
+            Err(e) => {
+                log::warn!("edge trace disabled: {e:#}");
+                None
+            }
+        },
+        _ => None,
+    })
+    .as_ref()
+}
+
 /// The cloud half of the client: dual channels + upload thread, plus
 /// the reconnect state machine (endpoint list, dialer, backoff policy).
 pub struct CloudLink {
@@ -144,6 +165,14 @@ pub struct CloudLink {
     /// reconnects, so [`CloudLink::close`] reports the link-lifetime
     /// total rather than only the final uploader's share.
     retired_upload_bytes: u64,
+    /// Per-channel data-frame ordinals for the edge trace tap
+    /// ([`EDGE_TRACE_ENV`]) — the unit
+    /// [`anchored_plan`](crate::trace::anchored_plan) keys client-side
+    /// fault plans on.  Atomics because uploads are enqueued through
+    /// `&self`.
+    trace_upload_n: AtomicU64,
+    trace_infer_send_n: AtomicU64,
+    trace_infer_recv_n: AtomicU64,
 }
 
 /// Send both `Hello`s and wait for both `Ack`s.  Waiting for the
@@ -266,6 +295,9 @@ impl CloudLink {
             failovers: 0,
             ping_rtt_last_ms: 0.0,
             retired_upload_bytes: 0,
+            trace_upload_n: AtomicU64::new(0),
+            trace_infer_send_n: AtomicU64::new(0),
+            trace_infer_recv_n: AtomicU64::new(0),
         })
     }
 
@@ -331,6 +363,9 @@ impl CloudLink {
                         failovers: 0,
                         ping_rtt_last_ms: 0.0,
                         retired_upload_bytes: 0,
+                        trace_upload_n: AtomicU64::new(0),
+                        trace_infer_send_n: AtomicU64::new(0),
+                        trace_infer_recv_n: AtomicU64::new(0),
                     });
                 }
                 Err(e) => last_err = Some(e),
@@ -423,6 +458,13 @@ impl CloudLink {
                         self.upload_tx = upload_tx;
                         self.uploader = Some(uploader);
                         self.reconnects += 1;
+                        if let Some(sink) = edge_sink() {
+                            sink.emit(
+                                Ev::new("edge_reconnect")
+                                    .u("device", self.device_id)
+                                    .u("round", round as u64),
+                            );
+                        }
                         if round > 0 {
                             self.failovers += 1;
                             log::info!(
@@ -445,7 +487,46 @@ impl CloudLink {
             })
     }
 
+    /// Emit one edge-side trace event when [`EDGE_TRACE_ENV`] is active.
+    fn trace_edge(&self, ev: &str, chan: &str, n: u64, frame: &[u8]) {
+        if let Some(sink) = edge_sink() {
+            sink.emit(
+                Ev::new(ev)
+                    .u("device", self.device_id)
+                    .s("chan", chan)
+                    .u("n", n)
+                    .u("tag", frame.first().copied().unwrap_or(0) as u64)
+                    .u("len", frame.len() as u64),
+            );
+        }
+    }
+
+    /// Trace an infer-channel send.  Call right before putting `frame`
+    /// on the wire so the recorded per-channel ordinal matches the send
+    /// order.
+    fn trace_infer_send(&self, frame: &[u8]) {
+        if edge_sink().is_some() {
+            let n = self.trace_infer_send_n.fetch_add(1, Ordering::Relaxed);
+            self.trace_edge("edge_send", "infer", n, frame);
+        }
+    }
+
+    /// Trace an infer-channel receive (call once per received frame).
+    fn trace_infer_recv(&self, frame: &[u8]) {
+        if edge_sink().is_some() {
+            let n = self.trace_infer_recv_n.fetch_add(1, Ordering::Relaxed);
+            self.trace_edge("edge_recv", "infer", n, frame);
+        }
+    }
+
     fn enqueue_upload(&self, msg: Message) {
+        if edge_sink().is_some() {
+            // encode only on the traced path; the ordinal is the enqueue
+            // order, which the FIFO uploader preserves on the wire
+            let frame = msg.encode();
+            let n = self.trace_upload_n.fetch_add(1, Ordering::Relaxed);
+            self.trace_edge("edge_send", "upload", n, &frame);
+        }
         let _ = self.upload_tx.send(UploadJob::Send(msg));
     }
 
@@ -581,36 +662,37 @@ impl ReplayRing {
     }
 }
 
-/// Send the full `0..=pos` hidden-state history on the infer channel as
-/// one `UploadHidden` (start 0, same request id), with the standard byte
-/// accounting.  One definition serves both users of the shape — the
-/// synchronous-retransmit ablations and the eviction replay — so the
-/// wire format and counters cannot drift apart.
-#[allow(clippy::too_many_arguments)]
-fn send_full_history(
-    infer: &mut dyn Transport,
-    ring: &ReplayRing,
-    device_id: u64,
-    req_id: u32,
-    pos: usize,
-    prompt_len: usize,
-    d_model: usize,
-    precision: Precision,
-    counters: &mut RunCounters,
-) -> Result<()> {
-    let all = ring.history_upto(pos).with_context(|| {
-        format!("hidden-state history no longer reaches position 0 at pos {pos} (ring overflow)")
-    })?;
-    anyhow::ensure!(
-        all.len() == (pos + 1) * d_model,
-        "history incomplete: {} floats for pos {pos}",
-        all.len()
-    );
-    let payload = quant::pack(&all, precision);
-    counters.bytes_up += frame_wire_len(UPLOAD_HDR_LEN + payload.len()) as u64;
-    infer.send(
-        &Message::UploadHidden {
-            device_id,
+impl CloudLink {
+    /// Send the full `0..=pos` hidden-state history on the infer channel
+    /// as one `UploadHidden` (start 0, same request id), with the
+    /// standard byte accounting.  One definition serves both users of
+    /// the shape — the synchronous-retransmit ablations and the eviction
+    /// replay — so the wire format and counters cannot drift apart.
+    #[allow(clippy::too_many_arguments)]
+    fn send_full_history(
+        &mut self,
+        ring: &ReplayRing,
+        req_id: u32,
+        pos: usize,
+        prompt_len: usize,
+        d_model: usize,
+        precision: Precision,
+        counters: &mut RunCounters,
+    ) -> Result<()> {
+        let all = ring.history_upto(pos).with_context(|| {
+            format!(
+                "hidden-state history no longer reaches position 0 at pos {pos} (ring overflow)"
+            )
+        })?;
+        anyhow::ensure!(
+            all.len() == (pos + 1) * d_model,
+            "history incomplete: {} floats for pos {pos}",
+            all.len()
+        );
+        let payload = quant::pack(&all, precision);
+        counters.bytes_up += frame_wire_len(UPLOAD_HDR_LEN + payload.len()) as u64;
+        let frame = Message::UploadHidden {
+            device_id: self.device_id,
             req_id,
             start_pos: 0,
             count: (pos + 1) as u32,
@@ -618,8 +700,10 @@ fn send_full_history(
             precision,
             payload,
         }
-        .encode(),
-    )
+        .encode();
+        self.trace_infer_send(&frame);
+        self.infer.send(&frame)
+    }
 }
 
 /// The edge client: engine + policy + optional cloud link.
@@ -824,7 +908,9 @@ impl<E: EdgeEngine> EdgeClient<E> {
             if !link.flush_uploads_within(Some(flush_cap)) {
                 log::warn!("upload flush timed out during teardown");
             }
-            let _ = link.infer.send(&Message::EndSession { device_id, req_id }.encode());
+            let end = Message::EndSession { device_id, req_id }.encode();
+            link.trace_infer_send(&end);
+            let _ = link.infer.send(&end);
         }
 
         cost.total_s = wall0.elapsed().as_secs_f64();
@@ -1013,23 +1099,12 @@ impl<E: EdgeEngine> EdgeClient<E> {
         counters: &mut RunCounters,
         ring: &ReplayRing,
     ) -> Result<()> {
-        let device_id = self.cfg.device_id;
         let precision = self.precision();
         let dims_d = self.engine.dims().d_model;
         let t0 = Instant::now();
         let link = self.link.as_mut().context("collaborative policy without cloud link")?;
         link.reestablish()?;
-        send_full_history(
-            &mut *link.infer,
-            ring,
-            device_id,
-            req_id,
-            pos,
-            prompt_len,
-            dims_d,
-            precision,
-            counters,
-        )?;
+        link.send_full_history(ring, req_id, pos, prompt_len, dims_d, precision, counters)?;
         cost.comm_s += t0.elapsed().as_secs_f64();
         Ok(())
     }
@@ -1060,17 +1135,7 @@ impl<E: EdgeEngine> EdgeClient<E> {
         if !flags.content_manager || !flags.parallel_upload {
             let t0 = Instant::now();
             let link = self.link.as_mut().context("collaborative policy without cloud link")?;
-            send_full_history(
-                &mut *link.infer,
-                ring,
-                device_id,
-                req_id,
-                pos,
-                prompt_len,
-                dims_d,
-                precision,
-                counters,
-            )?;
+            link.send_full_history(ring, req_id, pos, prompt_len, dims_d, precision, counters)?;
             cost.comm_s += t0.elapsed().as_secs_f64();
         }
         // with parallel upload there is nothing to wait for here: the
@@ -1091,6 +1156,7 @@ impl<E: EdgeEngine> EdgeClient<E> {
         };
         let req_frame = req.encode();
         counters.bytes_up += frame_wire_len(req_frame.len()) as u64;
+        link.trace_infer_send(&req_frame);
         link.infer.send(&req_frame)?;
         let mut replays = 0usize;
         loop {
@@ -1104,6 +1170,7 @@ impl<E: EdgeEngine> EdgeClient<E> {
                 },
                 None => link.infer.recv()?,
             };
+            link.trace_infer_recv(&frame);
             counters.bytes_down += frame_wire_len(frame.len()) as u64;
             let rtt = t0.elapsed().as_secs_f64();
             match Message::decode(&frame)? {
@@ -1136,18 +1203,11 @@ impl<E: EdgeEngine> EdgeClient<E> {
                     // channel (ordered ahead of the re-issued request),
                     // then ask again: the cloud re-prefills and the
                     // token comes out bit-identical
-                    send_full_history(
-                        &mut *link.infer,
-                        ring,
-                        device_id,
-                        req_id,
-                        pos,
-                        prompt_len,
-                        dims_d,
-                        precision,
-                        counters,
+                    link.send_full_history(
+                        ring, req_id, pos, prompt_len, dims_d, precision, counters,
                     )?;
                     counters.bytes_up += frame_wire_len(req_frame.len()) as u64;
+                    link.trace_infer_send(&req_frame);
                     link.infer.send(&req_frame)?;
                     continue;
                 }

@@ -67,6 +67,7 @@ use crate::model::manifest::ModelDims;
 use crate::net::reactor::ReactorStats;
 use crate::quant::{self, Precision};
 use crate::runtime::traits::{BatchItem, CloudEngine};
+use crate::trace::{Ev, TraceSink};
 
 pub use crate::coordinator::context_store::SessionFactory;
 
@@ -260,6 +261,13 @@ pub struct CloudStats {
     /// imbalance — a skewed `SO_REUSEPORT` hash, one hot shard — stays
     /// observable next to the aggregate.
     pub reactor_shards: Vec<ReactorStats>,
+    /// Trace events the workers emitted into the [`TraceSink`] (0 when
+    /// recording is off).
+    pub trace_events: u64,
+    /// Trace events dropped because the sink's bounded queue was full —
+    /// a saturated recorder degrades visibly instead of ever blocking a
+    /// worker.
+    pub trace_dropped: u64,
 }
 
 impl CloudStats {
@@ -280,6 +288,8 @@ impl CloudStats {
         self.workers += o.workers;
         self.reactor.merge(&o.reactor);
         self.reactor_shards.extend(o.reactor_shards.iter().cloned());
+        self.trace_events += o.trace_events;
+        self.trace_dropped += o.trace_dropped;
     }
 }
 
@@ -336,6 +346,7 @@ impl Router {
 pub struct Scheduler {
     router: Router,
     handles: Vec<JoinHandle<CloudStats>>,
+    sink: Option<Arc<TraceSink>>,
 }
 
 impl Scheduler {
@@ -343,6 +354,25 @@ impl Scheduler {
     /// on each worker thread to construct that worker's session factory.
     pub fn spawn(dims: ModelDims, cfg: CloudConfig, builder: FactoryBuilder) -> Result<Scheduler> {
         let workers = cfg.workers.max(1);
+        // Trace recording resolves once, here: `run_meta` is the first
+        // event of every recording (sequence 0), pinning everything the
+        // replayer needs to rebuild this deployment.  The budget is the
+        // GLOBAL bound — the replayer re-splits it exactly like the loop
+        // below does.
+        let sink = TraceSink::resolve(cfg.trace);
+        if let Some(s) = &sink {
+            let mut ev = Ev::new("run_meta")
+                .u("workers", workers as u64)
+                .u("d_model", dims.d_model as u64)
+                .u("max_catchup", cfg.max_catchup_per_pass.max(1) as u64);
+            if let Some(b) = cfg.memory_budget_bytes {
+                ev = ev.u("budget", b);
+            }
+            if let Some(t) = cfg.session_ttl_s {
+                ev = ev.f("ttl_s", t);
+            }
+            s.emit(ev);
+        }
         // the global memory budget splits into even per-worker shares:
         // static device sharding makes each shard's enforcement
         // independent, and the shares sum back to the global bound
@@ -358,6 +388,7 @@ impl Scheduler {
             let builder = Arc::clone(&builder);
             let dims = dims.clone();
             let wdepth = Arc::clone(&depth);
+            let wsink = sink.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("cloud-worker-{w}"))
                 .spawn(move || {
@@ -368,17 +399,24 @@ impl Scheduler {
                             return CloudStats::default();
                         }
                     };
-                    Worker::new(dims, factory, &wcfg, wdepth).run(rx)
+                    Worker::new(dims, factory, &wcfg, wdepth, w as u64, wsink).run(rx)
                 })?;
             txs.push(tx);
             depths.push(depth);
             handles.push(handle);
         }
-        Ok(Scheduler { router: Router { txs, depths }, handles })
+        Ok(Scheduler { router: Router { txs, depths }, handles, sink })
     }
 
     pub fn router(&self) -> Router {
         self.router.clone()
+    }
+
+    /// The trace sink this pool records into, if recording is on — the
+    /// serving shell hands the same sink to the reactor fleet so frame
+    /// and scheduler events interleave in one sequence.
+    pub fn trace_sink(&self) -> Option<Arc<TraceSink>> {
+        self.sink.clone()
     }
 
     /// Aggregate statistics across the pool.
@@ -454,6 +492,11 @@ struct Worker {
     /// Shared with [`Router::queue_depth`]: decremented once per message
     /// this worker takes off its queue.
     depth: Arc<AtomicUsize>,
+    /// This worker's index, stamped into every trace event it emits.
+    windex: u64,
+    /// Trace recorder; `None` (the default) keeps the hot path at one
+    /// `Option` check per tap site.
+    sink: Option<Arc<TraceSink>>,
     stats: CloudStats,
 }
 
@@ -463,6 +506,8 @@ impl Worker {
         factory: SessionFactory,
         cfg: &CloudConfig,
         depth: Arc<AtomicUsize>,
+        windex: u64,
+        sink: Option<Arc<TraceSink>>,
     ) -> Worker {
         Worker {
             store: ContextStore::new(&dims, cfg.memory_budget_bytes, cfg.session_ttl_s),
@@ -472,7 +517,23 @@ impl Worker {
             max_park: Duration::from_secs_f64(cfg.max_park_s.max(0.001)),
             max_catchup: cfg.max_catchup_per_pass.max(1),
             depth,
+            windex,
+            sink,
             stats: CloudStats { workers: 1, ..CloudStats::default() },
+        }
+    }
+
+    /// Emit one trace event when recording is on.  Event construction
+    /// (the closure) only runs behind the `Option` check, and a
+    /// saturated sink drops the event and counts it — a worker never
+    /// blocks on the recorder.
+    fn trace_with(&mut self, build: impl FnOnce(u64) -> Ev) {
+        if let Some(sink) = &self.sink {
+            if sink.emit(build(self.windex)) {
+                self.stats.trace_events += 1;
+            } else {
+                self.stats.trace_dropped += 1;
+            }
         }
     }
 
@@ -573,6 +634,20 @@ impl Worker {
             }
         }
         self.refresh_gauges();
+        // final per-worker counters: the replayer checks its own end
+        // state against the sum of these
+        let s = self.stats.clone();
+        self.trace_with(|w| {
+            Ev::new("worker_stats")
+                .u("worker", w)
+                .u("served", s.requests_served)
+                .u("uploads", s.uploads)
+                .u("resumed", s.sessions_resumed)
+                .u("stale_resumes", s.stale_resumes)
+                .u("evictions", s.context.evictions)
+                .u("ttl_reaps", s.context.ttl_reaps)
+                .u("replays", s.context.replays)
+        });
         self.stats
     }
 
@@ -596,6 +671,18 @@ impl Worker {
                         return true;
                     }
                 };
+                // recorded post-unpack: the trace carries the canonical
+                // f32 payload whatever precision rode the wire
+                self.trace_with(|w| {
+                    Ev::new("upload")
+                        .u("worker", w)
+                        .u("device", device)
+                        .hex("session", session)
+                        .u("req", req_id as u64)
+                        .u("start", start_pos as u64)
+                        .u("plen", prompt_len as u64)
+                        .hex_f32s("data", &hiddens)
+                });
                 if let Err(e) =
                     self.store.upload_owned(device, req_id, start_pos, prompt_len, hiddens)
                 {
@@ -603,8 +690,25 @@ impl Worker {
                 }
             }
             SchedMsg::Infer { device, session, req_id, pos, prompt_len, deadline, reply } => {
+                self.trace_with(|w| {
+                    Ev::new("infer")
+                        .u("worker", w)
+                        .u("device", device)
+                        .hex("session", session)
+                        .u("req", req_id as u64)
+                        .u("pos", pos as u64)
+                        .u("plen", prompt_len as u64)
+                });
                 if self.stale_session(device, session) {
                     self.stats.requests_served += 1;
+                    self.trace_with(|w| {
+                        Ev::new("infer_error")
+                            .u("worker", w)
+                            .u("device", device)
+                            .u("req", req_id as u64)
+                            .u("pos", pos as u64)
+                            .s("kind", "stale")
+                    });
                     let _ = reply.send(Err(anyhow!(
                         "infer request {req_id} from a stale connection of device {device}"
                     )));
@@ -619,23 +723,44 @@ impl Worker {
                     // requests_served — the same logical request comes
                     // back and is served (or fails) exactly once; the
                     // bounce is visible as `context.replays`.
+                    self.trace_with(|w| {
+                        Ev::new("evicted_notice")
+                            .u("worker", w)
+                            .u("device", device)
+                            .u("req", req_id as u64)
+                            .u("pos", pos as u64)
+                    });
                     reply.send(Ok(InferOutcome::Evicted));
                     return true;
                 }
                 let cap = Instant::now() + self.max_park;
                 let deadline = deadline.map_or(cap, |d| d.min(cap));
+                self.trace_with(|w| {
+                    Ev::new("park")
+                        .u("worker", w)
+                        .u("device", device)
+                        .u("req", req_id as u64)
+                        .u("pos", pos as u64)
+                });
                 self.parked
                     .entry(device)
                     .or_default()
                     .push(Parked { req_id, pos, prompt_len, deadline, reply });
             }
             SchedMsg::End { device, session, req_id } => {
+                self.trace_with(|w| {
+                    Ev::new("end")
+                        .u("worker", w)
+                        .u("device", device)
+                        .hex("session", session)
+                        .u("req", req_id as u64)
+                });
                 if self.stale_session(device, session) {
                     log::debug!("ignoring stale-session EndSession from device {device}");
                     return true;
                 }
                 self.store.end_request(device, req_id);
-                if let Some(queue) = self.parked.get_mut(&device) {
+                if let Some(mut queue) = self.parked.remove(&device) {
                     // fail parked requests of the ended (or older)
                     // request; later ones keep waiting for coverage
                     let mut i = 0;
@@ -643,6 +768,14 @@ impl Worker {
                         if queue[i].req_id <= req_id {
                             let p = queue.remove(i);
                             self.stats.requests_served += 1;
+                            self.trace_with(|w| {
+                                Ev::new("infer_error")
+                                    .u("worker", w)
+                                    .u("device", device)
+                                    .u("req", p.req_id as u64)
+                                    .u("pos", p.pos as u64)
+                                    .s("kind", "end")
+                            });
                             let _ = p.reply.send(Err(anyhow!(
                                 "request {} for device {device} ended",
                                 p.req_id
@@ -651,8 +784,8 @@ impl Worker {
                             i += 1;
                         }
                     }
-                    if queue.is_empty() {
-                        self.parked.remove(&device);
+                    if !queue.is_empty() {
+                        self.parked.insert(device, queue);
                     }
                 }
             }
@@ -660,6 +793,14 @@ impl Worker {
                 let honored = resume
                     && session != 0
                     && self.session_of.get(&device) == Some(&session);
+                self.trace_with(|w| {
+                    Ev::new("reset")
+                        .u("worker", w)
+                        .u("device", device)
+                        .hex("session", session)
+                        .b("resume", resume)
+                        .b("honored", honored)
+                });
                 if honored {
                     self.store.suspend_device(device);
                     self.stats.sessions_resumed += 1;
@@ -677,6 +818,14 @@ impl Worker {
                 if let Some(queue) = self.parked.remove(&device) {
                     for p in queue {
                         self.stats.requests_served += 1;
+                        self.trace_with(|w| {
+                            Ev::new("infer_error")
+                                .u("worker", w)
+                                .u("device", device)
+                                .u("req", p.req_id as u64)
+                                .u("pos", p.pos as u64)
+                                .s("kind", "reset")
+                        });
                         let _ = p.reply.send(Err(anyhow!(
                             "device {device} reconnected; request {} dropped",
                             p.req_id
@@ -703,9 +852,14 @@ impl Worker {
     /// to be served by the next pass.
     fn sweep_store(&mut self) {
         let parked = &self.parked;
-        let store = &mut self.store;
-        store.reap_ttl(Instant::now(), |d| parked.contains_key(&d));
-        store.enforce_budget(|d| parked.contains_key(&d));
+        let reaped = self.store.reap_ttl(Instant::now(), |d| parked.contains_key(&d));
+        let evicted = self.store.enforce_budget(|d| parked.contains_key(&d));
+        for d in reaped {
+            self.trace_with(|w| Ev::new("ttl_reap").u("worker", w).u("device", d));
+        }
+        for d in evicted {
+            self.trace_with(|w| Ev::new("evict").u("worker", w).u("device", d));
+        }
     }
 
     fn refresh_gauges(&mut self) {
@@ -733,23 +887,34 @@ impl Worker {
     /// error reply keeps its infer connection drained and releases the
     /// parking slot.
     fn expire_overdue(&mut self, now: Instant) {
-        for (device, queue) in self.parked.iter_mut() {
+        let mut expired: Vec<(u64, Parked)> = Vec::new();
+        for (&device, queue) in self.parked.iter_mut() {
             let mut i = 0;
             while i < queue.len() {
                 if queue[i].deadline <= now {
-                    let p = queue.remove(i);
-                    self.stats.requests_served += 1;
-                    self.stats.deadline_expired += 1;
-                    let _ = p.reply.send(Err(anyhow!(
-                        "deadline expired waiting for uploads from device {device} (pos {})",
-                        p.pos
-                    )));
+                    expired.push((device, queue.remove(i)));
                 } else {
                     i += 1;
                 }
             }
         }
         self.parked.retain(|_, queue| !queue.is_empty());
+        for (device, p) in expired {
+            self.stats.requests_served += 1;
+            self.stats.deadline_expired += 1;
+            self.trace_with(|w| {
+                Ev::new("infer_error")
+                    .u("worker", w)
+                    .u("device", device)
+                    .u("req", p.req_id as u64)
+                    .u("pos", p.pos as u64)
+                    .s("kind", "deadline")
+            });
+            let _ = p.reply.send(Err(anyhow!(
+                "deadline expired waiting for uploads from device {device} (pos {})",
+                p.pos
+            )));
+        }
     }
 
     /// Serve every parked request the current upload state covers —
@@ -770,7 +935,7 @@ impl Worker {
         let mut devices: Vec<u64> = self.parked.keys().copied().collect();
         devices.sort_unstable();
         for device in devices {
-            let Some(queue) = self.parked.get_mut(&device) else { continue };
+            let Some(mut queue) = self.parked.remove(&device) else { continue };
             let mut ready: Vec<Parked> = Vec::new();
             let mut i = 0;
             while i < queue.len() {
@@ -780,6 +945,14 @@ impl Worker {
                     Coverage::Stale => {
                         let p = queue.remove(i);
                         self.stats.requests_served += 1;
+                        self.trace_with(|w| {
+                            Ev::new("infer_error")
+                                .u("worker", w)
+                                .u("device", device)
+                                .u("req", p.req_id as u64)
+                                .u("pos", p.pos as u64)
+                                .s("kind", "stale")
+                        });
                         let _ = p.reply.send(Err(anyhow!(
                             "request {} from device {device} superseded by a newer request",
                             p.req_id
@@ -788,8 +961,8 @@ impl Worker {
                     Coverage::Waiting => i += 1,
                 }
             }
-            if queue.is_empty() {
-                self.parked.remove(&device);
+            if !queue.is_empty() {
+                self.parked.insert(device, queue);
             }
             if !ready.is_empty() {
                 batch.push((device, ready));
@@ -850,6 +1023,12 @@ impl Worker {
             self.stats.engine_passes += 1;
             self.stats.batched_items += pass_items;
             self.stats.batch_devices_max = self.stats.batch_devices_max.max(pass_devices);
+            self.trace_with(|w| {
+                Ev::new("pass")
+                    .u("worker", w)
+                    .u("devices", pass_devices as u64)
+                    .u("items", pass_items)
+            });
         }
 
         // --- fan results back out to the parked requests ------------------
@@ -860,11 +1039,30 @@ impl Worker {
                     for p in ready {
                         if let Some(&(token, conf)) = tokens.get(&p.pos) {
                             self.stats.requests_served += 1;
+                            // conf recorded as its exact f32 bit pattern:
+                            // "bit-identical" is checkable, not aspirational
+                            self.trace_with(|w| {
+                                Ev::new("token")
+                                    .u("worker", w)
+                                    .u("device", device)
+                                    .u("req", p.req_id as u64)
+                                    .u("pos", p.pos as u64)
+                                    .i("token", token as i64)
+                                    .u("conf_bits", conf.to_bits() as u64)
+                            });
                             p.reply.send_token(TokenOut { token, conf, compute_s: elapsed });
                         } else if p.pos < frontier {
                             // position consumed by an earlier pass and
                             // never re-requested: nothing left to compute
                             self.stats.requests_served += 1;
+                            self.trace_with(|w| {
+                                Ev::new("infer_error")
+                                    .u("worker", w)
+                                    .u("device", device)
+                                    .u("req", p.req_id as u64)
+                                    .u("pos", p.pos as u64)
+                                    .s("kind", "frontier")
+                            });
                             let _ = p
                                 .reply
                                 .send(Err(anyhow!("nothing to compute for pos {}", p.pos)));
@@ -879,6 +1077,14 @@ impl Worker {
                 Err(e) => {
                     for p in ready {
                         self.stats.requests_served += 1;
+                        self.trace_with(|w| {
+                            Ev::new("infer_error")
+                                .u("worker", w)
+                                .u("device", device)
+                                .u("req", p.req_id as u64)
+                                .u("pos", p.pos as u64)
+                                .s("kind", "engine")
+                        });
                         let _ = p.reply.send(Err(anyhow!("{e:#}")));
                     }
                 }

@@ -30,6 +30,7 @@ pub mod model;
 pub mod net;
 pub mod quant;
 pub mod runtime;
+pub mod trace;
 pub mod util;
 
 /// Convenience re-exports for examples and downstream users.

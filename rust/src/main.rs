@@ -8,11 +8,15 @@
 //!   generate <prompt>    collaborative generation, local engines
 //!   serve-cloud          run the cloud server (TCP)
 //!   run-edge <prompt>    run an edge client against a cloud server
+//!   trace-record <file>  record a short mock e2e run (TCP, CE_TRACE twin)
+//!   trace-replay <file>  replay a recorded trace, assert bit-identical
 //!   calibrate            measure per-call costs and print the cost model
 //!
 //! Common flags: --artifacts DIR (default "artifacts"), --prompts N,
 //! --repeats N, --max-new N, --link wifi|lte|fiber|lan|ideal,
 //! --threshold T, --clients N, --addr HOST:PORT, --seed N.
+
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
@@ -167,6 +171,11 @@ fn run() -> Result<()> {
             .model;
             let mut cfg = CloudConfig::with_workers(workers);
             cfg.reactor.shards = args.get_parse("shards", 0usize); // 0 = auto
+            if let Some(path) = args.get("trace") {
+                // config wants &'static str; the path lives for the whole
+                // process anyway (serve-cloud never returns)
+                cfg.trace = Some(Box::leak(path.to_string().into_boxed_str()));
+            }
             let art2 = artifacts.clone();
             // each worker loads its own stack on its own thread (PJRT is
             // thread-local); the builder runs once per worker.  bind()
@@ -224,6 +233,85 @@ fn run() -> Result<()> {
                 out.cost
             );
         }
+        "trace-record" => {
+            // a short mock-backed e2e serving run over real TCP with
+            // recording on — the CI twin of `serve-cloud --trace` (no
+            // artifacts needed); replay it with `trace-replay --seed N`
+            let out = args.positional.get(1).context(
+                "usage: trace-record <out.jsonl> [--seed N] [--max-new N] [--workers N]",
+            )?;
+            let seed: u64 = args.get_parse("seed", 1u64);
+            let workers: usize = args.get_parse("workers", 1);
+            let dims = ce_collm::model::manifest::test_manifest().model;
+            let mut cfg = CloudConfig::with_workers(workers);
+            cfg.trace = Some(Box::leak(out.to_string().into_boxed_str()));
+            let sdims = dims.clone();
+            let server = CloudServer::bind("127.0.0.1:0", dims.clone(), cfg, move || {
+                let sdims = sdims.clone();
+                let f: SessionFactory = Box::new(move |_device| {
+                    Ok(Box::new(ce_collm::runtime::mock::MockCloud::new(
+                        ce_collm::runtime::mock::MockOracle::new(seed),
+                        sdims.clone(),
+                    )) as _)
+                });
+                Ok(f)
+            })?;
+            // θ = 1.0 defers every token to the cloud, so the recording
+            // exercises the full upload/infer/park/pass cycle per token
+            let mut dcfg = DeploymentConfig::with_threshold(1.0);
+            dcfg.device_id = 0;
+            dcfg.max_new_tokens = args.get_parse("max-new", 12usize);
+            let link = CloudLink::connect(0, &[server.addr.to_string()], dcfg.reconnect)?;
+            let mut client = EdgeClient::with_cloud(
+                ce_collm::runtime::mock::MockEdge::new(
+                    ce_collm::runtime::mock::MockOracle::new(seed),
+                    dims,
+                ),
+                dcfg,
+                link,
+            );
+            let gen = client.generate(&args.get_or("prompt", "a ci trace prompt"))?;
+            let stats = server.shutdown();
+            println!(
+                "recorded {} scheduler events ({} dropped) over {} served tokens -> {out}",
+                stats.trace_events,
+                stats.trace_dropped,
+                gen.tokens.len()
+            );
+        }
+        "trace-replay" => {
+            // replays drive mock engines (--seed must match the recorded
+            // run); the real-engine replay path goes through the library
+            let path = args
+                .positional
+                .get(1)
+                .context("usage: trace-replay <trace.jsonl> [--seed N] [--des]")?;
+            let seed: u64 = args.get_parse("seed", 1u64);
+            let dims = ce_collm::model::manifest::test_manifest().model;
+            let events = ce_collm::trace::parse_trace_file(path)?;
+            let sdims = dims.clone();
+            let builder: ce_collm::coordinator::scheduler::FactoryBuilder = Arc::new(move || {
+                let sdims = sdims.clone();
+                let f: SessionFactory = Box::new(move |_device| {
+                    Ok(Box::new(ce_collm::runtime::mock::MockCloud::new(
+                        ce_collm::runtime::mock::MockOracle::new(seed),
+                        sdims.clone(),
+                    )) as _)
+                });
+                Ok(f)
+            });
+            let report = ce_collm::trace::replay(&events, &dims, builder)?;
+            println!("{}", report.summary());
+            if args.has("des") {
+                match ce_collm::trace::des_check(&events, &dims) {
+                    Ok(des) => println!("{}", des.summary()),
+                    Err(e) => println!("des check skipped: {e:#}"),
+                }
+            }
+            if !report.ok() {
+                std::process::exit(1);
+            }
+        }
         "calibrate" => {
             let stack = LocalStack::load(&artifacts)?;
             let cfg = ExperimentConfig {
@@ -252,13 +340,17 @@ fn run() -> Result<()> {
                  \x20 generate <p>       collaborative generation (local)\n\
                  \x20 serve-cloud        start the cloud server\n\
                  \x20 run-edge <p>       edge client against a server\n\
+                 \x20 trace-record <f>   record a short mock e2e run (TCP)\n\
+                 \x20 trace-replay <f>   replay a recorded trace (mock engines)\n\
                  \x20 calibrate          print the measured cost model\n\n\
                  flags: --artifacts DIR --prompts N --repeats N --max-new N\n\
                  \x20      --link wifi|lte|fiber|lan|ideal --threshold T\n\
                  \x20      --clients N --addr HOST:PORT --seed N\n\
                  \x20      --workers N (serve-cloud scheduler pool)\n\
+                 \x20      --trace PATH (serve-cloud: record a TRACE v1 JSONL)\n\
                  \x20      --budget-ms N (run-edge per-token cloud latency budget)\n\
-                 \x20      --addrs A,B,... (run-edge ordered failover endpoints)"
+                 \x20      --addrs A,B,... (run-edge ordered failover endpoints)\n\
+                 \x20      --des (trace-replay: cross-validate against the DES)"
             );
         }
     }

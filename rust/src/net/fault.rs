@@ -30,8 +30,18 @@ use super::transport::Transport;
 use crate::util::rng::Rng;
 
 /// Env var consulted by [`ReactorFault::resolve`] when the reactor
-/// config carries no explicit fault: `CE_FAULT=sever_in:<n>` severs
-/// every cloud-side connection after its `n`-th inbound frame.
+/// config carries no explicit fault.  The spec is a comma-separated
+/// list of clauses, all keyed by 0-based per-connection inbound frame
+/// ordinals:
+///
+/// * `sever_in:<n>` — close the connection right after routing its
+///   `n`-th inbound frame;
+/// * `drop_in:<n>` — silently discard the `n`-th inbound frame (the
+///   ordinal still advances);
+/// * `delay_in:<n>:<ms>` — stall `ms` milliseconds before routing the
+///   `n`-th inbound frame.
+///
+/// e.g. `CE_FAULT=drop_in:3,sever_in:7`.
 pub const FAULT_ENV: &str = "CE_FAULT";
 
 /// What happens to one frame (or to the link from that frame on).
@@ -292,25 +302,66 @@ impl<T: Transport> Transport for FaultTransport<T> {
 }
 
 /// Cloud-side fault hook, applied by every reactor shard to every
-/// connection it owns.
+/// connection it owns.  All ordinals are 0-based per-connection inbound
+/// frame counts — the same ordinal a recorded trace's `frame_in` events
+/// carry, which is what lets [`crate::trace::anchored_fault`] turn a
+/// recorded trace point back into one of these schedules.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct ReactorFault {
     /// Close a connection right after its `n`-th inbound frame
-    /// (0-based: `Some(0)` severs on the very first frame, the Hello).
-    /// From the edge it looks like a cloud restart: the next send or
-    /// receive on that channel fails and the reconnect path takes over.
+    /// (`Some(0)` severs on the very first frame, the Hello).  From the
+    /// edge it looks like a cloud restart: the next send or receive on
+    /// that channel fails and the reconnect path takes over.
     pub sever_in_at: Option<u64>,
+    /// Silently discard a connection's `n`-th inbound frame instead of
+    /// routing it; the ordinal still advances (a lost frame was still
+    /// received).  From the edge: an upload or request that vanished
+    /// in flight over a live connection.
+    pub drop_in_at: Option<u64>,
+    /// Stall the shard [`ReactorFault::delay_in_ms`] milliseconds
+    /// before routing a connection's `n`-th inbound frame — a slow
+    /// middlebox, with the head-of-line blocking a real one causes.
+    pub delay_in_at: Option<u64>,
+    /// The stall applied at [`ReactorFault::delay_in_at`] (ignored when
+    /// that is `None`).
+    pub delay_in_ms: u64,
 }
 
 impl ReactorFault {
-    /// Parse a `CE_FAULT` spec.  Grammar: `sever_in:<n>`.
+    /// Parse a [`FAULT_ENV`] spec: comma-separated `sever_in:<n>`,
+    /// `drop_in:<n>`, `delay_in:<n>:<ms>` clauses.  This is the single
+    /// parser for reactor-side fault grammars — the trace-anchored
+    /// plans ([`crate::trace::anchored_fault`]) build the same struct.
     pub fn parse(spec: &str) -> Result<ReactorFault> {
-        let spec = spec.trim();
-        if let Some(n) = spec.strip_prefix("sever_in:") {
-            let n: u64 = n.trim().parse()?;
-            return Ok(ReactorFault { sever_in_at: Some(n) });
+        let mut fault = ReactorFault::default();
+        let mut clauses = 0;
+        for clause in spec.split(',') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            if let Some(n) = clause.strip_prefix("sever_in:") {
+                fault.sever_in_at = Some(n.trim().parse()?);
+            } else if let Some(n) = clause.strip_prefix("drop_in:") {
+                fault.drop_in_at = Some(n.trim().parse()?);
+            } else if let Some(rest) = clause.strip_prefix("delay_in:") {
+                let (n, ms) = rest
+                    .split_once(':')
+                    .ok_or_else(|| anyhow::anyhow!("delay_in needs <n>:<ms>"))?;
+                fault.delay_in_at = Some(n.trim().parse()?);
+                fault.delay_in_ms = ms.trim().parse()?;
+            } else {
+                bail!(
+                    "bad {FAULT_ENV} clause '{clause}' \
+                     (expected sever_in:<n>, drop_in:<n>, or delay_in:<n>:<ms>)"
+                );
+            }
+            clauses += 1;
         }
-        bail!("bad {FAULT_ENV} spec '{spec}' (expected sever_in:<n>)")
+        if clauses == 0 {
+            bail!("empty {FAULT_ENV} spec");
+        }
+        Ok(fault)
     }
 
     /// The plan a reactor shard should run: an explicit config value
@@ -422,16 +473,31 @@ mod tests {
     fn reactor_fault_spec_parses() {
         assert_eq!(
             ReactorFault::parse("sever_in:48").unwrap(),
-            ReactorFault { sever_in_at: Some(48) }
+            ReactorFault { sever_in_at: Some(48), ..Default::default() }
         );
         assert_eq!(
             ReactorFault::parse(" sever_in: 0 ").unwrap(),
-            ReactorFault { sever_in_at: Some(0) }
+            ReactorFault { sever_in_at: Some(0), ..Default::default() }
+        );
+        assert_eq!(
+            ReactorFault::parse("drop_in:3").unwrap(),
+            ReactorFault { drop_in_at: Some(3), ..Default::default() }
+        );
+        assert_eq!(
+            ReactorFault::parse("delay_in:5:250").unwrap(),
+            ReactorFault { delay_in_at: Some(5), delay_in_ms: 250, ..Default::default() }
+        );
+        // clauses combine, whitespace tolerated, order irrelevant
+        assert_eq!(
+            ReactorFault::parse("drop_in:3, sever_in:7").unwrap(),
+            ReactorFault { sever_in_at: Some(7), drop_in_at: Some(3), ..Default::default() }
         );
         assert!(ReactorFault::parse("sever_in:").is_err());
+        assert!(ReactorFault::parse("delay_in:5").is_err());
         assert!(ReactorFault::parse("chaos").is_err());
+        assert!(ReactorFault::parse("").is_err());
         // explicit config wins over anything the env might say
-        let explicit = ReactorFault { sever_in_at: Some(7) };
+        let explicit = ReactorFault { sever_in_at: Some(7), ..Default::default() };
         assert_eq!(ReactorFault::resolve(Some(explicit)), Some(explicit));
     }
 }

@@ -121,6 +121,7 @@ use crate::net::codec::FrameCodec;
 use crate::net::event::{Event, EventSet, Interest, SourceFd, Token};
 use crate::net::fault::ReactorFault;
 use crate::net::listener::{self, MODE_NONE};
+use crate::trace::{Ev, TraceSink};
 
 // ---------------------------------------------------------------------------
 // readiness primitives
@@ -173,6 +174,14 @@ fn tag_conn(shard: usize, local: u64) -> u64 {
 /// The shard that owns (and alone may resolve) connection id `conn`.
 fn shard_of(conn: u64) -> usize {
     (conn >> SHARD_SHIFT) as usize
+}
+
+/// The shard-local counter part of a connection id.  Trace events carry
+/// `shard` and this 56-bit local id as separate fields: the combined
+/// tagged id of a high shard exceeds 2^53 and would lose precision in a
+/// JSON double.
+fn local_of(conn: u64) -> u64 {
+    conn & ((1u64 << SHARD_SHIFT) - 1)
 }
 
 #[cfg(unix)]
@@ -336,6 +345,12 @@ pub struct ReactorStats {
     pub accept_mode: &'static str,
     /// Connections currently registered (gauge, set on snapshot).
     pub open_conns: usize,
+    /// Trace events this shard emitted into the [`TraceSink`] (0 when
+    /// recording is off).
+    pub trace_events: u64,
+    /// Trace events dropped because the sink's bounded queue was full —
+    /// the recorder degrades visibly, it never blocks the shard.
+    pub trace_dropped: u64,
 }
 
 impl ReactorStats {
@@ -357,6 +372,8 @@ impl ReactorStats {
         self.accepts += o.accepts;
         self.events_seen += o.events_seen;
         self.open_conns += o.open_conns;
+        self.trace_events += o.trace_events;
+        self.trace_dropped += o.trace_dropped;
         if self.backend.is_empty() {
             self.backend = o.backend;
         }
@@ -390,12 +407,25 @@ impl Reactor {
         cfg: ReactorConfig,
         listener: Option<TcpListener>,
     ) -> Result<Reactor> {
+        Self::spawn_traced(router, dims, cfg, listener, None)
+    }
+
+    /// [`Reactor::spawn`] with a trace recorder: every shard taps its
+    /// frame and connection lifecycle events into `sink` (the same sink
+    /// the scheduler records into, so the sequence interleaves).
+    pub fn spawn_traced(
+        router: Router,
+        dims: ModelDims,
+        cfg: ReactorConfig,
+        listener: Option<TcpListener>,
+        sink: Option<Arc<TraceSink>>,
+    ) -> Result<Reactor> {
         let shards = cfg.resolved_shards();
         let (mode, listeners) = match listener {
             Some(l) => listener::share_listener(l, shards),
             None => (MODE_NONE, (0..shards).map(|_| None).collect()),
         };
-        Self::spawn_fleet(router, dims, cfg, listeners, mode)
+        Self::spawn_fleet_traced(router, dims, cfg, listeners, mode, sink)
     }
 
     /// Spawn one shard per listener slot (`listeners.len()` shards; a
@@ -407,6 +437,19 @@ impl Reactor {
         cfg: ReactorConfig,
         listeners: Vec<Option<TcpListener>>,
         accept_mode: &'static str,
+    ) -> Result<Reactor> {
+        Self::spawn_fleet_traced(router, dims, cfg, listeners, accept_mode, None)
+    }
+
+    /// [`Reactor::spawn_fleet`] with a trace recorder (see
+    /// [`Reactor::spawn_traced`]).
+    pub fn spawn_fleet_traced(
+        router: Router,
+        dims: ModelDims,
+        cfg: ReactorConfig,
+        listeners: Vec<Option<TcpListener>>,
+        accept_mode: &'static str,
+        sink: Option<Arc<TraceSink>>,
     ) -> Result<Reactor> {
         let shards = listeners.len();
         ensure!(shards >= 1, "a reactor fleet needs at least one shard");
@@ -438,6 +481,7 @@ impl Reactor {
             let router = router.clone();
             let dims = dims.clone();
             let loop_waker = waker.clone();
+            let sink = sink.clone();
             let thread = std::thread::Builder::new()
                 .name(format!("cloud-reactor-{shard}"))
                 .spawn(move || {
@@ -459,6 +503,7 @@ impl Reactor {
                         scratch: vec![0u8; 64 * 1024],
                         stats: ReactorStats { accept_mode, ..ReactorStats::default() },
                         fault,
+                        sink,
                         pending_hellos: 0,
                         paused_conns: false,
                         shutdown: false,
@@ -555,6 +600,9 @@ struct Loop {
     /// Deterministic fault schedule every connection of this shard runs
     /// under (`None` in production — see [`ReactorFault::resolve`]).
     fault: Option<ReactorFault>,
+    /// Trace recorder; `None` (the default) keeps the hot path at one
+    /// `Option` check per tap site.
+    sink: Option<Arc<TraceSink>>,
     /// Connections still awaiting their Hello — gates the reap scan and
     /// the bounded wait timeout (maintained at admit / handshake /
     /// close).
@@ -566,6 +614,31 @@ struct Loop {
 }
 
 impl Loop {
+    /// Emit one trace event when recording is on.  Event construction
+    /// (the closure) only runs behind the `Option` check, and a
+    /// saturated sink drops the event and counts it — the shard never
+    /// blocks on the recorder.
+    fn trace_with(&mut self, build: impl FnOnce(u64) -> Ev) {
+        if let Some(sink) = &self.sink {
+            if sink.emit(build(self.shard as u64)) {
+                self.stats.trace_events += 1;
+            } else {
+                self.stats.trace_dropped += 1;
+            }
+        }
+    }
+
+    /// Trace one injected fault at the per-conn ordinal it fired on.
+    fn trace_fault(&mut self, id: u64, kind: &'static str, ordinal: u64) {
+        self.trace_with(|shard| {
+            Ev::new("fault")
+                .u("shard", shard)
+                .u("conn", local_of(id))
+                .s("kind", kind)
+                .u("ordinal", ordinal)
+        });
+    }
+
     fn run(mut self) -> ReactorStats {
         self.stats.backend = self.events.backend_name();
         if let Err(e) = self.events.register(raw_fd(&self.wake_rx), WAKE_TOKEN, Interest::READ) {
@@ -698,6 +771,7 @@ impl Loop {
         );
         self.stats.conns_opened += 1;
         self.pending_hellos += 1;
+        self.trace_with(|shard| Ev::new("conn_open").u("shard", shard).u("conn", local_of(id)));
     }
 
     /// Accept until `WouldBlock`.  Edge-triggered caveat: the listener
@@ -1017,10 +1091,12 @@ impl Loop {
     /// Handle one decoded frame.  `Err` means "close this connection".
     ///
     /// This is a thin fault-injection shim around [`Self::route_frame`]:
-    /// the frame is routed FIRST and only then checked against the
-    /// shard's [`ReactorFault`] schedule, so a scripted sever models a
-    /// crash *after* the n-th inbound frame was acted on (the hardest
-    /// case for the client — state advanced, acknowledgement lost).
+    /// a scripted `drop` discards the n-th inbound frame *instead of*
+    /// routing it (the ordinal still advances — a lost frame is still a
+    /// received frame), a `delay` stalls the shard before routing (a
+    /// slow middlebox), and a `sever` fires only *after* the frame was
+    /// acted on — modelling a crash with state advanced and the
+    /// acknowledgement lost, the hardest case for the client.
     fn on_frame(&mut self, id: u64, frame: Vec<u8>) -> Result<()> {
         self.stats.frames_in += 1;
         let ordinal = match self.conns.get_mut(&id) {
@@ -1031,11 +1107,32 @@ impl Loop {
             }
             None => return Ok(()),
         };
+        self.trace_with(|shard| {
+            Ev::new("frame_in")
+                .u("shard", shard)
+                .u("conn", local_of(id))
+                .u("ordinal", ordinal)
+                .u("tag", frame.first().copied().unwrap_or(0) as u64)
+                .u("len", frame.len() as u64)
+        });
+        if let Some(f) = self.fault {
+            if f.drop_in_at == Some(ordinal) {
+                self.stats.faults_injected += 1;
+                self.trace_fault(id, "drop", ordinal);
+                return Ok(());
+            }
+            if f.delay_in_at == Some(ordinal) {
+                self.stats.faults_injected += 1;
+                self.trace_fault(id, "delay", ordinal);
+                std::thread::sleep(Duration::from_millis(f.delay_in_ms));
+            }
+        }
         let out = self.route_frame(id, frame);
         if out.is_ok() {
             if let Some(n) = self.fault.and_then(|f| f.sever_in_at) {
                 if ordinal == n {
                     self.stats.faults_injected += 1;
+                    self.trace_fault(id, "sever", ordinal);
                     anyhow::bail!("fault injection: severed after inbound frame {n}");
                 }
             }
@@ -1178,17 +1275,28 @@ impl Loop {
     fn enqueue_and_flush(&mut self, id: u64, payload: &[u8]) {
         let mut fail: Option<String> = None;
         let mut evict = false;
+        let mut queued = false;
         if let Some(c) = self.conns.get_mut(&id) {
             match c.codec.enqueue_frame(payload) {
                 Err(e) => fail = Some(format!("{e:#}")),
                 Ok(()) => {
                     self.stats.frames_out += 1;
+                    queued = true;
                     match flush_conn(c) {
                         Err(e) => fail = Some(format!("write failed: {e}")),
                         Ok(()) => evict = c.codec.pending_out() > self.cfg.write_queue_cap,
                     }
                 }
             }
+        }
+        if queued {
+            self.trace_with(|shard| {
+                Ev::new("frame_out")
+                    .u("shard", shard)
+                    .u("conn", local_of(id))
+                    .u("tag", payload.first().copied().unwrap_or(0) as u64)
+                    .u("len", payload.len() as u64)
+            });
         }
         if let Some(reason) = fail {
             self.close_conn(id, &reason);
@@ -1209,6 +1317,12 @@ impl Loop {
             let _ = c.stream.shutdown(std::net::Shutdown::Both);
             self.stats.conns_closed += 1;
             log::debug!("reactor: connection {id} closed: {reason}");
+            self.trace_with(|shard| {
+                Ev::new("conn_close")
+                    .u("shard", shard)
+                    .u("conn", local_of(id))
+                    .s("reason", reason)
+            });
         }
     }
 }

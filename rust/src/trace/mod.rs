@@ -1,0 +1,632 @@
+//! Deterministic trace subsystem: record every wire frame and scheduler
+//! event as a versioned JSONL stream, replay the scheduler from a
+//! recording and assert the token stream bit-identical, and anchor
+//! fault-injection schedules to recorded points.
+//!
+//! The contract is the observed-trace one: *if it wasn't emitted by the
+//! runtime, it didn't happen*.  Every event the serving stack can take
+//! or produce — frames in and out of the reactor, uploads, parks,
+//! batch passes, evictions, TTL reaps, session resets/resumes, faults
+//! injected — is tapped into a [`TraceSink`] carrying a process-global
+//! monotonic sequence number, so a recording is a total order over the
+//! run that [`replay`](crate::trace::replay::replay) can re-drive and
+//! [`anchored_fault`] can address ("sever after the frame with seq N").
+//!
+//! # Enabling
+//!
+//! Off by default.  [`CloudConfig::trace`](crate::config::CloudConfig)
+//! (explicit, wins) or the `CE_TRACE=path.jsonl` env var turn the
+//! cloud-side recorder on; `CE_TRACE_EDGE=path.jsonl` turns on the
+//! edge-side tap in [`CloudLink`](crate::coordinator::edge::CloudLink)
+//! (a separate file — edge and cloud may be separate processes).  When
+//! off, every tap site is a single `Option` check: no event is built,
+//! no allocation happens.  When on, emission never blocks the hot path:
+//! events go through a bounded queue to a dedicated writer thread, and
+//! a saturated queue *drops* the event and bumps the emitter's
+//! `trace_dropped` counter (`ReactorStats`/`CloudStats`) instead of
+//! stalling the reactor or a worker.
+//!
+//! # Event schema (TRACE v1)
+//!
+//! One JSON object per line.  Common fields on every event:
+//!
+//! | field | type | meaning |
+//! |-------|------|---------|
+//! | `v`   | int  | schema version, currently `1` |
+//! | `seq` | int  | process-global monotonic sequence number |
+//! | `t_us`| int  | microseconds since the sink opened (observational) |
+//! | `ev`  | str  | event type, one of the names below |
+//!
+//! Identity fields reuse the serving stack's names: `shard`/`conn`
+//! (reactor; `conn` is the shard-local 56-bit counter — the shard tag is
+//! its own field so values stay exact in JSON doubles), `worker`,
+//! `device`, `req`, `pos`.  Session nonces are full u64s and therefore
+//! serialized as `"0x…"` hex strings.
+//!
+//! Reactor events: `conn_open {shard, conn}` · `conn_close {shard,
+//! conn, reason}` · `frame_in {shard, conn, ordinal, tag, len}` (the
+//! per-connection inbound ordinal is the unit fault schedules key on) ·
+//! `frame_out {shard, conn, tag, len}` · `fault {shard, conn, kind,
+//! ordinal}`.
+//!
+//! Scheduler input events (these *drive* a replay): `run_meta {workers,
+//! d_model, max_catchup, budget?, ttl_s?}` (first event of a cloud
+//! recording) · `upload {worker, device, session, req, start, plen,
+//! data}` (`data` = hex of the unpacked f32 little-endian payload — the
+//! canonical form whatever the wire precision was) · `infer {worker,
+//! device, session, req, pos, plen}` · `end {worker, device, session,
+//! req}` · `reset {worker, device, session, resume, honored}`.
+//!
+//! Scheduler output events (these are replay *assertions*): `token
+//! {worker, device, req, pos, token, conf_bits}` (`conf_bits` is the
+//! f32 confidence's exact bit pattern — bit-identical means bits, not
+//! "close floats") · `evicted_notice {worker, device, req, pos}` ·
+//! `infer_error {worker, device, req, pos, kind}` with `kind` in
+//! `deadline | stale | frontier | reset | end | engine`.
+//!
+//! Scheduler observational events (recorded, reported, not re-driven):
+//! `park {worker, device, req, pos}` · `pass {worker, devices, items}`
+//! · `evict {worker, device}` · `ttl_reap {worker, device}` ·
+//! `worker_stats {worker, served, uploads, resumed, stale_resumes,
+//! evictions, ttl_reaps, replays}` (final counters at shutdown; replay
+//! compares its own final counters against the sum of these).
+//!
+//! Edge events: `edge_send {device, chan, n, tag, len}` · `edge_recv
+//! {device, chan, n, tag, len}` (`n` = per-device per-channel ordinal,
+//! the unit [`anchored_plan`] keys client-side [`FaultPlan`]s on) ·
+//! `edge_reconnect {device, round}`.
+//!
+//! # Versioning rules
+//!
+//! The version is per *trace line* (`v`).  A reader encountering a line
+//! with `v != 1` MUST fail parsing.  A replayer encountering an event
+//! type it does not know MUST fail the replay — an unknown event is a
+//! recorded action the replayer cannot reproduce, so skipping it would
+//! silently turn "bit-identical" into "bit-identical except the parts
+//! we ignored".  New event types therefore require a version bump (or a
+//! replayer that learned them first).  Adding a *field* to an existing
+//! event is backward compatible (readers take what they know).
+//!
+//! # Replay scope (v1)
+//!
+//! [`replay`](crate::trace::replay) re-drives the **scheduler** (the
+//! component all correctness claims reduce to) through its [`Router`]:
+//! recorded inputs are fed in seq order, recorded outputs are
+//! wait-points checked bit-for-bit, and final counters are compared
+//! against the recorded `worker_stats`.  The idle TTL is forced off
+//! during replay (wall-clock reaps are not part of the recorded order),
+//! so traces recorded with `session_ttl_s` replay only up to TTL-driven
+//! divergence; budget evictions, resumes, and eviction replays are
+//! fully deterministic under the lockstep order the trace captures.
+//! Driving the full reactor from `frame_in` events over
+//! `InProcTransport` is the ROADMAP remainder, alongside a TLA+ spec
+//! check over observed traces.
+//!
+//! [`Router`]: crate::coordinator::scheduler::Router
+//! [`FaultPlan`]: crate::net::fault::FaultPlan
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Context, Result};
+use log::warn;
+
+use crate::net::fault::{FaultPlan, ReactorFault};
+use crate::util::json::Json;
+
+pub mod replay;
+
+pub use replay::{des_check, replay, replay_file, DesReport, ReplayReport};
+
+/// Schema version stamped on every emitted line (`v`).
+pub const TRACE_VERSION: u64 = 1;
+/// Cloud-side recorder env toggle (`CloudConfig::trace` wins over it).
+pub const TRACE_ENV: &str = "CE_TRACE";
+/// Edge-side recorder env toggle (separate file: edge and cloud may be
+/// different processes).
+pub const EDGE_TRACE_ENV: &str = "CE_TRACE_EDGE";
+
+/// Bounded depth of the sink's line queue.  A full queue means the
+/// writer can't keep up; emitters then drop-and-count rather than
+/// block (see `trace_dropped`).
+const QUEUE_CAP: usize = 8192;
+
+// ---------------------------------------------------------------------------
+// event builder
+
+/// Builder for one trace event.  Constructed only when a sink is
+/// actually attached (tap sites guard with `if let Some(sink)`), so the
+/// disabled path never allocates.
+#[derive(Debug)]
+pub struct Ev {
+    map: BTreeMap<String, Json>,
+}
+
+impl Ev {
+    pub fn new(ev: &str) -> Self {
+        let mut map = BTreeMap::new();
+        map.insert("ev".to_string(), Json::Str(ev.to_string()));
+        Ev { map }
+    }
+
+    /// Small unsigned field.  JSON numbers are doubles; values must stay
+    /// under 2^53 to round-trip exactly (all protocol counters do —
+    /// u64-wide identities like sessions use [`Ev::hex`] instead).
+    pub fn u(mut self, k: &str, v: u64) -> Self {
+        debug_assert!(v < (1 << 53), "field {k}={v} would lose precision in JSON");
+        self.map.insert(k.to_string(), Json::Num(v as f64));
+        self
+    }
+
+    pub fn i(mut self, k: &str, v: i64) -> Self {
+        self.map.insert(k.to_string(), Json::Num(v as f64));
+        self
+    }
+
+    pub fn f(mut self, k: &str, v: f64) -> Self {
+        self.map.insert(k.to_string(), Json::Num(v));
+        self
+    }
+
+    pub fn s(mut self, k: &str, v: &str) -> Self {
+        self.map.insert(k.to_string(), Json::Str(v.to_string()));
+        self
+    }
+
+    pub fn b(mut self, k: &str, v: bool) -> Self {
+        self.map.insert(k.to_string(), Json::Bool(v));
+        self
+    }
+
+    /// Full-width u64 (session nonces): serialized as a `"0x…"` string
+    /// because doubles only carry 53 mantissa bits.
+    pub fn hex(mut self, k: &str, v: u64) -> Self {
+        self.map.insert(k.to_string(), Json::Str(format!("{v:#x}")));
+        self
+    }
+
+    /// f32 payload as little-endian hex (8 chars per element) — exact
+    /// bit patterns, byte order pinned.
+    pub fn hex_f32s(mut self, k: &str, v: &[f32]) -> Self {
+        let mut s = String::with_capacity(v.len() * 8);
+        for x in v {
+            for b in x.to_le_bytes() {
+                let _ = write!(s, "{b:02x}");
+            }
+        }
+        self.map.insert(k.to_string(), Json::Str(s));
+        self
+    }
+
+    fn into_line(mut self, seq: u64, t_us: u64) -> String {
+        self.map.insert("v".to_string(), Json::Num(TRACE_VERSION as f64));
+        self.map.insert("seq".to_string(), Json::Num(seq as f64));
+        self.map.insert("t_us".to_string(), Json::Num(t_us.min((1 << 53) - 1) as f64));
+        Json::Obj(self.map).to_string()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// sink
+
+enum SinkMsg {
+    Line(String),
+    Flush(SyncSender<()>),
+    Shutdown,
+}
+
+/// Bounded, non-blocking JSONL event sink.  Emitters assign sequence
+/// numbers atomically and hand finished lines to a dedicated writer
+/// thread; the writer flushes per line so a killed process (the CI
+/// record job SIGTERMs the server) still leaves a readable prefix.
+pub struct TraceSink {
+    seq: AtomicU64,
+    tx: SyncSender<SinkMsg>,
+    writer: Mutex<Option<JoinHandle<()>>>,
+    t0: Instant,
+}
+
+impl std::fmt::Debug for TraceSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceSink").field("seq", &self.seq.load(Ordering::Relaxed)).finish()
+    }
+}
+
+impl TraceSink {
+    /// Open a sink writing to `path` (truncating any existing file).
+    pub fn to_file(path: &str) -> Result<Arc<TraceSink>> {
+        let file = File::create(path).with_context(|| format!("create trace file {path}"))?;
+        let (tx, rx) = mpsc::sync_channel(QUEUE_CAP);
+        let writer = std::thread::Builder::new()
+            .name("ce-trace-writer".into())
+            .spawn(move || writer_loop(rx, BufWriter::new(file)))
+            .context("spawn trace writer")?;
+        Ok(Arc::new(TraceSink {
+            seq: AtomicU64::new(0),
+            tx,
+            writer: Mutex::new(Some(writer)),
+            t0: Instant::now(),
+        }))
+    }
+
+    /// Resolve the cloud-side recorder: an explicit config path wins,
+    /// else the `CE_TRACE` env var, else off.  A path that cannot be
+    /// opened logs a warning and disables tracing rather than killing
+    /// the server.
+    pub fn resolve(explicit: Option<&str>) -> Option<Arc<TraceSink>> {
+        let owned;
+        let path = match explicit {
+            Some(p) => p,
+            None => match std::env::var(TRACE_ENV) {
+                Ok(p) if !p.trim().is_empty() => {
+                    owned = p;
+                    owned.as_str()
+                }
+                _ => return None,
+            },
+        };
+        match Self::to_file(path) {
+            Ok(s) => Some(s),
+            Err(e) => {
+                warn!("trace disabled: {e:#}");
+                None
+            }
+        }
+    }
+
+    /// Emit one event.  Returns `true` when the event was queued,
+    /// `false` when the queue was saturated and the event dropped —
+    /// callers count the outcome into their `trace_events` /
+    /// `trace_dropped` stats.  Never blocks.
+    pub fn emit(&self, ev: Ev) -> bool {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let t_us = self.t0.elapsed().as_micros() as u64;
+        match self.tx.try_send(SinkMsg::Line(ev.into_line(seq, t_us))) {
+            Ok(()) => true,
+            Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => false,
+        }
+    }
+
+    /// Block until every event queued so far has reached the file.
+    pub fn flush(&self) {
+        let (tx, rx) = mpsc::sync_channel(1);
+        if self.tx.send(SinkMsg::Flush(tx)).is_ok() {
+            let _ = rx.recv();
+        }
+    }
+
+    /// Events emitted so far (== the next sequence number).
+    pub fn emitted(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for TraceSink {
+    fn drop(&mut self) {
+        // writer drains the queue, sees Shutdown, flushes, exits
+        let _ = self.tx.send(SinkMsg::Shutdown);
+        if let Ok(mut guard) = self.writer.lock() {
+            if let Some(h) = guard.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+fn writer_loop(rx: Receiver<SinkMsg>, mut out: BufWriter<File>) {
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            SinkMsg::Line(l) => {
+                // per-line flush: a SIGTERM'd recording is still a
+                // readable prefix (the CI record job relies on it)
+                let _ = out.write_all(l.as_bytes());
+                let _ = out.write_all(b"\n");
+                let _ = out.flush();
+            }
+            SinkMsg::Flush(ack) => {
+                let _ = out.flush();
+                let _ = ack.send(());
+            }
+            SinkMsg::Shutdown => break,
+        }
+    }
+    let _ = out.flush();
+}
+
+// ---------------------------------------------------------------------------
+// parsing
+
+/// One parsed trace line.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub seq: u64,
+    pub ev: String,
+    pub fields: Json,
+}
+
+impl TraceEvent {
+    pub fn u(&self, k: &str) -> Result<u64> {
+        self.fields
+            .get(k)
+            .and_then(|v| v.as_i64())
+            .filter(|&v| v >= 0)
+            .map(|v| v as u64)
+            .with_context(|| format!("event '{}' seq {}: missing field '{k}'", self.ev, self.seq))
+    }
+
+    pub fn u_opt(&self, k: &str) -> Option<u64> {
+        self.fields.get(k).and_then(|v| v.as_i64()).filter(|&v| v >= 0).map(|v| v as u64)
+    }
+
+    pub fn i(&self, k: &str) -> Result<i64> {
+        self.fields
+            .get(k)
+            .and_then(|v| v.as_i64())
+            .with_context(|| format!("event '{}' seq {}: missing field '{k}'", self.ev, self.seq))
+    }
+
+    pub fn s(&self, k: &str) -> Result<&str> {
+        self.fields
+            .get(k)
+            .and_then(|v| v.as_str())
+            .with_context(|| format!("event '{}' seq {}: missing field '{k}'", self.ev, self.seq))
+    }
+
+    pub fn b(&self, k: &str) -> Result<bool> {
+        match self.fields.get(k) {
+            Some(Json::Bool(b)) => Ok(*b),
+            _ => bail!("event '{}' seq {}: missing bool field '{k}'", self.ev, self.seq),
+        }
+    }
+
+    /// Full-width u64 stored as a `"0x…"` string (see [`Ev::hex`]).
+    pub fn hex_u64(&self, k: &str) -> Result<u64> {
+        let s = self.s(k)?;
+        let digits = s.strip_prefix("0x").unwrap_or(s);
+        u64::from_str_radix(digits, 16)
+            .with_context(|| format!("event '{}' seq {}: bad hex field '{k}'", self.ev, self.seq))
+    }
+
+    /// f32 payload recorded by [`Ev::hex_f32s`].
+    pub fn f32s(&self, k: &str) -> Result<Vec<f32>> {
+        let s = self.s(k)?;
+        ensure!(s.len() % 8 == 0, "hex f32 field '{k}' has odd length {}", s.len());
+        let mut out = Vec::with_capacity(s.len() / 8);
+        let bytes = s.as_bytes();
+        let nib = |c: u8| -> Result<u8> {
+            match c {
+                b'0'..=b'9' => Ok(c - b'0'),
+                b'a'..=b'f' => Ok(c - b'a' + 10),
+                b'A'..=b'F' => Ok(c - b'A' + 10),
+                _ => bail!("bad hex digit {c:#x} in field '{k}'"),
+            }
+        };
+        for chunk in bytes.chunks_exact(8) {
+            let mut le = [0u8; 4];
+            for (i, pair) in chunk.chunks_exact(2).enumerate() {
+                le[i] = (nib(pair[0])? << 4) | nib(pair[1])?;
+            }
+            out.push(f32::from_le_bytes(le));
+        }
+        Ok(out)
+    }
+}
+
+/// Parse a JSONL trace into events sorted by `seq`.  Rejects unknown
+/// schema versions (the versioning rule); unknown *event types* are
+/// deferred to the replayer, which must error on them.
+pub fn parse_trace(text: &str) -> Result<Vec<TraceEvent>> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).map_err(|e| anyhow::anyhow!("trace line {}: {e}", i + 1))?;
+        let v = j
+            .get("v")
+            .and_then(|v| v.as_i64())
+            .with_context(|| format!("trace line {}: missing version", i + 1))?;
+        ensure!(
+            v == TRACE_VERSION as i64,
+            "trace line {}: unsupported trace version {v} (reader supports v{TRACE_VERSION})",
+            i + 1
+        );
+        let seq = j
+            .get("seq")
+            .and_then(|v| v.as_i64())
+            .filter(|&s| s >= 0)
+            .with_context(|| format!("trace line {}: missing seq", i + 1))? as u64;
+        let ev = j
+            .get("ev")
+            .and_then(|v| v.as_str())
+            .with_context(|| format!("trace line {}: missing ev", i + 1))?
+            .to_string();
+        out.push(TraceEvent { seq, ev, fields: j });
+    }
+    out.sort_by_key(|e| e.seq);
+    Ok(out)
+}
+
+/// Read and parse a trace file.
+pub fn parse_trace_file(path: &str) -> Result<Vec<TraceEvent>> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("read trace {path}"))?;
+    parse_trace(&text)
+}
+
+// ---------------------------------------------------------------------------
+// trace-anchored fault schedules
+
+/// What to do at an anchored trace point (reactor side).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AnchorKind {
+    /// Sever the connection right after the anchored frame is routed.
+    Sever,
+    /// Drop the anchored frame (the ordinal still counts).
+    Drop,
+    /// Stall the connection this long before routing the anchored frame.
+    DelayMs(u64),
+}
+
+/// Build a [`ReactorFault`] that fires at a recorded reactor frame:
+/// `seq` must name a `frame_in` event, whose per-connection inbound
+/// ordinal becomes the schedule's trigger — "sever after the frame with
+/// seq N" expressed in the reactor's own unit, so re-running the same
+/// deterministic workload hits the same protocol step.
+pub fn anchored_fault(events: &[TraceEvent], seq: u64, kind: AnchorKind) -> Result<ReactorFault> {
+    let e = events
+        .iter()
+        .find(|e| e.seq == seq)
+        .with_context(|| format!("no trace event with seq {seq}"))?;
+    ensure!(
+        e.ev == "frame_in",
+        "seq {seq} is a '{}' event; reactor faults anchor to 'frame_in'",
+        e.ev
+    );
+    let ordinal = e.u("ordinal")?;
+    let mut f = ReactorFault::default();
+    match kind {
+        AnchorKind::Sever => f.sever_in_at = Some(ordinal),
+        AnchorKind::Drop => f.drop_in_at = Some(ordinal),
+        AnchorKind::DelayMs(ms) => {
+            f.delay_in_at = Some(ordinal);
+            f.delay_in_ms = ms;
+        }
+    }
+    Ok(f)
+}
+
+/// Build a client-side [`FaultPlan`] anchored at a recorded edge frame:
+/// `seq` must name an `edge_send` or `edge_recv` event; its per-channel
+/// ordinal `n` keys the plan on the matching direction.
+pub fn anchored_plan(events: &[TraceEvent], seq: u64, kind: AnchorKind) -> Result<FaultPlan> {
+    let e = events
+        .iter()
+        .find(|e| e.seq == seq)
+        .with_context(|| format!("no trace event with seq {seq}"))?;
+    let n = e.u("n")?;
+    let send_side = match e.ev.as_str() {
+        "edge_send" => true,
+        "edge_recv" => false,
+        other => bail!("seq {seq} is a '{other}' event; plans anchor to edge_send/edge_recv"),
+    };
+    let plan = FaultPlan::new();
+    Ok(match (send_side, kind) {
+        (true, AnchorKind::Sever) => plan.sever_send_at(n),
+        (true, AnchorKind::Drop) => plan.drop_send_at(n),
+        (true, AnchorKind::DelayMs(ms)) => plan.delay_send_at(n, ms),
+        (false, AnchorKind::Sever) => plan.sever_recv_at(n),
+        (false, AnchorKind::Drop) => plan.drop_recv_at(n),
+        (false, AnchorKind::DelayMs(ms)) => plan.delay_recv_at(n, ms),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_path(tag: &str) -> String {
+        let d = std::env::temp_dir();
+        d.join(format!("ce_trace_{tag}_{}.jsonl", std::process::id())).display().to_string()
+    }
+
+    #[test]
+    fn sink_writes_versioned_lines_with_monotonic_seq() {
+        let path = tmp_path("sink");
+        let sink = TraceSink::to_file(&path).unwrap();
+        assert!(sink.emit(Ev::new("conn_open").u("shard", 0).u("conn", 1)));
+        assert!(sink.emit(Ev::new("token").u("device", 3).u("req", 1).u("pos", 7).i("token", 99)));
+        sink.flush();
+        drop(sink);
+        let events = parse_trace_file(&path).unwrap();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].seq, 0);
+        assert_eq!(events[1].seq, 1);
+        assert_eq!(events[0].ev, "conn_open");
+        assert_eq!(events[1].u("device").unwrap(), 3);
+        assert_eq!(events[1].i("token").unwrap(), 99);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn hex_f32_roundtrip_is_bit_exact() {
+        let path = tmp_path("hex");
+        let sink = TraceSink::to_file(&path).unwrap();
+        let data = vec![0.5f32, -1.25, f32::MIN_POSITIVE, 0.95, 1e30];
+        sink.emit(Ev::new("upload").u("device", 1).hex_f32s("data", &data).hex("session", u64::MAX));
+        sink.flush();
+        drop(sink);
+        let events = parse_trace_file(&path).unwrap();
+        let got = events[0].f32s("data").unwrap();
+        assert_eq!(got.len(), data.len());
+        for (a, b) in got.iter().zip(&data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(events[0].hex_u64("session").unwrap(), u64::MAX);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn parser_rejects_unknown_version() {
+        let line = r#"{"ev":"token","seq":0,"v":2}"#;
+        let err = parse_trace(line).unwrap_err().to_string();
+        assert!(err.contains("unsupported trace version"), "{err}");
+    }
+
+    #[test]
+    fn parser_sorts_by_seq_and_skips_blank_lines() {
+        let text = "\n{\"ev\":\"b\",\"seq\":1,\"v\":1}\n\n{\"ev\":\"a\",\"seq\":0,\"v\":1}\n";
+        let events = parse_trace(text).unwrap();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].ev, "a");
+        assert_eq!(events[1].ev, "b");
+    }
+
+    #[test]
+    fn resolve_is_off_without_config_or_env() {
+        // test processes never set CE_TRACE; explicit None must be off
+        if std::env::var(TRACE_ENV).is_err() {
+            assert!(TraceSink::resolve(None).is_none());
+        }
+    }
+
+    #[test]
+    fn anchored_fault_maps_seq_to_conn_ordinal() {
+        let text = concat!(
+            "{\"ev\":\"frame_in\",\"seq\":4,\"v\":1,\"shard\":0,\"conn\":2,",
+            "\"ordinal\":7,\"tag\":2,\"len\":30}\n",
+            "{\"ev\":\"token\",\"seq\":5,\"v\":1}\n",
+        );
+        let events = parse_trace(text).unwrap();
+        let f = anchored_fault(&events, 4, AnchorKind::Sever).unwrap();
+        assert_eq!(f.sever_in_at, Some(7));
+        let f = anchored_fault(&events, 4, AnchorKind::DelayMs(25)).unwrap();
+        assert_eq!(f.delay_in_at, Some(7));
+        assert_eq!(f.delay_in_ms, 25);
+        let f = anchored_fault(&events, 4, AnchorKind::Drop).unwrap();
+        assert_eq!(f.drop_in_at, Some(7));
+        // a non-frame event is not an anchor
+        assert!(anchored_fault(&events, 5, AnchorKind::Sever).is_err());
+        assert!(anchored_fault(&events, 99, AnchorKind::Sever).is_err());
+    }
+
+    #[test]
+    fn anchored_plan_maps_edge_events_to_plan_ordinals() {
+        let text = concat!(
+            "{\"ev\":\"edge_send\",\"seq\":0,\"v\":1,\"device\":1,\"chan\":\"upload\",",
+            "\"n\":3,\"tag\":2,\"len\":30}\n",
+            "{\"ev\":\"edge_recv\",\"seq\":1,\"v\":1,\"device\":1,\"chan\":\"infer\",",
+            "\"n\":5,\"tag\":4,\"len\":21}\n",
+        );
+        let events = parse_trace(text).unwrap();
+        assert!(!anchored_plan(&events, 0, AnchorKind::Sever).unwrap().is_empty());
+        assert!(!anchored_plan(&events, 1, AnchorKind::DelayMs(10)).unwrap().is_empty());
+    }
+}

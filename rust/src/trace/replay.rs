@@ -1,0 +1,506 @@
+//! Replay a recorded trace through a live scheduler and assert the
+//! outputs bit-identical, plus the DES cross-validation report.
+//!
+//! The replayer is a deterministic driver: recorded *input* events
+//! (`reset`, `upload`, `infer`, `end`) are re-sent through the
+//! [`Router`] in recorded sequence order, and recorded *output* events
+//! (`token`, `evicted_notice`, `infer_error`) act as wait-points — the
+//! replay blocks until the live scheduler produces the outcome for that
+//! `(device, req, pos)` and compares it bit-for-bit (token value and
+//! the confidence's exact f32 bit pattern).  Because inputs after a
+//! wait-point are not sent until the wait-point is satisfied, the
+//! replay reproduces the linearization the recording captured, which is
+//! what makes budget evictions and session resumes land on the same
+//! protocol steps.  Final counters are then compared against the
+//! recorded `worker_stats` events.
+//!
+//! [`Router`]: crate::coordinator::scheduler::Router
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::config::{AblationFlags, CloudConfig};
+use crate::coordinator::policy::ExitPoint;
+use crate::coordinator::scheduler::{
+    FactoryBuilder, InferOutcome, Reply, SchedMsg, Scheduler, UploadPayload,
+};
+use crate::harness::cost::CostModel;
+use crate::harness::des::{simulate, SimConfig, Strategy};
+use crate::harness::trace::{Trace, TraceStep};
+use crate::model::manifest::ModelDims;
+use crate::net::profiles::LinkProfile;
+
+use super::TraceEvent;
+
+/// How long a wait-point may block before the replay declares the
+/// recorded outcome unreachable.  Generous: a healthy replay satisfies
+/// each wait-point in microseconds.
+const WAIT_POINT_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Result of a replay: how much was driven and every divergence found.
+#[derive(Debug, Default)]
+pub struct ReplayReport {
+    /// Total events consumed from the trace.
+    pub events: usize,
+    /// Input events re-driven through the router.
+    pub inputs_sent: usize,
+    /// Output wait-points checked bit-for-bit.
+    pub outputs_checked: usize,
+    /// Every divergence between recording and replay (empty = identical).
+    pub mismatches: Vec<String>,
+}
+
+impl ReplayReport {
+    /// True when the replay reproduced the recording exactly.
+    pub fn ok(&self) -> bool {
+        self.mismatches.is_empty()
+    }
+
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "replayed {} events ({} inputs, {} outputs checked): {}",
+            self.events,
+            self.inputs_sent,
+            self.outputs_checked,
+            if self.ok() { "bit-identical" } else { "DIVERGED" },
+        );
+        for m in &self.mismatches {
+            s.push_str("\n  mismatch: ");
+            s.push_str(m);
+        }
+        s
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Outcome {
+    Token { token: i32, conf_bits: u32 },
+    Evicted,
+    Error(String),
+}
+
+type Key = (u64, u64, u64); // (device, req, pos)
+
+/// Outcomes flowing back from the live scheduler, queued per key (a key
+/// can legitimately recur: an evicted-then-replayed request answers the
+/// same `(device, req, pos)` twice — first `Evicted`, then the token).
+struct Mailbox {
+    map: Mutex<HashMap<Key, VecDeque<Outcome>>>,
+    cv: Condvar,
+}
+
+impl Mailbox {
+    fn post(&self, key: Key, out: Outcome) {
+        let mut map = self.map.lock().unwrap();
+        map.entry(key).or_default().push_back(out);
+        self.cv.notify_all();
+    }
+
+    fn wait(&self, key: Key, timeout: Duration) -> Option<Outcome> {
+        let deadline = Instant::now() + timeout;
+        let mut map = self.map.lock().unwrap();
+        loop {
+            if let Some(o) = map.get_mut(&key).and_then(|q| q.pop_front()) {
+                return Some(o);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (g, _) = self.cv.wait_timeout(map, deadline - now).unwrap();
+            map = g;
+        }
+    }
+}
+
+fn key_of(e: &TraceEvent) -> Result<Key> {
+    Ok((e.u("device")?, e.u("req")?, e.u("pos")?))
+}
+
+/// Replay a parsed trace through a freshly spawned scheduler.
+///
+/// `dims` and `builder` recreate the engine the recording ran against
+/// (for mock-backed recordings: the same oracle seed).  The scheduler
+/// configuration is rebuilt from the trace's `run_meta`, with the idle
+/// TTL forced off (wall-clock reaps are not part of the recorded
+/// order) and tracing off (a replay is not itself a recording).
+pub fn replay(
+    events: &[TraceEvent],
+    dims: &ModelDims,
+    builder: FactoryBuilder,
+) -> Result<ReplayReport> {
+    let meta = events
+        .iter()
+        .find(|e| e.ev == "run_meta")
+        .context("trace has no run_meta event — not a cloud-side recording")?;
+    ensure!(
+        meta.u("d_model")? as usize == dims.d_model,
+        "trace was recorded at d_model {} but the replayer's dims have {}",
+        meta.u("d_model")?,
+        dims.d_model
+    );
+    let cfg = CloudConfig {
+        workers: meta.u("workers")?.max(1) as usize,
+        max_catchup_per_pass: meta.u("max_catchup")?.max(1) as usize,
+        memory_budget_bytes: meta.u_opt("budget"),
+        session_ttl_s: None,
+        trace: None,
+        ..CloudConfig::default()
+    };
+
+    // Pre-scan: the recorded outcome kinds per key, in order.  Consumed
+    // one per `infer` so a request whose recording expired at its
+    // deadline is re-sent with an already-expired deadline (the park
+    // would otherwise wait out the full max_park_s).
+    let mut expected: HashMap<Key, VecDeque<&str>> = HashMap::new();
+    for e in events {
+        let kind = match e.ev.as_str() {
+            "token" => "token",
+            "evicted_notice" => "evicted",
+            "infer_error" => {
+                if e.s("kind").unwrap_or("") == "deadline" {
+                    "deadline"
+                } else {
+                    "error"
+                }
+            }
+            _ => continue,
+        };
+        expected.entry(key_of(e)?).or_default().push_back(kind);
+    }
+
+    let sched = Scheduler::spawn(dims.clone(), cfg, builder)?;
+    let router = sched.router();
+    let mailbox = Arc::new(Mailbox { map: Mutex::new(HashMap::new()), cv: Condvar::new() });
+    let mut report = ReplayReport { events: events.len(), ..ReplayReport::default() };
+    let mut recorded_stats: BTreeMap<u64, RecordedWorkerStats> = BTreeMap::new();
+
+    'drive: for e in events {
+        match e.ev.as_str() {
+            "run_meta" => {}
+            "reset" => {
+                let device = e.u("device")?;
+                router.send(device, SchedMsg::Reset {
+                    device,
+                    session: e.hex_u64("session")?,
+                    resume: e.b("resume")?,
+                })?;
+                report.inputs_sent += 1;
+            }
+            "upload" => {
+                let device = e.u("device")?;
+                router.send(device, SchedMsg::Upload {
+                    device,
+                    session: e.hex_u64("session")?,
+                    req_id: e.u("req")? as u32,
+                    start_pos: e.u("start")? as u32,
+                    prompt_len: e.u("plen")? as u32,
+                    payload: UploadPayload::Floats(e.f32s("data")?),
+                })?;
+                report.inputs_sent += 1;
+            }
+            "infer" => {
+                let key = key_of(e)?;
+                let expires_now = expected
+                    .get_mut(&key)
+                    .and_then(|q| q.pop_front())
+                    .map(|k| k == "deadline")
+                    .unwrap_or(false);
+                let mb = Arc::clone(&mailbox);
+                let reply = Reply::new(move |out: Result<InferOutcome>| {
+                    mb.post(key, match out {
+                        Ok(InferOutcome::Token(t)) => {
+                            Outcome::Token { token: t.token, conf_bits: t.conf.to_bits() }
+                        }
+                        Ok(InferOutcome::Evicted) => Outcome::Evicted,
+                        Err(err) => Outcome::Error(format!("{err:#}")),
+                    });
+                });
+                router.send(key.0, SchedMsg::Infer {
+                    device: key.0,
+                    session: e.hex_u64("session")?,
+                    req_id: key.1 as u32,
+                    pos: key.2 as u32,
+                    prompt_len: e.u("plen")? as u32,
+                    deadline: if expires_now { Some(Instant::now()) } else { None },
+                    reply,
+                })?;
+                report.inputs_sent += 1;
+            }
+            "end" => {
+                let device = e.u("device")?;
+                router.send(device, SchedMsg::End {
+                    device,
+                    session: e.hex_u64("session")?,
+                    req_id: e.u("req")? as u32,
+                })?;
+                report.inputs_sent += 1;
+            }
+            "token" | "evicted_notice" | "infer_error" => {
+                let key = key_of(e)?;
+                let got = match mailbox.wait(key, WAIT_POINT_TIMEOUT) {
+                    Some(o) => o,
+                    None => {
+                        report.mismatches.push(format!(
+                            "seq {}: no outcome arrived for device {} req {} pos {} \
+                             (recorded '{}')",
+                            e.seq, key.0, key.1, key.2, e.ev
+                        ));
+                        break 'drive;
+                    }
+                };
+                report.outputs_checked += 1;
+                let want = match e.ev.as_str() {
+                    "token" => Outcome::Token {
+                        token: e.i("token")? as i32,
+                        conf_bits: e.u("conf_bits")? as u32,
+                    },
+                    "evicted_notice" => Outcome::Evicted,
+                    _ => Outcome::Error(String::new()),
+                };
+                let matches = match (&want, &got) {
+                    (Outcome::Error(_), Outcome::Error(_)) => true,
+                    (w, g) => w == g,
+                };
+                if !matches {
+                    report.mismatches.push(format!(
+                        "seq {}: device {} req {} pos {} recorded {:?} but replay produced {:?}",
+                        e.seq, key.0, key.1, key.2, want, got
+                    ));
+                }
+            }
+            "worker_stats" => {
+                recorded_stats.insert(e.u("worker")?, RecordedWorkerStats::from_event(e)?);
+            }
+            // observational events: recorded for reporting/anchoring,
+            // nothing to re-drive at the scheduler level
+            "conn_open" | "conn_close" | "frame_in" | "frame_out" | "fault" | "park" | "pass"
+            | "evict" | "ttl_reap" | "edge_send" | "edge_recv" | "edge_reconnect" => {}
+            other => bail!(
+                "unknown trace event type '{other}' at seq {} — refusing to replay \
+                 (TRACE v1 rule: an unrecognized event is an error, not a skip)",
+                e.seq
+            ),
+        }
+    }
+
+    let stats = sched.shutdown();
+    if !recorded_stats.is_empty() {
+        let rec = recorded_stats.values().fold(RecordedWorkerStats::default(), |a, b| a.add(b));
+        let pairs: [(&str, u64, u64); 7] = [
+            ("requests_served", rec.served, stats.requests_served),
+            ("uploads", rec.uploads, stats.uploads),
+            ("sessions_resumed", rec.resumed, stats.sessions_resumed),
+            ("stale_resumes", rec.stale_resumes, stats.stale_resumes),
+            ("evictions", rec.evictions, stats.context.evictions),
+            ("ttl_reaps", rec.ttl_reaps, stats.context.ttl_reaps),
+            ("replays", rec.replays, stats.context.replays),
+        ];
+        for (name, recorded, replayed) in pairs {
+            if recorded != replayed {
+                report
+                    .mismatches
+                    .push(format!("counter {name}: recorded {recorded}, replay {replayed}"));
+            }
+        }
+    }
+    Ok(report)
+}
+
+/// [`replay`] over a trace file on disk.
+pub fn replay_file(path: &str, dims: &ModelDims, builder: FactoryBuilder) -> Result<ReplayReport> {
+    let events = super::parse_trace_file(path)?;
+    replay(&events, dims, builder)
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+struct RecordedWorkerStats {
+    served: u64,
+    uploads: u64,
+    resumed: u64,
+    stale_resumes: u64,
+    evictions: u64,
+    ttl_reaps: u64,
+    replays: u64,
+}
+
+impl RecordedWorkerStats {
+    fn from_event(e: &TraceEvent) -> Result<Self> {
+        Ok(Self {
+            served: e.u("served")?,
+            uploads: e.u("uploads")?,
+            resumed: e.u("resumed")?,
+            stale_resumes: e.u("stale_resumes")?,
+            evictions: e.u("evictions")?,
+            ttl_reaps: e.u("ttl_reaps")?,
+            replays: e.u("replays")?,
+        })
+    }
+
+    fn add(self, o: &Self) -> Self {
+        Self {
+            served: self.served + o.served,
+            uploads: self.uploads + o.uploads,
+            resumed: self.resumed + o.resumed,
+            stale_resumes: self.stale_resumes + o.stale_resumes,
+            evictions: self.evictions + o.evictions,
+            ttl_reaps: self.ttl_reaps + o.ttl_reaps,
+            replays: self.replays + o.replays,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DES cross-validation
+
+/// Simulated-vs-measured deltas from feeding a recorded trace's request
+/// timeline into the discrete-event harness ([`simulate`]) — the
+/// cheapest cross-validation of the live stack and the DES: both
+/// consume the same per-device token/position sequence, so their pass,
+/// eviction, and byte counters should track each other.
+#[derive(Debug)]
+pub struct DesReport {
+    pub devices: usize,
+    pub tokens: u64,
+    /// Engine passes: counted `pass` events vs the DES pool's passes.
+    pub measured_passes: u64,
+    pub sim_passes: u64,
+    /// Budget evictions: counted `evict` events vs the DES's LRU law.
+    pub measured_evictions: u64,
+    pub sim_evictions: u64,
+    pub sim_replays: u64,
+    /// Upload payload bytes: recorded f32 payload bytes vs the DES's
+    /// priced uplink bytes (which include wire headers and the
+    /// deployment's wire precision, so this pair brackets rather than
+    /// matches — the deltas are the report).
+    pub measured_upload_bytes: u64,
+    pub sim_upload_bytes: u64,
+    pub sim_makespan_s: f64,
+}
+
+impl DesReport {
+    pub fn summary(&self) -> String {
+        format!(
+            "des check over {} devices / {} tokens: passes measured {} vs simulated {} \
+             (delta {:+}), evictions measured {} vs simulated {} (delta {:+}), \
+             upload bytes measured {} vs simulated {}, sim replays {}, sim makespan {:.3}s",
+            self.devices,
+            self.tokens,
+            self.measured_passes,
+            self.sim_passes,
+            self.sim_passes as i64 - self.measured_passes as i64,
+            self.measured_evictions,
+            self.sim_evictions,
+            self.sim_evictions as i64 - self.measured_evictions as i64,
+            self.measured_upload_bytes,
+            self.sim_upload_bytes,
+            self.sim_replays,
+            self.sim_makespan_s,
+        )
+    }
+}
+
+/// Rebuild per-device request traces from a recording and replay them
+/// through the DES under the recorded deployment shape (workers,
+/// budget, cross-device batching), reporting simulated-vs-measured
+/// counter deltas.
+pub fn des_check(events: &[TraceEvent], dims: &ModelDims) -> Result<DesReport> {
+    let meta = events
+        .iter()
+        .find(|e| e.ev == "run_meta")
+        .context("trace has no run_meta event — not a cloud-side recording")?;
+    let workers = meta.u("workers")?.max(1) as usize;
+    let budget = meta.u_opt("budget");
+
+    // prompt lengths per (device, req) from the recorded inputs
+    let mut plen: BTreeMap<(u64, u64), usize> = BTreeMap::new();
+    for e in events {
+        if e.ev == "upload" || e.ev == "infer" {
+            plen.insert((e.u("device")?, e.u("req")?), e.u("plen")? as usize);
+        }
+    }
+
+    // every served token, grouped per (device, req) in seq order
+    let mut toks: BTreeMap<(u64, u64), Vec<(usize, i32, u32)>> = BTreeMap::new();
+    for e in events {
+        if e.ev == "token" {
+            toks.entry((e.u("device")?, e.u("req")?)).or_default().push((
+                e.u("pos")? as usize,
+                e.i("token")? as i32,
+                e.u("conf_bits")? as u32,
+            ));
+        }
+    }
+
+    let mut per_device: BTreeMap<u64, Vec<Trace>> = BTreeMap::new();
+    let mut tokens_total = 0u64;
+    for ((device, req), steps_in) in &toks {
+        let prompt_len =
+            plen.get(&(*device, *req)).copied().unwrap_or_else(|| steps_in[0].0 + 1);
+        let mut steps = Vec::with_capacity(steps_in.len());
+        let mut prev_pos: Option<usize> = None;
+        for (pos, token, conf_bits) in steps_in {
+            steps.push(TraceStep {
+                pos: *pos,
+                token: *token,
+                exit: ExitPoint::Cloud,
+                conf1: 0.0,
+                conf2: None,
+                tok1: *token,
+                tok2: None,
+                cloud_conf: Some(f32::from_bits(*conf_bits)),
+                cloud_catchup: prev_pos.map(|p| pos.saturating_sub(p)).unwrap_or(0),
+                cloud_prefill: prev_pos.is_none(),
+            });
+            prev_pos = Some(*pos);
+        }
+        tokens_total += steps.len() as u64;
+        let tokens: Vec<i32> = steps.iter().map(|s| s.token).collect();
+        per_device.entry(*device).or_default().push(Trace {
+            prompt_len,
+            tokens,
+            text: String::new(),
+            steps,
+        });
+    }
+    ensure!(!per_device.is_empty(), "trace contains no served tokens to cross-validate");
+
+    let traces: Vec<Vec<Trace>> = per_device.into_values().collect();
+    let devices = traces.len();
+    let cost = CostModel::synthetic(dims);
+    let sim = simulate(&traces, dims, &cost, &SimConfig {
+        strategy: Strategy::CeCollm(AblationFlags::default()),
+        link: LinkProfile::paper_scaled(),
+        seed: 0,
+        workers,
+        cross_device_batch: true,
+        memory_budget_bytes: budget,
+        session_ttl_s: None,
+        link_fault: None,
+    });
+    let (_, counters) = sim.summed();
+
+    let measured_passes = events.iter().filter(|e| e.ev == "pass").count() as u64;
+    let measured_evictions = events.iter().filter(|e| e.ev == "evict").count() as u64;
+    let measured_upload_bytes: u64 = events
+        .iter()
+        .filter(|e| e.ev == "upload")
+        .map(|e| e.s("data").map(|d| d.len() as u64 / 2).unwrap_or(0))
+        .sum();
+
+    Ok(DesReport {
+        devices,
+        tokens: tokens_total,
+        measured_passes,
+        sim_passes: sim.cloud_passes,
+        measured_evictions,
+        sim_evictions: sim.cloud_evictions,
+        sim_replays: sim.cloud_replays,
+        measured_upload_bytes,
+        sim_upload_bytes: counters.bytes_up,
+        sim_makespan_s: sim.makespan_s,
+    })
+}

@@ -340,7 +340,7 @@ fn reactor_sever_schedule_recovers(backend: ReactorBackend) {
     let seed = 83;
     let mut cfg = fault_cloud_config(1);
     cfg.reactor.backend = backend;
-    cfg.reactor.fault = Some(ReactorFault { sever_in_at: Some(7) });
+    cfg.reactor.fault = Some(ReactorFault { sever_in_at: Some(7), ..Default::default() });
     let server = spawn_server(seed, cfg);
 
     let link =

@@ -551,6 +551,98 @@ fn main() {
         );
     }
 
+    println!("\n== metrics: hist record + scheduler token path, off vs on ==");
+    {
+        // Budget: one enabled record is a bucket index plus three relaxed
+        // atomic RMWs — it must stay within ~20ns on commodity cores, and
+        // the disabled path is an Option test that folds to nothing.  Off
+        // legs run FIRST: resolving an enabled registry latches the
+        // process-global switch, and both pairs share this process.
+        use ce_collm::metrics::LatencyHist;
+        use std::hint::black_box;
+        let off: Option<Arc<LatencyHist>> = None;
+        let mut i = 0u64;
+        results.push(bench("hist record (off: None handle)", 0.2 * scale, || {
+            i = i.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            if let Some(h) = black_box(&off) {
+                h.record(i >> 34);
+            }
+            i
+        }));
+        let mk_sched = |metrics: bool| {
+            let dims = test_manifest().model;
+            let sdims = dims.clone();
+            let cfg = CloudConfig { metrics, ..CloudConfig::default() };
+            Scheduler::spawn(
+                dims,
+                cfg,
+                Arc::new(move || {
+                    let sdims = sdims.clone();
+                    let f: SessionFactory = Box::new(move |_| {
+                        Ok(Box::new(MockCloud::new(MockOracle::new(1), sdims.clone())) as _)
+                    });
+                    Ok(f)
+                }),
+            )
+            .unwrap()
+        };
+        let token_trip = |router: &ce_collm::coordinator::scheduler::Router,
+                          d: usize,
+                          req: u32| {
+            router
+                .send(1, SchedMsg::Upload {
+                    device: 1,
+                    session: 0,
+                    req_id: req,
+                    start_pos: 0,
+                    prompt_len: 8,
+                    payload: UploadPayload::Floats(vec![0.5; 8 * d]),
+                })
+                .unwrap();
+            let (tx, rx) = std::sync::mpsc::channel();
+            router
+                .send(1, SchedMsg::Infer {
+                    device: 1,
+                    session: 0,
+                    req_id: req,
+                    pos: 7,
+                    prompt_len: 8,
+                    deadline: None,
+                    reply: Reply::channel(tx),
+                })
+                .unwrap();
+            rx.recv().unwrap().unwrap()
+        };
+        let d = test_manifest().model.d_model;
+        // off leg before any enabled registry exists in the process
+        let sched_off = mk_sched(false);
+        let router_off = sched_off.router();
+        let mut req = 0u32;
+        results.push(bench("scheduler token path (metrics off)", 0.2 * scale, || {
+            req += 1;
+            token_trip(&router_off, d, req)
+        }));
+        sched_off.shutdown();
+        // the enabled legs: from here on the process-global latch is set
+        let on = Some(Arc::new(LatencyHist::new()));
+        let mut j = 0u64;
+        results.push(bench("hist record (on)", 0.2 * scale, || {
+            j = j.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            if let Some(h) = black_box(&on) {
+                h.record(j >> 34);
+            }
+            j
+        }));
+        let sched_on = mk_sched(true);
+        let router_on = sched_on.router();
+        let mut req = 0u32;
+        results.push(bench("scheduler token path (metrics on)", 0.2 * scale, || {
+            req += 1;
+            token_trip(&router_on, d, req)
+        }));
+        sched_on.shutdown();
+    }
+
     println!("\n== eval ==");
     let a = "the machine is a test of a system's ability to exhibit intelligent behaviour";
     let b = "the machine is a test of a network's ability to produce intelligent behaviour";

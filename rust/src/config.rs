@@ -376,6 +376,16 @@ pub struct CloudConfig {
     /// `&'static str` so the config stays `Copy`; CLI callers leak the
     /// argument string (a one-off, process-lifetime allocation).
     pub trace: Option<&'static str>,
+    /// Latency-histogram instrumentation (see [`crate::metrics::hist`]):
+    /// `true` resolves the process-wide
+    /// [`MetricsRegistry`](crate::metrics::MetricsRegistry) at spawn,
+    /// every scheduler worker / reactor shard / edge link records
+    /// per-stage latencies into it, and the reactor serves a Prometheus
+    /// text snapshot to any connection that opens with `GET ` instead of
+    /// a `Hello`.  `false` (the default) falls back to the `CE_METRICS`
+    /// env var, and with neither set every instrumentation site pays a
+    /// single `Option` check — the same discipline as `trace`.
+    pub metrics: bool,
 }
 
 impl Default for CloudConfig {
@@ -388,6 +398,7 @@ impl Default for CloudConfig {
             session_ttl_s: None,
             reactor: ReactorConfig::default(),
             trace: None,
+            metrics: false,
         }
     }
 }
@@ -488,6 +499,12 @@ mod tests {
     fn trace_is_off_by_default() {
         // recording must be strictly opt-in (config or CE_TRACE env)
         assert_eq!(CloudConfig::default().trace, None);
+    }
+
+    #[test]
+    fn metrics_off_by_default() {
+        // histograms must be strictly opt-in (config or CE_METRICS env)
+        assert!(!CloudConfig::default().metrics);
     }
 
     #[test]

@@ -48,8 +48,9 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use crate::config::CloudConfig;
+use crate::metrics::MetricsRegistry;
 use crate::model::manifest::ModelDims;
-use crate::net::listener::bind_shard_listeners;
+use crate::net::listener::{bind_shard_listeners, share_listener};
 use crate::net::reactor::{Reactor, ReactorStats};
 
 pub use crate::coordinator::context_store::{ContextStore, ContextStoreStats};
@@ -89,15 +90,17 @@ impl CloudServer {
             .local_addr()?;
         let scheduler = Scheduler::spawn(dims.clone(), cfg, Arc::new(builder))?;
         // the fleet shares the scheduler's sink so reactor frames and
-        // scheduler events interleave in one seq-ordered recording
+        // scheduler events interleave in one seq-ordered recording —
+        // and the scheduler's registry, so one scrape shows both layers
         let sink = scheduler.trace_sink();
-        let reactor = Reactor::spawn_fleet_traced(
+        let reactor = Reactor::spawn_fleet_full(
             scheduler.router(),
             dims,
             cfg.reactor,
             listeners,
             mode,
             sink,
+            MetricsRegistry::resolve(cfg.metrics),
         )?;
         Ok(CloudServer { addr: bound, scheduler: Some(scheduler), reactor: Some(reactor) })
     }
@@ -119,8 +122,16 @@ impl CloudServer {
         let addr = listener.local_addr()?;
         let scheduler = Scheduler::spawn(dims.clone(), cfg, Arc::new(builder))?;
         let sink = scheduler.trace_sink();
-        let reactor =
-            Reactor::spawn_traced(scheduler.router(), dims, cfg.reactor, Some(listener), sink)?;
+        let (mode, listeners) = share_listener(listener, cfg.reactor.resolved_shards());
+        let reactor = Reactor::spawn_fleet_full(
+            scheduler.router(),
+            dims,
+            cfg.reactor,
+            listeners,
+            mode,
+            sink,
+            MetricsRegistry::resolve(cfg.metrics),
+        )?;
         Ok(CloudServer { addr, scheduler: Some(scheduler), reactor: Some(reactor) })
     }
 
@@ -182,6 +193,9 @@ impl CloudServer {
             stats.reactor.merge(s);
         }
         stats.reactor_shards = shard_finals;
+        // one stable single-line JSON snapshot — the machine-grepable
+        // counterpart of the per-shard debug lines above
+        log::info!("cloud final stats: {}", stats.to_json());
         stats
     }
 }

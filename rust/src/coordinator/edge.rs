@@ -41,7 +41,7 @@ use anyhow::{Context, Result};
 use crate::config::{DeploymentConfig, ReconnectPolicy};
 use crate::coordinator::policy::{ExitPoint, TokenPolicy};
 use crate::coordinator::protocol::{Channel, Message, NO_REQ, UPLOAD_HDR_LEN};
-use crate::metrics::{CostBreakdown, RunCounters};
+use crate::metrics::{CostBreakdown, LatencyHist, MetricsRegistry, RunCounters};
 use crate::model::tokenizer::Tokenizer;
 use crate::net::codec::frame_wire_len;
 use crate::net::transport::{TcpTransport, Transport};
@@ -173,6 +173,23 @@ pub struct CloudLink {
     trace_upload_n: AtomicU64,
     trace_infer_send_n: AtomicU64,
     trace_infer_recv_n: AtomicU64,
+    /// Edge-side latency histograms (`ce_edge_cloud_rtt_ns`,
+    /// `ce_edge_ping_rtt_ns`), resolved from `CE_METRICS` when the link
+    /// is built; `None` keeps both record sites at one `Option` check.
+    hist_cloud_rtt: Option<Arc<LatencyHist>>,
+    hist_ping_rtt: Option<Arc<LatencyHist>>,
+}
+
+/// Resolve the edge's two RTT histograms from the environment-gated
+/// registry (the edge has no `CloudConfig`, so `CE_METRICS` is its only
+/// switch).
+fn edge_rtt_hists() -> (Option<Arc<LatencyHist>>, Option<Arc<LatencyHist>>) {
+    match MetricsRegistry::resolve(false) {
+        Some(reg) => {
+            (Some(reg.hist("ce_edge_cloud_rtt_ns")), Some(reg.hist("ce_edge_ping_rtt_ns")))
+        }
+        None => (None, None),
+    }
 }
 
 /// Send both `Hello`s and wait for both `Ack`s.  Waiting for the
@@ -278,6 +295,7 @@ impl CloudLink {
         let upload_dead = Arc::new(AtomicBool::new(false));
         let (upload_tx, uploader) =
             spawn_uploader(upload, Arc::clone(&keepalive_bits), Arc::clone(&upload_dead))?;
+        let (hist_cloud_rtt, hist_ping_rtt) = edge_rtt_hists();
         Ok(Self {
             device_id,
             session,
@@ -298,6 +316,8 @@ impl CloudLink {
             trace_upload_n: AtomicU64::new(0),
             trace_infer_send_n: AtomicU64::new(0),
             trace_infer_recv_n: AtomicU64::new(0),
+            hist_cloud_rtt,
+            hist_ping_rtt,
         })
     }
 
@@ -346,6 +366,7 @@ impl CloudLink {
                         Arc::clone(&keepalive_bits),
                         Arc::clone(&upload_dead),
                     )?;
+                    let (hist_cloud_rtt, hist_ping_rtt) = edge_rtt_hists();
                     return Ok(Self {
                         device_id,
                         session,
@@ -366,6 +387,8 @@ impl CloudLink {
                         trace_upload_n: AtomicU64::new(0),
                         trace_infer_send_n: AtomicU64::new(0),
                         trace_infer_recv_n: AtomicU64::new(0),
+                        hist_cloud_rtt,
+                        hist_ping_rtt,
                     });
                 }
                 Err(e) => last_err = Some(e),
@@ -400,6 +423,9 @@ impl CloudLink {
                 .context("keepalive ping timed out with no pong")?;
             match Message::decode(&frame)? {
                 Message::Pong { nonce: n } if n == nonce => {
+                    if let Some(h) = &self.hist_ping_rtt {
+                        h.record_duration(t0.elapsed());
+                    }
                     let rtt_ms = t0.elapsed().as_secs_f64() * 1e3;
                     self.ping_rtt_last_ms = rtt_ms;
                     return Ok(rtt_ms);
@@ -1179,6 +1205,9 @@ impl<E: EdgeEngine> EdgeClient<E> {
                         continue; // stale answer for an abandoned deferral
                     }
                     let _ = conf;
+                    if let Some(h) = &link.hist_cloud_rtt {
+                        h.record((rtt * 1e9) as u64);
+                    }
                     cost.cloud_s += compute_s as f64;
                     cost.comm_s += (rtt - compute_s as f64).max(0.0);
                     return Ok(CloudAnswer::Answered { token });

@@ -51,7 +51,7 @@
 //!   deadline; with nothing parked the loop blocks on the next message.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -63,11 +63,13 @@ use crate::config::CloudConfig;
 use crate::coordinator::content_manager::{Coverage, PlanReq, WorkPlan};
 use crate::coordinator::context_store::{ContextStore, ContextStoreStats};
 use crate::coordinator::protocol::UPLOAD_HDR_LEN;
+use crate::metrics::{LatencyHist, MetricsRegistry};
 use crate::model::manifest::ModelDims;
 use crate::net::reactor::ReactorStats;
 use crate::quant::{self, Precision};
 use crate::runtime::traits::{BatchItem, CloudEngine};
 use crate::trace::{Ev, TraceSink};
+use crate::util::json::Json;
 
 pub use crate::coordinator::context_store::SessionFactory;
 
@@ -271,6 +273,55 @@ pub struct CloudStats {
 }
 
 impl CloudStats {
+    /// The whole snapshot as one [`util::json`](crate::util::json) value.
+    /// `Json`'s `Display` is compact and key-sorted, so the rendered
+    /// string is a stable single line — the shape `CloudServer::shutdown`
+    /// and the CLI print for scripts/CI to scrape without a parser for
+    /// pretty output.
+    pub fn to_json(&self) -> Json {
+        let num = Json::Num;
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("requests_served".into(), num(self.requests_served as f64));
+        o.insert("uploads".into(), num(self.uploads as f64));
+        o.insert("busy_s".into(), num(self.busy_s));
+        o.insert("active_devices".into(), num(self.active_devices as f64));
+        o.insert("pending_floats".into(), num(self.pending_floats as f64));
+        o.insert("parked".into(), num(self.parked as f64));
+        o.insert("deadline_expired".into(), num(self.deadline_expired as f64));
+        o.insert("sessions_resumed".into(), num(self.sessions_resumed as f64));
+        o.insert("stale_resumes".into(), num(self.stale_resumes as f64));
+        o.insert("engine_passes".into(), num(self.engine_passes as f64));
+        o.insert("batched_items".into(), num(self.batched_items as f64));
+        o.insert("batch_devices_max".into(), num(self.batch_devices_max as f64));
+        o.insert("workers".into(), num(self.workers as f64));
+        o.insert("trace_events".into(), num(self.trace_events as f64));
+        o.insert("trace_dropped".into(), num(self.trace_dropped as f64));
+        let mut ctx = std::collections::BTreeMap::new();
+        ctx.insert("resident_bytes".into(), num(self.context.resident_bytes as f64));
+        ctx.insert("evictions".into(), num(self.context.evictions as f64));
+        ctx.insert("ttl_reaps".into(), num(self.context.ttl_reaps as f64));
+        ctx.insert("replays".into(), num(self.context.replays as f64));
+        o.insert("context".into(), Json::Obj(ctx));
+        let mut r = std::collections::BTreeMap::new();
+        r.insert("backend".into(), Json::Str(self.reactor.backend.to_string()));
+        r.insert("accept_mode".into(), Json::Str(self.reactor.accept_mode.to_string()));
+        r.insert("shards".into(), num(self.reactor_shards.len() as f64));
+        r.insert("accepts".into(), num(self.reactor.accepts as f64));
+        r.insert("conns_opened".into(), num(self.reactor.conns_opened as f64));
+        r.insert("conns_closed".into(), num(self.reactor.conns_closed as f64));
+        r.insert("conns_rejected".into(), num(self.reactor.conns_rejected as f64));
+        r.insert("evicted_slow".into(), num(self.reactor.evicted_slow as f64));
+        r.insert("frames_in".into(), num(self.reactor.frames_in as f64));
+        r.insert("frames_out".into(), num(self.reactor.frames_out as f64));
+        r.insert("read_pauses".into(), num(self.reactor.read_pauses as f64));
+        r.insert("hello_timeouts".into(), num(self.reactor.hello_timeouts as f64));
+        r.insert("idle_timeouts".into(), num(self.reactor.idle_timeouts as f64));
+        r.insert("open_conns".into(), num(self.reactor.open_conns as f64));
+        r.insert("wakes".into(), num(self.reactor.wakes as f64));
+        o.insert("reactor".into(), Json::Obj(r));
+        Json::Obj(o)
+    }
+
     fn merge(&mut self, o: &CloudStats) {
         self.requests_served += o.requests_served;
         self.uploads += o.uploads;
@@ -293,17 +344,25 @@ impl CloudStats {
     }
 }
 
+/// A scheduler message plus its optional enqueue timestamp (stamped by
+/// the [`Router`] only when metrics are on, so the off path never calls
+/// `Instant::now`): the worker's queue-wait histogram is the delta
+/// between this stamp and the dequeue.
+type Queued = (Option<Instant>, SchedMsg);
+
 /// Cheap cloneable handle routing device-addressed messages to the worker
 /// that owns the device.  The reactor (and any connection-side code)
 /// holds its own clone.
 #[derive(Clone)]
 pub struct Router {
-    txs: Vec<Sender<SchedMsg>>,
+    txs: Vec<Sender<Queued>>,
     /// Messages sent but not yet taken off each worker's queue — the
     /// reactor's backpressure signal (it pauses reading from sockets
     /// whose owning worker has fallen too far behind, instead of
     /// buffering unboundedly).
     depths: Vec<Arc<AtomicUsize>>,
+    /// Stamp enqueue times onto messages (metrics on).
+    stamp: bool,
 }
 
 impl Router {
@@ -325,8 +384,9 @@ impl Router {
     /// gauge consistent (every enqueue counted; workers decrement on
     /// dequeue).  Also carries the scheduler's own control traffic.
     fn send_to(&self, w: usize, msg: SchedMsg) -> Result<()> {
+        let at = if self.stamp { Some(Instant::now()) } else { None };
         self.depths[w].fetch_add(1, Ordering::Relaxed);
-        if self.txs[w].send(msg).is_err() {
+        if self.txs[w].send((at, msg)).is_err() {
             self.depths[w].fetch_sub(1, Ordering::Relaxed);
             return Err(anyhow!("scheduler worker gone"));
         }
@@ -360,6 +420,10 @@ impl Scheduler {
         // GLOBAL bound — the replayer re-splits it exactly like the loop
         // below does.
         let sink = TraceSink::resolve(cfg.trace);
+        // Same resolve discipline for histograms: explicit config wins,
+        // CE_METRICS enables ambiently, and `None` keeps every record
+        // site a single `Option` check.
+        let metrics = MetricsRegistry::resolve(cfg.metrics);
         if let Some(s) = &sink {
             let mut ev = Ev::new("run_meta")
                 .u("workers", workers as u64)
@@ -383,12 +447,13 @@ impl Scheduler {
         let mut depths = Vec::with_capacity(workers);
         let mut handles = Vec::with_capacity(workers);
         for w in 0..workers {
-            let (tx, rx) = channel::<SchedMsg>();
+            let (tx, rx) = channel::<Queued>();
             let depth = Arc::new(AtomicUsize::new(0));
             let builder = Arc::clone(&builder);
             let dims = dims.clone();
             let wdepth = Arc::clone(&depth);
             let wsink = sink.clone();
+            let wmetrics = metrics.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("cloud-worker-{w}"))
                 .spawn(move || {
@@ -399,13 +464,14 @@ impl Scheduler {
                             return CloudStats::default();
                         }
                     };
-                    Worker::new(dims, factory, &wcfg, wdepth, w as u64, wsink).run(rx)
+                    Worker::new(dims, factory, &wcfg, wdepth, w as u64, wsink, wmetrics).run(rx)
                 })?;
             txs.push(tx);
             depths.push(depth);
             handles.push(handle);
         }
-        Ok(Scheduler { router: Router { txs, depths }, handles, sink })
+        let stamp = metrics.is_some();
+        Ok(Scheduler { router: Router { txs, depths, stamp }, handles, sink })
     }
 
     pub fn router(&self) -> Router {
@@ -468,7 +534,55 @@ struct Parked {
     /// Effective expiry: the client's deadline capped by the worker's
     /// max-park bound, so every parked request eventually resolves.
     deadline: Instant,
+    /// When the request entered the parking lot; the park-wait histogram
+    /// records the delta when its token fans out.
+    parked_at: Instant,
     reply: Reply,
+}
+
+/// Cached registry handles for one worker's hot-path record sites — each
+/// a single pre-resolved `Arc`, so recording is one atomic add with no
+/// name lookup anywhere near the engine.
+struct WorkerMetrics {
+    park_wait: Arc<LatencyHist>,
+    queue_wait: Arc<LatencyHist>,
+    batch_pass: Arc<LatencyHist>,
+    pass_items: Arc<LatencyHist>,
+    gauges: Vec<(Arc<AtomicI64>, fn(&CloudStats) -> i64)>,
+}
+
+impl WorkerMetrics {
+    fn new(reg: &MetricsRegistry, w: u64) -> WorkerMetrics {
+        let g = |name: &str| reg.gauge(&format!("{name}{{worker=\"{w}\"}}"));
+        let gauges: Vec<(Arc<AtomicI64>, fn(&CloudStats) -> i64)> = vec![
+            (g("ce_sched_requests_served"), |s| s.requests_served as i64),
+            (g("ce_sched_uploads"), |s| s.uploads as i64),
+            (g("ce_sched_parked"), |s| s.parked as i64),
+            (g("ce_sched_engine_passes"), |s| s.engine_passes as i64),
+            (g("ce_sched_batched_items"), |s| s.batched_items as i64),
+            (g("ce_sched_busy_us"), |s| (s.busy_s * 1e6) as i64),
+            (g("ce_store_resident_bytes"), |s| s.context.resident_bytes as i64),
+            (g("ce_store_evictions"), |s| s.context.evictions as i64),
+            (g("ce_store_ttl_reaps"), |s| s.context.ttl_reaps as i64),
+            (g("ce_store_replays"), |s| s.context.replays as i64),
+        ];
+        WorkerMetrics {
+            park_wait: reg.hist(&format!("ce_sched_park_wait_ns{{worker=\"{w}\"}}")),
+            queue_wait: reg.hist(&format!("ce_sched_queue_wait_ns{{worker=\"{w}\"}}")),
+            batch_pass: reg.hist(&format!("ce_sched_batch_pass_ns{{worker=\"{w}\"}}")),
+            pass_items: reg.hist(&format!("ce_sched_pass_items{{worker=\"{w}\"}}")),
+            gauges,
+        }
+    }
+
+    /// Publish the worker's counter snapshot into the registry gauges so
+    /// a `/metrics` scrape never needs a blocking stats round trip into
+    /// the worker (the reactor renders from these atomics directly).
+    fn publish(&self, stats: &CloudStats) {
+        for (gauge, read) in &self.gauges {
+            gauge.store(read(stats), Ordering::Relaxed);
+        }
+    }
 }
 
 /// Most messages one greedy drain takes off the queue before the worker
@@ -497,6 +611,9 @@ struct Worker {
     /// Trace recorder; `None` (the default) keeps the hot path at one
     /// `Option` check per tap site.
     sink: Option<Arc<TraceSink>>,
+    /// Pre-resolved histogram/gauge handles; `None` (the default) keeps
+    /// every record site at one `Option` check, same as `sink`.
+    metrics: Option<WorkerMetrics>,
     stats: CloudStats,
 }
 
@@ -508,6 +625,7 @@ impl Worker {
         depth: Arc<AtomicUsize>,
         windex: u64,
         sink: Option<Arc<TraceSink>>,
+        metrics: Option<Arc<MetricsRegistry>>,
     ) -> Worker {
         Worker {
             store: ContextStore::new(&dims, cfg.memory_budget_bytes, cfg.session_ttl_s),
@@ -519,6 +637,7 @@ impl Worker {
             depth,
             windex,
             sink,
+            metrics: metrics.map(|reg| WorkerMetrics::new(&reg, windex)),
             stats: CloudStats { workers: 1, ..CloudStats::default() },
         }
     }
@@ -542,12 +661,28 @@ impl Worker {
         session != 0 && self.session_of.get(&device).is_some_and(|&cur| cur != session)
     }
 
-    /// One message dequeued: keep [`Router::queue_depth`] honest.
-    fn dequeued(&self) {
+    /// One message dequeued: keep [`Router::queue_depth`] honest and
+    /// record how long it sat on the queue (when the router stamped it).
+    fn dequeued(&self, at: Option<Instant>) {
         self.depth.fetch_sub(1, Ordering::Relaxed);
+        if let (Some(m), Some(at)) = (&self.metrics, at) {
+            m.queue_wait.record_duration(at.elapsed());
+        }
     }
 
-    fn run(mut self, rx: Receiver<SchedMsg>) -> CloudStats {
+    /// Refresh the gauges and mirror them into the registry so a live
+    /// scrape reads fresh values without a round trip into this thread.
+    fn publish_metrics(&mut self) {
+        if self.metrics.is_none() {
+            return;
+        }
+        self.refresh_gauges();
+        if let Some(m) = &self.metrics {
+            m.publish(&self.stats);
+        }
+    }
+
+    fn run(mut self, rx: Receiver<Queued>) -> CloudStats {
         'serve: loop {
             // Block for the next message; with parked deadlines armed,
             // wake at the earliest one to expire it, and with a session
@@ -556,8 +691,8 @@ impl Worker {
             let msg = match self.next_deadline() {
                 Some(deadline) => {
                     match rx.recv_timeout(deadline.saturating_duration_since(Instant::now())) {
-                        Ok(m) => {
-                            self.dequeued();
+                        Ok((at, m)) => {
+                            self.dequeued(at);
                             Some(m)
                         }
                         Err(RecvTimeoutError::Timeout) => None,
@@ -565,8 +700,8 @@ impl Worker {
                     }
                 }
                 None => match rx.recv() {
-                    Ok(m) => {
-                        self.dequeued();
+                    Ok((at, m)) => {
+                        self.dequeued(at);
                         Some(m)
                     }
                     Err(_) => break,
@@ -576,6 +711,7 @@ impl Worker {
                 None => {
                     self.expire_overdue(Instant::now());
                     self.sweep_store();
+                    self.publish_metrics();
                 }
                 Some(first) => {
                     // Greedy drain: fold every already-queued message
@@ -592,8 +728,8 @@ impl Worker {
                             break;
                         }
                         match rx.try_recv() {
-                            Ok(m) => {
-                                self.dequeued();
+                            Ok((at, m)) => {
+                                self.dequeued(at);
                                 msg = m;
                                 drained += 1;
                             }
@@ -619,8 +755,8 @@ impl Worker {
                         let mut extra = 0;
                         while extra < MAX_DRAIN {
                             match rx.try_recv() {
-                                Ok(m) => {
-                                    self.dequeued();
+                                Ok((at, m)) => {
+                                    self.dequeued(at);
                                     if !self.handle(m) {
                                         break 'serve;
                                     }
@@ -630,10 +766,14 @@ impl Worker {
                             }
                         }
                     }
+                    self.publish_metrics();
                 }
             }
         }
         self.refresh_gauges();
+        if let Some(m) = &self.metrics {
+            m.publish(&self.stats);
+        }
         // final per-worker counters: the replayer checks its own end
         // state against the sum of these
         let s = self.stats.clone();
@@ -733,7 +873,8 @@ impl Worker {
                     reply.send(Ok(InferOutcome::Evicted));
                     return true;
                 }
-                let cap = Instant::now() + self.max_park;
+                let now = Instant::now();
+                let cap = now + self.max_park;
                 let deadline = deadline.map_or(cap, |d| d.min(cap));
                 self.trace_with(|w| {
                     Ev::new("park")
@@ -745,7 +886,7 @@ impl Worker {
                 self.parked
                     .entry(device)
                     .or_default()
-                    .push(Parked { req_id, pos, prompt_len, deadline, reply });
+                    .push(Parked { req_id, pos, prompt_len, deadline, parked_at: now, reply });
             }
             SchedMsg::End { device, session, req_id } => {
                 self.trace_with(|w| {
@@ -839,6 +980,9 @@ impl Worker {
                 // would have already released
                 self.sweep_store();
                 self.refresh_gauges();
+                if let Some(m) = &self.metrics {
+                    m.publish(&self.stats);
+                }
                 let _ = reply.send(self.stats.clone());
             }
             SchedMsg::Shutdown => return false,
@@ -1017,12 +1161,17 @@ impl Worker {
             };
             served.push((device, ready, outcome));
         }
-        let elapsed = t0.elapsed().as_secs_f64();
+        let pass_dur = t0.elapsed();
+        let elapsed = pass_dur.as_secs_f64();
         if pass_devices > 0 {
             self.stats.busy_s += elapsed;
             self.stats.engine_passes += 1;
             self.stats.batched_items += pass_items;
             self.stats.batch_devices_max = self.stats.batch_devices_max.max(pass_devices);
+            if let Some(m) = &self.metrics {
+                m.batch_pass.record_duration(pass_dur);
+                m.pass_items.record_value(pass_items);
+            }
             self.trace_with(|w| {
                 Ev::new("pass")
                     .u("worker", w)
@@ -1039,6 +1188,9 @@ impl Worker {
                     for p in ready {
                         if let Some(&(token, conf)) = tokens.get(&p.pos) {
                             self.stats.requests_served += 1;
+                            if let Some(m) = &self.metrics {
+                                m.park_wait.record_duration(p.parked_at.elapsed());
+                            }
                             // conf recorded as its exact f32 bit pattern:
                             // "bit-identical" is checkable, not aspirational
                             self.trace_with(|w| {

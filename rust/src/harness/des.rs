@@ -20,7 +20,7 @@ use crate::config::AblationFlags;
 use crate::coordinator::policy::ExitPoint;
 use crate::harness::cost::CostModel;
 use crate::harness::trace::Trace;
-use crate::metrics::{CostBreakdown, RunCounters};
+use crate::metrics::{render_hist, CostBreakdown, HistSnapshot, LatencyHist, RunCounters};
 use crate::model::manifest::ModelDims;
 use crate::net::profiles::LinkProfile;
 use crate::net::simulated::SimLink;
@@ -151,9 +151,37 @@ pub struct SimOutcome {
     pub cloud_ttl_reaps: u64,
     /// Mid-request evictions recovered by a priced history replay.
     pub cloud_replays: u64,
+    /// Simulated-clock latency distributions, priced in the same units
+    /// and bucket grid as the live registry's families so simulated and
+    /// measured percentiles compare directly: upload-dependency park
+    /// per parked call (`ce_sched_park_wait_ns`), worker-queue wait per
+    /// call (`ce_sched_queue_wait_ns`), engine-pass duration per pass
+    /// (`ce_sched_batch_pass_ns`), and the edge-observed cloud round
+    /// trip per call (`ce_edge_cloud_rtt_ns`).
+    pub hist_park_wait: HistSnapshot,
+    pub hist_queue_wait: HistSnapshot,
+    pub hist_pass: HistSnapshot,
+    pub hist_rtt: HistSnapshot,
 }
 
 impl SimOutcome {
+    /// Render the simulated distributions in the exact exposition
+    /// schema the live `GET /metrics` scrape uses, so a simulated and a
+    /// measured snapshot diff family-for-family.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, snap) in [
+            ("ce_sched_park_wait_ns", &self.hist_park_wait),
+            ("ce_sched_queue_wait_ns", &self.hist_queue_wait),
+            ("ce_sched_batch_pass_ns", &self.hist_pass),
+            ("ce_edge_cloud_rtt_ns", &self.hist_rtt),
+        ] {
+            out.push_str(&format!("# TYPE {name} histogram\n"));
+            out.push_str(&render_hist(name, "", snap));
+        }
+        out
+    }
+
     /// Sum of per-client breakdowns (the paper's Table 2 reports the
     /// cumulative cost over all cases of a single client).
     pub fn summed(&self) -> (CostBreakdown, RunCounters) {
@@ -171,6 +199,9 @@ impl SimOutcome {
 /// A pending cloud request from one client.
 struct CloudCall {
     client: usize,
+    /// When the edge handed the request to its uplink — the start of
+    /// the round trip the edge-side RTT histogram prices.
+    sent_s: f64,
     arrive_s: f64,
     /// When the uploads this request depends on have all arrived.
     ready_s: f64,
@@ -374,6 +405,7 @@ impl<'a> ClientSim<'a> {
         self.counters.tokens_cloud += tr.steps.len();
         Some(CloudCall {
             client: self.id,
+            sent_s: self.edge_t,
             arrive_s: arrive,
             ready_s: arrive,
             busy_s: busy,
@@ -433,6 +465,7 @@ impl<'a> ClientSim<'a> {
             }
             return Some(CloudCall {
                 client: self.id,
+                sent_s: self.edge_t,
                 arrive_s: req_arrive,
                 ready_s: req_arrive,
                 busy_s: busy,
@@ -559,6 +592,7 @@ impl<'a> ClientSim<'a> {
                         self.edge_t = arrived;
                         ready = arrived;
                     }
+                    let sent_s = self.edge_t;
                     let req_arrive = self.uplink.transfer(self.edge_t, REQ_BYTES);
                     self.counters.bytes_up += REQ_BYTES as u64;
                     self.cost.comm_s += req_arrive - self.edge_t;
@@ -592,6 +626,7 @@ impl<'a> ClientSim<'a> {
                     };
                     return Some(CloudCall {
                         client: self.id,
+                        sent_s,
                         arrive_s: req_arrive,
                         ready_s: ready.max(req_arrive),
                         busy_s: busy,
@@ -609,7 +644,9 @@ impl<'a> ClientSim<'a> {
 
     /// Scheduler callback: the cloud answered at `resp_start` after
     /// `busy_s` of compute; response transfer completes the round trip.
-    fn resume(&mut self, cloud_done: f64, busy_s: f64, resp_bytes: usize) {
+    /// Returns when the response reached the edge (the end of the round
+    /// trip the RTT histogram prices).
+    fn resume(&mut self, cloud_done: f64, busy_s: f64, resp_bytes: usize) -> f64 {
         let resp_arrive = self.downlink.transfer(cloud_done, resp_bytes);
         self.counters.bytes_down += resp_bytes as u64;
         self.cost.cloud_s += busy_s;
@@ -621,6 +658,7 @@ impl<'a> ClientSim<'a> {
             self.req_idx += 1;
             self.step_idx = 0;
         }
+        resp_arrive
     }
 
     fn finish(&mut self) {
@@ -707,6 +745,13 @@ pub fn simulate(
     let mut worker_free = vec![0.0f64; workers];
     let mut cloud_busy_total = 0.0f64;
     let mut cloud_passes = 0u64;
+    // simulated-clock counterparts of the live instrumented sites;
+    // priced at serve time from the event times the law already tracks
+    let hist_park_wait = LatencyHist::new();
+    let hist_queue_wait = LatencyHist::new();
+    let hist_pass = LatencyHist::new();
+    let hist_rtt = LatencyHist::new();
+    let s_to_ns = |s: f64| (s.max(0.0) * 1e9) as u64;
     while let Some(entry) = heap.pop() {
         // skip stale entries (their call was co-served by an earlier pass)
         match &pending[entry.client] {
@@ -793,6 +838,7 @@ pub fn simulate(
         worker_free[w] = done;
         cloud_busy_total += busy_pass;
         cloud_passes += 1;
+        hist_pass.record(s_to_ns(busy_pass));
         let pass_clients: Vec<usize> = calls.iter().map(|c| c.client).collect();
         for call in calls {
             // the served context is resident and MRU (the real store's
@@ -804,10 +850,17 @@ pub fn simulate(
                     alive: true,
                 };
             }
+            // the park site mirrors the live scheduler's: only a call
+            // whose uploads lagged its request actually parked
+            if call.ready_s > call.arrive_s {
+                hist_park_wait.record(s_to_ns(call.ready_s - call.arrive_s));
+            }
+            hist_queue_wait.record(s_to_ns(start - call.ready_s.max(call.arrive_s)));
             let c = &mut clients[call.client];
             // the whole pass is attributed to every call it answered,
             // matching the real scheduler's compute_s accounting
-            c.resume(done, busy_pass, call.resp_bytes);
+            let resp_arrive = c.resume(done, busy_pass, call.resp_bytes);
+            hist_rtt.record(s_to_ns(resp_arrive - call.sent_s));
             if let Some(next) = c.advance() {
                 seq += 1;
                 heap.push(HeapEntry { arrive_s: next.arrive_s, client: next.client, seq });
@@ -854,6 +907,10 @@ pub fn simulate(
         cloud_evictions,
         cloud_ttl_reaps,
         cloud_replays,
+        hist_park_wait: hist_park_wait.snapshot(),
+        hist_queue_wait: hist_queue_wait.snapshot(),
+        hist_pass: hist_pass.snapshot(),
+        hist_rtt: hist_rtt.snapshot(),
     };
     for c in clients {
         debug_assert!(c.done);
@@ -1248,6 +1305,33 @@ mod tests {
         assert_eq!(ak.reconnects, hk.reconnects);
         assert_eq!(ak.bytes_up, hk.bytes_up);
         assert_eq!(ac, hc);
+    }
+
+    #[test]
+    fn simulated_histograms_follow_the_live_schema() {
+        let pattern = [Cloud, Exit1, Cloud, Exit2, Cloud];
+        let traces = vec![vec![mk_trace(12, &pattern); 3]];
+        let out =
+            simulate(&traces, &dims(), &cost(), &cfg(Strategy::CeCollm(AblationFlags::default())));
+        assert_eq!(out.hist_pass.count(), out.cloud_passes, "one pass sample per pass");
+        assert_eq!(
+            out.hist_rtt.count(),
+            out.summed().1.cloud_requests as u64,
+            "one round trip per cloud call"
+        );
+        let text = out.render_prometheus();
+        let exp = crate::metrics::parse_exposition(&text).expect("exposition must parse");
+        for name in
+            ["ce_sched_park_wait_ns", "ce_sched_queue_wait_ns", "ce_sched_batch_pass_ns",
+             "ce_edge_cloud_rtt_ns"]
+        {
+            assert_eq!(exp.types.get(name).map(String::as_str), Some("histogram"), "{name}");
+        }
+        let p50 = exp.hist_quantile("ce_edge_cloud_rtt_ns", &[], 0.5).expect("rtt quantile");
+        assert!(p50 > 0.0, "simulated round trips take simulated time");
+        // quantiles priced by the simulated clock bound the recorded max
+        let p99 = out.hist_rtt.quantile(0.99);
+        assert!(p99 <= out.hist_rtt.max as f64 + 1.0, "{p99} vs {}", out.hist_rtt.max);
     }
 
     #[test]

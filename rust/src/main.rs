@@ -10,6 +10,7 @@
 //!   run-edge <prompt>    run an edge client against a cloud server
 //!   trace-record <file>  record a short mock e2e run (TCP, CE_TRACE twin)
 //!   trace-replay <file>  replay a recorded trace, assert bit-identical
+//!   stats                scrape a running server's /metrics, pretty-print
 //!   calibrate            measure per-call costs and print the cost model
 //!
 //! Common flags: --artifacts DIR (default "artifacts"), --prompts N,
@@ -35,6 +36,109 @@ fn main() {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
+}
+
+#[cfg(unix)]
+mod sigint {
+    //! Minimal SIGINT latch over libc's `signal(2)` (already linked by
+    //! std) — the handler only flips an atomic, the serve loop polls it.
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static HIT: AtomicBool = AtomicBool::new(false);
+    const SIGINT: i32 = 2;
+
+    extern "C" fn on_sigint(_sig: i32) {
+        HIT.store(true, Ordering::SeqCst);
+    }
+
+    pub fn install() {
+        extern "C" {
+            fn signal(signum: i32, handler: usize) -> usize;
+        }
+        unsafe {
+            signal(SIGINT, on_sigint as usize);
+        }
+    }
+
+    pub fn hit() -> bool {
+        HIT.load(Ordering::SeqCst)
+    }
+}
+
+/// One-shot scrape of the reactor's in-band `/metrics` endpoint: any
+/// shard sniffs the `GET ` prefix on a fresh connection, answers one
+/// HTTP/1.0 response, and closes — so read-to-EOF is the protocol.
+fn scrape_metrics(addr: &str) -> Result<String> {
+    use std::io::{Read, Write};
+    let mut s = std::net::TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    s.write_all(b"GET /metrics HTTP/1.0\r\n\r\n")?;
+    let mut raw = Vec::new();
+    s.read_to_end(&mut raw)?;
+    let text = String::from_utf8_lossy(&raw);
+    text.split_once("\r\n\r\n")
+        .map(|(_, body)| body.to_string())
+        .context("metrics response has no header/body split")
+}
+
+/// Render a parsed exposition for humans: histograms as percentile
+/// lines (ns families shown in microseconds), scalars verbatim.
+fn render_stats(body: &str) -> Result<String> {
+    use std::fmt::Write as _;
+    let exp = ce_collm::metrics::parse_exposition(body)
+        .map_err(|e| anyhow::anyhow!("bad exposition: {e}"))?;
+    let fmt_labels = |labels: &[(String, String)]| -> String {
+        if labels.is_empty() {
+            String::new()
+        } else {
+            let inner: Vec<String> =
+                labels.iter().map(|(k, v)| format!("{k}=\"{v}\"")).collect();
+            format!("{{{}}}", inner.join(","))
+        }
+    };
+    let mut out = String::new();
+    for (base, ty) in &exp.types {
+        if ty != "histogram" {
+            continue;
+        }
+        for s in exp.samples_named(&format!("{base}_count")) {
+            let labels: Vec<(&str, &str)> =
+                s.labels.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+            let q = |qv: f64| exp.hist_quantile(base, &labels, qv).unwrap_or(0.0);
+            let lbl = fmt_labels(&s.labels);
+            if base.ends_with("_ns") {
+                let _ = writeln!(
+                    out,
+                    "  {base}{lbl}: n={} p50={:.0}us p90={:.0}us p99={:.0}us",
+                    s.value as u64,
+                    q(0.50) / 1e3,
+                    q(0.90) / 1e3,
+                    q(0.99) / 1e3,
+                );
+            } else {
+                let _ = writeln!(
+                    out,
+                    "  {base}{lbl}: n={} p50={:.0} p90={:.0} p99={:.0}",
+                    s.value as u64,
+                    q(0.50),
+                    q(0.90),
+                    q(0.99),
+                );
+            }
+        }
+    }
+    let hist_part = |name: &str| {
+        ["_bucket", "_sum", "_count"].iter().any(|suf| {
+            name.strip_suffix(suf)
+                .is_some_and(|b| exp.types.get(b).is_some_and(|t| t == "histogram"))
+        })
+    };
+    for s in &exp.samples {
+        if hist_part(&s.name) {
+            continue;
+        }
+        let _ = writeln!(out, "  {}{}  {}", s.name, fmt_labels(&s.labels), s.value);
+    }
+    Ok(out)
 }
 
 fn experiment_config(args: &Args) -> ExperimentConfig {
@@ -171,6 +275,7 @@ fn run() -> Result<()> {
             .model;
             let mut cfg = CloudConfig::with_workers(workers);
             cfg.reactor.shards = args.get_parse("shards", 0usize); // 0 = auto
+            cfg.metrics = args.has("metrics");
             if let Some(path) = args.get("trace") {
                 // config wants &'static str; the path lives for the whole
                 // process anyway (serve-cloud never returns)
@@ -192,10 +297,40 @@ fn run() -> Result<()> {
                  artifacts: {artifacts})",
                 server.shards()
             );
+            if cfg.metrics {
+                println!("metrics: GET /metrics on {addr} (or `ce-collm stats --addr {addr}`)");
+            }
             println!("ready; Ctrl-C to stop");
+            #[cfg(unix)]
+            sigint::install();
             loop {
-                std::thread::sleep(std::time::Duration::from_secs(3600));
-                let _ = server.stats();
+                std::thread::sleep(std::time::Duration::from_millis(250));
+                #[cfg(unix)]
+                if sigint::hit() {
+                    eprintln!("SIGINT: shutting down");
+                    // shutdown() folds the fleet's final counters in; the
+                    // one-line JSON is the stable machine-readable record
+                    let stats = server.shutdown();
+                    println!("{}", stats.to_json());
+                    return Ok(());
+                }
+            }
+        }
+        "stats" => {
+            // scrape a running server's /metrics and pretty-print it;
+            // --watch re-scrapes every 2s until interrupted
+            let addr = args.get_or("addr", "127.0.0.1:7433");
+            let watch = args.has("watch");
+            loop {
+                let body = scrape_metrics(&addr)?;
+                if watch {
+                    println!("--- {addr} ---");
+                }
+                print!("{}", render_stats(&body)?);
+                if !watch {
+                    break;
+                }
+                std::thread::sleep(std::time::Duration::from_secs(2));
             }
         }
         "run-edge" => {
@@ -238,13 +373,16 @@ fn run() -> Result<()> {
             // recording on — the CI twin of `serve-cloud --trace` (no
             // artifacts needed); replay it with `trace-replay --seed N`
             let out = args.positional.get(1).context(
-                "usage: trace-record <out.jsonl> [--seed N] [--max-new N] [--workers N]",
+                "usage: trace-record <out.jsonl> [--seed N] [--max-new N] [--workers N] \
+                 [--metrics OUT.prom]",
             )?;
             let seed: u64 = args.get_parse("seed", 1u64);
             let workers: usize = args.get_parse("workers", 1);
+            let metrics_out = args.get("metrics").map(|p| p.to_string());
             let dims = ce_collm::model::manifest::test_manifest().model;
             let mut cfg = CloudConfig::with_workers(workers);
             cfg.trace = Some(Box::leak(out.to_string().into_boxed_str()));
+            cfg.metrics = metrics_out.is_some();
             let sdims = dims.clone();
             let server = CloudServer::bind("127.0.0.1:0", dims.clone(), cfg, move || {
                 let sdims = sdims.clone();
@@ -271,6 +409,17 @@ fn run() -> Result<()> {
                 link,
             );
             let gen = client.generate(&args.get_or("prompt", "a ci trace prompt"))?;
+            if let Some(path) = &metrics_out {
+                // scrape while the server is still up, refuse to write a
+                // bad artifact: empty or unparseable fails the run
+                let body = scrape_metrics(&server.addr.to_string())?;
+                let exp = ce_collm::metrics::parse_exposition(&body)
+                    .map_err(|e| anyhow::anyhow!("scraped metrics unparseable: {e}"))?;
+                anyhow::ensure!(!exp.samples.is_empty(), "scraped metrics are empty");
+                std::fs::write(path, &body)
+                    .with_context(|| format!("write metrics to {path}"))?;
+                println!("scraped {} metric samples -> {path}", exp.samples.len());
+            }
             let stats = server.shutdown();
             println!(
                 "recorded {} scheduler events ({} dropped) over {} served tokens -> {out}",
@@ -342,12 +491,16 @@ fn run() -> Result<()> {
                  \x20 run-edge <p>       edge client against a server\n\
                  \x20 trace-record <f>   record a short mock e2e run (TCP)\n\
                  \x20 trace-replay <f>   replay a recorded trace (mock engines)\n\
+                 \x20 stats              scrape and pretty-print a server's /metrics\n\
                  \x20 calibrate          print the measured cost model\n\n\
                  flags: --artifacts DIR --prompts N --repeats N --max-new N\n\
                  \x20      --link wifi|lte|fiber|lan|ideal --threshold T\n\
                  \x20      --clients N --addr HOST:PORT --seed N\n\
                  \x20      --workers N (serve-cloud scheduler pool)\n\
                  \x20      --trace PATH (serve-cloud: record a TRACE v1 JSONL)\n\
+                 \x20      --metrics (serve-cloud: enable the /metrics endpoint;\n\
+                 \x20                 trace-record: scrape to the given .prom PATH)\n\
+                 \x20      --watch (stats: re-scrape every 2s)\n\
                  \x20      --budget-ms N (run-edge per-token cloud latency budget)\n\
                  \x20      --addrs A,B,... (run-edge ordered failover endpoints)\n\
                  \x20      --des (trace-replay: cross-validate against the DES)"

@@ -1,0 +1,829 @@
+//! Lock-free log-bucketed latency histograms and the process-wide
+//! [`MetricsRegistry`] behind the live `/metrics` scrape endpoint.
+//!
+//! Design, in the same hand-rolled spirit as `util::json`:
+//!
+//! - [`LatencyHist`] is a fixed array of 64 `AtomicU64` buckets on a
+//!   power-of-√2 grid covering ~724ns .. ~1555s (everything below the first
+//!   edge lands in bucket 0, everything above the last finite edge in the
+//!   overflow bucket).  `record()` is wait-free: one `fetch_add` on the
+//!   bucket, one on the sum, one `fetch_max` on the max — all `Relaxed`.
+//!   Count is derived as the sum of buckets, so a snapshot's `_count` always
+//!   equals its last cumulative bucket by construction, even when read
+//!   concurrently with writers.
+//! - [`HistSnapshot`] is a plain copy that merges (`merge`) and answers
+//!   quantile queries (`quantile`) by cumulative walk with linear
+//!   interpolation inside the winning bucket, clamped to the observed max.
+//! - [`MetricsRegistry`] maps name → histogram/gauge/counter.  Labels are
+//!   encoded in the name (`ce_sched_park_wait_ns{worker="0"}`); the
+//!   Prometheus renderer groups series by base name and additionally emits a
+//!   merged unlabeled aggregate per family.
+//! - The registry is resolved like `TraceSink::resolve`: explicitly via
+//!   `CloudConfig::metrics`, or ambiently via the `CE_METRICS` env var.
+//!   Once enabled it latches on process-wide so every subsystem (scheduler
+//!   workers, reactor shards, edge link, DES consumers) shares one registry.
+//!
+//! Value-shaped histograms (batch widths, frame sizes) reuse the ns grid by
+//! scaling each value by [`VALUE_SCALE`]; the renderer un-scales the bucket
+//! bounds and sum for any family whose base name does not end in `_ns`, so
+//! exposition units are always the native ones.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+/// Number of histogram buckets (including the bucket-0 underflow catch-all
+/// and the top overflow bucket).
+pub const BUCKETS: usize = 64;
+
+/// Scale factor applied by [`LatencyHist::record_value`] so count/size
+/// histograms get sub-√2 resolution starting at 1 unit.  The Prometheus
+/// renderer divides bounds and `_sum` back down for non-`_ns` families.
+pub const VALUE_SCALE: u64 = 1000;
+
+/// Env var that ambiently enables the global metrics registry (any
+/// non-empty value other than `"0"`), mirroring `CE_TRACE`.
+pub const METRICS_ENV: &str = "CE_METRICS";
+
+/// Map a nanosecond value onto the √2 grid.
+///
+/// For `ns >= 512` the index is derived from `2*floor(log2 ns)` plus the
+/// second-highest significant bit (the "half step"), shifted so the first
+/// grid edge above bucket 0 is ~724ns; everything smaller shares bucket 0,
+/// everything at or above the top edge shares the overflow bucket 63.
+#[inline]
+pub fn bucket_of(ns: u64) -> usize {
+    if ns < 512 {
+        return 0;
+    }
+    let lz = 63 - ns.leading_zeros() as u64; // floor(log2 ns), >= 9
+    let half = 2 * lz + ((ns >> (lz - 1)) & 1);
+    ((half - 18) as usize).min(BUCKETS - 1)
+}
+
+/// Inclusive lower bound of bucket `i`, in nanoseconds.
+pub fn lower_bound(i: usize) -> f64 {
+    if i == 0 {
+        return 0.0;
+    }
+    let half = i as u32 + 18;
+    let base = (half / 2) as f64;
+    if half % 2 == 0 {
+        base.exp2()
+    } else {
+        base.exp2() * std::f64::consts::SQRT_2
+    }
+}
+
+/// A fixed-size, lock-free, log-bucketed histogram.  See the module doc.
+#[derive(Debug)]
+pub struct LatencyHist {
+    buckets: [AtomicU64; BUCKETS],
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHist {
+    pub fn new() -> Self {
+        LatencyHist {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation in nanoseconds.  Wait-free.
+    #[inline]
+    pub fn record(&self, ns: u64) {
+        self.buckets[bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(ns, Ordering::Relaxed);
+        self.max.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    /// Record a wall-clock duration.
+    #[inline]
+    pub fn record_duration(&self, d: Duration) {
+        self.record(u64::try_from(d.as_nanos()).unwrap_or(u64::MAX));
+    }
+
+    /// Record a dimensionless value (batch width, byte count) with
+    /// [`VALUE_SCALE`] applied so small integers spread across buckets.
+    #[inline]
+    pub fn record_value(&self, v: u64) {
+        self.record(v.saturating_mul(VALUE_SCALE));
+    }
+
+    /// Take a consistent-enough copy for rendering: buckets are read once
+    /// each; count is derived from the copied buckets so `_count` always
+    /// matches the cumulative total.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut buckets = [0u64; BUCKETS];
+        for (i, b) in self.buckets.iter().enumerate() {
+            buckets[i] = b.load(Ordering::Relaxed);
+        }
+        HistSnapshot {
+            buckets,
+            sum: self.sum.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A point-in-time copy of a [`LatencyHist`].  Plain data: mergeable,
+/// serializable, and the unit the DES emits directly.
+#[derive(Debug, Clone, Copy)]
+pub struct HistSnapshot {
+    pub buckets: [u64; BUCKETS],
+    pub sum: u64,
+    pub max: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        HistSnapshot { buckets: [0; BUCKETS], sum: 0, max: 0 }
+    }
+}
+
+impl HistSnapshot {
+    /// Total number of recorded observations.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Fold another snapshot into this one (bucket-wise add, sum add,
+    /// max of maxes).
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += *b;
+        }
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+
+    /// Estimate the q-quantile (0.0..=1.0) in nanoseconds by cumulative
+    /// walk with linear interpolation inside the winning bucket, clamped
+    /// to the recorded max.  Returns 0.0 on an empty histogram.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * total as f64).max(1.0);
+        let mut cum = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            let next = cum + n;
+            if (next as f64) >= rank {
+                let lo = lower_bound(i);
+                let hi = if i + 1 < BUCKETS { lower_bound(i + 1) } else { self.max as f64 };
+                let hi = hi.min(self.max as f64).max(lo);
+                let frac = (rank - cum as f64) / n as f64;
+                return lo + (hi - lo) * frac;
+            }
+            cum = next;
+        }
+        self.max as f64
+    }
+}
+
+/// Process-wide registry of named histograms, gauges, and counters.
+///
+/// Names carry their labels inline (`ce_reactor_conn_lifetime_ns{shard="3"}`)
+/// so registration stays a single map lookup; the renderer re-groups series
+/// into Prometheus families.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    hists: Mutex<BTreeMap<String, Arc<LatencyHist>>>,
+    gauges: Mutex<BTreeMap<String, Arc<AtomicI64>>>,
+    counters: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static GLOBAL: OnceLock<Arc<MetricsRegistry>> = OnceLock::new();
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The process-wide registry (created on first use).
+    pub fn global() -> Arc<MetricsRegistry> {
+        GLOBAL.get_or_init(|| Arc::new(MetricsRegistry::new())).clone()
+    }
+
+    /// Resolve the registry the way `TraceSink::resolve` resolves the trace
+    /// sink: an explicit `CloudConfig::metrics = true` wins, else the
+    /// [`METRICS_ENV`] env var enables it ambiently.  Either path latches
+    /// metrics on for the rest of the process so all subsystems share one
+    /// registry; when neither applies, `None` keeps every instrumentation
+    /// site a single branch on an `Option`.
+    pub fn resolve(explicit: bool) -> Option<Arc<MetricsRegistry>> {
+        if explicit {
+            ENABLED.store(true, Ordering::Relaxed);
+            return Some(Self::global());
+        }
+        if ENABLED.load(Ordering::Relaxed) {
+            return Some(Self::global());
+        }
+        match std::env::var(METRICS_ENV) {
+            Ok(v) if !v.is_empty() && v != "0" => {
+                ENABLED.store(true, Ordering::Relaxed);
+                Some(Self::global())
+            }
+            _ => None,
+        }
+    }
+
+    /// Get or create the histogram with this (label-qualified) name.
+    pub fn hist(&self, name: &str) -> Arc<LatencyHist> {
+        let mut map = self.hists.lock().unwrap();
+        map.entry(name.to_string()).or_insert_with(|| Arc::new(LatencyHist::new())).clone()
+    }
+
+    /// Get or create the gauge with this (label-qualified) name.
+    pub fn gauge(&self, name: &str) -> Arc<AtomicI64> {
+        let mut map = self.gauges.lock().unwrap();
+        map.entry(name.to_string()).or_insert_with(|| Arc::new(AtomicI64::new(0))).clone()
+    }
+
+    /// Get or create the counter with this (label-qualified) name.
+    pub fn counter(&self, name: &str) -> Arc<AtomicU64> {
+        let mut map = self.counters.lock().unwrap();
+        map.entry(name.to_string()).or_insert_with(|| Arc::new(AtomicU64::new(0))).clone()
+    }
+
+    /// Render every registered series as Prometheus text exposition
+    /// (format 0.0.4): per-series histograms/gauges/counters plus one
+    /// merged unlabeled aggregate per family.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+
+        // Histograms: group label-qualified series under their base name.
+        let hists = self.hists.lock().unwrap();
+        let mut families: BTreeMap<String, Vec<(String, HistSnapshot)>> = BTreeMap::new();
+        for (name, h) in hists.iter() {
+            let (base, labels) = split_name(name);
+            families.entry(base).or_default().push((labels, h.snapshot()));
+        }
+        drop(hists);
+        for (base, series) in &families {
+            out.push_str(&format!("# TYPE {base} histogram\n"));
+            for (labels, snap) in series {
+                out.push_str(&render_hist(base, labels, snap));
+            }
+            // Merged aggregate, unless the only series is already unlabeled.
+            if !(series.len() == 1 && series[0].0.is_empty()) {
+                let mut agg = HistSnapshot::default();
+                for (_, snap) in series {
+                    agg.merge(snap);
+                }
+                out.push_str(&render_hist(base, "", &agg));
+            }
+        }
+
+        // Counters and gauges: per-series line plus an unlabeled sum.
+        let counters = self.counters.lock().unwrap();
+        let counter_vals: Vec<(String, f64)> = counters
+            .iter()
+            .map(|(n, c)| (n.clone(), c.load(Ordering::Relaxed) as f64))
+            .collect();
+        drop(counters);
+        render_scalar_families(&mut out, "counter", &counter_vals);
+
+        let gauges = self.gauges.lock().unwrap();
+        let gauge_vals: Vec<(String, f64)> = gauges
+            .iter()
+            .map(|(n, g)| (n.clone(), g.load(Ordering::Relaxed) as f64))
+            .collect();
+        drop(gauges);
+        render_scalar_families(&mut out, "gauge", &gauge_vals);
+
+        out
+    }
+}
+
+/// Split `base{labels}` into `(base, labels)`; labels exclude the braces.
+fn split_name(name: &str) -> (String, String) {
+    match name.find('{') {
+        Some(i) => {
+            let labels = name[i + 1..].trim_end_matches('}');
+            (name[..i].to_string(), labels.to_string())
+        }
+        None => (name.to_string(), String::new()),
+    }
+}
+
+/// Format a float the way Prometheus expects: integers stay integral.
+fn fmt_num(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn label_set(labels: &str, le: Option<&str>) -> String {
+    let mut parts: Vec<&str> = Vec::new();
+    if !labels.is_empty() {
+        parts.push(labels);
+    }
+    let le_part;
+    if let Some(le) = le {
+        le_part = format!("le=\"{le}\"");
+        parts.push(&le_part);
+    }
+    if parts.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", parts.join(","))
+    }
+}
+
+/// Render one histogram series (`<base>_bucket`/`_sum`/`_count` lines).
+///
+/// This helper is the single source of the exposition schema: the live
+/// registry renderer and the DES's `SimOutcome` both call it, so the two
+/// sides emit provably identical shapes.  Families whose base name ends in
+/// `_ns` expose raw nanosecond bounds; all others are value-scaled
+/// histograms whose bounds and sum are divided back by [`VALUE_SCALE`].
+pub fn render_hist(base: &str, labels: &str, snap: &HistSnapshot) -> String {
+    let scale = if base.ends_with("_ns") { 1.0 } else { VALUE_SCALE as f64 };
+    let mut out = String::new();
+    let last_nonzero = snap
+        .buckets
+        .iter()
+        .rposition(|&n| n > 0)
+        .unwrap_or(0)
+        .min(BUCKETS - 2);
+    let mut cum = 0u64;
+    for i in 0..=last_nonzero {
+        cum += snap.buckets[i];
+        // Bucket i's upper edge is bucket i+1's lower edge.
+        let le = fmt_num(lower_bound(i + 1) / scale);
+        out.push_str(&format!("{base}_bucket{} {cum}\n", label_set(labels, Some(&le))));
+    }
+    let total = snap.count();
+    out.push_str(&format!("{base}_bucket{} {total}\n", label_set(labels, Some("+Inf"))));
+    out.push_str(&format!(
+        "{base}_sum{} {}\n",
+        label_set(labels, None),
+        fmt_num(snap.sum as f64 / scale)
+    ));
+    out.push_str(&format!("{base}_count{} {total}\n", label_set(labels, None)));
+    out
+}
+
+fn render_scalar_families(out: &mut String, kind: &str, vals: &[(String, f64)]) {
+    let mut families: BTreeMap<String, Vec<(String, f64)>> = BTreeMap::new();
+    for (name, v) in vals {
+        let (base, labels) = split_name(name);
+        families.entry(base).or_default().push((labels, *v));
+    }
+    for (base, series) in &families {
+        out.push_str(&format!("# TYPE {base} {kind}\n"));
+        for (labels, v) in series {
+            out.push_str(&format!("{base}{} {}\n", label_set(labels, None), fmt_num(*v)));
+        }
+        if !(series.len() == 1 && series[0].0.is_empty()) {
+            let total: f64 = series.iter().map(|(_, v)| v).sum();
+            out.push_str(&format!("{base} {}\n", fmt_num(total)));
+        }
+    }
+}
+
+/// One parsed exposition sample.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+impl Sample {
+    /// The value of label `key`, if present.
+    pub fn label(&self, key: &str) -> Option<&str> {
+        self.labels.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    /// True when the sample's non-`le` labels equal `want` exactly
+    /// (order-insensitive; `want` is `k=v` pairs).
+    pub fn labels_match(&self, want: &[(&str, &str)]) -> bool {
+        let mine: Vec<(&str, &str)> = self
+            .labels
+            .iter()
+            .filter(|(k, _)| k != "le")
+            .map(|(k, v)| (k.as_str(), v.as_str()))
+            .collect();
+        mine.len() == want.len() && want.iter().all(|w| mine.contains(w))
+    }
+}
+
+/// A parsed Prometheus text exposition.
+#[derive(Debug, Default)]
+pub struct Exposition {
+    pub samples: Vec<Sample>,
+    pub types: BTreeMap<String, String>,
+}
+
+impl Exposition {
+    /// All samples with this exact metric name.
+    pub fn samples_named<'a>(&'a self, name: &str) -> impl Iterator<Item = &'a Sample> {
+        let name = name.to_string();
+        self.samples.iter().filter(move |s| s.name == name)
+    }
+
+    /// The value of the sample with this name and exact label set.
+    pub fn value(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+        self.samples_named(name).find(|s| s.labels_match(labels)).map(|s| s.value)
+    }
+
+    /// Compute a quantile for histogram family `base` (with the given
+    /// non-`le` labels) generically from its (le, cumulative) bucket pairs,
+    /// linear interpolation between adjacent bounds.
+    pub fn hist_quantile(&self, base: &str, labels: &[(&str, &str)], q: f64) -> Option<f64> {
+        let bucket_name = format!("{base}_bucket");
+        let mut pairs: Vec<(f64, f64)> = self
+            .samples_named(&bucket_name)
+            .filter(|s| s.labels_match(labels))
+            .filter_map(|s| {
+                let le = s.label("le")?;
+                let le = if le == "+Inf" { f64::INFINITY } else { le.parse().ok()? };
+                Some((le, s.value))
+            })
+            .collect();
+        if pairs.is_empty() {
+            return None;
+        }
+        pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let total = pairs.last().unwrap().1;
+        if total == 0.0 {
+            return Some(0.0);
+        }
+        let rank = (q.clamp(0.0, 1.0) * total).max(1.0);
+        let mut prev_le = 0.0;
+        let mut prev_cum = 0.0;
+        for &(le, cum) in &pairs {
+            if cum >= rank {
+                if le.is_infinite() {
+                    return Some(prev_le);
+                }
+                let frac = if cum > prev_cum { (rank - prev_cum) / (cum - prev_cum) } else { 1.0 };
+                return Some(prev_le + (le - prev_le) * frac);
+            }
+            prev_le = le;
+            prev_cum = cum;
+        }
+        Some(prev_le)
+    }
+}
+
+/// Parse and validate a Prometheus text exposition.
+///
+/// Beyond the line grammar, every histogram family is checked for internal
+/// consistency: `le` bounds strictly ascending, cumulative counts monotone
+/// non-decreasing, a `+Inf` bucket present and equal to the series'
+/// `_count`, and a `_sum` sample present.  An empty exposition is an error
+/// (this is the CI fail condition for the scrape artifact).
+pub fn parse_exposition(text: &str) -> Result<Exposition, String> {
+    let mut exp = Exposition::default();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().ok_or_else(|| format!("line {}: bare TYPE", lineno + 1))?;
+            let kind = it.next().ok_or_else(|| format!("line {}: TYPE without kind", lineno + 1))?;
+            exp.types.insert(name.to_string(), kind.to_string());
+            continue;
+        }
+        if line.starts_with('#') {
+            continue;
+        }
+        exp.samples.push(parse_sample(line).map_err(|e| format!("line {}: {e}", lineno + 1))?);
+    }
+    if exp.samples.is_empty() {
+        return Err("empty exposition".into());
+    }
+    validate_histograms(&exp)?;
+    Ok(exp)
+}
+
+fn parse_sample(line: &str) -> Result<Sample, String> {
+    let (name_part, value_part) = match line.find('{') {
+        Some(open) => {
+            let close = line.rfind('}').ok_or("unclosed label braces")?;
+            (line[..close + 1].to_string(), line[close + 1..].trim())
+        }
+        None => {
+            let sp = line.find(' ').ok_or("sample without value")?;
+            (line[..sp].to_string(), line[sp..].trim())
+        }
+    };
+    let value: f64 = if value_part == "+Inf" {
+        f64::INFINITY
+    } else {
+        value_part
+            .split_whitespace()
+            .next()
+            .ok_or("missing value")?
+            .parse()
+            .map_err(|_| format!("bad value {value_part:?}"))?
+    };
+    let (name, labels) = match name_part.find('{') {
+        Some(i) => {
+            let body = name_part[i + 1..].trim_end_matches('}');
+            let mut labels = Vec::new();
+            for pair in split_label_pairs(body)? {
+                labels.push(pair);
+            }
+            (name_part[..i].to_string(), labels)
+        }
+        None => (name_part, Vec::new()),
+    };
+    if name.is_empty() {
+        return Err("empty metric name".into());
+    }
+    Ok(Sample { name, labels, value })
+}
+
+fn split_label_pairs(body: &str) -> Result<Vec<(String, String)>, String> {
+    let mut out = Vec::new();
+    let mut rest = body.trim();
+    while !rest.is_empty() {
+        let eq = rest.find('=').ok_or("label without '='")?;
+        let key = rest[..eq].trim().to_string();
+        let after = &rest[eq + 1..];
+        let after = after.strip_prefix('"').ok_or("unquoted label value")?;
+        let endq = after.find('"').ok_or("unterminated label value")?;
+        let val = after[..endq].to_string();
+        out.push((key, val));
+        rest = after[endq + 1..].trim_start_matches(',').trim();
+    }
+    Ok(out)
+}
+
+fn validate_histograms(exp: &Exposition) -> Result<(), String> {
+    // Collect every histogram series: (base, non-le labels) -> bucket pairs.
+    let mut series: BTreeMap<(String, String), Vec<(f64, f64)>> = BTreeMap::new();
+    for s in &exp.samples {
+        if let Some(base) = s.name.strip_suffix("_bucket") {
+            let le = s.label("le").ok_or_else(|| format!("{}: bucket without le", s.name))?;
+            let le = if le == "+Inf" {
+                f64::INFINITY
+            } else {
+                le.parse().map_err(|_| format!("{}: bad le {le:?}", s.name))?
+            };
+            let key = (base.to_string(), non_le_key(s));
+            series.entry(key).or_default().push((le, s.value));
+        }
+    }
+    for ((base, labels), buckets) in &series {
+        let mut prev_le = f64::NEG_INFINITY;
+        let mut prev_cum = -1.0;
+        for &(le, cum) in buckets {
+            if le <= prev_le {
+                return Err(format!("{base}{{{labels}}}: le bounds not ascending"));
+            }
+            if cum < prev_cum {
+                return Err(format!("{base}{{{labels}}}: cumulative buckets decrease"));
+            }
+            prev_le = le;
+            prev_cum = cum;
+        }
+        let (last_le, last_cum) = *buckets.last().unwrap();
+        if !last_le.is_infinite() {
+            return Err(format!("{base}{{{labels}}}: missing +Inf bucket"));
+        }
+        let count = lookup_scalar(exp, &format!("{base}_count"), labels)
+            .ok_or_else(|| format!("{base}{{{labels}}}: missing _count"))?;
+        if count != last_cum {
+            return Err(format!(
+                "{base}{{{labels}}}: _count {count} != +Inf bucket {last_cum}"
+            ));
+        }
+        if lookup_scalar(exp, &format!("{base}_sum"), labels).is_none() {
+            return Err(format!("{base}{{{labels}}}: missing _sum"));
+        }
+    }
+    Ok(())
+}
+
+/// Canonical sorted `k=v,...` key of a sample's non-`le` labels.
+fn non_le_key(s: &Sample) -> String {
+    let mut pairs: Vec<String> = s
+        .labels
+        .iter()
+        .filter(|(k, _)| k != "le")
+        .map(|(k, v)| format!("{k}={v}"))
+        .collect();
+    pairs.sort();
+    pairs.join(",")
+}
+
+fn lookup_scalar(exp: &Exposition, name: &str, labels_key: &str) -> Option<f64> {
+    exp.samples
+        .iter()
+        .find(|s| s.name == name && non_le_key(s) == labels_key)
+        .map(|s| s.value)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic LCG so the reference tests need no external deps.
+    struct Lcg(u64);
+    impl Lcg {
+        fn next(&mut self) -> u64 {
+            self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            self.0 >> 11
+        }
+    }
+
+    #[test]
+    fn bucket_grid_shape() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(511), 0);
+        assert_eq!(bucket_of(512), 0); // 512 = 2^9, half=18 -> idx 0
+        assert_eq!(bucket_of(1000), 1);
+        assert_eq!(bucket_of(1024), 2);
+        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1);
+        // Grid edges: lower(2) = 1024 exactly, lower(1) = 512*sqrt(2).
+        assert_eq!(lower_bound(0), 0.0);
+        assert!((lower_bound(1) - 724.077).abs() < 0.1);
+        assert_eq!(lower_bound(2), 1024.0);
+        // Every value lands in the bucket whose bounds contain it.
+        let mut rng = Lcg(7);
+        for _ in 0..10_000 {
+            let ns = rng.next() % 80_000_000_000; // up to 80s
+            let i = bucket_of(ns);
+            assert!(ns as f64 >= lower_bound(i), "ns={ns} below bucket {i}");
+            if i + 1 < BUCKETS {
+                assert!((ns as f64) < lower_bound(i + 1), "ns={ns} above bucket {i}");
+            }
+        }
+        // 60s is representable below the overflow bucket.
+        assert!(bucket_of(60_000_000_000) < BUCKETS - 1);
+    }
+
+    #[test]
+    fn record_count_sum_max() {
+        let h = LatencyHist::new();
+        h.record(1_000);
+        h.record(2_000);
+        h.record(3_000_000);
+        let s = h.snapshot();
+        assert_eq!(s.count(), 3);
+        assert_eq!(s.sum, 3_003_000);
+        assert_eq!(s.max, 3_000_000);
+        h.record_duration(Duration::from_micros(5));
+        assert_eq!(h.snapshot().count(), 4);
+    }
+
+    #[test]
+    fn quantiles_bound_sorted_reference() {
+        // Percentile estimates must land within one bucket of the exact
+        // sorted-vec answer: between the true value's bucket lower bound
+        // and its upper bound.
+        let h = LatencyHist::new();
+        let mut vals = Vec::new();
+        let mut rng = Lcg(42);
+        for _ in 0..5_000 {
+            let ns = 600 + rng.next() % 10_000_000; // 600ns .. 10ms
+            h.record(ns);
+            vals.push(ns);
+        }
+        vals.sort_unstable();
+        let s = h.snapshot();
+        for &q in &[0.5, 0.9, 0.99] {
+            let est = s.quantile(q);
+            let exact = vals[((q * vals.len() as f64) as usize).min(vals.len() - 1)];
+            let b = bucket_of(exact);
+            let lo = lower_bound(b);
+            let hi = if b + 1 < BUCKETS { lower_bound(b + 1) } else { s.max as f64 };
+            // Interpolation can cross at most one bucket edge near ties.
+            assert!(
+                est >= lo / std::f64::consts::SQRT_2 && est <= hi * std::f64::consts::SQRT_2,
+                "q={q}: est {est} outside [{lo}, {hi}]±√2 (exact {exact})"
+            );
+        }
+        assert!(s.quantile(1.0) <= s.max as f64 + 1.0);
+    }
+
+    #[test]
+    fn merge_equals_combined_recording() {
+        let a = LatencyHist::new();
+        let b = LatencyHist::new();
+        let combined = LatencyHist::new();
+        let mut rng = Lcg(9);
+        for i in 0..2_000 {
+            let ns = 500 + rng.next() % 1_000_000;
+            if i % 2 == 0 { a.record(ns) } else { b.record(ns) }
+            combined.record(ns);
+        }
+        let mut merged = a.snapshot();
+        merged.merge(&b.snapshot());
+        let want = combined.snapshot();
+        assert_eq!(merged.buckets, want.buckets);
+        assert_eq!(merged.sum, want.sum);
+        assert_eq!(merged.max, want.max);
+        assert!((merged.quantile(0.9) - want.quantile(0.9)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_hist_is_quiet() {
+        let s = LatencyHist::new().snapshot();
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.quantile(0.99), 0.0);
+    }
+
+    #[test]
+    fn registry_get_or_create_and_render() {
+        let r = MetricsRegistry::new();
+        let h0 = r.hist("t_wait_ns{worker=\"0\"}");
+        let h0b = r.hist("t_wait_ns{worker=\"0\"}");
+        assert!(Arc::ptr_eq(&h0, &h0b));
+        h0.record(1_500);
+        r.hist("t_wait_ns{worker=\"1\"}").record(3_000);
+        r.gauge("t_parked{worker=\"0\"}").store(4, Ordering::Relaxed);
+        r.counter("t_requests").fetch_add(7, Ordering::Relaxed);
+        let text = r.render_prometheus();
+        let exp = parse_exposition(&text).expect("render must parse");
+        assert_eq!(exp.types.get("t_wait_ns").map(String::as_str), Some("histogram"));
+        // Per-series and merged aggregate both present.
+        assert_eq!(exp.value("t_wait_ns_count", &[("worker", "0")]), Some(1.0));
+        assert_eq!(exp.value("t_wait_ns_count", &[]), Some(2.0));
+        assert_eq!(exp.value("t_parked", &[("worker", "0")]), Some(4.0));
+        assert_eq!(exp.value("t_requests", &[]), Some(7.0));
+    }
+
+    #[test]
+    fn value_scaled_families_unscale_in_exposition() {
+        let r = MetricsRegistry::new();
+        r.hist("t_pass_items").record_value(3);
+        r.hist("t_pass_items").record_value(12);
+        let text = r.render_prometheus();
+        let exp = parse_exposition(&text).expect("parse");
+        // _sum is back in native units.
+        assert_eq!(exp.value("t_pass_items_sum", &[]), Some(15.0));
+        // The quantile derived from exposition bounds is near the native values.
+        let p99 = exp.hist_quantile("t_pass_items", &[], 0.99).unwrap();
+        assert!(p99 > 8.0 && p99 < 18.0, "p99={p99}");
+    }
+
+    #[test]
+    fn render_hist_schema_is_shared() {
+        // The standalone helper emits exactly what the registry emits for a
+        // single series: this is the DES-vs-live schema contract.
+        let h = LatencyHist::new();
+        h.record(2_000);
+        let direct = render_hist("t_solo_ns", "", &h.snapshot());
+        let exp = parse_exposition(&format!("# TYPE t_solo_ns histogram\n{direct}")).unwrap();
+        assert_eq!(exp.value("t_solo_ns_count", &[]), Some(1.0));
+    }
+
+    #[test]
+    fn parser_rejects_broken_expositions() {
+        assert!(parse_exposition("").is_err());
+        assert!(parse_exposition("   \n# just a comment\n").is_err());
+        // Decreasing cumulative buckets.
+        let bad = "# TYPE x histogram\n\
+                   x_bucket{le=\"1\"} 5\nx_bucket{le=\"2\"} 3\nx_bucket{le=\"+Inf\"} 5\n\
+                   x_sum 9\nx_count 5\n";
+        assert!(parse_exposition(bad).is_err());
+        // _count disagreeing with +Inf.
+        let bad2 = "# TYPE x histogram\n\
+                    x_bucket{le=\"1\"} 5\nx_bucket{le=\"+Inf\"} 5\nx_sum 9\nx_count 6\n";
+        assert!(parse_exposition(bad2).is_err());
+        // Missing +Inf.
+        let bad3 = "# TYPE x histogram\nx_bucket{le=\"1\"} 5\nx_sum 9\nx_count 5\n";
+        assert!(parse_exposition(bad3).is_err());
+    }
+
+    #[test]
+    fn quantile_from_exposition_matches_snapshot() {
+        let h = LatencyHist::new();
+        let mut rng = Lcg(3);
+        for _ in 0..3_000 {
+            h.record(1_000 + rng.next() % 5_000_000);
+        }
+        let snap = h.snapshot();
+        let text = format!("# TYPE q_ns histogram\n{}", render_hist("q_ns", "", &snap));
+        let exp = parse_exposition(&text).unwrap();
+        let from_exp = exp.hist_quantile("q_ns", &[], 0.9).unwrap();
+        let from_snap = snap.quantile(0.9);
+        let ratio = from_exp / from_snap;
+        assert!(ratio > 0.6 && ratio < 1.7, "exposition p90 {from_exp} vs snapshot {from_snap}");
+    }
+}

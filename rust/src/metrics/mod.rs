@@ -1,10 +1,35 @@
-//! Cost accounting and table rendering.
+//! Cost accounting, latency histograms, and table rendering.
 //!
-//! The paper reports four time columns per run (total / edge / cloud /
-//! comm — Table 2, Table 4) plus a request-cloud rate, transmitted bytes
-//! (Fig 4c) and ROUGE-L.  [`CostBreakdown`] accumulates one request;
-//! [`Aggregate`] folds many runs into `mean ± std` exactly as the paper's
-//! tables present them (5 repeats).
+//! The stack has three observability layers; pick by question:
+//!
+//! 1. **Counters** ([`RunCounters`], `CloudStats`, `ReactorStats`,
+//!    `ContextStoreStats`) — monotonic totals and gauges, always on, the
+//!    cheapest possible accounting.  Add here when the question is "how
+//!    many / how much, ever".
+//! 2. **Histograms + registry** ([`hist::LatencyHist`],
+//!    [`hist::MetricsRegistry`]) — per-stage latency/size *distributions*
+//!    (p50/p90/p99/max), off by default (`CloudConfig::metrics` /
+//!    `CE_METRICS`), one relaxed atomic add per observation when on,
+//!    scrapeable live from the reactor's `GET /metrics` path.  Add here
+//!    when the question is "how long does this stage take, and for whom"
+//!    — the tail, not the total.
+//! 3. **Trace** (`trace::TraceSink`) — the full per-event timeline,
+//!    replayable bit-identically.  Add here when the question is "what
+//!    exactly happened, in what order" and a distribution is too lossy.
+//!
+//! This module also carries the paper-facing accounting: four time
+//! columns per run (total / edge / cloud / comm — Table 2, Table 4) plus
+//! a request-cloud rate, transmitted bytes (Fig 4c) and ROUGE-L.
+//! [`CostBreakdown`] accumulates one request; [`Aggregate`] folds many
+//! runs into `mean ± std` exactly as the paper's tables present them
+//! (5 repeats).
+
+pub mod hist;
+
+pub use hist::{
+    parse_exposition, render_hist, Exposition, HistSnapshot, LatencyHist, MetricsRegistry,
+    METRICS_ENV,
+};
 
 use std::fmt;
 

@@ -353,6 +353,24 @@ impl FrameCodec {
         Ok(())
     }
 
+    /// Queue raw bytes with **no frame header** — the escape hatch for
+    /// the reactor's `/metrics` path, whose response is an HTTP/1.0
+    /// document read by curl/Prometheus, not a framed peer.  Reuses the
+    /// same write queue, so flushing, backpressure accounting, and the
+    /// drain-then-close machinery all apply unchanged.  Not counted in
+    /// `frames_out`/`payload_bytes_out`: those meter protocol frames.
+    pub fn enqueue_raw(&mut self, bytes: &[u8]) {
+        if self.out_pos == self.out_buf.len() {
+            self.out_pos = 0;
+            if self.out_buf.capacity() > RETAIN_CAP {
+                self.out_buf = Vec::new();
+            } else {
+                self.out_buf.clear();
+            }
+        }
+        self.out_buf.extend_from_slice(bytes);
+    }
+
     /// Queued wire bytes not yet written to the socket.
     pub fn writable_bytes(&self) -> &[u8] {
         &self.out_buf[self.out_pos..]
@@ -494,6 +512,23 @@ mod tests {
         // a fresh enqueue reuses the drained buffer
         c.enqueue_frame(b"x").unwrap();
         assert_eq!(c.pending_out(), FRAME_HEADER + 1);
+    }
+
+    #[test]
+    fn enqueue_raw_skips_framing_and_counters() {
+        let mut c = FrameCodec::new();
+        c.enqueue_raw(b"HTTP/1.0 200 OK\r\n\r\n");
+        assert_eq!(c.writable_bytes(), b"HTTP/1.0 200 OK\r\n\r\n");
+        assert_eq!(c.frames_enqueued(), 0, "raw bytes are not protocol frames");
+        let n = c.pending_out();
+        c.consume_written(n);
+        assert_eq!(c.pending_out(), 0);
+        // raw and framed writes share one queue, in order
+        c.enqueue_raw(b"raw");
+        c.enqueue_frame(b"framed").unwrap();
+        let mut want = b"raw".to_vec();
+        want.extend_from_slice(&encode_frame(b"framed"));
+        assert_eq!(c.writable_bytes(), &want[..]);
     }
 
     #[test]

@@ -105,7 +105,7 @@
 use std::collections::HashMap;
 use std::io::{self, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -116,6 +116,7 @@ use anyhow::{anyhow, ensure, Context, Result};
 use crate::config::ReactorConfig;
 use crate::coordinator::protocol::{Channel, Message, NO_REQ};
 use crate::coordinator::scheduler::{InferOutcome, Reply, Router, SchedMsg, UploadPayload};
+use crate::metrics::{LatencyHist, MetricsRegistry};
 use crate::model::manifest::ModelDims;
 use crate::net::codec::FrameCodec;
 use crate::net::event::{Event, EventSet, Interest, SourceFd, Token};
@@ -442,7 +443,9 @@ impl Reactor {
     }
 
     /// [`Reactor::spawn_fleet`] with a trace recorder (see
-    /// [`Reactor::spawn_traced`]).
+    /// [`Reactor::spawn_traced`]).  Metrics resolve from the
+    /// environment (`CE_METRICS`); callers that carry an explicit flag
+    /// use [`Reactor::spawn_fleet_full`].
     pub fn spawn_fleet_traced(
         router: Router,
         dims: ModelDims,
@@ -450,6 +453,25 @@ impl Reactor {
         listeners: Vec<Option<TcpListener>>,
         accept_mode: &'static str,
         sink: Option<Arc<TraceSink>>,
+    ) -> Result<Reactor> {
+        let metrics = MetricsRegistry::resolve(false);
+        Self::spawn_fleet_full(router, dims, cfg, listeners, accept_mode, sink, metrics)
+    }
+
+    /// The full-parameter fleet spawn: trace recorder plus an optional
+    /// metrics registry.  With metrics on, every shard registers its
+    /// latency histograms, publishes its load cells for the fleet
+    /// accept-load report, and serves `GET /metrics` scrapes on its own
+    /// listener (no extra thread, no extra port — see
+    /// [`Loop::sniff_readable`]).
+    pub fn spawn_fleet_full(
+        router: Router,
+        dims: ModelDims,
+        cfg: ReactorConfig,
+        listeners: Vec<Option<TcpListener>>,
+        accept_mode: &'static str,
+        sink: Option<Arc<TraceSink>>,
+        metrics: Option<Arc<MetricsRegistry>>,
     ) -> Result<Reactor> {
         let shards = listeners.len();
         ensure!(shards >= 1, "a reactor fleet needs at least one shard");
@@ -470,6 +492,11 @@ impl Reactor {
         if let Some(f) = fault {
             log::warn!("reactor fleet running with injected faults: {f:?}");
         }
+        // one load cell per shard, shared by the whole fleet: any shard
+        // can render the fleet-wide accept-load report from them while
+        // its siblings keep publishing with relaxed stores
+        let load: Arc<Vec<ShardLoad>> =
+            Arc::new((0..shards).map(|_| ShardLoad::default()).collect());
         let mut shard_handles = Vec::with_capacity(shards);
         let mut threads = Vec::with_capacity(shards);
         for (shard, slot) in listeners.into_iter().enumerate() {
@@ -482,6 +509,8 @@ impl Reactor {
             let dims = dims.clone();
             let loop_waker = waker.clone();
             let sink = sink.clone();
+            let metrics =
+                metrics.as_ref().map(|reg| ShardMetrics::new(reg.clone(), load.clone(), shard));
             let thread = std::thread::Builder::new()
                 .name(format!("cloud-reactor-{shard}"))
                 .spawn(move || {
@@ -504,6 +533,7 @@ impl Reactor {
                         stats: ReactorStats { accept_mode, ..ReactorStats::default() },
                         fault,
                         sink,
+                        metrics,
                         pending_hellos: 0,
                         paused_conns: false,
                         shutdown: false,
@@ -547,6 +577,94 @@ impl Drop for Reactor {
 // the per-shard loop
 // ---------------------------------------------------------------------------
 
+/// One shard's published load counters, readable by any sibling shard
+/// rendering the fleet accept-load report.  Each shard *stores* its own
+/// `ReactorStats` snapshot here (relaxed, at the top and bottom of every
+/// wake) and only ever *loads* its siblings' cells — a mid-wake scrape
+/// may observe a shard between publishes, so cross-cell invariants
+/// (Σ accepts == Σ conns_opened on a reuseport fleet) hold exactly only
+/// at quiescence.
+#[derive(Default)]
+struct ShardLoad {
+    accepts: AtomicU64,
+    conns_opened: AtomicU64,
+    conns_closed: AtomicU64,
+    open_conns: AtomicU64,
+    frames_in: AtomicU64,
+    frames_out: AtomicU64,
+    wakes: AtomicU64,
+}
+
+/// Per-shard metrics state: the registry (for rendering scrapes), the
+/// fleet's shared load cells, and this shard's pre-registered
+/// histograms so a record is one `Arc` deref + one relaxed atomic add.
+struct ShardMetrics {
+    registry: Arc<MetricsRegistry>,
+    load: Arc<Vec<ShardLoad>>,
+    /// `ce_reactor_conn_lifetime_ns{shard="N"}` — admit to close.
+    conn_lifetime: Arc<LatencyHist>,
+    /// `ce_reactor_write_queue_wait_ns{shard="N"}` — how long the
+    /// outbound queue stayed non-empty before fully draining (slow
+    /// reader residency).
+    wq_wait: Arc<LatencyHist>,
+    /// `ce_reactor_ingest_frame_bytes{shard="N"}` — upload frame sizes
+    /// (value-scaled; see [`crate::metrics::hist::VALUE_SCALE`]).
+    ingest_bytes: Arc<LatencyHist>,
+}
+
+impl ShardMetrics {
+    fn new(registry: Arc<MetricsRegistry>, load: Arc<Vec<ShardLoad>>, shard: usize) -> Self {
+        let h = |name: &str| registry.hist(&format!("{name}{{shard=\"{shard}\"}}"));
+        ShardMetrics {
+            conn_lifetime: h("ce_reactor_conn_lifetime_ns"),
+            wq_wait: h("ce_reactor_write_queue_wait_ns"),
+            ingest_bytes: h("ce_reactor_ingest_frame_bytes"),
+            registry,
+            load,
+        }
+    }
+}
+
+/// Render the fleet accept-load report from the shared load cells:
+/// per-shard samples plus an unlabeled fleet aggregate for each family,
+/// in Prometheus text format (same exposition the registry renders).
+fn render_load_report(load: &[ShardLoad]) -> String {
+    type Field = (&'static str, &'static str, fn(&ShardLoad) -> u64);
+    let fields: [Field; 7] = [
+        ("ce_reactor_accepts", "counter", |l| l.accepts.load(Ordering::Relaxed)),
+        ("ce_reactor_conns_opened", "counter", |l| l.conns_opened.load(Ordering::Relaxed)),
+        ("ce_reactor_conns_closed", "counter", |l| l.conns_closed.load(Ordering::Relaxed)),
+        ("ce_reactor_open_conns", "gauge", |l| l.open_conns.load(Ordering::Relaxed)),
+        ("ce_reactor_frames_in", "counter", |l| l.frames_in.load(Ordering::Relaxed)),
+        ("ce_reactor_frames_out", "counter", |l| l.frames_out.load(Ordering::Relaxed)),
+        ("ce_reactor_wakes", "counter", |l| l.wakes.load(Ordering::Relaxed)),
+    ];
+    let mut out = String::new();
+    for (name, kind, read) in fields {
+        out.push_str(&format!("# TYPE {name} {kind}\n"));
+        let mut total = 0u64;
+        for (i, cell) in load.iter().enumerate() {
+            let v = read(cell);
+            total += v;
+            out.push_str(&format!("{name}{{shard=\"{i}\"}} {v}\n"));
+        }
+        out.push_str(&format!("{name} {total}\n"));
+    }
+    out
+}
+
+/// Outcome of one sniffer pass over an undecided connection (see
+/// [`Loop::sniff_readable`]).
+enum Sniff {
+    /// This event is finished: bytes held pending a decision, a scrape
+    /// was served, or the connection closed.
+    Done,
+    /// Decided: a protocol peer.  The held bytes went through the
+    /// codec; these are the frames they completed, and the normal read
+    /// path should continue within the same event.
+    Frames(Vec<Vec<u8>>),
+}
+
 #[derive(Debug, Clone, Copy)]
 enum ConnState {
     /// Handshake pending: the first frame must be a `Hello`.
@@ -575,6 +693,13 @@ struct Conn {
     /// Interest currently installed in the event set; [`Loop::
     /// sync_interest`] reconciles it after state changes.
     interest: Interest,
+    /// First bytes held while deciding protocol vs `GET /metrics`
+    /// (metrics on + un-Hello'd only; `None` once decided or when
+    /// metrics are off — the normal read path then runs untouched).
+    sniff: Option<Vec<u8>>,
+    /// When the outbound queue last went empty→non-empty; resolved into
+    /// the write-queue-residency histogram when it fully drains.
+    wq_since: Option<Instant>,
 }
 
 struct Loop {
@@ -603,6 +728,9 @@ struct Loop {
     /// Trace recorder; `None` (the default) keeps the hot path at one
     /// `Option` check per tap site.
     sink: Option<Arc<TraceSink>>,
+    /// Histogram handles + shared load cells; `None` (the default)
+    /// keeps every record site at one `Option` check.
+    metrics: Option<ShardMetrics>,
     /// Connections still awaiting their Hello — gates the reap scan and
     /// the bounded wait timeout (maintained at admit / handshake /
     /// close).
@@ -665,6 +793,7 @@ impl Loop {
             if self.shutdown {
                 break;
             }
+            self.publish_load();
             self.drain_completions();
             self.refresh_pauses();
             self.reap_stale_handshakes();
@@ -693,6 +822,7 @@ impl Loop {
                 }
             }
             self.evbuf = evbuf;
+            self.publish_load();
         }
         // deterministic teardown: every socket is closed before the
         // thread exits, so joining the fleet proves no connection can
@@ -702,7 +832,23 @@ impl Loop {
             self.close_conn(id, "server shutdown");
         }
         self.stats.open_conns = 0;
+        self.publish_load();
         self.stats
+    }
+
+    /// Publish this shard's counters into its fleet load cell (top and
+    /// bottom of every wake, and once at teardown).  Relaxed stores:
+    /// the report is a monitoring snapshot, not a synchronization edge.
+    fn publish_load(&self) {
+        let Some(m) = &self.metrics else { return };
+        let cell = &m.load[self.shard];
+        cell.accepts.store(self.stats.accepts, Ordering::Relaxed);
+        cell.conns_opened.store(self.stats.conns_opened, Ordering::Relaxed);
+        cell.conns_closed.store(self.stats.conns_closed, Ordering::Relaxed);
+        cell.open_conns.store(self.conns.len() as u64, Ordering::Relaxed);
+        cell.frames_in.store(self.stats.frames_in, Ordering::Relaxed);
+        cell.frames_out.store(self.stats.frames_out, Ordering::Relaxed);
+        cell.wakes.store(self.stats.wakes, Ordering::Relaxed);
     }
 
     // -- control + completion channels --------------------------------------
@@ -767,6 +913,10 @@ impl Loop {
                 closing: false,
                 frames_seen: 0,
                 interest,
+                // sniffing exists only to serve scrapes, so its cost
+                // (one held-prefix check per conn) is metrics-gated too
+                sniff: self.metrics.is_some().then(Vec::new),
+                wq_since: None,
             },
         );
         self.stats.conns_opened += 1;
@@ -1022,9 +1172,147 @@ impl Loop {
         }
     }
 
+    /// Advance the write-queue residency clock after a flush: start it
+    /// on the empty→non-empty transition, resolve it into the
+    /// histogram once the queue fully drains.  Metrics-off connections
+    /// never reach the per-conn lookup.
+    fn note_wq(&mut self, id: u64) {
+        let Some(m) = &self.metrics else { return };
+        if let Some(c) = self.conns.get_mut(&id) {
+            if c.codec.pending_out() > 0 {
+                c.wq_since.get_or_insert_with(Instant::now);
+            } else if let Some(t0) = c.wq_since.take() {
+                m.wq_wait.record_duration(t0.elapsed());
+            }
+        }
+    }
+
     // -- per-connection I/O --------------------------------------------------
 
+    /// Decide whether an un-Hello'd connection is a protocol peer or a
+    /// plain-HTTP metrics scrape.  One nonblocking read per event; the
+    /// bytes are held until the first 4 decide (`b"GET "` cannot open a
+    /// valid frame: as a little-endian length it names a ~542 MB frame,
+    /// far over the codec's cap).  A scrape gets the exposition over
+    /// HTTP/1.0 and the connection closes; anything else is fed to the
+    /// codec and framing resumes as if the sniffer were never there.
+    /// Undecided connections stay `AwaitingHello`, so the handshake
+    /// reaper bounds how long a silent prefix may hold a slot.
+    fn sniff_readable(&mut self, id: u64) -> Sniff {
+        const GET: &[u8] = b"GET ";
+        let mut buf = [0u8; 4096];
+        let decided = {
+            let Some(c) = self.conns.get_mut(&id) else { return Sniff::Done };
+            let n = match c.stream.read(&mut buf) {
+                Ok(0) => {
+                    self.close_conn(id, "peer closed");
+                    return Sniff::Done;
+                }
+                Ok(n) => n,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return Sniff::Done,
+                // Interrupted: the still-armed read interest retries
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => return Sniff::Done,
+                Err(e) => {
+                    let msg = format!("read failed: {e}");
+                    self.close_conn(id, &msg);
+                    return Sniff::Done;
+                }
+            };
+            c.last_activity = Instant::now();
+            let held = c.sniff.as_mut().expect("sniff_readable needs held-prefix state");
+            held.extend_from_slice(&buf[..n]);
+            if held.len() >= GET.len() {
+                Some(held.starts_with(GET))
+            } else if !GET.starts_with(held.as_slice()) {
+                Some(false) // shorter than "GET " but already diverged
+            } else {
+                None // proper prefix: hold for more bytes
+            }
+        };
+        match decided {
+            None => Sniff::Done,
+            Some(true) => {
+                self.serve_metrics(id);
+                Sniff::Done
+            }
+            Some(false) => {
+                let held = self.conns.get_mut(&id).and_then(|c| c.sniff.take());
+                let mut frames = Vec::new();
+                if let Some(c) = self.conns.get_mut(&id) {
+                    if let Err(e) = c.codec.feed_all(&held.unwrap_or_default(), &mut frames) {
+                        let msg = format!("bad frame: {e:#}");
+                        self.close_conn(id, &msg);
+                        return Sniff::Done;
+                    }
+                }
+                Sniff::Frames(frames)
+            }
+        }
+    }
+
+    /// Serve one `GET /metrics` scrape: render the registry exposition
+    /// plus the fleet accept-load report, queue it behind a minimal
+    /// HTTP/1.0 header, and close once the socket drains.  The request
+    /// tail is read off first so closing cannot RST the response away.
+    fn serve_metrics(&mut self, id: u64) {
+        self.publish_load(); // this shard's own cell is fresh in the report
+        let body = self.render_metrics();
+        let head = format!(
+            "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n",
+            body.len()
+        );
+        let mut drain = [0u8; 4096];
+        let mut fail: Option<String> = None;
+        let mut drained = false;
+        if let Some(c) = self.conns.get_mut(&id) {
+            loop {
+                match c.stream.read(&mut drain) {
+                    Ok(0) | Err(_) => break,
+                    Ok(_) => continue,
+                }
+            }
+            c.sniff = None;
+            c.codec.enqueue_raw(head.as_bytes());
+            c.codec.enqueue_raw(body.as_bytes());
+            c.closing = true;
+            match flush_conn(c) {
+                Err(e) => fail = Some(format!("write failed: {e}")),
+                Ok(()) => drained = c.codec.pending_out() == 0,
+            }
+        }
+        self.note_wq(id);
+        if let Some(reason) = fail {
+            self.close_conn(id, &reason);
+        } else if drained {
+            self.close_conn(id, "metrics scrape served");
+        } else {
+            self.sync_interest(id); // write interest finishes the response
+        }
+    }
+
+    /// The full exposition one scrape returns: every registered series
+    /// (scheduler, reactor shards, edge) plus the fleet load report.
+    fn render_metrics(&self) -> String {
+        let Some(m) = &self.metrics else { return String::new() };
+        let mut out = m.registry.render_prometheus();
+        out.push_str(&render_load_report(&m.load));
+        out
+    }
+
     fn on_readable(&mut self, id: u64) {
+        // undecided connections route through the sniffer first: it
+        // either finishes the event (held / scrape served / closed) or
+        // hands back the frames its held bytes completed and lets the
+        // normal read path continue
+        let pre: Vec<Vec<u8>> = if self.conns.get(&id).is_some_and(|c| c.sniff.is_some()) {
+            match self.sniff_readable(id) {
+                Sniff::Done => return,
+                Sniff::Frames(frames) => frames,
+            }
+        } else {
+            Vec::new()
+        };
         let mut scratch = std::mem::take(&mut self.scratch);
         let (frames, close, more) = match self.conns.get_mut(&id) {
             Some(c) => read_frames(c, &mut scratch),
@@ -1035,7 +1323,7 @@ impl Loop {
         };
         self.scratch = scratch;
         // frames completed before any poison/EOF are still routed
-        for frame in frames {
+        for frame in pre.into_iter().chain(frames) {
             // a mid-batch protocol error closes (or marks closing) the
             // conn; later frames are void
             match self.conns.get(&id) {
@@ -1079,6 +1367,7 @@ impl Loop {
                 Ok(()) => drained_closing = c.closing && c.codec.pending_out() == 0,
             }
         }
+        self.note_wq(id);
         if let Some(reason) = fail {
             self.close_conn(id, &reason);
         } else if drained_closing {
@@ -1184,6 +1473,9 @@ impl Loop {
                     );
                     let (device, req_id, start_pos, prompt_len, precision) =
                         (v.device_id, v.req_id, v.start_pos, v.prompt_len, v.precision);
+                    if let Some(m) = &self.metrics {
+                        m.ingest_bytes.record_value(frame.len() as u64);
+                    }
                     return self
                         .router
                         .send(
@@ -1289,6 +1581,7 @@ impl Loop {
                 }
             }
         }
+        self.note_wq(id);
         if queued {
             self.trace_with(|shard| {
                 Ev::new("frame_out")
@@ -1313,6 +1606,9 @@ impl Loop {
             let _ = self.events.deregister(raw_fd(&c.stream), id);
             if matches!(c.state, ConnState::AwaitingHello) {
                 self.pending_hellos = self.pending_hellos.saturating_sub(1);
+            }
+            if let Some(m) = &self.metrics {
+                m.conn_lifetime.record_duration(c.opened.elapsed());
             }
             let _ = c.stream.shutdown(std::net::Shutdown::Both);
             self.stats.conns_closed += 1;

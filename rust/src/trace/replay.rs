@@ -30,6 +30,7 @@ use crate::coordinator::scheduler::{
 use crate::harness::cost::CostModel;
 use crate::harness::des::{simulate, SimConfig, Strategy};
 use crate::harness::trace::{Trace, TraceStep};
+use crate::metrics::{HistSnapshot, LatencyHist};
 use crate::model::manifest::ModelDims;
 use crate::net::profiles::LinkProfile;
 
@@ -379,14 +380,24 @@ pub struct DesReport {
     pub measured_upload_bytes: u64,
     pub sim_upload_bytes: u64,
     pub sim_makespan_s: f64,
+    /// Park-wait distribution rebuilt from the recording's `t_us`
+    /// timeline (each `park` resolved at the next same-`(device, req,
+    /// pos)` outcome event) vs the DES's simulated park-wait histogram.
+    /// Same bucket schema on both sides, so the percentile deltas
+    /// compare distribution shape, not just totals.
+    pub measured_park: HistSnapshot,
+    pub sim_park: HistSnapshot,
 }
 
 impl DesReport {
     pub fn summary(&self) -> String {
+        let us = |snap: &HistSnapshot, q: f64| snap.quantile(q) / 1_000.0;
         format!(
             "des check over {} devices / {} tokens: passes measured {} vs simulated {} \
              (delta {:+}), evictions measured {} vs simulated {} (delta {:+}), \
-             upload bytes measured {} vs simulated {}, sim replays {}, sim makespan {:.3}s",
+             upload bytes measured {} vs simulated {}, sim replays {}, sim makespan {:.3}s; \
+             park-wait p50/p90/p99 measured {:.0}/{:.0}/{:.0}us ({} waits) \
+             vs simulated {:.0}/{:.0}/{:.0}us ({} waits)",
             self.devices,
             self.tokens,
             self.measured_passes,
@@ -399,6 +410,14 @@ impl DesReport {
             self.sim_upload_bytes,
             self.sim_replays,
             self.sim_makespan_s,
+            us(&self.measured_park, 0.50),
+            us(&self.measured_park, 0.90),
+            us(&self.measured_park, 0.99),
+            self.measured_park.count(),
+            us(&self.sim_park, 0.50),
+            us(&self.sim_park, 0.90),
+            us(&self.sim_park, 0.99),
+            self.sim_park.count(),
         )
     }
 }
@@ -483,6 +502,35 @@ pub fn des_check(events: &[TraceEvent], dims: &ModelDims) -> Result<DesReport> {
     });
     let (_, counters) = sim.summed();
 
+    // measured park-wait: each `park` resolves at the first later
+    // same-(device, req, pos) outcome event — the token it was waiting
+    // to serve, or the error/eviction that retired it.  `t_us` is the
+    // sink-relative timestamp every recorded line carries.
+    let measured_park = LatencyHist::new();
+    let mut pending_parks: Vec<((u64, u64, u64), u64)> = Vec::new();
+    for e in events {
+        match e.ev.as_str() {
+            "park" => {
+                if let (Ok(d), Ok(r), Ok(p), Ok(t)) =
+                    (e.u("device"), e.u("req"), e.u("pos"), e.u("t_us"))
+                {
+                    pending_parks.push(((d, r, p), t));
+                }
+            }
+            "token" | "infer_error" | "evicted_notice" => {
+                if let (Ok(d), Ok(r), Ok(p), Ok(t)) =
+                    (e.u("device"), e.u("req"), e.u("pos"), e.u("t_us"))
+                {
+                    if let Some(i) = pending_parks.iter().position(|(k, _)| *k == (d, r, p)) {
+                        let (_, t0) = pending_parks.swap_remove(i);
+                        measured_park.record(t.saturating_sub(t0).saturating_mul(1_000));
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
     let measured_passes = events.iter().filter(|e| e.ev == "pass").count() as u64;
     let measured_evictions = events.iter().filter(|e| e.ev == "evict").count() as u64;
     let measured_upload_bytes: u64 = events
@@ -502,5 +550,7 @@ pub fn des_check(events: &[TraceEvent], dims: &ModelDims) -> Result<DesReport> {
         measured_upload_bytes,
         sim_upload_bytes: counters.bytes_up,
         sim_makespan_s: sim.makespan_s,
+        measured_park: measured_park.snapshot(),
+        sim_park: sim.hist_park_wait,
     })
 }

@@ -672,6 +672,163 @@ fn dead_conn_completion_never_crosses_shards() {
     scheduler.shutdown();
 }
 
+/// Raw scrape of the reactor's in-band `/metrics` endpoint: plain TCP,
+/// `GET ` sniffed on an un-Hello'd connection, one HTTP/1.0 response,
+/// server closes.  Returns the body.
+fn scrape(addr: &str) -> String {
+    use std::io::{Read, Write};
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    s.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+    let mut raw = Vec::new();
+    s.read_to_end(&mut raw).unwrap();
+    let text = String::from_utf8(raw).unwrap();
+    let (head, body) = text.split_once("\r\n\r\n").expect("http header/body split");
+    assert!(head.starts_with("HTTP/1.0 200"), "unexpected response head: {head}");
+    body.to_string()
+}
+
+fn metrics_scrape_under_load_is_consistent(backend: ReactorBackend) {
+    use ce_collm::metrics::parse_exposition;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    let seed = 61;
+    let devices = 4u64;
+    let mut cfg = CloudConfig::with_workers(2);
+    cfg.metrics = true;
+    cfg.reactor.backend = backend;
+    cfg.reactor.shards = 2;
+    let server = spawn_mock_server_cfg(seed, cfg);
+    assert_eq!(server.shards(), 2);
+    let addr = server.addr.to_string();
+
+    // a scraper hammers /metrics WHILE the clients generate.  The
+    // registry is process-global (other tests in this binary share it),
+    // so mid-load checks are structural only: the exposition must parse
+    // (parse_exposition enforces monotone cumulative buckets, a +Inf
+    // bucket equal to _count, and a _sum per family) — torn numbers or
+    // broken framing under concurrent load would fail right here
+    let stop = Arc::new(AtomicBool::new(false));
+    let scraper = {
+        let addr = addr.clone();
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut scrapes = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let body = scrape(&addr);
+                let exp = parse_exposition(&body)
+                    .unwrap_or_else(|e| panic!("mid-load scrape unparseable: {e}\n{body}"));
+                assert!(
+                    exp.types.values().any(|t| t == "histogram"),
+                    "scrape carries no histogram families"
+                );
+                assert!(
+                    exp.value("ce_reactor_accepts", &[]).is_some(),
+                    "scrape is missing the fleet load report"
+                );
+                scrapes += 1;
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            scrapes
+        })
+    };
+
+    let mut handles = Vec::new();
+    for device in 0..devices {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let dims = test_manifest().model;
+            let mut cfg = DeploymentConfig::with_threshold(1.0);
+            cfg.device_id = device;
+            cfg.max_new_tokens = 10;
+            let upload = Box::new(TcpTransport::connect(&addr).unwrap());
+            let infer = Box::new(TcpTransport::connect(&addr).unwrap());
+            let link = CloudLink::new(device, upload, infer).unwrap();
+            let mut client = EdgeClient::with_cloud(
+                MockEdge::new(MockOracle::new(seed), dims),
+                cfg,
+                link,
+            );
+            client.generate("a scrape under load prompt").unwrap().tokens
+        }));
+    }
+    let results: Vec<Vec<i32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    stop.store(true, Ordering::Relaxed);
+    let scrapes = scraper.join().unwrap();
+    assert!(scrapes >= 1, "the scraper never completed a mid-load scrape");
+
+    // scraping must be invisible to the protocol: every stream still
+    // bit-identical to the blocking no-wire reference
+    let dims = test_manifest().model;
+    let o = MockOracle::new(seed);
+    let mut edge = MockEdge::new(o, dims.clone());
+    let mut cloud = MockCloud::new(o, dims);
+    let mut timings = ce_collm::harness::trace::CallTimings::default();
+    let tr = ce_collm::harness::trace::record(
+        &mut edge,
+        &mut cloud,
+        ce_collm::config::ExitPolicy::Threshold(1.0),
+        ce_collm::quant::Precision::F16,
+        "a scrape under load prompt",
+        10,
+        &mut timings,
+    )
+    .unwrap();
+    for (device, tokens) in results.iter().enumerate() {
+        assert_eq!(
+            tokens, &tr.tokens,
+            "device {device} diverged with a scraper attached ({backend:?})"
+        );
+    }
+
+    // at quiescence the fleet-local load report must balance: every
+    // accept attributed to exactly one shard, summed == conns opened.
+    // (Shards publish at each wake, so give the last disconnect a
+    // moment to be observed.)  Scrape conns count too — each attempt
+    // adds one accept and one open to some shard, so re-read until two
+    // consecutive scrapes agree with each other's expectations.
+    let mut ok = false;
+    for _ in 0..100 {
+        let body = scrape(&addr);
+        let exp = parse_exposition(&body).unwrap();
+        let per_shard: Vec<f64> = (0..2)
+            .map(|i| {
+                let shard = i.to_string();
+                exp.value("ce_reactor_accepts", &[("shard", shard.as_str())])
+                    .unwrap_or_else(|| panic!("no accepts for shard {shard}:\n{body}"))
+            })
+            .collect();
+        let opened = exp.value("ce_reactor_conns_opened", &[]).unwrap_or(-1.0);
+        let floor = (2 * devices) as f64; // client sockets, before scrape conns
+        if per_shard.iter().sum::<f64>() == opened && opened >= floor {
+            ok = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+    assert!(ok, "per-shard accepts never reconciled with conns_opened ({backend:?})");
+
+    // the worker-side spine is live too: the batch-pass family served
+    // these requests, so its recorded count is non-zero by now
+    let body = scrape(&addr);
+    let exp = parse_exposition(&body).unwrap();
+    let passes: f64 =
+        exp.samples_named("ce_sched_batch_pass_ns_count").map(|s| s.value).sum();
+    assert!(passes > 0.0, "no batch passes recorded in the scrape ({backend:?})");
+
+    server.shutdown();
+}
+
+#[test]
+fn metrics_scrape_under_load() {
+    metrics_scrape_under_load_is_consistent(ReactorBackend::Auto);
+}
+
+#[test]
+fn metrics_scrape_under_load_other_backend() {
+    metrics_scrape_under_load_is_consistent(OTHER_BACKEND);
+}
+
 #[test]
 fn tcp_standalone_policy_never_contacts_server() {
     let server = spawn_mock_server(5);

@@ -268,6 +268,7 @@ fn main() {
                             session: 1,
                             channel: Channel::Infer,
                             resume: false,
+                            mirror: false,
                         }
                         .encode(),
                     )
@@ -334,8 +335,14 @@ fn main() {
             let (server_end, _) = listener.accept().unwrap();
             handle.register(server_end).unwrap();
             t.send(
-                &Message::Hello { device_id: 1, session: 1, channel: Channel::Infer, resume: false }
-                    .encode(),
+                &Message::Hello {
+                    device_id: 1,
+                    session: 1,
+                    channel: Channel::Infer,
+                    resume: false,
+                    mirror: false,
+                }
+                .encode(),
             )
             .unwrap();
             assert_eq!(t.recv().unwrap(), Message::Ack.encode());

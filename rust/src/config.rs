@@ -135,6 +135,41 @@ impl ReconnectPolicy {
     }
 }
 
+/// Warm-standby cloud replication: what a
+/// [`ReplicaSet`](crate::coordinator::edge::ReplicaSet) maintains above
+/// the primary [`CloudLink`](crate::coordinator::edge::CloudLink).
+///
+/// With `replicas = n`, the edge opens full dual-channel sessions
+/// against the next `n` endpoints after the primary (their Hellos carry
+/// the `mirror` bit so the cloud bills those uploads separately and
+/// prefers the sessions as eviction victims), mirrors every upload to
+/// them asynchronously on their own uploader threads, and keeps their
+/// health scored from keepalive ping RTT plus error/reconnect history.
+/// On primary failure the best-scored warm standby is promoted without
+/// any ring replay — its `ContextStore` coverage already spans the
+/// watermark, so tokens stay bit-identical with zero `context_replays`.
+///
+/// The degradation ladder (documented in [`crate::coordinator`]):
+/// hedged (when `hedge` and ≥1 healthy standby) → primary-only (no
+/// healthy standby) → the §4.4 local fallback (no link at all).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReplicationConfig {
+    /// Warm standbys to mirror to, beyond the primary.  Capped by the
+    /// number of configured endpoints minus one.
+    pub replicas: usize,
+    /// Hedged-infer mode: when the per-token deadline budget is tight,
+    /// duplicate the infer to the best-scored standby as well; the
+    /// first valid `(req_id, pos)` echo wins and the loser's late echo
+    /// is fenced by the existing stale-response skip.
+    pub hedge: bool,
+}
+
+impl Default for ReplicationConfig {
+    fn default() -> Self {
+        Self { replicas: 1, hedge: false }
+    }
+}
+
 /// Everything the edge client needs to run one deployment.
 #[derive(Debug, Clone)]
 pub struct DeploymentConfig {
@@ -171,6 +206,11 @@ pub struct DeploymentConfig {
     /// under the server's `ReactorConfig::idle_timeout_s` so a
     /// quiet-but-alive link is never reaped.  `0.0` disables keepalive.
     pub keepalive_idle_s: f64,
+    /// Warm-standby cloud replication (see [`ReplicationConfig`]).
+    /// `None` (the default) is byte-identical on the wire to the
+    /// pre-replication behaviour: one session, cold failover via
+    /// endpoint rotation + ring replay.
+    pub replication: Option<ReplicationConfig>,
 }
 
 impl Default for DeploymentConfig {
@@ -184,6 +224,7 @@ impl Default for DeploymentConfig {
             replay_ring_positions: 4096,
             reconnect: ReconnectPolicy::default(),
             keepalive_idle_s: 45.0,
+            replication: None,
         }
     }
 }
@@ -505,6 +546,16 @@ mod tests {
     fn metrics_off_by_default() {
         // histograms must be strictly opt-in (config or CE_METRICS env)
         assert!(!CloudConfig::default().metrics);
+    }
+
+    #[test]
+    fn replication_is_off_by_default() {
+        // one session, cold failover — byte-identical to the
+        // pre-replication wire behaviour unless explicitly enabled
+        assert!(DeploymentConfig::default().replication.is_none());
+        let r = ReplicationConfig::default();
+        assert_eq!(r.replicas, 1);
+        assert!(!r.hedge);
     }
 
     #[test]

@@ -47,7 +47,7 @@
 //! completes with bit-identical tokens at the cost of one extra upload
 //! round trip.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -106,6 +106,13 @@ pub struct ContextStore {
     /// upload (replay or a new request's prompt), `EndSession`, or a
     /// device reset.
     evicted: HashMap<u64, u32>,
+    /// Devices whose session Hello carried the `mirror` bit: warm
+    /// standbys kept warm by replicated uploads.  They are served
+    /// exactly like primaries but *preferred as eviction victims* under
+    /// budget pressure, so standbys never push a primary's live context
+    /// out of the LRU.  Cleared by a non-mirror reset (promotion) or a
+    /// full device reset.
+    mirror: HashSet<u64>,
     kv_bytes_per_pos: u64,
     budget: Option<u64>,
     ttl: Option<Duration>,
@@ -124,6 +131,7 @@ impl ContextStore {
             last_touch: HashMap::new(),
             resident: 0,
             evicted: HashMap::new(),
+            mirror: HashSet::new(),
             kv_bytes_per_pos: dims.cloud_kv_bytes_per_pos() as u64,
             budget,
             ttl: ttl_s.map(|s| Duration::from_secs_f64(s.max(0.0))),
@@ -267,7 +275,26 @@ impl ContextStore {
         self.cm.reset_device(device);
         self.sessions.remove(&device);
         self.evicted.remove(&device);
+        self.mirror.remove(&device);
         self.settle(device, before);
+    }
+
+    /// (Un)mark a device as a warm-standby mirror session (the Hello's
+    /// `mirror` bit, applied by the scheduler's reset path).  Mirror
+    /// devices are billed separately by the scheduler and preferred as
+    /// eviction victims; clearing the mark is a promotion — the standby
+    /// became the device's serving session.
+    pub fn set_mirror(&mut self, device: u64, mirror: bool) {
+        if mirror {
+            self.mirror.insert(device);
+        } else {
+            self.mirror.remove(&device);
+        }
+    }
+
+    /// Whether this device's session was opened with the `mirror` bit.
+    pub fn is_mirror(&self, device: u64) -> bool {
+        self.mirror.contains(&device)
     }
 
     // -- metering ------------------------------------------------------------
@@ -329,28 +356,33 @@ impl ContextStore {
     }
 
     /// Evict idle devices in LRU order until the shard fits its budget.
-    /// `protected` devices (the scheduler's parked set) and the single
-    /// most-recently-touched device are never evicted; if nothing
-    /// evictable remains the shard stays over budget rather than break a
-    /// live pass or livelock a replaying device.  Returns the evicted
-    /// device ids in eviction order (the scheduler's trace tap emits one
-    /// `evict` event per victim).  The budget check is O(1) per pass;
-    /// victim selection walks the index only while actually evicting.
+    /// Warm-standby mirror devices are preferred victims — every
+    /// evictable mirror goes (LRU order among mirrors) before any
+    /// primary, so replicated standbys never push a primary's live
+    /// context out.  `protected` devices (the scheduler's parked set)
+    /// and the single most-recently-touched device are never evicted;
+    /// if nothing evictable remains the shard stays over budget rather
+    /// than break a live pass or livelock a replaying device.  Returns
+    /// the evicted device ids in eviction order (the scheduler's trace
+    /// tap emits one `evict` event per victim).  The budget check is
+    /// O(1) per pass; victim selection walks the index only while
+    /// actually evicting.
     pub fn enforce_budget(&mut self, protected: impl Fn(u64) -> bool) -> Vec<u64> {
         let Some(budget) = self.budget else { return Vec::new() };
         let mut victims = Vec::new();
         while self.resident > budget {
             // ties broken by device id so eviction order is deterministic
-            // even when the monotonic clock is coarse
+            // even when the monotonic clock is coarse; mirror-ness keys
+            // the sort ahead of the LRU clock (standbys go first)
             let mru =
                 self.last_touch.iter().map(|(&d, &t)| (t, d)).max().map(|(_, d)| d);
             let victim = self
                 .last_touch
                 .iter()
-                .map(|(&d, &t)| (t, d))
-                .filter(|&(_, d)| !protected(d) && Some(d) != mru)
+                .map(|(&d, &t)| (!self.mirror.contains(&d), t, d))
+                .filter(|&(_, _, d)| !protected(d) && Some(d) != mru)
                 .min()
-                .map(|(_, d)| d);
+                .map(|(_, _, d)| d);
             let Some(victim) = victim else { break };
             self.evict(victim);
             self.evictions += 1;
@@ -477,6 +509,28 @@ mod tests {
         // still over budget, but nothing evictable remains -> no livelock
         assert!(store.resident_bytes() > 1);
         assert!(store.enforce_budget(|d| d == 1).is_empty());
+    }
+
+    #[test]
+    fn mirror_devices_are_preferred_eviction_victims() {
+        let m = dims();
+        let mut store = ContextStore::new(&m, Some(1), None); // absurd budget
+        let mut f = factory();
+        settle(&mut store, &mut f, 1, 3); // primary, least recently touched
+        settle(&mut store, &mut f, 2, 3); // warm standby (marked below)
+        settle(&mut store, &mut f, 3, 3); // MRU
+        store.set_mirror(2, true);
+        assert!(store.is_mirror(2) && !store.is_mirror(1));
+        // device 1 is older, but the mirror goes first; the MRU stays
+        let victims = store.enforce_budget(|_| false);
+        assert_eq!(victims, vec![2, 1], "mirror must be the first victim");
+        assert!(store.evicted_req(3).is_none());
+        // promotion clears the preference; a full reset clears it too
+        store.set_mirror(2, false);
+        assert!(!store.is_mirror(2));
+        store.set_mirror(3, true);
+        store.reset_device(3);
+        assert!(!store.is_mirror(3));
     }
 
     #[test]

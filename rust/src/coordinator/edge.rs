@@ -28,6 +28,26 @@
 //! local exits (latency-aware mode) or fail (strict mode).  Quiet links
 //! are kept alive — and dead ones detected early — by `Ping`/`Pong`
 //! keepalives (`DeploymentConfig::keepalive_idle_s`).
+//!
+//! Replication ([`ReplicaSet`], `DeploymentConfig::replication`): the
+//! client can hold extra *warm standby* `CloudLink`s against further
+//! endpoints, opened with the Hello `mirror` bit so the cloud knows the
+//! session is a passive copy.  Every hidden-state upload is duplicated
+//! to each live standby — asynchronously, on the standby's own uploader
+//! thread — so standby context coverage tracks the primary's watermark.
+//! Standbys are health-scored from keepalive ping RTT and reconnect
+//! history ([`CloudLink::health_score`]); when the primary dies the
+//! best-scored standby is *promoted*: the links swap, the pending
+//! request is re-issued, and **no history replay** happens — the
+//! standby's mirrored coverage already spans the watermark, so a warm
+//! failover costs zero `context_replays` and zero token differences.
+//! The degradation ladder is hedged → primary-only → §4.4 local
+//! fallback: with `hedge` on, a tight-deadline deferral is duplicated to
+//! the best standby and the first valid `(req_id, pos)` echo wins (the
+//! loser's late echo is fenced by the stale-response skip); with no live
+//! standby, failure falls back to the cold reconnect-and-replay path;
+//! with nothing left, the run degrades to local exits exactly as before
+//! replication existed.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -153,6 +173,17 @@ pub struct CloudLink {
     /// Jitter source for backoff and ping nonces (splitmix64; seeded
     /// from the session nonce, so two links never share a sequence).
     rng: Rng,
+    /// Whether this link's session was announced as a *mirror* (warm
+    /// standby, Hello mirror bit): the cloud accepts its uploads without
+    /// letting the passive copy distort LRU/eviction accounting.
+    /// Cleared on promotion so a later resume Hello re-announces the
+    /// link as a live primary.
+    mirror: bool,
+    /// Last keepalive round trip in f64-millisecond bits, shared with
+    /// the uploader thread (which probes on idle) so health scoring has
+    /// a fresh observation even on links whose infer channel is quiet —
+    /// exactly the warm-standby case.  `0.0` until the first probe.
+    ping_rtt_bits: Arc<AtomicU64>,
     /// Successful reconnects over this link's lifetime.
     pub reconnects: u64,
     /// Reconnects that landed on a *different* endpoint than the one
@@ -201,14 +232,17 @@ fn handshake(
     device_id: u64,
     session: u64,
     resume: bool,
+    mirror: bool,
     upload: &mut dyn Transport,
     infer: &mut dyn Transport,
 ) -> Result<()> {
-    infer
-        .send(&Message::Hello { device_id, session, channel: Channel::Infer, resume }.encode())?;
+    infer.send(
+        &Message::Hello { device_id, session, channel: Channel::Infer, resume, mirror }.encode(),
+    )?;
     expect_ack(infer)?;
-    upload
-        .send(&Message::Hello { device_id, session, channel: Channel::Upload, resume }.encode())?;
+    upload.send(
+        &Message::Hello { device_id, session, channel: Channel::Upload, resume, mirror }.encode(),
+    )?;
     expect_ack(upload)?;
     Ok(())
 }
@@ -217,12 +251,16 @@ fn handshake(
 /// interval it probes the channel with a `Ping` and waits for the
 /// `Pong`; any failure marks the link dead (`upload_dead`) so the next
 /// round trip reconnects instead of discovering the corpse via a park
-/// timeout.  Returns the job sender and the join handle (whose value is
-/// the bytes pushed onto the channel).
+/// timeout.  Each successful probe also records its round trip into the
+/// shared `rtt_bits` cell (f64 milliseconds as bits) — this is how warm
+/// standby links, whose infer channel is otherwise quiet, keep a fresh
+/// RTT observation for health scoring.  Returns the job sender and the
+/// join handle (whose value is the bytes pushed onto the channel).
 fn spawn_uploader(
     mut upload: Box<dyn Transport + Send>,
     keepalive_bits: Arc<AtomicU64>,
     dead: Arc<AtomicBool>,
+    rtt_bits: Arc<AtomicU64>,
 ) -> Result<(Sender<UploadJob>, JoinHandle<u64>)> {
     let (tx, rx) = channel::<UploadJob>();
     let handle = std::thread::Builder::new().name("edge-upload".into()).spawn(move || {
@@ -237,6 +275,7 @@ fn spawn_uploader(
                         nonce += 1;
                         let ping = Message::Ping { nonce }.encode();
                         sent += ping.len() as u64;
+                        let t0 = Instant::now();
                         let alive = upload.send(&ping).is_ok()
                             && matches!(
                                 upload.recv_deadline(Instant::now() + PONG_WAIT),
@@ -246,6 +285,8 @@ fn spawn_uploader(
                             dead.store(true, Ordering::Release);
                             break;
                         }
+                        let rtt_ms = t0.elapsed().as_secs_f64() * 1e3;
+                        rtt_bits.store(rtt_ms.to_bits(), Ordering::Relaxed);
                         continue;
                     }
                     Err(RecvTimeoutError::Disconnected) => break,
@@ -289,12 +330,17 @@ impl CloudLink {
         mut infer: Box<dyn Transport>,
     ) -> Result<Self> {
         let session = session_nonce();
-        handshake(device_id, session, false, &mut *upload, &mut *infer)?;
+        handshake(device_id, session, false, false, &mut *upload, &mut *infer)?;
         let keepalive_bits =
             Arc::new(AtomicU64::new(DeploymentConfig::default().keepalive_idle_s.to_bits()));
         let upload_dead = Arc::new(AtomicBool::new(false));
-        let (upload_tx, uploader) =
-            spawn_uploader(upload, Arc::clone(&keepalive_bits), Arc::clone(&upload_dead))?;
+        let ping_rtt_bits = Arc::new(AtomicU64::new(0));
+        let (upload_tx, uploader) = spawn_uploader(
+            upload,
+            Arc::clone(&keepalive_bits),
+            Arc::clone(&upload_dead),
+            Arc::clone(&ping_rtt_bits),
+        )?;
         let (hist_cloud_rtt, hist_ping_rtt) = edge_rtt_hists();
         Ok(Self {
             device_id,
@@ -309,6 +355,8 @@ impl CloudLink {
             dial: None,
             policy: ReconnectPolicy::disabled(),
             rng: Rng::seed_from_u64(session),
+            mirror: false,
+            ping_rtt_bits,
             reconnects: 0,
             failovers: 0,
             ping_rtt_last_ms: 0.0,
@@ -329,13 +377,27 @@ impl CloudLink {
     /// one (failover) — a cloud restart costs one replay round trip
     /// instead of a degraded run.
     pub fn connect(device_id: u64, endpoints: &[String], policy: ReconnectPolicy) -> Result<Self> {
+        Self::connect_role(device_id, endpoints.to_vec(), policy, Self::tcp_dialer(&policy), false)
+    }
+
+    /// [`CloudLink::connect`] for a *warm standby*: both `Hello`s carry
+    /// the mirror bit, so the cloud accepts this session's uploads
+    /// without letting the passive copy distort eviction accounting.
+    pub fn connect_mirror(
+        device_id: u64,
+        endpoints: &[String],
+        policy: ReconnectPolicy,
+    ) -> Result<Self> {
+        Self::connect_role(device_id, endpoints.to_vec(), policy, Self::tcp_dialer(&policy), true)
+    }
+
+    fn tcp_dialer(policy: &ReconnectPolicy) -> DialFn {
         let timeout = Duration::from_secs_f64(policy.connect_timeout_s.max(1e-3));
-        let dial: DialFn = Box::new(move |addr: &str| {
+        Box::new(move |addr: &str| {
             let upload = Box::new(TcpTransport::connect_timeout(addr, timeout)?);
             let infer = Box::new(TcpTransport::connect_timeout(addr, timeout)?);
             Ok((upload as Box<dyn Transport + Send>, infer as Box<dyn Transport>))
-        });
-        Self::connect_via(device_id, endpoints.to_vec(), policy, dial)
+        })
     }
 
     /// [`CloudLink::connect`] with a caller-supplied dialer — the
@@ -346,14 +408,34 @@ impl CloudLink {
         device_id: u64,
         endpoints: Vec<String>,
         policy: ReconnectPolicy,
+        dial: DialFn,
+    ) -> Result<Self> {
+        Self::connect_role(device_id, endpoints, policy, dial, false)
+    }
+
+    /// [`CloudLink::connect_mirror`] with a caller-supplied dialer.
+    pub fn connect_mirror_via(
+        device_id: u64,
+        endpoints: Vec<String>,
+        policy: ReconnectPolicy,
+        dial: DialFn,
+    ) -> Result<Self> {
+        Self::connect_role(device_id, endpoints, policy, dial, true)
+    }
+
+    fn connect_role(
+        device_id: u64,
+        endpoints: Vec<String>,
+        policy: ReconnectPolicy,
         mut dial: DialFn,
+        mirror: bool,
     ) -> Result<Self> {
         anyhow::ensure!(!endpoints.is_empty(), "no cloud endpoints");
         let session = session_nonce();
         let mut last_err = None;
         for (idx, ep) in endpoints.iter().enumerate() {
             match dial(ep).and_then(|(mut upload, mut infer)| {
-                handshake(device_id, session, false, &mut *upload, &mut *infer)?;
+                handshake(device_id, session, false, mirror, &mut *upload, &mut *infer)?;
                 Ok((upload, infer))
             }) {
                 Ok((upload, infer)) => {
@@ -361,10 +443,12 @@ impl CloudLink {
                         DeploymentConfig::default().keepalive_idle_s.to_bits(),
                     ));
                     let upload_dead = Arc::new(AtomicBool::new(false));
+                    let ping_rtt_bits = Arc::new(AtomicU64::new(0));
                     let (upload_tx, uploader) = spawn_uploader(
                         upload,
                         Arc::clone(&keepalive_bits),
                         Arc::clone(&upload_dead),
+                        Arc::clone(&ping_rtt_bits),
                     )?;
                     let (hist_cloud_rtt, hist_ping_rtt) = edge_rtt_hists();
                     return Ok(Self {
@@ -380,6 +464,8 @@ impl CloudLink {
                         dial: Some(dial),
                         policy,
                         rng: Rng::seed_from_u64(session),
+                        mirror,
+                        ping_rtt_bits,
                         reconnects: 0,
                         failovers: 0,
                         ping_rtt_last_ms: 0.0,
@@ -408,6 +494,34 @@ impl CloudLink {
         self.upload_dead.load(Ordering::Acquire)
     }
 
+    /// Last keepalive round trip observed on *either* channel, in
+    /// milliseconds: the freshest of the uploader thread's idle probes
+    /// and explicit [`CloudLink::ping`] calls.  `0.0` until one lands.
+    pub fn ping_rtt_ms(&self) -> f64 {
+        let cell = f64::from_bits(self.ping_rtt_bits.load(Ordering::Relaxed));
+        if cell > 0.0 {
+            cell
+        } else {
+            self.ping_rtt_last_ms
+        }
+    }
+
+    /// Replica health, lower is better: the last keepalive RTT in
+    /// milliseconds plus a fixed penalty per reconnect this link has
+    /// survived (a flapping link should lose a promotion race to a
+    /// stable one even when its last probe was fast).  A link whose
+    /// uploader declared the transport dead scores infinitely bad and
+    /// is never selected.
+    pub fn health_score(&self) -> f64 {
+        /// Score penalty (in RTT-equivalent milliseconds) per survived
+        /// reconnect.
+        const RECONNECT_PENALTY_MS: f64 = 25.0;
+        if self.upload_is_dead() {
+            return f64::INFINITY;
+        }
+        self.ping_rtt_ms() + RECONNECT_PENALTY_MS * self.reconnects as f64
+    }
+
     /// Probe the infer channel with a `Ping` and record the round trip
     /// in `ping_rtt_last_ms`.  Stale frames from an earlier abandoned
     /// deferral are drained and skipped while waiting for the `Pong`.
@@ -428,6 +542,7 @@ impl CloudLink {
                     }
                     let rtt_ms = t0.elapsed().as_secs_f64() * 1e3;
                     self.ping_rtt_last_ms = rtt_ms;
+                    self.ping_rtt_bits.store(rtt_ms.to_bits(), Ordering::Relaxed);
                     return Ok(rtt_ms);
                 }
                 // stale token/error/evicted/pong frames from an
@@ -470,7 +585,14 @@ impl CloudLink {
                     std::thread::sleep(Duration::from_secs_f64(jittered));
                 }
                 match dial(&ep).and_then(|(mut upload, mut infer)| {
-                    handshake(self.device_id, self.session, true, &mut *upload, &mut *infer)?;
+                    handshake(
+                        self.device_id,
+                        self.session,
+                        true,
+                        self.mirror,
+                        &mut *upload,
+                        &mut *infer,
+                    )?;
                     Ok((upload, infer))
                 }) {
                     Ok((upload, infer)) => {
@@ -479,6 +601,7 @@ impl CloudLink {
                             upload,
                             Arc::clone(&self.keepalive_bits),
                             Arc::clone(&self.upload_dead),
+                            Arc::clone(&self.ping_rtt_bits),
                         )?;
                         self.infer = infer;
                         self.upload_tx = upload_tx;
@@ -732,12 +855,83 @@ impl CloudLink {
     }
 }
 
+/// Warm standby replicas above the primary [`CloudLink`]
+/// (`DeploymentConfig::replication`).
+///
+/// Each standby is a full dual-channel session against a *different*
+/// endpoint, opened with the Hello mirror bit.  The client duplicates
+/// every hidden-state upload to each live standby, so standby context
+/// coverage tracks the primary's watermark; on primary failure the
+/// best-scored standby ([`CloudLink::health_score`]) is promoted with
+/// **zero** history replay.  A promoted or dead standby leaves the set —
+/// replicas are a budget spent over the run's lifetime, not a pool that
+/// refills.
+pub struct ReplicaSet {
+    standbys: Vec<CloudLink>,
+    /// Duplicate tight-deadline infer requests to the best standby; the
+    /// first valid `(req_id, pos)` echo wins.
+    pub hedge: bool,
+    /// Warm promotions over this set's lifetime.
+    pub failovers_warm: u64,
+}
+
+impl ReplicaSet {
+    pub fn new(hedge: bool) -> Self {
+        Self { standbys: Vec::new(), hedge, failovers_warm: 0 }
+    }
+
+    /// Attach one warm standby (a link opened with
+    /// [`CloudLink::connect_mirror`] / [`CloudLink::connect_mirror_via`]).
+    pub fn add_standby(&mut self, link: CloudLink) {
+        self.standbys.push(link);
+    }
+
+    pub fn len(&self) -> usize {
+        self.standbys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.standbys.is_empty()
+    }
+
+    /// Index of the healthiest live standby, or `None` when every
+    /// standby is dead (or the set is empty).
+    fn best(&self) -> Option<usize> {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, sb) in self.standbys.iter().enumerate() {
+            let score = sb.health_score();
+            if !score.is_finite() {
+                continue;
+            }
+            if best.map_or(true, |(_, s)| score < s) {
+                best = Some((i, score));
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
+    /// Last keepalive RTT per standby, milliseconds, in replica order
+    /// (`0.0` until a probe lands) — the `replica_ping_rtt_ms` gauge.
+    pub fn ping_rtts_ms(&self) -> Vec<f64> {
+        self.standbys.iter().map(CloudLink::ping_rtt_ms).collect()
+    }
+
+    /// Health score per standby, in replica order (lower is better,
+    /// `inf` = dead).
+    pub fn health_scores(&self) -> Vec<f64> {
+        self.standbys.iter().map(CloudLink::health_score).collect()
+    }
+}
+
 /// The edge client: engine + policy + optional cloud link.
 pub struct EdgeClient<E: EdgeEngine> {
     pub engine: E,
     pub tokenizer: Tokenizer,
     pub cfg: DeploymentConfig,
     link: Option<CloudLink>,
+    /// Warm standby replicas; `None` (the default) keeps every code
+    /// path byte-identical to the pre-replication client.
+    replicas: Option<ReplicaSet>,
     /// Set when the infer transport failed mid-run (latency-aware mode
     /// only): the rest of the run uses local exits.
     link_broken: bool,
@@ -749,7 +943,7 @@ impl<E: EdgeEngine> EdgeClient<E> {
     /// policy, deferred tokens fail — use [`Self::with_cloud`].
     pub fn standalone(engine: E, cfg: DeploymentConfig) -> Self {
         let tokenizer = Tokenizer::from_dims(engine.dims());
-        Self { engine, tokenizer, cfg, link: None, link_broken: false, req_id: 0 }
+        Self { engine, tokenizer, cfg, link: None, replicas: None, link_broken: false, req_id: 0 }
     }
 
     pub fn with_cloud(engine: E, cfg: DeploymentConfig, link: CloudLink) -> Self {
@@ -758,7 +952,38 @@ impl<E: EdgeEngine> EdgeClient<E> {
         // deployment's idle bound (must stay under the cloud reactor's
         // idle_timeout_s for quiet links to survive the reap)
         link.set_keepalive(cfg.keepalive_idle_s);
-        Self { engine, tokenizer, cfg, link: Some(link), link_broken: false, req_id: 0 }
+        Self {
+            engine,
+            tokenizer,
+            cfg,
+            link: Some(link),
+            replicas: None,
+            link_broken: false,
+            req_id: 0,
+        }
+    }
+
+    /// [`Self::with_cloud`] plus a set of warm standby replicas.  Every
+    /// standby gets the deployment's keepalive cadence — the probes are
+    /// what keep a quiet standby alive under the reactor's idle reap
+    /// *and* what feed its health score.
+    pub fn with_cloud_replicas(
+        engine: E,
+        cfg: DeploymentConfig,
+        link: CloudLink,
+        set: ReplicaSet,
+    ) -> Self {
+        for sb in &set.standbys {
+            sb.set_keepalive(cfg.keepalive_idle_s);
+        }
+        let mut client = Self::with_cloud(engine, cfg, link);
+        client.replicas = Some(set);
+        client
+    }
+
+    /// The live replica set, when replication is configured.
+    pub fn replicas(&self) -> Option<&ReplicaSet> {
+        self.replicas.as_ref()
     }
 
     fn precision(&self) -> Precision {
@@ -817,8 +1042,9 @@ impl<E: EdgeEngine> EdgeClient<E> {
             // full wire cost (frame prefix + message header + payload):
             // the same arithmetic the DES harness prices, so simulated
             // and measured byte totals agree exactly
-            counters.bytes_up += frame_wire_len(UPLOAD_HDR_LEN + payload.len()) as u64;
-            self.link_ref()?.enqueue_upload(Message::UploadHidden {
+            let wire = frame_wire_len(UPLOAD_HDR_LEN + payload.len()) as u64;
+            counters.bytes_up += wire;
+            let msg = Message::UploadHidden {
                 device_id,
                 req_id,
                 start_pos: 0,
@@ -826,7 +1052,9 @@ impl<E: EdgeEngine> EdgeClient<E> {
                 prompt_len: prompt_len as u32,
                 precision,
                 payload,
-            });
+            };
+            self.mirror_upload(&msg, wire, &mut counters);
+            self.link_ref()?.enqueue_upload(msg);
         }
 
         // --- first token decision at the last prompt position -------------
@@ -857,8 +1085,9 @@ impl<E: EdgeEngine> EdgeClient<E> {
             }
             if policy.uses_cloud() && flags.parallel_upload && flags.content_manager {
                 let payload = quant::pack(&s1.h1, precision);
-                counters.bytes_up += frame_wire_len(UPLOAD_HDR_LEN + payload.len()) as u64;
-                self.link_ref()?.enqueue_upload(Message::UploadHidden {
+                let wire = frame_wire_len(UPLOAD_HDR_LEN + payload.len()) as u64;
+                counters.bytes_up += wire;
+                let msg = Message::UploadHidden {
                     device_id,
                     req_id,
                     start_pos: pos as u32,
@@ -866,7 +1095,9 @@ impl<E: EdgeEngine> EdgeClient<E> {
                     prompt_len: prompt_len as u32,
                     precision,
                     payload,
-                });
+                };
+                self.mirror_upload(&msg, wire, &mut counters);
+                self.link_ref()?.enqueue_upload(msg);
             }
 
             next = if policy.exit_at_1(s1.exit1.conf) {
@@ -938,13 +1169,32 @@ impl<E: EdgeEngine> EdgeClient<E> {
             link.trace_infer_send(&end);
             let _ = link.infer.send(&end);
         }
+        if let Some(set) = self.replicas.as_mut() {
+            // mirrored sessions end with the request too, under the same
+            // flush-before-end ordering; a dead standby is skipped (its
+            // server reaps the session on idle timeout)
+            let end = Message::EndSession { device_id, req_id }.encode();
+            for sb in set.standbys.iter_mut() {
+                if sb.upload_is_dead() || !sb.flush_uploads_within(Some(flush_cap)) {
+                    continue;
+                }
+                sb.trace_infer_send(&end);
+                let _ = sb.infer.send(&end);
+            }
+        }
 
         cost.total_s = wall0.elapsed().as_secs_f64();
         counters.tokens_generated = tokens.len();
         if let Some(link) = self.link.as_ref() {
-            counters.reconnects = link.reconnects - reconnects0;
-            counters.failovers = link.failovers - failovers0;
+            // saturating: a warm promotion swaps in a standby whose
+            // lifetime totals started from zero, which can sit below the
+            // old primary's snapshot
+            counters.reconnects = link.reconnects.saturating_sub(reconnects0);
+            counters.failovers = link.failovers.saturating_sub(failovers0);
             counters.ping_rtt_last_ms = link.ping_rtt_last_ms;
+        }
+        if let Some(set) = self.replicas.as_ref() {
+            counters.replica_ping_rtt_ms = set.ping_rtts_ms();
         }
         Ok(GenerateOutput {
             text: self.tokenizer.decode(&tokens),
@@ -1053,16 +1303,19 @@ impl<E: EdgeEngine> EdgeClient<E> {
     /// worst case at `rounds × endpoints × max_attempts` dials.
     const RECONNECT_ROUNDS: usize = 3;
 
-    /// [`Self::cloud_roundtrip`] under the reconnect policy: a transport
-    /// failure re-establishes the link with session resume
-    /// ([`CloudLink::reestablish`]), replays the retained history on the
-    /// fresh infer channel, and retries the round trip.  The replay is
+    /// [`Self::cloud_roundtrip`] under the failover ladder.  A transport
+    /// failure first tries a **warm promotion** ([`Self::promote_standby`]):
+    /// the best live standby becomes the primary and the round trip
+    /// retries with no replay at all.  Only with no live standby does
+    /// the failure fall to the **cold** path — re-establish the link
+    /// with session resume ([`CloudLink::reestablish`]) and replay the
+    /// retained history on the fresh infer channel.  The cold replay is
     /// NOT counted as a context replay — the resumed session was
     /// suspended cooperatively, not evicted — so replay counters keep
-    /// measuring context-store pressure only.  When the link cannot
-    /// reconnect (disabled policy, injected transports, exhausted
-    /// endpoints) the original error propagates and the caller degrades
-    /// exactly as before this wrapper existed.
+    /// measuring context-store pressure only.  When neither rung is
+    /// available (no standbys, disabled policy, injected transports,
+    /// exhausted endpoints) the original error propagates and the
+    /// caller degrades exactly as before this wrapper existed.
     #[allow(clippy::too_many_arguments)]
     fn cloud_roundtrip_resilient(
         &mut self,
@@ -1079,22 +1332,38 @@ impl<E: EdgeEngine> EdgeClient<E> {
             // failure signal (keepalive probes fire on idle links); act
             // on it before spending a request on a socket known broken
             let preempt = self.link.as_ref().is_some_and(|l| l.upload_is_dead());
-            if preempt && self.can_reconnect() {
+            if preempt && (self.has_live_standby() || self.can_reconnect()) {
                 anyhow::ensure!(
                     rounds < Self::RECONNECT_ROUNDS,
-                    "cloud link kept dying through {rounds} reconnect(s) within one deferral"
+                    "cloud link kept dying through {rounds} failover(s) within one deferral"
                 );
                 rounds += 1;
-                log::warn!("upload channel dead; reconnecting before the deferral");
-                self.reconnect_and_replay(req_id, pos, prompt_len, cost, counters, ring)?;
+                if self.promote_standby(counters) {
+                    log::warn!("upload channel dead; promoted a warm standby");
+                } else {
+                    log::warn!("upload channel dead; reconnecting before the deferral");
+                    self.reconnect_and_replay(req_id, pos, prompt_len, cost, counters, ring)?;
+                }
             }
             match self.cloud_roundtrip(req_id, pos, prompt_len, cost, counters, ring) {
                 Ok(answer) => return Ok(answer),
-                Err(e) if rounds < Self::RECONNECT_ROUNDS && self.can_reconnect() => {
+                Err(e)
+                    if rounds < Self::RECONNECT_ROUNDS
+                        && (self.has_live_standby() || self.can_reconnect()) =>
+                {
                     rounds += 1;
-                    log::warn!("cloud round trip failed ({e:#}); reconnecting (round {rounds})");
-                    self.reconnect_and_replay(req_id, pos, prompt_len, cost, counters, ring)
-                        .with_context(|| format!("after transport failure: {e:#}"))?;
+                    if self.promote_standby(counters) {
+                        log::warn!(
+                            "cloud round trip failed ({e:#}); promoted a warm standby \
+                             (round {rounds})"
+                        );
+                    } else {
+                        log::warn!(
+                            "cloud round trip failed ({e:#}); reconnecting (round {rounds})"
+                        );
+                        self.reconnect_and_replay(req_id, pos, prompt_len, cost, counters, ring)
+                            .with_context(|| format!("after transport failure: {e:#}"))?;
+                    }
                 }
                 Err(e) => return Err(e),
             }
@@ -1106,6 +1375,67 @@ impl<E: EdgeEngine> EdgeClient<E> {
     /// neither).
     fn can_reconnect(&self) -> bool {
         self.link.as_ref().is_some_and(|l| l.policy.enabled() && l.dial.is_some())
+    }
+
+    /// Whether at least one warm standby is live enough to promote.
+    fn has_live_standby(&self) -> bool {
+        self.replicas.as_ref().is_some_and(|s| s.best().is_some())
+    }
+
+    /// Duplicate one upload to every live warm standby — asynchronous,
+    /// each copy on the standby's own uploader thread, priced in
+    /// `bytes_mirrored` so the paper-facing `bytes_up` column is
+    /// unchanged by replication.  A standby whose uploader already
+    /// declared its transport dead is skipped (it will be skipped at
+    /// promotion time too).
+    fn mirror_upload(&self, msg: &Message, wire_len: u64, counters: &mut RunCounters) {
+        let Some(set) = self.replicas.as_ref() else { return };
+        for sb in &set.standbys {
+            if sb.upload_is_dead() {
+                continue;
+            }
+            counters.bytes_mirrored += wire_len;
+            sb.enqueue_upload(msg.clone());
+        }
+    }
+
+    /// Warm failover: swap the healthiest live standby in as the
+    /// primary link.  The standby's mirrored uploads already cover the
+    /// watermark, so **no** history replay is issued — the caller
+    /// simply retries the round trip on the promoted link and the
+    /// cloud's scheduler parks the request until the standby's coverage
+    /// (already on its uploader, or landed) catches up.  Zero
+    /// `context_replays`, bit-identical tokens.
+    ///
+    /// The demoted primary is dropped — its uploader detaches bounded —
+    /// and the set shrinks: replicas are a budget, not a refilling
+    /// pool.  Returns `false` when no live standby exists, sending the
+    /// caller down the cold `reconnect_and_replay` ladder instead.
+    fn promote_standby(&mut self, counters: &mut RunCounters) -> bool {
+        let (Some(set), Some(link)) = (self.replicas.as_mut(), self.link.as_mut()) else {
+            return false;
+        };
+        let Some(idx) = set.best() else { return false };
+        let mut promoted = set.standbys.swap_remove(idx);
+        // from here on this session is the live one: a later resume
+        // Hello must not re-announce it as a passive mirror
+        promoted.mirror = false;
+        let old = std::mem::replace(link, promoted);
+        set.failovers_warm += 1;
+        counters.failovers_warm += 1;
+        if let Some(sink) = edge_sink() {
+            sink.emit(
+                Ev::new("edge_promote")
+                    .u("device", old.device_id)
+                    .u("standbys_left", set.standbys.len() as u64),
+            );
+        }
+        log::info!(
+            "warm failover: device {} promoted a mirror standby ({} left)",
+            old.device_id,
+            set.standbys.len()
+        );
+        true
     }
 
     /// Re-establish the severed link (same session nonce, `resume`
@@ -1130,6 +1460,7 @@ impl<E: EdgeEngine> EdgeClient<E> {
         let t0 = Instant::now();
         let link = self.link.as_mut().context("collaborative policy without cloud link")?;
         link.reestablish()?;
+        counters.failovers_cold += 1;
         link.send_full_history(ring, req_id, pos, prompt_len, dims_d, precision, counters)?;
         cost.comm_s += t0.elapsed().as_secs_f64();
         Ok(())
@@ -1184,20 +1515,93 @@ impl<E: EdgeEngine> EdgeClient<E> {
         counters.bytes_up += frame_wire_len(req_frame.len()) as u64;
         link.trace_infer_send(&req_frame);
         link.infer.send(&req_frame)?;
+
+        // hedged infer (degradation-ladder rung 1): when the deadline
+        // budget is tight, duplicate the request to the best-scored live
+        // standby.  Both servers derive the same token (mirrored
+        // coverage, same oracle), so whichever valid `(req_id, pos)`
+        // echo arrives first wins; the loser's late echo is fenced by
+        // the stale-response skip below, exactly like an abandoned
+        // deferral.  A failed duplicate send just forfeits the hedge.
+        let mut hedge_idx = match (deadline.is_some(), self.replicas.as_mut()) {
+            (true, Some(set)) if set.hedge => set.best().and_then(|i| {
+                let sb = &mut set.standbys[i];
+                sb.trace_infer_send(&req_frame);
+                sb.infer.send(&req_frame).ok().map(|_| i)
+            }),
+            _ => None,
+        };
+        if hedge_idx.is_some() {
+            counters.hedged_requests += 1;
+            counters.bytes_mirrored += frame_wire_len(req_frame.len()) as u64;
+            if let Some(sink) = edge_sink() {
+                sink.emit(
+                    Ev::new("edge_hedge")
+                        .u("device", device_id)
+                        .u("req", req_id as u64)
+                        .u("pos", pos as u64),
+                );
+            }
+        }
+
         let mut replays = 0usize;
         loop {
+            // acquire the next frame: primary only, or — while the hedge
+            // is live — both infer channels polled in short alternating
+            // slices, first frame wins
+            let mut from_standby = false;
             let frame = match deadline {
-                Some(dl) => match link.infer.recv_deadline(dl)? {
-                    Some(f) => f,
-                    None => {
-                        cost.comm_s += t0.elapsed().as_secs_f64();
-                        return Ok(CloudAnswer::DeadlineExpired);
+                Some(dl) => {
+                    let got = loop {
+                        let Some(si) = hedge_idx else {
+                            break link.infer.recv_deadline(dl)?.map(|f| (f, false));
+                        };
+                        const SLICE: Duration = Duration::from_millis(2);
+                        let now = Instant::now();
+                        if now >= dl {
+                            break None;
+                        }
+                        if let Some(f) = link.infer.recv_deadline(dl.min(now + SLICE))? {
+                            break Some((f, false));
+                        }
+                        let set = self.replicas.as_mut().expect("hedged without replicas");
+                        let sb = &mut set.standbys[si];
+                        let now = Instant::now();
+                        if now >= dl {
+                            break None;
+                        }
+                        match sb.infer.recv_deadline(dl.min(now + SLICE)) {
+                            Ok(Some(f)) => break Some((f, true)),
+                            Ok(None) => {}
+                            // a standby dying mid-race just loses the
+                            // hedge; the primary is still in play
+                            Err(_) => hedge_idx = None,
+                        }
+                    };
+                    match got {
+                        Some((f, sb)) => {
+                            from_standby = sb;
+                            f
+                        }
+                        None => {
+                            cost.comm_s += t0.elapsed().as_secs_f64();
+                            return Ok(CloudAnswer::DeadlineExpired);
+                        }
                     }
-                },
+                }
                 None => link.infer.recv()?,
             };
-            link.trace_infer_recv(&frame);
-            counters.bytes_down += frame_wire_len(frame.len()) as u64;
+            if from_standby {
+                if let (Some(set), Some(si)) = (self.replicas.as_ref(), hedge_idx) {
+                    set.standbys[si].trace_infer_recv(&frame);
+                }
+                // replica traffic is priced apart from the paper-facing
+                // bytes_down column, like the mirrored uploads
+                counters.bytes_mirrored += frame_wire_len(frame.len()) as u64;
+            } else {
+                link.trace_infer_recv(&frame);
+                counters.bytes_down += frame_wire_len(frame.len()) as u64;
+            }
             let rtt = t0.elapsed().as_secs_f64();
             match Message::decode(&frame)? {
                 Message::TokenResponse { req_id: r, pos: p, token, conf, compute_s } => {
@@ -1214,6 +1618,12 @@ impl<E: EdgeEngine> EdgeClient<E> {
                 }
                 Message::Error { req_id: r, pos: p, msg } => {
                     if r == NO_REQ || (r == req_id && p == pos as u32) {
+                        if from_standby {
+                            // the hedge lost (standby not covered /
+                            // refused); the primary race continues
+                            hedge_idx = None;
+                            continue;
+                        }
                         anyhow::bail!("cloud error: {msg}");
                     }
                     continue; // stale error for an abandoned deferral
@@ -1221,6 +1631,12 @@ impl<E: EdgeEngine> EdgeClient<E> {
                 Message::SessionEvicted { device_id: d, req_id: r, pos: p } => {
                     if d != device_id || r != req_id || p != pos as u32 {
                         continue; // stale notice for an abandoned deferral
+                    }
+                    if from_standby {
+                        // a standby evicted mid-race loses the hedge; no
+                        // replay is spent on a passive copy
+                        hedge_idx = None;
+                        continue;
                     }
                     anyhow::ensure!(
                         replays < REPLAY_LIMIT,
@@ -1240,7 +1656,13 @@ impl<E: EdgeEngine> EdgeClient<E> {
                     link.infer.send(&req_frame)?;
                     continue;
                 }
-                other => anyhow::bail!("unexpected response {other:?}"),
+                other => {
+                    if from_standby {
+                        hedge_idx = None;
+                        continue;
+                    }
+                    anyhow::bail!("unexpected response {other:?}")
+                }
             }
         }
     }

@@ -55,6 +55,65 @@
 //! any shard.  A resumed nonce is cooperative suspension: tombstones
 //! survive (stale frames from the dead socket stay fenced) and nothing
 //! is billed to the eviction counters.
+//!
+//! # Replication protocol (warm standbys)
+//!
+//! Above reconnect sits the replicated-cloud layer
+//! ([`edge::ReplicaSet`], `DeploymentConfig::replication`).  The edge
+//! holds concurrent sessions against several endpoints: one primary
+//! plus `replicas` warm standbys, each a full dual-channel session
+//! whose `Hello`s carry the **mirror bit** (bit `0x40` of the channel
+//! byte, next to resume's `0x80`).  The wire change is
+//! backward-compatible: a fresh non-mirror `Hello` is byte-identical
+//! to every release before the bit existed.
+//!
+//! Mirror semantics on the cloud: the session stores uploads like any
+//! other (same coverage, same dedup) but is billed under
+//! `uploads_mirrored`, is a *preferred eviction victim* (a passive
+//! copy must never push a live session out of memory), and converts to
+//! a live session on its first `InferRequest` (`mirror_promotions`,
+//! traced as `mirror_promote`) — which is exactly what a warm failover
+//! does.
+//!
+//! The edge mirrors every hidden-state upload to each live standby,
+//! asynchronously on the standby's own uploader thread, and
+//! health-scores replicas from keepalive ping RTT plus reconnect
+//! history.  Failure then walks a documented **degradation ladder** —
+//! each rung strictly cheaper in guarantees and cost than the one
+//! below is in damage:
+//!
+//! ```text
+//!          ┌──────────────────────────────────────────────────────┐
+//!          │ HEDGED   (hedge=true, deadline set, live standby)    │
+//!          │   InferRequest duplicated to best standby;           │
+//!          │   first valid (req_id,pos) echo wins, loser fenced   │
+//!          │   by the stale-response skip                         │
+//!          └───────────────┬──────────────────────────────────────┘
+//!                          │ primary transport error / dead uploads
+//!                          ▼
+//!          ┌──────────────────────────────────────────────────────┐
+//!          │ WARM FAILOVER (live standby)                         │
+//!          │   promote best-scored standby: swap links, re-issue  │
+//!          │   request, NO replay — mirrored coverage already     │
+//!          │   spans the watermark (failovers_warm,               │
+//!          │   context_replays += 0, bit-identical tokens)        │
+//!          └───────────────┬──────────────────────────────────────┘
+//!                          │ no live standby
+//!                          ▼
+//!          ┌──────────────────────────────────────────────────────┐
+//!          │ COLD RECONNECT (PRIMARY-ONLY)                        │
+//!          │   re-dial + resume Hello + full-history replay from  │
+//!          │   the ring (failovers_cold) — the pre-replication    │
+//!          │   recovery path, unchanged                           │
+//!          └───────────────┬──────────────────────────────────────┘
+//!                          │ reconnect exhausted / disabled
+//!                          ▼
+//!          ┌──────────────────────────────────────────────────────┐
+//!          │ LOCAL FALLBACK (§4.4)                                │
+//!          │   finish the run on the best local exit              │
+//!          │   (latency-aware mode) or fail (strict mode)         │
+//!          └──────────────────────────────────────────────────────┘
+//! ```
 pub mod policy;
 pub mod protocol;
 pub mod content_manager;

@@ -36,7 +36,16 @@ pub enum Message {
     /// degrades to a fresh session, which the edge's full-history replay
     /// then rebuilds.  On the wire the flag rides the high bit of the
     /// channel byte, so pre-resume Hellos decode as `resume = false`.
-    Hello { device_id: u64, session: u64, channel: Channel, resume: bool },
+    /// `mirror = true` marks a warm-standby session: the edge is
+    /// replicating its uploads to this endpoint so a future failover can
+    /// promote it without any ring replay.  The cloud serves a mirror
+    /// session exactly like a primary one, but bills its uploads
+    /// separately (`uploads_mirrored`) and prefers it as an eviction
+    /// victim so standbys never distort primary LRU accounting.  The
+    /// flag rides bit 6 of the channel byte ([`CHANNEL_MIRROR_BIT`]);
+    /// a fresh non-mirror Hello stays byte-identical to the pre-replica
+    /// format.
+    Hello { device_id: u64, session: u64, channel: Channel, resume: bool, mirror: bool },
     /// Hidden states for positions `start_pos .. start_pos + count`
     /// at `l_ee1` (`count * d_model` elements in `precision`).
     /// `prompt_len` lets the server distinguish prompt uploads from
@@ -143,25 +152,43 @@ const TAG_PING: u8 = 9;
 const TAG_PONG: u8 = 10;
 
 /// High bit of the `Hello` channel byte: set on a reconnect (resume)
-/// Hello.  The low 7 bits stay the channel role, so decoders that
+/// Hello.  The low bits stay the channel role, so decoders that
 /// predate resume reject the flag instead of misreading the channel.
 const CHANNEL_RESUME_BIT: u8 = 0x80;
+
+/// Bit 6 of the `Hello` channel byte: set on a warm-standby (mirror)
+/// session's Hello.  Same compatibility story as the resume bit — a
+/// decoder that predates replication rejects the flag rather than
+/// misreading the channel, and a non-mirror Hello encodes exactly as
+/// before the bit existed.
+const CHANNEL_MIRROR_BIT: u8 = 0x40;
+
+/// Both `Hello` channel-byte flags, masked off before the channel role
+/// is interpreted.
+const CHANNEL_FLAG_BITS: u8 = CHANNEL_RESUME_BIT | CHANNEL_MIRROR_BIT;
 
 impl Message {
     pub fn encode(&self) -> Vec<u8> {
         let mut b = Vec::with_capacity(32);
         match self {
-            Message::Hello { device_id, session, channel, resume } => {
+            Message::Hello { device_id, session, channel, resume, mirror } => {
                 b.push(TAG_HELLO);
                 b.extend_from_slice(&device_id.to_le_bytes());
                 b.extend_from_slice(&session.to_le_bytes());
-                // channel stays the last byte of the frame; resume rides
-                // its high bit so a fresh Hello encodes exactly as before
-                let base = match channel {
+                // channel stays the last byte of the frame; resume and
+                // mirror ride its high bits so a fresh non-mirror Hello
+                // encodes exactly as before either flag existed
+                let mut c = match channel {
                     Channel::Upload => 0,
                     Channel::Infer => 1,
                 };
-                b.push(if *resume { base | CHANNEL_RESUME_BIT } else { base });
+                if *resume {
+                    c |= CHANNEL_RESUME_BIT;
+                }
+                if *mirror {
+                    c |= CHANNEL_MIRROR_BIT;
+                }
+                b.push(c);
             }
             Message::UploadHidden {
                 device_id,
@@ -242,12 +269,13 @@ impl Message {
                 let session = r.u64()?;
                 let c = r.u8()?;
                 let resume = c & CHANNEL_RESUME_BIT != 0;
-                let channel = match c & !CHANNEL_RESUME_BIT {
+                let mirror = c & CHANNEL_MIRROR_BIT != 0;
+                let channel = match c & !CHANNEL_FLAG_BITS {
                     0 => Channel::Upload,
                     1 => Channel::Infer,
                     _ => bail!("bad channel {c}"),
                 };
-                Message::Hello { device_id, session, channel, resume }
+                Message::Hello { device_id, session, channel, resume, mirror }
             }
             TAG_UPLOAD => {
                 let v = read_upload(&mut r)?;
@@ -385,24 +413,42 @@ mod tests {
             session: 7,
             channel: Channel::Upload,
             resume: false,
+            mirror: false,
         });
         roundtrip(Message::Hello {
             device_id: 0,
             session: u64::MAX,
             channel: Channel::Infer,
             resume: false,
+            mirror: false,
         });
         roundtrip(Message::Hello {
             device_id: 42,
             session: 7,
             channel: Channel::Upload,
             resume: true,
+            mirror: false,
         });
         roundtrip(Message::Hello {
             device_id: 1,
             session: 2,
             channel: Channel::Infer,
             resume: true,
+            mirror: false,
+        });
+        roundtrip(Message::Hello {
+            device_id: 9,
+            session: 3,
+            channel: Channel::Upload,
+            resume: false,
+            mirror: true,
+        });
+        roundtrip(Message::Hello {
+            device_id: 9,
+            session: 3,
+            channel: Channel::Infer,
+            resume: true,
+            mirror: true,
         });
         roundtrip(Message::UploadHidden {
             device_id: u64::MAX,
@@ -447,24 +493,60 @@ mod tests {
 
     #[test]
     fn fresh_hello_wire_format_is_unchanged() {
-        // resume = false must encode byte-for-byte like the pre-resume
-        // format: tag | device | session | channel, channel ∈ {0, 1} as
-        // the last byte — old decoders keep accepting fresh Hellos.
-        let enc =
-            Message::Hello { device_id: 5, session: 11, channel: Channel::Infer, resume: false }
-                .encode();
+        // resume = mirror = false must encode byte-for-byte like the
+        // pre-resume format: tag | device | session | channel, channel
+        // ∈ {0, 1} as the last byte — old decoders keep accepting
+        // fresh non-mirror Hellos.
+        let enc = Message::Hello {
+            device_id: 5,
+            session: 11,
+            channel: Channel::Infer,
+            resume: false,
+            mirror: false,
+        }
+        .encode();
         assert_eq!(enc.len(), HELLO_LEN);
         assert_eq!(*enc.last().unwrap(), 1);
-        let up =
-            Message::Hello { device_id: 5, session: 11, channel: Channel::Upload, resume: false }
-                .encode();
+        let up = Message::Hello {
+            device_id: 5,
+            session: 11,
+            channel: Channel::Upload,
+            resume: false,
+            mirror: false,
+        }
+        .encode();
         assert_eq!(*up.last().unwrap(), 0);
-        // ... and the resume bit only flips the high bit
-        let res =
-            Message::Hello { device_id: 5, session: 11, channel: Channel::Infer, resume: true }
-                .encode();
+        // ... and each flag only flips its own bit
+        let res = Message::Hello {
+            device_id: 5,
+            session: 11,
+            channel: Channel::Infer,
+            resume: true,
+            mirror: false,
+        }
+        .encode();
         assert_eq!(*res.last().unwrap(), 0x81);
         assert_eq!(enc[..enc.len() - 1], res[..res.len() - 1]);
+        let mir = Message::Hello {
+            device_id: 5,
+            session: 11,
+            channel: Channel::Infer,
+            resume: false,
+            mirror: true,
+        }
+        .encode();
+        assert_eq!(*mir.last().unwrap(), 0x41);
+        assert_eq!(enc[..enc.len() - 1], mir[..mir.len() - 1]);
+        let both = Message::Hello {
+            device_id: 5,
+            session: 11,
+            channel: Channel::Upload,
+            resume: true,
+            mirror: true,
+        }
+        .encode();
+        assert_eq!(*both.last().unwrap(), 0xC0);
+        assert_eq!(enc[..enc.len() - 1], both[..both.len() - 1]);
     }
 
     #[test]
@@ -486,8 +568,13 @@ mod tests {
         assert_eq!(tk.encode().len(), TOKEN_RESP_LEN);
         let ev = Message::SessionEvicted { device_id: 1, req_id: 1, pos: 0 };
         assert_eq!(ev.encode().len(), EVICTED_LEN);
-        let hl =
-            Message::Hello { device_id: 1, session: 1, channel: Channel::Upload, resume: true };
+        let hl = Message::Hello {
+            device_id: 1,
+            session: 1,
+            channel: Channel::Upload,
+            resume: true,
+            mirror: true,
+        };
         assert_eq!(hl.encode().len(), HELLO_LEN);
         assert_eq!(Message::Ping { nonce: 1 }.encode().len(), PING_LEN);
         assert_eq!(Message::Pong { nonce: 1 }.encode().len(), PING_LEN);
@@ -514,8 +601,14 @@ mod tests {
         for cut in 1..pg.len() {
             assert!(Message::decode(&pg[..cut]).is_err(), "ping cut at {cut}");
         }
-        let hl = Message::Hello { device_id: 3, session: 9, channel: Channel::Infer, resume: true }
-            .encode();
+        let hl = Message::Hello {
+            device_id: 3,
+            session: 9,
+            channel: Channel::Infer,
+            resume: true,
+            mirror: true,
+        }
+        .encode();
         for cut in 1..hl.len() {
             assert!(Message::decode(&hl[..cut]).is_err(), "hello cut at {cut}");
         }
@@ -535,13 +628,20 @@ mod tests {
 
     #[test]
     fn rejects_bad_precision_and_channel() {
-        let mut enc =
-            Message::Hello { device_id: 1, session: 3, channel: Channel::Infer, resume: false }
-                .encode();
+        let mut enc = Message::Hello {
+            device_id: 1,
+            session: 3,
+            channel: Channel::Infer,
+            resume: false,
+            mirror: false,
+        }
+        .encode();
         *enc.last_mut().unwrap() = 9;
         assert!(Message::decode(&enc).is_err());
-        // a resume bit on a bad channel is still a bad channel
+        // a resume or mirror bit on a bad channel is still a bad channel
         *enc.last_mut().unwrap() = 0x80 | 9;
+        assert!(Message::decode(&enc).is_err());
+        *enc.last_mut().unwrap() = 0x40 | 9;
         assert!(Message::decode(&enc).is_err());
     }
 

@@ -217,7 +217,14 @@ pub enum SchedMsg {
     /// resume whose nonce the worker cannot honor (unknown device or a
     /// different pinned session — e.g. after failover to a restarted
     /// cloud) is counted and degraded to the full reset.
-    Reset { device: u64, session: u64, resume: bool },
+    ///
+    /// `mirror = true` (the Hello's mirror bit): this session is a
+    /// warm standby — the edge replicates its uploads here so a future
+    /// failover can promote the session without replay.  The worker
+    /// marks the device in its store (separate upload billing,
+    /// preferred eviction victim); the first infer on a mirror device
+    /// clears the mark (promotion).
+    Reset { device: u64, session: u64, resume: bool, mirror: bool },
     Stats { reply: Sender<CloudStats> },
     Shutdown,
 }
@@ -227,6 +234,14 @@ pub enum SchedMsg {
 pub struct CloudStats {
     pub requests_served: u64,
     pub uploads: u64,
+    /// Uploads that landed on a warm-standby (mirror) session — a
+    /// subset of `uploads`, billed separately so replication overhead
+    /// stays visible next to primary traffic.
+    pub uploads_mirrored: u64,
+    /// Mirror sessions promoted to serving: an infer arrived on a
+    /// device whose session Hello carried the mirror bit (the edge
+    /// failed over to this standby, or hedged onto it).
+    pub mirror_promotions: u64,
     pub busy_s: f64,
     pub active_devices: usize,
     pub pending_floats: usize,
@@ -283,6 +298,8 @@ impl CloudStats {
         let mut o = std::collections::BTreeMap::new();
         o.insert("requests_served".into(), num(self.requests_served as f64));
         o.insert("uploads".into(), num(self.uploads as f64));
+        o.insert("uploads_mirrored".into(), num(self.uploads_mirrored as f64));
+        o.insert("mirror_promotions".into(), num(self.mirror_promotions as f64));
         o.insert("busy_s".into(), num(self.busy_s));
         o.insert("active_devices".into(), num(self.active_devices as f64));
         o.insert("pending_floats".into(), num(self.pending_floats as f64));
@@ -325,6 +342,8 @@ impl CloudStats {
     fn merge(&mut self, o: &CloudStats) {
         self.requests_served += o.requests_served;
         self.uploads += o.uploads;
+        self.uploads_mirrored += o.uploads_mirrored;
+        self.mirror_promotions += o.mirror_promotions;
         self.busy_s += o.busy_s;
         self.active_devices += o.active_devices;
         self.pending_floats += o.pending_floats;
@@ -802,6 +821,9 @@ impl Worker {
                     return true;
                 }
                 self.stats.uploads += 1;
+                if self.store.is_mirror(device) {
+                    self.stats.uploads_mirrored += 1;
+                }
                 // packed payloads unpack HERE, on the owning worker —
                 // the reactor thread never pays the f16→f32 conversion
                 let hiddens = match payload.into_floats() {
@@ -853,6 +875,18 @@ impl Worker {
                         "infer request {req_id} from a stale connection of device {device}"
                     )));
                     return true;
+                }
+                if self.store.is_mirror(device) {
+                    // first infer on a warm-standby session: the edge
+                    // promoted it after a primary failure, or hedged
+                    // onto it under a tight deadline — either way the
+                    // session is serving now, so it stops being a
+                    // preferred eviction victim
+                    self.store.set_mirror(device, false);
+                    self.stats.mirror_promotions += 1;
+                    self.trace_with(|w| {
+                        Ev::new("mirror_promote").u("worker", w).u("device", device)
+                    });
                 }
                 if self.store.evicted_req(device).is_some() {
                     // the device's context is gone: parking would wait
@@ -930,7 +964,7 @@ impl Worker {
                     }
                 }
             }
-            SchedMsg::Reset { device, session, resume } => {
+            SchedMsg::Reset { device, session, resume, mirror } => {
                 let honored = resume
                     && session != 0
                     && self.session_of.get(&device) == Some(&session);
@@ -941,6 +975,7 @@ impl Worker {
                         .hex("session", session)
                         .b("resume", resume)
                         .b("honored", honored)
+                        .b("mirror", mirror)
                 });
                 if honored {
                     self.store.suspend_device(device);
@@ -954,6 +989,11 @@ impl Worker {
                         self.session_of.insert(device, session);
                     }
                 }
+                // the Hello's mirror bit re-stamps the device either
+                // way: a reconnecting standby stays a standby, a
+                // non-mirror Hello on a previously mirrored device is
+                // a promotion-by-reconnect
+                self.store.set_mirror(device, mirror);
                 // parked replies belong to the dead connection either
                 // way: fail them so the slots free up immediately
                 if let Some(queue) = self.parked.remove(&device) {

@@ -98,6 +98,36 @@ pub struct SimConfig {
     /// bytes and time, never different tokens.  `None` keeps the rng
     /// stream — and thus every cost — bit-identical to the no-fault law.
     pub link_fault: Option<LinkFaultSim>,
+    /// Model the replicated cloud (`DeploymentConfig::replication`):
+    /// the edge opens `replicas` warm-standby sessions up front
+    /// (mirror-bit dual handshakes), fans every hidden-state upload
+    /// out to each live standby — bytes on the standby channels,
+    /// asynchronously, never generation time — and recovers each
+    /// [`LinkFaultSim`] sever by *warm promotion* while standbys
+    /// remain: no backoff, no re-handshake, no history replay, only
+    /// the promoted mirror's cloud-side re-prefill (`failovers_warm`,
+    /// `context_replays += 0`).  Once the standby budget is spent,
+    /// severs fall back to the cold reconnect law (`failovers_cold`).
+    /// `None` keeps the rng stream — and thus every cost —
+    /// bit-identical to the pre-replication law.
+    pub replication: Option<SimReplication>,
+}
+
+/// Warm-standby replication model for [`SimConfig::replication`],
+/// mirroring [`crate::config::ReplicationConfig`]: a fixed standby
+/// budget that shrinks by one per warm promotion and never refills
+/// (replicas are a budget, not a pool).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimReplication {
+    /// Warm standbys opened at session start.  `0` opens mirror
+    /// handshakes for no one and recovers every sever cold.
+    pub replicas: usize,
+    /// Price a duplicated `InferRequest`/`TokenResponse` pair on the
+    /// best standby's channel for every cloud call.  The live edge
+    /// hedges only deadline-budgeted calls; the DES has no deadline to
+    /// gate on, so it prices the upper bound.  Hedging costs standby
+    /// bytes — never time, never different tokens.
+    pub hedge: bool,
 }
 
 /// Deterministic sever schedule for [`SimConfig::link_fault`], mirroring
@@ -124,6 +154,7 @@ impl Default for SimConfig {
             memory_budget_bytes: None,
             session_ttl_s: None,
             link_fault: None,
+            replication: None,
         }
     }
 }
@@ -281,6 +312,12 @@ struct ClientSim<'a> {
     price_replay: bool,
     /// Sever schedule ([`SimConfig::link_fault`]); `None` prices nothing.
     link_fault: Option<LinkFaultSim>,
+    /// Replication model ([`SimConfig::replication`]); `None` prices
+    /// nothing and keeps the rng stream bit-identical to the legacy law.
+    replication: Option<SimReplication>,
+    /// Warm standbys still open — each promotion spends one (the set
+    /// shrinks; it never refills).
+    standbys_left: usize,
     /// Cloud calls issued so far — the ordinal the sever schedule keys on.
     cloud_calls: u64,
     /// Pending (not yet cloud-requested) call produced by `advance`.
@@ -301,7 +338,18 @@ impl<'a> ClientSim<'a> {
         seed: u64,
         price_replay: bool,
         link_fault: Option<LinkFaultSim>,
+        replication: Option<SimReplication>,
     ) -> Self {
+        // only CE-CoLLM holds persistent cloud sessions worth
+        // mirroring; the baselines are stateless per call
+        let standbys = match (replication, strategy) {
+            (Some(r), Strategy::CeCollm(_)) => r.replicas,
+            _ => 0,
+        };
+        let mut counters = RunCounters::default();
+        // the dual-channel mirror handshakes that open each standby
+        // session up front ride the standby channels, not the primary
+        counters.bytes_mirrored += (standbys * 2 * (HELLO_BYTES + ACK_BYTES)) as u64;
         Self {
             id,
             traces,
@@ -317,11 +365,22 @@ impl<'a> ClientSim<'a> {
             upload_ready: 0.0,
             price_replay,
             link_fault,
+            replication,
+            standbys_left: standbys,
             cloud_calls: 0,
             cost: CostBreakdown::default(),
-            counters: RunCounters::default(),
+            counters,
             done: false,
         }
+    }
+
+    /// Price the asynchronous fan-out of a hidden-state upload to every
+    /// live warm standby ([`SimConfig::replication`]): the bytes ride
+    /// the standbys' own uploader threads, off the generation critical
+    /// path, so mirroring costs bytes — never time.  A no-op with no
+    /// replication or once the standby budget is spent.
+    fn mirror_hidden(&mut self, bytes: usize) {
+        self.counters.bytes_mirrored += (bytes * self.standbys_left) as u64;
     }
 
     fn flags(&self) -> AblationFlags {
@@ -506,6 +565,7 @@ impl<'a> ClientSim<'a> {
                     let bytes = self.hidden_bytes(tr.prompt_len);
                     self.upload_ready = self.uplink.transfer(self.edge_t, bytes);
                     self.counters.bytes_up += bytes as u64;
+                    self.mirror_hidden(bytes);
                 }
             }
 
@@ -518,6 +578,7 @@ impl<'a> ClientSim<'a> {
                     let bytes = self.hidden_bytes(1);
                     self.upload_ready = self.uplink.transfer(self.edge_t, bytes);
                     self.counters.bytes_up += bytes as u64;
+                    self.mirror_hidden(bytes);
                 }
                 if step.conf2.is_some() {
                     let d = self.cost_model.sample_seg2(&mut self.rng);
@@ -542,18 +603,28 @@ impl<'a> ClientSim<'a> {
                     self.counters.tokens_cloud += 1;
                     self.counters.cloud_requests += 1;
                     self.cloud_calls += 1;
-                    // scheduled link sever: the edge reconnects with
-                    // session resume before this call — backoff, dual
-                    // re-Hello/Ack, then the full-history replay the
-                    // suspended cloud session needs (the same bytes the
-                    // live edge's reconnect path sends).  Counted as a
-                    // reconnect, NOT a context replay; the pass below
-                    // additionally re-prefills on the cloud side.
+                    // scheduled link sever: recovery walks the
+                    // degradation ladder.  While a warm standby remains,
+                    // promote it — an already-open session whose mirrored
+                    // coverage spans the watermark: no backoff, no
+                    // re-handshake, no replay bytes, zero context
+                    // replays; the promoted mirror holds hidden state
+                    // but no KV, so the pass below re-prefills on the
+                    // cloud side.  Otherwise the edge reconnects with
+                    // session resume — backoff, dual re-Hello/Ack, then
+                    // the full-history replay the suspended cloud
+                    // session needs (the same bytes the live edge's
+                    // reconnect path sends).  Counted as a reconnect,
+                    // NOT a context replay.
                     let severed = self.link_fault.is_some_and(|f| {
                         f.sever_every > 0 && self.cloud_calls % f.sever_every == 0
                     });
                     let mut resume_prefill_s = 0.0;
-                    if severed {
+                    if severed && self.standbys_left > 0 {
+                        self.standbys_left -= 1;
+                        self.counters.failovers_warm += 1;
+                        resume_prefill_s = self.cost_model.sample_cloud_prefill(&mut self.rng);
+                    } else if severed {
                         let f = self.link_fault.expect("checked above");
                         let t0 = self.edge_t;
                         self.edge_t += f.reconnect_delay_s.max(0.0);
@@ -567,6 +638,9 @@ impl<'a> ClientSim<'a> {
                         self.edge_t = replay_at;
                         self.cost.comm_s += replay_at - t0;
                         self.counters.reconnects += 1;
+                        if self.replication.is_some() {
+                            self.counters.failovers_cold += 1;
+                        }
                         resume_prefill_s = self.cost_model.sample_cloud_prefill(&mut self.rng);
                     }
                     let mut ready = self.upload_ready;
@@ -575,6 +649,7 @@ impl<'a> ClientSim<'a> {
                         let bytes = self.hidden_bytes(step.pos + 1);
                         let arrived = self.uplink.transfer(self.edge_t, bytes);
                         self.counters.bytes_up += bytes as u64;
+                        self.mirror_hidden(bytes);
                         self.cost.comm_s += arrived - self.edge_t;
                         self.edge_t = arrived;
                         ready = arrived;
@@ -588,9 +663,18 @@ impl<'a> ClientSim<'a> {
                         let bytes = self.hidden_bytes(unsent);
                         let arrived = self.uplink.transfer(self.edge_t, bytes);
                         self.counters.bytes_up += bytes as u64;
+                        self.mirror_hidden(bytes);
                         self.cost.comm_s += arrived - self.edge_t;
                         self.edge_t = arrived;
                         ready = arrived;
+                    }
+                    // hedged infer (ladder rung 1): duplicate the
+                    // request to the best standby; the loser's echo is
+                    // fenced by the stale-response skip, so hedging
+                    // costs standby-channel bytes, never time or tokens
+                    if self.replication.is_some_and(|r| r.hedge) && self.standbys_left > 0 {
+                        self.counters.hedged_requests += 1;
+                        self.counters.bytes_mirrored += (REQ_BYTES + RESP_BYTES) as u64;
                     }
                     let sent_s = self.edge_t;
                     let req_arrive = self.uplink.transfer(self.edge_t, REQ_BYTES);
@@ -713,6 +797,7 @@ pub fn simulate(
                 cfg.seed,
                 price_replay,
                 cfg.link_fault,
+                cfg.replication,
             )
         })
         .collect();
@@ -787,6 +872,7 @@ pub fn simulate(
             c.counters.bytes_down += EVICTED_BYTES as u64;
             let replay_done = c.uplink.transfer(notice_at, call.replay_bytes);
             c.counters.bytes_up += call.replay_bytes as u64;
+            c.mirror_hidden(call.replay_bytes);
             let rerequest_at = c.uplink.transfer(replay_done, REQ_BYTES);
             c.counters.bytes_up += REQ_BYTES as u64;
             c.counters.context_replays += 1;
@@ -1196,6 +1282,7 @@ mod tests {
             memory_budget_bytes: budget,
             session_ttl_s: None,
             link_fault: None,
+            replication: None,
         };
         let free = simulate(&traces, &d, &cost(), &mk(None));
         let tight = simulate(&traces, &d, &cost(), &mk(Some(one_ctx)));
@@ -1242,6 +1329,7 @@ mod tests {
                 memory_budget_bytes: None,
                 session_ttl_s: None,
                 link_fault: None,
+                replication: None,
             },
         );
         assert_eq!(base.summed().0, with_fields.summed().0);
@@ -1264,6 +1352,7 @@ mod tests {
             memory_budget_bytes: None,
             session_ttl_s: ttl,
             link_fault: None,
+            replication: None,
         };
         let free = simulate(&traces, &dims(), &cost(), &mk(None));
         let reaped = simulate(&traces, &dims(), &cost(), &mk(Some(1e-9)));
@@ -1305,6 +1394,121 @@ mod tests {
         assert_eq!(ak.reconnects, hk.reconnects);
         assert_eq!(ak.bytes_up, hk.bytes_up);
         assert_eq!(ac, hc);
+    }
+
+    #[test]
+    fn warm_failover_prices_no_replay_bytes() {
+        // every sever recovered by warm promotion: the paper-facing
+        // uplink bill matches the fault-free run exactly — no backoff,
+        // no re-Hello, no history replay — while the cold law pays all
+        // three.  Mirroring is billed on its own channel.
+        let pattern = [Cloud, Exit1, Cloud, Exit2, Cloud, Exit1, Cloud, Exit1];
+        let traces = vec![vec![mk_trace(12, &pattern); 3]];
+        let base = cfg(Strategy::CeCollm(AblationFlags::default()));
+        let fault = Some(LinkFaultSim { sever_every: 3, reconnect_delay_s: 0.05 });
+        let cold_cfg = SimConfig { link_fault: fault, ..base };
+        let warm_cfg = SimConfig {
+            link_fault: fault,
+            replication: Some(SimReplication { replicas: 8, hedge: false }),
+            ..base
+        };
+        let clean = simulate(&traces, &dims(), &cost(), &base);
+        let cold = simulate(&traces, &dims(), &cost(), &cold_cfg);
+        let warm = simulate(&traces, &dims(), &cost(), &warm_cfg);
+        let (cc, ck) = clean.summed();
+        let (oc, ok) = cold.summed();
+        let (wc, wk) = warm.summed();
+        assert!(ok.reconnects > 0, "the cold law must reconnect");
+        assert_eq!(wk.reconnects, 0, "warm promotion is not a reconnect");
+        assert_eq!(wk.failovers_warm, ok.reconnects, "every sever recovered warm");
+        assert_eq!(wk.failovers_cold, 0);
+        assert_eq!(wk.context_replays, 0, "zero-replay recovery");
+        // primary-channel bytes identical to the fault-free run; the
+        // cold law pays the replay on the paper-facing bill
+        assert_eq!(wk.bytes_up, ck.bytes_up);
+        assert!(ok.bytes_up > ck.bytes_up);
+        assert!(wk.bytes_mirrored > 0, "mirrored uploads are billed");
+        assert_eq!(ck.bytes_mirrored, 0);
+        // warm recovery is strictly cheaper in time than cold, and
+        // tokens are identical everywhere
+        assert!(wc.total_s <= oc.total_s, "{} vs {}", wc.total_s, oc.total_s);
+        assert!(wc.total_s >= cc.total_s - 1e-9, "a sever cannot speed the run up");
+        assert_eq!(wk.tokens_generated, ck.tokens_generated);
+        assert_eq!(wk.tokens_cloud, ck.tokens_cloud);
+    }
+
+    #[test]
+    fn standby_budget_exhausts_to_cold_failover() {
+        // 4 severs against 2 standbys: the first two promote warm, the
+        // rest walk down the ladder to the cold reconnect law — the
+        // set shrinks, it never refills
+        let pattern = [Cloud, Exit1, Cloud, Exit2, Cloud, Exit1, Cloud, Exit1];
+        let traces = vec![vec![mk_trace(12, &pattern); 3]];
+        let base = cfg(Strategy::CeCollm(AblationFlags::default()));
+        let fault = Some(LinkFaultSim { sever_every: 3, reconnect_delay_s: 0.05 });
+        let mixed_cfg = SimConfig {
+            link_fault: fault,
+            replication: Some(SimReplication { replicas: 2, hedge: false }),
+            ..base
+        };
+        let cold = simulate(&traces, &dims(), &cost(), &SimConfig { link_fault: fault, ..base });
+        let mixed = simulate(&traces, &dims(), &cost(), &mixed_cfg);
+        let (_, ok) = cold.summed();
+        let (_, mk) = mixed.summed();
+        assert_eq!(mk.failovers_warm, 2);
+        assert_eq!(mk.failovers_cold, ok.reconnects - 2);
+        assert_eq!(mk.reconnects, ok.reconnects - 2, "cold rungs still reconnect");
+        assert!(mk.bytes_up < ok.bytes_up, "two replays avoided");
+        assert_eq!(mk.tokens_generated, ok.tokens_generated);
+    }
+
+    #[test]
+    fn hedging_prices_duplicates_on_the_standby_channel_only() {
+        // hedged infer duplicates every cloud call to the standby:
+        // extra bytes on the mirror bill, zero change to the
+        // paper-facing cost breakdown (the loser's echo is fenced)
+        let pattern = [Cloud, Exit1, Cloud, Exit2, Cloud];
+        let traces = vec![vec![mk_trace(12, &pattern); 3]];
+        let base = cfg(Strategy::CeCollm(AblationFlags::default()));
+        let hedged_cfg = SimConfig {
+            replication: Some(SimReplication { replicas: 1, hedge: true }),
+            ..base
+        };
+        let clean = simulate(&traces, &dims(), &cost(), &base);
+        let hedged = simulate(&traces, &dims(), &cost(), &hedged_cfg);
+        let (cc, ck) = clean.summed();
+        let (hc, hk) = hedged.summed();
+        assert_eq!(hk.hedged_requests, hk.cloud_requests, "every cloud call hedged");
+        assert!(
+            hk.bytes_mirrored
+                >= hk.hedged_requests as u64 * (REQ_BYTES + RESP_BYTES) as u64,
+            "duplicate request+response pairs are billed to the mirror channel"
+        );
+        assert_eq!(hk.bytes_up, ck.bytes_up, "primary uplink bill unchanged");
+        assert_eq!(hk.bytes_down, ck.bytes_down, "primary downlink bill unchanged");
+        assert_eq!(hc, cc, "hedging costs no simulated time");
+        assert_eq!(ck.hedged_requests, 0);
+    }
+
+    #[test]
+    fn unset_replication_is_bit_identical_to_the_legacy_law() {
+        // the same invariant link_fault: None already keeps: a None
+        // replication config must not touch the rng stream, the byte
+        // counters, or any cost
+        let pattern = [Cloud, Exit1, Cloud, Exit2, Cloud, Exit1];
+        let traces = vec![vec![mk_trace(12, &pattern); 3]];
+        let base = cfg(Strategy::CeCollm(AblationFlags::default()));
+        let explicit = SimConfig { replication: None, ..base };
+        let a = simulate(&traces, &dims(), &cost(), &base);
+        let b = simulate(&traces, &dims(), &cost(), &explicit);
+        let (ac, ak) = a.summed();
+        let (bc, bk) = b.summed();
+        assert_eq!(ac, bc);
+        assert_eq!(ak.bytes_up, bk.bytes_up);
+        assert_eq!(ak.bytes_mirrored, 0);
+        assert_eq!(bk.bytes_mirrored, 0);
+        assert_eq!(bk.failovers_warm + bk.failovers_cold, 0);
+        assert_eq!(bk.hedged_requests, 0);
     }
 
     #[test]

@@ -21,9 +21,9 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use ce_collm::config::{CloudConfig, DeploymentConfig};
+use ce_collm::config::{CloudConfig, DeploymentConfig, ReplicationConfig};
 use ce_collm::coordinator::cloud::{CloudServer, SessionFactory};
-use ce_collm::coordinator::edge::{CloudLink, EdgeClient};
+use ce_collm::coordinator::edge::{CloudLink, EdgeClient, ReplicaSet};
 use ce_collm::harness::runner::{record_main_experiments, ExperimentConfig};
 use ce_collm::harness::tables;
 use ce_collm::harness::trace::CallTimings;
@@ -353,20 +353,56 @@ fn run() -> Result<()> {
             if budget_ms > 0 {
                 cfg.cloud_token_budget_s = Some(budget_ms as f64 / 1e3);
             }
+            // --replicas opens N warm-standby sessions (mirror-bit
+            // handshakes) against the same endpoint list, rotated so
+            // each standby prefers a different endpoint; --hedge
+            // additionally duplicates deadline-budgeted infers to the
+            // best-scored standby
+            let replicas: usize = args.get_parse("replicas", 0usize);
+            let hedge = args.has("hedge");
+            if replicas > 0 {
+                cfg.replication = Some(ReplicationConfig { replicas, hedge });
+            }
             let link = CloudLink::connect(cfg.device_id, &endpoints, cfg.reconnect)?;
-            let mut client = EdgeClient::with_cloud(stack.edge_session(), cfg, link);
+            let mut client = if replicas > 0 {
+                let mut set = ReplicaSet::new(hedge);
+                for i in 0..replicas {
+                    let mut rotated = endpoints.clone();
+                    rotated.rotate_left((i + 1) % rotated.len().max(1));
+                    set.add_standby(CloudLink::connect_mirror(
+                        cfg.device_id,
+                        &rotated,
+                        cfg.reconnect,
+                    )?);
+                }
+                EdgeClient::with_cloud_replicas(stack.edge_session(), cfg, link, set)
+            } else {
+                EdgeClient::with_cloud(stack.edge_session(), cfg, link)
+            };
             let out = client.generate(&prompt)?;
             println!("{}", out.text);
             eprintln!(
                 "[{} tokens; cloud rate {:.1}%; {} deadline fallbacks; {} reconnects \
-                 ({} failovers); {}]",
+                 ({} failovers, {} warm, {} cold); {}]",
                 out.tokens.len(),
                 out.counters.request_cloud_rate() * 100.0,
                 out.counters.cloud_fallbacks,
                 out.counters.reconnects,
                 out.counters.failovers,
+                out.counters.failovers_warm,
+                out.counters.failovers_cold,
                 out.cost
             );
+            if let Some(set) = client.replicas() {
+                eprintln!(
+                    "[replicas: {} standby(s) live; health scores (ms) {:?}; \
+                     {} hedged requests; {:.1} KiB mirrored]",
+                    set.len(),
+                    set.health_scores(),
+                    out.counters.hedged_requests,
+                    out.counters.bytes_mirrored as f64 / 1024.0
+                );
+            }
         }
         "trace-record" => {
             // a short mock-backed e2e serving run over real TCP with
@@ -503,6 +539,8 @@ fn run() -> Result<()> {
                  \x20      --watch (stats: re-scrape every 2s)\n\
                  \x20      --budget-ms N (run-edge per-token cloud latency budget)\n\
                  \x20      --addrs A,B,... (run-edge ordered failover endpoints)\n\
+                 \x20      --replicas N (run-edge warm-standby sessions)\n\
+                 \x20      --hedge (run-edge: duplicate budgeted infers to a standby)\n\
                  \x20      --des (trace-replay: cross-validate against the DES)"
             );
         }

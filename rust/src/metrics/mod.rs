@@ -96,10 +96,33 @@ pub struct RunCounters {
     /// Reconnects that landed on a *different* endpoint than the one
     /// that failed (multi-endpoint failover).  Always <= `reconnects`.
     pub failovers: u64,
+    /// Failovers resolved by promoting a *warm standby* whose mirrored
+    /// `ContextStore` coverage already spanned the watermark: the edge
+    /// swaps links and re-issues the pending `InferRequest` with **zero**
+    /// history replay and zero token differences.
+    pub failovers_warm: u64,
+    /// Failovers resolved the cold way: re-dial, resume `Hello`, and one
+    /// full history replay round trip (same recovery as `reconnects`
+    /// before replication existed).  Strictly more expensive than warm.
+    pub failovers_cold: u64,
+    /// Bytes of hidden-state uploads duplicated to warm standby replicas.
+    /// Disjoint from `bytes_up` (primary traffic only) so the paper's
+    /// Fig 4c transmission column is unchanged by replication.
+    pub bytes_mirrored: u64,
+    /// Cloud inference requests that were hedged: duplicated to the
+    /// best-scored standby because the deadline budget was tight.  The
+    /// first valid `(req_id, pos)` echo wins; the loser is fenced by the
+    /// stale-response skip, so this never inflates `cloud_requests`.
+    pub hedged_requests: usize,
     /// Round-trip time of the most recent keepalive `Ping` on the infer
     /// channel, in milliseconds (`0.0` when no ping was issued).  A
     /// gauge, not a counter: `add` keeps the last non-zero observation.
     pub ping_rtt_last_ms: f64,
+    /// Last keepalive `Ping` round trip per warm standby replica, in
+    /// milliseconds, in replica order (`0.0` until the first ping lands).
+    /// A gauge vector: `add` keeps the longer list and overwrites
+    /// element-wise with non-zero observations.
+    pub replica_ping_rtt_ms: Vec<f64>,
 }
 
 impl RunCounters {
@@ -115,8 +138,20 @@ impl RunCounters {
         self.context_replays += o.context_replays;
         self.reconnects += o.reconnects;
         self.failovers += o.failovers;
+        self.failovers_warm += o.failovers_warm;
+        self.failovers_cold += o.failovers_cold;
+        self.bytes_mirrored += o.bytes_mirrored;
+        self.hedged_requests += o.hedged_requests;
         if o.ping_rtt_last_ms != 0.0 {
             self.ping_rtt_last_ms = o.ping_rtt_last_ms;
+        }
+        if o.replica_ping_rtt_ms.len() > self.replica_ping_rtt_ms.len() {
+            self.replica_ping_rtt_ms.resize(o.replica_ping_rtt_ms.len(), 0.0);
+        }
+        for (i, &rtt) in o.replica_ping_rtt_ms.iter().enumerate() {
+            if rtt != 0.0 {
+                self.replica_ping_rtt_ms[i] = rtt;
+            }
         }
     }
 
@@ -283,6 +318,31 @@ mod tests {
         };
         assert!((c.request_cloud_rate() - 0.42).abs() < 1e-12);
         assert!((c.transmitted_mb() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn counters_add_merges_replica_gauges() {
+        let mut a = RunCounters {
+            failovers_warm: 1,
+            bytes_mirrored: 100,
+            replica_ping_rtt_ms: vec![2.0],
+            ..Default::default()
+        };
+        let b = RunCounters {
+            failovers_warm: 2,
+            failovers_cold: 1,
+            bytes_mirrored: 50,
+            hedged_requests: 3,
+            replica_ping_rtt_ms: vec![0.0, 7.5],
+            ..Default::default()
+        };
+        a.add(&b);
+        assert_eq!(a.failovers_warm, 3);
+        assert_eq!(a.failovers_cold, 1);
+        assert_eq!(a.bytes_mirrored, 150);
+        assert_eq!(a.hedged_requests, 3);
+        // gauge vector: zero in `b` keeps `a`'s observation, longer wins
+        assert_eq!(a.replica_ping_rtt_ms, vec![2.0, 7.5]);
     }
 
     #[test]

@@ -39,7 +39,11 @@ use crate::util::rng::Rng;
 /// * `drop_in:<n>` — silently discard the `n`-th inbound frame (the
 ///   ordinal still advances);
 /// * `delay_in:<n>:<ms>` — stall `ms` milliseconds before routing the
-///   `n`-th inbound frame.
+///   `n`-th inbound frame;
+/// * `reorder_in:<n>:<k>` — hold the `n`-th inbound frame and deliver
+///   it right after frame `n + k` routes (the ordinal still advances),
+///   so the peer observes frames `n+1 .. n+k` arriving *before* frame
+///   `n` — the out-of-order delivery a multipath middlebox produces.
 ///
 /// e.g. `CE_FAULT=drop_in:3,sever_in:7`.
 pub const FAULT_ENV: &str = "CE_FAULT";
@@ -325,13 +329,25 @@ pub struct ReactorFault {
     /// The stall applied at [`ReactorFault::delay_in_at`] (ignored when
     /// that is `None`).
     pub delay_in_ms: u64,
+    /// Hold a connection's `n`-th inbound frame in a one-slot
+    /// hold-and-release queue and route it right after frame
+    /// `n + reorder_gap` routes — the peer sees the held frame arrive
+    /// out of order.  A connection that closes before the release point
+    /// silently loses the held frame (as a real reordering path would
+    /// when the flow dies).
+    pub reorder_in_at: Option<u64>,
+    /// The gap applied at [`ReactorFault::reorder_in_at`]: how many
+    /// later frames overtake the held one.  `0` degrades to immediate
+    /// delivery.  Ignored when `reorder_in_at` is `None`.
+    pub reorder_gap: u64,
 }
 
 impl ReactorFault {
     /// Parse a [`FAULT_ENV`] spec: comma-separated `sever_in:<n>`,
-    /// `drop_in:<n>`, `delay_in:<n>:<ms>` clauses.  This is the single
-    /// parser for reactor-side fault grammars — the trace-anchored
-    /// plans ([`crate::trace::anchored_fault`]) build the same struct.
+    /// `drop_in:<n>`, `delay_in:<n>:<ms>`, `reorder_in:<n>:<k>`
+    /// clauses.  This is the single parser for reactor-side fault
+    /// grammars — the trace-anchored plans
+    /// ([`crate::trace::anchored_fault`]) build the same struct.
     pub fn parse(spec: &str) -> Result<ReactorFault> {
         let mut fault = ReactorFault::default();
         let mut clauses = 0;
@@ -350,10 +366,16 @@ impl ReactorFault {
                     .ok_or_else(|| anyhow::anyhow!("delay_in needs <n>:<ms>"))?;
                 fault.delay_in_at = Some(n.trim().parse()?);
                 fault.delay_in_ms = ms.trim().parse()?;
+            } else if let Some(rest) = clause.strip_prefix("reorder_in:") {
+                let (n, k) = rest
+                    .split_once(':')
+                    .ok_or_else(|| anyhow::anyhow!("reorder_in needs <n>:<k>"))?;
+                fault.reorder_in_at = Some(n.trim().parse()?);
+                fault.reorder_gap = k.trim().parse()?;
             } else {
                 bail!(
-                    "bad {FAULT_ENV} clause '{clause}' \
-                     (expected sever_in:<n>, drop_in:<n>, or delay_in:<n>:<ms>)"
+                    "bad {FAULT_ENV} clause '{clause}' (expected sever_in:<n>, drop_in:<n>, \
+                     delay_in:<n>:<ms>, or reorder_in:<n>:<k>)"
                 );
             }
             clauses += 1;
@@ -487,6 +509,10 @@ mod tests {
             ReactorFault::parse("delay_in:5:250").unwrap(),
             ReactorFault { delay_in_at: Some(5), delay_in_ms: 250, ..Default::default() }
         );
+        assert_eq!(
+            ReactorFault::parse("reorder_in:4:2").unwrap(),
+            ReactorFault { reorder_in_at: Some(4), reorder_gap: 2, ..Default::default() }
+        );
         // clauses combine, whitespace tolerated, order irrelevant
         assert_eq!(
             ReactorFault::parse("drop_in:3, sever_in:7").unwrap(),
@@ -494,6 +520,7 @@ mod tests {
         );
         assert!(ReactorFault::parse("sever_in:").is_err());
         assert!(ReactorFault::parse("delay_in:5").is_err());
+        assert!(ReactorFault::parse("reorder_in:4").is_err(), "reorder_in needs the gap");
         assert!(ReactorFault::parse("chaos").is_err());
         assert!(ReactorFault::parse("").is_err());
         // explicit config wins over anything the env might say

@@ -697,6 +697,10 @@ struct Conn {
     /// (metrics on + un-Hello'd only; `None` once decided or when
     /// metrics are off — the normal read path then runs untouched).
     sniff: Option<Vec<u8>>,
+    /// One-slot hold-and-release queue for the `reorder_in:<n>:<k>`
+    /// fault: the held frame routes right after frame `n + k` does, and
+    /// is silently lost if the connection closes first.
+    held_frame: Option<Vec<u8>>,
     /// When the outbound queue last went empty→non-empty; resolved into
     /// the write-queue-residency histogram when it fully drains.
     wq_since: Option<Instant>,
@@ -916,6 +920,7 @@ impl Loop {
                 // sniffing exists only to serve scrapes, so its cost
                 // (one held-prefix check per conn) is metrics-gated too
                 sniff: self.metrics.is_some().then(Vec::new),
+                held_frame: None,
                 wq_since: None,
             },
         );
@@ -1383,9 +1388,12 @@ impl Loop {
     /// a scripted `drop` discards the n-th inbound frame *instead of*
     /// routing it (the ordinal still advances — a lost frame is still a
     /// received frame), a `delay` stalls the shard before routing (a
-    /// slow middlebox), and a `sever` fires only *after* the frame was
-    /// acted on — modelling a crash with state advanced and the
-    /// acknowledgement lost, the hardest case for the client.
+    /// slow middlebox), a `reorder` holds the n-th frame in the conn's
+    /// one-slot queue and routes it right after frame `n + k` (frames
+    /// in between overtake it — multipath reordering), and a `sever`
+    /// fires only *after* the frame was acted on — modelling a crash
+    /// with state advanced and the acknowledgement lost, the hardest
+    /// case for the client.
     fn on_frame(&mut self, id: u64, frame: Vec<u8>) -> Result<()> {
         self.stats.frames_in += 1;
         let ordinal = match self.conns.get_mut(&id) {
@@ -1415,8 +1423,31 @@ impl Loop {
                 self.trace_fault(id, "delay", ordinal);
                 std::thread::sleep(Duration::from_millis(f.delay_in_ms));
             }
+            // hold frame n; frames n+1 .. n+k overtake it below.  A gap
+            // of 0 degrades to immediate delivery (nothing to overtake).
+            if f.reorder_in_at == Some(ordinal) && f.reorder_gap > 0 {
+                self.stats.faults_injected += 1;
+                self.trace_fault(id, "reorder_hold", ordinal);
+                if let Some(c) = self.conns.get_mut(&id) {
+                    c.held_frame = Some(frame);
+                }
+                return Ok(());
+            }
         }
-        let out = self.route_frame(id, frame);
+        let mut out = self.route_frame(id, frame);
+        if out.is_ok() {
+            // release point: the overtaking frame routed, so the held
+            // frame goes through now, out of order as scripted
+            if let Some(f) = self.fault {
+                if f.reorder_gap > 0 && f.reorder_in_at.map(|n| n + f.reorder_gap) == Some(ordinal)
+                {
+                    if let Some(held) = self.conns.get_mut(&id).and_then(|c| c.held_frame.take()) {
+                        self.trace_fault(id, "reorder_release", ordinal);
+                        out = self.route_frame(id, held);
+                    }
+                }
+            }
+        }
         if out.is_ok() {
             if let Some(n) = self.fault.and_then(|f| f.sever_in_at) {
                 if ordinal == n {
@@ -1434,9 +1465,9 @@ impl Loop {
         let Some(state) = self.conns.get(&id).map(|c| c.state) else { return Ok(()) };
         match state {
             ConnState::AwaitingHello => {
-                let (device_id, session, channel, resume) = match Message::decode(&frame)? {
-                    Message::Hello { device_id, session, channel, resume } => {
-                        (device_id, session, channel, resume)
+                let (device_id, session, channel, resume, mirror) = match Message::decode(&frame)? {
+                    Message::Hello { device_id, session, channel, resume, mirror } => {
+                        (device_id, session, channel, resume, mirror)
                     }
                     other => anyhow::bail!("expected Hello, got {other:?}"),
                 };
@@ -1448,8 +1479,13 @@ impl Loop {
                     // the SAME nonce and asks the worker to suspend
                     // (keep tombstones, drop state) instead of reset —
                     // the distinction lives in the scheduler, not here.
+                    // The mirror bit rides along so the worker can bill
+                    // warm-standby uploads separately.
                     self.router
-                        .send(device_id, SchedMsg::Reset { device: device_id, session, resume })
+                        .send(
+                            device_id,
+                            SchedMsg::Reset { device: device_id, session, resume, mirror },
+                        )
                         .context("scheduler gone")?;
                 }
                 if let Some(c) = self.conns.get_mut(&id) {

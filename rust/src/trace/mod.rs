@@ -47,7 +47,9 @@
 //! conn, reason}` · `frame_in {shard, conn, ordinal, tag, len}` (the
 //! per-connection inbound ordinal is the unit fault schedules key on) ·
 //! `frame_out {shard, conn, tag, len}` · `fault {shard, conn, kind,
-//! ordinal}`.
+//! ordinal}` with `kind` in `sever_in | drop_in | delay_in |
+//! reorder_hold | reorder_release` (the reorder pair brackets a held
+//! frame: stashed at ordinal `n`, released after ordinal `n+k`).
 //!
 //! Scheduler input events (these *drive* a replay): `run_meta {workers,
 //! d_model, max_catchup, budget?, ttl_s?}` (first event of a cloud
@@ -55,7 +57,9 @@
 //! data}` (`data` = hex of the unpacked f32 little-endian payload — the
 //! canonical form whatever the wire precision was) · `infer {worker,
 //! device, session, req, pos, plen}` · `end {worker, device, session,
-//! req}` · `reset {worker, device, session, resume, honored}`.
+//! req}` · `reset {worker, device, session, resume, honored, mirror}`
+//! (`mirror` marks the session as a warm-standby copy; absent in
+//! pre-replication recordings, which read as `false`).
 //!
 //! Scheduler output events (these are replay *assertions*): `token
 //! {worker, device, req, pos, token, conf_bits}` (`conf_bits` is the
@@ -67,6 +71,8 @@
 //! Scheduler observational events (recorded, reported, not re-driven):
 //! `park {worker, device, req, pos}` · `pass {worker, devices, items}`
 //! · `evict {worker, device}` · `ttl_reap {worker, device}` ·
+//! `mirror_promote {worker, device}` (first infer on a mirror session
+//! converted it to a live one — the cloud half of a warm failover) ·
 //! `worker_stats {worker, served, uploads, resumed, stale_resumes,
 //! evictions, ttl_reaps, replays}` (final counters at shutdown; replay
 //! compares its own final counters against the sum of these).
@@ -74,7 +80,10 @@
 //! Edge events: `edge_send {device, chan, n, tag, len}` · `edge_recv
 //! {device, chan, n, tag, len}` (`n` = per-device per-channel ordinal,
 //! the unit [`anchored_plan`] keys client-side [`FaultPlan`]s on) ·
-//! `edge_reconnect {device, round}`.
+//! `edge_reconnect {device, round}` · `edge_promote {device,
+//! standbys_left}` (warm failover: a mirror standby became the primary
+//! link) · `edge_hedge {device, req, pos}` (deferral duplicated to the
+//! best standby; first valid echo wins).
 //!
 //! # Versioning rules
 //!

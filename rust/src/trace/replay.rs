@@ -188,6 +188,8 @@ pub fn replay(
                     device,
                     session: e.hex_u64("session")?,
                     resume: e.b("resume")?,
+                    // absent in pre-replication recordings: not a mirror
+                    mirror: e.b("mirror").unwrap_or(false),
                 })?;
                 report.inputs_sent += 1;
             }
@@ -278,8 +280,12 @@ pub fn replay(
             }
             // observational events: recorded for reporting/anchoring,
             // nothing to re-drive at the scheduler level
+            // (mirror_promote is implied by the replayed infer on a
+            // mirror-reset session; edge_promote/edge_hedge live on the
+            // edge side of the wire)
             "conn_open" | "conn_close" | "frame_in" | "frame_out" | "fault" | "park" | "pass"
-            | "evict" | "ttl_reap" | "edge_send" | "edge_recv" | "edge_reconnect" => {}
+            | "evict" | "ttl_reap" | "mirror_promote" | "edge_send" | "edge_recv"
+            | "edge_reconnect" | "edge_promote" | "edge_hedge" => {}
             other => bail!(
                 "unknown trace event type '{other}' at seq {} — refusing to replay \
                  (TRACE v1 rule: an unrecognized event is an error, not a skip)",
@@ -499,6 +505,7 @@ pub fn des_check(events: &[TraceEvent], dims: &ModelDims) -> Result<DesReport> {
         memory_budget_bytes: budget,
         session_ttl_s: None,
         link_fault: None,
+        replication: None,
     });
     let (_, counters) = sim.summed();
 

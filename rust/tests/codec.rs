@@ -21,6 +21,7 @@ fn arb_message(rng: &mut Rng) -> Message {
             session: rng.next_u64(),
             channel: if rng.gen_bool(0.5) { Channel::Upload } else { Channel::Infer },
             resume: rng.gen_bool(0.5),
+            mirror: rng.gen_bool(0.5),
         },
         1 => {
             let precision = if rng.gen_bool(0.5) { Precision::F16 } else { Precision::F32 };

@@ -32,10 +32,15 @@ const OTHER_BACKEND: ReactorBackend = ReactorBackend::Poll;
 /// Server config for fault runs: parks must expire fast, because a
 /// sever can eat an upload and leave its infer request waiting for
 /// state that will never arrive — the expiry error is what hands
-/// control back to the client's reconnect loop.
+/// control back to the client's reconnect loop.  The idle reap is
+/// tightened for the same reason: a `drop_in`/`reorder_in` env
+/// schedule can swallow an infer *request*, and a client blocked in a
+/// deadline-less `recv` only recovers once the reactor reaps the
+/// now-silent connection and the close reaches its reconnect loop.
 fn fault_cloud_config(workers: usize) -> CloudConfig {
     let mut cfg = CloudConfig::with_workers(workers);
     cfg.max_park_s = 0.2;
+    cfg.reactor.idle_timeout_s = 2.0;
     cfg
 }
 
@@ -374,6 +379,66 @@ fn reactor_sever_schedule_recovers_bit_identically_other_backend() {
     reactor_sever_schedule_recovers(OTHER_BACKEND);
 }
 
+/// Order-of-operations for the `reorder_in:<n>:<k>` hold-and-release
+/// queue, observed through in-reactor pings (pongs are answered in
+/// routing order, so the pong sequence IS the routing order).  Frame
+/// ordinals are 0-based and count the `Hello`: with `reorder_in:3:2`
+/// the ping carrying nonce 3 (ordinal 3) is held in the conn's
+/// one-slot queue, nonces 4 and 5 overtake it, and the held frame
+/// routes right after ordinal 5 — the client must observe pongs
+/// 1, 2, 4, 5, 3.  An explicit [`ReactorFault`] wins over the
+/// `CE_FAULT` env, so the schedule is stable under every CI leg.
+fn reorder_schedule_releases_after_gap(backend: ReactorBackend) {
+    let mut cfg = fault_cloud_config(1);
+    cfg.reactor.backend = backend;
+    cfg.reactor.fault =
+        Some(ReactorFault { reorder_in_at: Some(3), reorder_gap: 2, ..Default::default() });
+    let server = spawn_server(9, cfg);
+
+    let mut conn = TcpTransport::connect(&server.addr.to_string()).unwrap();
+    conn.send(
+        &Message::Hello {
+            device_id: 21,
+            session: 4,
+            channel: Channel::Infer,
+            resume: false,
+            mirror: false,
+        }
+        .encode(),
+    )
+    .unwrap();
+    assert_eq!(conn.recv().unwrap(), Message::Ack.encode(), "handshake completes");
+
+    for nonce in 1..=5u64 {
+        conn.send(&Message::Ping { nonce }.encode()).unwrap();
+    }
+    let mut order = Vec::new();
+    for _ in 0..5 {
+        match Message::decode(&conn.recv().unwrap()).unwrap() {
+            Message::Pong { nonce } => order.push(nonce),
+            other => panic!("expected a pong, got {other:?}"),
+        }
+    }
+    assert_eq!(
+        order,
+        vec![1, 2, 4, 5, 3],
+        "hold at ordinal 3 must release right after ordinal 5 ({backend:?})"
+    );
+
+    let stats = server.shutdown();
+    assert!(stats.reactor.faults_injected >= 1, "the hold must be counted: {stats:?}");
+}
+
+#[test]
+fn reorder_schedule_releases_held_frame_after_gap() {
+    reorder_schedule_releases_after_gap(ReactorBackend::Auto);
+}
+
+#[test]
+fn reorder_schedule_releases_held_frame_after_gap_other_backend() {
+    reorder_schedule_releases_after_gap(OTHER_BACKEND);
+}
+
 /// Raw keepalive round trip: a `Ping` on an established infer channel
 /// is answered in-reactor with a `Pong` carrying the same nonce (no
 /// scheduler involvement, so it works even while workers are busy).
@@ -382,8 +447,14 @@ fn ping_is_answered_with_matching_pong() {
     let server = spawn_server(5, fault_cloud_config(1));
     let mut conn = TcpTransport::connect(&server.addr.to_string()).unwrap();
     conn.send(
-        &Message::Hello { device_id: 12, session: 3, channel: Channel::Infer, resume: false }
-            .encode(),
+        &Message::Hello {
+            device_id: 12,
+            session: 3,
+            channel: Channel::Infer,
+            resume: false,
+            mirror: false,
+        }
+        .encode(),
     )
     .unwrap();
     assert_eq!(conn.recv().unwrap(), Message::Ack.encode(), "handshake completes");

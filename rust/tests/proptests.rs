@@ -3,8 +3,9 @@
 //! environment has no proptest crate, so shrinking is replaced by
 //! printing the failing seed.
 
-use ce_collm::config::{AblationFlags, ExitPolicy};
+use ce_collm::config::{AblationFlags, DeploymentConfig, ExitPolicy, ReconnectPolicy};
 use ce_collm::coordinator::content_manager::ContentManager;
+use ce_collm::coordinator::edge::{CloudLink, DialFn, EdgeClient};
 use ce_collm::coordinator::policy::{ExitPoint, TokenPolicy};
 use ce_collm::coordinator::protocol::{Channel, Message};
 use ce_collm::harness::cost::CostModel;
@@ -12,6 +13,7 @@ use ce_collm::harness::des::{simulate, SimConfig, Strategy};
 use ce_collm::harness::trace::{record, CallTimings};
 use ce_collm::model::manifest::test_manifest;
 use ce_collm::net::profiles::LinkProfile;
+use ce_collm::net::transport::{in_proc_pair, Transport};
 use ce_collm::quant::{self, Precision};
 use ce_collm::runtime::mock::{MockCloud, MockEdge, MockOracle};
 use ce_collm::util::rng::Rng;
@@ -29,6 +31,7 @@ fn arb_message(rng: &mut Rng) -> Message {
             session: rng.next_u64(),
             channel: if rng.gen_bool(0.5) { Channel::Upload } else { Channel::Infer },
             resume: rng.gen_bool(0.5),
+            mirror: rng.gen_bool(0.5),
         },
         1 => {
             let precision = if rng.gen_bool(0.5) { Precision::F16 } else { Precision::F32 };
@@ -370,6 +373,145 @@ fn prop_des_total_bounds_parts() {
                 "seed {seed} {strategy:?}: exit counts must partition tokens"
             );
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// hedge fencing: delayed loser echoes never double-bill or corrupt
+// ---------------------------------------------------------------------------
+
+/// The stale-response fence behind hedged failover, as a property: for
+/// ANY storm of delayed loser echoes — re-sent `TokenResponse`s for
+/// `(req_id, pos)` pairs the client has already resolved, answers for
+/// positions it will never ask about, stale `Error`s for a neighboring
+/// request — the client must (a) never re-issue a request the cloud
+/// already served (the server-side `requests_served` double-bill), (b)
+/// bill `cloud_requests` exactly once per accepted token, and (c) keep
+/// the accepted token stream equal to the genuinely-served stream, in
+/// order.  The fake cloud here speaks the real wire format over
+/// in-process transports and fails the run from the inside if a
+/// duplicate `(req_id, pos)` request ever arrives.
+#[test]
+fn prop_delayed_loser_echoes_are_fenced() {
+    use std::sync::{Arc, Mutex};
+
+    let dims = test_manifest().model;
+    for seed in 0..16u64 {
+        let (up_c, up_s) = in_proc_pair();
+        let (inf_c, inf_s) = in_proc_pair();
+
+        // upload-channel half of the fake cloud: Ack the Hello, Pong
+        // any keepalive, drain the fan-out until the peer hangs up
+        let upload_thread = std::thread::spawn(move || {
+            let mut t = up_s;
+            loop {
+                let Ok(frame) = t.recv() else { return };
+                match Message::decode(&frame).unwrap() {
+                    Message::Hello { .. } => t.send(&Message::Ack.encode()).unwrap(),
+                    Message::Ping { nonce } => {
+                        t.send(&Message::Pong { nonce }.encode()).unwrap()
+                    }
+                    _ => {}
+                }
+            }
+        });
+
+        // infer-channel half: before every real answer, flood the wire
+        // with loser echoes.  A loser can only ever echo the PAST (a
+        // pair the race already resolved) or the never-asked — a real
+        // standby cannot answer a position before the client asks.
+        let served: Arc<Mutex<Vec<(u32, u32, i32)>>> = Arc::new(Mutex::new(Vec::new()));
+        let served_srv = Arc::clone(&served);
+        let infer_thread = std::thread::spawn(move || {
+            let mut t = inf_s;
+            let mut rng = Rng::seed_from_u64(seed ^ 0x10_5E2);
+            loop {
+                let Ok(frame) = t.recv() else { return };
+                match Message::decode(&frame).unwrap() {
+                    Message::Hello { .. } => t.send(&Message::Ack.encode()).unwrap(),
+                    Message::InferRequest { req_id, pos, .. } => {
+                        let mut sv = served_srv.lock().unwrap();
+                        assert!(
+                            !sv.iter().any(|&(r, p, _)| r == req_id && p == pos),
+                            "seed {seed}: (req {req_id}, pos {pos}) requested twice — a \
+                             fence miss would double-bill requests_served"
+                        );
+                        for _ in 0..rng.gen_range(3) {
+                            let stale = if !sv.is_empty() && rng.gen_bool(0.6) {
+                                let (r, p, tok) = sv[rng.gen_range(sv.len())];
+                                Message::TokenResponse {
+                                    req_id: r,
+                                    pos: p,
+                                    token: tok,
+                                    conf: 0.5,
+                                    compute_s: 0.0,
+                                }
+                            } else if rng.gen_bool(0.5) {
+                                Message::TokenResponse {
+                                    req_id,
+                                    pos: pos + 1000,
+                                    token: 7,
+                                    conf: 0.5,
+                                    compute_s: 0.0,
+                                }
+                            } else {
+                                Message::Error {
+                                    req_id: req_id + 1,
+                                    pos,
+                                    msg: "stale loser".into(),
+                                }
+                            };
+                            t.send(&stale.encode()).unwrap();
+                        }
+                        let token = ((pos as u64 * 31 + seed) % 300) as i32 + 2;
+                        sv.push((req_id, pos, token));
+                        drop(sv);
+                        let real = Message::TokenResponse {
+                            req_id,
+                            pos,
+                            token,
+                            conf: 0.99,
+                            compute_s: 0.0,
+                        };
+                        t.send(&real.encode()).unwrap();
+                    }
+                    _ => {}
+                }
+            }
+        });
+
+        let mut halves = Some((up_c, inf_c));
+        let dial: DialFn = Box::new(move |_addr: &str| {
+            let (u, i) = halves.take().expect("the fake cloud accepts a single dial");
+            Ok((Box::new(u) as Box<dyn Transport + Send>, Box::new(i) as Box<dyn Transport>))
+        });
+        let link =
+            CloudLink::connect_via(9, vec!["inproc".into()], ReconnectPolicy::default(), dial)
+                .unwrap();
+        // θ = 1.0: every token defers, so every token crosses the fence
+        let mut cfg = DeploymentConfig::with_threshold(1.0);
+        cfg.device_id = 9;
+        cfg.max_new_tokens = 6;
+        let mut client =
+            EdgeClient::with_cloud(MockEdge::new(MockOracle::new(seed), dims.clone()), cfg, link);
+        let out = client.generate("a stale echo prompt").unwrap();
+        drop(client);
+        upload_thread.join().unwrap();
+        infer_thread.join().unwrap();
+
+        let served = served.lock().unwrap();
+        let expected: Vec<i32> = served.iter().map(|&(_, _, t)| t).collect();
+        assert_eq!(
+            out.tokens, expected,
+            "seed {seed}: accepted stream must be the served stream, in order"
+        );
+        assert_eq!(
+            out.counters.cloud_requests,
+            out.tokens.len(),
+            "seed {seed}: exactly one billing per accepted token: {:?}",
+            out.counters
+        );
+        assert_eq!(out.counters.context_replays, 0, "seed {seed}: no echo may trigger a replay");
     }
 }
 

@@ -1,0 +1,445 @@
+//! Replicated-cloud integration tests: warm-standby sessions against
+//! the real TCP serving path.  Every client here holds a primary
+//! session plus [`ReplicaSet`] standbys opened with the Hello mirror
+//! bit against *other* servers, and every fault is deterministic — a
+//! scripted [`FaultTransport`] schedule on the primary dialer, or an
+//! explicit server-side [`ReactorFault`] — so warm promotion, hedge
+//! fencing, and the full degradation ladder are exercised at exact
+//! protocol steps and compared bit-for-bit against the local
+//! (never-severed) reference.
+//!
+//! The whole file also runs under the CI `CE_FAULT` legs (`sever_in`,
+//! `drop_in`, `reorder_in`), where every server connection additionally
+//! runs the env schedule.  Assertions are therefore lower bounds (`>=`)
+//! on fault/recovery counters wherever the env schedule can add rounds,
+//! and exact server-side tallies are gated on `CE_FAULT` being unset.
+
+use std::sync::{Arc, Barrier};
+
+use ce_collm::config::{
+    CloudConfig, DeploymentConfig, ExitPolicy, ReactorBackend, ReconnectPolicy,
+};
+use ce_collm::coordinator::cloud::{CloudServer, SessionFactory};
+use ce_collm::coordinator::edge::{CloudLink, DialFn, EdgeClient, ReplicaSet};
+use ce_collm::model::manifest::test_manifest;
+use ce_collm::net::fault::{FaultPlan, FaultTransport, ReactorFault};
+use ce_collm::net::transport::{TcpTransport, Transport};
+use ce_collm::runtime::mock::{MockCloud, MockEdge, MockOracle};
+
+/// See `serve_tcp.rs`: the non-default readiness backend, so warm
+/// promotions are exercised under both event loops.
+const OTHER_BACKEND: ReactorBackend = ReactorBackend::Poll;
+
+/// Server config for fault runs — see `fault.rs`: parks must expire
+/// fast so a request waiting on state that will never arrive hands
+/// control back to the client's failover ladder, and the idle reap is
+/// tightened so an env-scheduled `drop_in`/`reorder_in` that swallows
+/// an infer request un-blocks the deadline-less client via the reaped
+/// connection's close instead of a 120 s default reap.
+fn fault_cloud_config(workers: usize) -> CloudConfig {
+    let mut cfg = CloudConfig::with_workers(workers);
+    cfg.max_park_s = 0.2;
+    cfg.reactor.idle_timeout_s = 2.0;
+    cfg
+}
+
+/// One mock engine per device, all seeded `seed_base + device`.
+/// Replica servers for the same fleet share `seed_base`, so a standby
+/// derives the same token stream the primary would have — the property
+/// warm promotion relies on.
+fn spawn_server(seed_base: u64, cfg: CloudConfig) -> CloudServer {
+    let dims = test_manifest().model;
+    let sdims = dims.clone();
+    CloudServer::bind("127.0.0.1:0", dims, cfg, move || {
+        let sdims = sdims.clone();
+        let f: SessionFactory = Box::new(move |device| {
+            Ok(Box::new(MockCloud::new(MockOracle::new(seed_base + device), sdims.clone())) as _)
+        });
+        Ok(f)
+    })
+    .unwrap()
+}
+
+/// The local (in-process, never-severed) reference stream every
+/// recovered wire run must match bit-for-bit.
+fn local_trace(seed: u64, threshold: f32, prompt: &str, max_new: usize) -> Vec<i32> {
+    let dims = test_manifest().model;
+    let o = MockOracle::new(seed);
+    let mut edge = MockEdge::new(o, dims.clone());
+    let mut cloud = MockCloud::new(o, dims);
+    let mut timings = ce_collm::harness::trace::CallTimings::default();
+    ce_collm::harness::trace::record(
+        &mut edge,
+        &mut cloud,
+        ExitPolicy::Threshold(threshold),
+        ce_collm::quant::Precision::F16,
+        prompt,
+        max_new,
+        &mut timings,
+    )
+    .unwrap()
+    .tokens
+}
+
+/// Clean TCP `(upload, infer)` pair — the test twin of the default
+/// dialer inside [`CloudLink::connect`].
+fn tcp_pair(addr: &str) -> anyhow::Result<(Box<dyn Transport + Send>, Box<dyn Transport>)> {
+    let upload = Box::new(TcpTransport::connect(addr)?);
+    let infer = Box::new(TcpTransport::connect(addr)?);
+    Ok((upload as Box<dyn Transport + Send>, infer as Box<dyn Transport>))
+}
+
+/// A dialer whose FIRST dial wraps the infer channel in `plan`; every
+/// redial is clean TCP.  The scripted sever fires exactly once per run.
+fn faulty_first_dial(plan: FaultPlan) -> DialFn {
+    let mut first = Some(plan);
+    Box::new(move |addr: &str| match first.take() {
+        Some(plan) => {
+            let upload = Box::new(TcpTransport::connect(addr)?);
+            let infer = FaultTransport::new(TcpTransport::connect(addr)?, plan);
+            Ok((upload as Box<dyn Transport + Send>, Box::new(infer) as Box<dyn Transport>))
+        }
+        None => tcp_pair(addr),
+    })
+}
+
+/// A dialer for an endpoint that severs once and then stays down: the
+/// first dial wraps the infer channel in `plan`, every redial is
+/// refused outright.  Defeats both the backoff redial and the failover
+/// rotation — the edge sees a cloud that died and never came back.
+fn down_endpoint_dial(plan: FaultPlan) -> DialFn {
+    let mut first = Some(plan);
+    Box::new(move |addr: &str| {
+        let Some(plan) = first.take() else {
+            anyhow::bail!("scripted dead endpoint: redial refused");
+        };
+        let upload = Box::new(TcpTransport::connect(addr)?);
+        let infer = FaultTransport::new(TcpTransport::connect(addr)?, plan);
+        Ok((upload as Box<dyn Transport + Send>, Box::new(infer) as Box<dyn Transport>))
+    })
+}
+
+/// A standby whose endpoint is doomed on every channel: the mirror
+/// (upload) channel severs mid-fan-out, the infer channel severs on its
+/// first post-promotion response, and redials are refused.  Whether the
+/// run dies before or after this standby's promotion, it ends with no
+/// cloud left — the ladder's last rung.
+fn doomed_standby_dial() -> DialFn {
+    let mut first = true;
+    Box::new(move |addr: &str| {
+        anyhow::ensure!(std::mem::take(&mut first), "scripted dead standby: redial refused");
+        let upload =
+            FaultTransport::new(TcpTransport::connect(addr)?, FaultPlan::new().sever_send_at(4));
+        let infer =
+            FaultTransport::new(TcpTransport::connect(addr)?, FaultPlan::new().sever_recv_at(1));
+        Ok((Box::new(upload) as Box<dyn Transport + Send>, Box::new(infer) as Box<dyn Transport>))
+    })
+}
+
+/// Edge client with a primary link plus warm standbys — the wire twin
+/// of `DeploymentConfig::replication`.
+#[allow(clippy::too_many_arguments)]
+fn replica_client(
+    primary: CloudLink,
+    standbys: Vec<CloudLink>,
+    hedge: bool,
+    device: u64,
+    seed: u64,
+    threshold: f32,
+    max_new: usize,
+    budget_s: Option<f64>,
+) -> EdgeClient<MockEdge> {
+    let dims = test_manifest().model;
+    let mut cfg = DeploymentConfig::with_threshold(threshold);
+    cfg.device_id = device;
+    cfg.max_new_tokens = max_new;
+    cfg.cloud_token_budget_s = budget_s;
+    let mut set = ReplicaSet::new(hedge);
+    for sb in standbys {
+        set.add_standby(sb);
+    }
+    EdgeClient::with_cloud_replicas(MockEdge::new(MockOracle::new(seed), dims), cfg, primary, set)
+}
+
+/// Kill the primary mid-generation (infer recv ordinal 1 — the first
+/// deferred token's response is on the wire when the channel dies) and
+/// require a warm promotion: the standby's mirrored coverage already
+/// spans the watermark, so recovery must spend **zero** context replays
+/// and the promoted stream must stay bit-identical to the local
+/// reference.
+fn warm_promotion_mid_stream_is_zero_replay(backend: ReactorBackend) {
+    let seed = 41;
+    let mut cfg_a = fault_cloud_config(1);
+    cfg_a.reactor.backend = backend;
+    let srv_a = spawn_server(seed, cfg_a);
+    let mut cfg_b = fault_cloud_config(1);
+    cfg_b.reactor.backend = backend;
+    let srv_b = spawn_server(seed, cfg_b);
+
+    let policy = ReconnectPolicy::default();
+    let primary = CloudLink::connect_via(
+        0,
+        vec![srv_a.addr.to_string()],
+        policy,
+        faulty_first_dial(FaultPlan::new().sever_recv_at(1)),
+    )
+    .unwrap();
+    let standby = CloudLink::connect_mirror(0, &[srv_b.addr.to_string()], policy).unwrap();
+    let mut client = replica_client(primary, vec![standby], false, 0, seed, 0.8, 20, None);
+
+    let out = client.generate("a warm failover prompt").unwrap();
+    assert_eq!(
+        out.tokens,
+        local_trace(seed, 0.8, "a warm failover prompt", 20),
+        "promoted stream diverges from the unsevered reference ({backend:?})"
+    );
+    assert_eq!(
+        out.counters.context_replays, 0,
+        "warm promotion must not replay history: {:?}",
+        out.counters
+    );
+    assert!(out.counters.bytes_mirrored > 0, "mirrored fan-out must be priced apart");
+
+    srv_a.shutdown();
+    let stats_b = srv_b.shutdown();
+    assert!(stats_b.uploads_mirrored >= 1, "the standby never saw a mirrored upload: {stats_b:?}");
+    // an ambient env schedule can kill the standby before the scripted
+    // sever fires, legitimately degrading this run to a cold resume —
+    // the promotion story itself is only pinned on the clean legs
+    if std::env::var("CE_FAULT").is_err() {
+        assert!(
+            out.counters.failovers_warm >= 1,
+            "the dead primary must warm-promote: {:?}",
+            out.counters
+        );
+        assert_eq!(out.counters.failovers_cold, 0, "nothing may go cold: {:?}", out.counters);
+        assert!(stats_b.mirror_promotions >= 1, "the standby never went live: {stats_b:?}");
+        assert!(stats_b.requests_served >= 1, "the standby must serve tokens: {stats_b:?}");
+    }
+}
+
+#[test]
+fn warm_promotion_mid_stream_spends_zero_replays() {
+    warm_promotion_mid_stream_is_zero_replay(ReactorBackend::Auto);
+}
+
+#[test]
+fn warm_promotion_mid_stream_spends_zero_replays_other_backend() {
+    warm_promotion_mid_stream_is_zero_replay(OTHER_BACKEND);
+}
+
+/// Hedged infer under an explicit server-side reorder schedule: the
+/// primary holds inbound frame ordinal 4 until ordinal 6 routes, so for
+/// at least one token the standby's duplicate answer wins the race and
+/// the primary's late echo arrives *after* the client has moved on.
+/// The stale-response fence must skip it: the client bills each
+/// deferral exactly once and the stream stays bit-identical.
+fn hedge_race_under_reorder_is_fenced(backend: ReactorBackend) {
+    let seed = 53;
+    let mut cfg_a = fault_cloud_config(1);
+    cfg_a.reactor.backend = backend;
+    // explicit schedule (wins over the CE_FAULT env), so the race is
+    // scripted even on the CI legs that set their own fault
+    cfg_a.reactor.fault = Some(ReactorFault {
+        reorder_in_at: Some(4),
+        reorder_gap: 2,
+        ..ReactorFault::default()
+    });
+    let srv_a = spawn_server(seed, cfg_a);
+    let mut cfg_b = fault_cloud_config(1);
+    cfg_b.reactor.backend = backend;
+    let srv_b = spawn_server(seed, cfg_b);
+
+    let policy = ReconnectPolicy::default();
+    let primary = CloudLink::connect(0, &[srv_a.addr.to_string()], policy).unwrap();
+    let standby = CloudLink::connect_mirror(0, &[srv_b.addr.to_string()], policy).unwrap();
+    // θ = 1.0: every token defers; the generous budget arms hedging
+    // without the deadline ever firing
+    let mut client = replica_client(primary, vec![standby], true, 0, seed, 1.0, 16, Some(60.0));
+
+    let out = client.generate("a hedged reorder prompt").unwrap();
+    assert_eq!(
+        out.tokens,
+        local_trace(seed, 1.0, "a hedged reorder prompt", 16),
+        "hedged stream diverges from the reference ({backend:?})"
+    );
+    assert!(out.counters.hedged_requests >= 1, "hedging never armed: {:?}", out.counters);
+    assert_eq!(out.counters.cloud_fallbacks, 0, "no rung below hedging may engage");
+    assert!(
+        out.counters.cloud_requests >= 16,
+        "every deferral reaches the cloud: {:?}",
+        out.counters
+    );
+    assert!(
+        out.counters.bytes_mirrored >= out.counters.hedged_requests as u64,
+        "hedged duplicates must be priced on the mirror channel"
+    );
+
+    let stats_a = srv_a.shutdown();
+    let stats_b = srv_b.shutdown();
+    assert!(stats_b.uploads_mirrored >= 1, "the standby never saw a mirrored upload: {stats_b:?}");
+    if std::env::var("CE_FAULT").is_err() {
+        // 16 deferrals; the client accepted exactly one answer per
+        // (req_id, pos).  A primary that re-served a hedged token the
+        // standby already won would push its tally past the deferral
+        // count — the double-billing the fence exists to prevent.
+        assert_eq!(out.counters.cloud_requests, 16, "one billing per deferral");
+        assert_eq!(out.counters.tokens_cloud, 16, "θ = 1.0: every token is a cloud token");
+        assert!(
+            stats_a.requests_served <= 16,
+            "the primary must never serve a (req_id, pos) twice: {stats_a:?}"
+        );
+        assert!(
+            stats_a.reactor.faults_injected >= 1,
+            "the reorder schedule never fired: {stats_a:?}"
+        );
+    }
+}
+
+#[test]
+fn hedge_race_under_reorder_is_fenced_once() {
+    hedge_race_under_reorder_is_fenced(ReactorBackend::Auto);
+}
+
+#[test]
+fn hedge_race_under_reorder_is_fenced_once_other_backend() {
+    hedge_race_under_reorder_is_fenced(OTHER_BACKEND);
+}
+
+/// The ladder's last rung: the primary dies and stays down, the lone
+/// standby is doomed on every channel, and no endpoint accepts a
+/// redial.  In latency-aware mode the run must step down — warm
+/// promotion, cold reconnect, then the §4.4 local fallback — and still
+/// finish the generation on edge-only exits instead of erroring out.
+#[test]
+fn all_replicas_down_degrades_to_local_fallback() {
+    let seed = 67;
+    let srv_a = spawn_server(seed, fault_cloud_config(1));
+    let srv_b = spawn_server(seed, fault_cloud_config(1));
+
+    let policy = ReconnectPolicy::default();
+    let primary = CloudLink::connect_via(
+        0,
+        vec![srv_a.addr.to_string()],
+        policy,
+        down_endpoint_dial(FaultPlan::new().sever_recv_at(1)),
+    )
+    .unwrap();
+    let standby = CloudLink::connect_mirror_via(
+        0,
+        vec![srv_b.addr.to_string()],
+        policy,
+        doomed_standby_dial(),
+    )
+    .unwrap();
+    let mut client = replica_client(primary, vec![standby], false, 0, seed, 0.8, 20, Some(30.0));
+
+    let out = client.generate("a doomed fleet prompt").unwrap();
+    assert!(
+        out.counters.cloud_fallbacks >= 1,
+        "losing every replica must fall back to local exits: {:?}",
+        out.counters
+    );
+    assert!(!out.tokens.is_empty(), "the run must still finish on local exits");
+    assert_eq!(out.counters.tokens_generated, out.tokens.len(), "{:?}", out.counters);
+    assert!(
+        out.counters.tokens_cloud < out.counters.tokens_generated,
+        "after the fallback the cloud serves nothing: {:?}",
+        out.counters
+    );
+
+    srv_a.shutdown();
+    srv_b.shutdown();
+}
+
+/// Reconnect storm, replicated: six devices against a three-server
+/// fleet, every primary severed on its first deferred response at the
+/// same barrier-released instant.  Every device must warm-promote to a
+/// standby (same `seed_base`, so same oracle) and finish bit-identical
+/// with zero replays — the concurrent version of the promotion test.
+fn replicated_reconnect_storm(backend: ReactorBackend) {
+    const DEVICES: u64 = 6;
+    let seed_base = 300;
+    let mk = || {
+        let mut cfg = fault_cloud_config(2);
+        cfg.reactor.backend = backend;
+        spawn_server(seed_base, cfg)
+    };
+    let (srv_a, srv_b, srv_c) = (mk(), mk(), mk());
+    let (addr_a, addr_b, addr_c) =
+        (srv_a.addr.to_string(), srv_b.addr.to_string(), srv_c.addr.to_string());
+
+    let gate = Arc::new(Barrier::new(DEVICES as usize));
+    let mut handles = Vec::new();
+    for device in 0..DEVICES {
+        let (addr_a, addr_b, addr_c) = (addr_a.clone(), addr_b.clone(), addr_c.clone());
+        let gate = Arc::clone(&gate);
+        handles.push(std::thread::spawn(move || {
+            let policy = ReconnectPolicy::default();
+            let primary = CloudLink::connect_via(
+                device,
+                vec![addr_a],
+                policy,
+                faulty_first_dial(FaultPlan::new().sever_recv_at(1)),
+            )
+            .unwrap();
+            let sb_b = CloudLink::connect_mirror(device, &[addr_b], policy).unwrap();
+            let sb_c = CloudLink::connect_mirror(device, &[addr_c], policy).unwrap();
+            // θ = 1.0: every token defers, so every device trips the
+            // scripted sever and the promotions overlap
+            let mut client = replica_client(
+                primary,
+                vec![sb_b, sb_c],
+                false,
+                device,
+                seed_base + device,
+                1.0,
+                8,
+                None,
+            );
+            gate.wait();
+            (device, client.generate("a replicated storm prompt").unwrap())
+        }));
+    }
+    let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    for (device, out) in &results {
+        assert_eq!(
+            out.tokens,
+            local_trace(seed_base + device, 1.0, "a replicated storm prompt", 8),
+            "device {device}: promoted stream must be bit-identical ({backend:?})"
+        );
+        assert!(
+            out.counters.failovers_warm >= 1,
+            "device {device} never warm-promoted: {:?}",
+            out.counters
+        );
+        assert_eq!(
+            out.counters.context_replays, 0,
+            "device {device}: promotion must not replay: {:?}",
+            out.counters
+        );
+    }
+
+    srv_a.shutdown();
+    let stats_b = srv_b.shutdown();
+    let stats_c = srv_c.shutdown();
+    assert!(
+        stats_b.mirror_promotions + stats_c.mirror_promotions >= DEVICES,
+        "every device promotes one standby: {stats_b:?} / {stats_c:?}"
+    );
+    assert!(
+        stats_b.requests_served + stats_c.requests_served >= 1,
+        "the standby fleet must serve the post-promotion tokens"
+    );
+}
+
+#[test]
+fn replicated_storm_promotes_every_device() {
+    replicated_reconnect_storm(ReactorBackend::Auto);
+}
+
+#[test]
+fn replicated_storm_promotes_every_device_other_backend() {
+    replicated_reconnect_storm(OTHER_BACKEND);
+}

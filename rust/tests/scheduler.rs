@@ -222,8 +222,12 @@ fn stale_session_frames_are_fenced_after_reconnect() {
     let dev = 5u64;
 
     // connection pair A pins the device, then the client reconnects as B
-    router.send(dev, SchedMsg::Reset { device: dev, session: 0xA, resume: false }).unwrap();
-    router.send(dev, SchedMsg::Reset { device: dev, session: 0xB, resume: false }).unwrap();
+    router
+        .send(dev, SchedMsg::Reset { device: dev, session: 0xA, resume: false, mirror: false })
+        .unwrap();
+    router
+        .send(dev, SchedMsg::Reset { device: dev, session: 0xB, resume: false, mirror: false })
+        .unwrap();
 
     // B's prompt upload is accepted
     router

@@ -194,8 +194,14 @@ fn idle_timeout_reaps_established_connection(backend: ReactorBackend) {
 
     let mut conn = TcpTransport::connect(&server.addr.to_string()).unwrap();
     conn.send(
-        &Message::Hello { device_id: 77, session: 1, channel: Channel::Upload, resume: false }
-            .encode(),
+        &Message::Hello {
+            device_id: 77,
+            session: 1,
+            channel: Channel::Upload,
+            resume: false,
+            mirror: false,
+        }
+        .encode(),
     )
         .unwrap();
     assert_eq!(conn.recv().unwrap(), Message::Ack.encode(), "handshake completes");
@@ -234,8 +240,14 @@ fn slow_reader_gets_evicted(backend: ReactorBackend) {
 
     let mut conn = TcpTransport::connect(&server.addr.to_string()).unwrap();
     conn.send(
-        &Message::Hello { device_id: 3, session: 9, channel: Channel::Infer, resume: false }
-            .encode(),
+        &Message::Hello {
+            device_id: 3,
+            session: 9,
+            channel: Channel::Infer,
+            resume: false,
+            mirror: false,
+        }
+        .encode(),
     )
         .unwrap();
     assert_eq!(conn.recv().unwrap(), Message::Ack.encode(), "handshake completes");
@@ -422,6 +434,7 @@ fn shutdown_closes_every_connection_with_no_stragglers() {
                     session: 7,
                     channel: Channel::Infer,
                     resume: false,
+                    mirror: false,
                 }
                 .encode(),
             )
@@ -583,6 +596,7 @@ fn dead_conn_completion_never_crosses_shards() {
                 session: 0,
                 channel: Channel::Infer,
                 resume: false,
+                mirror: false,
             }
             .encode(),
         )
